@@ -1,0 +1,45 @@
+//! Dimensionality sweep (Fig 7 in miniature): how each compute backend
+//! scales as d grows, on the Synthetic Single Gaussian dataset — the
+//! paper's core "which optimization matters when" story.
+//!
+//! Run: `cargo run --release --example dim_sweep`
+
+use knng::config::schema::{ComputeKind, SelectionKind};
+use knng::dataset::synth::SynthGaussian;
+use knng::nndescent::{NnDescent, Params};
+use knng::util::timer::DEFAULT_NOMINAL_HZ;
+
+fn main() {
+    let n = 4096;
+    let k = 20;
+    println!("dim sweep on Synthetic Single Gaussian, n={n}, k={k}\n");
+    println!(
+        "{:<6} {:>14} {:>14} {:>14}   {}",
+        "dim", "scalar", "unrolled", "blocked", "blocked flops/cycle"
+    );
+
+    for dim in [8usize, 32, 128, 256, 784] {
+        let data = SynthGaussian::single(n, dim, 0xD1E).generate();
+        let mut row = format!("{dim:<6}");
+        let mut blocked_fpc = 0.0;
+        for kind in [ComputeKind::Scalar, ComputeKind::Unrolled, ComputeKind::Blocked] {
+            let params = Params::default()
+                .with_k(k)
+                .with_seed(1)
+                .with_selection(SelectionKind::Turbo)
+                .with_compute(kind);
+            let result = NnDescent::new(params).build(&data);
+            row.push_str(&format!(" {:>12.3}s ", result.total_secs));
+            if kind == ComputeKind::Blocked {
+                blocked_fpc =
+                    result.stats.flops() as f64 / (result.total_secs * DEFAULT_NOMINAL_HZ);
+            }
+        }
+        println!("{row}  {blocked_fpc:>8.2}");
+    }
+
+    println!(
+        "\nexpected shape (paper Fig 7): at d=8 the backends tie (selection-bound); \
+         as d grows, unrolled pulls ahead of scalar and blocked ahead of unrolled"
+    );
+}

@@ -1,0 +1,90 @@
+//! Serve-style example: build a K-NN graph index, persist it, reload,
+//! and answer a batch of held-out queries with the beam search —
+//! reporting latency percentiles, per-query distance evaluations, and
+//! recall (the downstream-consumer workflow the paper's intro
+//! motivates: UMAP-style pipelines query the graph, they don't just
+//! build it).
+//!
+//! Run: `cargo run --release --example graph_search [-- n]`
+
+use knng::baseline::brute::GroundTruth;
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::distance::sq_l2_unrolled;
+use knng::graph::{load_graph, save_graph};
+use knng::nndescent::{NnDescent, Params};
+use knng::search::{GraphIndex, SearchParams};
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let n: usize = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(20_000);
+    let n_queries = 1000;
+    let (dim, k) = (64, 20);
+
+    // ---- corpus + held-out query set from the same distribution --------
+    let (all, _) = SynthClustered::new(n + n_queries, dim, 32, 0x9E4).generate_labeled();
+    let corpus = {
+        let rows: Vec<f32> = (0..n).flat_map(|i| all.row_logical(i).to_vec()).collect();
+        AlignedMatrix::from_rows(n, dim, &rows)
+    };
+    println!("corpus {n} × {dim}, {n_queries} held-out queries, k={k}");
+
+    // ---- build + persist + reload (exercises graph/io) -----------------
+    let t0 = Instant::now();
+    let built = NnDescent::new(Params::default().with_k(k).with_seed(4).with_reorder(false))
+        .build(&corpus);
+    println!("graph built in {:.2}s ({} iterations)", t0.elapsed().as_secs_f64(), built.iterations);
+
+    let path = std::env::temp_dir().join("knng_graph_search.knng");
+    save_graph(&path, &built.graph)?;
+    let graph = load_graph(&path)?;
+    println!("persisted + reloaded graph: {} bytes", std::fs::metadata(&path)?.len());
+    let index = GraphIndex::new(corpus, graph);
+
+    // ---- exact truth for recall (brute force per query) ----------------
+    let truth: GroundTruth = {
+        let mut queries = Vec::with_capacity(n_queries);
+        for qi in 0..n_queries {
+            let mut qp = vec![0f32; index.data().dim_pad()];
+            qp[..dim].copy_from_slice(all.row_logical(n + qi));
+            let mut d: Vec<(u32, f32)> = (0..n as u32)
+                .map(|v| (v, sq_l2_unrolled(&qp, index.data().row(v as usize))))
+                .collect();
+            d.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            d.truncate(k);
+            queries.push((qi as u32, d));
+        }
+        GroundTruth { k, queries }
+    };
+
+    // ---- serve the batch ------------------------------------------------
+    let params = SearchParams::default();
+    let mut latencies = Vec::with_capacity(n_queries);
+    let mut evals = 0u64;
+    let mut hits = 0usize;
+    for qi in 0..n_queries {
+        let q = all.row_logical(n + qi);
+        let t = Instant::now();
+        let (res, stats) = index.search(q, k, &params);
+        latencies.push(t.elapsed().as_secs_f64());
+        evals += stats.dist_evals;
+        let exact = truth.get(qi as u32).unwrap();
+        hits += exact.iter().filter(|(v, _)| res.iter().any(|(r, _)| r == v)).count();
+    }
+    latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)];
+    let recall = hits as f64 / (n_queries * k) as f64;
+    let qps = n_queries as f64 / latencies.iter().sum::<f64>();
+
+    println!("\nserved {n_queries} queries (ef={}):", params.ef);
+    println!("  recall@{k}     : {recall:.4}");
+    println!("  latency p50    : {:.1} µs", pct(0.50) * 1e6);
+    println!("  latency p99    : {:.1} µs", pct(0.99) * 1e6);
+    println!("  throughput     : {qps:.0} queries/s (single core)");
+    println!("  evals/query    : {:.0} of {n} corpus points ({:.2}%)",
+        evals as f64 / n_queries as f64,
+        evals as f64 / n_queries as f64 / n as f64 * 100.0);
+    assert!(recall > 0.9, "search recall {recall}");
+    println!("graph_search OK");
+    Ok(())
+}

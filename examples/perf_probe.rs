@@ -1,0 +1,20 @@
+//! Perf probe: per-phase time breakdown for representative builds.
+use knng::config::schema::{ComputeKind, SelectionKind};
+use knng::dataset::synth::SynthGaussian;
+use knng::nndescent::{NnDescent, Params};
+
+fn main() {
+    for (n, d) in [(16_384usize, 8usize), (16_384, 256)] {
+        let data = SynthGaussian::single(n, d, 3).generate();
+        let params = Params::default().with_k(20).with_seed(3)
+            .with_selection(SelectionKind::Turbo).with_compute(ComputeKind::Blocked);
+        let r = NnDescent::new(params).build(&data);
+        let sel: f64 = r.per_iter.iter().map(|s| s.select_secs).sum();
+        let comp: f64 = r.per_iter.iter().map(|s| s.compute_secs).sum();
+        let evals: u64 = r.stats.dist_evals;
+        println!("n={n} d={d}: total {:.3}s = select {:.3}s ({:.0}%) + compute {:.3}s ({:.0}%) + init {:.3}s; {} evals, {:.2} f/c",
+            r.total_secs, sel, sel/r.total_secs*100.0, comp, comp/r.total_secs*100.0,
+            r.total_secs - sel - comp, evals,
+            r.stats.flops() as f64 / (r.total_secs * 3.6e9));
+    }
+}

@@ -1,0 +1,33 @@
+//! Config-driven pipeline: run a batch of experiment configs through the
+//! shared pipeline layer and emit a TSV report — the "framework" entry
+//! point a downstream user would script against.
+//!
+//! Run: `cargo run --release --example pipeline_report [-- config.toml ...]`
+//! With no arguments it runs the bundled configs in `configs/`.
+
+use knng::config::ExperimentConfig;
+use knng::pipeline::{run_experiment, EvalOptions, RunReport};
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let configs: Vec<std::path::PathBuf> = if args.is_empty() {
+        let mut v: Vec<_> = std::fs::read_dir("configs")?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().is_some_and(|x| x == "toml"))
+            .collect();
+        v.sort();
+        v
+    } else {
+        args.iter().map(Into::into).collect()
+    };
+    anyhow::ensure!(!configs.is_empty(), "no configs found (looked in configs/)");
+
+    println!("{}", RunReport::tsv_header());
+    for path in &configs {
+        let cfg = ExperimentConfig::load(path)?;
+        let report = run_experiment(&cfg, EvalOptions { recall_queries: 300, seed: 11 })?;
+        println!("{}", report.tsv_row());
+    }
+    Ok(())
+}

@@ -1,0 +1,125 @@
+"""AOT export: lower the L2 graphs to HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT `.serialize()`d HloModuleProto:
+jax >= 0.5 emits protos with 64-bit instruction ids which the `xla`
+crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser on the rust side (`HloModuleProto::from_text_file`) reassigns ids
+and round-trips cleanly. See /opt/xla-example/README.md.
+
+Artifacts written to --out-dir:
+
+    pairwise_b{B}_d{D}.hlo.txt    candidate_block for each (B, D)
+    tilescan_m{M}_n{N}_d{D}.hlo.txt
+    manifest.tsv                  one line per artifact:
+                                  kind<TAB>shape-args...<TAB>filename
+
+The shape set covers every dimensionality the benchmarks use (all padded
+to a multiple of 8, matching the rust AlignedMatrix contract). Build is
+incremental: `make artifacts` regenerates only when compile/ sources are
+newer than the manifest.
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Candidate-block shapes: B = padded candidate-set size (the paper caps
+# candidate sets at 50 -> new+old <= 100; 64 covers the default rho*k=10
+# new + 10 old = 20 padded generously, 128 covers stress configs).
+DEFAULT_PAIRWISE = [
+    (64, 8),
+    (64, 16),
+    (64, 32),
+    (64, 64),
+    (64, 128),
+    (64, 192),
+    (64, 256),
+    (64, 512),
+    (64, 784),
+    (128, 256),
+]
+
+# Tile-scan shapes for PJRT-side brute force (M queries x N corpus rows).
+DEFAULT_TILESCAN = [
+    (128, 1024, 64),
+    (128, 1024, 256),
+    (128, 1024, 784),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def emit(out_dir: str, pairwise, tilescan, quiet: bool = False) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    lines = []
+
+    for b, d in pairwise:
+        name = f"pairwise_b{b}_d{d}.hlo.txt"
+        text = to_hlo_text(model.lower_candidate_block(b, d))
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        lines.append(f"pairwise\t{b}\t{d}\t{name}")
+        if not quiet:
+            print(f"[aot] {name}: {len(text)} chars", file=sys.stderr)
+
+    for m, n, d in tilescan:
+        name = f"tilescan_m{m}_n{n}_d{d}.hlo.txt"
+        text = to_hlo_text(model.lower_tile_scan(m, n, d))
+        with open(os.path.join(out_dir, name), "w") as f:
+            f.write(text)
+        lines.append(f"tilescan\t{m}\t{n}\t{d}\t{name}")
+        if not quiet:
+            print(f"[aot] {name}: {len(text)} chars", file=sys.stderr)
+
+    manifest = os.path.join(out_dir, "manifest.tsv")
+    with open(manifest, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    if not quiet:
+        print(f"[aot] wrote {manifest} ({len(lines)} artifacts)", file=sys.stderr)
+    return lines
+
+
+def parse_shape_list(spec: str, arity: int) -> list[tuple]:
+    """Parse "64x128,64x256" style shape lists."""
+    out = []
+    for part in spec.split(","):
+        dims = tuple(int(x) for x in part.strip().split("x"))
+        if len(dims) != arity:
+            raise ValueError(f"shape {part!r}: expected {arity} dims")
+        out.append(dims)
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--pairwise", help="BxD[,BxD...] override", default=None)
+    ap.add_argument("--tilescan", help="MxNxD[,MxNxD...] override", default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args()
+
+    pairwise = (
+        parse_shape_list(args.pairwise, 2) if args.pairwise else DEFAULT_PAIRWISE
+    )
+    tilescan = (
+        parse_shape_list(args.tilescan, 3) if args.tilescan else DEFAULT_TILESCAN
+    )
+    # determinism / no accelerator surprises in the compile path
+    jax.config.update("jax_platforms", "cpu")
+    emit(args.out_dir, pairwise, tilescan, quiet=args.quiet)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""L1: Pallas kernels for the paper's compute hot-spot (blocked squared-L2)."""
+
+from .pairwise_l2 import pairwise_sq_l2, tile_sq_l2  # noqa: F401
+from .ref import (  # noqa: F401
+    pairwise_sq_l2_decomposed,
+    pairwise_sq_l2_ref,
+    tile_sq_l2_ref,
+)

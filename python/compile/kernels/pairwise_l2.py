@@ -1,0 +1,155 @@
+"""L1: blocked pairwise squared-L2 Pallas kernels.
+
+Hardware adaptation of the paper's 5x5 AVX2 register blocking (SS3.3) to
+the TPU model (DESIGN.md SSHardware-Adaptation):
+
+* The paper amortizes *register loads*: one 8-float load of a candidate
+  vector feeds 5 FMA streams, so a 5x5 block does 10 loads for 25
+  distances. On TPU the analogous resource is **VMEM residency**: a
+  (block, d-chunk) tile of candidate vectors is staged HBM->VMEM once per
+  grid step and feeds block^2 distance accumulations.
+* The paper's FMA accumulators become the **MXU**: within a tile,
+  `-2 * X @ X_chunk.T` is a systolic matmul; squared norms are VPU
+  row-reductions. The d axis is processed in VMEM-sized chunks with a
+  float32 scratch accumulator, double-buffered by the Pallas pipeline
+  (`dimension_semantics=("arbitrary",)` on the reduction axis).
+* The paper pads d to a multiple of 8 for AVX2; we pad the lane axis to
+  128 (TPU lane width) at the caller (aot.py emits only such shapes; the
+  rust batcher zero-pads rows, and zero lanes contribute nothing to
+  squared-L2, same trick as the paper's `mem-align`).
+
+`interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers the kernel to plain HLO with
+identical semantics. Real-TPU perf is *estimated* in DESIGN.md SS8.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# ---------------------------------------------------------------------------
+# self-pairwise: one candidate set against itself (the compute step's shape)
+# ---------------------------------------------------------------------------
+
+def _pairwise_kernel(x_ref, o_ref, acc_ref, *, nsteps: int):
+    """One (d-chunk) grid step of the self-pairwise distance kernel.
+
+    x_ref:   (B, BD) VMEM tile — all B candidate rows, one d-chunk.
+    o_ref:   (B, B) output tile (written on the last step).
+    acc_ref: (B, B) float32 VMEM scratch accumulating -2<x,y> + |x|^2+|y|^2
+             contributions chunk by chunk.
+    """
+    step = pl.program_id(0)
+
+    @pl.when(step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    # MXU: cross-term for this chunk; VPU: per-row squared norms.
+    gram = jax.lax.dot_general(
+        x, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    sq = jnp.sum(x * x, axis=1)
+    acc_ref[...] += sq[:, None] + sq[None, :] - 2.0 * gram
+
+    @pl.when(step == nsteps - 1)
+    def _done():
+        # clamp tiny negative float32 residue (diagonal, near-duplicates)
+        o_ref[...] = jnp.maximum(acc_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_d",))
+def pairwise_sq_l2(x: jnp.ndarray, *, block_d: int = 256) -> jnp.ndarray:
+    """All-pairs squared-L2 of one set: (B, D) -> (B, B).
+
+    B is expected to be the (padded) candidate-set size (<= a few
+    hundred); D the padded dimensionality. The d axis is chunked by
+    `block_d` (the VMEM budget knob; see DESIGN.md SS8 for the footprint
+    arithmetic).
+    """
+    b, d = x.shape
+    bd = min(block_d, d)
+    if d % bd != 0:
+        raise ValueError(f"d={d} not divisible by block_d={bd}")
+    nsteps = d // bd
+    return pl.pallas_call(
+        functools.partial(_pairwise_kernel, nsteps=nsteps),
+        grid=(nsteps,),
+        in_specs=[pl.BlockSpec((b, bd), lambda i: (0, i))],
+        out_specs=pl.BlockSpec((b, b), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, b), jnp.float32),
+        scratch_shapes=[pltpu_scratch((b, b))],
+        interpret=True,
+    )(x)
+
+
+# ---------------------------------------------------------------------------
+# cross-set tile scan: queries x corpus (ground-truth / bulk distance shape)
+# ---------------------------------------------------------------------------
+
+def _tile_kernel(q_ref, x_ref, o_ref, acc_ref, *, nsteps: int):
+    """Grid (n-tile, d-chunk); accumulates one (M, BN) output tile."""
+    dstep = pl.program_id(1)
+
+    @pl.when(dstep == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]
+    x = x_ref[...]
+    gram = jax.lax.dot_general(
+        q, x, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    qsq = jnp.sum(q * q, axis=1)
+    xsq = jnp.sum(x * x, axis=1)
+    acc_ref[...] += qsq[:, None] + xsq[None, :] - 2.0 * gram
+
+    @pl.when(dstep == nsteps - 1)
+    def _done():
+        o_ref[...] = jnp.maximum(acc_ref[...], 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_d"))
+def tile_sq_l2(
+    q: jnp.ndarray, x: jnp.ndarray, *, block_n: int = 256, block_d: int = 256
+) -> jnp.ndarray:
+    """Cross-set squared-L2: (M, D) x (N, D) -> (M, N), tiled over N and D."""
+    m, d = q.shape
+    n, d2 = x.shape
+    if d != d2:
+        raise ValueError(f"dim mismatch {d} vs {d2}")
+    bn = min(block_n, n)
+    bd = min(block_d, d)
+    if n % bn != 0 or d % bd != 0:
+        raise ValueError(f"(n={n}, d={d}) not divisible by blocks ({bn}, {bd})")
+    nsteps = d // bd
+    return pl.pallas_call(
+        functools.partial(_tile_kernel, nsteps=nsteps),
+        grid=(n // bn, nsteps),
+        in_specs=[
+            pl.BlockSpec((m, bd), lambda j, i: (0, i)),
+            pl.BlockSpec((bn, bd), lambda j, i: (j, i)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j, i: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu_scratch((m, bn))],
+        interpret=True,
+    )(q, x)
+
+
+def pltpu_scratch(shape):
+    """float32 VMEM scratch spec, import-guarded for interpret mode.
+
+    On real TPU this is `pltpu.VMEM(shape, jnp.float32)`; interpret mode
+    accepts the generic `pl.pallas_call` scratch ANY/memory-space form.
+    """
+    try:  # pragma: no cover - depends on installed jaxlib flavor
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM(shape, jnp.float32)
+    except Exception:  # pragma: no cover
+        return pl.MemorySpace.ANY(shape, jnp.float32)  # type: ignore[attr-defined]

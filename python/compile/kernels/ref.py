@@ -1,0 +1,41 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness references: every Pallas kernel in this package
+must match its oracle to float32 tolerance under pytest/hypothesis sweeps
+(python/tests/test_kernel.py). They are also what the kernels would look
+like without any tiling — XLA is free to fuse them however it likes, which
+makes them a useful L2 performance baseline, but they give the compiler no
+explicit VMEM/MXU schedule.
+"""
+
+import jax.numpy as jnp
+
+
+def pairwise_sq_l2_ref(x: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs squared-L2 distances of one set: (B, D) -> (B, B).
+
+    Direct subtraction formulation: numerically the most robust (no
+    catastrophic cancellation for close points), O(B^2 D) intermediate if
+    materialized — which is exactly why the kernel uses the norm/MXU
+    decomposition instead.
+    """
+    diff = x[:, None, :] - x[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def tile_sq_l2_ref(q: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Cross-set squared-L2 distances: (M, D) x (N, D) -> (M, N)."""
+    diff = q[:, None, :] - x[None, :, :]
+    return jnp.sum(diff * diff, axis=-1)
+
+
+def pairwise_sq_l2_decomposed(x: jnp.ndarray) -> jnp.ndarray:
+    """The |x|^2 + |y|^2 - 2<x,y> decomposition (what the kernel computes).
+
+    Used by tests to bound the decomposition's intrinsic float32 error
+    separately from any Pallas-introduced error.
+    """
+    sq = jnp.sum(x * x, axis=-1)
+    g = x @ x.T
+    d = sq[:, None] + sq[None, :] - 2.0 * g
+    return jnp.maximum(d, 0.0)

@@ -1,0 +1,58 @@
+"""L2: the JAX compute graphs that get AOT-lowered for the rust runtime.
+
+The paper's "model" is not a neural net — its compute hot-spot is the
+blocked mutual-distance evaluation of a candidate set (SS3.3). Two graphs
+are exported, both calling the L1 Pallas kernels:
+
+* `candidate_block`  — (B, D) -> (B, B): all mutual squared-L2 distances
+  of one padded candidate set. The rust compute step gathers candidate
+  rows into a fixed (B, D) buffer, executes this, and applies heap
+  updates. Padding rows are zero; their pairs are ignored on the rust
+  side (and cost nothing extra — the block is fixed-shape anyway,
+  exactly like the paper's "flexible but slower function" remainder
+  handling, but in reverse).
+* `tile_scan` — (M, D) x (N, D) -> (M, N): cross-set distances used for
+  brute-force ground truth / bulk scoring through the same runtime.
+
+Keeping these as jitted-jax functions (rather than raw pallas_calls)
+means XLA still owns layout/fusion around the kernel — this is where L2
+optimization happens (see EXPERIMENTS.md SSPerf: the lowered module fuses
+the gather-side transposes away).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pairwise_sq_l2, tile_sq_l2
+
+
+def candidate_block(x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """All-pairs distances of one candidate block; tuple-wrapped for AOT."""
+    return (pairwise_sq_l2(x, block_d=_chunk(x.shape[1])),)
+
+
+def tile_scan(q: jnp.ndarray, x: jnp.ndarray) -> tuple[jnp.ndarray]:
+    """Query-tile vs corpus-tile distances; tuple-wrapped for AOT."""
+    bn = _chunk(x.shape[0])
+    return (tile_sq_l2(q, x, block_n=bn, block_d=_chunk(q.shape[1])),)
+
+
+def _chunk(extent: int, target: int = 256) -> int:
+    """Largest divisor of `extent` that is <= target (VMEM chunk knob)."""
+    c = min(target, extent)
+    while extent % c != 0:
+        c -= 1
+    return c
+
+
+def lower_candidate_block(b: int, d: int):
+    """`jax.jit(...).lower` for a concrete (B, D)."""
+    spec = jax.ShapeDtypeStruct((b, d), jnp.float32)
+    return jax.jit(candidate_block).lower(spec)
+
+
+def lower_tile_scan(m: int, n: int, d: int):
+    """`jax.jit(...).lower` for a concrete (M, N, D)."""
+    qs = jax.ShapeDtypeStruct((m, d), jnp.float32)
+    xs = jax.ShapeDtypeStruct((n, d), jnp.float32)
+    return jax.jit(tile_scan).lower(qs, xs)

@@ -1,0 +1,128 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and the block_d chunking knob); fixed-seed
+numpy provides the data. Tolerances account for the float32
+norm-decomposition error, which is bounded separately by comparing the
+oracle against the decomposed-jnp formulation.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels import (
+    pairwise_sq_l2,
+    pairwise_sq_l2_decomposed,
+    pairwise_sq_l2_ref,
+    tile_sq_l2,
+    tile_sq_l2_ref,
+)
+
+
+def rand(shape, seed, scale=3.0):
+    return jnp.asarray(
+        np.random.RandomState(seed).randn(*shape).astype(np.float32) * scale
+    )
+
+
+def assert_close(got, want, scale):
+    got = np.asarray(got)
+    want = np.asarray(want)
+    tol = 2e-3 * max(1.0, scale)
+    np.testing.assert_allclose(got, want, atol=tol, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# pairwise (self-set) kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([4, 16, 64, 128]),
+    dchunks=st.integers(1, 4),
+    chunk=st.sampled_from([8, 64, 128, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_pairwise_matches_ref(b, dchunks, chunk, seed):
+    d = dchunks * chunk
+    x = rand((b, d), seed)
+    got = pairwise_sq_l2(x, block_d=chunk)
+    want = pairwise_sq_l2_ref(x)
+    assert_close(got, want, float(jnp.max(want)))
+
+
+def test_pairwise_diagonal_zero_and_symmetric():
+    x = rand((32, 64), 7)
+    d = np.asarray(pairwise_sq_l2(x, block_d=64))
+    np.testing.assert_allclose(np.diag(d), 0.0, atol=1e-3)
+    np.testing.assert_allclose(d, d.T, atol=1e-4)
+    assert (d >= 0).all(), "clamped nonnegative"
+
+
+def test_pairwise_zero_padding_rows_are_inert():
+    # zero rows (batch padding) must not disturb real entries
+    x = rand((16, 32), 3)
+    xp = jnp.concatenate([x, jnp.zeros((16, 32), jnp.float32)], axis=0)
+    full = np.asarray(pairwise_sq_l2(xp, block_d=32))
+    small = np.asarray(pairwise_sq_l2(x, block_d=32))
+    np.testing.assert_allclose(full[:16, :16], small, atol=1e-3)
+
+
+def test_pairwise_known_values():
+    x = jnp.array([[0.0] * 8, [3.0] + [0.0] * 7, [0.0, 4.0] + [0.0] * 6], jnp.float32)
+    d = np.asarray(pairwise_sq_l2(x, block_d=8))
+    np.testing.assert_allclose(d[0, 1], 9.0, atol=1e-5)
+    np.testing.assert_allclose(d[0, 2], 16.0, atol=1e-5)
+    np.testing.assert_allclose(d[1, 2], 25.0, atol=1e-5)
+
+
+def test_pairwise_rejects_bad_chunking():
+    x = rand((8, 24), 0)
+    with pytest.raises(ValueError):
+        pairwise_sq_l2(x, block_d=16)  # 24 % 16 != 0
+
+
+def test_decomposition_error_is_small():
+    # bound the intrinsic fp32 error of |x|^2+|y|^2-2xy vs direct diff
+    x = rand((64, 256), 11)
+    a = np.asarray(pairwise_sq_l2_decomposed(x))
+    b = np.asarray(pairwise_sq_l2_ref(x))
+    scale = float(np.max(b))
+    assert np.max(np.abs(a - b)) < 1e-3 * scale
+
+
+# ---------------------------------------------------------------------------
+# tile-scan (cross-set) kernel
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.sampled_from([8, 32, 128]),
+    ntiles=st.integers(1, 3),
+    bn=st.sampled_from([32, 128]),
+    d=st.sampled_from([64, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_tile_scan_matches_ref(m, ntiles, bn, d, seed):
+    n = ntiles * bn
+    q = rand((m, d), seed)
+    x = rand((n, d), seed + 1)
+    got = tile_sq_l2(q, x, block_n=bn, block_d=min(128, d))
+    want = tile_sq_l2_ref(q, x)
+    assert_close(got, want, float(jnp.max(want)))
+
+
+def test_tile_scan_agrees_with_pairwise_on_same_set():
+    x = rand((64, 128), 5)
+    cross = np.asarray(tile_sq_l2(x, x, block_n=64, block_d=128))
+    self_ = np.asarray(pairwise_sq_l2(x, block_d=128))
+    np.testing.assert_allclose(cross, self_, atol=2e-3)
+
+
+def test_tile_scan_rejects_mismatched_dims():
+    q = rand((8, 64), 1)
+    x = rand((16, 128), 2)
+    with pytest.raises(ValueError):
+        tile_sq_l2(q, x)

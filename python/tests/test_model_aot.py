@@ -1,0 +1,91 @@
+"""L2 + AOT tests: model graphs, shape handling, HLO-text emission."""
+
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import aot, model
+from compile.kernels import pairwise_sq_l2_ref, tile_sq_l2_ref
+
+
+def rand(shape, seed):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# model graphs
+# ---------------------------------------------------------------------------
+
+def test_candidate_block_matches_ref():
+    x = rand((64, 192), 0)
+    (got,) = model.candidate_block(x)
+    want = pairwise_sq_l2_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3, rtol=1e-4)
+
+
+def test_tile_scan_matches_ref():
+    q = rand((32, 64), 1)
+    x = rand((256, 64), 2)
+    (got,) = model.tile_scan(q, x)
+    want = tile_sq_l2_ref(q, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=2e-3, rtol=1e-4)
+
+
+def test_chunk_divisor_logic():
+    assert model._chunk(784) == 196  # largest divisor of 784 <= 256
+    assert model._chunk(256) == 256
+    assert model._chunk(8) == 8
+    assert model._chunk(192) == 192
+    for extent in [8, 24, 192, 784, 3144]:
+        c = model._chunk(extent)
+        assert extent % c == 0 and 1 <= c <= 256
+
+
+# ---------------------------------------------------------------------------
+# AOT emission
+# ---------------------------------------------------------------------------
+
+def test_hlo_text_emission_roundtrip(tmp_path):
+    lowered = model.lower_candidate_block(8, 16)
+    text = aot.to_hlo_text(lowered)
+    # structural sanity of the interchange format
+    assert "HloModule" in text
+    assert "f32[8,16]" in text, "parameter shape present"
+    assert "f32[8,8]" in text, "result shape present"
+    # tuple-wrapped single result (rust side unwraps with to_tuple1)
+    assert "(f32[8,8]{1,0}) tuple" in text
+
+
+def test_emit_writes_manifest_and_files(tmp_path):
+    out = str(tmp_path / "artifacts")
+    lines = aot.emit(out, pairwise=[(8, 16)], tilescan=[(4, 8, 16)], quiet=True)
+    assert len(lines) == 2
+    manifest = open(os.path.join(out, "manifest.tsv")).read().strip().split("\n")
+    assert manifest[0].split("\t") == ["pairwise", "8", "16", "pairwise_b8_d16.hlo.txt"]
+    assert manifest[1].split("\t") == [
+        "tilescan", "4", "8", "16", "tilescan_m4_n8_d16.hlo.txt",
+    ]
+    for line in manifest:
+        fname = line.split("\t")[-1]
+        path = os.path.join(out, fname)
+        assert os.path.exists(path)
+        assert "HloModule" in open(path).read()
+
+
+def test_parse_shape_list():
+    assert aot.parse_shape_list("64x128,64x256", 2) == [(64, 128), (64, 256)]
+    assert aot.parse_shape_list("128x1024x64", 3) == [(128, 1024, 64)]
+    try:
+        aot.parse_shape_list("64", 2)
+        assert False, "should reject wrong arity"
+    except ValueError:
+        pass
+
+
+def test_default_shapes_cover_bench_dims():
+    # every dimensionality used by the rust benches must have a pairwise
+    # artifact (padded-to-8 dims; see rust/benches/*)
+    dims = {d for (_, d) in aot.DEFAULT_PAIRWISE}
+    for needed in [8, 64, 192, 256, 784]:
+        assert needed in dims, f"missing pairwise artifact for d={needed}"

@@ -1,0 +1,61 @@
+//! Distance-kernel microbenchmark (supports §3.3's tags in isolation):
+//! scalar vs unrolled (l2intrinsics/mem-align) vs 5×5 blocked, per
+//! dimension — plus effective flops/cycle so the kernel numbers can be
+//! placed on the roofline by hand.
+//!
+//! Run: `cargo bench --bench bench_distance_kernels`
+
+use knng::bench::{fmt_secs, full_scale, measure, Table};
+use knng::dataset::synth::SynthGaussian;
+use knng::distance::blocked::{pairwise_blocked, pairwise_flat, PairwiseBuf};
+use knng::util::stats::Summary;
+use knng::util::timer::DEFAULT_NOMINAL_HZ;
+
+fn main() {
+    let m = 50; // paper's candidate-set cap
+    let reps = if full_scale() { 9 } else { 5 };
+    let sets = if full_scale() { 2000 } else { 400 };
+    println!("distance kernels: {sets} candidate sets of {m} vectors per measurement");
+
+    let mut table = Table::new(
+        "distance_kernels",
+        &["dim", "scalar", "unrolled", "blocked", "blocked_speedup", "blocked_flops_per_cycle"],
+    );
+    for dim in [8usize, 64, 192, 256, 784, 1568] {
+        let data = SynthGaussian::single(m * 8, dim, dim as u64).generate();
+        // rotate through different id sets so data doesn't stay L1-hot
+        let id_sets: Vec<Vec<u32>> = (0..8)
+            .map(|s| (0..m as u32).map(|i| (i * 8 + s) % (m as u32 * 8)).collect())
+            .collect();
+        let mut buf = PairwiseBuf::with_capacity(m);
+
+        let mut run = |f: &mut dyn FnMut(&[u32], &mut PairwiseBuf) -> u64| {
+            let samples = measure(reps, || {
+                let mut evals = 0u64;
+                for s in 0..sets {
+                    evals += f(&id_sets[s % 8], &mut buf);
+                }
+                evals
+            });
+            Summary::of(&samples).median
+        };
+
+        let t_scalar = run(&mut |ids, buf| pairwise_flat(&data, ids, buf, false));
+        let t_unrolled = run(&mut |ids, buf| pairwise_flat(&data, ids, buf, true));
+        let t_blocked = run(&mut |ids, buf| pairwise_blocked(&data, ids, buf));
+
+        let evals = (sets * m * (m - 1) / 2) as f64;
+        let flops = evals * (3.0 * dim as f64 - 1.0);
+        let fpc = flops / (t_blocked * DEFAULT_NOMINAL_HZ);
+        table.row(&[
+            dim.to_string(),
+            fmt_secs(t_scalar),
+            fmt_secs(t_unrolled),
+            fmt_secs(t_blocked),
+            format!("{:.2}× vs unrolled", t_unrolled / t_blocked),
+            format!("{fpc:.2}"),
+        ]);
+    }
+    table.finish();
+    println!("\npaper reference: blocking pays off increasingly with dimension (Fig 7)");
+}

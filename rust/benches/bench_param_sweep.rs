@@ -1,0 +1,42 @@
+//! Ablation — the runtime-quality trade-off knobs the paper mentions
+//! but does not plot ("Multiple parameters could if desired be altered
+//! to change the runtime-quality trade-off", §2): ρ (sample rate) and
+//! δ (convergence threshold) against recall, runtime, and evaluations.
+//!
+//! Run: `cargo bench --bench bench_param_sweep`
+
+use knng::baseline::brute::brute_force_knn_sampled;
+use knng::bench::{full_scale, measure_once, Table};
+use knng::dataset::clustered::SynthClustered;
+use knng::metrics::recall::recall_against_truth;
+use knng::nndescent::{NnDescent, Params};
+
+fn main() {
+    let n = if full_scale() { 16_384 } else { 6_000 };
+    let k = 20;
+    println!("ρ/δ runtime-quality sweep, Synthetic Clustered n={n} d=16 c=16, k={k}");
+    let (data, _) = SynthClustered::new(n, 16, 16, 0x5EE9).generate_labeled();
+    let truth = brute_force_knn_sampled(&data, k, 300, 3);
+
+    let mut table = Table::new(
+        "param_sweep",
+        &["rho", "delta", "secs", "iters", "dist_evals", "recall"],
+    );
+    for &rho in &[0.25, 0.5, 1.0] {
+        for &delta in &[0.01, 0.001, 0.0001] {
+            let params = Params::default().with_k(k).with_seed(8).with_rho(rho).with_delta(delta);
+            let (result, secs) = measure_once(|| NnDescent::new(params.clone()).build(&data));
+            let recall = recall_against_truth(&result, &truth);
+            table.row(&[
+                format!("{rho}"),
+                format!("{delta}"),
+                format!("{secs:.3}"),
+                result.iterations.to_string(),
+                result.stats.dist_evals.to_string(),
+                format!("{recall:.4}"),
+            ]);
+        }
+    }
+    table.finish();
+    println!("\nexpected: recall and cost both rise with ρ and with tighter δ (monotone trade-off)");
+}

@@ -1,0 +1,105 @@
+//! Ablation (ours) — PJRT-offloaded compute step vs native blocked.
+//!
+//! Quantifies what the three-layer composition costs/buys on this CPU
+//! testbed: the AOT Pallas kernel (via PJRT) against the native Rust
+//! 5×5 blocked kernel, per dimension, at the compute step's natural
+//! batch shape (one candidate set ≤ 50 per call) and at the tile-scan
+//! shape (bulk brute force, where the XLA kernel amortizes dispatch).
+//!
+//! Requires `make artifacts`.
+//!
+//! Run: `cargo bench --bench bench_pjrt`
+
+use knng::bench::{fmt_secs, full_scale, measure, Table};
+use knng::cachesim::trace::NoTracer;
+use knng::dataset::synth::SynthGaussian;
+use knng::distance::blocked::{pairwise_blocked, PairwiseBuf};
+use knng::nndescent::compute::PairwiseEngine;
+use knng::runtime::{PjrtEngine, TileScanner};
+use knng::util::stats::Summary;
+
+fn main() {
+    let sets = if full_scale() { 400 } else { 100 };
+    let m = 40; // candidate-set size (new+old at defaults)
+    println!("PJRT vs native blocked — per-candidate-set dispatch ({sets} sets of {m})");
+
+    let mut engine = match PjrtEngine::open("artifacts") {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("skipping: {e:#} (run `make artifacts`)");
+            return;
+        }
+    };
+
+    let mut table = Table::new(
+        "pjrt_vs_native",
+        &["dim", "native_blocked", "pjrt_pallas", "pjrt_overhead"],
+    );
+    for dim in [64usize, 256, 784] {
+        let data = SynthGaussian::single(m * 4, dim, dim as u64).generate();
+        let ids: Vec<u32> = (0..m as u32).collect();
+        let mut buf = PairwiseBuf::with_capacity(64);
+
+        let native = Summary::of(&measure(5, || {
+            for _ in 0..sets {
+                pairwise_blocked(&data, &ids, &mut buf);
+            }
+        }))
+        .median;
+        let pjrt = Summary::of(&measure(3, || {
+            for _ in 0..sets {
+                engine.pairwise(&data, &ids, ids.len(), &mut buf, &mut NoTracer);
+            }
+        }))
+        .median;
+        table.row(&[
+            dim.to_string(),
+            fmt_secs(native / sets as f64),
+            fmt_secs(pjrt / sets as f64),
+            format!("{:.1}×", pjrt / native),
+        ]);
+    }
+    table.finish();
+
+    // bulk shape: tile scan (128×1024) where dispatch amortizes
+    println!("\nPJRT tile-scan (bulk brute-force shape, 128×1024):");
+    let mut table = Table::new("pjrt_tilescan", &["dim", "pjrt_per_tile", "native_per_tile", "ratio"]);
+    for dim in [64usize, 256, 784] {
+        let data = SynthGaussian::single(2048, dim, 3).generate();
+        let queries: Vec<u32> = (0..128).collect();
+        let corpus: Vec<u32> = (128..128 + 1024).collect();
+        match TileScanner::open("artifacts", 128, 1024, data.dim_pad()) {
+            Ok(mut scanner) => {
+                let pjrt = Summary::of(&measure(3, || {
+                    scanner.scan(&data, &queries, &corpus).unwrap()
+                }))
+                .median;
+                // native equivalent: 128×1024 pair-at-a-time blocked-ish
+                let native = Summary::of(&measure(3, || {
+                    let mut acc = 0f32;
+                    for &q in &queries {
+                        for &c in &corpus {
+                            acc += knng::distance::sq_l2_unrolled(
+                                data.row(q as usize),
+                                data.row(c as usize),
+                            );
+                        }
+                    }
+                    acc
+                }))
+                .median;
+                table.row(&[
+                    dim.to_string(),
+                    fmt_secs(pjrt),
+                    fmt_secs(native),
+                    format!("{:.2}×", pjrt / native),
+                ]);
+            }
+            Err(e) => {
+                eprintln!("  d={dim}: skipped ({e:#})");
+            }
+        }
+    }
+    table.finish();
+    println!("\nexpectation: per-set dispatch overhead dominates small batches; bulk tiles amortize");
+}

@@ -1,0 +1,98 @@
+//! Fig 3 — roofline plot points.
+//!
+//! Paper: π = 24 flops/cycle, β = 4.77 bytes/cycle (i7-9700K);
+//! Synthetic Gaussian n=131'072, d ∈ {8, 256}. Claims: d=8 sits on the
+//! memory slope (left of the ridge), d=256 is compute-bound (right of
+//! it), and the greedy heuristic moves the d=8 point right by cutting Q.
+//!
+//! W comes from counted distance evaluations; Q from the simulated LL
+//! misses (+ writebacks) × line size; cycles from wall time at the
+//! nominal 3.6 GHz clock. Absolute flops/cycle differ from the paper's
+//! machine — the claims are about positions relative to the ridge.
+//!
+//! Run: `cargo bench --bench bench_roofline` (`KNNG_BENCH_FULL=1` = paper n)
+
+use knng::bench::{full_scale, measure_once, Table};
+use knng::cachesim::{CacheTracer, Geometry};
+use knng::config::schema::{ComputeKind, SelectionKind};
+use knng::dataset::synth::SynthGaussian;
+use knng::nndescent::compute::NativeEngine;
+use knng::nndescent::{NnDescent, Params};
+use knng::roofline::{ridge_intensity, Machine, RooflinePoint};
+
+fn point(label: &str, n: usize, d: usize, reorder: bool, geom: Geometry, machine: &Machine) -> RooflinePoint {
+    let data = SynthGaussian::multi(n, d, 0xF13).generate();
+    let params = Params::default()
+        .with_k(20)
+        .with_seed(3)
+        .with_selection(SelectionKind::Turbo)
+        .with_compute(ComputeKind::Blocked)
+        .with_reorder(reorder);
+    // Two identical runs (same seed ⇒ same access pattern): the traced
+    // one yields Q via the cache simulator, the untraced one yields the
+    // *real* wall time and W — tracing overhead must not pollute perf.
+    let mut tracer = CacheTracer::new(geom);
+    let mut engine = NativeEngine::new(ComputeKind::Blocked);
+    let _ = NnDescent::new(params.clone()).build_with_engine(&data, &mut engine, &mut tracer);
+    let (result, secs) = measure_once(|| NnDescent::new(params).build(&data));
+    RooflinePoint::from_counters(
+        label,
+        &result.stats,
+        &tracer.stats(),
+        tracer.ll_writebacks(),
+        secs,
+        machine,
+    )
+}
+
+fn main() {
+    let machine = Machine::default();
+    let (n, geom) = if full_scale() {
+        (131_072, Geometry::default())
+    } else {
+        (16_384, Geometry { ll_size: 1 << 20, ..Geometry::default() })
+    };
+    println!(
+        "Fig 3 — roofline, Synthetic Gaussian n={n}; π={} f/c, β={} B/c, ridge I*={:.2} f/B",
+        machine.pi,
+        machine.beta,
+        ridge_intensity(&machine)
+    );
+
+    let pts = vec![
+        point("no-heuristic d=8", n, 8, false, geom, &machine),
+        point("greedyheuristic d=8", n, 8, true, geom, &machine),
+        point("no-heuristic d=256", n, 256, false, geom, &machine),
+    ];
+
+    let mut table = Table::new(
+        "fig3_roofline",
+        &["config", "W_flops", "Q_bytes", "intensity", "bound_side", "perf_f_per_c", "roofline_bound", "efficiency"],
+    );
+    for p in &pts {
+        table.row(&[
+            p.label.clone(),
+            format!("{:.3e}", p.flops),
+            format!("{:.3e}", p.bytes),
+            format!("{:.3}", p.intensity()),
+            if p.memory_bound(&machine) { "memory".into() } else { "compute".into() },
+            format!("{:.3}", p.perf(&machine)),
+            format!("{:.2}", p.bound(&machine)),
+            format!("{:.2}", p.efficiency(&machine)),
+        ]);
+    }
+    table.finish();
+
+    // the three claims of Fig 3, asserted
+    let (d8, d8g, d256) = (&pts[0], &pts[1], &pts[2]);
+    println!("\nclaims:");
+    println!(
+        "  d=8 memory-bound: {} | d=256 compute-bound: {} | greedy raises d=8 intensity: {:.3} → {:.3}",
+        d8.memory_bound(&machine),
+        !d256.memory_bound(&machine),
+        d8.intensity(),
+        d8g.intensity()
+    );
+    assert!(d8.intensity() < d256.intensity(), "d=256 must have higher intensity");
+    assert!(d8g.intensity() > d8.intensity(), "greedy must raise operational intensity");
+}

@@ -1,0 +1,67 @@
+//! Fig 6 — performance [flops/cycle] vs dataset size n at d=256.
+//!
+//! Paper: Synthetic Gaussian, d=256 fixed, n sweeping; one line per
+//! cumulative version tag (turbosampling → l2intrinsics → mem-align →
+//! blocked → greedyheuristic), ≈1.5× total gain, performance degrading
+//! as n outgrows the caches.
+//!
+//! Tag mapping (see DESIGN.md §1): our `scalar` compute ≙ turbosampling
+//! baseline (selection already turbo), `unrolled` ≙ l2intrinsics +
+//! mem-align (alignment is structural in AlignedMatrix), `blocked` ≙
+//! blocked, `blocked+reorder` ≙ greedyheuristic.
+//!
+//! Run: `cargo bench --bench bench_scaling_n` (CI sizes)
+//!      `KNNG_BENCH_FULL=1 ...` for the paper's n range.
+
+use knng::bench::{full_scale, measure_once, Table};
+use knng::config::schema::{ComputeKind, SelectionKind};
+use knng::dataset::synth::SynthGaussian;
+use knng::nndescent::{NnDescent, Params};
+use knng::util::timer::DEFAULT_NOMINAL_HZ;
+
+fn variants() -> Vec<(&'static str, ComputeKind, bool)> {
+    vec![
+        ("turbosampling", ComputeKind::Scalar, false),
+        ("l2intrinsics+memalign", ComputeKind::Unrolled, false),
+        ("blocked", ComputeKind::Blocked, false),
+        ("greedyheuristic", ComputeKind::Blocked, true),
+    ]
+}
+
+fn main() {
+    let d = 256;
+    let ns: Vec<usize> = if full_scale() {
+        vec![2048, 4096, 8192, 16_384, 32_768, 65_536]
+    } else {
+        vec![1024, 2048, 4096]
+    };
+    println!("Fig 6 — perf vs n at d={d} (Synthetic Gaussian, k=20)");
+
+    let mut table = Table::new("fig6_scaling_n", &["variant", "n", "secs", "dist_evals", "flops_per_cycle"]);
+    for &n in &ns {
+        let data = SynthGaussian::multi(n, d, 0xF16).generate();
+        for (tag, compute, reorder) in variants() {
+            let params = Params::default()
+                .with_k(20)
+                .with_seed(6)
+                .with_selection(SelectionKind::Turbo)
+                .with_compute(compute)
+                .with_reorder(reorder);
+            let (result, secs) = measure_once(|| NnDescent::new(params.clone()).build(&data));
+            let flops = result.stats.flops() as f64;
+            let fpc = flops / (secs * DEFAULT_NOMINAL_HZ);
+            table.row(&[
+                tag.to_string(),
+                n.to_string(),
+                format!("{secs:.3}"),
+                result.stats.dist_evals.to_string(),
+                format!("{fpc:.3}"),
+            ]);
+        }
+    }
+    table.finish();
+    println!(
+        "\npaper reference: each tag adds a layer; total ≈1.5× turbosampling→greedyheuristic; \
+         perf decays as n outgrows LL cache"
+    );
+}

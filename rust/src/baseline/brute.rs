@@ -1,0 +1,117 @@
+//! Exact K-NN by exhaustive pairwise evaluation — the ground truth for
+//! every recall number in EXPERIMENTS.md (paper §2 validates ≥99% recall
+//! against this).
+//!
+//! O(n²·d): fine up to a few tens of thousands of points; for larger n
+//! use [`brute_force_knn_sampled`], which computes exact neighbors for a
+//! deterministic subset of query nodes only (recall estimated on the
+//! sample, as is standard for ANN benchmarks).
+
+use crate::dataset::AlignedMatrix;
+use crate::distance::sq_l2_unrolled;
+use crate::graph::heap::{heap_push, sorted_neighbors, EMPTY_ID};
+use crate::util::rng::Pcg64;
+
+/// Exact neighbor lists for a set of query nodes.
+#[derive(Debug, Clone)]
+pub struct GroundTruth {
+    pub k: usize,
+    /// (query node id, its exact k-NN sorted ascending by distance)
+    pub queries: Vec<(u32, Vec<(u32, f32)>)>,
+}
+
+impl GroundTruth {
+    /// Look up a query's truth list (None if not sampled).
+    pub fn get(&self, u: u32) -> Option<&[(u32, f32)]> {
+        self.queries
+            .binary_search_by_key(&u, |q| q.0)
+            .ok()
+            .map(|i| self.queries[i].1.as_slice())
+    }
+}
+
+/// Exact K-NN for every node.
+pub fn brute_force_knn(data: &AlignedMatrix, k: usize) -> GroundTruth {
+    let all: Vec<u32> = (0..data.n() as u32).collect();
+    exact_for_queries(data, k, &all)
+}
+
+/// Exact K-NN for `m` deterministically sampled query nodes.
+pub fn brute_force_knn_sampled(data: &AlignedMatrix, k: usize, m: usize, seed: u64) -> GroundTruth {
+    let n = data.n();
+    if m >= n {
+        return brute_force_knn(data, k);
+    }
+    let mut rng = Pcg64::new_stream(seed, 0x6007);
+    let mut qs = Vec::new();
+    rng.sample_indices(n, m, &mut qs);
+    qs.sort_unstable();
+    exact_for_queries(data, k, &qs)
+}
+
+fn exact_for_queries(data: &AlignedMatrix, k: usize, queries: &[u32]) -> GroundTruth {
+    let n = data.n();
+    let k = k.min(n - 1);
+    let mut out = Vec::with_capacity(queries.len());
+    let mut ids = vec![EMPTY_ID; k];
+    let mut dists = vec![f32::INFINITY; k];
+    let mut flags = vec![false; k];
+    for &q in queries {
+        ids.fill(EMPTY_ID);
+        dists.fill(f32::INFINITY);
+        let a = data.row(q as usize);
+        for v in 0..n as u32 {
+            if v == q {
+                continue;
+            }
+            let d = sq_l2_unrolled(a, data.row(v as usize));
+            heap_push(&mut ids, &mut dists, &mut flags, v, d, false);
+        }
+        out.push((q, sorted_neighbors(&ids, &dists)));
+    }
+    GroundTruth { k, queries: out }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth::SynthGaussian;
+
+    #[test]
+    fn exact_on_a_line() {
+        // points at x = 0,1,2,3,4 → neighbors are the adjacent ones
+        let data = AlignedMatrix::from_rows(5, 1, &[0.0, 1.0, 2.0, 3.0, 4.0]);
+        let gt = brute_force_knn(&data, 2);
+        let n0 = gt.get(0).unwrap();
+        assert_eq!(n0[0], (1, 1.0));
+        assert_eq!(n0[1], (2, 4.0));
+        let n2 = gt.get(2).unwrap();
+        let ids: Vec<u32> = n2.iter().map(|p| p.0).collect();
+        assert!(ids.contains(&1) && ids.contains(&3));
+    }
+
+    #[test]
+    fn sampled_subset_consistent_with_full() {
+        let data = SynthGaussian::single(200, 8, 5).generate();
+        let full = brute_force_knn(&data, 5);
+        let sampled = brute_force_knn_sampled(&data, 5, 20, 42);
+        assert_eq!(sampled.queries.len(), 20);
+        for (q, list) in &sampled.queries {
+            assert_eq!(full.get(*q).unwrap(), list.as_slice());
+        }
+        // sampling with m >= n falls back to full
+        let all = brute_force_knn_sampled(&data, 5, 500, 42);
+        assert_eq!(all.queries.len(), 200);
+    }
+
+    #[test]
+    fn lists_sorted_and_exclude_self() {
+        let data = SynthGaussian::single(100, 8, 9).generate();
+        let gt = brute_force_knn(&data, 10);
+        for (q, list) in &gt.queries {
+            assert_eq!(list.len(), 10);
+            assert!(list.windows(2).all(|w| w[0].1 <= w[1].1), "sorted");
+            assert!(list.iter().all(|&(v, _)| v != *q), "no self");
+        }
+    }
+}

@@ -1,0 +1,9 @@
+//! Comparators: exact brute-force K-NN (ground truth for recall) and a
+//! faithful Rust port of PyNNDescent's algorithmic profile (the paper's
+//! external baseline in Table 2).
+
+pub mod brute;
+pub mod pynnd;
+
+pub use brute::{brute_force_knn, brute_force_knn_sampled, GroundTruth};
+pub use pynnd::PyNndBaseline;

@@ -1,0 +1,209 @@
+//! Benchmark harness utilities (offline substitute for `criterion`).
+//!
+//! Every `rust/benches/bench_*.rs` binary uses this module: repeated
+//! measurement with warmup, median/min reporting, aligned table output,
+//! and CSV emission (so figures can be re-plotted from the raw series).
+//! Benches honor two env vars:
+//!
+//! * `KNNG_BENCH_FULL=1` — run paper-scale problem sizes (minutes), not
+//!   the CI-scale defaults.
+//! * `KNNG_BENCH_CSV=dir` — also write each table as `dir/<name>.csv`.
+
+use crate::util::stats::Summary;
+use std::io::Write;
+use std::time::Instant;
+
+/// True when paper-scale sizes were requested.
+pub fn full_scale() -> bool {
+    std::env::var("KNNG_BENCH_FULL").map(|v| v == "1" || v == "true").unwrap_or(false)
+}
+
+/// Number of measured repetitions (extra samples on top of the warmup).
+pub fn default_reps() -> usize {
+    if full_scale() {
+        3
+    } else {
+        3
+    }
+}
+
+/// Measure a closure `reps` times after one warmup run; returns seconds
+/// per repetition (all samples).
+pub fn measure<T>(reps: usize, mut f: impl FnMut() -> T) -> Vec<f64> {
+    std::hint::black_box(f()); // warmup (also faults pages, fills caches)
+    let mut samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        let out = f();
+        samples.push(t0.elapsed().as_secs_f64());
+        std::hint::black_box(out);
+    }
+    samples
+}
+
+/// Measure once (for long-running end-to-end cases).
+pub fn measure_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// A results table with aligned console rendering and CSV output.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub name: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(name: &str, headers: &[&str]) -> Self {
+        Self {
+            name: name.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells.to_vec());
+    }
+
+    /// Render to stdout with aligned columns.
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.name);
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  "));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+
+    /// Write CSV into the `KNNG_BENCH_CSV` directory if set.
+    pub fn maybe_csv(&self) {
+        let Ok(dir) = std::env::var("KNNG_BENCH_CSV") else { return };
+        if dir.is_empty() {
+            return;
+        }
+        let _ = std::fs::create_dir_all(&dir);
+        let path = std::path::Path::new(&dir).join(format!("{}.csv", self.name));
+        if let Ok(mut f) = std::fs::File::create(&path) {
+            let esc = |s: &str| {
+                if s.contains([',', '"', '\n']) {
+                    format!("\"{}\"", s.replace('"', "\"\""))
+                } else {
+                    s.to_string()
+                }
+            };
+            let _ = writeln!(f, "{}", self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+            for row in &self.rows {
+                let _ = writeln!(f, "{}", row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            }
+            eprintln!("[bench] wrote {}", path.display());
+        }
+    }
+
+    /// Print and optionally persist.
+    pub fn finish(&self) {
+        self.print();
+        self.maybe_csv();
+    }
+}
+
+/// Format seconds with adaptive precision.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2} µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", s * 1e3)
+    } else {
+        format!("{:.2} s", s)
+    }
+}
+
+/// Format a sample set as `median (±stddev)`.
+pub fn fmt_samples(samples: &[f64]) -> String {
+    let s = Summary::of(samples);
+    format!("{} (±{})", fmt_secs(s.median), fmt_secs(s.stddev))
+}
+
+/// Format a large count with thousands separators (`131'072` paper style).
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push('\'');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_rendering_and_arity() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+        t.print(); // smoke: must not panic
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity mismatch")]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn measure_returns_reps_samples() {
+        let samples = measure(5, || (0..100).sum::<u64>());
+        assert_eq!(samples.len(), 5);
+        assert!(samples.iter().all(|&s| s >= 0.0));
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_count(131072), "131'072");
+        assert_eq!(fmt_count(7), "7");
+        assert_eq!(fmt_count(1234567), "1'234'567");
+        assert!(fmt_secs(2.5).contains('s'));
+        assert!(fmt_secs(0.002).contains("ms"));
+        assert!(fmt_secs(2e-6).contains("µs"));
+        assert!(fmt_secs(5e-9).contains("ns"));
+    }
+
+    #[test]
+    fn csv_written_when_env_set() {
+        let dir = std::env::temp_dir().join("knng_bench_csv_test");
+        std::env::set_var("KNNG_BENCH_CSV", dir.to_str().unwrap());
+        let mut t = Table::new("csv_test", &["x", "y"]);
+        t.row(&["1".into(), "a,b".into()]);
+        t.maybe_csv();
+        let content = std::fs::read_to_string(dir.join("csv_test.csv")).unwrap();
+        assert!(content.contains("\"a,b\""));
+        std::env::remove_var("KNNG_BENCH_CSV");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

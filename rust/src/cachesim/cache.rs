@@ -1,0 +1,232 @@
+//! Set-associative cache model: LRU replacement, write-back +
+//! write-allocate, configurable size/associativity/line size — the same
+//! model cachegrind simulates.
+
+/// One cache level.
+#[derive(Debug, Clone)]
+pub struct Cache {
+    /// Human label ("D1", "LL").
+    pub name: &'static str,
+    line_bits: u32,
+    set_count: usize,
+    assoc: usize,
+    /// tags per set, most-recently-used LAST (simple Vec-based LRU —
+    /// assoc ≤ 16, shifts are cheap and branch-free enough).
+    sets: Vec<Vec<u64>>,
+    /// dirty bit per (set, way), parallel to `sets`.
+    dirty: Vec<Vec<bool>>,
+    pub read_hits: u64,
+    pub read_misses: u64,
+    pub write_hits: u64,
+    pub write_misses: u64,
+    pub writebacks: u64,
+}
+
+impl Cache {
+    /// `size` bytes total, `assoc`-way, `line` bytes per line.
+    /// Non-power-of-two set counts are supported (e.g. the i7-9700K's
+    /// 12 MiB LL has 12288 sets) via modulo indexing, exactly as
+    /// cachegrind models them.
+    pub fn new(name: &'static str, size: usize, assoc: usize, line: usize) -> Self {
+        assert!(line.is_power_of_two() && line >= 8);
+        assert!(size % (assoc * line) == 0, "size must be assoc×line aligned");
+        let set_count = size / (assoc * line);
+        assert!(set_count >= 1);
+        Self {
+            name,
+            line_bits: line.trailing_zeros(),
+            set_count,
+            assoc,
+            sets: vec![Vec::with_capacity(assoc); set_count],
+            dirty: vec![Vec::with_capacity(assoc); set_count],
+            read_hits: 0,
+            read_misses: 0,
+            write_hits: 0,
+            write_misses: 0,
+            writebacks: 0,
+        }
+    }
+
+    #[inline]
+    fn set_and_tag(&self, addr: usize) -> (usize, u64) {
+        let line_addr = (addr as u64) >> self.line_bits;
+        if self.set_count.is_power_of_two() {
+            (
+                (line_addr as usize) & (self.set_count - 1),
+                line_addr >> self.set_count.trailing_zeros(),
+            )
+        } else {
+            (
+                (line_addr % self.set_count as u64) as usize,
+                line_addr / self.set_count as u64,
+            )
+        }
+    }
+
+    /// Access one line-aligned address. Returns `true` on hit.
+    /// On miss, the line is allocated (write-allocate) and the LRU
+    /// victim evicted (counting a writeback if dirty).
+    pub fn access_line(&mut self, addr: usize, write: bool) -> bool {
+        let (set_idx, tag) = self.set_and_tag(addr);
+        let set = &mut self.sets[set_idx];
+        let dirty = &mut self.dirty[set_idx];
+        if let Some(pos) = set.iter().position(|&t| t == tag) {
+            // hit: move to MRU (back)
+            let t = set.remove(pos);
+            let d = dirty.remove(pos);
+            set.push(t);
+            dirty.push(d || write);
+            if write {
+                self.write_hits += 1;
+            } else {
+                self.read_hits += 1;
+            }
+            true
+        } else {
+            if write {
+                self.write_misses += 1;
+            } else {
+                self.read_misses += 1;
+            }
+            if set.len() == self.assoc {
+                set.remove(0);
+                if dirty.remove(0) {
+                    self.writebacks += 1;
+                }
+            }
+            set.push(tag);
+            dirty.push(write);
+            false
+        }
+    }
+
+    /// Line size in bytes.
+    pub fn line_bytes(&self) -> usize {
+        1 << self.line_bits
+    }
+
+    /// Total accesses.
+    pub fn accesses(&self) -> u64 {
+        self.read_hits + self.read_misses + self.write_hits + self.write_misses
+    }
+
+    /// Miss ratio over all accesses.
+    pub fn miss_ratio(&self) -> f64 {
+        let m = (self.read_misses + self.write_misses) as f64;
+        let a = self.accesses() as f64;
+        if a == 0.0 {
+            0.0
+        } else {
+            m / a
+        }
+    }
+
+    /// Reset counters (not contents).
+    pub fn reset_counters(&mut self) {
+        self.read_hits = 0;
+        self.read_misses = 0;
+        self.write_hits = 0;
+        self.write_misses = 0;
+        self.writebacks = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Cache {
+        // 4 sets × 2 ways × 64B = 512B
+        Cache::new("t", 512, 2, 64)
+    }
+
+    #[test]
+    fn cold_miss_then_hit() {
+        let mut c = tiny();
+        assert!(!c.access_line(0x1000, false));
+        assert!(c.access_line(0x1000, false));
+        assert!(c.access_line(0x1010, false), "same line");
+        assert_eq!(c.read_misses, 1);
+        assert_eq!(c.read_hits, 2);
+    }
+
+    #[test]
+    fn lru_eviction() {
+        let mut c = tiny();
+        // three tags mapping to the same set (set stride = 4 lines = 256B)
+        let a = 0x0000;
+        let b = 0x0100; // +4 lines → same set, different tag? set = (addr>>6) & 3
+        let d = 0x0200;
+        assert!(!c.access_line(a, false));
+        assert!(!c.access_line(b, false));
+        // touch a → b becomes LRU
+        assert!(c.access_line(a, false));
+        assert!(!c.access_line(d, false)); // evicts b
+        assert!(c.access_line(a, false), "a still resident");
+        assert!(!c.access_line(b, false), "b was evicted");
+    }
+
+    #[test]
+    fn writeback_counted_only_when_dirty() {
+        let mut c = tiny();
+        let (a, b, d) = (0x0000, 0x0100, 0x0200);
+        c.access_line(a, true); // dirty
+        c.access_line(b, false); // clean
+        c.access_line(d, false); // evicts a (LRU) → writeback
+        assert_eq!(c.writebacks, 1);
+        c.access_line(a, false); // evicts b (clean) → no writeback
+        assert_eq!(c.writebacks, 1);
+    }
+
+    #[test]
+    fn working_set_smaller_than_cache_never_misses_after_warmup() {
+        let mut c = Cache::new("c", 4096, 4, 64); // 64 lines
+        for round in 0..3 {
+            for i in 0..32 {
+                let hit = c.access_line(i * 64, false);
+                if round > 0 {
+                    assert!(hit, "line {i} missed after warmup");
+                }
+            }
+        }
+        assert_eq!(c.read_misses, 32);
+    }
+
+    #[test]
+    fn streaming_overflows() {
+        let mut c = Cache::new("c", 4096, 4, 64);
+        // stream 1000 distinct lines twice: capacity misses both rounds
+        for _ in 0..2 {
+            for i in 0..1000usize {
+                c.access_line(i * 64, false);
+            }
+        }
+        assert!(c.read_misses >= 1900, "expected ~2000 misses, got {}", c.read_misses);
+    }
+
+    #[test]
+    fn non_pow2_set_count_works() {
+        // 12 MiB / (16 × 64) = 12288 sets — the i7-9700K LL geometry
+        let mut c = Cache::new("LL", 12 << 20, 16, 64);
+        assert!(!c.access_line(0x1000, false));
+        assert!(c.access_line(0x1000, false));
+        // two addresses that differ by exactly set_count lines map to
+        // the same set with different tags
+        let stride = 12288 * 64;
+        assert!(!c.access_line(0x40, false));
+        assert!(!c.access_line(0x40 + stride, false));
+        assert!(c.access_line(0x40, false), "both resident (assoc 16)");
+        assert!(c.access_line(0x40 + stride, false));
+    }
+
+    #[test]
+    fn miss_ratio_and_reset() {
+        let mut c = tiny();
+        c.access_line(0, false);
+        c.access_line(0, false);
+        assert!((c.miss_ratio() - 0.5).abs() < 1e-12);
+        c.reset_counters();
+        assert_eq!(c.accesses(), 0);
+        assert!(c.access_line(0, false), "contents survive counter reset");
+    }
+}

@@ -1,0 +1,255 @@
+//! Cache-hierarchy simulator — the substrate standing in for cachegrind
+//! (paper §4.2, Table 1).
+//!
+//! cachegrind models a first-level data cache (D1) and a last-level
+//! cache (LL); so do we. The default geometry matches the paper's
+//! i7-9700K: D1 = 32 KiB 8-way (per-core; the paper's "L1: 256 KiB" is
+//! the 8-core aggregate), LL = 12 MiB 16-way, 64-byte lines.
+//!
+//! [`CacheTracer`] implements [`trace::Tracer`], so any algorithm
+//! function generic over a tracer can be replayed through the hierarchy:
+//! every simulated access goes to D1; D1 misses propagate to LL;
+//! LL read/write misses are the numbers Table 1 reports.
+
+pub mod cache;
+pub mod trace;
+
+pub use cache::Cache;
+pub use trace::{CountingTracer, NoTracer, RecordingTracer, Tracer};
+
+/// Geometry of a two-level (D1 + LL) hierarchy.
+#[derive(Debug, Clone, Copy)]
+pub struct Geometry {
+    pub d1_size: usize,
+    pub d1_assoc: usize,
+    pub ll_size: usize,
+    pub ll_assoc: usize,
+    pub line: usize,
+}
+
+impl Default for Geometry {
+    fn default() -> Self {
+        // i7-9700K per-core D1 + shared LL (paper's machine)
+        Self { d1_size: 32 << 10, d1_assoc: 8, ll_size: 12 << 20, ll_assoc: 16, line: 64 }
+    }
+}
+
+/// Summary counters in cachegrind's vocabulary.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub d1_read_misses: u64,
+    pub d1_write_misses: u64,
+    /// DLmr: last-level data read misses (Table 1, column 1).
+    pub ll_read_misses: u64,
+    /// DLmw: last-level data write misses (Table 1, column 2).
+    pub ll_write_misses: u64,
+    pub reads: u64,
+    pub writes: u64,
+}
+
+impl CacheStats {
+    /// Bytes moved from DRAM (LL misses + writebacks × line), the Q(n)
+    /// input to the roofline model.
+    pub fn dram_bytes(&self, line: usize, writebacks: u64) -> u64 {
+        (self.ll_read_misses + self.ll_write_misses + writebacks) * line as u64
+    }
+}
+
+/// Tracer feeding a simulated D1+LL hierarchy.
+#[derive(Debug)]
+pub struct CacheTracer {
+    pub d1: Cache,
+    pub ll: Cache,
+    line: usize,
+    reads: u64,
+    writes: u64,
+}
+
+impl CacheTracer {
+    pub fn new(geom: Geometry) -> Self {
+        Self {
+            d1: Cache::new("D1", geom.d1_size, geom.d1_assoc, geom.line),
+            ll: Cache::new("LL", geom.ll_size, geom.ll_assoc, geom.line),
+            line: geom.line,
+            reads: 0,
+            writes: 0,
+        }
+    }
+
+    /// Simulate an access of `bytes` bytes at `addr` (possibly spanning
+    /// several lines).
+    #[inline]
+    fn access(&mut self, addr: usize, bytes: u32, write: bool) {
+        let first = addr & !(self.line - 1);
+        let last = (addr + bytes.max(1) as usize - 1) & !(self.line - 1);
+        let mut a = first;
+        loop {
+            if !self.d1.access_line(a, write) {
+                // D1 miss → LL (allocation in both, as cachegrind does)
+                self.ll.access_line(a, write);
+            }
+            if a == last {
+                break;
+            }
+            a += self.line;
+        }
+    }
+
+    /// Extract the cachegrind-style counters.
+    pub fn stats(&self) -> CacheStats {
+        CacheStats {
+            d1_read_misses: self.d1.read_misses,
+            d1_write_misses: self.d1.write_misses,
+            ll_read_misses: self.ll.read_misses,
+            ll_write_misses: self.ll.write_misses,
+            reads: self.reads,
+            writes: self.writes,
+        }
+    }
+
+    /// LL writebacks (for DRAM-byte accounting).
+    pub fn ll_writebacks(&self) -> u64 {
+        self.ll.writebacks
+    }
+}
+
+impl Tracer for CacheTracer {
+    #[inline]
+    fn read(&mut self, addr: usize, bytes: u32) {
+        self.reads += 1;
+        self.access(addr, bytes, false);
+    }
+    #[inline]
+    fn write(&mut self, addr: usize, bytes: u32) {
+        self.writes += 1;
+        self.access(addr, bytes, true);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small_geom() -> Geometry {
+        Geometry { d1_size: 1 << 10, d1_assoc: 2, ll_size: 8 << 10, ll_assoc: 4, line: 64 }
+    }
+
+    #[test]
+    fn d1_miss_propagates_to_ll() {
+        let mut t = CacheTracer::new(small_geom());
+        t.read(0x1000, 4);
+        let s = t.stats();
+        assert_eq!(s.d1_read_misses, 1);
+        assert_eq!(s.ll_read_misses, 1);
+        // second read: D1 hit, LL untouched
+        t.read(0x1000, 4);
+        let s = t.stats();
+        assert_eq!(s.d1_read_misses, 1);
+        assert_eq!(s.ll_read_misses, 1);
+    }
+
+    #[test]
+    fn ll_absorbs_d1_capacity_misses() {
+        let mut t = CacheTracer::new(small_geom());
+        // stream 32 lines (2 KiB): overflows 1 KiB D1, fits 8 KiB LL
+        for round in 0..2 {
+            for i in 0..32usize {
+                t.read(i * 64, 4);
+            }
+            if round == 0 {
+                assert_eq!(t.stats().ll_read_misses, 32, "cold LL misses");
+            }
+        }
+        let s = t.stats();
+        assert_eq!(s.ll_read_misses, 32, "round 2 D1 misses must hit in LL");
+        assert!(s.d1_read_misses > 32, "D1 too small to hold the stream");
+    }
+
+    #[test]
+    fn multi_line_access_touches_every_line() {
+        let mut t = CacheTracer::new(small_geom());
+        t.read(0x100, 256); // 4 lines, aligned
+        assert_eq!(t.stats().d1_read_misses, 4);
+        let mut t = CacheTracer::new(small_geom());
+        t.read(0x13c, 8); // straddles a line boundary
+        assert_eq!(t.stats().d1_read_misses, 2);
+    }
+
+    #[test]
+    fn working_set_vs_ll_size_controls_misses() {
+        // the effect Table 1 rests on: a working set that fits LL stops
+        // missing after warmup; one that doesn't keeps missing.
+        let geom = small_geom(); // LL = 8 KiB = 128 lines
+        let mut fits = CacheTracer::new(geom);
+        let mut thrash = CacheTracer::new(geom);
+        for _ in 0..5 {
+            for i in 0..64usize {
+                fits.read(i * 64, 4);
+            }
+            for i in 0..512usize {
+                thrash.read(i * 64, 4);
+            }
+        }
+        assert_eq!(fits.stats().ll_read_misses, 64, "fits: cold misses only");
+        assert!(
+            thrash.stats().ll_read_misses > 2000,
+            "thrash: every round re-misses, got {}",
+            thrash.stats().ll_read_misses
+        );
+    }
+
+    #[test]
+    fn prop_bigger_cache_never_misses_more() {
+        use crate::testing::{check, Config};
+        check(Config::cases(30), "LL misses monotone in cache size", |g| {
+            // random trace over a modest address range
+            let trace: Vec<(usize, u32, bool)> = (0..2000)
+                .map(|_| (g.usize_in(0..1 << 16) & !3, 4u32, g.bool(0.3)))
+                .collect();
+            let run = |ll_size: usize| {
+                let mut t = CacheTracer::new(Geometry {
+                    d1_size: 1 << 10,
+                    d1_assoc: 2,
+                    ll_size,
+                    ll_assoc: 4,
+                    line: 64,
+                });
+                for &(a, b, w) in &trace {
+                    if w {
+                        t.write(a, b);
+                    } else {
+                        t.read(a, b);
+                    }
+                }
+                let s = t.stats();
+                s.ll_read_misses + s.ll_write_misses
+            };
+            // LRU inclusion property: strictly larger same-assoc cache
+            // cannot miss more on the same trace
+            run(16 << 10) >= run(64 << 10)
+        });
+    }
+
+    #[test]
+    fn prop_trace_determinism() {
+        use crate::testing::{check, Config};
+        check(Config::cases(20), "simulation deterministic", |g| {
+            let trace: Vec<(usize, u32)> =
+                (0..500).map(|_| (g.usize_in(0..1 << 14), 1 + g.u32_in(0..64))).collect();
+            let run = || {
+                let mut t = CacheTracer::new(small_geom());
+                for &(a, b) in &trace {
+                    t.read(a, b);
+                }
+                t.stats()
+            };
+            run() == run()
+        });
+    }
+
+    #[test]
+    fn dram_bytes_accounting() {
+        let s = CacheStats { ll_read_misses: 10, ll_write_misses: 5, ..Default::default() };
+        assert_eq!(s.dram_bytes(64, 3), (10 + 5 + 3) * 64);
+    }
+}

@@ -1,0 +1,95 @@
+//! Memory-trace instrumentation points.
+//!
+//! The algorithm's hot functions are generic over a [`Tracer`]; the
+//! default [`NoTracer`] monomorphizes every event to nothing (zero cost
+//! on the real hot path — verified by identical bench timings), while
+//! [`super::CacheTracer`] feeds a simulated cache hierarchy to
+//! regenerate the paper's cachegrind measurements (Table 1).
+//!
+//! Events are emitted at *array-access* granularity (a data row read, a
+//! heap-strip touch), mirroring what cachegrind would observe from the
+//! compiled loads/stores of the same structures.
+
+/// Receives the algorithm's memory accesses.
+pub trait Tracer {
+    /// A read of `bytes` bytes starting at `addr`.
+    #[inline(always)]
+    fn read(&mut self, _addr: usize, _bytes: u32) {}
+    /// A write of `bytes` bytes starting at `addr`.
+    #[inline(always)]
+    fn write(&mut self, _addr: usize, _bytes: u32) {}
+}
+
+/// The zero-cost default tracer.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NoTracer;
+
+impl Tracer for NoTracer {}
+
+/// A tracer that records events into a vector (testing / debugging).
+#[derive(Debug, Default)]
+pub struct RecordingTracer {
+    pub events: Vec<(bool, usize, u32)>, // (is_write, addr, bytes)
+}
+
+impl Tracer for RecordingTracer {
+    #[inline]
+    fn read(&mut self, addr: usize, bytes: u32) {
+        self.events.push((false, addr, bytes));
+    }
+    #[inline]
+    fn write(&mut self, addr: usize, bytes: u32) {
+        self.events.push((true, addr, bytes));
+    }
+}
+
+/// Counting tracer: totals only (cheap sanity instrument).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CountingTracer {
+    pub reads: u64,
+    pub read_bytes: u64,
+    pub writes: u64,
+    pub write_bytes: u64,
+}
+
+impl Tracer for CountingTracer {
+    #[inline]
+    fn read(&mut self, _addr: usize, bytes: u32) {
+        self.reads += 1;
+        self.read_bytes += bytes as u64;
+    }
+    #[inline]
+    fn write(&mut self, _addr: usize, bytes: u32) {
+        self.writes += 1;
+        self.write_bytes += bytes as u64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recording_tracer_captures_events() {
+        let mut t = RecordingTracer::default();
+        t.read(0x1000, 64);
+        t.write(0x2000, 4);
+        assert_eq!(t.events, vec![(false, 0x1000, 64), (true, 0x2000, 4)]);
+    }
+
+    #[test]
+    fn counting_tracer_totals() {
+        let mut t = CountingTracer::default();
+        t.read(0, 32);
+        t.read(64, 32);
+        t.write(0, 8);
+        assert_eq!((t.reads, t.read_bytes, t.writes, t.write_bytes), (2, 64, 1, 8));
+    }
+
+    #[test]
+    fn no_tracer_is_inert() {
+        let mut t = NoTracer;
+        t.read(123, 4);
+        t.write(456, 8); // nothing observable; must compile + not panic
+    }
+}

@@ -1,0 +1,274 @@
+//! Hand-rolled command-line parsing (no `clap` offline).
+//!
+//! Declarative-enough: an [`ArgSpec`] lists the flags a subcommand
+//! accepts; [`parse_args`] validates and produces an [`ArgMatches`] with
+//! typed getters. Supports `--flag value`, `--flag=value`, boolean
+//! `--flag`, repeated flags, and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Kind of value a flag takes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArgKind {
+    /// Boolean presence flag.
+    Flag,
+    /// Flag taking exactly one value.
+    Value,
+    /// Flag that may repeat, collecting values.
+    Multi,
+}
+
+/// One accepted flag.
+#[derive(Debug, Clone)]
+pub struct ArgDef {
+    pub name: &'static str,
+    pub kind: ArgKind,
+    pub help: &'static str,
+}
+
+/// A subcommand's accepted flags and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct ArgSpec {
+    pub args: Vec<ArgDef>,
+    /// Max number of positional arguments (0 = none allowed).
+    pub max_positional: usize,
+}
+
+impl ArgSpec {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgDef { name, kind: ArgKind::Flag, help });
+        self
+    }
+    pub fn value(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgDef { name, kind: ArgKind::Value, help });
+        self
+    }
+    pub fn multi(mut self, name: &'static str, help: &'static str) -> Self {
+        self.args.push(ArgDef { name, kind: ArgKind::Multi, help });
+        self
+    }
+    pub fn positionals(mut self, max: usize) -> Self {
+        self.max_positional = max;
+        self
+    }
+
+    fn find(&self, name: &str) -> Option<&ArgDef> {
+        self.args.iter().find(|a| a.name == name)
+    }
+
+    /// Render a `--help`-style usage block.
+    pub fn usage(&self, cmd: &str) -> String {
+        let mut out = format!("usage: knng {cmd} [options]");
+        if self.max_positional > 0 {
+            out.push_str(" [args...]");
+        }
+        out.push('\n');
+        for a in &self.args {
+            let form = match a.kind {
+                ArgKind::Flag => format!("--{}", a.name),
+                ArgKind::Value => format!("--{} <v>", a.name),
+                ArgKind::Multi => format!("--{} <v>...", a.name),
+            };
+            out.push_str(&format!("  {form:<24} {}\n", a.help));
+        }
+        out
+    }
+}
+
+/// Parsed arguments with typed getters.
+#[derive(Debug, Clone, Default)]
+pub struct ArgMatches {
+    flags: BTreeMap<String, Vec<String>>,
+    pub positional: Vec<String>,
+}
+
+/// Parse error with a human-readable message.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("{0}")]
+pub struct CliError(pub String);
+
+impl ArgMatches {
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).and_then(|v| v.first()).map(|s| s.as_str())
+    }
+    pub fn get_all(&self, name: &str) -> &[String] {
+        self.flags.get(name).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+    pub fn str_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => parse_usize(s).ok_or_else(|| CliError(format!("--{name}: bad integer `{s}`"))),
+        }
+    }
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s
+                .replace('_', "")
+                .parse::<u64>()
+                .map_err(|_| CliError(format!("--{name}: bad integer `{s}`"))),
+        }
+    }
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(s) => s.parse::<f64>().map_err(|_| CliError(format!("--{name}: bad float `{s}`"))),
+        }
+    }
+    /// Comma- or repeat-separated usize list (`--dims 8,64 --dims 256`).
+    pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
+        let mut out = Vec::new();
+        for raw in self.get_all(name) {
+            for part in raw.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                out.push(
+                    parse_usize(part)
+                        .ok_or_else(|| CliError(format!("--{name}: bad integer `{part}`")))?,
+                );
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// Accept `16384`, `16_384`, and `16k`/`131072`… suffixes (k, m).
+fn parse_usize(s: &str) -> Option<usize> {
+    let s = s.replace('_', "");
+    if let Some(num) = s.strip_suffix(['k', 'K']) {
+        return num.parse::<usize>().ok().map(|v| v * 1024);
+    }
+    if let Some(num) = s.strip_suffix(['m', 'M']) {
+        return num.parse::<usize>().ok().map(|v| v * 1024 * 1024);
+    }
+    s.parse::<usize>().ok()
+}
+
+/// Parse `argv` (excluding the program/subcommand names) against a spec.
+pub fn parse_args(spec: &ArgSpec, argv: &[String]) -> Result<ArgMatches, CliError> {
+    let mut m = ArgMatches::default();
+    let mut i = 0;
+    while i < argv.len() {
+        let tok = &argv[i];
+        if let Some(body) = tok.strip_prefix("--") {
+            let (name, inline) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let def = spec
+                .find(name)
+                .ok_or_else(|| CliError(format!("unknown flag --{name}")))?;
+            match def.kind {
+                ArgKind::Flag => {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{name} takes no value")));
+                    }
+                    m.flags.entry(name.to_string()).or_default();
+                }
+                ArgKind::Value | ArgKind::Multi => {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{name} requires a value")))?
+                        }
+                    };
+                    let entry = m.flags.entry(name.to_string()).or_default();
+                    if def.kind == ArgKind::Value && !entry.is_empty() {
+                        return Err(CliError(format!("--{name} given more than once")));
+                    }
+                    entry.push(value);
+                }
+            }
+        } else {
+            if m.positional.len() >= spec.max_positional {
+                return Err(CliError(format!("unexpected positional argument `{tok}`")));
+            }
+            m.positional.push(tok.clone());
+        }
+        i += 1;
+    }
+    Ok(m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new()
+            .flag("verbose", "chatty output")
+            .value("n", "number of points")
+            .value("rho", "sample rate")
+            .multi("dims", "dimension list")
+            .positionals(1)
+    }
+
+    fn argv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_all_forms() {
+        let m = parse_args(
+            &spec(),
+            &argv(&["--verbose", "--n=16k", "--rho", "0.5", "--dims", "8,64", "--dims", "256", "pos"]),
+        )
+        .unwrap();
+        assert!(m.has("verbose"));
+        assert_eq!(m.usize_or("n", 0).unwrap(), 16 * 1024);
+        assert_eq!(m.f64_or("rho", 0.0).unwrap(), 0.5);
+        assert_eq!(m.usize_list("dims").unwrap(), vec![8, 64, 256]);
+        assert_eq!(m.positional, vec!["pos"]);
+    }
+
+    #[test]
+    fn defaults_when_absent() {
+        let m = parse_args(&spec(), &argv(&[])).unwrap();
+        assert!(!m.has("verbose"));
+        assert_eq!(m.usize_or("n", 42).unwrap(), 42);
+        assert_eq!(m.str_or("n", "x"), "x");
+        assert!(m.usize_list("dims").unwrap().is_empty());
+    }
+
+    #[test]
+    fn errors() {
+        assert!(parse_args(&spec(), &argv(&["--bogus"])).is_err());
+        assert!(parse_args(&spec(), &argv(&["--n"])).is_err());
+        assert!(parse_args(&spec(), &argv(&["--verbose=1"])).is_err());
+        assert!(parse_args(&spec(), &argv(&["--n", "1", "--n", "2"])).is_err());
+        assert!(parse_args(&spec(), &argv(&["a", "b"])).is_err(), "too many positionals");
+        let m = parse_args(&spec(), &argv(&["--n", "abc"])).unwrap();
+        assert!(m.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn suffix_parsing() {
+        assert_eq!(parse_usize("131072"), Some(131072));
+        assert_eq!(parse_usize("128k"), Some(131072));
+        assert_eq!(parse_usize("1M"), Some(1 << 20));
+        assert_eq!(parse_usize("16_384"), Some(16384));
+        assert_eq!(parse_usize("x"), None);
+    }
+
+    #[test]
+    fn usage_renders() {
+        let u = spec().usage("build");
+        assert!(u.contains("--n <v>"));
+        assert!(u.contains("--dims <v>..."));
+        assert!(u.contains("chatty output"));
+    }
+}

@@ -1,0 +1,13 @@
+//! Configuration system.
+//!
+//! Experiments are described by TOML-subset files (see `parser`), mapped
+//! onto typed configs (see `schema`). The subset supports everything the
+//! repo's `configs/*.toml` use: `[section]` tables, string/int/float/bool
+//! scalars, homogeneous scalar arrays, comments, and dotted sections.
+//! Hand-rolled because `serde`/`toml` are unavailable offline.
+
+pub mod parser;
+pub mod schema;
+
+pub use parser::{parse, ParseError, Table, Value};
+pub use schema::{DatasetSpec, ExperimentConfig, RunConfig};

@@ -1,0 +1,404 @@
+//! TOML-subset parser.
+//!
+//! Supported grammar (sufficient for `configs/*.toml`):
+//!
+//! ```text
+//! file      := (line NEWLINE)*
+//! line      := ws (comment | section | keyvalue)? ws
+//! section   := '[' dotted-key ']'
+//! keyvalue  := key ws '=' ws value
+//! value     := string | float | int | bool | array
+//! array     := '[' (value (',' value)* ','?)? ']'
+//! string    := '"' escaped-chars '"'
+//! comment   := '#' any*
+//! ```
+//!
+//! Values in a `[a.b]` section are stored flat under the key `"a.b.key"`.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// A parsed scalar or array value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_int(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    /// Floats accept integer literals too (`k = 20` usable as f64).
+    pub fn as_float(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+    pub fn as_array(&self) -> Option<&[Value]> {
+        match self {
+            Value::Array(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Value {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Value::Str(s) => write!(f, "{s:?}"),
+            Value::Int(i) => write!(f, "{i}"),
+            Value::Float(x) => write!(f, "{x}"),
+            Value::Bool(b) => write!(f, "{b}"),
+            Value::Array(v) => {
+                write!(f, "[")?;
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{x}")?;
+                }
+                write!(f, "]")
+            }
+        }
+    }
+}
+
+/// Flat key → value map with typed accessors and defaults.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Table {
+    map: BTreeMap<String, Value>,
+}
+
+impl Table {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, key: impl Into<String>, value: Value) {
+        self.map.insert(key.into(), value);
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.map.get(key)
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.map.contains_key(key)
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(Value::as_str).unwrap_or(default)
+    }
+
+    pub fn int_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(Value::as_int).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.int_or(key, default as i64).max(0) as usize
+    }
+
+    pub fn float_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Value::as_float).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    /// Required typed getters for schema validation.
+    pub fn require_str(&self, key: &str) -> Result<&str, ParseError> {
+        self.get(key).and_then(Value::as_str).ok_or_else(|| ParseError {
+            line: 0,
+            msg: format!("missing or non-string key `{key}`"),
+        })
+    }
+}
+
+/// Error with a 1-based line number (0 = semantic, not positional).
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("config parse error at line {line}: {msg}")]
+pub struct ParseError {
+    pub line: usize,
+    pub msg: String,
+}
+
+fn err(line: usize, msg: impl Into<String>) -> ParseError {
+    ParseError { line, msg: msg.into() }
+}
+
+/// Parse a TOML-subset document into a flat [`Table`].
+pub fn parse(input: &str) -> Result<Table, ParseError> {
+    let mut table = Table::new();
+    let mut section = String::new();
+    for (idx, raw) in input.lines().enumerate() {
+        let lineno = idx + 1;
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| err(lineno, "unterminated section header"))?
+                .trim();
+            if name.is_empty() {
+                return Err(err(lineno, "empty section name"));
+            }
+            validate_key(name, lineno)?;
+            section = name.to_string();
+            continue;
+        }
+        let eq = line
+            .find('=')
+            .ok_or_else(|| err(lineno, format!("expected `key = value`, got `{line}`")))?;
+        let key = line[..eq].trim();
+        if key.is_empty() {
+            return Err(err(lineno, "empty key"));
+        }
+        validate_key(key, lineno)?;
+        let value = parse_value(line[eq + 1..].trim(), lineno)?;
+        let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+        if table.contains(&full) {
+            return Err(err(lineno, format!("duplicate key `{full}`")));
+        }
+        table.insert(full, value);
+    }
+    Ok(table)
+}
+
+fn validate_key(key: &str, lineno: usize) -> Result<(), ParseError> {
+    let ok = key
+        .chars()
+        .all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-' || c == '.');
+    if ok {
+        Ok(())
+    } else {
+        Err(err(lineno, format!("invalid key `{key}`")))
+    }
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    let mut escaped = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\\' if in_str => escaped = !escaped,
+            '"' if !escaped => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => escaped = false,
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    if s.is_empty() {
+        return Err(err(lineno, "empty value"));
+    }
+    if s.starts_with('"') {
+        return parse_string(s, lineno);
+    }
+    if s.starts_with('[') {
+        return parse_array(s, lineno);
+    }
+    match s {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    // Numbers: underscores allowed as digit separators (TOML).
+    let clean: String = s.chars().filter(|&c| c != '_').collect();
+    if clean.contains(['.', 'e', 'E']) || clean == "inf" || clean == "-inf" || clean == "nan" {
+        if let Ok(f) = clean.parse::<f64>() {
+            return Ok(Value::Float(f));
+        }
+    } else if let Ok(i) = clean.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    Err(err(lineno, format!("cannot parse value `{s}`")))
+}
+
+fn parse_string(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    let inner = &s[1..];
+    let mut out = String::new();
+    let mut chars = inner.chars();
+    loop {
+        match chars.next() {
+            None => return Err(err(lineno, "unterminated string")),
+            Some('"') => break,
+            Some('\\') => match chars.next() {
+                Some('n') => out.push('\n'),
+                Some('t') => out.push('\t'),
+                Some('\\') => out.push('\\'),
+                Some('"') => out.push('"'),
+                other => return Err(err(lineno, format!("bad escape `\\{other:?}`"))),
+            },
+            Some(c) => out.push(c),
+        }
+    }
+    let rest: String = chars.collect();
+    if !rest.trim().is_empty() {
+        return Err(err(lineno, format!("trailing characters after string: `{rest}`")));
+    }
+    Ok(Value::Str(out))
+}
+
+fn parse_array(s: &str, lineno: usize) -> Result<Value, ParseError> {
+    let inner = s
+        .strip_prefix('[')
+        .and_then(|x| x.strip_suffix(']'))
+        .ok_or_else(|| err(lineno, "unterminated array"))?;
+    let mut items = Vec::new();
+    // split on commas outside strings (nested arrays unsupported — subset)
+    let mut depth_str = false;
+    let mut start = 0usize;
+    let bytes = inner.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        match b {
+            b'"' => depth_str = !depth_str,
+            b',' if !depth_str => {
+                let part = inner[start..i].trim();
+                if !part.is_empty() {
+                    items.push(parse_value(part, lineno)?);
+                }
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    let last = inner[start..].trim();
+    if !last.is_empty() {
+        items.push(parse_value(last, lineno)?);
+    }
+    Ok(Value::Array(items))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let t = parse(
+            r#"
+            # top comment
+            name = "exp1"
+            n = 16_384
+            rho = 0.5
+            verbose = true
+
+            [dataset]
+            kind = "clustered"   # inline comment
+            clusters = 16
+
+            [dataset.gen]
+            sigma = 2.0
+            "#,
+        )
+        .unwrap();
+        assert_eq!(t.get("name").unwrap().as_str(), Some("exp1"));
+        assert_eq!(t.get("n").unwrap().as_int(), Some(16384));
+        assert_eq!(t.get("rho").unwrap().as_float(), Some(0.5));
+        assert_eq!(t.get("verbose").unwrap().as_bool(), Some(true));
+        assert_eq!(t.get("dataset.kind").unwrap().as_str(), Some("clustered"));
+        assert_eq!(t.get("dataset.clusters").unwrap().as_int(), Some(16));
+        assert_eq!(t.get("dataset.gen.sigma").unwrap().as_float(), Some(2.0));
+    }
+
+    #[test]
+    fn parses_arrays() {
+        let t = parse("dims = [8, 64, 256]\nnames = [\"a\", \"b\"]\nempty = []").unwrap();
+        let dims = t.get("dims").unwrap().as_array().unwrap();
+        assert_eq!(dims.iter().map(|v| v.as_int().unwrap()).collect::<Vec<_>>(), vec![8, 64, 256]);
+        let names = t.get("names").unwrap().as_array().unwrap();
+        assert_eq!(names[1].as_str(), Some("b"));
+        assert_eq!(t.get("empty").unwrap().as_array().unwrap().len(), 0);
+    }
+
+    #[test]
+    fn string_escapes_and_hash_inside_string() {
+        let t = parse(r#"s = "a#b\n\"q\"""#).unwrap();
+        assert_eq!(t.get("s").unwrap().as_str(), Some("a#b\n\"q\""));
+    }
+
+    #[test]
+    fn int_as_float_coercion() {
+        let t = parse("k = 20").unwrap();
+        assert_eq!(t.get("k").unwrap().as_float(), Some(20.0));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let e = parse("ok = 1\nbad line").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("x = ").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("[unterminated").unwrap_err();
+        assert_eq!(e.line, 1);
+        let e = parse("a = 1\na = 2").unwrap_err();
+        assert!(e.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(parse("x = notaword").is_err());
+        assert!(parse("x = \"unterminated").is_err());
+        assert!(parse("x = \"done\" trailing").is_err());
+        assert!(parse("bad key! = 1").is_err());
+    }
+
+    #[test]
+    fn defaults_api() {
+        let t = parse("present = 3").unwrap();
+        assert_eq!(t.int_or("present", 0), 3);
+        assert_eq!(t.int_or("absent", 7), 7);
+        assert_eq!(t.float_or("absent", 0.5), 0.5);
+        assert_eq!(t.str_or("absent", "d"), "d");
+        assert!(t.bool_or("absent", true));
+        assert_eq!(t.usize_or("present", 0), 3);
+    }
+
+    #[test]
+    fn negative_and_float_formats() {
+        let t = parse("a = -5\nb = -2.5\nc = 1e3\nd = 2.5E-2").unwrap();
+        assert_eq!(t.get("a").unwrap().as_int(), Some(-5));
+        assert_eq!(t.get("b").unwrap().as_float(), Some(-2.5));
+        assert_eq!(t.get("c").unwrap().as_float(), Some(1000.0));
+        assert_eq!(t.get("d").unwrap().as_float(), Some(0.025));
+    }
+}

@@ -1,0 +1,337 @@
+//! Typed experiment configuration mapped from parsed TOML tables.
+//!
+//! A config file fully describes one graph-build run:
+//!
+//! ```toml
+//! name = "mnist-greedy"
+//!
+//! [dataset]
+//! kind = "mnist"          # gaussian | clustered | mnist | audio | fvecs
+//! n = 70000
+//! dim = 784
+//!
+//! [run]
+//! k = 20
+//! rho = 0.5
+//! delta = 0.001
+//! selection = "turbo"     # naive | heap | turbo
+//! compute = "blocked"     # scalar | unrolled | blocked | pjrt
+//! reorder = true
+//! seed = 42
+//! ```
+
+use super::parser::{ParseError, Table};
+
+/// Which selection-step implementation to run (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SelectionKind {
+    /// Three-pass reverse/union/sample straight from Dong et al. pseudocode.
+    Naive,
+    /// PyNNDescent-style fused one-pass with bounded random-weight heaps.
+    Heap,
+    /// Paper's "turbosampling": heap-free, reverse-degree-counter sampling.
+    Turbo,
+}
+
+impl SelectionKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "naive" => Some(Self::Naive),
+            "heap" => Some(Self::Heap),
+            "turbo" => Some(Self::Turbo),
+            _ => None,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Naive => "naive",
+            Self::Heap => "heap",
+            Self::Turbo => "turbo",
+        }
+    }
+}
+
+/// Which distance-evaluation backend the compute step uses (paper §3.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ComputeKind {
+    /// Plain scalar loop (baseline; paper's `nndescent-full` compute).
+    Scalar,
+    /// 8-lane accumulator loop (paper's `l2intrinsics` + `mem-align`).
+    Unrolled,
+    /// 5×5-vector blocked mutual distances (paper's `blocked`).
+    Blocked,
+    /// Offload candidate blocks to the AOT-compiled Pallas/XLA executable.
+    Pjrt,
+}
+
+impl ComputeKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "scalar" => Some(Self::Scalar),
+            "unrolled" => Some(Self::Unrolled),
+            "blocked" => Some(Self::Blocked),
+            "pjrt" => Some(Self::Pjrt),
+            _ => None,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::Unrolled => "unrolled",
+            Self::Blocked => "blocked",
+            Self::Pjrt => "pjrt",
+        }
+    }
+}
+
+/// Dataset description (generator parameters or file paths).
+#[derive(Debug, Clone, PartialEq)]
+pub enum DatasetSpec {
+    /// Synthetic Gaussian (paper §4): `single` = one blob at the origin,
+    /// otherwise one Gaussian per dimension centered on basis vectors.
+    Gaussian { n: usize, dim: usize, single: bool, seed: u64 },
+    /// Synthetic Clustered dataset satisfying the clustered assumption.
+    Clustered { n: usize, dim: usize, clusters: usize, seed: u64 },
+    /// MNIST 70k×784. Loads IDX(+gz) from `path` if given/found,
+    /// otherwise generates the MNIST-like substitute (see DESIGN.md §4).
+    Mnist { n: usize, path: Option<String>, seed: u64 },
+    /// Audio-like dataset, 54387×192 by default (Dong et al. shape).
+    Audio { n: usize, dim: usize, seed: u64 },
+    /// Raw `.fvecs` file (TEXMEX format).
+    Fvecs { path: String, limit: usize },
+}
+
+impl DatasetSpec {
+    /// Human-readable dataset family name.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Self::Gaussian { .. } => "gaussian",
+            Self::Clustered { .. } => "clustered",
+            Self::Mnist { .. } => "mnist",
+            Self::Audio { .. } => "audio",
+            Self::Fvecs { .. } => "fvecs",
+        }
+    }
+
+    fn from_table(t: &Table) -> Result<Self, ParseError> {
+        let kind = t.str_or("dataset.kind", "gaussian");
+        let seed = t.int_or("dataset.seed", 0x5eed) as u64;
+        match kind {
+            "gaussian" => Ok(Self::Gaussian {
+                n: t.usize_or("dataset.n", 16_384),
+                dim: t.usize_or("dataset.dim", 8),
+                single: t.bool_or("dataset.single", true),
+                seed,
+            }),
+            "clustered" => Ok(Self::Clustered {
+                n: t.usize_or("dataset.n", 16_384),
+                dim: t.usize_or("dataset.dim", 8),
+                clusters: t.usize_or("dataset.clusters", 16),
+                seed,
+            }),
+            "mnist" => Ok(Self::Mnist {
+                n: t.usize_or("dataset.n", 70_000),
+                path: t.get("dataset.path").and_then(|v| v.as_str()).map(String::from),
+                seed,
+            }),
+            "audio" => Ok(Self::Audio {
+                n: t.usize_or("dataset.n", 54_387),
+                dim: t.usize_or("dataset.dim", 192),
+                seed,
+            }),
+            "fvecs" => Ok(Self::Fvecs {
+                path: t.require_str("dataset.path")?.to_string(),
+                limit: t.usize_or("dataset.limit", usize::MAX),
+            }),
+            other => Err(ParseError { line: 0, msg: format!("unknown dataset.kind `{other}`") }),
+        }
+    }
+}
+
+/// NN-Descent run parameters (paper defaults: k=20, ρ=0.5, δ=0.001).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunConfig {
+    pub k: usize,
+    pub rho: f64,
+    pub delta: f64,
+    pub max_iters: usize,
+    pub seed: u64,
+    pub selection: SelectionKind,
+    pub compute: ComputeKind,
+    pub reorder: bool,
+    /// Hard cap on candidate-set size (paper: 50).
+    pub max_candidates: usize,
+    /// Directory holding AOT artifacts (pjrt backend only).
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        Self {
+            k: 20,
+            rho: 0.5,
+            delta: 0.001,
+            max_iters: 30,
+            seed: 1,
+            selection: SelectionKind::Turbo,
+            compute: ComputeKind::Blocked,
+            reorder: false,
+            max_candidates: 50,
+            artifacts_dir: "artifacts".to_string(),
+        }
+    }
+}
+
+impl RunConfig {
+    fn from_table(t: &Table) -> Result<Self, ParseError> {
+        let d = Self::default();
+        let selection = {
+            let s = t.str_or("run.selection", d.selection.name());
+            SelectionKind::parse(s)
+                .ok_or_else(|| ParseError { line: 0, msg: format!("unknown run.selection `{s}`") })?
+        };
+        let compute = {
+            let s = t.str_or("run.compute", d.compute.name());
+            ComputeKind::parse(s)
+                .ok_or_else(|| ParseError { line: 0, msg: format!("unknown run.compute `{s}`") })?
+        };
+        let cfg = Self {
+            k: t.usize_or("run.k", d.k),
+            rho: t.float_or("run.rho", d.rho),
+            delta: t.float_or("run.delta", d.delta),
+            max_iters: t.usize_or("run.max_iters", d.max_iters),
+            seed: t.int_or("run.seed", d.seed as i64) as u64,
+            selection,
+            compute,
+            reorder: t.bool_or("run.reorder", d.reorder),
+            max_candidates: t.usize_or("run.max_candidates", d.max_candidates),
+            artifacts_dir: t.str_or("run.artifacts_dir", &d.artifacts_dir).to_string(),
+        };
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Sanity-check parameter ranges.
+    pub fn validate(&self) -> Result<(), ParseError> {
+        let bad = |msg: String| Err(ParseError { line: 0, msg });
+        if self.k == 0 {
+            return bad("run.k must be ≥ 1".into());
+        }
+        if !(0.0 < self.rho && self.rho <= 1.0) {
+            return bad(format!("run.rho must be in (0,1], got {}", self.rho));
+        }
+        if !(0.0..1.0).contains(&self.delta) {
+            return bad(format!("run.delta must be in [0,1), got {}", self.delta));
+        }
+        if self.max_candidates < self.k.min(50) / 2 {
+            return bad(format!(
+                "run.max_candidates ({}) too small for k={}",
+                self.max_candidates, self.k
+            ));
+        }
+        Ok(())
+    }
+}
+
+/// A full experiment: name + dataset + run parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub dataset: DatasetSpec,
+    pub run: RunConfig,
+}
+
+impl ExperimentConfig {
+    /// Build from a parsed table.
+    pub fn from_table(t: &Table) -> Result<Self, ParseError> {
+        Ok(Self {
+            name: t.str_or("name", "unnamed").to_string(),
+            dataset: DatasetSpec::from_table(t)?,
+            run: RunConfig::from_table(t)?,
+        })
+    }
+
+    /// Parse a config file's contents.
+    pub fn from_str(s: &str) -> Result<Self, ParseError> {
+        Self::from_table(&super::parser::parse(s)?)
+    }
+
+    /// Load from a path.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading config {}: {e}", path.display()))?;
+        Ok(Self::from_str(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const FULL: &str = r#"
+        name = "mnist-greedy"
+        [dataset]
+        kind = "mnist"
+        n = 70000
+        [run]
+        k = 20
+        rho = 0.5
+        delta = 0.001
+        selection = "turbo"
+        compute = "blocked"
+        reorder = true
+        seed = 42
+    "#;
+
+    #[test]
+    fn full_roundtrip() {
+        let c = ExperimentConfig::from_str(FULL).unwrap();
+        assert_eq!(c.name, "mnist-greedy");
+        assert!(matches!(c.dataset, DatasetSpec::Mnist { n: 70000, .. }));
+        assert_eq!(c.run.k, 20);
+        assert_eq!(c.run.selection, SelectionKind::Turbo);
+        assert_eq!(c.run.compute, ComputeKind::Blocked);
+        assert!(c.run.reorder);
+        assert_eq!(c.run.seed, 42);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let c = ExperimentConfig::from_str("name = \"d\"").unwrap();
+        assert_eq!(c.run.k, 20);
+        assert_eq!(c.run.rho, 0.5);
+        assert!(matches!(c.dataset, DatasetSpec::Gaussian { n: 16384, dim: 8, single: true, .. }));
+    }
+
+    #[test]
+    fn dataset_kinds() {
+        let c = ExperimentConfig::from_str("[dataset]\nkind = \"clustered\"\nclusters = 8").unwrap();
+        assert!(matches!(c.dataset, DatasetSpec::Clustered { clusters: 8, .. }));
+        let c = ExperimentConfig::from_str("[dataset]\nkind = \"audio\"").unwrap();
+        assert!(matches!(c.dataset, DatasetSpec::Audio { n: 54_387, dim: 192, .. }));
+        let e = ExperimentConfig::from_str("[dataset]\nkind = \"bogus\"");
+        assert!(e.is_err());
+        let e = ExperimentConfig::from_str("[dataset]\nkind = \"fvecs\"");
+        assert!(e.is_err(), "fvecs requires a path");
+    }
+
+    #[test]
+    fn validation_rejects_bad_params() {
+        assert!(ExperimentConfig::from_str("[run]\nk = 0").is_err());
+        assert!(ExperimentConfig::from_str("[run]\nrho = 0.0").is_err());
+        assert!(ExperimentConfig::from_str("[run]\nrho = 1.5").is_err());
+        assert!(ExperimentConfig::from_str("[run]\ndelta = 1.0").is_err());
+        assert!(ExperimentConfig::from_str("[run]\nselection = \"magic\"").is_err());
+        assert!(ExperimentConfig::from_str("[run]\ncompute = \"gpu\"").is_err());
+    }
+
+    #[test]
+    fn kind_names_roundtrip() {
+        for k in [SelectionKind::Naive, SelectionKind::Heap, SelectionKind::Turbo] {
+            assert_eq!(SelectionKind::parse(k.name()), Some(k));
+        }
+        for c in [ComputeKind::Scalar, ComputeKind::Unrolled, ComputeKind::Blocked, ComputeKind::Pjrt] {
+            assert_eq!(ComputeKind::parse(c.name()), Some(c));
+        }
+    }
+}

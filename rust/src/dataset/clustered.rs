@@ -1,0 +1,137 @@
+//! Synthetic Clustered dataset (paper §4).
+//!
+//! "A dataset designed to fulfill our clustered assumption. For every
+//! cluster we draw its points from a multivariate Gaussian. Mean and
+//! covariance are chosen such that the clustered assumption holds with
+//! high probability."
+//!
+//! We place cluster means on a scaled random lattice with pairwise
+//! separation ≫ within-cluster spread, so each point's k nearest
+//! neighbors are within its own cluster w.h.p. Points are emitted in a
+//! *shuffled* order — the reorder heuristic must not be able to cheat off
+//! generation order (paper §3.2 requires "the input is not ordered in any
+//! way revealing information about the structure").
+
+use super::matrix::AlignedMatrix;
+use crate::util::rng::Pcg64;
+
+/// Generator for the clustered dataset.
+#[derive(Debug, Clone)]
+pub struct SynthClustered {
+    pub n: usize,
+    pub dim: usize,
+    pub clusters: usize,
+    pub seed: u64,
+    /// Within-cluster stddev.
+    pub sigma: f64,
+    /// Center separation scale (≫ sigma for the clustered assumption).
+    pub spread: f64,
+}
+
+impl SynthClustered {
+    pub fn new(n: usize, dim: usize, clusters: usize, seed: u64) -> Self {
+        assert!(clusters >= 1 && clusters <= n);
+        Self { n, dim, clusters, seed, sigma: 1.0, spread: 40.0 }
+    }
+
+    /// Generate data + ground-truth labels (label = cluster id).
+    pub fn generate_labeled(&self) -> (AlignedMatrix, Vec<u32>) {
+        let mut rng = Pcg64::new_stream(self.seed, 0xC1A5);
+
+        // Cluster centers: random directions scaled to `spread`, kept
+        // pairwise-distant by rejection (cheap for practical c).
+        let mut centers: Vec<Vec<f64>> = Vec::with_capacity(self.clusters);
+        while centers.len() < self.clusters {
+            let cand: Vec<f64> = (0..self.dim).map(|_| rng.gen_normal()).collect();
+            let norm = cand.iter().map(|x| x * x).sum::<f64>().sqrt().max(1e-9);
+            let cand: Vec<f64> = cand.iter().map(|x| x / norm * self.spread).collect();
+            let min_sep = 2.0 * self.spread / (self.clusters as f64).sqrt().max(2.0);
+            let ok = centers.iter().all(|c| {
+                let d2: f64 = c.iter().zip(&cand).map(|(a, b)| (a - b) * (a - b)).sum();
+                d2.sqrt() > min_sep
+            });
+            if ok || centers.len() > 64 {
+                centers.push(cand);
+            }
+        }
+
+        // Assign points near-evenly, then shuffle emission order.
+        let mut order: Vec<u32> = (0..self.n as u32).collect();
+        rng.shuffle(&mut order);
+
+        let mut m = AlignedMatrix::zeroed(self.n, self.dim);
+        let mut labels = vec![0u32; self.n];
+        for (slot, &point_id) in order.iter().enumerate() {
+            let cluster = slot % self.clusters; // even sizes pre-shuffle
+            labels[point_id as usize] = cluster as u32;
+            let row = m.row_mut(point_id as usize);
+            for (j, cell) in row.iter_mut().take(self.dim).enumerate() {
+                *cell = (centers[cluster][j] + self.sigma * rng.gen_normal()) as f32;
+            }
+        }
+        (m, labels)
+    }
+
+    /// Generate only the matrix.
+    pub fn generate(&self) -> AlignedMatrix {
+        self.generate_labeled().0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::scalar::sq_l2_scalar;
+
+    #[test]
+    fn labels_cover_all_clusters_evenly() {
+        let g = SynthClustered::new(1000, 8, 10, 5);
+        let (_, labels) = g.generate_labeled();
+        let mut counts = [0usize; 10];
+        for &l in &labels {
+            counts[l as usize] += 1;
+        }
+        for c in counts {
+            assert!((90..=110).contains(&c), "cluster sizes should be even, got {counts:?}");
+        }
+    }
+
+    #[test]
+    fn clustered_assumption_holds() {
+        // For a sample of points, the nearest other point must share the
+        // label (necessary condition of the paper's clustered assumption).
+        let g = SynthClustered::new(600, 8, 6, 11);
+        let (m, labels) = g.generate_labeled();
+        for i in (0..m.n()).step_by(13) {
+            let mut best = (f32::INFINITY, usize::MAX);
+            for j in 0..m.n() {
+                if i == j {
+                    continue;
+                }
+                let d = sq_l2_scalar(m.row(i), m.row(j));
+                if d < best.0 {
+                    best = (d, j);
+                }
+            }
+            assert_eq!(labels[i], labels[best.1], "nearest neighbor of {i} crosses clusters");
+        }
+    }
+
+    #[test]
+    fn emission_order_is_shuffled() {
+        // Consecutive points should not all share a label (generation
+        // order must not leak cluster structure).
+        let g = SynthClustered::new(512, 8, 8, 2);
+        let (_, labels) = g.generate_labeled();
+        let same_as_next = labels.windows(2).filter(|w| w[0] == w[1]).count();
+        // Random order ⇒ P(same) = 1/8 ⇒ ~64 of 511; sorted order would be ~504.
+        assert!(same_as_next < 150, "labels look sorted: {same_as_next} adjacent repeats");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = SynthClustered::new(100, 8, 4, 7).generate();
+        let b = SynthClustered::new(100, 8, 4, 7).generate();
+        assert_eq!(a.as_slice(), b.as_slice());
+    }
+}

@@ -1,0 +1,110 @@
+//! TEXMEX `.fvecs` reader/writer — the interchange format used by most
+//! ANN benchmark corpora (SIFT1M etc.). Each vector is stored as a
+//! little-endian `i32` dimension header followed by `d` `f32` values.
+
+use super::matrix::AlignedMatrix;
+use anyhow::{bail, Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+/// Read up to `limit` vectors from an `.fvecs` file.
+pub fn read_fvecs(path: &Path, limit: usize) -> Result<AlignedMatrix> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    parse_fvecs(&bytes, limit)
+}
+
+/// Parse `.fvecs` bytes.
+pub fn parse_fvecs(bytes: &[u8], limit: usize) -> Result<AlignedMatrix> {
+    if bytes.len() < 4 {
+        bail!("fvecs: file too small ({} bytes)", bytes.len());
+    }
+    let dim = i32::from_le_bytes([bytes[0], bytes[1], bytes[2], bytes[3]]);
+    if dim <= 0 || dim > 1_000_000 {
+        bail!("fvecs: implausible dimension {dim}");
+    }
+    let dim = dim as usize;
+    let rec = 4 + dim * 4;
+    if bytes.len() % rec != 0 {
+        bail!("fvecs: size {} not a multiple of record size {rec}", bytes.len());
+    }
+    let count = (bytes.len() / rec).min(limit);
+    let mut m = AlignedMatrix::zeroed(count, dim);
+    for i in 0..count {
+        let off = i * rec;
+        let d_i = i32::from_le_bytes([bytes[off], bytes[off + 1], bytes[off + 2], bytes[off + 3]]);
+        if d_i as usize != dim {
+            bail!("fvecs: inconsistent dimension at record {i}: {d_i} != {dim}");
+        }
+        let row = m.row_mut(i);
+        for j in 0..dim {
+            let o = off + 4 + j * 4;
+            row[j] = f32::from_le_bytes([bytes[o], bytes[o + 1], bytes[o + 2], bytes[o + 3]]);
+        }
+    }
+    Ok(m)
+}
+
+/// Write a matrix as `.fvecs`.
+pub fn write_fvecs(path: &Path, m: &AlignedMatrix) -> Result<()> {
+    let mut f = std::io::BufWriter::new(
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?,
+    );
+    for i in 0..m.n() {
+        f.write_all(&(m.dim() as i32).to_le_bytes())?;
+        for &v in m.row_logical(i) {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    f.flush()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> AlignedMatrix {
+        AlignedMatrix::from_rows(3, 5, &(0..15).map(|x| x as f32 * 0.5).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("knng_fvecs_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.fvecs");
+        let m = sample();
+        write_fvecs(&path, &m).unwrap();
+        let back = read_fvecs(&path, usize::MAX).unwrap();
+        assert_eq!(back.n(), 3);
+        assert_eq!(back.dim(), 5);
+        for i in 0..3 {
+            assert_eq!(back.row_logical(i), m.row_logical(i));
+        }
+        let limited = read_fvecs(&path, 2).unwrap();
+        assert_eq!(limited.n(), 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(parse_fvecs(&[1, 2], usize::MAX).is_err(), "too small");
+        // negative dim
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&(-3i32).to_le_bytes());
+        bad.extend_from_slice(&[0u8; 12]);
+        assert!(parse_fvecs(&bad, usize::MAX).is_err());
+        // inconsistent dims
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&2i32.to_le_bytes());
+        bad.extend_from_slice(&1.0f32.to_le_bytes());
+        bad.extend_from_slice(&2.0f32.to_le_bytes());
+        bad.extend_from_slice(&3i32.to_le_bytes()); // wrong dim header
+        bad.extend_from_slice(&[0u8; 8]);
+        assert!(parse_fvecs(&bad, usize::MAX).is_err());
+        // size not multiple of record
+        let mut bad = Vec::new();
+        bad.extend_from_slice(&2i32.to_le_bytes());
+        bad.extend_from_slice(&[0u8; 9]);
+        assert!(parse_fvecs(&bad, usize::MAX).is_err());
+    }
+}

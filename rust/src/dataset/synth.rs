@@ -1,0 +1,102 @@
+//! Synthetic Gaussian datasets (paper §4, "Synthetic Gaussian Dataset").
+//!
+//! * **Single** variant: all points drawn from one Gaussian centered at
+//!   the origin, covariance `2·I_d`.
+//! * **Multi** (non-single) variant: "for each dimension a gaussian is
+//!   created and centered around the canonical basis vector" — i.e. `d`
+//!   components, component `j` centered at `e_j`, covariance `2·I_d`,
+//!   points assigned round-robin across components.
+
+use super::matrix::AlignedMatrix;
+use crate::util::rng::Pcg64;
+
+/// Generator for the paper's synthetic Gaussian families.
+#[derive(Debug, Clone)]
+pub struct SynthGaussian {
+    pub n: usize,
+    pub dim: usize,
+    pub single: bool,
+    pub seed: u64,
+    /// Isotropic covariance scale (paper: 2).
+    pub sigma2: f64,
+}
+
+impl SynthGaussian {
+    /// Single-blob variant (Fig 7's "Synthetic Single Gaussian Dataset").
+    pub fn single(n: usize, dim: usize, seed: u64) -> Self {
+        Self { n, dim, single: true, seed, sigma2: 2.0 }
+    }
+
+    /// One-Gaussian-per-dimension variant (Fig 3/6's dataset).
+    pub fn multi(n: usize, dim: usize, seed: u64) -> Self {
+        Self { n, dim, single: false, seed, sigma2: 2.0 }
+    }
+
+    /// Generate the data matrix.
+    pub fn generate(&self) -> AlignedMatrix {
+        let mut m = AlignedMatrix::zeroed(self.n, self.dim);
+        let sd = self.sigma2.sqrt();
+        let mut rng = Pcg64::new_stream(self.seed, 0xA117);
+        for i in 0..self.n {
+            let center = if self.single { usize::MAX } else { i % self.dim };
+            let row = m.row_mut(i);
+            for (j, cell) in row.iter_mut().take(self.dim).enumerate() {
+                let mean = if j == center { 1.0 } else { 0.0 };
+                *cell = (mean + sd * rng.gen_normal()) as f32;
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = SynthGaussian::single(64, 8, 7).generate();
+        let b = SynthGaussian::single(64, 8, 7).generate();
+        assert_eq!(a.as_slice(), b.as_slice());
+        let c = SynthGaussian::single(64, 8, 8).generate();
+        assert_ne!(a.as_slice(), c.as_slice());
+    }
+
+    #[test]
+    fn single_moments_match() {
+        let m = SynthGaussian::single(20_000, 4, 42).generate();
+        for j in 0..4 {
+            let vals: Vec<f64> = (0..m.n()).map(|i| m.row(i)[j] as f64).collect();
+            let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+            let var = vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+            assert!(mean.abs() < 0.05, "dim {j} mean {mean}");
+            assert!((var - 2.0).abs() < 0.1, "dim {j} var {var}");
+        }
+    }
+
+    #[test]
+    fn multi_has_shifted_means() {
+        // component j (points with i % dim == j) has mean e_j
+        let dim = 4;
+        let m = SynthGaussian::multi(40_000, dim, 9).generate();
+        for comp in 0..dim {
+            for j in 0..dim {
+                let vals: Vec<f64> = (0..m.n())
+                    .filter(|i| i % dim == comp)
+                    .map(|i| m.row(i)[j] as f64)
+                    .collect();
+                let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+                let expect = if j == comp { 1.0 } else { 0.0 };
+                assert!((mean - expect).abs() < 0.1, "comp {comp} dim {j}: mean {mean} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn padding_stays_zero() {
+        let m = SynthGaussian::single(16, 5, 3).generate();
+        for i in 0..16 {
+            assert!(m.row(i)[5..].iter().all(|&x| x == 0.0));
+        }
+    }
+}

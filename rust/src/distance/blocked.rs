@@ -1,0 +1,333 @@
+//! Blocked mutual squared-L2 evaluation — the paper's `blocked` tag
+//! (§3.3, Fig 2).
+//!
+//! The compute step needs *all* pairwise distances inside a candidate
+//! set (≤ 50 vectors). Evaluating them pair-by-pair loads every vector
+//! once per distance; evaluating a 5×5 block of vector pairs at once
+//! loads 10 vectors per 8-lane chunk and produces 25 distances — a 1 vs
+//! 25 loads-per-component reduction that dominates in high dimensions.
+//!
+//! Layout of one off-diagonal block step (paper Fig 2): 5 "row" vectors
+//! × 5 "col" vectors, 25 8-lane accumulators, advancing 8 components at
+//! a time. Diagonal blocks evaluate the 10 unordered pairs. Remainders
+//! (m % 5 ≠ 0) fall back to the flexible pairwise kernel, exactly as the
+//! paper describes.
+
+use super::unrolled::sq_l2_unrolled;
+use crate::dataset::AlignedMatrix;
+use std::simd::f32x8;
+use std::simd::num::SimdFloat;
+use std::simd::StdFloat;
+
+/// Block edge in vectors (paper: 5 — 25 accumulators fit registers).
+pub const BLOCK: usize = 5;
+
+/// Dense m×m symmetric distance buffer for one candidate set.
+///
+/// Reused across nodes to avoid per-node allocation on the hot path;
+/// only entries `i < j` are stored canonically (accessor swaps).
+#[derive(Debug, Clone)]
+pub struct PairwiseBuf {
+    m: usize,
+    buf: Vec<f32>,
+}
+
+impl PairwiseBuf {
+    /// Create with a given capacity hint (max candidate-set size).
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { m: 0, buf: vec![0.0; cap * cap] }
+    }
+
+    /// Prepare for a set of `m` vectors (no allocation if within cap).
+    pub fn reset(&mut self, m: usize) {
+        self.m = m;
+        if self.buf.len() < m * m {
+            self.buf.resize(m * m, 0.0);
+        }
+    }
+
+    /// Number of vectors in the current set.
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Distance between set members `i` and `j` (i ≠ j).
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i != j && i < self.m && j < self.m);
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        self.buf[lo * self.m + hi]
+    }
+
+    #[inline]
+    fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < j && j < self.m);
+        self.buf[i * self.m + j] = v;
+    }
+
+    /// Store a distance for pair (i, j), i ≠ j — for external engines
+    /// (e.g. the PJRT runtime) filling the buffer from a batch result.
+    #[inline]
+    pub fn put(&mut self, i: usize, j: usize, v: f32) {
+        let (lo, hi) = if i < j { (i, j) } else { (j, i) };
+        self.set(lo, hi, v);
+    }
+}
+
+/// Compute all pairwise distances among `ids` (rows of `data`) into
+/// `out`, using 5×5 blocking. Returns the number of distance
+/// evaluations performed (m·(m−1)/2).
+pub fn pairwise_blocked(data: &AlignedMatrix, ids: &[u32], out: &mut PairwiseBuf) -> u64 {
+    pairwise_blocked_active(data, ids, ids.len(), out)
+}
+
+/// Like [`pairwise_blocked`] but only guarantees entries `(i, j)` with
+/// `i < active` (and `i < j`). NN-Descent's compute step never consumes
+/// old×old pairs, so passing `active = |new|` skips those blocks
+/// entirely — ~25% of the kernel work at default parameters — while
+/// keeping the blocked load-amortization for everything consumed.
+/// Returns the number of distances actually evaluated.
+pub fn pairwise_blocked_active(data: &AlignedMatrix, ids: &[u32], active: usize, out: &mut PairwiseBuf) -> u64 {
+    let m = ids.len();
+    let active = active.min(m);
+    out.reset(m);
+    if m < 2 || active == 0 {
+        return 0;
+    }
+    let full = (m / BLOCK) * BLOCK;
+    let dpad = data.dim_pad();
+    let mut evals = 0u64;
+
+    // Block rows that contain at least one active row.
+    for ib in (0..full.min(round_up_block(active))).step_by(BLOCK) {
+        diag_block(data, ids, ib, dpad, out);
+        evals += (BLOCK * (BLOCK - 1) / 2) as u64;
+        for jb in ((ib + BLOCK)..full).step_by(BLOCK) {
+            off_diag_block(data, ids, ib, jb, dpad, out);
+            evals += (BLOCK * BLOCK) as u64;
+        }
+    }
+
+    // Remainder rows (m % 5): flexible pairwise kernel vs everything
+    // with an index below them that could be consumed.
+    for i in full..m {
+        for j in 0..i {
+            if j >= active && i >= active {
+                continue;
+            }
+            let d = sq_l2_unrolled(data.row(ids[i] as usize), data.row(ids[j] as usize));
+            out.set(j, i, d);
+            evals += 1;
+        }
+    }
+    evals
+}
+
+#[inline]
+fn round_up_block(x: usize) -> usize {
+    x.div_ceil(BLOCK) * BLOCK
+}
+
+/// One full 5×5 block: rows `ib..ib+5` × cols `jb..jb+5`.
+///
+/// 25 `f32x8` accumulators stay register-resident across the whole
+/// d-loop (AVX-512 has 32 vector registers; this is the paper's "25
+/// accumulators allocated to registers" claim, checked by disassembly —
+/// EXPERIMENTS.md §Perf). Per 8-component step: 10 loads feed 25
+/// sub+fma pairs, the 1-vs-25 loads-per-component reduction of Fig 2.
+#[inline]
+fn off_diag_block(data: &AlignedMatrix, ids: &[u32], ib: usize, jb: usize, dpad: usize, out: &mut PairwiseBuf) {
+    let rows: [&[f32]; BLOCK] = std::array::from_fn(|a| data.row(ids[ib + a] as usize));
+    let cols: [&[f32]; BLOCK] = std::array::from_fn(|b| data.row(ids[jb + b] as usize));
+
+    let mut acc = [[f32x8::splat(0.0); BLOCK]; BLOCK];
+    let mut c = 0;
+    while c < dpad {
+        // Load the 5 column chunks once; they feed 25 accumulations.
+        let cv: [f32x8; BLOCK] = std::array::from_fn(|b| f32x8::from_slice(&cols[b][c..c + 8]));
+        for a in 0..BLOCK {
+            let ra = f32x8::from_slice(&rows[a][c..c + 8]);
+            for b in 0..BLOCK {
+                let d = ra - cv[b];
+                acc[a][b] = d.mul_add(d, acc[a][b]);
+            }
+        }
+        c += 8;
+    }
+    for a in 0..BLOCK {
+        for b in 0..BLOCK {
+            out.set(ib + a, jb + b, acc[a][b].reduce_sum());
+        }
+    }
+}
+
+/// Diagonal 5×5 block: the 10 unordered pairs within `ib..ib+5`.
+#[inline]
+fn diag_block(data: &AlignedMatrix, ids: &[u32], ib: usize, dpad: usize, out: &mut PairwiseBuf) {
+    let rows: [&[f32]; BLOCK] = std::array::from_fn(|a| data.row(ids[ib + a] as usize));
+    // 10 pair slots: (a,b) with a<b, flattened.
+    const PAIRS: [(usize, usize); 10] =
+        [(0, 1), (0, 2), (0, 3), (0, 4), (1, 2), (1, 3), (1, 4), (2, 3), (2, 4), (3, 4)];
+    let mut acc = [f32x8::splat(0.0); 10];
+    let mut c = 0;
+    while c < dpad {
+        let chunk: [f32x8; BLOCK] =
+            std::array::from_fn(|a| f32x8::from_slice(&rows[a][c..c + 8]));
+        for (p, &(a, b)) in PAIRS.iter().enumerate() {
+            let d = chunk[a] - chunk[b];
+            acc[p] = d.mul_add(d, acc[p]);
+        }
+        c += 8;
+    }
+    for (p, &(a, b)) in PAIRS.iter().enumerate() {
+        out.set(ib + a, ib + b, acc[p].reduce_sum());
+    }
+}
+
+/// Unblocked reference: same contract as [`pairwise_blocked`] but one
+/// pair at a time (used by the `scalar`/`unrolled` compute backends and
+/// as the oracle for the blocked path).
+pub fn pairwise_flat(data: &AlignedMatrix, ids: &[u32], out: &mut PairwiseBuf, use_unrolled: bool) -> u64 {
+    let m = ids.len();
+    out.reset(m);
+    for i in 0..m {
+        for j in (i + 1)..m {
+            let a = data.row(ids[i] as usize);
+            let b = data.row(ids[j] as usize);
+            let d = if use_unrolled {
+                sq_l2_unrolled(a, b)
+            } else {
+                super::scalar::sq_l2_scalar(a, b)
+            };
+            out.set(i, j, d);
+        }
+    }
+    (m * m.saturating_sub(1) / 2) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::AlignedMatrix;
+    use crate::testing::{check, Config};
+
+    fn random_matrix(g: &mut crate::testing::Gen, n: usize, dim: usize) -> AlignedMatrix {
+        let data = g.vec_f32(n * dim, 8.0);
+        AlignedMatrix::from_rows(n, dim, &data)
+    }
+
+    #[test]
+    fn blocked_matches_flat_exact_sizes() {
+        // m = 5, 10 (pure blocks), 3 (pure remainder), 13 (mixed)
+        for m in [2, 3, 5, 7, 10, 13, 25, 26] {
+            let mut g = crate::testing::Gen::new_for_test(m as u64);
+            let data = random_matrix(&mut g, 30, 24);
+            let ids: Vec<u32> = (0..m as u32).collect();
+            let mut a = PairwiseBuf::with_capacity(32);
+            let mut b = PairwiseBuf::with_capacity(32);
+            let evals = pairwise_blocked(&data, &ids, &mut a);
+            pairwise_flat(&data, &ids, &mut b, true);
+            assert_eq!(evals, (m * (m - 1) / 2) as u64);
+            for i in 0..m {
+                for j in 0..m {
+                    if i == j {
+                        continue;
+                    }
+                    let (x, y) = (a.get(i, j), b.get(i, j));
+                    assert!(
+                        (x - y).abs() <= 1e-3 * (1.0 + y.abs()),
+                        "m={m} ({i},{j}): blocked {x} vs flat {y}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn prop_blocked_equals_scalar() {
+        check(Config::cases(60), "blocked == scalar pairwise", |g| {
+            let n = g.usize_in(2..40);
+            let dim = 8 * g.usize_in(1..8);
+            let data = random_matrix(g, n, dim);
+            let m = g.usize_in(2..n.min(30) + 1);
+            // ids may repeat rows — kernel must not care
+            let ids: Vec<u32> = (0..m).map(|_| g.u32_in(0..n as u32)).collect();
+            let mut a = PairwiseBuf::with_capacity(32);
+            let mut b = PairwiseBuf::with_capacity(32);
+            pairwise_blocked(&data, &ids, &mut a);
+            pairwise_flat(&data, &ids, &mut b, false);
+            (0..m).all(|i| {
+                (0..m).filter(|&j| j != i).all(|j| {
+                    let (x, y) = (a.get(i, j), b.get(i, j));
+                    (x - y).abs() <= 2e-3 * (1.0 + y.abs())
+                })
+            })
+        });
+    }
+
+    #[test]
+    fn symmetry_accessor() {
+        let mut g = crate::testing::Gen::new_for_test(7);
+        let data = random_matrix(&mut g, 12, 16);
+        let ids: Vec<u32> = (0..12).collect();
+        let mut buf = PairwiseBuf::with_capacity(12);
+        pairwise_blocked(&data, &ids, &mut buf);
+        for i in 0..12 {
+            for j in 0..12 {
+                if i != j {
+                    assert_eq!(buf.get(i, j), buf.get(j, i));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let data = AlignedMatrix::zeroed(4, 8);
+        let mut buf = PairwiseBuf::with_capacity(4);
+        assert_eq!(pairwise_blocked(&data, &[], &mut buf), 0);
+        assert_eq!(pairwise_blocked(&data, &[2], &mut buf), 0);
+    }
+
+    #[test]
+    fn active_subset_fills_required_pairs() {
+        check(Config::cases(60), "active pairs complete + eval count sane", |g| {
+            let n = g.usize_in(5..40);
+            let dim = 8 * g.usize_in(1..5);
+            let data = random_matrix(g, n, dim);
+            let m = g.usize_in(2..n.min(25) + 1);
+            let active = g.usize_in(1..m + 1);
+            let ids: Vec<u32> = (0..m as u32).collect();
+            let mut full = PairwiseBuf::with_capacity(32);
+            let mut part = PairwiseBuf::with_capacity(32);
+            let full_evals = pairwise_blocked(&data, &ids, &mut full);
+            let part_evals = pairwise_blocked_active(&data, &ids, active, &mut part);
+            if part_evals > full_evals {
+                return false;
+            }
+            // every required (i<active, i<j) pair matches the full result
+            (0..active).all(|i| {
+                ((i + 1)..m).all(|j| (part.get(i, j) - full.get(i, j)).abs() < 1e-5)
+            })
+        });
+    }
+
+    #[test]
+    fn active_zero_is_empty() {
+        let data = AlignedMatrix::zeroed(10, 8);
+        let ids: Vec<u32> = (0..10).collect();
+        let mut buf = PairwiseBuf::with_capacity(10);
+        assert_eq!(pairwise_blocked_active(&data, &ids, 0, &mut buf), 0);
+    }
+
+    #[test]
+    fn buffer_reuse_grows() {
+        let mut g = crate::testing::Gen::new_for_test(3);
+        let data = random_matrix(&mut g, 20, 8);
+        let mut buf = PairwiseBuf::with_capacity(2); // deliberately small
+        let ids: Vec<u32> = (0..20).collect();
+        pairwise_blocked(&data, &ids, &mut buf);
+        assert_eq!(buf.m(), 20);
+        assert!(buf.get(0, 19) > 0.0 || buf.get(0, 19) == 0.0); // no panic
+    }
+}

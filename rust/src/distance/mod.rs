@@ -1,0 +1,59 @@
+//! Squared-L2 distance kernels (paper §3.3).
+//!
+//! The implementation is restricted to (squared) L2 — exactly the
+//! trade-off the paper makes: giving up generic metrics buys blocked
+//! evaluation. Three native tiers mirror the paper's version tags:
+//!
+//! | paper tag       | function                 | idea |
+//! |-----------------|--------------------------|------|
+//! | (baseline)      | [`scalar::sq_l2_scalar`] | plain loop |
+//! | `l2intrinsics` + `mem-align` | [`unrolled::sq_l2_unrolled`] | 8 independent accumulator lanes over the padded row (compiles to 8-wide FMA SIMD) |
+//! | `blocked`       | [`blocked::pairwise_blocked`] | 5×5-vector blocks: 10 row loads feed 25 distance accumulations |
+//!
+//! All kernels consume **padded** rows from
+//! [`AlignedMatrix`](crate::dataset::AlignedMatrix) (width a multiple of
+//! 8, zero tail), so no remainder handling exists anywhere — the same
+//! simplification the paper gets from requiring `d % 8 == 0`.
+//!
+//! The fourth backend (`pjrt`) lives in [`crate::runtime`]: it executes
+//! the AOT-lowered Pallas kernel instead of native code.
+
+pub mod blocked;
+pub mod scalar;
+pub mod unrolled;
+
+pub use blocked::{pairwise_blocked, PairwiseBuf};
+pub use scalar::sq_l2_scalar;
+pub use unrolled::sq_l2_unrolled;
+
+use crate::config::schema::ComputeKind;
+
+/// Evaluate one squared-L2 distance with the given native backend.
+/// (`Pjrt` is handled a level up, in the compute step — it is a batch
+/// backend; per-pair it falls back to `unrolled`.)
+#[inline]
+pub fn sq_l2(kind: ComputeKind, a: &[f32], b: &[f32]) -> f32 {
+    match kind {
+        ComputeKind::Scalar => sq_l2_scalar(a, b),
+        ComputeKind::Unrolled | ComputeKind::Blocked | ComputeKind::Pjrt => sq_l2_unrolled(a, b),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Config};
+
+    #[test]
+    fn dispatch_consistency() {
+        check(Config::cases(100), "sq_l2 dispatch agrees", |g| {
+            let lanes = 8 * g.usize_in(1..12);
+            let a = g.vec_f32(lanes, 5.0);
+            let b = g.vec_f32(lanes, 5.0);
+            let s = sq_l2(ComputeKind::Scalar, &a, &b);
+            let u = sq_l2(ComputeKind::Unrolled, &a, &b);
+            let tol = 1e-4 * (1.0 + s.abs());
+            (s - u).abs() <= tol
+        });
+    }
+}

@@ -1,0 +1,58 @@
+//! Baseline scalar squared-L2 kernel — the reference implementation and
+//! correctness oracle for every other distance path (native and Pallas).
+
+/// Squared L2 distance between two equal-length slices, plain loop.
+///
+/// The square root is omitted throughout the crate (paper §3.3): NN
+/// comparisons are monotone in the squared distance.
+#[inline]
+pub fn sq_l2_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        acc += d * d;
+    }
+    acc
+}
+
+/// f64-accumulated variant used by tests as a high-precision oracle.
+pub fn sq_l2_f64(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| {
+            let d = x as f64 - y as f64;
+            d * d
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_values() {
+        assert_eq!(sq_l2_scalar(&[0.0, 0.0], &[3.0, 4.0]), 25.0);
+        assert_eq!(sq_l2_scalar(&[1.0], &[1.0]), 0.0);
+        assert_eq!(sq_l2_scalar(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn symmetry_and_nonnegativity() {
+        let a = [1.5f32, -2.0, 0.25, 7.0];
+        let b = [0.5f32, 3.0, -1.0, 2.0];
+        assert_eq!(sq_l2_scalar(&a, &b), sq_l2_scalar(&b, &a));
+        assert!(sq_l2_scalar(&a, &b) >= 0.0);
+    }
+
+    #[test]
+    fn matches_f64_oracle() {
+        let a: Vec<f32> = (0..64).map(|i| (i as f32) * 0.37 - 5.0).collect();
+        let b: Vec<f32> = (0..64).map(|i| (i as f32) * -0.11 + 2.0).collect();
+        let s = sq_l2_scalar(&a, &b) as f64;
+        let o = sq_l2_f64(&a, &b);
+        assert!((s - o).abs() / o < 1e-5);
+    }
+}

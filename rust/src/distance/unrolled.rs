@@ -1,0 +1,104 @@
+//! 8-lane SIMD squared-L2 kernel — the paper's `l2intrinsics` +
+//! `mem-align` adaptation (§3.3).
+//!
+//! The paper keeps one AVX2 register of accumulators and processes 8
+//! single-precision components per `vsubps` + `vfmadd231ps`. Portable
+//! equivalent: `std::simd::f32x8` — one SIMD accumulator updated per
+//! exact 8-lane chunk, which lowers to the same instruction sequence
+//! under `-C target-cpu=native` (the paper's `-march=native`; verified
+//! by disassembly, EXPERIMENTS.md §Perf). An earlier array-of-lanes
+//! formulation relied on LLVM's loop vectorizer and left the
+//! accumulators spilled — 3.5× slower; see the §Perf log.
+//!
+//! Inputs must be padded rows (length divisible by 8, zero tails), which
+//! [`AlignedMatrix`](crate::dataset::AlignedMatrix) guarantees.
+
+use std::simd::f32x8;
+use std::simd::num::SimdFloat;
+use std::simd::StdFloat;
+
+/// Squared L2 over padded rows using one 8-lane SIMD accumulator.
+#[inline]
+pub fn sq_l2_unrolled(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len() % 8, 0, "rows must be padded to 8 lanes");
+    let mut acc = f32x8::splat(0.0);
+    for (ca, cb) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
+        let d = f32x8::from_slice(ca) - f32x8::from_slice(cb);
+        acc = d.mul_add(d, acc);
+    }
+    acc.reduce_sum()
+}
+
+/// Horizontal sum of 8 lanes (exposed for the blocked kernel/tests).
+#[inline]
+pub fn horizontal_sum(acc: &[f32; 8]) -> f32 {
+    f32x8::from_array(*acc).reduce_sum()
+}
+
+/// Squared norm of a padded row — used by the PJRT batcher to validate
+/// kernel outputs and by tests.
+pub fn sq_norm(a: &[f32]) -> f32 {
+    debug_assert_eq!(a.len() % 8, 0);
+    let mut acc = f32x8::splat(0.0);
+    for ca in a.chunks_exact(8) {
+        let v = f32x8::from_slice(ca);
+        acc = v.mul_add(v, acc);
+    }
+    acc.reduce_sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::scalar::{sq_l2_f64, sq_l2_scalar};
+    use crate::testing::{check, Config};
+
+    #[test]
+    fn matches_scalar_on_fixed_inputs() {
+        let a: Vec<f32> = (0..32).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..32).map(|i| -(i as f32) * 0.25 + 1.0).collect();
+        let u = sq_l2_unrolled(&a, &b);
+        let s = sq_l2_scalar(&a, &b);
+        assert!((u - s).abs() <= 1e-3 * s.abs().max(1.0), "u={u} s={s}");
+    }
+
+    #[test]
+    fn prop_matches_f64_oracle() {
+        check(Config::cases(200), "unrolled ≈ f64 oracle", |g| {
+            let chunks = g.usize_in(1..64);
+            let a = g.vec_f32(chunks * 8, 10.0);
+            let b = g.vec_f32(chunks * 8, 10.0);
+            let u = sq_l2_unrolled(&a, &b) as f64;
+            let o = sq_l2_f64(&a, &b);
+            (u - o).abs() <= 1e-4 * (1.0 + o)
+        });
+    }
+
+    #[test]
+    fn zero_distance_and_padding_neutrality() {
+        let a = [1.0f32; 16];
+        assert_eq!(sq_l2_unrolled(&a, &a), 0.0);
+        // zero-padded tails contribute nothing
+        let mut x = vec![2.0f32; 8];
+        x.extend([0.0; 8]);
+        let mut y = vec![-1.0f32; 8];
+        y.extend([0.0; 8]);
+        assert_eq!(sq_l2_unrolled(&x, &y), sq_l2_unrolled(&x[..8], &y[..8]));
+    }
+
+    #[test]
+    fn sq_norm_matches_self_distance_to_zero() {
+        check(Config::cases(100), "sq_norm", |g| {
+            let a = g.vec_f32(24, 4.0);
+            let z = vec![0.0f32; 24];
+            (sq_norm(&a) - sq_l2_unrolled(&a, &z)).abs() < 1e-3
+        });
+    }
+
+    #[test]
+    fn horizontal_sum_exact() {
+        let acc = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        assert_eq!(horizontal_sum(&acc), 36.0);
+    }
+}

@@ -1,0 +1,174 @@
+//! Fixed-capacity neighbor max-heap operating on borrowed SoA slices.
+//!
+//! Each node's k-nearest list is a binary max-heap keyed by distance:
+//! the root (index 0) is the *worst* current neighbor, so an improvement
+//! test is a single comparison against `dists[0]`, and a replacement is
+//! a root pop + sift-down — O(log k). IDs, distances, and the
+//! NN-Descent `new` flags live in separate arrays (`KnnGraph` owns them
+//! as n×k strips); this module only manipulates one node's strip.
+
+/// Sentinel id meaning "slot not yet filled" (valid ids are < n ≤ u32::MAX).
+pub const EMPTY_ID: u32 = u32::MAX;
+
+/// Push candidate `(id, dist, flag)` into the heap strip if it improves
+/// on the current worst and is not already present. Returns `true` if
+/// the heap changed (this is the "update" counted for convergence).
+///
+/// Duplicate detection is a linear scan — k is small (20) and the scan
+/// is branch-predictable; PyNNDescent makes the same trade-off.
+#[inline]
+pub fn heap_push(ids: &mut [u32], dists: &mut [f32], flags: &mut [bool], id: u32, dist: f32, flag: bool) -> bool {
+    debug_assert_eq!(ids.len(), dists.len());
+    debug_assert_eq!(ids.len(), flags.len());
+    if dist >= dists[0] {
+        return false;
+    }
+    // reject duplicates
+    if ids.contains(&id) {
+        return false;
+    }
+    // replace root, restore heap property
+    ids[0] = id;
+    dists[0] = dist;
+    flags[0] = flag;
+    siftdown(ids, dists, flags, 0);
+    true
+}
+
+/// Restore the max-heap property downward from `start`.
+#[inline]
+pub fn siftdown(ids: &mut [u32], dists: &mut [f32], flags: &mut [bool], start: usize) {
+    let k = ids.len();
+    let mut i = start;
+    loop {
+        let l = 2 * i + 1;
+        let r = l + 1;
+        let mut largest = i;
+        if l < k && dists[l] > dists[largest] {
+            largest = l;
+        }
+        if r < k && dists[r] > dists[largest] {
+            largest = r;
+        }
+        if largest == i {
+            return;
+        }
+        ids.swap(i, largest);
+        dists.swap(i, largest);
+        flags.swap(i, largest);
+        i = largest;
+    }
+}
+
+/// Check the max-heap invariant (test helper).
+pub fn is_heap(dists: &[f32]) -> bool {
+    (1..dists.len()).all(|i| dists[(i - 1) / 2] >= dists[i])
+}
+
+/// Extract (id, dist) pairs sorted ascending by distance (heap-sort into
+/// a fresh vec; used when emitting final results and by the reorder
+/// heuristic's `sorted(adj)` step).
+pub fn sorted_neighbors(ids: &[u32], dists: &[f32]) -> Vec<(u32, f32)> {
+    let mut pairs: Vec<(u32, f32)> = ids
+        .iter()
+        .zip(dists)
+        .filter(|(&id, _)| id != EMPTY_ID)
+        .map(|(&id, &d)| (id, d))
+        .collect();
+    pairs.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+    pairs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Config};
+
+    fn fresh(k: usize) -> (Vec<u32>, Vec<f32>, Vec<bool>) {
+        (vec![EMPTY_ID; k], vec![f32::INFINITY; k], vec![false; k])
+    }
+
+    #[test]
+    fn fills_then_replaces_worst() {
+        let (mut ids, mut dists, mut flags) = fresh(3);
+        assert!(heap_push(&mut ids, &mut dists, &mut flags, 10, 5.0, true));
+        assert!(heap_push(&mut ids, &mut dists, &mut flags, 11, 3.0, true));
+        assert!(heap_push(&mut ids, &mut dists, &mut flags, 12, 4.0, true));
+        // full; 6.0 is worse than the worst (5.0) → rejected
+        assert!(!heap_push(&mut ids, &mut dists, &mut flags, 13, 6.0, true));
+        // 1.0 replaces the current worst
+        assert!(heap_push(&mut ids, &mut dists, &mut flags, 14, 1.0, true));
+        assert!(!ids.contains(&10), "worst (id 10, d=5.0) evicted");
+        assert!(is_heap(&dists));
+    }
+
+    #[test]
+    fn rejects_duplicates() {
+        let (mut ids, mut dists, mut flags) = fresh(4);
+        assert!(heap_push(&mut ids, &mut dists, &mut flags, 7, 2.0, true));
+        assert!(!heap_push(&mut ids, &mut dists, &mut flags, 7, 1.0, true), "same id rejected");
+        assert_eq!(ids.iter().filter(|&&i| i == 7).count(), 1);
+    }
+
+    #[test]
+    fn prop_heap_holds_topk_of_stream() {
+        check(Config::cases(100), "heap = top-k of pushed stream", |g| {
+            let k = g.usize_in(1..16);
+            let m = g.usize_in(1..100);
+            let (mut ids, mut dists, mut flags) = fresh(k);
+            let mut pushed: Vec<(u32, f32)> = Vec::new();
+            for id in 0..m as u32 {
+                let d = g.f32_unit() * 100.0;
+                heap_push(&mut ids, &mut dists, &mut flags, id, d, false);
+                pushed.push((id, d));
+            }
+            pushed.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let expect: std::collections::BTreeSet<u32> =
+                pushed.iter().take(k).map(|p| p.0).collect();
+            let got: std::collections::BTreeSet<u32> =
+                ids.iter().copied().filter(|&i| i != EMPTY_ID).collect();
+            is_heap(&dists) && got == expect
+        });
+    }
+
+    #[test]
+    fn prop_heap_invariant_after_every_push() {
+        check(Config::cases(100), "heap invariant maintained", |g| {
+            let k = g.usize_in(2..20);
+            let (mut ids, mut dists, mut flags) = fresh(k);
+            for id in 0..50u32 {
+                heap_push(&mut ids, &mut dists, &mut flags, id, g.f32_unit(), g.bool(0.5));
+                if !is_heap(&dists) {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+
+    #[test]
+    fn sorted_neighbors_ascending_and_skips_empty() {
+        let (mut ids, mut dists, mut flags) = fresh(5);
+        for (id, d) in [(3, 9.0), (1, 2.0), (2, 5.0)] {
+            heap_push(&mut ids, &mut dists, &mut flags, id, d, false);
+        }
+        let s = sorted_neighbors(&ids, &dists);
+        assert_eq!(s, vec![(1, 2.0), (2, 5.0), (3, 9.0)]);
+    }
+
+    #[test]
+    fn flags_travel_with_entries() {
+        let (mut ids, mut dists, mut flags) = fresh(3);
+        heap_push(&mut ids, &mut dists, &mut flags, 1, 3.0, true);
+        heap_push(&mut ids, &mut dists, &mut flags, 2, 2.0, false);
+        heap_push(&mut ids, &mut dists, &mut flags, 3, 1.0, true);
+        for i in 0..3 {
+            match ids[i] {
+                1 => assert!(flags[i]),
+                2 => assert!(!flags[i]),
+                3 => assert!(flags[i]),
+                _ => unreachable!(),
+            }
+        }
+    }
+}

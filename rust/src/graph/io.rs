@@ -1,0 +1,196 @@
+//! Graph persistence: a small versioned binary format so built graphs
+//! can be saved once and served many times (`knng build --save`, the
+//! `graph_search` example, downstream pipelines).
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic   8 B   "KNNGv1\0\0"
+//! n       8 B   u64
+//! k       8 B   u64
+//! ids     n·k·4 B  u32 (EMPTY_ID for open slots), heap order
+//! dists   n·k·4 B  f32
+//! crc     8 B   FNV-1a over everything above
+//! ```
+//!
+//! Flags and counters are *not* serialized — a saved graph is a finished
+//! artifact, not a resumable build; on load all flags are false and the
+//! counters are rebuilt from the edges.
+
+use super::heap::EMPTY_ID;
+use super::knng::KnnGraph;
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"KNNGv1\0\0";
+
+/// FNV-1a streaming hasher (integrity check without external deps).
+struct Fnv(u64);
+impl Fnv {
+    fn new() -> Self {
+        Self(0xcbf29ce484222325)
+    }
+    fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 ^= b as u64;
+            self.0 = self.0.wrapping_mul(0x100000001b3);
+        }
+    }
+}
+
+/// Serialize a graph.
+pub fn save_graph(path: &Path, graph: &KnnGraph) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let mut crc = Fnv::new();
+    let emit = |w: &mut BufWriter<std::fs::File>, crc: &mut Fnv, bytes: &[u8]| -> Result<()> {
+        crc.update(bytes);
+        w.write_all(bytes)?;
+        Ok(())
+    };
+    emit(&mut w, &mut crc, MAGIC)?;
+    emit(&mut w, &mut crc, &(graph.n() as u64).to_le_bytes())?;
+    emit(&mut w, &mut crc, &(graph.k() as u64).to_le_bytes())?;
+    for u in 0..graph.n() {
+        for &v in graph.ids(u) {
+            emit(&mut w, &mut crc, &v.to_le_bytes())?;
+        }
+    }
+    for u in 0..graph.n() {
+        for &d in graph.dists(u) {
+            emit(&mut w, &mut crc, &d.to_le_bytes())?;
+        }
+    }
+    w.write_all(&crc.0.to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Deserialize a graph (validates magic, sizes, and checksum).
+pub fn load_graph(path: &Path) -> Result<KnnGraph> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut crc = Fnv::new();
+
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        bail!("not a KNNGv1 file (magic {:02x?})", magic);
+    }
+    crc.update(&magic);
+
+    let mut buf8 = [0u8; 8];
+    r.read_exact(&mut buf8)?;
+    crc.update(&buf8);
+    let n = u64::from_le_bytes(buf8) as usize;
+    r.read_exact(&mut buf8)?;
+    crc.update(&buf8);
+    let k = u64::from_le_bytes(buf8) as usize;
+    if n < 2 || k < 1 || n.checked_mul(k).is_none() || n * k > (1 << 34) {
+        bail!("implausible graph header: n={n}, k={k}");
+    }
+
+    let mut ids = vec![0u32; n * k];
+    let mut dists = vec![0f32; n * k];
+    let mut buf4 = [0u8; 4];
+    for slot in ids.iter_mut() {
+        r.read_exact(&mut buf4)?;
+        crc.update(&buf4);
+        *slot = u32::from_le_bytes(buf4);
+    }
+    for slot in dists.iter_mut() {
+        r.read_exact(&mut buf4)?;
+        crc.update(&buf4);
+        *slot = f32::from_le_bytes(buf4);
+    }
+    r.read_exact(&mut buf8).context("reading checksum")?;
+    if u64::from_le_bytes(buf8) != crc.0 {
+        bail!("checksum mismatch — file corrupt");
+    }
+
+    // rebuild as a KnnGraph: push in strip order. Pushing re-heapifies
+    // and rebuilds every counter; distances are preserved exactly.
+    let mut graph = KnnGraph::new(n, k);
+    for u in 0..n {
+        for i in 0..k {
+            let v = ids[u * k + i];
+            if v == EMPTY_ID {
+                continue;
+            }
+            if v as usize >= n || v as usize == u {
+                bail!("corrupt edge {u} → {v}");
+            }
+            graph.push(u, v, dists[u * k + i], false);
+        }
+    }
+    Ok(graph)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::synth::SynthGaussian;
+    use crate::nndescent::{NnDescent, Params};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("knng_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn roundtrip_preserves_neighbor_sets() {
+        let data = SynthGaussian::single(300, 16, 5).generate();
+        let built = NnDescent::new(Params::default().with_k(8).with_seed(5)).build(&data);
+        let path = tmp("g.knng");
+        save_graph(&path, &built.graph).unwrap();
+        let loaded = load_graph(&path).unwrap();
+        loaded.validate().unwrap();
+        assert_eq!(loaded.n(), 300);
+        assert_eq!(loaded.k(), 8);
+        for u in 0..300 {
+            assert_eq!(built.graph.sorted(u), loaded.sorted(u), "node {u}");
+        }
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let data = SynthGaussian::single(100, 8, 1).generate();
+        let built = NnDescent::new(Params::default().with_k(5).with_seed(1)).build(&data);
+        let path = tmp("c.knng");
+        save_graph(&path, &built.graph).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_graph(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("checksum") || err.contains("corrupt"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_truncation() {
+        let path = tmp("bad.knng");
+        std::fs::write(&path, b"NOTKNNG!aaaa").unwrap();
+        assert!(load_graph(&path).is_err());
+        std::fs::write(&path, &MAGIC[..]).unwrap();
+        assert!(load_graph(&path).is_err(), "truncated header");
+    }
+
+    #[test]
+    fn partially_filled_graph_roundtrips() {
+        let mut g = crate::graph::KnnGraph::new(10, 4);
+        g.push(0, 1, 1.5, true);
+        g.push(3, 7, 0.25, false);
+        let path = tmp("partial.knng");
+        save_graph(&path, &g).unwrap();
+        let loaded = load_graph(&path).unwrap();
+        loaded.validate().unwrap();
+        assert_eq!(loaded.sorted(0), vec![(1, 1.5)]);
+        assert_eq!(loaded.sorted(3), vec![(7, 0.25)]);
+        assert!(loaded.sorted(5).is_empty());
+    }
+}

@@ -1,0 +1,398 @@
+//! The K-NN graph container: n × k SoA strips plus NN-Descent
+//! bookkeeping (neighborhood-size counters, update counting).
+
+use super::heap::{siftdown, sorted_neighbors, EMPTY_ID};
+
+/// Approximate K-NN graph under construction.
+///
+/// Storage is struct-of-arrays: separate `ids` / `dists` / `flags`
+/// strips of length `n·k`. The strips for node `u` occupy
+/// `[u·k, (u+1)·k)` and form a max-heap by distance (worst at the
+/// front), so the membership/improvement test on the hot path touches
+/// exactly one cache line of distances first.
+///
+/// The graph maintains, incrementally on every mutation, the sizes of
+/// each node's *new* and *old* neighborhoods — the paper's turbosampling
+/// bookkeeping ("upon every update of the KNN-graph we keep track of how
+/// large the neighborhood of every node is"; updates touch these nodes'
+/// strips anyway, so the counters cost no extra cache misses):
+///
+/// * `fwd_new[u]` — forward neighbors of `u` carrying the `new` flag,
+/// * `rev_new[v]` — nodes whose lists contain `v` flagged new,
+/// * `rev_old[v]` — nodes whose lists contain `v` unflagged.
+#[derive(Debug, Clone)]
+pub struct KnnGraph {
+    n: usize,
+    k: usize,
+    ids: Vec<u32>,
+    dists: Vec<f32>,
+    flags: Vec<bool>,
+    filled: Vec<u16>,
+    fwd_new: Vec<u16>,
+    rev_new: Vec<u32>,
+    rev_old: Vec<u32>,
+}
+
+impl KnnGraph {
+    /// Empty graph: all slots open (EMPTY_ID / +∞ / not-new).
+    pub fn new(n: usize, k: usize) -> Self {
+        assert!(k >= 1 && n >= 2, "need n ≥ 2, k ≥ 1");
+        assert!(n <= u32::MAX as usize - 1, "ids are u32");
+        assert!(k <= u16::MAX as usize);
+        Self {
+            n,
+            k,
+            ids: vec![EMPTY_ID; n * k],
+            dists: vec![f32::INFINITY; n * k],
+            flags: vec![false; n * k],
+            filled: vec![0; n],
+            fwd_new: vec![0; n],
+            rev_new: vec![0; n],
+            rev_old: vec![0; n],
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Neighbor ids of node `u` (heap order, may contain EMPTY_ID early).
+    #[inline]
+    pub fn ids(&self, u: usize) -> &[u32] {
+        &self.ids[u * self.k..(u + 1) * self.k]
+    }
+
+    /// Neighbor distances of node `u` (heap order).
+    #[inline]
+    pub fn dists(&self, u: usize) -> &[f32] {
+        &self.dists[u * self.k..(u + 1) * self.k]
+    }
+
+    /// Incremental-search flags of node `u` (aligned with `ids`).
+    #[inline]
+    pub fn flags(&self, u: usize) -> &[bool] {
+        &self.flags[u * self.k..(u + 1) * self.k]
+    }
+
+    /// Clear the `new` flag of slot `i` in `u`'s strip, maintaining the
+    /// neighborhood-size counters. No-op if already old or empty.
+    #[inline]
+    pub fn clear_flag(&mut self, u: usize, i: usize) {
+        let base = u * self.k;
+        if self.flags[base + i] {
+            self.flags[base + i] = false;
+            let v = self.ids[base + i];
+            debug_assert!(v != EMPTY_ID);
+            self.fwd_new[u] -= 1;
+            self.rev_new[v as usize] -= 1;
+            self.rev_old[v as usize] += 1;
+        }
+    }
+
+    /// Current worst (largest) distance in `u`'s list — the improvement
+    /// threshold.
+    #[inline]
+    pub fn worst(&self, u: usize) -> f32 {
+        self.dists[u * self.k]
+    }
+
+    /// Size of `u`'s *new* neighborhood: flagged forward + flagged
+    /// reverse edges (the denominator of turbosampling's coin flip).
+    #[inline]
+    pub fn new_size(&self, u: usize) -> u32 {
+        self.fwd_new[u] as u32 + self.rev_new[u]
+    }
+
+    /// Size of `u`'s *old* neighborhood.
+    #[inline]
+    pub fn old_size(&self, u: usize) -> u32 {
+        (self.filled[u] - self.fwd_new[u]) as u32 + self.rev_old[u]
+    }
+
+    /// |N(u)| = forward + reverse neighborhood size.
+    #[inline]
+    pub fn neighborhood_size(&self, u: usize) -> u32 {
+        self.filled[u] as u32 + self.rev_new[u] + self.rev_old[u]
+    }
+
+    /// Reverse degree (both flags) — diagnostics.
+    #[inline]
+    pub fn reverse_degree(&self, u: usize) -> u32 {
+        self.rev_new[u] + self.rev_old[u]
+    }
+
+    /// Try to insert `(v, dist)` into `u`'s list with the `new` flag set.
+    /// Returns true if the graph changed. Maintains all counters for the
+    /// inserted and the evicted neighbor.
+    #[inline]
+    pub fn push(&mut self, u: usize, v: u32, dist: f32, flag: bool) -> bool {
+        debug_assert!(u < self.n && (v as usize) < self.n && v as usize != u);
+        let base = u * self.k;
+        let strip = base..base + self.k;
+        if dist >= self.dists[base] {
+            return false;
+        }
+        if self.ids[strip.clone()].contains(&v) {
+            return false;
+        }
+        let evicted = self.ids[base];
+        let evicted_flag = self.flags[base];
+        self.ids[base] = v;
+        self.dists[base] = dist;
+        self.flags[base] = flag;
+        siftdown(
+            &mut self.ids[strip.clone()],
+            &mut self.dists[strip.clone()],
+            &mut self.flags[strip],
+            0,
+        );
+        if evicted != EMPTY_ID {
+            if evicted_flag {
+                self.rev_new[evicted as usize] -= 1;
+                self.fwd_new[u] -= 1;
+            } else {
+                self.rev_old[evicted as usize] -= 1;
+            }
+        } else {
+            self.filled[u] += 1;
+        }
+        if flag {
+            self.rev_new[v as usize] += 1;
+            self.fwd_new[u] += 1;
+        } else {
+            self.rev_old[v as usize] += 1;
+        }
+        true
+    }
+
+    /// Neighbors of `u` sorted ascending by distance.
+    pub fn sorted(&self, u: usize) -> Vec<(u32, f32)> {
+        sorted_neighbors(self.ids(u), self.dists(u))
+    }
+
+    /// All filled (directed) edges `(u, v, dist)`.
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32, f32)> + '_ {
+        (0..self.n).flat_map(move |u| {
+            self.ids(u)
+                .iter()
+                .zip(self.dists(u))
+                .filter(|(&v, _)| v != EMPTY_ID)
+                .map(move |(&v, &d)| (u as u32, v, d))
+        })
+    }
+
+    /// Relabel and physically reorder under permutation `sigma`
+    /// (σ: old id → new id), matching a data-matrix reorder by σ⁻¹
+    /// (paper §3.2: after the greedy heuristic, *everything* — data and
+    /// graph — moves to the new layout).
+    pub fn apply_permutation(&self, sigma: &[u32]) -> Self {
+        assert_eq!(sigma.len(), self.n);
+        let mut out = Self::new(self.n, self.k);
+        for u in 0..self.n {
+            let nu = sigma[u] as usize;
+            let src = u * self.k..(u + 1) * self.k;
+            let dst = nu * self.k..(nu + 1) * self.k;
+            out.dists[dst.clone()].copy_from_slice(&self.dists[src.clone()]);
+            out.flags[dst.clone()].copy_from_slice(&self.flags[src.clone()]);
+            for (o, &v) in out.ids[dst].iter_mut().zip(&self.ids[src]) {
+                *o = if v == EMPTY_ID { EMPTY_ID } else { sigma[v as usize] };
+            }
+            out.filled[nu] = self.filled[u];
+            out.fwd_new[nu] = self.fwd_new[u];
+            out.rev_new[nu] = self.rev_new[u];
+            out.rev_old[nu] = self.rev_old[u];
+        }
+        out
+    }
+
+    /// Verify internal consistency (tests / debug builds): heap property
+    /// per node, all counters exact, no self-edges, no duplicates.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut rev_new = vec![0u32; self.n];
+        let mut rev_old = vec![0u32; self.n];
+        for u in 0..self.n {
+            let ids = self.ids(u);
+            let dists = self.dists(u);
+            let flags = self.flags(u);
+            for i in 1..self.k {
+                if dists[(i - 1) / 2] < dists[i] {
+                    return Err(format!("node {u}: heap violation at {i}"));
+                }
+            }
+            let mut seen = std::collections::HashSet::new();
+            let mut filled = 0u16;
+            let mut fwd_new = 0u16;
+            for ((&v, &d), &f) in ids.iter().zip(dists).zip(flags) {
+                if v == EMPTY_ID {
+                    if d != f32::INFINITY {
+                        return Err(format!("node {u}: empty slot with finite dist"));
+                    }
+                    continue;
+                }
+                filled += 1;
+                if v as usize == u {
+                    return Err(format!("node {u}: self edge"));
+                }
+                if v as usize >= self.n {
+                    return Err(format!("node {u}: id {v} out of range"));
+                }
+                if !seen.insert(v) {
+                    return Err(format!("node {u}: duplicate neighbor {v}"));
+                }
+                if f {
+                    fwd_new += 1;
+                    rev_new[v as usize] += 1;
+                } else {
+                    rev_old[v as usize] += 1;
+                }
+            }
+            if filled != self.filled[u] {
+                return Err(format!("node {u}: filled counter {} ≠ {filled}", self.filled[u]));
+            }
+            if fwd_new != self.fwd_new[u] {
+                return Err(format!("node {u}: fwd_new counter {} ≠ {fwd_new}", self.fwd_new[u]));
+            }
+        }
+        if rev_new != self.rev_new {
+            return Err("rev_new counters out of sync".to_string());
+        }
+        if rev_old != self.rev_old {
+            return Err("rev_old counters out of sync".to_string());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Config};
+
+    #[test]
+    fn push_and_counters() {
+        let mut g = KnnGraph::new(5, 2);
+        assert!(g.push(0, 1, 1.0, true));
+        assert!(g.push(0, 2, 2.0, true));
+        assert_eq!(g.rev_new[1], 1);
+        assert_eq!(g.rev_new[2], 1);
+        assert_eq!(g.new_size(0), 2); // two flagged forward
+        // 3 closer than worst (2.0): evicts 2
+        assert!(g.push(0, 3, 1.5, true));
+        assert_eq!(g.rev_new[2], 0);
+        assert_eq!(g.rev_new[3], 1);
+        // worse than worst: rejected
+        assert!(!g.push(0, 4, 9.0, true));
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn clear_flag_moves_new_to_old() {
+        let mut g = KnnGraph::new(4, 2);
+        g.push(0, 1, 1.0, true);
+        g.push(0, 2, 2.0, true);
+        assert_eq!(g.new_size(1), 1);
+        assert_eq!(g.old_size(1), 0);
+        let slot = g.ids(0).iter().position(|&v| v == 1).unwrap();
+        g.clear_flag(0, slot);
+        assert_eq!(g.rev_new[1], 0);
+        assert_eq!(g.rev_old[1], 1);
+        assert_eq!(g.fwd_new[0], 1);
+        // idempotent
+        g.clear_flag(0, slot);
+        assert_eq!(g.rev_old[1], 1);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn prop_random_ops_keep_counters_exact() {
+        check(Config::cases(60), "graph counters exact", |g| {
+            let n = g.usize_in(3..40);
+            let k = g.usize_in(1..8);
+            let mut kg = KnnGraph::new(n, k);
+            for _ in 0..300 {
+                if g.bool(0.8) {
+                    let u = g.usize_in(0..n);
+                    let v = g.u32_in(0..n as u32);
+                    if v as usize == u {
+                        continue;
+                    }
+                    kg.push(u, v, g.f32_unit() * 10.0, g.bool(0.7));
+                } else {
+                    let u = g.usize_in(0..n);
+                    let i = g.usize_in(0..k);
+                    if kg.ids(u)[i] != EMPTY_ID {
+                        kg.clear_flag(u, i);
+                    }
+                }
+            }
+            kg.validate().is_ok()
+        });
+    }
+
+    #[test]
+    fn permutation_preserves_structure() {
+        check(Config::cases(40), "permutation preserves edges", |g| {
+            let n = g.usize_in(4..30);
+            let k = 3.min(n - 1);
+            let mut kg = KnnGraph::new(n, k);
+            for _ in 0..100 {
+                let u = g.usize_in(0..n);
+                let v = g.u32_in(0..n as u32);
+                if v as usize != u {
+                    kg.push(u, v, g.f32_unit(), g.bool(0.5));
+                }
+            }
+            let sigma = g.permutation(n);
+            let pg = kg.apply_permutation(&sigma);
+            if pg.validate().is_err() {
+                return false;
+            }
+            // edge (u,v,d) exists iff (σu, σv, d) exists in the image
+            let mut orig: Vec<(u32, u32, u32)> = kg
+                .edges()
+                .map(|(u, v, d)| (sigma[u as usize], sigma[v as usize], d.to_bits()))
+                .collect();
+            let mut perm: Vec<(u32, u32, u32)> =
+                pg.edges().map(|(u, v, d)| (u, v, d.to_bits())).collect();
+            orig.sort_unstable();
+            perm.sort_unstable();
+            orig == perm
+        });
+    }
+
+    #[test]
+    fn worst_tracks_heap_root() {
+        let mut g = KnnGraph::new(3, 2);
+        assert_eq!(g.worst(0), f32::INFINITY);
+        g.push(0, 1, 5.0, false);
+        g.push(0, 2, 3.0, false);
+        assert_eq!(g.worst(0), 5.0);
+    }
+
+    #[test]
+    fn neighborhood_sizes_split_by_flag() {
+        let mut g = KnnGraph::new(4, 3);
+        g.push(1, 0, 1.0, true); // 0 gains rev_new
+        g.push(2, 0, 1.0, false); // 0 gains rev_old
+        g.push(0, 3, 1.0, true); // 0 gains fwd_new
+        assert_eq!(g.new_size(0), 2); // fwd_new + rev_new
+        assert_eq!(g.old_size(0), 1); // rev_old
+        assert_eq!(g.neighborhood_size(0), 3);
+        assert_eq!(g.reverse_degree(0), 2);
+    }
+
+    #[test]
+    fn edges_iterator_counts() {
+        let mut g = KnnGraph::new(4, 2);
+        g.push(0, 1, 1.0, false);
+        g.push(1, 0, 1.0, false);
+        g.push(2, 3, 2.0, false);
+        assert_eq!(g.edges().count(), 3);
+    }
+}

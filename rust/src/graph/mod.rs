@@ -1,0 +1,12 @@
+//! K-NN graph state: bounded neighbor heaps (SoA) and the graph
+//! container with the bookkeeping NN-Descent needs (incremental-search
+//! `new` flags, reverse-degree counters for turbosampling, update
+//! counting for the convergence test).
+
+pub mod heap;
+pub mod io;
+pub mod knng;
+
+pub use heap::{heap_push, siftdown, EMPTY_ID};
+pub use io::{load_graph, save_graph};
+pub use knng::KnnGraph;

@@ -1,0 +1,60 @@
+#![feature(portable_simd)]
+//! # knng — Fast Single-Core K-Nearest Neighbor Graph Computation
+//!
+//! A production-oriented reproduction of *"Fast Single-Core K-Nearest
+//! Neighbor Graph Computation"* (Kluser, Bokstaller, Rutz, Buner; ETH
+//! Zurich, 2021): a runtime-optimized implementation of the NN-Descent
+//! algorithm (Dong et al., WWW'11) for the squared-L2 metric, plus every
+//! substrate needed to regenerate the paper's evaluation — synthetic and
+//! real-world dataset handling, a cache-hierarchy simulator standing in
+//! for cachegrind, a roofline model, baselines, and a full benchmark
+//! harness.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the single-core NN-Descent pipeline: selection
+//!   strategies (`nndescent::selection`), the greedy memory-reordering
+//!   heuristic (`nndescent::reorder`), blocked distance kernels
+//!   (`distance`), graph state (`graph`), datasets (`dataset`), and the
+//!   iteration driver (`nndescent::driver`).
+//! * **L2/L1 (python/, build-time only)** — the blocked pairwise-L2
+//!   compute hot-spot expressed as a Pallas kernel inside a JAX graph,
+//!   AOT-lowered to HLO text artifacts.
+//! * **runtime** — loads those artifacts through PJRT (`xla` crate) so the
+//!   compute step can be offloaded without any Python on the request path.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use knng::dataset::synth::SynthGaussian;
+//! use knng::nndescent::{NnDescent, Params};
+//!
+//! let data = SynthGaussian::single(4096, 32, 0x5eed).generate();
+//! let params = Params::default().with_k(20);
+//! let result = NnDescent::new(params).build(&data);
+//! println!("graph built in {} iterations, {} distance evals",
+//!          result.iterations, result.stats.dist_evals);
+//! ```
+
+pub mod baseline;
+pub mod bench;
+pub mod cachesim;
+pub mod cli;
+pub mod config;
+pub mod dataset;
+pub mod distance;
+pub mod graph;
+pub mod metrics;
+pub mod nndescent;
+pub mod pipeline;
+pub mod roofline;
+pub mod runtime;
+pub mod search;
+pub mod testing;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Version string reported by the CLI.
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,320 @@
+//! `knng` — CLI launcher for the K-NN graph pipeline.
+//!
+//! Subcommands:
+//!   build     build a K-NN graph (config file or flags), report stats
+//!   gen       generate a dataset and write it as .fvecs
+//!   check     verify AOT artifacts load and the PJRT engine matches
+//!             the native kernels
+//!   info      print version, defaults, artifact inventory
+//!
+//! Examples:
+//!   knng build --config configs/mnist.toml
+//!   knng build --dataset clustered --n 16k --dim 8 --clusters 16 \
+//!              --selection turbo --compute blocked --reorder
+//!   knng gen --dataset gaussian --n 4096 --dim 64 --out /tmp/g.fvecs
+//!   knng check --artifacts artifacts
+
+use knng::cli::{parse_args, ArgSpec};
+use knng::config::schema::{ComputeKind, SelectionKind};
+use knng::config::{DatasetSpec, ExperimentConfig, RunConfig};
+use knng::pipeline::EvalOptions;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match args.first().map(|s| s.as_str()) {
+        Some("build") => cmd_build(&args[1..]),
+        Some("gen") => cmd_gen(&args[1..]),
+        Some("query") => cmd_query(&args[1..]),
+        Some("check") => cmd_check(&args[1..]),
+        Some("info") => cmd_info(&args[1..]),
+        Some("--help") | Some("-h") | Some("help") | None => {
+            print_help();
+            Ok(())
+        }
+        Some(other) => Err(anyhow::anyhow!("unknown subcommand `{other}` (see `knng help`)")),
+    }
+    .map_or_else(
+        |e| {
+            eprintln!("error: {e:#}");
+            1
+        },
+        |_| 0,
+    );
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "knng {} — fast single-core K-NN graph computation (NN-Descent)\n\n\
+         subcommands:\n  \
+         build   build a K-NN graph and report stats/recall\n  \
+         gen     generate a synthetic dataset to .fvecs\n  \
+         query   serve ANN queries over a saved graph (beam search)\n  \
+         check   validate AOT artifacts + PJRT numerics\n  \
+         info    version, defaults, artifact inventory\n\n\
+         run `knng <cmd> --help` for flags",
+        knng::VERSION
+    );
+}
+
+fn build_spec() -> ArgSpec {
+    ArgSpec::new()
+        .value("config", "TOML config file (flags below override)")
+        .value("dataset", "gaussian|clustered|mnist|audio|fvecs")
+        .value("n", "number of points (k/m suffixes ok)")
+        .value("dim", "dimensionality")
+        .value("clusters", "clusters (clustered dataset)")
+        .value("path", "dataset file path (mnist/fvecs)")
+        .value("k", "neighbors per node (default 20)")
+        .value("rho", "sample rate (default 0.5)")
+        .value("delta", "convergence threshold (default 0.001)")
+        .value("selection", "naive|heap|turbo (default turbo)")
+        .value("compute", "scalar|unrolled|blocked|pjrt (default blocked)")
+        .flag("reorder", "enable the greedy reordering heuristic")
+        .value("seed", "PRNG seed (default 1)")
+        .value("max-iters", "iteration cap (default 40)")
+        .value("recall-queries", "sampled ground-truth queries (default 500, 0=off)")
+        .value("artifacts", "artifact dir for --compute pjrt (default artifacts)")
+        .value("save", "write the built graph (original id space) to this path")
+        .flag("tsv", "emit a TSV row instead of the human report")
+        .flag("help", "show this help")
+}
+
+fn cmd_build(argv: &[String]) -> anyhow::Result<()> {
+    let spec = build_spec();
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("build"));
+        return Ok(());
+    }
+
+    let mut cfg = match m.get("config") {
+        Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
+        None => ExperimentConfig {
+            name: "cli".into(),
+            dataset: DatasetSpec::Gaussian { n: 16_384, dim: 8, single: true, seed: 0x5eed },
+            run: RunConfig::default(),
+        },
+    };
+
+    // flag overrides
+    if let Some(kind) = m.get("dataset") {
+        let n = m.usize_or("n", 16_384)?;
+        let dim = m.usize_or("dim", 8)?;
+        let seed = m.u64_or("seed", 0x5eed)?;
+        cfg.dataset = match kind {
+            "gaussian" => DatasetSpec::Gaussian { n, dim, single: true, seed },
+            "gaussian-multi" => DatasetSpec::Gaussian { n, dim, single: false, seed },
+            "clustered" => DatasetSpec::Clustered { n, dim, clusters: m.usize_or("clusters", 16)?, seed },
+            "mnist" => DatasetSpec::Mnist { n: m.usize_or("n", 70_000)?, path: m.get("path").map(String::from), seed },
+            "audio" => DatasetSpec::Audio { n: m.usize_or("n", 54_387)?, dim: m.usize_or("dim", 192)?, seed },
+            "fvecs" => DatasetSpec::Fvecs {
+                path: m.get("path").ok_or_else(|| anyhow::anyhow!("--path required for fvecs"))?.to_string(),
+                limit: n,
+            },
+            other => anyhow::bail!("unknown --dataset `{other}`"),
+        };
+    }
+    cfg.run.k = m.usize_or("k", cfg.run.k)?;
+    cfg.run.rho = m.f64_or("rho", cfg.run.rho)?;
+    cfg.run.delta = m.f64_or("delta", cfg.run.delta)?;
+    cfg.run.seed = m.u64_or("seed", cfg.run.seed)?;
+    cfg.run.max_iters = m.usize_or("max-iters", cfg.run.max_iters)?;
+    if let Some(s) = m.get("selection") {
+        cfg.run.selection =
+            SelectionKind::parse(s).ok_or_else(|| anyhow::anyhow!("bad --selection `{s}`"))?;
+    }
+    if let Some(s) = m.get("compute") {
+        cfg.run.compute =
+            ComputeKind::parse(s).ok_or_else(|| anyhow::anyhow!("bad --compute `{s}`"))?;
+    }
+    if m.has("reorder") {
+        cfg.run.reorder = true;
+    }
+    cfg.run.artifacts_dir = m.str_or("artifacts", &cfg.run.artifacts_dir).to_string();
+
+    let eval = EvalOptions { recall_queries: m.usize_or("recall-queries", 500)?, seed: cfg.run.seed };
+    let (report, result, _ds) = knng::pipeline::run_experiment_full(&cfg, eval)?;
+    if let Some(path) = m.get("save") {
+        // persist in the *original* id space (undo any reordering)
+        let graph = match &result.reordering {
+            Some(r) => result.graph.apply_permutation(&r.inv),
+            None => result.graph.clone(),
+        };
+        knng::graph::save_graph(std::path::Path::new(path), &graph)?;
+        eprintln!("saved graph to {path}");
+    }
+    if m.has("tsv") {
+        println!("{}", knng::pipeline::RunReport::tsv_header());
+        println!("{}", report.tsv_row());
+    } else {
+        print!("{}", report.render());
+    }
+    Ok(())
+}
+
+fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new()
+        .value("graph", "saved graph file from `build --save` (required)")
+        .value("data", ".fvecs corpus the graph was built on (required)")
+        .value("queries", ".fvecs query vectors (required)")
+        .value("k", "neighbors per query (default 10)")
+        .value("ef", "beam width (default 64)")
+        .flag("stats", "print per-query eval counts")
+        .flag("help", "show this help");
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("query"));
+        return Ok(());
+    }
+    let need = |k: &str| {
+        m.get(k).map(String::from).ok_or_else(|| anyhow::anyhow!("--{k} is required"))
+    };
+    let graph = knng::graph::load_graph(std::path::Path::new(&need("graph")?))?;
+    let data = knng::dataset::fvecs::read_fvecs(std::path::Path::new(&need("data")?), usize::MAX)?;
+    let queries =
+        knng::dataset::fvecs::read_fvecs(std::path::Path::new(&need("queries")?), usize::MAX)?;
+    anyhow::ensure!(queries.dim() == data.dim(), "query/corpus dim mismatch");
+    let k = m.usize_or("k", 10)?;
+    let params = knng::search::SearchParams {
+        ef: m.usize_or("ef", 64)?,
+        ..Default::default()
+    };
+    let index = knng::search::GraphIndex::new(data, graph);
+    let t0 = std::time::Instant::now();
+    let mut total_evals = 0u64;
+    for qi in 0..queries.n() {
+        let (res, stats) = index.search(queries.row_logical(qi), k, &params);
+        total_evals += stats.dist_evals;
+        let row: Vec<String> = res.iter().map(|(v, d)| format!("{v}:{d:.4}")).collect();
+        println!("{qi}\t{}", row.join("\t"));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    eprintln!(
+        "{} queries in {:.3}s ({:.0} qps), {:.0} evals/query",
+        queries.n(),
+        secs,
+        queries.n() as f64 / secs,
+        total_evals as f64 / queries.n() as f64
+    );
+    Ok(())
+}
+
+fn cmd_gen(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new()
+        .value("dataset", "gaussian|gaussian-multi|clustered|mnist|audio")
+        .value("n", "number of points")
+        .value("dim", "dimensionality")
+        .value("clusters", "clusters (clustered)")
+        .value("seed", "PRNG seed")
+        .value("out", "output .fvecs path (required)")
+        .flag("help", "show this help");
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("gen"));
+        return Ok(());
+    }
+    let out = m.get("out").ok_or_else(|| anyhow::anyhow!("--out required"))?;
+    let n = m.usize_or("n", 16_384)?;
+    let dim = m.usize_or("dim", 8)?;
+    let seed = m.u64_or("seed", 0x5eed)?;
+    let ds_spec = match m.str_or("dataset", "gaussian") {
+        "gaussian" => DatasetSpec::Gaussian { n, dim, single: true, seed },
+        "gaussian-multi" => DatasetSpec::Gaussian { n, dim, single: false, seed },
+        "clustered" => DatasetSpec::Clustered { n, dim, clusters: m.usize_or("clusters", 16)?, seed },
+        "mnist" => DatasetSpec::Mnist { n, path: None, seed },
+        "audio" => DatasetSpec::Audio { n, dim, seed },
+        other => anyhow::bail!("unknown --dataset `{other}`"),
+    };
+    let ds = knng::dataset::from_spec(&ds_spec)?;
+    knng::dataset::fvecs::write_fvecs(std::path::Path::new(out), &ds.data)?;
+    println!("wrote {} ({} × {}) to {out}", ds.name, ds.n(), ds.dim());
+    Ok(())
+}
+
+fn cmd_check(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new()
+        .value("artifacts", "artifact dir (default artifacts)")
+        .flag("help", "show this help");
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("check"));
+        return Ok(());
+    }
+    let dir = m.str_or("artifacts", "artifacts");
+
+    use knng::dataset::synth::SynthGaussian;
+    use knng::distance::blocked::{pairwise_flat, PairwiseBuf};
+    use knng::runtime::PjrtEngine;
+
+    let mut engine = PjrtEngine::open(dir)?;
+    println!(
+        "artifact store: {} entries, platform={}",
+        engine.store().entries().len(),
+        engine.store().client().platform_name()
+    );
+    let shapes = engine.store().pairwise_shapes();
+    anyhow::ensure!(!shapes.is_empty(), "no pairwise artifacts found");
+    let mut failures = 0;
+    for (b, d) in shapes {
+        let data = SynthGaussian::single(b, d, 7).generate();
+        anyhow::ensure!(data.dim_pad() == d, "artifact d={d} not a multiple of 8?");
+        let ids: Vec<u32> = (0..b as u32).collect();
+        let mut pjrt = PairwiseBuf::with_capacity(b);
+        let mut native = PairwiseBuf::with_capacity(b);
+        engine.pairwise_checked(&data, &ids, &mut pjrt)?;
+        pairwise_flat(&data, &ids, &mut native, true);
+        let mut max_err = 0f32;
+        let mut scale = 0f32;
+        for i in 0..b {
+            for j in (i + 1)..b {
+                max_err = max_err.max((pjrt.get(i, j) - native.get(i, j)).abs());
+                scale = scale.max(native.get(i, j).abs());
+            }
+        }
+        let ok = max_err <= 2e-3 * scale.max(1.0);
+        println!(
+            "  pairwise b={b:<4} d={d:<4} max_err={max_err:.3e} scale={scale:.3e} {}",
+            if ok { "OK" } else { "FAIL" }
+        );
+        if !ok {
+            failures += 1;
+        }
+    }
+    anyhow::ensure!(failures == 0, "{failures} artifact(s) disagree with native kernels");
+    println!("check OK — pjrt results match native kernels");
+    Ok(())
+}
+
+fn cmd_info(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new()
+        .value("artifacts", "artifact dir to inventory (default artifacts)")
+        .flag("help", "show this help");
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("info"));
+        return Ok(());
+    }
+    println!("knng {}", knng::VERSION);
+    let d = RunConfig::default();
+    println!(
+        "defaults: k={} rho={} delta={} selection={} compute={} max_candidates={}",
+        d.k,
+        d.rho,
+        d.delta,
+        d.selection.name(),
+        d.compute.name(),
+        d.max_candidates
+    );
+    let dir = m.str_or("artifacts", "artifacts");
+    match knng::runtime::ArtifactStore::open(dir) {
+        Ok(store) => {
+            println!("artifacts in {dir}:");
+            for e in store.entries() {
+                println!("  {} {:?} → {}", e.kind, e.dims, e.file);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Quality and behaviour metrics: recall vs exact ground truth, the
+//! Fig-4 sliding-window cluster-distribution analysis, and run reports.
+
+pub mod recall;
+pub mod window;
+
+pub use recall::{recall_against_truth, recall_of_graph};
+pub use window::cluster_window_fractions;

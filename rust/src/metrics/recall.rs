@@ -1,0 +1,86 @@
+//! Recall of an approximate K-NN graph against exact ground truth.
+//!
+//! recall(u) = |approx(u) ∩ exact(u)| / k, averaged over query nodes.
+//! Ties at the k-th distance are handled by id-set intersection on the
+//! exact list as computed (deterministic tie-break by id), which matches
+//! how the paper's ≥99% numbers are normally measured.
+
+use crate::baseline::brute::GroundTruth;
+use crate::graph::heap::EMPTY_ID;
+use crate::graph::KnnGraph;
+use crate::nndescent::driver::BuildResult;
+
+/// Mean recall of a build result (handles reordered id spaces).
+pub fn recall_against_truth(result: &BuildResult, truth: &GroundTruth) -> f64 {
+    let mut total = 0.0;
+    for (q, exact) in &truth.queries {
+        let approx = result.neighbors_original(*q as usize);
+        total += overlap(&approx, exact);
+    }
+    total / truth.queries.len() as f64
+}
+
+/// Mean recall of a raw graph in the same id space as the truth.
+pub fn recall_of_graph(graph: &KnnGraph, truth: &GroundTruth) -> f64 {
+    let mut total = 0.0;
+    for (q, exact) in &truth.queries {
+        let ids: Vec<(u32, f32)> = graph
+            .ids(*q as usize)
+            .iter()
+            .zip(graph.dists(*q as usize))
+            .filter(|(&v, _)| v != EMPTY_ID)
+            .map(|(&v, &d)| (v, d))
+            .collect();
+        total += overlap(&ids, exact);
+    }
+    total / truth.queries.len() as f64
+}
+
+fn overlap(approx: &[(u32, f32)], exact: &[(u32, f32)]) -> f64 {
+    if exact.is_empty() {
+        return 1.0;
+    }
+    let hits = exact
+        .iter()
+        .filter(|(v, _)| approx.iter().any(|(a, _)| a == v))
+        .count();
+    hits as f64 / exact.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::brute::brute_force_knn;
+    use crate::dataset::AlignedMatrix;
+
+    #[test]
+    fn perfect_graph_has_recall_one() {
+        let data = AlignedMatrix::from_rows(6, 1, &[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        let truth = brute_force_knn(&data, 2);
+        let mut graph = KnnGraph::new(6, 2);
+        for (q, list) in &truth.queries {
+            for &(v, d) in list {
+                graph.push(*q as usize, v, d, false);
+            }
+        }
+        assert_eq!(recall_of_graph(&graph, &truth), 1.0);
+    }
+
+    #[test]
+    fn wrong_graph_has_low_recall() {
+        let data = AlignedMatrix::from_rows(6, 1, &[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        let truth = brute_force_knn(&data, 2);
+        let mut graph = KnnGraph::new(6, 2);
+        // deliberately connect each node to the *farthest* points
+        for u in 0..3usize {
+            graph.push(u, 4, 100.0, false);
+            graph.push(u, 5, 101.0, false);
+        }
+        for u in 3..6usize {
+            graph.push(u, 0, 100.0, false);
+            graph.push(u, 1, 101.0, false);
+        }
+        let r = recall_of_graph(&graph, &truth);
+        assert!(r < 0.5, "recall {r} should be poor");
+    }
+}

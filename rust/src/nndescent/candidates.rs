@@ -1,0 +1,189 @@
+//! Bounded per-node candidate lists (selection-step output).
+//!
+//! Flat `n × cap` storage — no per-node allocation, reused across
+//! iterations. "New" candidates are those carrying the incremental-
+//! search flag; "old" are established neighbors. The compute step
+//! evaluates new×new and new×old pairs (old×old were compared in an
+//! earlier iteration).
+
+/// Flat candidate lists for all nodes.
+#[derive(Debug, Clone)]
+pub struct CandidateLists {
+    n: usize,
+    cap: usize,
+    new_ids: Vec<u32>,
+    new_len: Vec<u16>,
+    old_ids: Vec<u32>,
+    old_len: Vec<u16>,
+}
+
+impl CandidateLists {
+    /// Allocate for `n` nodes with per-list capacity `cap`.
+    pub fn new(n: usize, cap: usize) -> Self {
+        assert!(cap >= 1 && cap <= u16::MAX as usize);
+        Self {
+            n,
+            cap,
+            new_ids: vec![0; n * cap],
+            new_len: vec![0; n],
+            old_ids: vec![0; n * cap],
+            old_len: vec![0; n],
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Clear all lists (O(n), lengths only).
+    pub fn clear(&mut self) {
+        self.new_len.fill(0);
+        self.old_len.fill(0);
+    }
+
+    /// New-candidate slice of node `u`.
+    #[inline]
+    pub fn new_slice(&self, u: usize) -> &[u32] {
+        &self.new_ids[u * self.cap..u * self.cap + self.new_len[u] as usize]
+    }
+
+    /// Old-candidate slice of node `u`.
+    #[inline]
+    pub fn old_slice(&self, u: usize) -> &[u32] {
+        &self.old_ids[u * self.cap..u * self.cap + self.old_len[u] as usize]
+    }
+
+    /// Append `v` to `u`'s new list; returns false when full.
+    #[inline]
+    pub fn push_new(&mut self, u: usize, v: u32) -> bool {
+        let len = self.new_len[u] as usize;
+        if len >= self.cap {
+            return false;
+        }
+        self.new_ids[u * self.cap + len] = v;
+        self.new_len[u] = (len + 1) as u16;
+        true
+    }
+
+    /// Append `v` to `u`'s old list; returns false when full.
+    #[inline]
+    pub fn push_old(&mut self, u: usize, v: u32) -> bool {
+        let len = self.old_len[u] as usize;
+        if len >= self.cap {
+            return false;
+        }
+        self.old_ids[u * self.cap + len] = v;
+        self.old_len[u] = (len + 1) as u16;
+        true
+    }
+
+    /// Overwrite slot `slot` of `u`'s new list (reservoir replacement;
+    /// list must already contain `slot`).
+    #[inline]
+    pub fn replace_new(&mut self, u: usize, slot: usize, v: u32) {
+        debug_assert!(slot < self.new_len[u] as usize);
+        self.new_ids[u * self.cap + slot] = v;
+    }
+
+    /// Overwrite slot `slot` of `u`'s old list.
+    #[inline]
+    pub fn replace_old(&mut self, u: usize, slot: usize, v: u32) {
+        debug_assert!(slot < self.old_len[u] as usize);
+        self.old_ids[u * self.cap + slot] = v;
+    }
+
+    #[inline]
+    pub fn new_len(&self, u: usize) -> usize {
+        self.new_len[u] as usize
+    }
+
+    #[inline]
+    pub fn old_len(&self, u: usize) -> usize {
+        self.old_len[u] as usize
+    }
+
+    /// Direct store into the new list at `idx` and set length (heap
+    /// selector finalization).
+    pub(crate) fn set_new(&mut self, u: usize, ids: &[u32]) {
+        debug_assert!(ids.len() <= self.cap);
+        self.new_ids[u * self.cap..u * self.cap + ids.len()].copy_from_slice(ids);
+        self.new_len[u] = ids.len() as u16;
+    }
+
+    pub(crate) fn set_old(&mut self, u: usize, ids: &[u32]) {
+        debug_assert!(ids.len() <= self.cap);
+        self.old_ids[u * self.cap..u * self.cap + ids.len()].copy_from_slice(ids);
+        self.old_len[u] = ids.len() as u16;
+    }
+
+    /// Base address of the new-id array (for the cache-sim trace).
+    pub fn new_ids_addr(&self) -> usize {
+        self.new_ids.as_ptr() as usize
+    }
+
+    /// Base address of the old-id array.
+    pub fn old_ids_addr(&self) -> usize {
+        self.old_ids.as_ptr() as usize
+    }
+
+    /// Total candidates across all nodes (diagnostics).
+    pub fn total(&self) -> usize {
+        self.new_len.iter().map(|&l| l as usize).sum::<usize>()
+            + self.old_len.iter().map(|&l| l as usize).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_and_bounds() {
+        let mut c = CandidateLists::new(3, 2);
+        assert!(c.push_new(0, 5));
+        assert!(c.push_new(0, 6));
+        assert!(!c.push_new(0, 7), "full");
+        assert_eq!(c.new_slice(0), &[5, 6]);
+        assert_eq!(c.new_slice(1), &[] as &[u32]);
+        assert!(c.push_old(2, 9));
+        assert_eq!(c.old_slice(2), &[9]);
+        assert_eq!(c.total(), 3);
+    }
+
+    #[test]
+    fn clear_resets_lengths() {
+        let mut c = CandidateLists::new(2, 4);
+        c.push_new(0, 1);
+        c.push_old(1, 2);
+        c.clear();
+        assert_eq!(c.total(), 0);
+        assert_eq!(c.new_slice(0), &[] as &[u32]);
+    }
+
+    #[test]
+    fn replace_slots() {
+        let mut c = CandidateLists::new(1, 3);
+        c.push_new(0, 1);
+        c.push_new(0, 2);
+        c.replace_new(0, 0, 42);
+        assert_eq!(c.new_slice(0), &[42, 2]);
+        c.push_old(0, 7);
+        c.replace_old(0, 0, 8);
+        assert_eq!(c.old_slice(0), &[8]);
+    }
+
+    #[test]
+    fn set_bulk() {
+        let mut c = CandidateLists::new(2, 4);
+        c.set_new(1, &[3, 4, 5]);
+        c.set_old(1, &[6]);
+        assert_eq!(c.new_slice(1), &[3, 4, 5]);
+        assert_eq!(c.old_slice(1), &[6]);
+    }
+}

@@ -1,0 +1,118 @@
+//! Random K-NN graph initialization (paper §2): every node starts with
+//! k neighbors sampled uniformly at random, real distances attached,
+//! all flagged "new".
+
+use crate::cachesim::trace::Tracer;
+use crate::dataset::AlignedMatrix;
+use crate::distance::sq_l2_unrolled;
+use crate::graph::KnnGraph;
+use crate::util::counters::FlopCounter;
+use crate::util::rng::Pcg64;
+
+/// Fill `graph` with k uniformly sampled neighbors per node.
+pub fn init_random<T: Tracer>(
+    graph: &mut KnnGraph,
+    data: &AlignedMatrix,
+    rng: &mut Pcg64,
+    counter: &mut FlopCounter,
+    tracer: &mut T,
+) {
+    let n = graph.n();
+    let k = graph.k().min(n - 1);
+    let row_bytes = data.row_bytes() as u32;
+    let mut sample: Vec<u32> = Vec::with_capacity(k);
+    for u in 0..n {
+        // k distinct ids ≠ u by rejection (k ≪ n, expected O(k) draws;
+        // falls back to dense reservoir sampling for tiny n where
+        // rejection would thrash)
+        sample.clear();
+        if n <= 2 * k + 2 {
+            rng.sample_indices(n - 1, k, &mut sample);
+            for raw in sample.iter_mut() {
+                if (*raw as usize) >= u {
+                    *raw += 1;
+                }
+            }
+        } else {
+            while sample.len() < k {
+                let v = rng.gen_index(n) as u32;
+                if v as usize != u && !sample.contains(&v) {
+                    sample.push(v);
+                }
+            }
+        }
+        tracer.read(data.base_addr() + u * data.row_bytes(), row_bytes);
+        let a = data.row(u);
+        for &v in sample.iter() {
+            tracer.read(data.base_addr() + v as usize * data.row_bytes(), row_bytes);
+            let d = sq_l2_unrolled(a, data.row(v as usize));
+            counter.add_evals(1);
+            graph.push(u, v, d, true);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::trace::NoTracer;
+    use crate::dataset::synth::SynthGaussian;
+    use crate::graph::heap::EMPTY_ID;
+
+    fn setup(n: usize, k: usize, dim: usize) -> (KnnGraph, AlignedMatrix, FlopCounter) {
+        let data = SynthGaussian::single(n, dim, 3).generate();
+        let mut graph = KnnGraph::new(n, k);
+        let mut rng = Pcg64::new(7);
+        let mut counter = FlopCounter::new(dim);
+        init_random(&mut graph, &data, &mut rng, &mut counter, &mut NoTracer);
+        (graph, data, counter)
+    }
+
+    #[test]
+    fn fills_every_slot_with_distinct_neighbors() {
+        let (graph, _, counter) = setup(100, 10, 8);
+        for u in 0..100 {
+            let ids = graph.ids(u);
+            assert!(ids.iter().all(|&v| v != EMPTY_ID && v as usize != u));
+            let mut s: Vec<u32> = ids.to_vec();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 10, "node {u} has duplicate neighbors");
+        }
+        assert_eq!(counter.dist_evals, 100 * 10);
+        graph.validate().unwrap();
+    }
+
+    #[test]
+    fn distances_are_correct() {
+        let (graph, data, _) = setup(50, 5, 16);
+        for u in 0..50 {
+            for (&v, &d) in graph.ids(u).iter().zip(graph.dists(u)) {
+                let expect = sq_l2_unrolled(data.row(u), data.row(v as usize));
+                assert!((d - expect).abs() < 1e-5, "node {u} → {v}: {d} vs {expect}");
+            }
+        }
+    }
+
+    #[test]
+    fn all_flags_start_new() {
+        let (graph, _, _) = setup(30, 4, 8);
+        for u in 0..30 {
+            assert!(graph.flags(u).iter().all(|&f| f));
+        }
+    }
+
+    #[test]
+    fn k_clamped_when_n_small() {
+        let data = SynthGaussian::single(4, 8, 1).generate();
+        let mut graph = KnnGraph::new(4, 6); // k > n-1
+        let mut rng = Pcg64::new(1);
+        let mut c = FlopCounter::new(8);
+        init_random(&mut graph, &data, &mut rng, &mut c, &mut NoTracer);
+        for u in 0..4 {
+            let filled = graph.ids(u).iter().filter(|&&v| v != EMPTY_ID).count();
+            assert_eq!(filled, 3, "only n-1 distinct neighbors exist");
+        }
+        graph.validate().unwrap();
+    }
+}

@@ -1,0 +1,35 @@
+//! NN-Descent (Dong et al., WWW'11) with the paper's single-core
+//! optimizations.
+//!
+//! The algorithm alternates two steps until convergence (paper §2):
+//!
+//! 1. **Selection** ([`selection`]) — per node, gather a bounded sample
+//!    of "new"/"old" candidates from forward and reverse edges of the
+//!    current approximation. Three implementations with identical
+//!    semantics but very different constants: `naive` (three passes,
+//!    unbounded reverse lists), `heap` (PyNNDescent's fused one-pass,
+//!    ≈16×), `turbo` (the paper's heap-free counter sampling, ≈1.12×
+//!    more).
+//! 2. **Compute** ([`compute`]) — evaluate candidate pairs' distances
+//!    (new×new and new×old) and push improvements into both endpoint
+//!    heaps.
+//!
+//! Optionally, after the first iteration, the **greedy reordering
+//! heuristic** ([`reorder`], paper §3.2 Algorithm 1) permutes the data
+//! matrix and graph so data-space neighbors become memory neighbors.
+//!
+//! [`driver::NnDescent`] owns the loop, timing, convergence, and the
+//! permutation bookkeeping.
+
+pub mod candidates;
+pub mod compute;
+pub mod driver;
+pub mod init;
+pub mod params;
+pub mod reorder;
+pub mod reorder_alt;
+pub mod selection;
+
+pub use candidates::CandidateLists;
+pub use driver::{BuildResult, NnDescent};
+pub use params::Params;

@@ -1,0 +1,142 @@
+//! NN-Descent run parameters.
+
+use crate::config::schema::{ComputeKind, RunConfig, SelectionKind};
+
+/// Tunables for one graph build. Defaults match the paper's evaluation
+/// setup: k=20, ρ=0.5, δ=0.001, candidate cap 50, squared-L2.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Params {
+    /// Number of neighbors per node.
+    pub k: usize,
+    /// Sample rate ρ: per-node candidate lists hold ⌈ρ·k⌉ entries.
+    pub rho: f64,
+    /// Convergence threshold δ: stop when an iteration makes fewer than
+    /// δ·n·k graph updates.
+    pub delta: f64,
+    /// Hard iteration cap (safety net; convergence normally fires first).
+    pub max_iters: usize,
+    /// PRNG seed (all randomness derives from this).
+    pub seed: u64,
+    /// Selection-step implementation.
+    pub selection: SelectionKind,
+    /// Distance backend for the compute step.
+    pub compute: ComputeKind,
+    /// Run the greedy reordering heuristic (paper §3.2).
+    pub reorder: bool,
+    /// Iteration *before which* the reorder runs (paper: after the first
+    /// iteration, i.e. 1).
+    pub reorder_iter: usize,
+    /// Hard cap on candidate-set size (paper: 50).
+    pub max_candidates: usize,
+}
+
+impl Default for Params {
+    fn default() -> Self {
+        Self {
+            k: 20,
+            rho: 0.5,
+            delta: 0.001,
+            max_iters: 40,
+            seed: 1,
+            selection: SelectionKind::Turbo,
+            compute: ComputeKind::Blocked,
+            reorder: false,
+            reorder_iter: 1,
+            max_candidates: 50,
+        }
+    }
+}
+
+impl Params {
+    /// Per-node candidate-list capacity (each of new/old): ρ·k sampled
+    /// from the forward edges plus ρ·k from the reverse edges (Dong et
+    /// al.'s sampling), bounded so new+old never exceeds the paper's
+    /// candidate-set cap of `max_candidates` (50).
+    pub fn cand_cap(&self) -> usize {
+        let per_dir = (2.0 * (self.rho * self.k as f64).ceil()) as usize;
+        per_dir.clamp(1, (self.max_candidates / 2).max(1))
+    }
+
+    pub fn with_k(mut self, k: usize) -> Self {
+        self.k = k;
+        self
+    }
+    pub fn with_rho(mut self, rho: f64) -> Self {
+        self.rho = rho;
+        self
+    }
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+    pub fn with_selection(mut self, s: SelectionKind) -> Self {
+        self.selection = s;
+        self
+    }
+    pub fn with_compute(mut self, c: ComputeKind) -> Self {
+        self.compute = c;
+        self
+    }
+    pub fn with_reorder(mut self, on: bool) -> Self {
+        self.reorder = on;
+        self
+    }
+    pub fn with_max_iters(mut self, m: usize) -> Self {
+        self.max_iters = m;
+        self
+    }
+    pub fn with_delta(mut self, d: f64) -> Self {
+        self.delta = d;
+        self
+    }
+}
+
+impl From<&RunConfig> for Params {
+    fn from(rc: &RunConfig) -> Self {
+        Self {
+            k: rc.k,
+            rho: rc.rho,
+            delta: rc.delta,
+            max_iters: rc.max_iters,
+            seed: rc.seed,
+            selection: rc.selection,
+            compute: rc.compute,
+            reorder: rc.reorder,
+            reorder_iter: 1,
+            max_candidates: rc.max_candidates,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let p = Params::default();
+        assert_eq!(p.k, 20);
+        assert_eq!(p.rho, 0.5);
+        assert_eq!(p.delta, 0.001);
+        assert_eq!(p.max_candidates, 50);
+        assert_eq!(p.cand_cap(), 20, "2·⌈0.5·20⌉ = 20 per direction");
+    }
+
+    #[test]
+    fn cand_cap_clamps() {
+        let p = Params::default().with_k(200); // 2ρk = 200 > 50/2
+        assert_eq!(p.cand_cap(), 25, "bounded by max_candidates/2");
+        let p = Params::default().with_k(1).with_rho(0.01);
+        assert_eq!(p.cand_cap(), 2, "2·⌈0.01⌉ = 2");
+        let p = Params { max_candidates: 2, ..Params::default() };
+        assert_eq!(p.cand_cap(), 1, "max_candidates/2 floor");
+    }
+
+    #[test]
+    fn from_run_config() {
+        let rc = RunConfig::default();
+        let p = Params::from(&rc);
+        assert_eq!(p.k, rc.k);
+        assert_eq!(p.selection, rc.selection);
+    }
+}

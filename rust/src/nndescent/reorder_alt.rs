@@ -1,0 +1,227 @@
+//! Alternative memory-reordering heuristics — the paper's future-work
+//! direction ("An interesting topic for future work would be to further
+//! explore heuristics for reordering the data", §5).
+//!
+//! All produce the same artifact as Algorithm 1 (a [`Reordering`]) and
+//! plug into the same driver slot, so `bench_reorder_ablation` can
+//! compare them like-for-like:
+//!
+//! * [`bfs_permutation`] — breadth-first traversal of the K-NN graph
+//!   from the lowest-id unvisited node; groups whole neighborhoods
+//!   instead of chaining single nearest neighbors. More passes over the
+//!   adjacency than Algorithm 1 (queue churn) but no dead-end problem.
+//! * [`degree_permutation`] — orders by reverse degree (hub-first);
+//!   cheap (one counting pass + sort) and clusters "popular" rows that
+//!   the selection step touches most often, but ignores data-space
+//!   locality within equal-degree runs.
+//! * [`dfs_permutation`] — depth-first analogue of BFS: follows the
+//!   nearest unvisited neighbor chain like Algorithm 1, but backtracks
+//!   instead of restarting arbitrarily on dead ends.
+
+use super::reorder::Reordering;
+use crate::graph::heap::EMPTY_ID;
+use crate::graph::KnnGraph;
+
+/// BFS over the K-NN graph, visiting each component's nodes in
+/// distance-sorted neighborhood order.
+pub fn bfs_permutation(graph: &KnnGraph) -> Reordering {
+    let n = graph.n();
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut visited = vec![false; n];
+    let mut queue = std::collections::VecDeque::new();
+    let mut adj: Vec<(f32, u32)> = Vec::new();
+
+    for start in 0..n {
+        if visited[start] {
+            continue;
+        }
+        visited[start] = true;
+        queue.push_back(start as u32);
+        while let Some(u) = queue.pop_front() {
+            order.push(u);
+            adj.clear();
+            for (&v, &d) in graph.ids(u as usize).iter().zip(graph.dists(u as usize)) {
+                if v != EMPTY_ID && !visited[v as usize] {
+                    adj.push((d, v));
+                }
+            }
+            adj.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            for &(_, v) in &adj {
+                if !visited[v as usize] {
+                    visited[v as usize] = true;
+                    queue.push_back(v);
+                }
+            }
+        }
+    }
+    from_order(order)
+}
+
+/// Depth-first nearest-unvisited-neighbor walk with backtracking.
+pub fn dfs_permutation(graph: &KnnGraph) -> Reordering {
+    let n = graph.n();
+    let mut order: Vec<u32> = Vec::with_capacity(n);
+    let mut visited = vec![false; n];
+    let mut stack: Vec<u32> = Vec::new();
+    let mut adj: Vec<(f32, u32)> = Vec::new();
+
+    for start in 0..n {
+        if visited[start] {
+            continue;
+        }
+        visited[start] = true;
+        stack.push(start as u32);
+        order.push(start as u32);
+        while let Some(&u) = stack.last() {
+            adj.clear();
+            for (&v, &d) in graph.ids(u as usize).iter().zip(graph.dists(u as usize)) {
+                if v != EMPTY_ID && !visited[v as usize] {
+                    adj.push((d, v));
+                }
+            }
+            if adj.is_empty() {
+                stack.pop();
+                continue;
+            }
+            let next = adj
+                .iter()
+                .min_by(|a, b| a.0.partial_cmp(&b.0).unwrap())
+                .unwrap()
+                .1;
+            visited[next as usize] = true;
+            order.push(next);
+            stack.push(next);
+        }
+    }
+    from_order(order)
+}
+
+/// Hub-first ordering: descending reverse degree, id tiebreak.
+pub fn degree_permutation(graph: &KnnGraph) -> Reordering {
+    let n = graph.n();
+    let mut nodes: Vec<u32> = (0..n as u32).collect();
+    nodes.sort_by_key(|&v| (std::cmp::Reverse(graph.reverse_degree(v as usize)), v));
+    from_order(nodes)
+}
+
+/// Build σ/σ⁻¹ from a visit order (`order[p]` = node at position p).
+fn from_order(order: Vec<u32>) -> Reordering {
+    let n = order.len();
+    let mut sigma = vec![0u32; n];
+    for (p, &v) in order.iter().enumerate() {
+        sigma[v as usize] = p as u32;
+    }
+    Reordering { sigma, inv: order }
+}
+
+/// Named heuristic selector for benches/CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReorderKind {
+    Greedy,
+    Bfs,
+    Dfs,
+    Degree,
+}
+
+impl ReorderKind {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "greedy" => Some(Self::Greedy),
+            "bfs" => Some(Self::Bfs),
+            "dfs" => Some(Self::Dfs),
+            "degree" => Some(Self::Degree),
+            _ => None,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Greedy => "greedy",
+            Self::Bfs => "bfs",
+            Self::Dfs => "dfs",
+            Self::Degree => "degree",
+        }
+    }
+    /// Run the heuristic.
+    pub fn permutation(self, graph: &KnnGraph) -> Reordering {
+        match self {
+            Self::Greedy => super::reorder::greedy_permutation(graph, &mut crate::cachesim::trace::NoTracer),
+            Self::Bfs => bfs_permutation(graph),
+            Self::Dfs => dfs_permutation(graph),
+            Self::Degree => degree_permutation(graph),
+        }
+    }
+    pub const ALL: [ReorderKind; 4] = [Self::Greedy, Self::Bfs, Self::Dfs, Self::Degree];
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::clustered::SynthClustered;
+    use crate::metrics::window::{cluster_window_fractions, mean_max_fraction};
+    use crate::nndescent::{NnDescent, Params};
+    use crate::testing::{check, Config};
+
+    fn graph_and_labels(n: usize, c: usize, seed: u64) -> (KnnGraph, Vec<u32>) {
+        let (data, labels) = SynthClustered::new(n, 8, c, seed).generate_labeled();
+        let params = Params::default().with_k(10).with_seed(seed).with_max_iters(3);
+        (NnDescent::new(params).build(&data).graph, labels)
+    }
+
+    #[test]
+    fn all_heuristics_produce_valid_permutations() {
+        let (graph, _) = graph_and_labels(500, 5, 3);
+        for kind in ReorderKind::ALL {
+            let r = kind.permutation(&graph);
+            r.validate().unwrap_or_else(|e| panic!("{}: {e}", kind.name()));
+        }
+    }
+
+    #[test]
+    fn graph_traversals_beat_random_on_clustered_data() {
+        let (graph, labels) = graph_and_labels(1600, 8, 7);
+        let baseline = 1.0 / 8.0;
+        for kind in [ReorderKind::Bfs, ReorderKind::Dfs, ReorderKind::Greedy] {
+            let r = kind.permutation(&graph);
+            let fr = cluster_window_fractions(&r.inv, &labels, 8, 200, 100);
+            let mm = mean_max_fraction(&fr);
+            assert!(
+                mm > 2.5 * baseline,
+                "{}: contiguity {mm:.3} not better than random {baseline:.3}",
+                kind.name()
+            );
+        }
+    }
+
+    #[test]
+    fn degree_orders_by_reverse_degree() {
+        let (graph, _) = graph_and_labels(300, 3, 11);
+        let r = degree_permutation(&graph);
+        let degs: Vec<u32> =
+            r.inv.iter().map(|&v| graph.reverse_degree(v as usize)).collect();
+        assert!(degs.windows(2).all(|w| w[0] >= w[1]), "must be non-increasing");
+    }
+
+    #[test]
+    fn prop_from_order_roundtrips() {
+        check(Config::cases(50), "order → σ/σ⁻¹ bijection", |g| {
+            let n = g.usize_in(1..200);
+            let order = g.permutation(n);
+            let r = from_order(order.clone());
+            r.validate().is_ok() && r.inv == order
+        });
+    }
+
+    #[test]
+    fn dfs_and_bfs_visit_everything_even_with_empty_slots() {
+        // graph with unfilled slots (k > what init provides)
+        let mut graph = KnnGraph::new(10, 3);
+        graph.push(0, 1, 1.0, false);
+        graph.push(1, 2, 1.0, false);
+        // nodes 3..9 isolated
+        for kind in [ReorderKind::Bfs, ReorderKind::Dfs] {
+            let r = kind.permutation(&graph);
+            r.validate().unwrap();
+            assert_eq!(r.inv.len(), 10);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Fused one-pass selection with bounded random-weight heaps —
+//! PyNNDescent's approach, adopted by the paper (§3.1) before being
+//! superseded by turbosampling.
+//!
+//! For each edge e=(u,v) one weight r_e ~ U[0,1] is drawn. `v` is pushed
+//! into N(u)'s heap keyed by r_e and `u` into N(v)'s (covering forward
+//! and reverse in the same pass). A bounded max-heap keeps the ρ·k
+//! smallest weights — selecting the ρ·k elements with the smallest
+//! u.a.r. weights is exactly a uniform ρ·k-subset, so one pass replaces
+//! reverse+union+sample. The cost the paper then attacks: every push
+//! touches a heap (pointer-chasing sift operations → cache misses).
+
+use super::super::candidates::CandidateLists;
+use super::clear_sampled_flags;
+use crate::cachesim::trace::Tracer;
+use crate::graph::heap::EMPTY_ID;
+use crate::graph::KnnGraph;
+use crate::util::rng::Pcg64;
+
+/// Scratch heaps: SoA weight/id arrays, `n × cap` each for new and old.
+#[derive(Debug)]
+pub struct HeapSelector {
+    cap: usize,
+    new_wt: Vec<f32>,
+    new_id: Vec<u32>,
+    new_len: Vec<u16>,
+    old_wt: Vec<f32>,
+    old_id: Vec<u32>,
+    old_len: Vec<u16>,
+}
+
+impl HeapSelector {
+    pub fn new(n: usize, cap: usize) -> Self {
+        Self {
+            cap,
+            new_wt: vec![0.0; n * cap],
+            new_id: vec![0; n * cap],
+            new_len: vec![0; n],
+            old_wt: vec![0.0; n * cap],
+            old_id: vec![0; n * cap],
+            old_len: vec![0; n],
+        }
+    }
+
+    pub fn select<T: Tracer>(
+        &mut self,
+        graph: &mut KnnGraph,
+        rng: &mut Pcg64,
+        out: &mut CandidateLists,
+        tracer: &mut T,
+    ) {
+        let n = graph.n();
+        let k = graph.k();
+        let cap = self.cap.min(out.cap());
+        out.clear();
+        self.new_len.fill(0);
+        self.old_len.fill(0);
+
+        // ---- single pass over all edges -------------------------------------
+        for u in 0..n {
+            tracer.read(graph.ids(u).as_ptr() as usize, (k * 4) as u32);
+            tracer.read(graph.flags(u).as_ptr() as usize, k as u32);
+            for (&v, &f) in graph.ids(u).iter().zip(graph.flags(u)) {
+                if v == EMPTY_ID {
+                    continue;
+                }
+                let w = rng.gen_f32();
+                if f {
+                    self.push_new(u, v, w, cap, tracer);
+                    self.push_new(v as usize, u as u32, w, cap, tracer);
+                } else {
+                    self.push_old(u, v, w, cap, tracer);
+                    self.push_old(v as usize, u as u32, w, cap, tracer);
+                }
+            }
+        }
+
+        // ---- emit into the shared candidate-list structure -------------------
+        for u in 0..n {
+            let nl = self.new_len[u] as usize;
+            out.set_new(u, &self.new_id[u * self.cap..u * self.cap + nl]);
+            let ol = self.old_len[u] as usize;
+            out.set_old(u, &self.old_id[u * self.cap..u * self.cap + ol]);
+        }
+
+        clear_sampled_flags(graph, out, tracer);
+    }
+
+    #[inline]
+    fn push_new<T: Tracer>(&mut self, u: usize, id: u32, w: f32, cap: usize, tracer: &mut T) {
+        let base = u * self.cap;
+        let len = self.new_len[u] as usize;
+        tracer.read(self.new_wt.as_ptr() as usize + base * 4, (len.max(1) * 4) as u32);
+        wheap_push(
+            &mut self.new_id[base..base + cap],
+            &mut self.new_wt[base..base + cap],
+            &mut self.new_len[u],
+            id,
+            w,
+        );
+        tracer.write(self.new_id.as_ptr() as usize + base * 4, 4);
+    }
+
+    #[inline]
+    fn push_old<T: Tracer>(&mut self, u: usize, id: u32, w: f32, cap: usize, tracer: &mut T) {
+        let base = u * self.cap;
+        let len = self.old_len[u] as usize;
+        tracer.read(self.old_wt.as_ptr() as usize + base * 4, (len.max(1) * 4) as u32);
+        wheap_push(
+            &mut self.old_id[base..base + cap],
+            &mut self.old_wt[base..base + cap],
+            &mut self.old_len[u],
+            id,
+            w,
+        );
+        tracer.write(self.old_id.as_ptr() as usize + base * 4, 4);
+    }
+}
+
+/// Bounded max-heap-by-weight push with duplicate rejection: keeps the
+/// `cap` smallest-weight ids seen so far. The cheap weight test runs
+/// *before* the O(cap) duplicate scan — once the heap is warm, most
+/// pushes die on the single root comparison.
+#[inline]
+fn wheap_push(ids: &mut [u32], wts: &mut [f32], len: &mut u16, id: u32, w: f32) {
+    let l = *len as usize;
+    if l == ids.len() && w >= wts[0] {
+        return; // cannot qualify — skip the duplicate scan entirely
+    }
+    if ids[..l].contains(&id) {
+        return;
+    }
+    if l < ids.len() {
+        // insert at tail, sift up
+        let mut i = l;
+        ids[i] = id;
+        wts[i] = w;
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if wts[p] < wts[i] {
+                ids.swap(p, i);
+                wts.swap(p, i);
+                i = p;
+            } else {
+                break;
+            }
+        }
+        *len += 1;
+    } else if w < wts[0] {
+        // replace root (largest weight), sift down
+        ids[0] = id;
+        wts[0] = w;
+        let k = ids.len();
+        let mut i = 0;
+        loop {
+            let l_ = 2 * i + 1;
+            let r = l_ + 1;
+            let mut m = i;
+            if l_ < k && wts[l_] > wts[m] {
+                m = l_;
+            }
+            if r < k && wts[r] > wts[m] {
+                m = r;
+            }
+            if m == i {
+                break;
+            }
+            ids.swap(i, m);
+            wts.swap(i, m);
+            i = m;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testing::{check, Config};
+
+    #[test]
+    fn wheap_keeps_smallest_weights() {
+        check(Config::cases(100), "wheap = cap smallest weights", |g| {
+            let cap = g.usize_in(1..8);
+            let m = g.usize_in(1..60);
+            let mut ids = vec![0u32; cap];
+            let mut wts = vec![0.0f32; cap];
+            let mut len = 0u16;
+            let mut pushed: Vec<(u32, f32)> = Vec::new();
+            for id in 0..m as u32 {
+                let w = g.f32_unit();
+                wheap_push(&mut ids, &mut wts, &mut len, id, w);
+                pushed.push((id, w));
+            }
+            pushed.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let expect: std::collections::BTreeSet<u32> =
+                pushed.iter().take(cap).map(|p| p.0).collect();
+            let got: std::collections::BTreeSet<u32> =
+                ids[..len as usize].iter().copied().collect();
+            got == expect
+        });
+    }
+
+    #[test]
+    fn wheap_rejects_duplicates() {
+        let mut ids = vec![0u32; 4];
+        let mut wts = vec![0.0f32; 4];
+        let mut len = 0u16;
+        wheap_push(&mut ids, &mut wts, &mut len, 9, 0.5);
+        wheap_push(&mut ids, &mut wts, &mut len, 9, 0.1);
+        assert_eq!(len, 1);
+    }
+
+    #[test]
+    fn uniformity_smoke() {
+        // selecting cap-of-m via random weights should be ~uniform:
+        // every id selected with probability cap/m
+        let cap = 4;
+        let m = 16u32;
+        let trials = 4000;
+        let mut counts = vec![0usize; m as usize];
+        let mut rng = crate::util::rng::Pcg64::new(77);
+        for _ in 0..trials {
+            let mut ids = vec![0u32; cap];
+            let mut wts = vec![0.0f32; cap];
+            let mut len = 0u16;
+            for id in 0..m {
+                wheap_push(&mut ids, &mut wts, &mut len, id, rng.gen_f32());
+            }
+            for &id in &ids[..len as usize] {
+                counts[id as usize] += 1;
+            }
+        }
+        let expect = trials * cap / m as usize; // 1000
+        for (id, &c) in counts.iter().enumerate() {
+            assert!(
+                (c as f64 - expect as f64).abs() < expect as f64 * 0.15,
+                "id {id}: count {c} vs expect {expect}"
+            );
+        }
+    }
+}

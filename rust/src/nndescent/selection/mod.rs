@@ -1,0 +1,181 @@
+//! Selection step (paper §3.1): build per-node bounded new/old
+//! candidate lists from forward + reverse edges of the current graph.
+//!
+//! Three interchangeable implementations, in increasing order of the
+//! paper's optimization story:
+//!
+//! * [`naive`] — the three-pass reverse → union → sample composition
+//!   from Dong et al.'s pseudocode, with unbounded intermediate reverse
+//!   lists (`nndescent-full` baseline).
+//! * [`heap`] — PyNNDescent's fused single pass: one random weight per
+//!   edge endpoint, bounded random-weight heaps (≈16× over naive).
+//! * [`turbo`] — the paper's contribution: no heaps; the graph already
+//!   tracks |N(u)| (reverse-degree counters maintained on every update),
+//!   so each edge endpoint is sampled with probability `cap/|N(u)|`
+//!   into a plain array (≈1.12× over heap).
+//!
+//! All three have the same output contract: new/old lists bounded by
+//! `cap`, duplicates excluded, and the incremental-search flag cleared
+//! for forward neighbors that were sampled into their node's new list.
+
+pub mod heap;
+pub mod naive;
+pub mod turbo;
+
+use super::candidates::CandidateLists;
+use crate::cachesim::trace::Tracer;
+use crate::config::schema::SelectionKind;
+use crate::graph::KnnGraph;
+use crate::util::rng::Pcg64;
+
+/// Stateful selector (owns scratch reused across iterations).
+#[derive(Debug)]
+pub enum Selector {
+    Naive(naive::NaiveSelector),
+    Heap(heap::HeapSelector),
+    Turbo(turbo::TurboSelector),
+}
+
+impl Selector {
+    /// Construct a selector for `n` nodes with candidate capacity `cap`.
+    pub fn new(kind: SelectionKind, n: usize, cap: usize) -> Self {
+        match kind {
+            SelectionKind::Naive => Self::Naive(naive::NaiveSelector::new(n)),
+            SelectionKind::Heap => Self::Heap(heap::HeapSelector::new(n, cap)),
+            SelectionKind::Turbo => Self::Turbo(turbo::TurboSelector::new()),
+        }
+    }
+
+    /// Run one selection pass: fill `out` and clear sampled flags.
+    pub fn select<T: Tracer>(
+        &mut self,
+        graph: &mut KnnGraph,
+        rng: &mut Pcg64,
+        out: &mut CandidateLists,
+        tracer: &mut T,
+    ) {
+        match self {
+            Self::Naive(s) => s.select(graph, rng, out, tracer),
+            Self::Heap(s) => s.select(graph, rng, out, tracer),
+            Self::Turbo(s) => s.select(graph, rng, out, tracer),
+        }
+    }
+
+    pub fn kind(&self) -> SelectionKind {
+        match self {
+            Self::Naive(_) => SelectionKind::Naive,
+            Self::Heap(_) => SelectionKind::Heap,
+            Self::Turbo(_) => SelectionKind::Turbo,
+        }
+    }
+}
+
+/// Shared post-pass: clear the `new` flag of every forward neighbor that
+/// made it into its node's sampled new list (it will be evaluated this
+/// iteration; unsampled neighbors stay flagged for the next round).
+pub(crate) fn clear_sampled_flags<T: Tracer>(graph: &mut KnnGraph, cands: &CandidateLists, tracer: &mut T) {
+    let n = graph.n();
+    let k = graph.k();
+    for u in 0..n {
+        tracer.read(cands.new_ids_addr() + u * cands.cap() * 4, (cands.new_len(u) * 4) as u32);
+        for i in 0..k {
+            let v = graph.ids(u)[i];
+            if graph.flags(u)[i] && cands.new_slice(u).contains(&v) {
+                graph.clear_flag(u, i);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::trace::NoTracer;
+    use crate::dataset::synth::SynthGaussian;
+    use crate::nndescent::init::init_random;
+    use crate::util::counters::FlopCounter;
+
+    fn initialized(n: usize, k: usize, seed: u64) -> (KnnGraph, crate::dataset::AlignedMatrix) {
+        let data = SynthGaussian::single(n, 8, seed).generate();
+        let mut graph = KnnGraph::new(n, k);
+        let mut rng = Pcg64::new(seed);
+        init_random(&mut graph, &data, &mut rng, &mut FlopCounter::new(8), &mut NoTracer);
+        (graph, data)
+    }
+
+    /// Contract checks shared by all three selectors.
+    fn check_contract(kind: SelectionKind) {
+        let (mut graph, _) = initialized(300, 10, 42);
+        let cap = 5;
+        let mut sel = Selector::new(kind, 300, cap);
+        let mut out = CandidateLists::new(300, cap);
+        let mut rng = Pcg64::new(9);
+        sel.select(&mut graph, &mut rng, &mut out, &mut NoTracer);
+
+        let mut total_new = 0usize;
+        for u in 0..300 {
+            let newc = out.new_slice(u);
+            let oldc = out.old_slice(u);
+            assert!(newc.len() <= cap && oldc.len() <= cap, "{kind:?}: cap respected");
+            total_new += newc.len();
+            // no self references
+            assert!(!newc.contains(&(u as u32)) && !oldc.contains(&(u as u32)), "{kind:?}: self in list");
+            // no duplicates within a list
+            for list in [newc, oldc] {
+                let mut s = list.to_vec();
+                s.sort_unstable();
+                let before = s.len();
+                s.dedup();
+                assert_eq!(before, s.len(), "{kind:?}: duplicates in node {u}: {list:?}");
+            }
+            // every new candidate of u must be graph-adjacent to u in
+            // some direction (forward or reverse edge)
+            for &v in newc {
+                let fwd = graph.ids(u).contains(&v);
+                let rev = graph.ids(v as usize).contains(&(u as u32));
+                assert!(fwd || rev, "{kind:?}: candidate {v} of {u} not adjacent");
+            }
+        }
+        assert!(total_new > 0, "{kind:?}: first-round selection must produce new candidates");
+        // flags: sampled forward neighbors cleared
+        for u in 0..300 {
+            let sampled = out.new_slice(u);
+            for (i, &v) in graph.ids(u).iter().enumerate() {
+                if sampled.contains(&v) {
+                    assert!(!graph.flags(u)[i], "{kind:?}: sampled flag not cleared (node {u})");
+                }
+            }
+        }
+        graph.validate().unwrap();
+    }
+
+    #[test]
+    fn naive_contract() {
+        check_contract(SelectionKind::Naive);
+    }
+
+    #[test]
+    fn heap_contract() {
+        check_contract(SelectionKind::Heap);
+    }
+
+    #[test]
+    fn turbo_contract() {
+        check_contract(SelectionKind::Turbo);
+    }
+
+    #[test]
+    fn second_round_has_old_candidates() {
+        for kind in [SelectionKind::Naive, SelectionKind::Heap, SelectionKind::Turbo] {
+            let (mut graph, _) = initialized(200, 8, 5);
+            let mut sel = Selector::new(kind, 200, 4);
+            let mut out = CandidateLists::new(200, 4);
+            let mut rng = Pcg64::new(11);
+            sel.select(&mut graph, &mut rng, &mut out, &mut NoTracer);
+            // after round 1 some flags are cleared → round 2 must see "old"
+            sel.select(&mut graph, &mut rng, &mut out, &mut NoTracer);
+            let total_old: usize = (0..200).map(|u| out.old_slice(u).len()).sum();
+            assert!(total_old > 0, "{kind:?}: no old candidates in round 2");
+        }
+    }
+}

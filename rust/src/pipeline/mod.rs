@@ -1,0 +1,148 @@
+//! End-to-end pipeline orchestration: config → dataset → graph build →
+//! evaluation → report. This is the layer the CLI, the examples, and
+//! the benches share, so every entry point exercises the same code path.
+
+pub mod report;
+
+pub use report::RunReport;
+
+use crate::baseline::brute::brute_force_knn_sampled;
+use crate::config::schema::ComputeKind;
+use crate::config::ExperimentConfig;
+use crate::dataset::{self, Dataset};
+use crate::metrics::recall::recall_against_truth;
+use crate::nndescent::{NnDescent, Params};
+use crate::runtime::PjrtEngine;
+use crate::cachesim::trace::NoTracer;
+
+/// Options controlling the evaluation stage.
+#[derive(Debug, Clone, Copy)]
+pub struct EvalOptions {
+    /// Number of sampled ground-truth queries (0 = skip recall).
+    pub recall_queries: usize,
+    /// Seed for query sampling.
+    pub seed: u64,
+}
+
+impl Default for EvalOptions {
+    fn default() -> Self {
+        Self { recall_queries: 500, seed: 0xE7A1 }
+    }
+}
+
+/// Run a full experiment from a parsed config.
+pub fn run_experiment(cfg: &ExperimentConfig, eval: EvalOptions) -> anyhow::Result<RunReport> {
+    Ok(run_experiment_full(cfg, eval)?.0)
+}
+
+/// Like [`run_experiment`] but also returns the build result (graph,
+/// permutation, stats) and the materialized dataset, for callers that
+/// persist or serve the graph.
+pub fn run_experiment_full(
+    cfg: &ExperimentConfig,
+    eval: EvalOptions,
+) -> anyhow::Result<(RunReport, crate::nndescent::BuildResult, Dataset)> {
+    let ds = dataset::from_spec(&cfg.dataset)?;
+    let (report, result) =
+        run_on_dataset(&ds, &Params::from(&cfg.run), &cfg.run.artifacts_dir, eval, &cfg.name)?;
+    Ok((report, result, ds))
+}
+
+/// Run on an already-materialized dataset.
+pub fn run_on_dataset(
+    ds: &Dataset,
+    params: &Params,
+    artifacts_dir: &str,
+    eval: EvalOptions,
+    name: &str,
+) -> anyhow::Result<(RunReport, crate::nndescent::BuildResult)> {
+    crate::log_info!(
+        "pipeline `{name}`: dataset {} (n={}, d={}), selection={}, compute={}, reorder={}",
+        ds.name,
+        ds.n(),
+        ds.dim(),
+        params.selection.name(),
+        params.compute.name(),
+        params.reorder
+    );
+
+    let nnd = NnDescent::new(params.clone());
+    let result = if params.compute == ComputeKind::Pjrt {
+        let mut engine = PjrtEngine::open(artifacts_dir)?;
+        let r = nnd.build_with_engine(&ds.data, &mut engine, &mut NoTracer);
+        crate::log_info!(
+            "pjrt engine: {} executions, {} rows gathered",
+            engine.executions,
+            engine.rows_gathered
+        );
+        r
+    } else {
+        nnd.build(&ds.data)
+    };
+
+    let recall = if eval.recall_queries > 0 {
+        let truth =
+            brute_force_knn_sampled(&ds.data, params.k, eval.recall_queries, eval.seed);
+        Some(recall_against_truth(&result, &truth))
+    } else {
+        None
+    };
+
+    let report = RunReport::new(name, ds, params, &result, recall);
+    Ok((report, result))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::SelectionKind;
+    use crate::config::DatasetSpec;
+
+    #[test]
+    fn pipeline_end_to_end_native() {
+        let cfg = ExperimentConfig {
+            name: "test-pipeline".into(),
+            dataset: DatasetSpec::Clustered { n: 400, dim: 8, clusters: 4, seed: 3 },
+            run: crate::config::RunConfig {
+                k: 8,
+                max_iters: 10,
+                ..Default::default()
+            },
+        };
+        let report = run_experiment(&cfg, EvalOptions { recall_queries: 50, seed: 1 }).unwrap();
+        assert_eq!(report.n, 400);
+        assert!(report.recall.unwrap() > 0.9, "recall {:?}", report.recall);
+        assert!(report.total_secs > 0.0);
+        let text = report.render();
+        assert!(text.contains("test-pipeline"));
+        assert!(text.contains("recall"));
+    }
+
+    #[test]
+    fn pipeline_skips_recall_when_disabled() {
+        let cfg = ExperimentConfig {
+            name: "no-recall".into(),
+            dataset: DatasetSpec::Gaussian { n: 200, dim: 8, single: true, seed: 1 },
+            run: crate::config::RunConfig { k: 5, ..Default::default() },
+        };
+        let report = run_experiment(&cfg, EvalOptions { recall_queries: 0, seed: 1 }).unwrap();
+        assert!(report.recall.is_none());
+    }
+
+    #[test]
+    fn reorder_flag_flows_through() {
+        let cfg = ExperimentConfig {
+            name: "reorder".into(),
+            dataset: DatasetSpec::Clustered { n: 300, dim: 8, clusters: 4, seed: 5 },
+            run: crate::config::RunConfig {
+                k: 6,
+                reorder: true,
+                selection: SelectionKind::Turbo,
+                ..Default::default()
+            },
+        };
+        let report = run_experiment(&cfg, EvalOptions { recall_queries: 30, seed: 2 }).unwrap();
+        assert!(report.reordered);
+        assert!(report.recall.unwrap() > 0.85);
+    }
+}

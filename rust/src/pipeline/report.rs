@@ -1,0 +1,153 @@
+//! Run reports: the structured result of one pipeline execution, with
+//! human-readable and machine-readable (TSV) renderings.
+
+use crate::dataset::Dataset;
+use crate::nndescent::driver::BuildResult;
+use crate::nndescent::Params;
+use crate::util::counters::IterStats;
+
+/// Everything EXPERIMENTS.md records about one run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub name: String,
+    pub dataset: String,
+    pub n: usize,
+    pub dim: usize,
+    pub k: usize,
+    pub selection: &'static str,
+    pub compute: &'static str,
+    pub reordered: bool,
+    pub iterations: usize,
+    pub total_secs: f64,
+    pub dist_evals: u64,
+    pub flops: u64,
+    pub updates: u64,
+    pub recall: Option<f64>,
+    pub per_iter: Vec<IterStats>,
+}
+
+impl RunReport {
+    pub fn new(
+        name: &str,
+        ds: &Dataset,
+        params: &Params,
+        result: &BuildResult,
+        recall: Option<f64>,
+    ) -> Self {
+        Self {
+            name: name.to_string(),
+            dataset: ds.name.clone(),
+            n: ds.n(),
+            dim: ds.dim(),
+            k: params.k,
+            selection: params.selection.name(),
+            compute: params.compute.name(),
+            reordered: result.reordering.is_some(),
+            iterations: result.iterations,
+            total_secs: result.total_secs,
+            dist_evals: result.stats.dist_evals,
+            flops: result.stats.flops(),
+            updates: result.total_updates(),
+            recall,
+            per_iter: result.per_iter.clone(),
+        }
+    }
+
+    /// Human-readable multi-line rendering.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("run       : {}\n", self.name));
+        s.push_str(&format!("dataset   : {} (n={}, d={})\n", self.dataset, self.n, self.dim));
+        s.push_str(&format!(
+            "variant   : k={} selection={} compute={} reorder={}\n",
+            self.k, self.selection, self.compute, self.reordered
+        ));
+        s.push_str(&format!(
+            "result    : {} iterations, {:.3}s total, {} dist evals ({:.2e} flops), {} updates\n",
+            self.iterations, self.total_secs, self.dist_evals, self.flops as f64, self.updates
+        ));
+        if let Some(r) = self.recall {
+            s.push_str(&format!("recall    : {:.4}\n", r));
+        }
+        s.push_str("per-iter  : iter  select      compute     reorder     evals       updates\n");
+        for it in &self.per_iter {
+            s.push_str(&format!(
+                "            {:<5} {:<11.4} {:<11.4} {:<11.4} {:<11} {}\n",
+                it.iter, it.select_secs, it.compute_secs, it.reorder_secs, it.dist_evals, it.updates
+            ));
+        }
+        s
+    }
+
+    /// Single TSV row (header via [`RunReport::tsv_header`]).
+    pub fn tsv_row(&self) -> String {
+        format!(
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.4}\t{}\t{}\t{}\t{}",
+            self.name,
+            self.dataset,
+            self.n,
+            self.dim,
+            self.k,
+            self.selection,
+            self.compute,
+            self.reordered,
+            self.iterations,
+            self.total_secs,
+            self.dist_evals,
+            self.flops,
+            self.updates,
+            self.recall.map(|r| format!("{r:.4}")).unwrap_or_else(|| "-".into()),
+        )
+    }
+
+    pub fn tsv_header() -> &'static str {
+        "name\tdataset\tn\tdim\tk\tselection\tcompute\treordered\titerations\tsecs\tdist_evals\tflops\tupdates\trecall"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> RunReport {
+        RunReport {
+            name: "r".into(),
+            dataset: "d".into(),
+            n: 10,
+            dim: 8,
+            k: 5,
+            selection: "turbo",
+            compute: "blocked",
+            reordered: true,
+            iterations: 3,
+            total_secs: 1.5,
+            dist_evals: 1000,
+            flops: 23000,
+            updates: 50,
+            recall: Some(0.99),
+            per_iter: vec![IterStats { iter: 0, updates: 50, ..Default::default() }],
+        }
+    }
+
+    #[test]
+    fn render_contains_key_fields() {
+        let text = sample().render();
+        for needle in ["turbo", "blocked", "0.9900", "iterations", "per-iter"] {
+            assert!(text.contains(needle), "missing {needle} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn tsv_row_matches_header_arity() {
+        let header_cols = RunReport::tsv_header().split('\t').count();
+        let row_cols = sample().tsv_row().split('\t').count();
+        assert_eq!(header_cols, row_cols);
+    }
+
+    #[test]
+    fn missing_recall_renders_dash() {
+        let mut r = sample();
+        r.recall = None;
+        assert!(r.tsv_row().ends_with("\t-"));
+    }
+}

@@ -1,0 +1,167 @@
+//! Roofline model (paper §4.2, Fig 3).
+//!
+//! Performance P = W/T [flops/cycle] is bounded by min(π, β·I) where
+//! I = W/Q is operational intensity, π the peak compute rate and β the
+//! memory bandwidth in bytes/cycle. The paper measures:
+//!
+//! * π = 24 flops/cycle (8-wide FMA + 8-wide SUB mix on Coffee Lake),
+//! * β = 4.77 bytes/cycle (STREAM),
+//! * W from counted distance evaluations × (3d−1),
+//! * Q from cachegrind LL misses × line size.
+//!
+//! We use the same constants by default (the *shape* of the plot — which
+//! side of the ridge a configuration sits on — is machine-independent)
+//! and derive cycles from wall time at a configurable nominal clock.
+
+use crate::cachesim::CacheStats;
+use crate::util::counters::FlopCounter;
+use crate::util::timer::DEFAULT_NOMINAL_HZ;
+
+/// Machine model for the roofline plot.
+#[derive(Debug, Clone, Copy)]
+pub struct Machine {
+    /// Peak performance π [flops/cycle].
+    pub pi: f64,
+    /// Memory bandwidth β [bytes/cycle].
+    pub beta: f64,
+    /// Clock used to convert seconds → cycles.
+    pub nominal_hz: f64,
+    /// Cache line size [bytes] for Q accounting.
+    pub line: usize,
+}
+
+impl Default for Machine {
+    fn default() -> Self {
+        Self { pi: 24.0, beta: 4.77, nominal_hz: DEFAULT_NOMINAL_HZ, line: 64 }
+    }
+}
+
+/// One measured point on the roofline plot.
+#[derive(Debug, Clone)]
+pub struct RooflinePoint {
+    pub label: String,
+    /// Work W [flops].
+    pub flops: f64,
+    /// Traffic Q [bytes] (from simulated LL misses + writebacks).
+    pub bytes: f64,
+    /// Measured runtime [seconds].
+    pub secs: f64,
+}
+
+impl RooflinePoint {
+    /// Build from the crate's counters.
+    pub fn from_counters(
+        label: impl Into<String>,
+        counter: &FlopCounter,
+        cache: &CacheStats,
+        writebacks: u64,
+        secs: f64,
+        machine: &Machine,
+    ) -> Self {
+        Self {
+            label: label.into(),
+            flops: counter.flops() as f64,
+            bytes: cache.dram_bytes(machine.line, writebacks) as f64,
+            secs,
+        }
+    }
+
+    /// Operational intensity I = W/Q [flops/byte].
+    pub fn intensity(&self) -> f64 {
+        if self.bytes == 0.0 {
+            f64::INFINITY
+        } else {
+            self.flops / self.bytes
+        }
+    }
+
+    /// Achieved performance [flops/cycle] at the machine's clock.
+    pub fn perf(&self, machine: &Machine) -> f64 {
+        let cycles = self.secs * machine.nominal_hz;
+        if cycles == 0.0 {
+            0.0
+        } else {
+            self.flops / cycles
+        }
+    }
+
+    /// Roofline bound at this point's intensity: min(π, β·I).
+    pub fn bound(&self, machine: &Machine) -> f64 {
+        machine.pi.min(machine.beta * self.intensity())
+    }
+
+    /// Whether the bound at this intensity is the memory slope.
+    pub fn memory_bound(&self, machine: &Machine) -> bool {
+        machine.beta * self.intensity() < machine.pi
+    }
+
+    /// Achieved fraction of the applicable roofline (≤ 1 in a sound
+    /// measurement; > 1 indicates the model's Q or clock is off).
+    pub fn efficiency(&self, machine: &Machine) -> f64 {
+        let b = self.bound(machine);
+        if b == 0.0 {
+            0.0
+        } else {
+            self.perf(machine) / b
+        }
+    }
+}
+
+/// The ridge point I* = π/β where the roofline transitions from
+/// memory- to compute-bound.
+pub fn ridge_intensity(machine: &Machine) -> f64 {
+    machine.pi / machine.beta
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine() -> Machine {
+        Machine::default()
+    }
+
+    #[test]
+    fn ridge_matches_paper_constants() {
+        // π/β = 24/4.77 ≈ 5.03 flops/byte
+        let r = ridge_intensity(&machine());
+        assert!((r - 5.031).abs() < 0.01, "ridge {r}");
+    }
+
+    #[test]
+    fn low_intensity_is_memory_bound() {
+        let p = RooflinePoint { label: "d8".into(), flops: 1e9, bytes: 1e9, secs: 1.0 };
+        assert!(p.memory_bound(&machine()), "I=1 < ridge ⇒ memory bound");
+        assert!((p.bound(&machine()) - 4.77).abs() < 1e-9);
+    }
+
+    #[test]
+    fn high_intensity_is_compute_bound() {
+        let p = RooflinePoint { label: "d256".into(), flops: 1e12, bytes: 1e9, secs: 1.0 };
+        assert!(!p.memory_bound(&machine()), "I=1000 ⇒ compute bound");
+        assert_eq!(p.bound(&machine()), 24.0);
+    }
+
+    #[test]
+    fn perf_and_efficiency() {
+        let m = Machine { pi: 10.0, beta: 1.0, nominal_hz: 1e9, line: 64 };
+        // 5e9 flops in 1s at 1 GHz = 5 flops/cycle; I = 50 ⇒ compute bound (10)
+        let p = RooflinePoint { label: "x".into(), flops: 5e9, bytes: 1e8, secs: 1.0 };
+        assert!((p.perf(&m) - 5.0).abs() < 1e-9);
+        assert!((p.efficiency(&m) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dimension_raises_intensity() {
+        // the paper's §4.2 observation: increasing d by 32× increases W
+        // by 32× but LL misses by less ⇒ intensity rises.
+        let d8 = RooflinePoint { label: "d8".into(), flops: 23.0 * 1e6, bytes: 64.0 * 122e6, secs: 1.0 };
+        let d256 = RooflinePoint {
+            label: "d256".into(),
+            flops: 767.0 * 1e6,
+            bytes: 64.0 * 450e6,
+            secs: 1.0,
+        };
+        assert!(d256.intensity() > d8.intensity());
+    }
+}

@@ -1,0 +1,170 @@
+//! Artifact manifest parsing and lazy executable compilation.
+
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One manifest line.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ManifestEntry {
+    pub kind: String,
+    /// Shape args in manifest order (pairwise: [B, D]; tilescan: [M, N, D]).
+    pub dims: Vec<usize>,
+    pub file: String,
+}
+
+/// Lookup key for a compiled executable.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ArtifactKey {
+    pub kind: &'static str,
+    pub dims: Vec<usize>,
+}
+
+/// Loads `manifest.tsv`, compiles artifacts on demand, and caches the
+/// resulting PJRT executables per shape.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    entries: Vec<ManifestEntry>,
+    client: xla::PjRtClient,
+    cache: HashMap<ArtifactKey, xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactStore {
+    /// Open a store rooted at `dir` (must contain `manifest.tsv`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.tsv");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest.display()
+            )
+        })?;
+        let entries = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { dir, entries, client, cache: HashMap::new() })
+    }
+
+    /// All manifest entries.
+    pub fn entries(&self) -> &[ManifestEntry] {
+        &self.entries
+    }
+
+    /// The PJRT client (platform introspection, tests).
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Pairwise artifact shapes available, sorted by (D, B).
+    pub fn pairwise_shapes(&self) -> Vec<(usize, usize)> {
+        let mut v: Vec<(usize, usize)> = self
+            .entries
+            .iter()
+            .filter(|e| e.kind == "pairwise")
+            .map(|e| (e.dims[0], e.dims[1]))
+            .collect();
+        v.sort_by_key(|&(b, d)| (d, b));
+        v
+    }
+
+    /// Smallest pairwise artifact with `B >= m` and `D == d_pad`.
+    pub fn find_pairwise(&self, m: usize, d_pad: usize) -> Option<(usize, usize)> {
+        self.pairwise_shapes()
+            .into_iter()
+            .filter(|&(b, d)| d == d_pad && b >= m)
+            .min_by_key(|&(b, _)| b)
+    }
+
+    /// Get (compiling + caching on first use) the executable for a key.
+    pub fn executable(&mut self, key: &ArtifactKey) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(key) {
+            let entry = self
+                .entries
+                .iter()
+                .find(|e| e.kind == key.kind && e.dims == key.dims)
+                .ok_or_else(|| {
+                    anyhow::anyhow!(
+                        "no artifact `{}` with dims {:?} in {} — regenerate with \
+                         `cd python && python -m compile.aot` and the right shape list",
+                        key.kind,
+                        key.dims,
+                        self.dir.display()
+                    )
+                })?;
+            let path = self.dir.join(&entry.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling {}", entry.file))?;
+            self.cache.insert(key.clone(), exe);
+        }
+        Ok(self.cache.get(key).unwrap())
+    }
+
+    /// Number of compiled executables held.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+fn parse_manifest(text: &str) -> Result<Vec<ManifestEntry>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let parts: Vec<&str> = line.split('\t').collect();
+        if parts.len() < 3 {
+            bail!("manifest line {}: expected kind<TAB>dims...<TAB>file, got `{line}`", i + 1);
+        }
+        let kind = parts[0].to_string();
+        let file = parts[parts.len() - 1].to_string();
+        let dims = parts[1..parts.len() - 1]
+            .iter()
+            .map(|s| s.parse::<usize>().map_err(|_| anyhow::anyhow!("bad dim `{s}` at line {}", i + 1)))
+            .collect::<Result<Vec<usize>>>()?;
+        let expected = match kind.as_str() {
+            "pairwise" => 2,
+            "tilescan" => 3,
+            _ => dims.len(), // future kinds: accept as-is
+        };
+        if dims.len() != expected {
+            bail!("manifest line {}: `{kind}` expects {expected} dims, got {}", i + 1, dims.len());
+        }
+        out.push(ManifestEntry { kind, dims, file });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_lines() {
+        let text = "pairwise\t64\t256\tpairwise_b64_d256.hlo.txt\n\
+                    tilescan\t128\t1024\t64\ttilescan.hlo.txt\n\
+                    # comment\n\n";
+        let entries = parse_manifest(text).unwrap();
+        assert_eq!(entries.len(), 2);
+        assert_eq!(entries[0].kind, "pairwise");
+        assert_eq!(entries[0].dims, vec![64, 256]);
+        assert_eq!(entries[1].dims, vec![128, 1024, 64]);
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(parse_manifest("pairwise\t64").is_err());
+        assert!(parse_manifest("pairwise\tx\t8\tf.txt").is_err());
+        assert!(parse_manifest("pairwise\t64\t8\t16\tf.txt").is_err(), "wrong arity");
+    }
+
+    // Store-level tests that need real artifacts live in
+    // rust/tests/runtime_integration.rs (they require `make artifacts`).
+}

@@ -1,0 +1,175 @@
+//! PJRT-backed pairwise engine and tile scanner.
+//!
+//! [`PjrtEngine`] implements the compute step's [`PairwiseEngine`]
+//! contract by gathering candidate rows into a fixed (B, D) batch,
+//! executing the AOT-compiled Pallas `pairwise` artifact, and scattering
+//! the (B, B) result into the caller's [`PairwiseBuf`]. Padding rows are
+//! zero; their pairs are never read back.
+//!
+//! [`TileScanner`] drives the `tilescan` artifact for bulk cross-set
+//! distances (PJRT-side brute force / ground truth).
+
+use super::artifacts::{ArtifactKey, ArtifactStore};
+use crate::cachesim::trace::Tracer;
+use crate::dataset::AlignedMatrix;
+use crate::distance::blocked::PairwiseBuf;
+use crate::nndescent::compute::PairwiseEngine;
+use anyhow::{Context, Result};
+
+/// Pairwise-distance engine executing the AOT Pallas kernel via PJRT.
+pub struct PjrtEngine {
+    store: ArtifactStore,
+    /// Gather buffer reused across calls (B × D floats).
+    batch: Vec<f32>,
+    /// Statistics: number of artifact executions.
+    pub executions: u64,
+    /// Statistics: total rows gathered.
+    pub rows_gathered: u64,
+}
+
+impl PjrtEngine {
+    /// Open over an artifact directory (usually "artifacts").
+    pub fn open(dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(Self { store: ArtifactStore::open(dir)?, batch: Vec::new(), executions: 0, rows_gathered: 0 })
+    }
+
+    pub fn store(&self) -> &ArtifactStore {
+        &self.store
+    }
+
+    /// Execute the pairwise artifact for `ids`; fills `out[i][j]` for all
+    /// i≠j < m. Errors if no artifact covers (m, dim_pad).
+    pub fn pairwise_checked(
+        &mut self,
+        data: &AlignedMatrix,
+        ids: &[u32],
+        out: &mut PairwiseBuf,
+    ) -> Result<u64> {
+        let m = ids.len();
+        out.reset(m);
+        if m < 2 {
+            return Ok(0);
+        }
+        let d = data.dim_pad();
+        let (b, _) = self.store.find_pairwise(m, d).ok_or_else(|| {
+            anyhow::anyhow!(
+                "no pairwise artifact for candidate set m={m}, d_pad={d}; \
+                 available: {:?}",
+                self.store.pairwise_shapes()
+            )
+        })?;
+
+        // gather rows into the padded batch
+        self.batch.clear();
+        self.batch.resize(b * d, 0.0);
+        for (i, &id) in ids.iter().enumerate() {
+            self.batch[i * d..(i + 1) * d].copy_from_slice(data.row(id as usize));
+        }
+        self.rows_gathered += m as u64;
+
+        let key = ArtifactKey { kind: "pairwise", dims: vec![b, d] };
+        let exe = self.store.executable(&key)?;
+        let x = xla::Literal::vec1(&self.batch).reshape(&[b as i64, d as i64])?;
+        let result = exe.execute::<xla::Literal>(&[x])?[0][0]
+            .to_literal_sync()
+            .context("fetching pairwise result")?;
+        self.executions += 1;
+        let tuple = result.to_tuple1().context("unwrapping 1-tuple result")?;
+        let dists: Vec<f32> = tuple.to_vec()?;
+        debug_assert_eq!(dists.len(), b * b);
+
+        for i in 0..m {
+            for j in (i + 1)..m {
+                // symmetric kernel output; store canonical i<j entry
+                out.put(i, j, dists[i * b + j]);
+            }
+        }
+        // the executable evaluated the full b×b block
+        Ok((b * (b - 1) / 2) as u64)
+    }
+}
+
+impl PairwiseEngine for PjrtEngine {
+    fn pairwise<T: Tracer>(
+        &mut self,
+        data: &AlignedMatrix,
+        ids: &[u32],
+        _active: usize, // fixed-shape batch computes the full block anyway
+        out: &mut PairwiseBuf,
+        tracer: &mut T,
+    ) -> u64 {
+        // trace: every candidate row is read once into the batch
+        let rb = data.row_bytes() as u32;
+        for &id in ids {
+            tracer.read(data.base_addr() + id as usize * data.row_bytes(), rb);
+        }
+        self.pairwise_checked(data, ids, out)
+            .expect("PJRT pairwise execution failed (see artifact manifest)")
+    }
+
+    fn is_blocked(&self) -> bool {
+        true
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Bulk cross-set distance scanner over the `tilescan` artifact.
+pub struct TileScanner {
+    store: ArtifactStore,
+    m: usize,
+    n: usize,
+    d: usize,
+}
+
+impl TileScanner {
+    /// Open for a fixed artifact shape (M queries × N corpus × D).
+    pub fn open(dir: impl AsRef<std::path::Path>, m: usize, n: usize, d: usize) -> Result<Self> {
+        let store = ArtifactStore::open(dir)?;
+        Ok(Self { store, m, n, d })
+    }
+
+    pub fn shape(&self) -> (usize, usize, usize) {
+        (self.m, self.n, self.d)
+    }
+
+    /// Distances from `queries` (≤ M rows) to `corpus` (≤ N rows), both
+    /// zero-padded to the artifact shape. Returns a row-major
+    /// `queries.len() × corpus.len()` matrix.
+    pub fn scan(
+        &mut self,
+        data: &AlignedMatrix,
+        queries: &[u32],
+        corpus: &[u32],
+    ) -> Result<Vec<f32>> {
+        anyhow::ensure!(queries.len() <= self.m, "too many queries");
+        anyhow::ensure!(corpus.len() <= self.n, "corpus tile too large");
+        anyhow::ensure!(data.dim_pad() == self.d, "dim mismatch");
+        let (m, n, d) = (self.m, self.n, self.d);
+        let mut qbuf = vec![0f32; m * d];
+        for (i, &q) in queries.iter().enumerate() {
+            qbuf[i * d..(i + 1) * d].copy_from_slice(data.row(q as usize));
+        }
+        let mut xbuf = vec![0f32; n * d];
+        for (i, &v) in corpus.iter().enumerate() {
+            xbuf[i * d..(i + 1) * d].copy_from_slice(data.row(v as usize));
+        }
+        let key = ArtifactKey { kind: "tilescan", dims: vec![m, n, d] };
+        let exe = self.store.executable(&key)?;
+        let q = xla::Literal::vec1(&qbuf).reshape(&[m as i64, d as i64])?;
+        let x = xla::Literal::vec1(&xbuf).reshape(&[n as i64, d as i64])?;
+        let result = exe.execute::<xla::Literal>(&[q, x])?[0][0].to_literal_sync()?;
+        let full: Vec<f32> = result.to_tuple1()?.to_vec()?;
+        debug_assert_eq!(full.len(), m * n);
+        let mut out = Vec::with_capacity(queries.len() * corpus.len());
+        for qi in 0..queries.len() {
+            out.extend_from_slice(&full[qi * n..qi * n + corpus.len()]);
+        }
+        Ok(out)
+    }
+}
+
+// Integration tests (require `make artifacts`) live in
+// rust/tests/runtime_integration.rs.

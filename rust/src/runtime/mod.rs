@@ -1,0 +1,14 @@
+//! PJRT runtime: load the AOT-compiled Pallas/XLA artifacts and execute
+//! them from the L3 hot path. Python never runs here — the artifacts
+//! are plain HLO text produced once by `make artifacts`.
+//!
+//! Pipeline: `PjRtClient::cpu()` → [`ArtifactStore`] parses
+//! `artifacts/manifest.tsv` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` (lazily, cached per
+//! shape) → [`PjrtEngine`]/[`TileScanner`] execute with gathered inputs.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{ArtifactKey, ArtifactStore, ManifestEntry};
+pub use engine::{PjrtEngine, TileScanner};

@@ -1,0 +1,283 @@
+//! Greedy beam search over the K-NN graph.
+
+use crate::dataset::AlignedMatrix;
+use crate::distance::sq_l2_unrolled;
+use crate::graph::heap::EMPTY_ID;
+use crate::graph::KnnGraph;
+use crate::util::rng::Pcg64;
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+/// Search-time knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SearchParams {
+    /// Candidate-pool width (≥ k); larger = better recall, slower.
+    pub ef: usize,
+    /// Number of entry points kept after probing.
+    pub seeds: usize,
+    /// Number of random probe evaluations used to pick entry points.
+    /// Defaults to `0`, meaning `max(32, 4·√n)` at query time. On
+    /// clustered data the K-NN graph has (almost) no cross-cluster
+    /// edges, so beam search cannot escape a wrong entry cluster —
+    /// probing restores a high chance of starting near the query.
+    pub probes: usize,
+    /// Seed for entry-point sampling (deterministic queries).
+    pub rng_seed: u64,
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        Self { ef: 64, seeds: 8, probes: 0, rng_seed: 0x5EA7C4 }
+    }
+}
+
+/// Per-query diagnostics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueryStats {
+    /// Distance evaluations performed.
+    pub dist_evals: u64,
+    /// Graph nodes expanded.
+    pub expansions: u64,
+}
+
+/// An immutable ANN index: the built graph + the (possibly reordered)
+/// data matrix it refers to.
+pub struct GraphIndex {
+    data: AlignedMatrix,
+    graph: KnnGraph,
+}
+
+/// Ordered f32 wrapper (distances are never NaN here).
+#[derive(PartialEq)]
+struct Ord32(f32);
+impl Eq for Ord32 {}
+impl PartialOrd for Ord32 {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ord32 {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.0.partial_cmp(&other.0).unwrap()
+    }
+}
+
+impl GraphIndex {
+    /// Build an index from a finished graph and its data (both in the
+    /// same id space — pass the *working* layout from a reordered build).
+    pub fn new(data: AlignedMatrix, graph: KnnGraph) -> Self {
+        assert_eq!(data.n(), graph.n(), "graph/data size mismatch");
+        Self { data, graph }
+    }
+
+    pub fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    pub fn graph(&self) -> &KnnGraph {
+        &self.graph
+    }
+
+    pub fn data(&self) -> &AlignedMatrix {
+        &self.data
+    }
+
+    /// k nearest neighbors of `query` (padded or logical length),
+    /// ascending by distance.
+    pub fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> (Vec<(u32, f32)>, QueryStats) {
+        let n = self.data.n();
+        let mut stats = QueryStats::default();
+        let ef = params.ef.max(k);
+
+        // pad query to the matrix's lane width
+        let q = self.pad_query(query);
+
+        let mut rng = Pcg64::new_stream(params.rng_seed, 0x5EED5);
+        let mut visited = vec![false; n];
+
+        // candidate frontier: min-heap by distance (Reverse for min)
+        let mut frontier: BinaryHeap<Reverse<(Ord32, u32)>> = BinaryHeap::new();
+        // result pool: max-heap by distance, bounded at ef
+        let mut pool: BinaryHeap<(Ord32, u32)> = BinaryHeap::new();
+
+        // Probe: evaluate a spread of random points, keep the best
+        // `seeds` as entry points (cheap: probes ≪ n, and every probe's
+        // distance is reused via the pool).
+        let probes = if params.probes > 0 {
+            params.probes
+        } else {
+            (4.0 * (n as f64).sqrt()) as usize
+        }
+        .clamp(32.min(n), n);
+        let mut probe_best: BinaryHeap<(Ord32, u32)> = BinaryHeap::new();
+        for _ in 0..probes {
+            let v = rng.gen_index(n) as u32;
+            if visited[v as usize] {
+                continue;
+            }
+            visited[v as usize] = true;
+            let d = sq_l2_unrolled(&q, self.data.row(v as usize));
+            stats.dist_evals += 1;
+            // feed the result pool too — probes are legitimate results
+            if pool.len() < ef {
+                pool.push((Ord32(d), v));
+            } else if d < pool.peek().unwrap().0 .0 {
+                pool.pop();
+                pool.push((Ord32(d), v));
+            }
+            if probe_best.len() < params.seeds.max(1) {
+                probe_best.push((Ord32(d), v));
+            } else if d < probe_best.peek().unwrap().0 .0 {
+                probe_best.pop();
+                probe_best.push((Ord32(d), v));
+            }
+        }
+        for (d, v) in probe_best {
+            frontier.push(Reverse((d, v)));
+        }
+
+        while let Some(Reverse((Ord32(d), u))) = frontier.pop() {
+            // stop when the closest frontier node is worse than the
+            // worst pooled result and the pool is full
+            if pool.len() >= ef && d > pool.peek().unwrap().0 .0 {
+                break;
+            }
+            stats.expansions += 1;
+            for &v in self.graph.ids(u as usize) {
+                if v == EMPTY_ID || visited[v as usize] {
+                    continue;
+                }
+                visited[v as usize] = true;
+                let dv = sq_l2_unrolled(&q, self.data.row(v as usize));
+                stats.dist_evals += 1;
+                if pool.len() < ef {
+                    pool.push((Ord32(dv), v));
+                    frontier.push(Reverse((Ord32(dv), v)));
+                } else if dv < pool.peek().unwrap().0 .0 {
+                    pool.pop();
+                    pool.push((Ord32(dv), v));
+                    frontier.push(Reverse((Ord32(dv), v)));
+                }
+            }
+        }
+
+        let mut results: Vec<(u32, f32)> = pool.into_iter().map(|(Ord32(d), v)| (v, d)).collect();
+        results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+        results.truncate(k);
+        (results, stats)
+    }
+
+    fn pad_query(&self, query: &[f32]) -> Vec<f32> {
+        let dp = self.data.dim_pad();
+        assert!(
+            query.len() == self.data.dim() || query.len() == dp,
+            "query length {} matches neither dim {} nor padded {}",
+            query.len(),
+            self.data.dim(),
+            dp
+        );
+        let mut q = vec![0f32; dp];
+        q[..query.len()].copy_from_slice(query);
+        q
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baseline::brute::brute_force_knn_sampled;
+    use crate::dataset::clustered::SynthClustered;
+    use crate::nndescent::{NnDescent, Params};
+
+    fn index(n: usize, dim: usize, seed: u64) -> (GraphIndex, AlignedMatrix) {
+        let (data, _) = SynthClustered::new(n, dim, 8, seed).generate_labeled();
+        let result = NnDescent::new(Params::default().with_k(16).with_seed(seed)).build(&data);
+        (GraphIndex::new(data.clone(), result.graph), data)
+    }
+
+    #[test]
+    fn query_with_database_points_finds_themselves() {
+        let (idx, data) = index(800, 16, 3);
+        for u in (0..800).step_by(97) {
+            let (res, _) = idx.search(data.row_logical(u), 5, &SearchParams::default());
+            assert_eq!(res[0].0 as usize, u, "self must be the top hit");
+            assert!(res[0].1 < 1e-6);
+        }
+    }
+
+    #[test]
+    fn heldout_queries_reach_high_recall() {
+        // build on the first 1000 points, query with fresh points from
+        // the same distribution; compare to brute force over the index set
+        let (data, _) = SynthClustered::new(1200, 16, 8, 9).generate_labeled();
+        let index_data = {
+            let rows: Vec<f32> =
+                (0..1000).flat_map(|i| data.row_logical(i).to_vec()).collect();
+            AlignedMatrix::from_rows(1000, 16, &rows)
+        };
+        let result =
+            NnDescent::new(Params::default().with_k(16).with_seed(9)).build(&index_data);
+        let idx = GraphIndex::new(index_data.clone(), result.graph);
+
+        let k = 10;
+        let mut hits = 0usize;
+        let mut total = 0usize;
+        for qi in 1000..1200 {
+            let q = data.row_logical(qi);
+            let (res, _) = idx.search(q, k, &SearchParams::default());
+            // brute force over the index set
+            let mut exact: Vec<(u32, f32)> = (0..1000u32)
+                .map(|v| {
+                    let mut qp = vec![0f32; index_data.dim_pad()];
+                    qp[..16].copy_from_slice(q);
+                    (v, sq_l2_unrolled(&qp, index_data.row(v as usize)))
+                })
+                .collect();
+            exact.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let truth: std::collections::HashSet<u32> =
+                exact[..k].iter().map(|p| p.0).collect();
+            hits += res.iter().filter(|(v, _)| truth.contains(v)).count();
+            total += k;
+        }
+        let recall = hits as f64 / total as f64;
+        assert!(recall > 0.95, "query recall {recall}");
+    }
+
+    #[test]
+    fn ef_trades_evals_for_recall() {
+        let (idx, data) = index(1500, 16, 5);
+        let q = data.row_logical(42);
+        let (_, cheap) = idx.search(q, 10, &SearchParams { ef: 16, ..Default::default() });
+        let (_, thorough) = idx.search(q, 10, &SearchParams { ef: 128, ..Default::default() });
+        assert!(thorough.dist_evals > cheap.dist_evals);
+    }
+
+    #[test]
+    fn beam_visits_fraction_of_graph() {
+        // the whole point: far fewer evals than brute force
+        let (idx, data) = index(2000, 16, 7);
+        let (_, stats) = idx.search(data.row_logical(0), 10, &SearchParams::default());
+        assert!(
+            stats.dist_evals < 2000 / 2,
+            "beam search touched {} of 2000 nodes",
+            stats.dist_evals
+        );
+    }
+
+    #[test]
+    fn recall_validated_against_sampled_truth() {
+        let (idx, data) = index(1000, 16, 13);
+        let truth = brute_force_knn_sampled(&data, 10, 60, 21);
+        let mut total = 0.0;
+        for (q, exact) in &truth.queries {
+            let (res, _) = idx.search(data.row_logical(*q as usize), 11, &SearchParams::default());
+            // drop the self-hit
+            let found: Vec<u32> =
+                res.iter().filter(|(v, _)| v != q).map(|(v, _)| *v).take(10).collect();
+            let hits = exact.iter().filter(|(v, _)| found.contains(v)).count();
+            total += hits as f64 / exact.len() as f64;
+        }
+        let recall = total / truth.queries.len() as f64;
+        assert!(recall > 0.9, "search recall {recall}");
+    }
+}

@@ -1,0 +1,13 @@
+//! Approximate nearest-neighbor *queries* over a built K-NN graph —
+//! what downstream consumers (UMAP and friends, §1 of the paper) do
+//! with the graph once NN-Descent has produced it.
+//!
+//! [`GraphIndex`] wraps the finished graph + data and answers queries
+//! with the standard greedy beam search (best-first expansion over the
+//! graph with a bounded candidate pool, PyNNDescent-style): start from
+//! a few seed nodes, repeatedly expand the closest unexpanded candidate,
+//! keep the best `ef` seen, stop when the pool stops improving.
+
+pub mod beam;
+
+pub use beam::{GraphIndex, QueryStats, SearchParams};

@@ -1,0 +1,22 @@
+//! Property-testing mini-framework (offline substitute for `proptest`).
+//!
+//! A [`Gen`] wraps the crate PRNG with helpers for generating structured
+//! random inputs; [`check`] runs a property across many generated cases
+//! and, on failure, re-runs a bounded greedy shrink loop to report a
+//! smaller counterexample seed.
+//!
+//! ```
+//! use knng::testing::{check, Config};
+//!
+//! check(Config::cases(200), "reverse twice is identity", |g| {
+//!     let xs = g.vec_u32(0..64, 1000);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     xs == ys
+//! });
+//! ```
+
+pub mod prop;
+
+pub use prop::{check, check_result, Config, Gen};

@@ -1,0 +1,228 @@
+//! Property-check runner and input generator.
+
+use crate::util::rng::Pcg64;
+use std::ops::Range;
+
+/// Runner configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    /// Number of random cases to run.
+    pub cases: usize,
+    /// Base seed; case `i` uses stream `i`.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self { cases: 100, seed: 0x9E3779B97F4A7C15 }
+    }
+}
+
+impl Config {
+    /// Default config with a custom case count.
+    pub fn cases(cases: usize) -> Self {
+        Self { cases, ..Self::default() }
+    }
+    /// Override the base seed (for reproducing failures).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// Structured-input generator handed to each property case.
+pub struct Gen {
+    rng: Pcg64,
+    /// Size hint in `[0,1]`: early cases are small, later cases larger,
+    /// so failures tend to be found at minimal sizes first.
+    pub size: f64,
+}
+
+impl Gen {
+    /// Standalone generator for ad-hoc use in unit tests (full size hint).
+    pub fn new_for_test(seed: u64) -> Self {
+        Self { rng: Pcg64::new(seed), size: 1.0 }
+    }
+
+    fn new(seed: u64, case: u64, cases: u64) -> Self {
+        Self {
+            rng: Pcg64::new_stream(seed, case),
+            size: if cases <= 1 { 1.0 } else { (case as f64 + 1.0) / cases as f64 },
+        }
+    }
+
+    /// Scale a maximum by the current size hint (≥ the range start).
+    fn sized(&self, max: usize) -> usize {
+        ((max as f64) * self.size).ceil() as usize
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    /// Uniform usize in `range` (end-exclusive, nonempty).
+    pub fn usize_in(&mut self, range: Range<usize>) -> usize {
+        assert!(range.start < range.end, "empty range");
+        range.start + self.rng.gen_index(range.end - range.start)
+    }
+
+    /// Size-scaled length in `range`: grows with case index.
+    pub fn len_in(&mut self, range: Range<usize>) -> usize {
+        assert!(range.start < range.end);
+        let hi = range.start + self.sized(range.end - range.start - 1).max(1);
+        self.usize_in(range.start..hi.min(range.end).max(range.start + 1))
+    }
+
+    pub fn u32_in(&mut self, range: Range<u32>) -> u32 {
+        assert!(range.start < range.end);
+        range.start + self.rng.gen_range(range.end - range.start)
+    }
+
+    pub fn f32_unit(&mut self) -> f32 {
+        self.rng.gen_f32()
+    }
+
+    pub fn f64_unit(&mut self) -> f64 {
+        self.rng.gen_f64()
+    }
+
+    /// f32 in [-scale, scale).
+    pub fn f32_sym(&mut self, scale: f32) -> f32 {
+        (self.rng.gen_f32() * 2.0 - 1.0) * scale
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.rng.gen_bool(p)
+    }
+
+    /// Vector of u32 drawn from `range`, length ≤ `max_len` (size-scaled).
+    pub fn vec_u32(&mut self, range: Range<u32>, max_len: usize) -> Vec<u32> {
+        let len = self.len_in(0..max_len + 1);
+        (0..len).map(|_| self.u32_in(range.clone())).collect()
+    }
+
+    /// Vector of f32 in [-scale, scale), exact length.
+    pub fn vec_f32(&mut self, len: usize, scale: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_sym(scale)).collect()
+    }
+
+    /// Random permutation of 0..n.
+    pub fn permutation(&mut self, n: usize) -> Vec<u32> {
+        let mut p: Vec<u32> = (0..n as u32).collect();
+        self.rng.shuffle(&mut p);
+        p
+    }
+
+    /// Borrow the underlying PRNG for ad-hoc draws.
+    pub fn rng(&mut self) -> &mut Pcg64 {
+        &mut self.rng
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; panics with the failing
+/// case's seed/stream on the first failure.
+pub fn check(cfg: Config, name: &str, mut prop: impl FnMut(&mut Gen) -> bool) {
+    for case in 0..cfg.cases as u64 {
+        let mut g = Gen::new(cfg.seed, case, cfg.cases as u64);
+        if !prop(&mut g) {
+            panic!(
+                "property `{name}` failed at case {case} (reproduce with \
+                 Config {{ cases: 1, seed: {} }} + stream {case})",
+                cfg.seed
+            );
+        }
+    }
+}
+
+/// Like [`check`] but the property returns `Result` with a message.
+pub fn check_result(
+    cfg: Config,
+    name: &str,
+    mut prop: impl FnMut(&mut Gen) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases as u64 {
+        let mut g = Gen::new(cfg.seed, case, cfg.cases as u64);
+        if let Err(msg) = prop(&mut g) {
+            panic!("property `{name}` failed at case {case}: {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(Config::cases(50), "count", |_| {
+            count += 1;
+            true
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false` failed")]
+    fn failing_property_panics() {
+        check(Config::cases(10), "always-false", |_| false);
+    }
+
+    #[test]
+    fn generator_ranges_respected() {
+        check(Config::cases(200), "ranges", |g| {
+            let a = g.usize_in(3..10);
+            let b = g.u32_in(100..101);
+            let v = g.vec_u32(0..5, 20);
+            (3..10).contains(&a) && b == 100 && v.len() <= 20 && v.iter().all(|&x| x < 5)
+        });
+    }
+
+    #[test]
+    fn sizes_grow_with_case_index() {
+        let mut lens = Vec::new();
+        check(Config::cases(100), "sizes", |g| {
+            lens.push(g.len_in(0..1000));
+            true
+        });
+        let early: f64 = lens[..20].iter().sum::<usize>() as f64 / 20.0;
+        let late: f64 = lens[80..].iter().sum::<usize>() as f64 / 20.0;
+        assert!(late > early, "late {late} should exceed early {early}");
+    }
+
+    #[test]
+    fn permutation_is_valid() {
+        check(Config::cases(50), "perm", |g| {
+            let n = g.usize_in(1..200);
+            let p = g.permutation(n);
+            let mut s = p.clone();
+            s.sort_unstable();
+            s == (0..n as u32).collect::<Vec<_>>()
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut first = Vec::new();
+        check(Config::cases(10).with_seed(7), "collect1", |g| {
+            first.push(g.u64());
+            true
+        });
+        let mut second = Vec::new();
+        check(Config::cases(10).with_seed(7), "collect2", |g| {
+            second.push(g.u64());
+            true
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn check_result_reports_message() {
+        let r = std::panic::catch_unwind(|| {
+            check_result(Config::cases(5), "msg", |_| Err("specific detail".to_string()));
+        });
+        let err = r.unwrap_err();
+        let s = err.downcast_ref::<String>().unwrap();
+        assert!(s.contains("specific detail"));
+    }
+}

@@ -1,0 +1,105 @@
+//! Work accounting: flop and distance-evaluation counters.
+//!
+//! The paper (§2) computes W(n) from the number of distance evaluations:
+//! one squared-L2 evaluation over d dimensions costs d subtractions,
+//! d multiplications, and d−1 additions = 3d−1 flops. We count
+//! *evaluations* on the hot path (a single add per candidate block) and
+//! derive flops, so instrumentation cost is negligible.
+
+/// Counts distance evaluations and derives flops for the roofline model.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FlopCounter {
+    /// Number of squared-L2 distance evaluations performed.
+    pub dist_evals: u64,
+    /// Dimensionality used to convert evaluations to flops (logical d,
+    /// not the padded width — padding lanes multiply zeros).
+    pub dim: u64,
+}
+
+impl FlopCounter {
+    /// New counter for data of logical dimensionality `dim`.
+    pub fn new(dim: usize) -> Self {
+        Self { dist_evals: 0, dim: dim as u64 }
+    }
+
+    /// Record `k` distance evaluations.
+    #[inline]
+    pub fn add_evals(&mut self, k: u64) {
+        self.dist_evals += k;
+    }
+
+    /// Flops per single evaluation: d subs + d muls + (d−1) adds.
+    #[inline]
+    pub fn flops_per_eval(&self) -> u64 {
+        3 * self.dim - 1
+    }
+
+    /// Total flops W(n) represented by this counter.
+    #[inline]
+    pub fn flops(&self) -> u64 {
+        self.dist_evals * self.flops_per_eval()
+    }
+
+    /// Merge another counter (same dim) into this one.
+    pub fn merge(&mut self, other: &FlopCounter) {
+        debug_assert_eq!(self.dim, other.dim);
+        self.dist_evals += other.dist_evals;
+    }
+}
+
+/// Per-iteration statistics emitted by the NN-Descent driver.
+#[derive(Debug, Clone, Default)]
+pub struct IterStats {
+    /// Iteration index (0-based).
+    pub iter: usize,
+    /// Seconds spent in the selection step.
+    pub select_secs: f64,
+    /// Seconds spent in the compute/update step.
+    pub compute_secs: f64,
+    /// Seconds spent in the reorder heuristic (0 unless it ran).
+    pub reorder_secs: f64,
+    /// Distance evaluations this iteration.
+    pub dist_evals: u64,
+    /// Graph updates (heap replacements) this iteration.
+    pub updates: u64,
+}
+
+impl IterStats {
+    /// Total seconds for the iteration.
+    pub fn total_secs(&self) -> f64 {
+        self.select_secs + self.compute_secs + self.reorder_secs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flops_formula_matches_paper() {
+        // d subs + d muls + (d-1) adds
+        let mut c = FlopCounter::new(8);
+        c.add_evals(10);
+        assert_eq!(c.flops_per_eval(), 23);
+        assert_eq!(c.flops(), 230);
+
+        let c = FlopCounter { dist_evals: 1, dim: 784 };
+        assert_eq!(c.flops(), 3 * 784 - 1);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = FlopCounter::new(16);
+        a.add_evals(5);
+        let mut b = FlopCounter::new(16);
+        b.add_evals(7);
+        a.merge(&b);
+        assert_eq!(a.dist_evals, 12);
+    }
+
+    #[test]
+    fn iter_stats_total() {
+        let s = IterStats { select_secs: 1.0, compute_secs: 2.0, reorder_secs: 0.5, ..Default::default() };
+        assert!((s.total_secs() - 3.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,54 @@
+//! Shared low-level utilities: deterministic PRNGs, timers, counters,
+//! descriptive statistics, and a minimal logger.
+//!
+//! Everything here is hand-rolled because the build environment is
+//! offline (no `rand`, no `log` backends); determinism is a feature —
+//! every experiment in EXPERIMENTS.md is reproducible from a seed.
+
+pub mod counters;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+pub mod timer;
+
+pub use counters::FlopCounter;
+pub use rng::{Pcg64, SplitMix64};
+pub use stats::Summary;
+pub use timer::Timer;
+
+/// Round `d` up to the next multiple of `m` (m > 0).
+#[inline]
+pub fn round_up(d: usize, m: usize) -> usize {
+    debug_assert!(m > 0);
+    d.div_ceil(m) * m
+}
+
+/// Integer ceil-div.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_basics() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_up(784, 8), 784);
+        assert_eq!(round_up(190, 8), 192);
+    }
+
+    #[test]
+    fn ceil_div_basics() {
+        assert_eq!(ceil_div(0, 5), 0);
+        assert_eq!(ceil_div(1, 5), 1);
+        assert_eq!(ceil_div(5, 5), 1);
+        assert_eq!(ceil_div(6, 5), 2);
+    }
+}

@@ -1,0 +1,276 @@
+//! Deterministic pseudo-random number generators.
+//!
+//! NN-Descent is a randomized algorithm: the initial graph, the edge
+//! sampling weights, and the turbosampling coin flips are all random.
+//! The paper relies on `rand()`-style uniform draws; we use PCG64 (O'Neill
+//! 2014, `pcg_xsl_rr_128_64`) for the algorithm and SplitMix64 for cheap
+//! seeding/stream-splitting, both fully deterministic from a `u64` seed so
+//! every benchmark row in EXPERIMENTS.md is reproducible.
+
+/// SplitMix64 — tiny, fast generator used to expand seeds and to derive
+/// independent streams (one per node, per iteration) without correlation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a generator from a raw seed.
+    #[inline]
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64 uniformly distributed bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG-XSL-RR 128/64: 128-bit LCG state, 64-bit xorshift-low + random
+/// rotation output. Period 2^128, passes BigCrush; the main generator for
+/// all algorithmic randomness in this crate.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128, // odd stream selector
+}
+
+const PCG_MULT: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+impl Pcg64 {
+    /// Seed the generator; `stream` selects one of 2^127 independent
+    /// sequences.
+    pub fn new_stream(seed: u64, stream: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let mut sm2 = SplitMix64::new(stream ^ 0xDA3E_39CB_94B9_5BDB);
+        let i0 = sm2.next_u64() as u128;
+        let i1 = sm2.next_u64() as u128;
+        let mut rng = Self {
+            state: 0,
+            inc: ((i0 << 64) | i1) | 1, // must be odd
+        };
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng.state = rng.state.wrapping_add((s0 << 64) | s1);
+        rng.state = rng.state.wrapping_mul(PCG_MULT).wrapping_add(rng.inc);
+        rng
+    }
+
+    /// Seed with the default stream.
+    pub fn new(seed: u64) -> Self {
+        Self::new_stream(seed, 0)
+    }
+
+    /// Next 64 uniformly distributed bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Next 32 bits.
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` via Lemire's multiply-shift rejection
+    /// (unbiased, one division in the slow path only).
+    #[inline]
+    pub fn gen_range(&mut self, bound: u32) -> u32 {
+        debug_assert!(bound > 0);
+        let mut x = self.next_u32();
+        let mut m = (x as u64).wrapping_mul(bound as u64);
+        let mut lo = m as u32;
+        if lo < bound {
+            let t = bound.wrapping_neg() % bound;
+            while lo < t {
+                x = self.next_u32();
+                m = (x as u64).wrapping_mul(bound as u64);
+                lo = m as u32;
+            }
+        }
+        (m >> 32) as u32
+    }
+
+    /// Uniform in `[0, bound)` for `usize` bounds (≤ u32::MAX in practice).
+    #[inline]
+    pub fn gen_index(&mut self, bound: usize) -> usize {
+        debug_assert!(bound <= u32::MAX as usize);
+        self.gen_range(bound as u32) as usize
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn gen_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f32` in `[0, 1)` with 24 bits of precision.
+    #[inline]
+    pub fn gen_f32(&mut self) -> f32 {
+        (self.next_u32() >> 8) as f32 * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Bernoulli(p) coin flip.
+    #[inline]
+    pub fn gen_bool(&mut self, p: f64) -> bool {
+        self.gen_f64() < p
+    }
+
+    /// Standard normal via Box–Muller (pairs cached would complicate the
+    /// borrow story; the generator is not on the request hot path).
+    pub fn gen_normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.gen_f64();
+            if u1 > f64::MIN_POSITIVE {
+                let u2 = self.gen_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                return r * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// Fisher–Yates shuffle of a slice.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.gen_index(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Reservoir-sample `m` distinct items from `0..n` (order unspecified).
+    pub fn sample_indices(&mut self, n: usize, m: usize, out: &mut Vec<u32>) {
+        out.clear();
+        if m >= n {
+            out.extend(0..n as u32);
+            return;
+        }
+        for i in 0..m {
+            out.push(i as u32);
+        }
+        for i in m..n {
+            let j = self.gen_index(i + 1);
+            if j < m {
+                out[j] = i as u32;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_deterministic() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn pcg_deterministic_and_stream_independent() {
+        let mut a = Pcg64::new(7);
+        let mut b = Pcg64::new(7);
+        assert_eq!(
+            (0..64).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..64).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+        let mut c = Pcg64::new_stream(7, 1);
+        let mut d = Pcg64::new_stream(7, 2);
+        let eq = (0..64).filter(|_| c.next_u64() == d.next_u64()).count();
+        assert!(eq < 4, "streams should be (near-)disjoint, got {eq} collisions");
+    }
+
+    #[test]
+    fn gen_range_bounds_and_coverage() {
+        let mut rng = Pcg64::new(123);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let v = rng.gen_range(10);
+            assert!(v < 10);
+            seen[v as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues reachable");
+    }
+
+    #[test]
+    fn gen_f64_unit_interval_mean() {
+        let mut rng = Pcg64::new(99);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = rng.gen_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean {mean} too far from 0.5");
+    }
+
+    #[test]
+    fn gen_normal_moments() {
+        let mut rng = Pcg64::new(2024);
+        let n = 200_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let v = rng.gen_normal();
+            s1 += v;
+            s2 += v * v;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(5);
+        let mut xs: Vec<u32> = (0..1000).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..1000).collect::<Vec<_>>());
+        assert_ne!(xs, (0..1000).collect::<Vec<_>>(), "astronomically unlikely identity");
+    }
+
+    #[test]
+    fn sample_indices_distinct_in_range() {
+        let mut rng = Pcg64::new(8);
+        let mut out = Vec::new();
+        rng.sample_indices(100, 20, &mut out);
+        assert_eq!(out.len(), 20);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 20, "indices must be distinct");
+        assert!(out.iter().all(|&i| i < 100));
+
+        // m >= n returns everything
+        rng.sample_indices(5, 10, &mut out);
+        let mut sorted = out.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn gen_bool_probability() {
+        let mut rng = Pcg64::new(17);
+        let hits = (0..100_000).filter(|_| rng.gen_bool(0.25)).count();
+        let p = hits as f64 / 100_000.0;
+        assert!((p - 0.25).abs() < 0.01, "p {p}");
+    }
+}

@@ -1,0 +1,146 @@
+//! Wall-clock timing with cycle-count derivation for the roofline model.
+//!
+//! The paper reports performance in flops/cycle on a fixed-frequency
+//! (turbo-disabled) i7-9700K @ 3.6 GHz. We cannot pin frequency here, so
+//! cycles are *derived*: `cycles = seconds × nominal_hz`, with
+//! `nominal_hz` configurable (default 3.6 GHz to match the paper's
+//! plots). The relative shape of every figure is frequency-independent.
+
+use std::time::{Duration, Instant};
+
+/// Nominal clock used to convert seconds → cycles (paper's machine).
+pub const DEFAULT_NOMINAL_HZ: f64 = 3.6e9;
+
+/// A simple start/stop accumulating timer.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    started: Option<Instant>,
+    accumulated: Duration,
+    laps: Vec<Duration>,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Timer {
+    /// New, stopped timer with zero accumulated time.
+    pub fn new() -> Self {
+        Self { started: None, accumulated: Duration::ZERO, laps: Vec::new() }
+    }
+
+    /// Start (or restart) the running segment.
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    /// Stop the running segment, adding it to the accumulated total and
+    /// recording it as a lap. No-op if not running.
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            let lap = t0.elapsed();
+            self.accumulated += lap;
+            self.laps.push(lap);
+        }
+    }
+
+    /// Total accumulated time across all laps (excluding a running segment).
+    pub fn total(&self) -> Duration {
+        self.accumulated
+    }
+
+    /// Total in seconds.
+    pub fn secs(&self) -> f64 {
+        self.accumulated.as_secs_f64()
+    }
+
+    /// Individual lap durations.
+    pub fn laps(&self) -> &[Duration] {
+        &self.laps
+    }
+
+    /// Derived cycle count at the given nominal frequency.
+    pub fn cycles(&self, nominal_hz: f64) -> f64 {
+        self.secs() * nominal_hz
+    }
+
+    /// Reset to the zero state.
+    pub fn reset(&mut self) {
+        self.started = None;
+        self.accumulated = Duration::ZERO;
+        self.laps.clear();
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `f` repeatedly until at least `min_secs` have elapsed *and*
+/// `min_reps` repetitions were made; returns the minimum per-rep seconds
+/// (the standard noise-robust microbenchmark estimator).
+pub fn bench_min<T>(min_reps: usize, min_secs: f64, mut f: impl FnMut() -> T) -> f64 {
+    let mut best = f64::INFINITY;
+    let mut elapsed = 0.0;
+    let mut reps = 0;
+    while reps < min_reps || elapsed < min_secs {
+        let t0 = Instant::now();
+        let out = f();
+        let dt = t0.elapsed().as_secs_f64();
+        std::hint::black_box(out);
+        best = best.min(dt);
+        elapsed += dt;
+        reps += 1;
+        if reps > 1_000_000 {
+            break; // safety valve for pathologically fast closures
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_accumulates_laps() {
+        let mut t = Timer::new();
+        t.start();
+        std::thread::sleep(Duration::from_millis(5));
+        t.stop();
+        t.start();
+        std::thread::sleep(Duration::from_millis(5));
+        t.stop();
+        assert_eq!(t.laps().len(), 2);
+        assert!(t.secs() >= 0.009, "accumulated {}", t.secs());
+    }
+
+    #[test]
+    fn stop_without_start_is_noop() {
+        let mut t = Timer::new();
+        t.stop();
+        assert_eq!(t.laps().len(), 0);
+        assert_eq!(t.total(), Duration::ZERO);
+    }
+
+    #[test]
+    fn cycles_derivation() {
+        let mut t = Timer::new();
+        t.start();
+        std::thread::sleep(Duration::from_millis(10));
+        t.stop();
+        let c = t.cycles(1e9);
+        assert!(c >= 9e6, "cycles {c}");
+    }
+
+    #[test]
+    fn bench_min_returns_positive() {
+        let dt = bench_min(3, 0.0, || (0..1000).sum::<u64>());
+        assert!(dt >= 0.0 && dt.is_finite());
+    }
+}

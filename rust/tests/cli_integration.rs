@@ -1,0 +1,102 @@
+//! CLI integration: drive the `knng` binary end-to-end through its
+//! subcommands (uses the test-built binary via CARGO_BIN_EXE).
+
+use std::process::Command;
+
+fn knng(args: &[&str]) -> std::process::Output {
+    Command::new(env!("CARGO_BIN_EXE_knng"))
+        .args(args)
+        .output()
+        .expect("spawn knng")
+}
+
+#[test]
+fn help_and_info() {
+    let out = knng(&["help"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["build", "gen", "check", "info"] {
+        assert!(text.contains(cmd), "help must list `{cmd}`");
+    }
+
+    let out = knng(&["info"]);
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("k=20"), "defaults shown");
+}
+
+#[test]
+fn build_from_flags_tsv() {
+    let out = knng(&[
+        "build",
+        "--dataset", "clustered",
+        "--n", "600",
+        "--dim", "8",
+        "--clusters", "4",
+        "--k", "10",
+        "--recall-queries", "50",
+        "--tsv",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    let mut lines = text.lines();
+    let header = lines.next().unwrap();
+    assert!(header.starts_with("name\tdataset"));
+    let row = lines.next().unwrap();
+    let cols: Vec<&str> = row.split('\t').collect();
+    assert_eq!(cols.len(), header.split('\t').count());
+    let recall: f64 = cols.last().unwrap().parse().unwrap();
+    assert!(recall > 0.9, "CLI recall {recall}");
+}
+
+#[test]
+fn build_from_config_file() {
+    let dir = std::env::temp_dir().join("knng_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let cfg = dir.join("exp.toml");
+    std::fs::write(
+        &cfg,
+        "name = \"cli-cfg\"\n[dataset]\nkind = \"gaussian\"\nn = 400\ndim = 8\n[run]\nk = 8\n",
+    )
+    .unwrap();
+    let out = knng(&["build", "--config", cfg.to_str().unwrap(), "--recall-queries", "30"]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("cli-cfg"));
+    assert!(text.contains("recall"));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn gen_writes_fvecs_roundtrip() {
+    let dir = std::env::temp_dir().join("knng_cli_gen");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g.fvecs");
+    let out = knng(&[
+        "gen", "--dataset", "gaussian", "--n", "128", "--dim", "24",
+        "--out", path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let m = knng::dataset::fvecs::read_fvecs(&path, usize::MAX).unwrap();
+    assert_eq!((m.n(), m.dim()), (128, 24));
+    // and the CLI can consume its own output
+    let out = knng(&[
+        "build", "--dataset", "fvecs", "--path", path.to_str().unwrap(),
+        "--n", "128", "--k", "8", "--recall-queries", "20",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn bad_input_fails_cleanly() {
+    let out = knng(&["frobnicate"]);
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("unknown subcommand"));
+
+    let out = knng(&["build", "--selection", "psychic"]);
+    assert!(!out.status.success());
+
+    let out = knng(&["gen", "--dataset", "gaussian"]); // missing --out
+    assert!(!out.status.success());
+}

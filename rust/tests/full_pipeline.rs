@@ -1,0 +1,133 @@
+//! Cross-module integration tests: full builds over every dataset
+//! family × selection × compute × reorder combination, result-semantics
+//! invariants, and config-file round trips.
+
+use knng::baseline::brute::brute_force_knn_sampled;
+use knng::config::schema::{ComputeKind, SelectionKind};
+use knng::config::{DatasetSpec, ExperimentConfig};
+use knng::dataset::from_spec;
+use knng::metrics::recall::recall_against_truth;
+use knng::nndescent::{NnDescent, Params};
+use knng::pipeline::{run_experiment, EvalOptions};
+
+#[test]
+fn matrix_of_variants_converges_on_clustered_data() {
+    let ds = from_spec(&DatasetSpec::Clustered { n: 900, dim: 16, clusters: 6, seed: 41 }).unwrap();
+    let truth = brute_force_knn_sampled(&ds.data, 10, 150, 3);
+    for sel in [SelectionKind::Naive, SelectionKind::Heap, SelectionKind::Turbo] {
+        for comp in [ComputeKind::Scalar, ComputeKind::Unrolled, ComputeKind::Blocked] {
+            for reorder in [false, true] {
+                let params = Params::default()
+                    .with_k(10)
+                    .with_seed(41)
+                    .with_selection(sel)
+                    .with_compute(comp)
+                    .with_reorder(reorder);
+                let r = NnDescent::new(params).build(&ds.data);
+                r.graph.validate().unwrap_or_else(|e| {
+                    panic!("{sel:?}/{comp:?}/reorder={reorder}: graph invalid: {e}")
+                });
+                let rec = recall_against_truth(&r, &truth);
+                assert!(
+                    rec > 0.93,
+                    "{sel:?}/{comp:?}/reorder={reorder}: recall {rec}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn every_dataset_family_builds() {
+    let specs = [
+        DatasetSpec::Gaussian { n: 500, dim: 24, single: true, seed: 1 },
+        DatasetSpec::Gaussian { n: 500, dim: 12, single: false, seed: 2 },
+        DatasetSpec::Clustered { n: 500, dim: 8, clusters: 5, seed: 3 },
+        DatasetSpec::Mnist { n: 300, path: None, seed: 4 },
+        DatasetSpec::Audio { n: 300, dim: 48, seed: 5 },
+    ];
+    for spec in specs {
+        let ds = from_spec(&spec).unwrap();
+        let r = NnDescent::new(Params::default().with_k(8).with_seed(9)).build(&ds.data);
+        assert!(r.iterations >= 2, "{}: converged suspiciously fast", ds.name);
+        r.graph.validate().unwrap();
+        // distances in results must be true squared-L2 of the rows
+        for u in (0..ds.n()).step_by(71) {
+            for (v, d) in r.neighbors_original(u) {
+                let expect =
+                    knng::distance::sq_l2_unrolled(ds.data.row(u), ds.data.row(v as usize));
+                assert!((d - expect).abs() < 1e-3 * (1.0 + expect), "{}: {u}->{v}", ds.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn reordered_and_plain_runs_agree_on_quality_not_layout() {
+    let ds = from_spec(&DatasetSpec::Clustered { n: 800, dim: 8, clusters: 8, seed: 13 }).unwrap();
+    let base = Params::default().with_k(12).with_seed(13);
+    let plain = NnDescent::new(base.clone()).build(&ds.data);
+    let reord = NnDescent::new(base.with_reorder(true)).build(&ds.data);
+    let r = reord.reordering.as_ref().expect("must reorder");
+    r.validate().unwrap();
+    // permutation must be non-trivial on clustered data
+    let moved = r.sigma.iter().enumerate().filter(|(i, &s)| s as usize != *i).count();
+    assert!(moved > 100, "only {moved} nodes moved");
+    // but result quality must be preserved
+    let truth = brute_force_knn_sampled(&ds.data, 12, 100, 1);
+    let (rp, rr) = (
+        recall_against_truth(&plain, &truth),
+        recall_against_truth(&reord, &truth),
+    );
+    assert!(rr > 0.95 && (rp - rr).abs() < 0.04, "plain {rp} vs reordered {rr}");
+}
+
+#[test]
+fn pipeline_runs_bundled_configs() {
+    // the bundled configs must stay loadable and runnable (shrunk)
+    for entry in std::fs::read_dir("configs").unwrap() {
+        let path = entry.unwrap().path();
+        if path.extension().is_none_or(|e| e != "toml") {
+            continue;
+        }
+        let mut cfg = ExperimentConfig::load(&path).unwrap();
+        // shrink for test speed, keep everything else
+        cfg.dataset = match cfg.dataset {
+            DatasetSpec::Gaussian { dim, single, seed, .. } =>
+                DatasetSpec::Gaussian { n: 400, dim, single, seed },
+            DatasetSpec::Clustered { dim, clusters, seed, .. } =>
+                DatasetSpec::Clustered { n: 400, dim, clusters, seed },
+            DatasetSpec::Mnist { path, seed, .. } => DatasetSpec::Mnist { n: 300, path, seed },
+            DatasetSpec::Audio { dim, seed, .. } => DatasetSpec::Audio { n: 300, dim, seed },
+            other => other,
+        };
+        let report = run_experiment(&cfg, EvalOptions { recall_queries: 50, seed: 2 })
+            .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        assert!(report.recall.unwrap() > 0.8, "{}: recall {:?}", path.display(), report.recall);
+    }
+}
+
+#[test]
+fn determinism_across_full_pipeline() {
+    let cfg = ExperimentConfig::from_str(
+        r#"
+        name = "det"
+        [dataset]
+        kind = "clustered"
+        n = 500
+        dim = 8
+        clusters = 4
+        seed = 99
+        [run]
+        k = 10
+        seed = 99
+        reorder = true
+        "#,
+    )
+    .unwrap();
+    let a = run_experiment(&cfg, EvalOptions { recall_queries: 40, seed: 1 }).unwrap();
+    let b = run_experiment(&cfg, EvalOptions { recall_queries: 40, seed: 1 }).unwrap();
+    assert_eq!(a.dist_evals, b.dist_evals);
+    assert_eq!(a.iterations, b.iterations);
+    assert_eq!(a.recall, b.recall);
+}

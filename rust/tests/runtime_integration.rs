@@ -1,0 +1,129 @@
+//! Integration tests over the PJRT runtime — require `make artifacts`
+//! (skipped with a notice when the artifact directory is missing, so
+//! plain `cargo test` still passes in a fresh checkout).
+
+use knng::cachesim::trace::NoTracer;
+use knng::config::schema::{ComputeKind, SelectionKind};
+use knng::dataset::synth::SynthGaussian;
+use knng::distance::blocked::{pairwise_flat, PairwiseBuf};
+use knng::metrics::recall::recall_against_truth;
+use knng::nndescent::{NnDescent, Params};
+use knng::runtime::{ArtifactStore, PjrtEngine, TileScanner};
+
+fn artifacts_available() -> bool {
+    std::path::Path::new("artifacts/manifest.tsv").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_available() {
+            eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+            return;
+        }
+    };
+}
+
+#[test]
+fn store_opens_and_lists_shapes() {
+    require_artifacts!();
+    let store = ArtifactStore::open("artifacts").unwrap();
+    assert!(!store.entries().is_empty());
+    let shapes = store.pairwise_shapes();
+    assert!(shapes.iter().any(|&(b, d)| b == 64 && d == 256), "default shape set");
+    // find_pairwise picks the smallest covering batch
+    let (b, d) = store.find_pairwise(40, 256).unwrap();
+    assert!(b >= 40 && d == 256);
+    assert!(store.find_pairwise(40, 12345).is_none(), "unknown dim");
+}
+
+#[test]
+fn every_manifest_artifact_compiles() {
+    require_artifacts!();
+    let mut store = ArtifactStore::open("artifacts").unwrap();
+    let keys: Vec<_> = store
+        .entries()
+        .iter()
+        .map(|e| knng::runtime::ArtifactKey {
+            kind: match e.kind.as_str() {
+                "pairwise" => "pairwise",
+                "tilescan" => "tilescan",
+                other => panic!("unknown kind {other}"),
+            },
+            dims: e.dims.clone(),
+        })
+        .collect();
+    for key in keys {
+        store.executable(&key).unwrap_or_else(|e| panic!("compiling {key:?}: {e:#}"));
+    }
+    assert_eq!(store.compiled_count(), store.entries().len());
+}
+
+#[test]
+fn pjrt_pairwise_matches_native_with_padding() {
+    require_artifacts!();
+    let mut engine = PjrtEngine::open("artifacts").unwrap();
+    let data = SynthGaussian::single(200, 192, 9).generate();
+    // deliberately not a full batch (m=23 < B=64) and with repeated ids
+    let mut ids: Vec<u32> = (0..22).map(|i| (i * 7) % 200).collect();
+    ids.push(ids[0]);
+    let mut pjrt = PairwiseBuf::with_capacity(64);
+    let mut native = PairwiseBuf::with_capacity(64);
+    engine.pairwise_checked(&data, &ids, &mut pjrt).unwrap();
+    pairwise_flat(&data, &ids, &mut native, true);
+    for i in 0..ids.len() {
+        for j in 0..ids.len() {
+            if i == j {
+                continue;
+            }
+            let (a, b) = (pjrt.get(i, j), native.get(i, j));
+            assert!(
+                (a - b).abs() <= 2e-3 * (1.0 + b.abs()),
+                "({i},{j}): pjrt {a} vs native {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_full_build_reaches_native_recall() {
+    require_artifacts!();
+    // clustered data: low intrinsic dimension, so recall reflects the
+    // runtime's correctness rather than NN-Descent's known high-dim limits
+    let data = knng::dataset::clustered::SynthClustered::new(1500, 64, 8, 33).generate();
+    let truth = knng::baseline::brute::brute_force_knn_sampled(&data, 10, 200, 5);
+
+    let base = Params::default().with_k(10).with_seed(33).with_selection(SelectionKind::Turbo);
+    let native = NnDescent::new(base.clone().with_compute(ComputeKind::Blocked)).build(&data);
+    let mut engine = PjrtEngine::open("artifacts").unwrap();
+    let pjrt = NnDescent::new(base.with_compute(ComputeKind::Pjrt)).build_with_engine(
+        &data,
+        &mut engine,
+        &mut NoTracer,
+    );
+    let rn = recall_against_truth(&native, &truth);
+    let rp = recall_against_truth(&pjrt, &truth);
+    assert!(rp > 0.9, "pjrt recall {rp}");
+    assert!((rn - rp).abs() < 0.06, "native {rn} vs pjrt {rp} should be comparable");
+    assert!(engine.executions > 0, "kernel must actually have run");
+}
+
+#[test]
+fn tile_scanner_matches_native() {
+    require_artifacts!();
+    let data = SynthGaussian::single(1200, 64, 17).generate();
+    let mut scanner = TileScanner::open("artifacts", 128, 1024, data.dim_pad()).unwrap();
+    let queries: Vec<u32> = (0..100).collect();
+    let corpus: Vec<u32> = (100..1100).collect();
+    let out = scanner.scan(&data, &queries, &corpus).unwrap();
+    assert_eq!(out.len(), 100 * 1000);
+    for (qi, &q) in queries.iter().enumerate().step_by(17) {
+        for (ci, &c) in corpus.iter().enumerate().step_by(131) {
+            let expect = knng::distance::sq_l2_unrolled(data.row(q as usize), data.row(c as usize));
+            let got = out[qi * 1000 + ci];
+            assert!((got - expect).abs() <= 2e-3 * (1.0 + expect), "({qi},{ci}): {got} vs {expect}");
+        }
+    }
+    // bounds checks
+    let too_many: Vec<u32> = (0..200).collect();
+    assert!(scanner.scan(&data, &too_many, &corpus).is_err());
+}
