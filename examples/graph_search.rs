@@ -1,9 +1,9 @@
-//! Serve-style example: build a K-NN graph index, persist it, reload,
-//! and answer a batch of held-out queries with the beam search —
-//! reporting latency percentiles, per-query distance evaluations, and
-//! recall (the downstream-consumer workflow the paper's intro
-//! motivates: UMAP-style pipelines query the graph, they don't just
-//! build it).
+//! Serve-style example: build a K-NN graph index, persist it as a
+//! KNNIv1 bundle, reload, and answer a batch of held-out queries with
+//! the beam search — reporting latency percentiles, per-query distance
+//! evaluations, recall, and the batched-path throughput (the
+//! downstream-consumer workflow the paper's intro motivates: UMAP-style
+//! pipelines query the graph, they don't just build it).
 //!
 //! Run: `cargo run --release --example graph_search [-- n]`
 
@@ -11,9 +11,8 @@ use knng::baseline::brute::GroundTruth;
 use knng::dataset::clustered::SynthClustered;
 use knng::dataset::AlignedMatrix;
 use knng::distance::sq_l2_unrolled;
-use knng::graph::{load_graph, save_graph};
 use knng::nndescent::{NnDescent, Params};
-use knng::search::{GraphIndex, SearchParams};
+use knng::search::{load_index, save_index, IndexBundle, SearchParams};
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -29,17 +28,16 @@ fn main() -> anyhow::Result<()> {
     };
     println!("corpus {n} × {dim}, {n_queries} held-out queries, k={k}");
 
-    // ---- build + persist + reload (exercises graph/io) -----------------
+    // ---- build + persist + reload (exercises search::bundle) -----------
     let t0 = Instant::now();
-    let built = NnDescent::new(Params::default().with_k(k).with_seed(4).with_reorder(false))
-        .build(&corpus);
+    let params = Params::default().with_k(k).with_seed(4).with_reorder(false);
+    let built = NnDescent::new(params.clone()).build(&corpus);
     println!("graph built in {:.2}s ({} iterations)", t0.elapsed().as_secs_f64(), built.iterations);
 
-    let path = std::env::temp_dir().join("knng_graph_search.knng");
-    save_graph(&path, &built.graph)?;
-    let graph = load_graph(&path)?;
-    println!("persisted + reloaded graph: {} bytes", std::fs::metadata(&path)?.len());
-    let index = GraphIndex::new(corpus, graph);
+    let path = std::env::temp_dir().join("knng_graph_search.knni");
+    save_index(&path, &IndexBundle::from_build(&corpus, &built, &params))?;
+    let (index, _reordering, _) = load_index(&path)?.into_index();
+    println!("persisted + reloaded index bundle: {} bytes", std::fs::metadata(&path)?.len());
 
     // ---- exact truth for recall (brute force per query) ----------------
     let truth: GroundTruth = {
@@ -57,9 +55,10 @@ fn main() -> anyhow::Result<()> {
         GroundTruth { k, queries }
     };
 
-    // ---- serve the batch ------------------------------------------------
+    // ---- serve the batch, one query at a time ---------------------------
     let params = SearchParams::default();
     let mut latencies = Vec::with_capacity(n_queries);
+    let mut seq_results = Vec::with_capacity(n_queries);
     let mut evals = 0u64;
     let mut hits = 0usize;
     for qi in 0..n_queries {
@@ -70,13 +69,14 @@ fn main() -> anyhow::Result<()> {
         evals += stats.dist_evals;
         let exact = truth.get(qi as u32).unwrap();
         hits += exact.iter().filter(|(v, _)| res.iter().any(|(r, _)| r == v)).count();
+        seq_results.push(res);
     }
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
     let pct = |p: f64| latencies[((latencies.len() as f64 * p) as usize).min(latencies.len() - 1)];
     let recall = hits as f64 / (n_queries * k) as f64;
     let qps = n_queries as f64 / latencies.iter().sum::<f64>();
 
-    println!("\nserved {n_queries} queries (ef={}):", params.ef);
+    println!("\nserved {n_queries} queries sequentially (ef={}):", params.ef);
     println!("  recall@{k}     : {recall:.4}");
     println!("  latency p50    : {:.1} µs", pct(0.50) * 1e6);
     println!("  latency p99    : {:.1} µs", pct(0.99) * 1e6);
@@ -85,6 +85,22 @@ fn main() -> anyhow::Result<()> {
         evals as f64 / n_queries as f64,
         evals as f64 / n_queries as f64 / n as f64 * 100.0);
     assert!(recall > 0.9, "search recall {recall}");
+
+    // ---- same batch through the batched path ----------------------------
+    let qmat = {
+        let rows: Vec<f32> =
+            (0..n_queries).flat_map(|qi| all.row_logical(n + qi).to_vec()).collect();
+        AlignedMatrix::from_rows(n_queries, dim, &rows)
+    };
+    let (batch_results, bstats) = index.search_batch(&qmat, k, &params);
+    for qi in 0..n_queries {
+        assert_eq!(batch_results[qi], seq_results[qi], "batch/sequential diverged at {qi}");
+    }
+    println!("\nbatched path (search_batch, {} queries in one call):", bstats.queries);
+    println!("  throughput     : {:.0} queries/s ({:.2}× sequential)", bstats.qps(), bstats.qps() / qps);
+    println!("  evals/query    : {:.0}", bstats.dist_evals_per_query());
+    println!("  expansions/qry : {:.1}", bstats.expansions_per_query());
+    println!("  results        : identical to sequential (verified)");
     println!("graph_search OK");
     Ok(())
 }

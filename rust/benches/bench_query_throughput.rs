@@ -1,0 +1,101 @@
+//! Query-serving throughput (ours) — queries/sec vs batch size and `ef`
+//! through `GraphIndex::search_batch`, which tiles query×corpus distance
+//! evaluations through the 5×5 blocked kernel and reuses per-query
+//! scratch, against the sequential single-query path. The batched and
+//! sequential paths return identical results (bit-equal kernels), so
+//! this measures pure serving-layer overhead/locality.
+//!
+//! Run: `cargo bench --bench bench_query_throughput`
+
+use knng::bench::{full_scale, measure_once, Table};
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::nndescent::{NnDescent, Params};
+use knng::search::{IndexBundle, SearchParams};
+
+fn main() {
+    let scale = if full_scale() { 4 } else { 1 };
+    let n = 16_384 * scale;
+    let n_queries = 1024 * scale;
+    let (dim, k) = (64, 10);
+
+    println!("query throughput — corpus n={n} d={dim}, {n_queries} held-out queries, k={k}");
+
+    // corpus + held-out queries from the same distribution
+    let (all, _) = SynthClustered::new(n + n_queries, dim, 32, 0xB47C4).generate_labeled();
+    let corpus = {
+        let rows: Vec<f32> = (0..n).flat_map(|i| all.row_logical(i).to_vec()).collect();
+        AlignedMatrix::from_rows(n, dim, &rows)
+    };
+    let queries_flat: Vec<f32> =
+        (n..n + n_queries).flat_map(|i| all.row_logical(i).to_vec()).collect();
+
+    // build once (reordered — the bundle keeps the working layout, so
+    // serving inherits the locality win) and serve through the bundle
+    // path, exactly as `knng build --save-index` + `knng query --index`
+    let params = Params::default().with_k(20).with_seed(7).with_reorder(true);
+    let (result, build_secs) = measure_once(|| NnDescent::new(params.clone()).build(&corpus));
+    println!("graph built in {build_secs:.2}s ({} iterations)", result.iterations);
+    let (index, _reordering, _) =
+        IndexBundle::from_build(&corpus, &result, &params).into_index();
+
+    let mut table = Table::new(
+        "query_throughput",
+        &["ef", "batch", "qps", "evals/query", "expansions/query", "vs seq"],
+    );
+    for ef in [32usize, 64, 128] {
+        let sp = SearchParams { ef, ..Default::default() };
+
+        // sequential baseline over the full query set
+        let (seq_evals, seq_secs) = measure_once(|| {
+            let mut evals = 0u64;
+            for qi in 0..n_queries {
+                let q = &queries_flat[qi * dim..(qi + 1) * dim];
+                let (_, stats) = index.search(q, k, &sp);
+                evals += stats.dist_evals;
+            }
+            evals
+        });
+        let seq_qps = n_queries as f64 / seq_secs;
+        table.row(&[
+            format!("{ef}"),
+            "seq".into(),
+            format!("{seq_qps:.0}"),
+            format!("{:.0}", seq_evals as f64 / n_queries as f64),
+            "-".into(),
+            "1.00x".into(),
+        ]);
+
+        for batch in [1usize, 16, 64, 256, 1024] {
+            let batch = batch.min(n_queries);
+            // serve the query set in `batch`-sized slices
+            let (agg, secs) = measure_once(|| {
+                let mut total = (0u64, 0u64); // (evals, expansions)
+                let mut served = 0usize;
+                while served < n_queries {
+                    let b = batch.min(n_queries - served);
+                    let qm = AlignedMatrix::from_rows(
+                        b,
+                        dim,
+                        &queries_flat[served * dim..(served + b) * dim],
+                    );
+                    let (_, stats) = index.search_batch(&qm, k, &sp);
+                    total.0 += stats.dist_evals;
+                    total.1 += stats.expansions;
+                    served += b;
+                }
+                total
+            });
+            let qps = n_queries as f64 / secs;
+            table.row(&[
+                format!("{ef}"),
+                format!("{batch}"),
+                format!("{qps:.0}"),
+                format!("{:.0}", agg.0 as f64 / n_queries as f64),
+                format!("{:.1}", agg.1 as f64 / n_queries as f64),
+                format!("{:.2}x", qps / seq_qps),
+            ]);
+        }
+    }
+    table.finish();
+}

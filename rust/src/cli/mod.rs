@@ -86,9 +86,16 @@ pub struct ArgMatches {
 }
 
 /// Parse error with a human-readable message.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("{0}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
 
 impl ArgMatches {
     pub fn has(&self, name: &str) -> bool {

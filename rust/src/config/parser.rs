@@ -149,12 +149,19 @@ impl Table {
 }
 
 /// Error with a 1-based line number (0 = semantic, not positional).
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
-#[error("config parse error at line {line}: {msg}")]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ParseError {
     pub line: usize,
     pub msg: String,
 }
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "config parse error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for ParseError {}
 
 fn err(line: usize, msg: impl Into<String>) -> ParseError {
     ParseError { line, msg: msg.into() }

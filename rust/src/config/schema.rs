@@ -49,6 +49,23 @@ impl SelectionKind {
             Self::Turbo => "turbo",
         }
     }
+    /// Stable on-disk code (KNNIv1 index bundles).
+    pub fn code(self) -> u8 {
+        match self {
+            Self::Naive => 0,
+            Self::Heap => 1,
+            Self::Turbo => 2,
+        }
+    }
+    /// Inverse of [`code`](Self::code).
+    pub fn from_code(c: u8) -> Option<Self> {
+        match c {
+            0 => Some(Self::Naive),
+            1 => Some(Self::Heap),
+            2 => Some(Self::Turbo),
+            _ => None,
+        }
+    }
 }
 
 /// Which distance-evaluation backend the compute step uses (paper §3.3).
@@ -80,6 +97,25 @@ impl ComputeKind {
             Self::Unrolled => "unrolled",
             Self::Blocked => "blocked",
             Self::Pjrt => "pjrt",
+        }
+    }
+    /// Stable on-disk code (KNNIv1 index bundles).
+    pub fn code(self) -> u8 {
+        match self {
+            Self::Scalar => 0,
+            Self::Unrolled => 1,
+            Self::Blocked => 2,
+            Self::Pjrt => 3,
+        }
+    }
+    /// Inverse of [`code`](Self::code).
+    pub fn from_code(c: u8) -> Option<Self> {
+        match c {
+            0 => Some(Self::Scalar),
+            1 => Some(Self::Unrolled),
+            2 => Some(Self::Blocked),
+            3 => Some(Self::Pjrt),
+            _ => None,
         }
     }
 }
@@ -333,5 +369,17 @@ mod tests {
         for c in [ComputeKind::Scalar, ComputeKind::Unrolled, ComputeKind::Blocked, ComputeKind::Pjrt] {
             assert_eq!(ComputeKind::parse(c.name()), Some(c));
         }
+    }
+
+    #[test]
+    fn kind_codes_roundtrip() {
+        for k in [SelectionKind::Naive, SelectionKind::Heap, SelectionKind::Turbo] {
+            assert_eq!(SelectionKind::from_code(k.code()), Some(k));
+        }
+        for c in [ComputeKind::Scalar, ComputeKind::Unrolled, ComputeKind::Blocked, ComputeKind::Pjrt] {
+            assert_eq!(ComputeKind::from_code(c.code()), Some(c));
+        }
+        assert_eq!(SelectionKind::from_code(9), None);
+        assert_eq!(ComputeKind::from_code(9), None);
     }
 }

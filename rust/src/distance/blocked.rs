@@ -184,6 +184,100 @@ fn diag_block(data: &AlignedMatrix, ids: &[u32], ib: usize, dpad: usize, out: &m
     }
 }
 
+/// Distances from one padded query row to the `ids` rows of `data`,
+/// written into `out[j]` (cleared and resized). 1×5 blocking: each
+/// 8-lane step loads the query chunk once and five row chunks — 6 loads
+/// feed 5 accumulations, vs 2 loads per 1 for pair-at-a-time — which is
+/// the serving-path analogue of the build kernel's Fig-2 amortization.
+///
+/// Per pair, the floating-point operation sequence (chunk order, fused
+/// multiply-add accumulation, lane reduction) is identical to
+/// [`sq_l2_unrolled`], so results are **bit-equal** to the pairwise
+/// kernel — batched query serving can match sequential search exactly.
+/// Returns the number of distance evaluations (`ids.len()`).
+pub fn one_to_many_blocked(q: &[f32], data: &AlignedMatrix, ids: &[u32], out: &mut Vec<f32>) -> u64 {
+    let dpad = data.dim_pad();
+    debug_assert_eq!(q.len(), dpad, "query must be padded to the matrix width");
+    let m = ids.len();
+    out.clear();
+    out.resize(m, 0.0);
+    let full = (m / BLOCK) * BLOCK;
+    for jb in (0..full).step_by(BLOCK) {
+        let rows: [&[f32]; BLOCK] = std::array::from_fn(|b| data.row(ids[jb + b] as usize));
+        let mut acc = [f32x8::splat(0.0); BLOCK];
+        let mut c = 0;
+        while c < dpad {
+            let qv = f32x8::from_slice(&q[c..c + 8]);
+            for b in 0..BLOCK {
+                let d = qv - f32x8::from_slice(&rows[b][c..c + 8]);
+                acc[b] = d.mul_add(d, acc[b]);
+            }
+            c += 8;
+        }
+        for b in 0..BLOCK {
+            out[jb + b] = acc[b].reduce_sum();
+        }
+    }
+    for j in full..m {
+        out[j] = sq_l2_unrolled(q, data.row(ids[j] as usize));
+    }
+    m as u64
+}
+
+/// All distances from the rows of `queries` to the `ids` rows of `data`,
+/// row-major into `out[qi · ids.len() + j]`. 5×5 tiles across the two
+/// matrices: 10 loads per 8-lane step feed 25 accumulations — the
+/// paper's blocked kernel applied to the batched query×corpus workload.
+/// Remainder rows/columns fall back to [`sq_l2_unrolled`]; like
+/// [`one_to_many_blocked`], every pair is bit-equal to the pairwise
+/// kernel. Returns the number of distance evaluations.
+pub fn cross_blocked(queries: &AlignedMatrix, data: &AlignedMatrix, ids: &[u32], out: &mut [f32]) -> u64 {
+    assert_eq!(queries.dim_pad(), data.dim_pad(), "query/corpus width mismatch");
+    let (nq, m) = (queries.n(), ids.len());
+    assert_eq!(out.len(), nq * m, "output buffer size mismatch");
+    let dpad = data.dim_pad();
+    let qfull = (nq / BLOCK) * BLOCK;
+    let cfull = (m / BLOCK) * BLOCK;
+    for ib in (0..qfull).step_by(BLOCK) {
+        let qrows: [&[f32]; BLOCK] = std::array::from_fn(|a| queries.row(ib + a));
+        for jb in (0..cfull).step_by(BLOCK) {
+            let crows: [&[f32]; BLOCK] = std::array::from_fn(|b| data.row(ids[jb + b] as usize));
+            let mut acc = [[f32x8::splat(0.0); BLOCK]; BLOCK];
+            let mut c = 0;
+            while c < dpad {
+                let cv: [f32x8; BLOCK] =
+                    std::array::from_fn(|b| f32x8::from_slice(&crows[b][c..c + 8]));
+                for a in 0..BLOCK {
+                    let qa = f32x8::from_slice(&qrows[a][c..c + 8]);
+                    for b in 0..BLOCK {
+                        let d = qa - cv[b];
+                        acc[a][b] = d.mul_add(d, acc[a][b]);
+                    }
+                }
+                c += 8;
+            }
+            for a in 0..BLOCK {
+                for b in 0..BLOCK {
+                    out[(ib + a) * m + jb + b] = acc[a][b].reduce_sum();
+                }
+            }
+        }
+        for j in cfull..m {
+            let row = data.row(ids[j] as usize);
+            for (a, q) in qrows.iter().enumerate() {
+                out[(ib + a) * m + j] = sq_l2_unrolled(q, row);
+            }
+        }
+    }
+    for qi in qfull..nq {
+        let q = queries.row(qi);
+        for j in 0..m {
+            out[qi * m + j] = sq_l2_unrolled(q, data.row(ids[j] as usize));
+        }
+    }
+    (nq * m) as u64
+}
+
 /// Unblocked reference: same contract as [`pairwise_blocked`] but one
 /// pair at a time (used by the `scalar`/`unrolled` compute backends and
 /// as the oracle for the blocked path).
@@ -318,6 +412,71 @@ mod tests {
         let ids: Vec<u32> = (0..10).collect();
         let mut buf = PairwiseBuf::with_capacity(10);
         assert_eq!(pairwise_blocked_active(&data, &ids, 0, &mut buf), 0);
+    }
+
+    #[test]
+    fn one_to_many_bit_equals_unrolled() {
+        // the serving path's exact-equivalence guarantee rests on this
+        check(Config::cases(60), "one_to_many == unrolled bitwise", |g| {
+            let n = g.usize_in(2..40);
+            let dim = 8 * g.usize_in(1..8);
+            let data = random_matrix(g, n, dim);
+            let q = g.vec_f32(dim, 8.0);
+            let m = g.usize_in(0..n + 1);
+            let ids: Vec<u32> = (0..m).map(|_| g.u32_in(0..n as u32)).collect();
+            let mut out = Vec::new();
+            let evals = one_to_many_blocked(&q, &data, &ids, &mut out);
+            evals == m as u64
+                && out.len() == m
+                && ids.iter().enumerate().all(|(j, &v)| {
+                    out[j].to_bits() == sq_l2_unrolled(&q, data.row(v as usize)).to_bits()
+                })
+        });
+    }
+
+    #[test]
+    fn cross_bit_equals_unrolled() {
+        check(Config::cases(60), "cross == unrolled bitwise", |g| {
+            let n = g.usize_in(2..30);
+            let dim = 8 * g.usize_in(1..6);
+            let data = random_matrix(g, n, dim);
+            let nq = g.usize_in(1..14);
+            let queries = random_matrix(g, nq, dim);
+            let m = g.usize_in(0..n.min(17) + 1);
+            let ids: Vec<u32> = (0..m).map(|_| g.u32_in(0..n as u32)).collect();
+            let mut out = vec![0f32; nq * m];
+            let evals = cross_blocked(&queries, &data, &ids, &mut out);
+            evals == (nq * m) as u64
+                && (0..nq).all(|qi| {
+                    ids.iter().enumerate().all(|(j, &v)| {
+                        out[qi * m + j].to_bits()
+                            == sq_l2_unrolled(queries.row(qi), data.row(v as usize)).to_bits()
+                    })
+                })
+        });
+    }
+
+    #[test]
+    fn cross_covers_all_remainder_shapes() {
+        // pure tiles (5,10), pure remainders (1..4), mixed (7, 13)
+        for (nq, m) in [(5, 10), (3, 3), (7, 13), (1, 1), (6, 5), (10, 4)] {
+            let mut g = crate::testing::Gen::new_for_test((nq * 31 + m) as u64);
+            let data = random_matrix(&mut g, 20, 16);
+            let queries = random_matrix(&mut g, nq, 16);
+            let ids: Vec<u32> = (0..m as u32).collect();
+            let mut out = vec![0f32; nq * m];
+            cross_blocked(&queries, &data, &ids, &mut out);
+            for qi in 0..nq {
+                for (j, &v) in ids.iter().enumerate() {
+                    let expect = sq_l2_unrolled(queries.row(qi), data.row(v as usize));
+                    assert_eq!(
+                        out[qi * m + j].to_bits(),
+                        expect.to_bits(),
+                        "nq={nq} m={m} ({qi},{j})"
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -22,7 +22,7 @@ pub mod blocked;
 pub mod scalar;
 pub mod unrolled;
 
-pub use blocked::{pairwise_blocked, PairwiseBuf};
+pub use blocked::{cross_blocked, one_to_many_blocked, pairwise_blocked, PairwiseBuf};
 pub use scalar::sq_l2_scalar;
 pub use unrolled::sq_l2_unrolled;
 

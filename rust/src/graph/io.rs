@@ -26,12 +26,13 @@ use std::path::Path;
 const MAGIC: &[u8; 8] = b"KNNGv1\0\0";
 
 /// FNV-1a streaming hasher (integrity check without external deps).
-struct Fnv(u64);
+/// Shared with the KNNIv1 index-bundle format (`search::bundle`).
+pub(crate) struct Fnv(pub(crate) u64);
 impl Fnv {
-    fn new() -> Self {
+    pub(crate) fn new() -> Self {
         Self(0xcbf29ce484222325)
     }
-    fn update(&mut self, bytes: &[u8]) {
+    pub(crate) fn update(&mut self, bytes: &[u8]) {
         for &b in bytes {
             self.0 ^= b as u64;
             self.0 = self.0.wrapping_mul(0x100000001b3);
@@ -65,6 +66,29 @@ pub fn save_graph(path: &Path, graph: &KnnGraph) -> Result<()> {
     w.write_all(&crc.0.to_le_bytes())?;
     w.flush()?;
     Ok(())
+}
+
+/// Rebuild a [`KnnGraph`] from deserialized id/dist strips: push in
+/// strip order (re-heapifies and rebuilds every counter; distances are
+/// preserved exactly), validating each edge. Shared by the `KNNGv1`
+/// graph format and the `KNNIv1` index-bundle format.
+pub(crate) fn rebuild_graph(n: usize, k: usize, ids: &[u32], dists: &[f32]) -> Result<KnnGraph> {
+    debug_assert_eq!(ids.len(), n * k);
+    debug_assert_eq!(dists.len(), n * k);
+    let mut graph = KnnGraph::new(n, k);
+    for u in 0..n {
+        for i in 0..k {
+            let v = ids[u * k + i];
+            if v == EMPTY_ID {
+                continue;
+            }
+            if v as usize >= n || v as usize == u {
+                bail!("corrupt edge {u} → {v}");
+            }
+            graph.push(u, v, dists[u * k + i], false);
+        }
+    }
+    Ok(graph)
 }
 
 /// Deserialize a graph (validates magic, sizes, and checksum).
@@ -109,22 +133,7 @@ pub fn load_graph(path: &Path) -> Result<KnnGraph> {
         bail!("checksum mismatch — file corrupt");
     }
 
-    // rebuild as a KnnGraph: push in strip order. Pushing re-heapifies
-    // and rebuilds every counter; distances are preserved exactly.
-    let mut graph = KnnGraph::new(n, k);
-    for u in 0..n {
-        for i in 0..k {
-            let v = ids[u * k + i];
-            if v == EMPTY_ID {
-                continue;
-            }
-            if v as usize >= n || v as usize == u {
-                bail!("corrupt edge {u} → {v}");
-            }
-            graph.push(u, v, dists[u * k + i], false);
-        }
-    }
-    Ok(graph)
+    rebuild_graph(n, k, &ids, &dists)
 }
 
 #[cfg(test)]

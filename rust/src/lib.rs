@@ -22,6 +22,8 @@
 //!   AOT-lowered to HLO text artifacts.
 //! * **runtime** — loads those artifacts through PJRT (`xla` crate) so the
 //!   compute step can be offloaded without any Python on the request path.
+//!   Gated behind the off-by-default `pjrt` cargo feature because the
+//!   `xla` crate is unavailable offline.
 //!
 //! ## Quickstart
 //!
@@ -48,6 +50,7 @@ pub mod metrics;
 pub mod nndescent;
 pub mod pipeline;
 pub mod roofline;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod search;
 pub mod testing;

@@ -3,14 +3,19 @@
 //! Subcommands:
 //!   build     build a K-NN graph (config file or flags), report stats
 //!   gen       generate a dataset and write it as .fvecs
+//!   query     serve ANN queries — batched from a KNNIv1 index bundle,
+//!             or one at a time from a bare graph + corpus
 //!   check     verify AOT artifacts load and the PJRT engine matches
-//!             the native kernels
+//!             the native kernels (requires --features pjrt)
 //!   info      print version, defaults, artifact inventory
 //!
 //! Examples:
 //!   knng build --config configs/mnist.toml
 //!   knng build --dataset clustered --n 16k --dim 8 --clusters 16 \
 //!              --selection turbo --compute blocked --reorder
+//!   knng build --dataset fvecs --path corpus.fvecs --n 100k --reorder \
+//!              --save-index corpus.knni
+//!   knng query --index corpus.knni --batch queries.fvecs --k 10 --ef 64
 //!   knng gen --dataset gaussian --n 4096 --dim 64 --out /tmp/g.fvecs
 //!   knng check --artifacts artifacts
 
@@ -49,7 +54,7 @@ fn print_help() {
          subcommands:\n  \
          build   build a K-NN graph and report stats/recall\n  \
          gen     generate a synthetic dataset to .fvecs\n  \
-         query   serve ANN queries over a saved graph (beam search)\n  \
+         query   serve ANN queries (batched via --index bundle, or --graph)\n  \
          check   validate AOT artifacts + PJRT numerics\n  \
          info    version, defaults, artifact inventory\n\n\
          run `knng <cmd> --help` for flags",
@@ -76,6 +81,7 @@ fn build_spec() -> ArgSpec {
         .value("recall-queries", "sampled ground-truth queries (default 500, 0=off)")
         .value("artifacts", "artifact dir for --compute pjrt (default artifacts)")
         .value("save", "write the built graph (original id space) to this path")
+        .value("save-index", "write a KNNIv1 index bundle (graph+data+params) to this path")
         .flag("tsv", "emit a TSV row instead of the human report")
         .flag("help", "show this help")
 }
@@ -134,7 +140,7 @@ fn cmd_build(argv: &[String]) -> anyhow::Result<()> {
     cfg.run.artifacts_dir = m.str_or("artifacts", &cfg.run.artifacts_dir).to_string();
 
     let eval = EvalOptions { recall_queries: m.usize_or("recall-queries", 500)?, seed: cfg.run.seed };
-    let (report, result, _ds) = knng::pipeline::run_experiment_full(&cfg, eval)?;
+    let (report, result, ds) = knng::pipeline::run_experiment_full(&cfg, eval)?;
     if let Some(path) = m.get("save") {
         // persist in the *original* id space (undo any reordering)
         let graph = match &result.reordering {
@@ -143,6 +149,14 @@ fn cmd_build(argv: &[String]) -> anyhow::Result<()> {
         };
         knng::graph::save_graph(std::path::Path::new(path), &graph)?;
         eprintln!("saved graph to {path}");
+    }
+    if let Some(path) = m.get("save-index") {
+        // persist the full serving bundle: graph + data in the *working*
+        // layout (keeps reorder locality) + σ to map ids back + params
+        let params = knng::nndescent::Params::from(&cfg.run);
+        let bundle = knng::search::IndexBundle::from_build(&ds.data, &result, &params);
+        knng::search::save_index(std::path::Path::new(path), &bundle)?;
+        eprintln!("saved index bundle to {path}");
     }
     if m.has("tsv") {
         println!("{}", knng::pipeline::RunReport::tsv_header());
@@ -155,18 +169,75 @@ fn cmd_build(argv: &[String]) -> anyhow::Result<()> {
 
 fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
     let spec = ArgSpec::new()
-        .value("graph", "saved graph file from `build --save` (required)")
-        .value("data", ".fvecs corpus the graph was built on (required)")
-        .value("queries", ".fvecs query vectors (required)")
+        .value("index", "KNNIv1 index bundle from `build --save-index` (batched serving)")
+        .value("batch", ".fvecs query vectors, served through the batched path (with --index)")
+        .value("graph", "saved graph file from `build --save` (legacy; pairs with --data)")
+        .value("data", ".fvecs corpus the graph was built on (with --graph)")
+        .value("queries", ".fvecs query vectors, served one at a time (with --graph)")
         .value("k", "neighbors per query (default 10)")
         .value("ef", "beam width (default 64)")
-        .flag("stats", "print per-query eval counts")
+        .flag("stats", "print the aggregate QueryStats breakdown to stderr")
         .flag("help", "show this help");
     let m = parse_args(&spec, argv)?;
     if m.has("help") {
         print!("{}", spec.usage("query"));
         return Ok(());
     }
+    let k = m.usize_or("k", 10)?;
+    let params = knng::search::SearchParams {
+        ef: m.usize_or("ef", 64)?,
+        ..Default::default()
+    };
+
+    if let Some(index_path) = m.get("index") {
+        // ---- batched serving from a KNNIv1 bundle -----------------------
+        let qpath = m
+            .get("batch")
+            .or_else(|| m.get("queries"))
+            .ok_or_else(|| anyhow::anyhow!("--batch <fvecs> is required with --index"))?;
+        let bundle = knng::search::load_index(std::path::Path::new(index_path))?;
+        let queries = knng::dataset::fvecs::read_fvecs(std::path::Path::new(qpath), usize::MAX)?;
+        anyhow::ensure!(
+            queries.dim() == bundle.data.dim(),
+            "query dim {} does not match index dim {}",
+            queries.dim(),
+            bundle.data.dim()
+        );
+        let (index, reordering, built_with) = bundle.into_index();
+        let (results, stats) = index.search_batch(&queries, k, &params);
+        for (qi, res) in results.iter().enumerate() {
+            let row: Vec<String> = res
+                .iter()
+                .map(|&(v, d)| {
+                    format!("{}:{d:.4}", knng::search::IndexBundle::original_id(&reordering, v))
+                })
+                .collect();
+            println!("{qi}\t{}", row.join("\t"));
+        }
+        eprintln!(
+            "{} queries in {:.3}s ({:.0} qps), {:.0} evals/query, {:.1} expansions/query \
+             [index n={}, graph k={}, built {}/{}{}]",
+            stats.queries,
+            stats.secs,
+            stats.qps(),
+            stats.dist_evals_per_query(),
+            stats.expansions_per_query(),
+            index.n(),
+            index.graph().k(),
+            built_with.selection.name(),
+            built_with.compute.name(),
+            if reordering.is_some() { "+reorder" } else { "" },
+        );
+        if m.has("stats") {
+            eprintln!(
+                "totals: {} distance evaluations, {} expansions, ef={}, k={k}",
+                stats.dist_evals, stats.expansions, params.ef
+            );
+        }
+        return Ok(());
+    }
+
+    // ---- legacy path: bare graph + corpus, one query at a time ----------
     let need = |k: &str| {
         m.get(k).map(String::from).ok_or_else(|| anyhow::anyhow!("--{k} is required"))
     };
@@ -175,11 +246,6 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
     let queries =
         knng::dataset::fvecs::read_fvecs(std::path::Path::new(&need("queries")?), usize::MAX)?;
     anyhow::ensure!(queries.dim() == data.dim(), "query/corpus dim mismatch");
-    let k = m.usize_or("k", 10)?;
-    let params = knng::search::SearchParams {
-        ef: m.usize_or("ef", 64)?,
-        ..Default::default()
-    };
     let index = knng::search::GraphIndex::new(data, graph);
     let t0 = std::time::Instant::now();
     let mut total_evals = 0u64;
@@ -232,10 +298,29 @@ fn cmd_gen(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-fn cmd_check(argv: &[String]) -> anyhow::Result<()> {
-    let spec = ArgSpec::new()
+fn check_spec() -> ArgSpec {
+    ArgSpec::new()
         .value("artifacts", "artifact dir (default artifacts)")
-        .flag("help", "show this help");
+        .flag("help", "show this help")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_check(argv: &[String]) -> anyhow::Result<()> {
+    let spec = check_spec();
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("check"));
+        return Ok(());
+    }
+    anyhow::bail!(
+        "`knng check` validates PJRT artifacts and requires the `pjrt` cargo feature \
+         (rebuild with `--features pjrt`)"
+    )
+}
+
+#[cfg(feature = "pjrt")]
+fn cmd_check(argv: &[String]) -> anyhow::Result<()> {
+    let spec = check_spec();
     let m = parse_args(&spec, argv)?;
     if m.has("help") {
         print!("{}", spec.usage("check"));
@@ -307,6 +392,12 @@ fn cmd_info(argv: &[String]) -> anyhow::Result<()> {
         d.max_candidates
     );
     let dir = m.str_or("artifacts", "artifacts");
+    artifact_inventory(dir);
+    Ok(())
+}
+
+#[cfg(feature = "pjrt")]
+fn artifact_inventory(dir: &str) {
     match knng::runtime::ArtifactStore::open(dir) {
         Ok(store) => {
             println!("artifacts in {dir}:");
@@ -316,5 +407,9 @@ fn cmd_info(argv: &[String]) -> anyhow::Result<()> {
         }
         Err(e) => println!("artifacts: unavailable ({e})"),
     }
-    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn artifact_inventory(dir: &str) {
+    println!("artifacts in {dir}: unavailable (built without the `pjrt` cargo feature)");
 }

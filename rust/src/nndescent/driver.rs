@@ -80,7 +80,8 @@ impl NnDescent {
     pub fn build(&self, data: &AlignedMatrix) -> BuildResult {
         assert!(
             self.params.compute != ComputeKind::Pjrt,
-            "pjrt backend needs an engine: use build_with_engine(runtime::PjrtEngine)"
+            "pjrt backend needs an engine: enable the `pjrt` cargo feature and use \
+             build_with_engine(runtime::PjrtEngine); native builds use scalar|unrolled|blocked"
         );
         let mut engine = NativeEngine::new(self.params.compute);
         self.build_with_engine(data, &mut engine, &mut NoTracer)

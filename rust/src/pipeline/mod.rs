@@ -12,8 +12,6 @@ use crate::config::ExperimentConfig;
 use crate::dataset::{self, Dataset};
 use crate::metrics::recall::recall_against_truth;
 use crate::nndescent::{NnDescent, Params};
-use crate::runtime::PjrtEngine;
-use crate::cachesim::trace::NoTracer;
 
 /// Options controlling the evaluation stage.
 #[derive(Debug, Clone, Copy)]
@@ -68,14 +66,7 @@ pub fn run_on_dataset(
 
     let nnd = NnDescent::new(params.clone());
     let result = if params.compute == ComputeKind::Pjrt {
-        let mut engine = PjrtEngine::open(artifacts_dir)?;
-        let r = nnd.build_with_engine(&ds.data, &mut engine, &mut NoTracer);
-        crate::log_info!(
-            "pjrt engine: {} executions, {} rows gathered",
-            engine.executions,
-            engine.rows_gathered
-        );
-        r
+        build_pjrt(&nnd, ds, artifacts_dir)?
     } else {
         nnd.build(&ds.data)
     };
@@ -90,6 +81,38 @@ pub fn run_on_dataset(
 
     let report = RunReport::new(name, ds, params, &result, recall);
     Ok((report, result))
+}
+
+/// Build through the PJRT engine (pjrt feature on).
+#[cfg(feature = "pjrt")]
+fn build_pjrt(
+    nnd: &NnDescent,
+    ds: &Dataset,
+    artifacts_dir: &str,
+) -> anyhow::Result<crate::nndescent::BuildResult> {
+    let mut engine = crate::runtime::PjrtEngine::open(artifacts_dir)?;
+    let r = nnd.build_with_engine(&ds.data, &mut engine, &mut crate::cachesim::trace::NoTracer);
+    crate::log_info!(
+        "pjrt engine: {} executions, {} rows gathered",
+        engine.executions,
+        engine.rows_gathered
+    );
+    Ok(r)
+}
+
+/// The pjrt feature is off: fail with an actionable message instead of
+/// a missing-module compile error.
+#[cfg(not(feature = "pjrt"))]
+fn build_pjrt(
+    _nnd: &NnDescent,
+    _ds: &Dataset,
+    _artifacts_dir: &str,
+) -> anyhow::Result<crate::nndescent::BuildResult> {
+    anyhow::bail!(
+        "compute backend `pjrt` requires the `pjrt` cargo feature \
+         (rebuild with `--features pjrt` and vendor the `xla` crate); \
+         the native backends are scalar|unrolled|blocked"
+    )
 }
 
 #[cfg(test)]

@@ -1,12 +1,22 @@
-//! Greedy beam search over the K-NN graph.
+//! Greedy beam search over the K-NN graph — single-query and batched.
+//!
+//! Both entry points share one search core, and all candidate distances
+//! flow through the blocked kernels in `distance::blocked`, whose
+//! per-pair results are bit-equal to `sq_l2_unrolled`. Consequently
+//! [`GraphIndex::search_batch`] returns *exactly* the results of the
+//! equivalent sequence of [`GraphIndex::search`] calls while doing its
+//! probe evaluations as one query×corpus blocked tile and its expansion
+//! evaluations as 1×5 blocked strips, and reusing all per-query scratch
+//! (visited map, heaps, candidate buffers) across the batch.
 
 use crate::dataset::AlignedMatrix;
-use crate::distance::sq_l2_unrolled;
+use crate::distance::blocked::{cross_blocked, one_to_many_blocked};
 use crate::graph::heap::EMPTY_ID;
 use crate::graph::KnnGraph;
 use crate::util::rng::Pcg64;
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::time::Instant;
 
 /// Search-time knobs.
 #[derive(Debug, Clone, Copy)]
@@ -32,12 +42,52 @@ impl Default for SearchParams {
 }
 
 /// Per-query diagnostics.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct QueryStats {
     /// Distance evaluations performed.
     pub dist_evals: u64,
     /// Graph nodes expanded.
     pub expansions: u64,
+}
+
+/// Aggregate diagnostics for one [`GraphIndex::search_batch`] call.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchStats {
+    /// Queries served.
+    pub queries: usize,
+    /// Total distance evaluations across the batch.
+    pub dist_evals: u64,
+    /// Total graph-node expansions across the batch.
+    pub expansions: u64,
+    /// Wall time for the whole batch, seconds.
+    pub secs: f64,
+}
+
+impl BatchStats {
+    /// Throughput, queries per second.
+    pub fn qps(&self) -> f64 {
+        if self.secs > 0.0 {
+            self.queries as f64 / self.secs
+        } else {
+            0.0
+        }
+    }
+    /// Mean distance evaluations per query.
+    pub fn dist_evals_per_query(&self) -> f64 {
+        if self.queries > 0 {
+            self.dist_evals as f64 / self.queries as f64
+        } else {
+            0.0
+        }
+    }
+    /// Mean graph expansions per query.
+    pub fn expansions_per_query(&self) -> f64 {
+        if self.queries > 0 {
+            self.expansions as f64 / self.queries as f64
+        } else {
+            0.0
+        }
+    }
 }
 
 /// An immutable ANN index: the built graph + the (possibly reordered)
@@ -60,6 +110,78 @@ impl Ord for Ord32 {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         self.0.partial_cmp(&other.0).unwrap()
     }
+}
+
+/// Per-query working state, allocated once and reused across a batch
+/// (the `PairwiseBuf` discipline applied to serving). The visited map
+/// is reset sparsely via the `touched` journal, so a batch of q queries
+/// costs one O(n) allocation total instead of q.
+struct QueryScratch {
+    visited: Vec<bool>,
+    touched: Vec<u32>,
+    frontier: BinaryHeap<Reverse<(Ord32, u32)>>,
+    pool: BinaryHeap<(Ord32, u32)>,
+    probe_best: BinaryHeap<(Ord32, u32)>,
+    cand_ids: Vec<u32>,
+    cand_dists: Vec<f32>,
+}
+
+impl QueryScratch {
+    fn new(n: usize) -> Self {
+        Self {
+            visited: vec![false; n],
+            touched: Vec::new(),
+            frontier: BinaryHeap::new(),
+            pool: BinaryHeap::new(),
+            probe_best: BinaryHeap::new(),
+            cand_ids: Vec::new(),
+            cand_dists: Vec::new(),
+        }
+    }
+
+    /// Make the scratch equivalent to freshly allocated.
+    fn reset(&mut self) {
+        for v in self.touched.drain(..) {
+            self.visited[v as usize] = false;
+        }
+        self.frontier.clear();
+        self.pool.clear();
+        self.probe_best.clear();
+    }
+
+    #[inline]
+    fn visit(&mut self, v: u32) {
+        self.visited[v as usize] = true;
+        self.touched.push(v);
+    }
+}
+
+/// The deterministic probe id sequence for an index of `n` points: the
+/// first occurrence of each drawn id, in draw order. This depends only
+/// on (`n`, `params`), never on the query, so a batch evaluates the
+/// whole query×probe tile with the blocked kernel up front. Dedup
+/// borrows the scratch's visited map (journaled, reset afterwards)
+/// instead of allocating its own.
+fn probe_ids(n: usize, params: &SearchParams, scratch: &mut QueryScratch) -> Vec<u32> {
+    let probes = if params.probes > 0 {
+        params.probes
+    } else {
+        (4.0 * (n as f64).sqrt()) as usize
+    }
+    .clamp(32.min(n), n);
+    let mut rng = Pcg64::new_stream(params.rng_seed, 0x5EED5);
+    scratch.reset();
+    let mut ids = Vec::with_capacity(probes);
+    for _ in 0..probes {
+        let v = rng.gen_index(n) as u32;
+        if scratch.visited[v as usize] {
+            continue;
+        }
+        scratch.visit(v);
+        ids.push(v);
+    }
+    scratch.reset();
+    ids
 }
 
 impl GraphIndex {
@@ -85,83 +207,137 @@ impl GraphIndex {
     /// k nearest neighbors of `query` (padded or logical length),
     /// ascending by distance.
     pub fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> (Vec<(u32, f32)>, QueryStats) {
+        let q = self.pad_query(query);
+        let mut scratch = QueryScratch::new(self.data.n());
+        let probes = probe_ids(self.data.n(), params, &mut scratch);
+        let mut probe_dists = Vec::new();
+        one_to_many_blocked(&q, &self.data, &probes, &mut probe_dists);
+        self.search_core(&q, k, params, &probes, &probe_dists, &mut scratch)
+    }
+
+    /// Serve a batch of queries (rows of `queries`, logical width equal
+    /// to the index's). Results are **identical** to calling [`search`]
+    /// once per row with the same `params`: the probe stage runs as one
+    /// query×probe blocked tile and expansions as 1×5 blocked strips,
+    /// both bit-equal to the sequential kernel, and the per-query
+    /// control flow is shared. Returns per-query results plus aggregate
+    /// [`BatchStats`].
+    ///
+    /// [`search`]: GraphIndex::search
+    pub fn search_batch(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<(u32, f32)>>, BatchStats) {
+        assert_eq!(
+            queries.dim(),
+            self.data.dim(),
+            "query batch dim {} does not match index dim {}",
+            queries.dim(),
+            self.data.dim()
+        );
+        let t0 = Instant::now();
         let n = self.data.n();
+        let mut scratch = QueryScratch::new(n);
+        let probes = probe_ids(n, params, &mut scratch);
+        let p = probes.len();
+        let mut probe_dists = vec![0f32; queries.n() * p];
+        cross_blocked(queries, &self.data, &probes, &mut probe_dists);
+        let mut results = Vec::with_capacity(queries.n());
+        let mut agg = BatchStats { queries: queries.n(), ..Default::default() };
+        for qi in 0..queries.n() {
+            let (res, stats) = self.search_core(
+                queries.row(qi),
+                k,
+                params,
+                &probes,
+                &probe_dists[qi * p..(qi + 1) * p],
+                &mut scratch,
+            );
+            agg.dist_evals += stats.dist_evals;
+            agg.expansions += stats.expansions;
+            results.push(res);
+        }
+        agg.secs = t0.elapsed().as_secs_f64();
+        (results, agg)
+    }
+
+    /// Shared beam-search core. `probes`/`probe_dists` carry the
+    /// precomputed entry-point evaluations (same set and order the
+    /// sequential path would produce); `q` is a padded query row.
+    fn search_core(
+        &self,
+        q: &[f32],
+        k: usize,
+        params: &SearchParams,
+        probes: &[u32],
+        probe_dists: &[f32],
+        scratch: &mut QueryScratch,
+    ) -> (Vec<(u32, f32)>, QueryStats) {
+        debug_assert_eq!(probes.len(), probe_dists.len());
+        scratch.reset();
         let mut stats = QueryStats::default();
         let ef = params.ef.max(k);
 
-        // pad query to the matrix's lane width
-        let q = self.pad_query(query);
-
-        let mut rng = Pcg64::new_stream(params.rng_seed, 0x5EED5);
-        let mut visited = vec![false; n];
-
-        // candidate frontier: min-heap by distance (Reverse for min)
-        let mut frontier: BinaryHeap<Reverse<(Ord32, u32)>> = BinaryHeap::new();
-        // result pool: max-heap by distance, bounded at ef
-        let mut pool: BinaryHeap<(Ord32, u32)> = BinaryHeap::new();
-
-        // Probe: evaluate a spread of random points, keep the best
-        // `seeds` as entry points (cheap: probes ≪ n, and every probe's
-        // distance is reused via the pool).
-        let probes = if params.probes > 0 {
-            params.probes
-        } else {
-            (4.0 * (n as f64).sqrt()) as usize
-        }
-        .clamp(32.min(n), n);
-        let mut probe_best: BinaryHeap<(Ord32, u32)> = BinaryHeap::new();
-        for _ in 0..probes {
-            let v = rng.gen_index(n) as u32;
-            if visited[v as usize] {
-                continue;
-            }
-            visited[v as usize] = true;
-            let d = sq_l2_unrolled(&q, self.data.row(v as usize));
+        // Probe: the precomputed spread of random points; keep the best
+        // `seeds` as entry points, and feed every probe into the result
+        // pool (probes are legitimate results).
+        for (i, &v) in probes.iter().enumerate() {
+            scratch.visit(v);
+            let d = probe_dists[i];
             stats.dist_evals += 1;
-            // feed the result pool too — probes are legitimate results
-            if pool.len() < ef {
-                pool.push((Ord32(d), v));
-            } else if d < pool.peek().unwrap().0 .0 {
-                pool.pop();
-                pool.push((Ord32(d), v));
+            if scratch.pool.len() < ef {
+                scratch.pool.push((Ord32(d), v));
+            } else if d < scratch.pool.peek().unwrap().0 .0 {
+                scratch.pool.pop();
+                scratch.pool.push((Ord32(d), v));
             }
-            if probe_best.len() < params.seeds.max(1) {
-                probe_best.push((Ord32(d), v));
-            } else if d < probe_best.peek().unwrap().0 .0 {
-                probe_best.pop();
-                probe_best.push((Ord32(d), v));
+            if scratch.probe_best.len() < params.seeds.max(1) {
+                scratch.probe_best.push((Ord32(d), v));
+            } else if d < scratch.probe_best.peek().unwrap().0 .0 {
+                scratch.probe_best.pop();
+                scratch.probe_best.push((Ord32(d), v));
             }
         }
-        for (d, v) in probe_best {
-            frontier.push(Reverse((d, v)));
+        while let Some((d, v)) = scratch.probe_best.pop() {
+            scratch.frontier.push(Reverse((d, v)));
         }
 
-        while let Some(Reverse((Ord32(d), u))) = frontier.pop() {
+        while let Some(Reverse((Ord32(d), u))) = scratch.frontier.pop() {
             // stop when the closest frontier node is worse than the
             // worst pooled result and the pool is full
-            if pool.len() >= ef && d > pool.peek().unwrap().0 .0 {
+            if scratch.pool.len() >= ef && d > scratch.pool.peek().unwrap().0 .0 {
                 break;
             }
             stats.expansions += 1;
+            // gather this expansion's unvisited neighbors, then evaluate
+            // them as one 1×5-blocked strip
+            scratch.cand_ids.clear();
             for &v in self.graph.ids(u as usize) {
-                if v == EMPTY_ID || visited[v as usize] {
+                if v == EMPTY_ID || scratch.visited[v as usize] {
                     continue;
                 }
-                visited[v as usize] = true;
-                let dv = sq_l2_unrolled(&q, self.data.row(v as usize));
-                stats.dist_evals += 1;
-                if pool.len() < ef {
-                    pool.push((Ord32(dv), v));
-                    frontier.push(Reverse((Ord32(dv), v)));
-                } else if dv < pool.peek().unwrap().0 .0 {
-                    pool.pop();
-                    pool.push((Ord32(dv), v));
-                    frontier.push(Reverse((Ord32(dv), v)));
+                scratch.visit(v);
+                scratch.cand_ids.push(v);
+            }
+            one_to_many_blocked(q, &self.data, &scratch.cand_ids, &mut scratch.cand_dists);
+            stats.dist_evals += scratch.cand_ids.len() as u64;
+            for (i, &v) in scratch.cand_ids.iter().enumerate() {
+                let dv = scratch.cand_dists[i];
+                if scratch.pool.len() < ef {
+                    scratch.pool.push((Ord32(dv), v));
+                    scratch.frontier.push(Reverse((Ord32(dv), v)));
+                } else if dv < scratch.pool.peek().unwrap().0 .0 {
+                    scratch.pool.pop();
+                    scratch.pool.push((Ord32(dv), v));
+                    scratch.frontier.push(Reverse((Ord32(dv), v)));
                 }
             }
         }
 
-        let mut results: Vec<(u32, f32)> = pool.into_iter().map(|(Ord32(d), v)| (v, d)).collect();
+        let mut results: Vec<(u32, f32)> =
+            scratch.pool.drain().map(|(Ord32(d), v)| (v, d)).collect();
         results.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
         results.truncate(k);
         (results, stats)
@@ -187,6 +363,7 @@ mod tests {
     use super::*;
     use crate::baseline::brute::brute_force_knn_sampled;
     use crate::dataset::clustered::SynthClustered;
+    use crate::distance::sq_l2_unrolled;
     use crate::nndescent::{NnDescent, Params};
 
     fn index(n: usize, dim: usize, seed: u64) -> (GraphIndex, AlignedMatrix) {
@@ -279,5 +456,84 @@ mod tests {
         }
         let recall = total / truth.queries.len() as f64;
         assert!(recall > 0.9, "search recall {recall}");
+    }
+
+    /// Queries as an AlignedMatrix from held-out rows of `data`.
+    fn query_matrix(data: &AlignedMatrix, from: usize, count: usize) -> AlignedMatrix {
+        let rows: Vec<f32> =
+            (from..from + count).flat_map(|i| data.row_logical(i).to_vec()).collect();
+        AlignedMatrix::from_rows(count, data.dim(), &rows)
+    }
+
+    #[test]
+    fn batch_matches_sequential_exactly() {
+        // the acceptance criterion: identical ids AND identical distance
+        // bits, for every query, under several param settings
+        let (data, _) = SynthClustered::new(1400, 16, 8, 17).generate_labeled();
+        let index_data = query_matrix(&data, 0, 1200);
+        let result =
+            NnDescent::new(Params::default().with_k(16).with_seed(17)).build(&index_data);
+        let idx = GraphIndex::new(index_data, result.graph);
+        let queries = query_matrix(&data, 1200, 200);
+
+        for params in [
+            SearchParams::default(),
+            SearchParams { ef: 16, ..Default::default() },
+            SearchParams { ef: 128, seeds: 4, ..Default::default() },
+            SearchParams { probes: 64, ..Default::default() },
+        ] {
+            let (batch, agg) = idx.search_batch(&queries, 10, &params);
+            assert_eq!(batch.len(), 200);
+            assert_eq!(agg.queries, 200);
+            let mut sum = QueryStats::default();
+            for qi in 0..200 {
+                let (seq, stats) = idx.search(queries.row_logical(qi), 10, &params);
+                assert_eq!(batch[qi], seq, "ef={} query {qi} diverged", params.ef);
+                sum.dist_evals += stats.dist_evals;
+                sum.expansions += stats.expansions;
+            }
+            assert_eq!(agg.dist_evals, sum.dist_evals, "aggregate evals");
+            assert_eq!(agg.expansions, sum.expansions, "aggregate expansions");
+            assert!(agg.secs > 0.0 && agg.qps() > 0.0);
+            assert!(agg.dist_evals_per_query() > 0.0);
+            assert!(agg.expansions_per_query() > 0.0);
+        }
+    }
+
+    #[test]
+    fn batch_self_queries_find_themselves() {
+        let (idx, data) = index(900, 16, 23);
+        let queries = query_matrix(&data, 0, 60);
+        let (res, _) = idx.search_batch(&queries, 3, &SearchParams::default());
+        for (qi, r) in res.iter().enumerate() {
+            assert_eq!(r[0].0 as usize, qi, "self must be the top hit");
+            assert!(r[0].1 < 1e-6);
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let (idx, data) = index(300, 16, 29);
+        let queries = AlignedMatrix::zeroed(0, data.dim());
+        let (res, agg) = idx.search_batch(&queries, 5, &SearchParams::default());
+        assert!(res.is_empty());
+        assert_eq!(agg.queries, 0);
+        assert_eq!(agg.dist_evals, 0);
+        assert_eq!(agg.qps(), 0.0);
+        assert_eq!(agg.dist_evals_per_query(), 0.0);
+    }
+
+    #[test]
+    fn probe_ids_deterministic_and_deduped() {
+        let p = SearchParams::default();
+        let mut scratch = QueryScratch::new(2000);
+        let a = probe_ids(2000, &p, &mut scratch);
+        let b = probe_ids(2000, &p, &mut scratch);
+        assert_eq!(a, b);
+        let mut sorted = a.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), a.len(), "probe ids must be unique");
+        assert!(a.len() <= (4.0 * (2000f64).sqrt()) as usize);
     }
 }

@@ -1,0 +1,436 @@
+//! `KNNIv1` index bundles: one persistent, checksummed artifact holding
+//! everything a serving process needs — the built graph, the aligned
+//! data matrix it refers to (working layout), the reordering that maps
+//! working ids back to original ids, and the build parameters. Extends
+//! the `KNNGv1` discipline of `graph::io` (magic, little-endian fixed
+//! header, FNV-1a trailer, corruption detection) from "a graph" to "a
+//! servable index".
+//!
+//! Layout (little-endian):
+//!
+//! ```text
+//! magic    8 B   "KNNIv1\0\0"
+//! n        8 B   u64  points
+//! dim      8 B   u64  logical dimensionality
+//! k        8 B   u64  neighbors per node in the stored graph
+//! flags    8 B   u64  bit 0: reordering present
+//! params  64 B   build parameters:
+//!                k, max_iters, seed, reorder_iter, max_candidates (u64)
+//!                rho, delta (f64)
+//!                selection, compute, reorder (u8) + 5 B zero padding
+//! ids      n·k·4 B   u32 neighbor ids, heap order (EMPTY_ID = open)
+//! dists    n·k·4 B   f32 neighbor distances, heap order
+//! data     n·dim·4 B f32 row-major logical rows (padding rebuilt on load)
+//! sigma    n·4 B  u32 node → working position   (iff flags bit 0)
+//! inv      n·4 B  u32 working position → node   (iff flags bit 0)
+//! crc      8 B   FNV-1a over everything above
+//! ```
+//!
+//! Like `KNNGv1`, a bundle is a finished artifact, not a resumable
+//! build: graph flags/counters are rebuilt on load.
+
+use super::beam::GraphIndex;
+use crate::dataset::AlignedMatrix;
+use crate::graph::io::Fnv;
+use crate::graph::KnnGraph;
+use crate::nndescent::reorder::Reordering;
+use crate::nndescent::{BuildResult, Params};
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"KNNIv1\0\0";
+const FLAG_REORDERING: u64 = 1;
+
+/// A loaded (or about-to-be-saved) index bundle. `data` and `graph`
+/// share one id space — the *working* layout of the build, so a served
+/// index keeps the locality the greedy reordering bought.
+pub struct IndexBundle {
+    /// Data matrix in the graph's id space.
+    pub data: AlignedMatrix,
+    /// The built K-NN graph.
+    pub graph: KnnGraph,
+    /// σ/σ⁻¹ mapping original ↔ working ids (present iff the build
+    /// reordered). `inv[working]` is the original dataset id.
+    pub reordering: Option<Reordering>,
+    /// Parameters the graph was built with.
+    pub params: Params,
+}
+
+impl IndexBundle {
+    /// Assemble a bundle from a finished build. `data_original` is the
+    /// dataset in its original id space (as fed to `NnDescent::build`);
+    /// it is permuted into the working layout when the build reordered.
+    pub fn from_build(data_original: &AlignedMatrix, result: &BuildResult, params: &Params) -> Self {
+        let data = match &result.reordering {
+            Some(r) => data_original.permuted(&r.inv),
+            None => data_original.clone(),
+        };
+        Self {
+            data,
+            graph: result.graph.clone(),
+            reordering: result.reordering.clone(),
+            params: params.clone(),
+        }
+    }
+
+    /// Turn the bundle into a servable index plus the id mapping and
+    /// build parameters.
+    pub fn into_index(self) -> (GraphIndex, Option<Reordering>, Params) {
+        (GraphIndex::new(self.data, self.graph), self.reordering, self.params)
+    }
+
+    /// Map a working-space result id back to the original dataset id.
+    pub fn original_id(reordering: &Option<Reordering>, working: u32) -> u32 {
+        match reordering {
+            Some(r) => r.inv[working as usize],
+            None => working,
+        }
+    }
+}
+
+fn encode_params(p: &Params) -> [u8; 64] {
+    let mut out = [0u8; 64];
+    out[0..8].copy_from_slice(&(p.k as u64).to_le_bytes());
+    out[8..16].copy_from_slice(&(p.max_iters as u64).to_le_bytes());
+    out[16..24].copy_from_slice(&p.seed.to_le_bytes());
+    out[24..32].copy_from_slice(&(p.reorder_iter as u64).to_le_bytes());
+    out[32..40].copy_from_slice(&(p.max_candidates as u64).to_le_bytes());
+    out[40..48].copy_from_slice(&p.rho.to_le_bytes());
+    out[48..56].copy_from_slice(&p.delta.to_le_bytes());
+    out[56] = p.selection.code();
+    out[57] = p.compute.code();
+    out[58] = p.reorder as u8;
+    out
+}
+
+fn decode_params(b: &[u8; 64]) -> Result<Params> {
+    let u64_at = |o: usize| u64::from_le_bytes(b[o..o + 8].try_into().unwrap());
+    let f64_at = |o: usize| f64::from_le_bytes(b[o..o + 8].try_into().unwrap());
+    let selection = crate::config::schema::SelectionKind::from_code(b[56])
+        .with_context(|| format!("unknown selection code {}", b[56]))?;
+    let compute = crate::config::schema::ComputeKind::from_code(b[57])
+        .with_context(|| format!("unknown compute code {}", b[57]))?;
+    Ok(Params {
+        k: u64_at(0) as usize,
+        max_iters: u64_at(8) as usize,
+        seed: u64_at(16),
+        reorder_iter: u64_at(24) as usize,
+        max_candidates: u64_at(32) as usize,
+        rho: f64_at(40),
+        delta: f64_at(48),
+        selection,
+        compute,
+        reorder: b[58] != 0,
+    })
+}
+
+/// Serialize an index bundle.
+pub fn save_index(path: &Path, bundle: &IndexBundle) -> Result<()> {
+    let (data, graph) = (&bundle.data, &bundle.graph);
+    assert_eq!(data.n(), graph.n(), "bundle graph/data size mismatch");
+    if let Some(r) = &bundle.reordering {
+        r.validate().map_err(|e| anyhow::anyhow!("invalid reordering: {e}"))?;
+        assert_eq!(r.sigma.len(), data.n(), "reordering length mismatch");
+    }
+    let f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let mut crc = Fnv::new();
+    let mut emit = |w: &mut BufWriter<std::fs::File>, bytes: &[u8]| -> Result<()> {
+        crc.update(bytes);
+        w.write_all(bytes)?;
+        Ok(())
+    };
+    emit(&mut w, MAGIC)?;
+    emit(&mut w, &(data.n() as u64).to_le_bytes())?;
+    emit(&mut w, &(data.dim() as u64).to_le_bytes())?;
+    emit(&mut w, &(graph.k() as u64).to_le_bytes())?;
+    let flags = if bundle.reordering.is_some() { FLAG_REORDERING } else { 0 };
+    emit(&mut w, &flags.to_le_bytes())?;
+    emit(&mut w, &encode_params(&bundle.params))?;
+    for u in 0..graph.n() {
+        for &v in graph.ids(u) {
+            emit(&mut w, &v.to_le_bytes())?;
+        }
+    }
+    for u in 0..graph.n() {
+        for &d in graph.dists(u) {
+            emit(&mut w, &d.to_le_bytes())?;
+        }
+    }
+    let mut row_buf = Vec::with_capacity(data.dim() * 4);
+    for i in 0..data.n() {
+        row_buf.clear();
+        for &x in data.row_logical(i) {
+            row_buf.extend_from_slice(&x.to_le_bytes());
+        }
+        emit(&mut w, &row_buf)?;
+    }
+    if let Some(r) = &bundle.reordering {
+        for &s in &r.sigma {
+            emit(&mut w, &s.to_le_bytes())?;
+        }
+        for &p in &r.inv {
+            emit(&mut w, &p.to_le_bytes())?;
+        }
+    }
+    w.write_all(&crc.0.to_le_bytes())?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Deserialize an index bundle (validates magic/version, header
+/// plausibility, edge sanity, reordering consistency, and checksum).
+pub fn load_index(path: &Path) -> Result<IndexBundle> {
+    let f = std::fs::File::open(path).with_context(|| format!("opening {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut crc = Fnv::new();
+
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic).context("reading magic")?;
+    if &magic != MAGIC {
+        if magic.starts_with(b"KNNI") {
+            bail!(
+                "unsupported index bundle version {:?} (this build reads KNNIv1)",
+                String::from_utf8_lossy(&magic[..6])
+            );
+        }
+        bail!("not a KNNIv1 index bundle (magic {:02x?})", magic);
+    }
+    crc.update(&magic);
+
+    let mut buf8 = [0u8; 8];
+    let mut read_u64 = |r: &mut BufReader<std::fs::File>, crc: &mut Fnv| -> Result<u64> {
+        r.read_exact(&mut buf8)?;
+        crc.update(&buf8);
+        Ok(u64::from_le_bytes(buf8))
+    };
+    let n = read_u64(&mut r, &mut crc)? as usize;
+    let dim = read_u64(&mut r, &mut crc)? as usize;
+    let k = read_u64(&mut r, &mut crc)? as usize;
+    let flags = read_u64(&mut r, &mut crc)?;
+    if n < 2 || k < 1 || dim < 1 || dim > 1_000_000 {
+        bail!("implausible index header: n={n}, dim={dim}, k={k}");
+    }
+    // KnnGraph invariants (checked here so corrupt headers error instead
+    // of panicking in the constructor)
+    if k > u16::MAX as usize || n > u32::MAX as usize - 1 {
+        bail!("implausible index header: n={n}, k={k}");
+    }
+    if n.checked_mul(k).is_none() || n * k > (1 << 34) {
+        bail!("implausible graph size: n={n}, k={k}");
+    }
+    if n.checked_mul(dim).is_none() || n * dim > (1 << 36) {
+        bail!("implausible data size: n={n}, dim={dim}");
+    }
+    if flags & !FLAG_REORDERING != 0 {
+        bail!("unknown flag bits {flags:#x}");
+    }
+
+    // The format is fixed-size given the header, so the exact file
+    // length is known up front. Checking it here (a) catches truncation
+    // early and (b) keeps a corrupt header from driving the strip
+    // allocations below to absurd sizes before the CRC could object.
+    let actual = std::fs::metadata(path)?.len();
+    let reorder_bytes = if flags & FLAG_REORDERING != 0 { 2 * n as u64 * 4 } else { 0 };
+    let expected = 8 + 32 + 64 // magic + header + params
+        + 2 * (n as u64 * k as u64 * 4) // ids + dists
+        + n as u64 * dim as u64 * 4 // data rows
+        + reorder_bytes
+        + 8; // crc
+    if actual != expected {
+        bail!(
+            "index bundle size mismatch: file is {actual} bytes, header implies {expected} \
+             — truncated or corrupt"
+        );
+    }
+
+    let mut params_buf = [0u8; 64];
+    r.read_exact(&mut params_buf).context("reading build params")?;
+    crc.update(&params_buf);
+    let params = decode_params(&params_buf)?;
+
+    let mut buf4 = [0u8; 4];
+    let mut ids = vec![0u32; n * k];
+    for slot in ids.iter_mut() {
+        r.read_exact(&mut buf4)?;
+        crc.update(&buf4);
+        *slot = u32::from_le_bytes(buf4);
+    }
+    let mut dists = vec![0f32; n * k];
+    for slot in dists.iter_mut() {
+        r.read_exact(&mut buf4)?;
+        crc.update(&buf4);
+        *slot = f32::from_le_bytes(buf4);
+    }
+
+    let mut data = AlignedMatrix::zeroed(n, dim);
+    let mut row_buf = vec![0u8; dim * 4];
+    for i in 0..n {
+        r.read_exact(&mut row_buf).with_context(|| format!("reading data row {i}"))?;
+        crc.update(&row_buf);
+        let row = data.row_mut(i);
+        for (j, chunk) in row_buf.chunks_exact(4).enumerate() {
+            row[j] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+    }
+
+    let reordering = if flags & FLAG_REORDERING != 0 {
+        let mut sigma = vec![0u32; n];
+        for slot in sigma.iter_mut() {
+            r.read_exact(&mut buf4)?;
+            crc.update(&buf4);
+            *slot = u32::from_le_bytes(buf4);
+        }
+        let mut inv = vec![0u32; n];
+        for slot in inv.iter_mut() {
+            r.read_exact(&mut buf4)?;
+            crc.update(&buf4);
+            *slot = u32::from_le_bytes(buf4);
+        }
+        Some(Reordering { sigma, inv })
+    } else {
+        None
+    };
+
+    let mut trailer = [0u8; 8];
+    r.read_exact(&mut trailer).context("reading checksum")?;
+    if u64::from_le_bytes(trailer) != crc.0 {
+        bail!("checksum mismatch — index bundle corrupt");
+    }
+
+    // semantic validation after the integrity check, so corruption is
+    // reported as corruption rather than as a structural error
+    if let Some(r) = &reordering {
+        r.validate().map_err(|e| anyhow::anyhow!("corrupt reordering: {e}"))?;
+    }
+    let graph = crate::graph::io::rebuild_graph(n, k, &ids, &dists)?;
+
+    Ok(IndexBundle { data, graph, reordering, params })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::clustered::SynthClustered;
+    use crate::nndescent::NnDescent;
+    use crate::search::SearchParams;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("knng_bundle_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn build_bundle(n: usize, seed: u64, reorder: bool) -> (IndexBundle, AlignedMatrix, Params) {
+        let (data, _) = SynthClustered::new(n, 16, 6, seed).generate_labeled();
+        let params = Params::default().with_k(10).with_seed(seed).with_reorder(reorder);
+        let result = NnDescent::new(params.clone()).build(&data);
+        (IndexBundle::from_build(&data, &result, &params), data, params)
+    }
+
+    #[test]
+    fn roundtrip_preserves_graph_data_reordering_params() {
+        let (bundle, _, params) = build_bundle(500, 11, true);
+        assert!(bundle.reordering.is_some(), "reorder build must carry σ");
+        let path = tmp("rt.knni");
+        save_index(&path, &bundle).unwrap();
+        let loaded = load_index(&path).unwrap();
+
+        assert_eq!(loaded.params, params);
+        loaded.graph.validate().unwrap();
+        assert_eq!(loaded.graph.n(), bundle.graph.n());
+        assert_eq!(loaded.graph.k(), bundle.graph.k());
+        for u in 0..bundle.graph.n() {
+            assert_eq!(bundle.graph.sorted(u), loaded.graph.sorted(u), "node {u}");
+        }
+        // data rows bit-exact
+        assert_eq!(loaded.data.n(), bundle.data.n());
+        assert_eq!(loaded.data.dim(), bundle.data.dim());
+        for i in 0..bundle.data.n() {
+            assert_eq!(bundle.data.row(i), loaded.data.row(i), "row {i}");
+        }
+        let (rs, ls) = (bundle.reordering.as_ref().unwrap(), loaded.reordering.as_ref().unwrap());
+        assert_eq!(rs.sigma, ls.sigma);
+        assert_eq!(rs.inv, ls.inv);
+    }
+
+    #[test]
+    fn loaded_index_serves_identically() {
+        let (bundle, data, _) = build_bundle(600, 5, false);
+        let path = tmp("serve.knni");
+        save_index(&path, &bundle).unwrap();
+        let (orig, _, _) = bundle.into_index();
+        let (loaded, reord, _) = load_index(&path).unwrap().into_index();
+        assert!(reord.is_none());
+        let sp = SearchParams::default();
+        for qi in (0..600).step_by(61) {
+            let (a, sa) = orig.search(data.row_logical(qi), 10, &sp);
+            let (b, sb) = loaded.search(data.row_logical(qi), 10, &sp);
+            assert_eq!(a, b, "query {qi}");
+            assert_eq!(sa, sb);
+        }
+    }
+
+    #[test]
+    fn reordered_bundle_maps_ids_back_to_original() {
+        let (bundle, data, _) = build_bundle(500, 7, true);
+        let path = tmp("map.knni");
+        save_index(&path, &bundle).unwrap();
+        let (index, reordering, _) = load_index(&path).unwrap().into_index();
+        let sp = SearchParams::default();
+        for qi in (0..500).step_by(53) {
+            // query with an original-space row: the top hit, mapped back
+            // through σ⁻¹, must be the point itself
+            let (res, _) = index.search(data.row_logical(qi), 3, &sp);
+            let top = IndexBundle::original_id(&reordering, res[0].0);
+            assert_eq!(top as usize, qi, "self hit must map back to original id");
+            assert!(res[0].1 < 1e-6);
+        }
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let (bundle, _, _) = build_bundle(200, 3, true);
+        let path = tmp("corrupt.knni");
+        save_index(&path, &bundle).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_index(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("checksum") || err.contains("corrupt") || err.contains("implausible"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn detects_truncation() {
+        let (bundle, _, _) = build_bundle(200, 9, false);
+        let path = tmp("trunc.knni");
+        save_index(&path, &bundle).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        for keep in [4usize, 8, 40, 104, bytes.len() / 2, bytes.len() - 1] {
+            std::fs::write(&path, &bytes[..keep]).unwrap();
+            assert!(load_index(&path).is_err(), "truncated at {keep} bytes must fail");
+        }
+    }
+
+    #[test]
+    fn rejects_wrong_magic_and_future_version() {
+        let path = tmp("magic.knni");
+        std::fs::write(&path, b"NOTANIDXaaaaaaaa").unwrap();
+        let err = load_index(&path).unwrap_err().to_string();
+        assert!(err.contains("not a KNNIv1"), "unexpected error: {err}");
+
+        // same family, newer version: the message must say "version"
+        let (bundle, _, _) = build_bundle(200, 13, false);
+        save_index(&path, &bundle).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[5] = b'9'; // "KNNIv1" -> "KNNIv9"
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_index(&path).unwrap_err().to_string();
+        assert!(err.contains("version"), "unexpected error: {err}");
+    }
+}

@@ -1,13 +1,18 @@
-//! Approximate nearest-neighbor *queries* over a built K-NN graph —
+//! Approximate nearest-neighbor *serving* over a built K-NN graph —
 //! what downstream consumers (UMAP and friends, §1 of the paper) do
 //! with the graph once NN-Descent has produced it.
 //!
-//! [`GraphIndex`] wraps the finished graph + data and answers queries
-//! with the standard greedy beam search (best-first expansion over the
-//! graph with a bounded candidate pool, PyNNDescent-style): start from
-//! a few seed nodes, repeatedly expand the closest unexpanded candidate,
-//! keep the best `ef` seen, stop when the pool stops improving.
+//! * [`GraphIndex`] wraps the finished graph + data and answers queries
+//!   with the standard greedy beam search (best-first expansion over the
+//!   graph with a bounded candidate pool, PyNNDescent-style), one query
+//!   at a time ([`GraphIndex::search`]) or as a batch tiled through the
+//!   blocked distance kernels ([`GraphIndex::search_batch`]).
+//! * [`IndexBundle`] + [`save_index`]/[`load_index`] persist everything
+//!   a serving process needs — graph, aligned data matrix, reordering,
+//!   build parameters — as one checksummed `KNNIv1` artifact.
 
 pub mod beam;
+pub mod bundle;
 
-pub use beam::{GraphIndex, QueryStats, SearchParams};
+pub use beam::{BatchStats, GraphIndex, QueryStats, SearchParams};
+pub use bundle::{load_index, save_index, IndexBundle};

@@ -89,6 +89,69 @@ fn gen_writes_fvecs_roundtrip() {
 }
 
 #[test]
+fn index_bundle_build_query_roundtrip() {
+    // the serving workflow: gen → build --save-index → query --index,
+    // checked for recall ≥ 0.9 at k=10 against in-process brute force
+    let dir = std::env::temp_dir().join("knng_cli_index");
+    std::fs::create_dir_all(&dir).unwrap();
+    let data_path = dir.join("corpus.fvecs");
+    let index_path = dir.join("corpus.knni");
+
+    let out = knng(&[
+        "gen", "--dataset", "clustered", "--n", "800", "--dim", "8",
+        "--clusters", "8", "--seed", "12",
+        "--out", data_path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+
+    let out = knng(&[
+        "build", "--dataset", "fvecs", "--path", data_path.to_str().unwrap(),
+        "--n", "800", "--k", "16", "--reorder", "--recall-queries", "0",
+        "--save-index", index_path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert!(index_path.exists(), "bundle must be written");
+
+    // query the index with the corpus itself (k=11 ⇒ self + 10 neighbors)
+    let out = knng(&[
+        "query", "--index", index_path.to_str().unwrap(),
+        "--batch", data_path.to_str().unwrap(), "--k", "11", "--stats",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stderr = String::from_utf8_lossy(&out.stderr);
+    assert!(stderr.contains("qps"), "aggregate stats on stderr: {stderr}");
+    assert!(stderr.contains("evals/query"), "aggregate stats on stderr: {stderr}");
+
+    // parse result ids (original id space) and score against brute force
+    let data = knng::dataset::fvecs::read_fvecs(&data_path, usize::MAX).unwrap();
+    let k = 10;
+    let mut hits = 0usize;
+    let mut queries = 0usize;
+    for line in String::from_utf8_lossy(&out.stdout).lines() {
+        let mut cols = line.split('\t');
+        let qi: usize = cols.next().unwrap().parse().unwrap();
+        let found: Vec<u32> = cols
+            .map(|c| c.split(':').next().unwrap().parse().unwrap())
+            .filter(|&v| v as usize != qi) // drop the self hit
+            .take(k)
+            .collect();
+        let mut exact: Vec<(u32, f32)> = (0..data.n() as u32)
+            .filter(|&v| v as usize != qi)
+            .map(|v| {
+                (v, knng::distance::sq_l2_unrolled(data.row(qi), data.row(v as usize)))
+            })
+            .collect();
+        exact.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        hits += exact[..k].iter().filter(|(v, _)| found.contains(v)).count();
+        queries += 1;
+    }
+    assert_eq!(queries, 800, "one output line per query");
+    let recall = hits as f64 / (queries * k) as f64;
+    assert!(recall >= 0.9, "index-serving recall {recall} < 0.9");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn bad_input_fails_cleanly() {
     let out = knng(&["frobnicate"]);
     assert!(!out.status.success());
