@@ -28,7 +28,7 @@ fn main() {
                 .with_seed(1)
                 .with_selection(SelectionKind::Turbo)
                 .with_compute(kind);
-            let result = NnDescent::new(params).build(&data);
+            let result = NnDescent::new(params).build(&data).expect("native build");
             row.push_str(&format!(" {:>12.3}s ", result.total_secs));
             if kind == ComputeKind::Blocked {
                 blocked_fpc =

@@ -1,18 +1,23 @@
-//! Serve-style example: build a K-NN graph index, persist it as a
-//! KNNIv1 bundle, reload, and answer a batch of held-out queries with
-//! the beam search — reporting latency percentiles, per-query distance
-//! evaluations, recall, and the batched-path throughput (the
+//! Serve-style example on the `api` facade: build an index with
+//! `IndexBuilder`, persist it as a KNNIv1 bundle, reload, and answer a
+//! batch of held-out queries through the `Searcher` trait — reporting
+//! latency percentiles, per-query distance evaluations, recall, the
+//! batched-path throughput, and a sharded-serving comparison (the
 //! downstream-consumer workflow the paper's intro motivates: UMAP-style
 //! pipelines query the graph, they don't just build it).
 //!
+//! All result ids are `OriginalId`-typed: the facade owns the reorder
+//! permutation, so this example never touches σ.
+//!
 //! Run: `cargo run --release --example graph_search [-- n]`
 
+use knng::api::{Index, IndexBuilder, Searcher, ShardedSearcher};
 use knng::baseline::brute::GroundTruth;
 use knng::dataset::clustered::SynthClustered;
 use knng::dataset::AlignedMatrix;
 use knng::distance::sq_l2_unrolled;
-use knng::nndescent::{NnDescent, Params};
-use knng::search::{load_index, save_index, IndexBundle, SearchParams};
+use knng::nndescent::Params;
+use knng::search::SearchParams;
 use std::time::Instant;
 
 fn main() -> anyhow::Result<()> {
@@ -28,15 +33,22 @@ fn main() -> anyhow::Result<()> {
     };
     println!("corpus {n} × {dim}, {n_queries} held-out queries, k={k}");
 
-    // ---- build + persist + reload (exercises search::bundle) -----------
+    // ---- build + persist + reload (builder → Index → bundle) -----------
     let t0 = Instant::now();
     let params = Params::default().with_k(k).with_seed(4).with_reorder(false);
-    let built = NnDescent::new(params.clone()).build(&corpus);
-    println!("graph built in {:.2}s ({} iterations)", t0.elapsed().as_secs_f64(), built.iterations);
+    let built = IndexBuilder::new()
+        .data_named(corpus.clone(), "clustered")
+        .params(params.clone())
+        .build()?;
+    println!(
+        "graph built in {:.2}s ({} iterations)",
+        t0.elapsed().as_secs_f64(),
+        built.telemetry().expect("fresh build carries telemetry").iterations
+    );
 
     let path = std::env::temp_dir().join("knng_graph_search.knni");
-    save_index(&path, &IndexBundle::from_build(&corpus, &built, &params))?;
-    let (index, _reordering, _) = load_index(&path)?.into_index();
+    built.save(&path)?;
+    let index = Index::load(&path)?;
     println!("persisted + reloaded index bundle: {} bytes", std::fs::metadata(&path)?.len());
 
     // ---- exact truth for recall (brute force per query) ----------------
@@ -56,7 +68,7 @@ fn main() -> anyhow::Result<()> {
     };
 
     // ---- serve the batch, one query at a time ---------------------------
-    let params = SearchParams::default();
+    let sp = SearchParams::default();
     let mut latencies = Vec::with_capacity(n_queries);
     let mut seq_results = Vec::with_capacity(n_queries);
     let mut evals = 0u64;
@@ -64,11 +76,11 @@ fn main() -> anyhow::Result<()> {
     for qi in 0..n_queries {
         let q = all.row_logical(n + qi);
         let t = Instant::now();
-        let (res, stats) = index.search(q, k, &params);
+        let (res, stats) = index.search(q, k, &sp);
         latencies.push(t.elapsed().as_secs_f64());
         evals += stats.dist_evals;
         let exact = truth.get(qi as u32).unwrap();
-        hits += exact.iter().filter(|(v, _)| res.iter().any(|(r, _)| r == v)).count();
+        hits += exact.iter().filter(|(v, _)| res.iter().any(|nb| nb.id.get() == *v)).count();
         seq_results.push(res);
     }
     latencies.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -76,7 +88,7 @@ fn main() -> anyhow::Result<()> {
     let recall = hits as f64 / (n_queries * k) as f64;
     let qps = n_queries as f64 / latencies.iter().sum::<f64>();
 
-    println!("\nserved {n_queries} queries sequentially (ef={}):", params.ef);
+    println!("\nserved {n_queries} queries sequentially (ef={}):", sp.ef);
     println!("  recall@{k}     : {recall:.4}");
     println!("  latency p50    : {:.1} µs", pct(0.50) * 1e6);
     println!("  latency p99    : {:.1} µs", pct(0.99) * 1e6);
@@ -92,7 +104,7 @@ fn main() -> anyhow::Result<()> {
             (0..n_queries).flat_map(|qi| all.row_logical(n + qi).to_vec()).collect();
         AlignedMatrix::from_rows(n_queries, dim, &rows)
     };
-    let (batch_results, bstats) = index.search_batch(&qmat, k, &params);
+    let (batch_results, bstats) = index.search_batch(&qmat, k, &sp);
     for qi in 0..n_queries {
         assert_eq!(batch_results[qi], seq_results[qi], "batch/sequential diverged at {qi}");
     }
@@ -101,6 +113,30 @@ fn main() -> anyhow::Result<()> {
     println!("  evals/query    : {:.0}", bstats.dist_evals_per_query());
     println!("  expansions/qry : {:.1}", bstats.expansions_per_query());
     println!("  results        : identical to sequential (verified)");
+
+    // ---- sharded serving: same corpus, 4 independent shards -------------
+    let t0 = Instant::now();
+    let sharded = ShardedSearcher::build(&corpus, 4, &params)?;
+    println!(
+        "\nsharded searcher: {} shards of {:?} points, built in {:.2}s",
+        sharded.shard_count(),
+        sharded.shard_sizes(),
+        t0.elapsed().as_secs_f64()
+    );
+    let (shard_results, sstats) = sharded.search_batch(&qmat, k, &sp);
+    let mut shard_hits = 0usize;
+    for qi in 0..n_queries {
+        let exact = truth.get(qi as u32).unwrap();
+        shard_hits += exact
+            .iter()
+            .filter(|(v, _)| shard_results[qi].iter().any(|nb| nb.id.get() == *v))
+            .count();
+    }
+    let shard_recall = shard_hits as f64 / (n_queries * k) as f64;
+    println!("  recall@{k}     : {shard_recall:.4} (single-index {recall:.4})");
+    println!("  throughput     : {:.0} queries/s", sstats.qps());
+    println!("  evals/query    : {:.0}", sstats.dist_evals_per_query());
+    assert!(shard_recall >= recall - 0.02, "sharded recall {shard_recall} vs single {recall}");
     println!("graph_search OK");
     Ok(())
 }

@@ -39,7 +39,7 @@ fn main() -> anyhow::Result<()> {
 
     // --- variant 1: fully native, blocked + greedy reorder (paper's best)
     let p = base.clone().with_compute(ComputeKind::Blocked).with_reorder(true);
-    let native = NnDescent::new(p).build(&ds.data);
+    let native = NnDescent::new(p).build(&ds.data).expect("native build");
     let native_recall = recall_against_truth(&native, &truth);
     println!(
         "\n[native blocked+greedy] {:.2}s, {} iters, {} evals, recall {:.4}",

@@ -8,7 +8,7 @@ fn main() {
         let data = SynthGaussian::single(n, d, 3).generate();
         let params = Params::default().with_k(20).with_seed(3)
             .with_selection(SelectionKind::Turbo).with_compute(ComputeKind::Blocked);
-        let r = NnDescent::new(params).build(&data);
+        let r = NnDescent::new(params).build(&data).expect("native build");
         let sel: f64 = r.per_iter.iter().map(|s| s.select_secs).sum();
         let comp: f64 = r.per_iter.iter().map(|s| s.compute_secs).sum();
         let evals: u64 = r.stats.dist_evals;

@@ -1,12 +1,13 @@
 //! Config-driven pipeline: run a batch of experiment configs through the
-//! shared pipeline layer and emit a TSV report — the "framework" entry
-//! point a downstream user would script against.
+//! `api` facade (builder → index → evaluate) and emit a TSV report — the
+//! "framework" entry point a downstream user would script against.
 //!
 //! Run: `cargo run --release --example pipeline_report [-- config.toml ...]`
 //! With no arguments it runs the bundled configs in `configs/`.
 
+use knng::api::{EvalOptions, IndexBuilder};
 use knng::config::ExperimentConfig;
-use knng::pipeline::{run_experiment, EvalOptions, RunReport};
+use knng::pipeline::RunReport;
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -23,11 +24,12 @@ fn main() -> anyhow::Result<()> {
     };
     anyhow::ensure!(!configs.is_empty(), "no configs found (looked in configs/)");
 
+    let eval = EvalOptions::new().with_recall_queries(300).with_seed(11);
     println!("{}", RunReport::tsv_header());
     for path in &configs {
         let cfg = ExperimentConfig::load(path)?;
-        let report = run_experiment(&cfg, EvalOptions { recall_queries: 300, seed: 11 })?;
-        println!("{}", report.tsv_row());
+        let index = IndexBuilder::from_config(&cfg).log_progress().build()?;
+        println!("{}", index.evaluate(&eval).tsv_row());
     }
     Ok(())
 }

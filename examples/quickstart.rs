@@ -22,7 +22,7 @@ fn main() {
         .with_selection(SelectionKind::Turbo)
         .with_compute(ComputeKind::Blocked)
         .with_reorder(true);
-    let result = NnDescent::new(params).build(&data);
+    let result = NnDescent::new(params).build(&data).expect("native build");
 
     println!(
         "built in {} iterations / {:.3}s — {} distance evaluations ({:.2e} flops)",

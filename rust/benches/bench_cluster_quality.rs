@@ -32,7 +32,7 @@ fn main() {
         .with_selection(SelectionKind::Turbo)
         .with_compute(ComputeKind::Blocked)
         .with_max_iters(2);
-    let result = NnDescent::new(params).build(&data);
+    let result = NnDescent::new(params).build(&data).unwrap();
     let reordering = greedy_permutation(&result.graph, &mut NoTracer);
     reordering.validate().expect("valid permutation");
 

@@ -24,8 +24,8 @@ fn main() {
         .with_selection(SelectionKind::Turbo)
         .with_compute(ComputeKind::Blocked);
 
-    let plain = NnDescent::new(base.clone().with_reorder(false)).build(&data);
-    let greedy = NnDescent::new(base.with_reorder(true)).build(&data);
+    let plain = NnDescent::new(base.clone().with_reorder(false)).build(&data).unwrap();
+    let greedy = NnDescent::new(base.with_reorder(true)).build(&data).unwrap();
 
     let mut table = Table::new(
         "fig5_iteration_time",

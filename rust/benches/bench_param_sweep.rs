@@ -25,7 +25,8 @@ fn main() {
     for &rho in &[0.25, 0.5, 1.0] {
         for &delta in &[0.01, 0.001, 0.0001] {
             let params = Params::default().with_k(k).with_seed(8).with_rho(rho).with_delta(delta);
-            let (result, secs) = measure_once(|| NnDescent::new(params.clone()).build(&data));
+            let (result, secs) =
+                measure_once(|| NnDescent::new(params.clone()).build(&data).unwrap());
             let recall = recall_against_truth(&result, &truth);
             table.row(&[
                 format!("{rho}"),

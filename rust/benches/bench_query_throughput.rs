@@ -1,17 +1,22 @@
 //! Query-serving throughput (ours) — queries/sec vs batch size and `ef`
-//! through `GraphIndex::search_batch`, which tiles query×corpus distance
-//! evaluations through the 5×5 blocked kernel and reuses per-query
-//! scratch, against the sequential single-query path. The batched and
-//! sequential paths return identical results (bit-equal kernels), so
-//! this measures pure serving-layer overhead/locality.
+//! through the `api` facade's `Searcher` trait: the single `Index`
+//! (batched path tiles query×corpus evaluations through the 5×5 blocked
+//! kernel and reuses per-query scratch) against the sequential
+//! single-query path, plus the `ShardedSearcher` (S=4) fanning each
+//! batch across four independently-built shards and merging global
+//! top-k. A recall column (vs sampled brute force) shows what sharding
+//! costs in quality — gated at ≤ 0.02 below the single index on this
+//! clustered config.
 //!
 //! Run: `cargo bench --bench bench_query_throughput`
 
+use knng::api::{IndexBuilder, Searcher, ShardedSearcher};
 use knng::bench::{full_scale, measure_once, Table};
 use knng::dataset::clustered::SynthClustered;
 use knng::dataset::AlignedMatrix;
-use knng::nndescent::{NnDescent, Params};
-use knng::search::{IndexBundle, SearchParams};
+use knng::metrics::recall::{exact_neighbor_ids, recall_vs_exact};
+use knng::nndescent::Params;
+use knng::search::SearchParams;
 
 fn main() {
     let scale = if full_scale() { 4 } else { 1 };
@@ -29,73 +34,124 @@ fn main() {
     };
     let queries_flat: Vec<f32> =
         (n..n + n_queries).flat_map(|i| all.row_logical(i).to_vec()).collect();
+    let qmat = AlignedMatrix::from_rows(n_queries, dim, &queries_flat);
 
-    // build once (reordered — the bundle keeps the working layout, so
-    // serving inherits the locality win) and serve through the bundle
-    // path, exactly as `knng build --save-index` + `knng query --index`
+    // build once (reordered — the Index keeps the working layout, so
+    // serving inherits the locality win), exactly as
+    // `knng build --save-index` + `knng query --index`
     let params = Params::default().with_k(20).with_seed(7).with_reorder(true);
-    let (result, build_secs) = measure_once(|| NnDescent::new(params.clone()).build(&corpus));
-    println!("graph built in {build_secs:.2}s ({} iterations)", result.iterations);
-    let (index, _reordering, _) =
-        IndexBundle::from_build(&corpus, &result, &params).into_index();
+    let corpus_for_build = corpus.clone();
+    let build_params = params.clone();
+    let (index, build_secs) = measure_once(move || {
+        IndexBuilder::new()
+            .data_named(corpus_for_build, "clustered")
+            .params(build_params)
+            .build()
+            .unwrap()
+    });
+    println!(
+        "single index built in {build_secs:.2}s ({} iterations)",
+        index.telemetry().unwrap().iterations
+    );
 
+    // the sharded comparator: 4 independently-built shards, same params
+    let (sharded, shard_secs) =
+        measure_once(|| ShardedSearcher::build(&corpus, 4, &params).unwrap());
+    println!(
+        "sharded searcher built in {shard_secs:.2}s ({} shards of {:?})",
+        sharded.shard_count(),
+        sharded.shard_sizes()
+    );
+
+    // recall gate: sharding may cost at most 0.02 on this clustered config
+    let sp_recall = SearchParams::default();
+    let sample = 200.min(n_queries);
+    let sample_q = AlignedMatrix::from_rows(sample, dim, &queries_flat[..sample * dim]);
+    let truth = exact_neighbor_ids(&corpus, &sample_q, k);
+    let (single_res, _) = index.search_batch(&sample_q, k, &sp_recall);
+    let (sharded_res, _) = sharded.search_batch(&sample_q, k, &sp_recall);
+    let single_recall = recall_vs_exact(&single_res, &truth);
+    let sharded_recall = recall_vs_exact(&sharded_res, &truth);
+    println!(
+        "recall@{k} over {sample} queries: single {single_recall:.4}, S=4 {sharded_recall:.4}"
+    );
+    assert!(
+        sharded_recall >= single_recall - 0.02,
+        "sharded recall {sharded_recall} dropped more than 0.02 below single {single_recall}"
+    );
+
+    let searchers: [(&str, &dyn Searcher); 2] = [("single", &index), ("S=4", &sharded)];
     let mut table = Table::new(
         "query_throughput",
-        &["ef", "batch", "qps", "evals/query", "expansions/query", "vs seq"],
+        &["searcher", "ef", "batch", "qps", "evals/query", "expansions/query", "vs seq"],
     );
-    for ef in [32usize, 64, 128] {
-        let sp = SearchParams { ef, ..Default::default() };
+    for (label, searcher) in searchers {
+        for ef in [32usize, 64, 128] {
+            let sp = SearchParams { ef, ..Default::default() };
 
-        // sequential baseline over the full query set
-        let (seq_evals, seq_secs) = measure_once(|| {
-            let mut evals = 0u64;
-            for qi in 0..n_queries {
-                let q = &queries_flat[qi * dim..(qi + 1) * dim];
-                let (_, stats) = index.search(q, k, &sp);
-                evals += stats.dist_evals;
-            }
-            evals
-        });
-        let seq_qps = n_queries as f64 / seq_secs;
-        table.row(&[
-            format!("{ef}"),
-            "seq".into(),
-            format!("{seq_qps:.0}"),
-            format!("{:.0}", seq_evals as f64 / n_queries as f64),
-            "-".into(),
-            "1.00x".into(),
-        ]);
-
-        for batch in [1usize, 16, 64, 256, 1024] {
-            let batch = batch.min(n_queries);
-            // serve the query set in `batch`-sized slices
-            let (agg, secs) = measure_once(|| {
-                let mut total = (0u64, 0u64); // (evals, expansions)
-                let mut served = 0usize;
-                while served < n_queries {
-                    let b = batch.min(n_queries - served);
-                    let qm = AlignedMatrix::from_rows(
-                        b,
-                        dim,
-                        &queries_flat[served * dim..(served + b) * dim],
-                    );
-                    let (_, stats) = index.search_batch(&qm, k, &sp);
-                    total.0 += stats.dist_evals;
-                    total.1 += stats.expansions;
-                    served += b;
+            // sequential baseline over the full query set
+            let (seq_evals, seq_secs) = measure_once(|| {
+                let mut evals = 0u64;
+                for qi in 0..n_queries {
+                    let q = &queries_flat[qi * dim..(qi + 1) * dim];
+                    let (_, stats) = searcher.search(q, k, &sp);
+                    evals += stats.dist_evals;
                 }
-                total
+                evals
             });
-            let qps = n_queries as f64 / secs;
+            let seq_qps = n_queries as f64 / seq_secs;
             table.row(&[
+                label.into(),
                 format!("{ef}"),
-                format!("{batch}"),
-                format!("{qps:.0}"),
-                format!("{:.0}", agg.0 as f64 / n_queries as f64),
-                format!("{:.1}", agg.1 as f64 / n_queries as f64),
-                format!("{:.2}x", qps / seq_qps),
+                "seq".into(),
+                format!("{seq_qps:.0}"),
+                format!("{:.0}", seq_evals as f64 / n_queries as f64),
+                "-".into(),
+                "1.00x".into(),
             ]);
+
+            for batch in [16usize, 256, 1024] {
+                let batch = batch.min(n_queries);
+                // serve the query set in `batch`-sized slices
+                let (agg, secs) = measure_once(|| {
+                    let mut total = (0u64, 0u64); // (evals, expansions)
+                    let mut served = 0usize;
+                    while served < n_queries {
+                        let b = batch.min(n_queries - served);
+                        let qm = AlignedMatrix::from_rows(
+                            b,
+                            dim,
+                            &queries_flat[served * dim..(served + b) * dim],
+                        );
+                        let (_, stats) = searcher.search_batch(&qm, k, &sp);
+                        total.0 += stats.dist_evals;
+                        total.1 += stats.expansions;
+                        served += b;
+                    }
+                    total
+                });
+                let qps = n_queries as f64 / secs;
+                table.row(&[
+                    label.into(),
+                    format!("{ef}"),
+                    format!("{batch}"),
+                    format!("{qps:.0}"),
+                    format!("{:.0}", agg.0 as f64 / n_queries as f64),
+                    format!("{:.1}", agg.1 as f64 / n_queries as f64),
+                    format!("{:.2}x", qps / seq_qps),
+                ]);
+            }
         }
     }
+    // one full-batch S=4 row is the acceptance artifact; make it easy to
+    // eyeball even when the table scrolls
+    let sp = SearchParams::default();
+    let (_, sstats) = sharded.search_batch(&qmat, k, &sp);
+    println!(
+        "S=4 full-batch throughput: {:.0} qps over {} queries (ef={})",
+        sstats.qps(),
+        sstats.queries,
+        sp.ef
+    );
     table.finish();
 }

@@ -45,8 +45,8 @@ fn main() {
     let mut rows: Vec<(String, f64, f64)> = Vec::new();
     for (tag, reorder) in [("blocked", false), ("greedyclustering", true)] {
         let p = blocked.clone().with_reorder(reorder);
-        let (_, tm) = measure_once(|| NnDescent::new(p.clone()).build(&mnist.data));
-        let (_, ta) = measure_once(|| NnDescent::new(p.clone()).build(&audio.data));
+        let (_, tm) = measure_once(|| NnDescent::new(p.clone()).build(&mnist.data).unwrap());
+        let (_, ta) = measure_once(|| NnDescent::new(p.clone()).build(&audio.data).unwrap());
         rows.push((tag.to_string(), tm, ta));
     }
     {

@@ -47,7 +47,7 @@ fn main() {
                 .with_selection(SelectionKind::Turbo)
                 .with_compute(ComputeKind::Blocked)
                 .with_reorder(reorder);
-            let result = NnDescent::new(params).build(&ds.data);
+            let result = NnDescent::new(params).build(&ds.data).unwrap();
             let truth = brute_force_knn_sampled(&ds.data, k, 400, 77);
             let recall = recall_against_truth(&result, &truth);
             table.row(&[
@@ -68,7 +68,7 @@ fn main() {
     for &n in &[2000usize, 4000, 8000, 16_000] {
         let ds = from_spec(&DatasetSpec::Gaussian { n, dim: 8, single: true, seed: 6 }).unwrap();
         let params = Params::default().with_k(k).with_seed(10);
-        let r = NnDescent::new(params).build(&ds.data);
+        let r = NnDescent::new(params).build(&ds.data).unwrap();
         ns.push(n as f64);
         evals.push(r.stats.dist_evals as f64);
     }

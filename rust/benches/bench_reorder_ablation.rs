@@ -27,7 +27,7 @@ fn main() {
         .with_max_iters(2);
 
     // early approximation shared by all heuristics
-    let early = NnDescent::new(base).build(&data);
+    let early = NnDescent::new(base).build(&data).unwrap();
 
     let mut table = Table::new(
         "reorder_ablation",
@@ -42,7 +42,8 @@ fn main() {
             .with_compute(ComputeKind::Blocked)
             .with_reorder(reorder)
     };
-    let (_, plain_secs) = measure_once(|| NnDescent::new(full_params(false)).build(&data));
+    let (_, plain_secs) =
+        measure_once(|| NnDescent::new(full_params(false)).build(&data).unwrap());
     table.row(&["(none)".into(), "-".into(), format!("{:.3}", 1.0 / clusters as f64), format!("{plain_secs:.3}")]);
 
     for kind in ReorderKind::ALL {
@@ -56,7 +57,8 @@ fn main() {
         // hook only knows greedy; for the ablation we emulate by feeding
         // permuted data, which has the same locality effect).
         let permuted = data.permuted(&perm.inv);
-        let (_, e2e) = measure_once(|| NnDescent::new(full_params(false)).build(&permuted));
+        let (_, e2e) =
+            measure_once(|| NnDescent::new(full_params(false)).build(&permuted).unwrap());
 
         table.row(&[
             kind.name().into(),

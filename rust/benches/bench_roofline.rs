@@ -34,7 +34,7 @@ fn point(label: &str, n: usize, d: usize, reorder: bool, geom: Geometry, machine
     let mut tracer = CacheTracer::new(geom);
     let mut engine = NativeEngine::new(ComputeKind::Blocked);
     let _ = NnDescent::new(params.clone()).build_with_engine(&data, &mut engine, &mut tracer);
-    let (result, secs) = measure_once(|| NnDescent::new(params).build(&data));
+    let (result, secs) = measure_once(|| NnDescent::new(params).build(&data).unwrap());
     RooflinePoint::from_counters(
         label,
         &result.stats,

@@ -41,7 +41,8 @@ fn main() {
                 .with_seed(7)
                 .with_selection(SelectionKind::Turbo)
                 .with_compute(*compute);
-            let (result, secs) = measure_once(|| NnDescent::new(params.clone()).build(&data));
+            let (result, secs) =
+                measure_once(|| NnDescent::new(params.clone()).build(&data).unwrap());
             let fpc = result.stats.flops() as f64 / (secs * DEFAULT_NOMINAL_HZ);
             let e = first_last.entry(tag).or_insert((fpc, fpc));
             e.1 = fpc;

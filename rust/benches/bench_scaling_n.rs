@@ -47,7 +47,8 @@ fn main() {
                 .with_selection(SelectionKind::Turbo)
                 .with_compute(compute)
                 .with_reorder(reorder);
-            let (result, secs) = measure_once(|| NnDescent::new(params.clone()).build(&data));
+            let (result, secs) =
+                measure_once(|| NnDescent::new(params.clone()).build(&data).unwrap());
             let flops = result.stats.flops() as f64;
             let fpc = flops / (secs * DEFAULT_NOMINAL_HZ);
             table.row(&[

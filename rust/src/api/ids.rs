@@ -1,0 +1,108 @@
+//! Newtype node ids enforcing the reorder permutation at the type level.
+//!
+//! A build with the greedy reordering heuristic (paper §3.2) physically
+//! permutes the data matrix and graph, so every node lives in **two** id
+//! spaces at once:
+//!
+//! * [`OriginalId`] — the row index in the dataset as the caller supplied
+//!   it. This is the only id space that crosses the `api` boundary:
+//!   every [`Searcher`](super::Searcher) result is an `OriginalId`.
+//! * [`WorkingId`] — the position after the reorder permutation σ, i.e.
+//!   the id space `KnnGraph`, `BuildResult`, and the bundled data matrix
+//!   use internally (and the layout the blocked kernels iterate over).
+//!
+//! Keeping the two as distinct types means "forgot to map through σ" is
+//! a compile error instead of a silently-wrong neighbor list. Convert
+//! only through [`Index::to_original`](super::Index::to_original) /
+//! [`Index::to_working`](super::Index::to_working), which own σ.
+
+use std::fmt;
+
+/// Node id in the caller's original dataset order (row index as fed to
+/// the builder). The only id space exposed by `api` search results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct OriginalId(pub u32);
+
+/// Node id in the build's *working* layout (after the reorder
+/// permutation σ; identical to [`OriginalId`] when no reorder ran).
+/// Internal to `KnnGraph`/`BuildResult`; never returned by a
+/// [`Searcher`](super::Searcher).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct WorkingId(pub u32);
+
+impl OriginalId {
+    /// The raw index value.
+    #[inline]
+    pub fn get(self) -> u32 {
+        self.0
+    }
+    /// The raw index as a usize (for slice indexing).
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl WorkingId {
+    /// The raw index value.
+    #[inline]
+    pub fn get(self) -> u32 {
+        self.0
+    }
+    /// The raw index as a usize (for slice indexing).
+    #[inline]
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for OriginalId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl fmt::Display for WorkingId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+/// One search result at the `api` boundary: a neighbor in the caller's
+/// original id space plus its squared-L2 distance.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Neighbor {
+    /// Neighbor id, always original dataset order.
+    pub id: OriginalId,
+    /// Squared-L2 distance to the query.
+    pub dist: f32,
+}
+
+impl Neighbor {
+    /// Construct from a raw (id, distance) pair already in original space.
+    #[inline]
+    pub fn new(id: u32, dist: f32) -> Self {
+        Self { id: OriginalId(id), dist }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_distinct_types_with_raw_access() {
+        let o = OriginalId(7);
+        let w = WorkingId(7);
+        assert_eq!(o.get(), w.get());
+        assert_eq!(o.index(), 7);
+        assert_eq!(format!("{o}/{w}"), "7/7");
+    }
+
+    #[test]
+    fn neighbor_orders_naturally() {
+        let a = Neighbor::new(3, 1.5);
+        assert_eq!(a.id, OriginalId(3));
+        assert_eq!(a, Neighbor { id: OriginalId(3), dist: 1.5 });
+    }
+}

@@ -1,0 +1,362 @@
+//! The sealed product of a build: a servable index that owns the
+//! working-layout data, the graph, the reorder permutation, and the
+//! build telemetry — and never leaks a working id.
+
+use super::ids::{Neighbor, OriginalId, WorkingId};
+use super::searcher::Searcher;
+use crate::dataset::AlignedMatrix;
+use crate::graph::KnnGraph;
+use crate::nndescent::reorder::Reordering;
+use crate::nndescent::{BuildResult, Params};
+use crate::pipeline::{EvalOptions, RunReport};
+use crate::search::{BatchStats, GraphIndex, QueryStats, SearchParams};
+use crate::util::counters::{FlopCounter, IterStats};
+use std::path::Path;
+
+/// What the build loop recorded (absent on indexes reloaded from a
+/// `KNNIv1` bundle, which is a finished artifact, not a resumable run).
+#[derive(Debug, Clone, Default)]
+pub struct BuildTelemetry {
+    /// NN-Descent iterations executed.
+    pub iterations: usize,
+    /// Per-iteration timing/work breakdown.
+    pub per_iter: Vec<IterStats>,
+    /// Total distance-evaluation / flop accounting.
+    pub stats: FlopCounter,
+    /// Wall time of the whole build, seconds.
+    pub total_secs: f64,
+}
+
+/// A built (or reloaded) K-NN index: the crate's primary serving object.
+///
+/// Internally the graph and data live in the *working* id space — the
+/// layout the greedy reorder produced, which is also the layout the
+/// blocked kernels want. Externally every neighbor id is an
+/// [`OriginalId`]: the [`Searcher`] impl maps results through σ⁻¹, and
+/// [`Index::to_original`]/[`Index::to_working`] are the only doors
+/// between the two spaces.
+pub struct Index {
+    core: GraphIndex,
+    reordering: Option<Reordering>,
+    params: Params,
+    name: String,
+    dataset: String,
+    telemetry: Option<BuildTelemetry>,
+}
+
+impl Index {
+    /// Seal a finished build into an index. `data_original` is the
+    /// dataset in the caller's row order; it is permuted into the
+    /// working layout here when the build reordered.
+    pub(crate) fn from_build(
+        data_original: AlignedMatrix,
+        result: BuildResult,
+        params: Params,
+        name: String,
+        dataset: String,
+    ) -> Self {
+        let working = result.working_data(data_original);
+        let BuildResult { graph, iterations, per_iter, stats, reordering, total_secs } = result;
+        Self {
+            core: GraphIndex::new(working, graph),
+            reordering,
+            params,
+            name,
+            dataset,
+            telemetry: Some(BuildTelemetry { iterations, per_iter, stats, total_secs }),
+        }
+    }
+
+    /// Reload an index from a `KNNIv1` bundle written by [`Index::save`]
+    /// (or the CLI's `build --save-index`).
+    pub fn load(path: &Path) -> crate::Result<Self> {
+        let bundle = crate::search::load_index(path)?;
+        let name = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+        Ok(Self {
+            core: GraphIndex::new(bundle.data, bundle.graph),
+            reordering: bundle.reordering,
+            params: bundle.params,
+            dataset: name.clone(),
+            name,
+            telemetry: None,
+        })
+    }
+
+    /// Persist as a checksummed `KNNIv1` bundle (graph + working-layout
+    /// data + σ + build params).
+    pub fn save(&self, path: &Path) -> crate::Result<()> {
+        crate::search::bundle::save_index_parts(
+            path,
+            self.core.data(),
+            self.core.graph(),
+            self.reordering.as_ref(),
+            &self.params,
+        )
+    }
+
+    /// Persist just the graph, in the *original* id space (undoes any
+    /// reordering) — the legacy `KNNGv1` artifact.
+    pub fn save_graph(&self, path: &Path) -> crate::Result<()> {
+        let graph = match &self.reordering {
+            Some(r) => self.core.graph().apply_permutation(&r.inv),
+            None => self.core.graph().clone(),
+        };
+        crate::graph::save_graph(path, &graph)
+    }
+
+    /// Number of indexed points.
+    pub fn len(&self) -> usize {
+        self.core.n()
+    }
+
+    /// True when the index holds no points (never, in practice: builds
+    /// require at least two).
+    pub fn is_empty(&self) -> bool {
+        self.core.n() == 0
+    }
+
+    /// Logical dimensionality of the indexed vectors.
+    pub fn dim(&self) -> usize {
+        self.core.data().dim()
+    }
+
+    /// Neighbors per node in the stored graph.
+    pub fn graph_k(&self) -> usize {
+        self.core.graph().k()
+    }
+
+    /// Parameters the graph was built with.
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    /// True when the build ran the greedy reorder (σ present).
+    pub fn is_reordered(&self) -> bool {
+        self.reordering.is_some()
+    }
+
+    /// Run name (config name, or file stem for loaded bundles).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Dataset name the index was built from.
+    pub fn dataset(&self) -> &str {
+        &self.dataset
+    }
+
+    /// Build telemetry (None for indexes reloaded from a bundle).
+    pub fn telemetry(&self) -> Option<&BuildTelemetry> {
+        self.telemetry.as_ref()
+    }
+
+    /// The data matrix in the working layout (row `w` is working id `w`).
+    pub fn data(&self) -> &AlignedMatrix {
+        self.core.data()
+    }
+
+    /// The underlying graph (working id space — see [`WorkingId`]).
+    pub fn graph(&self) -> &KnnGraph {
+        self.core.graph()
+    }
+
+    /// Map a working id to the caller's original id (σ⁻¹).
+    #[inline]
+    pub fn to_original(&self, w: WorkingId) -> OriginalId {
+        match &self.reordering {
+            Some(r) => OriginalId(r.inv[w.index()]),
+            None => OriginalId(w.get()),
+        }
+    }
+
+    /// Map an original id to its working position (σ).
+    #[inline]
+    pub fn to_working(&self, o: OriginalId) -> WorkingId {
+        match &self.reordering {
+            Some(r) => WorkingId(r.sigma[o.index()]),
+            None => WorkingId(o.get()),
+        }
+    }
+
+    /// Graph neighbors of original node `u`, mapped back to original
+    /// ids, ascending by distance.
+    pub fn neighbors(&self, u: OriginalId) -> Vec<Neighbor> {
+        let w = self.to_working(u);
+        self.core
+            .graph()
+            .sorted(w.index())
+            .into_iter()
+            .map(|(v, d)| Neighbor { id: self.to_original(WorkingId(v)), dist: d })
+            .collect()
+    }
+
+    /// Score the index against sampled brute-force ground truth and
+    /// assemble the standard [`RunReport`] (the facade replacement for
+    /// `pipeline::run_experiment`). With `eval.recall_queries == 0` the
+    /// recall stage is skipped.
+    ///
+    /// Indexes reloaded from a bundle carry no build telemetry
+    /// ([`telemetry`](Self::telemetry) is `None`), so their reports
+    /// render the build metrics (iterations, seconds, evals, flops,
+    /// updates) as zero; recall is still measured live.
+    pub fn evaluate(&self, eval: &EvalOptions) -> RunReport {
+        let recall = if eval.recall_queries > 0 {
+            let truth = crate::baseline::brute::brute_force_knn_sampled(
+                self.core.data(),
+                self.graph_k(),
+                eval.recall_queries,
+                eval.seed,
+            );
+            Some(crate::metrics::recall::recall_of_graph(self.core.graph(), &truth))
+        } else {
+            None
+        };
+        let t = self.telemetry.clone().unwrap_or_default();
+        RunReport {
+            name: self.name.clone(),
+            dataset: self.dataset.clone(),
+            n: self.len(),
+            dim: self.dim(),
+            k: self.params.k,
+            selection: self.params.selection.name(),
+            compute: self.params.compute.name(),
+            reordered: self.is_reordered(),
+            iterations: t.iterations,
+            total_secs: t.total_secs,
+            dist_evals: t.stats.dist_evals,
+            flops: t.stats.flops(),
+            updates: t.per_iter.iter().map(|s| s.updates).sum(),
+            recall,
+            per_iter: t.per_iter,
+        }
+    }
+
+    /// Decompose back into a [`BuildResult`] (graph in working space +
+    /// σ + telemetry), dropping the data matrix. Exists for the
+    /// deprecated `pipeline` shims; facade users should not need it.
+    pub fn into_build_result(self) -> BuildResult {
+        let t = self.telemetry.unwrap_or_default();
+        let (_data, graph) = self.core.into_parts();
+        BuildResult {
+            graph,
+            iterations: t.iterations,
+            per_iter: t.per_iter,
+            stats: t.stats,
+            reordering: self.reordering,
+            total_secs: t.total_secs,
+        }
+    }
+}
+
+impl Searcher for Index {
+    fn len(&self) -> usize {
+        Index::len(self)
+    }
+
+    fn search(
+        &self,
+        query: &[f32],
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Neighbor>, QueryStats) {
+        let (raw, stats) = self.core.search(query, k, params);
+        (self.map_results(raw), stats)
+    }
+
+    fn search_batch(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        let (raw, stats) = self.core.search_batch(queries, k, params);
+        (raw.into_iter().map(|r| self.map_results(r)).collect(), stats)
+    }
+}
+
+impl Index {
+    fn map_results(&self, raw: Vec<(u32, f32)>) -> Vec<Neighbor> {
+        raw.into_iter()
+            .map(|(v, d)| Neighbor { id: self.to_original(WorkingId(v)), dist: d })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::clustered::SynthClustered;
+
+    fn built(n: usize, reorder: bool, seed: u64) -> (Index, AlignedMatrix) {
+        let (data, _) = SynthClustered::new(n, 8, 4, seed).generate_labeled();
+        let params = Params::default().with_k(8).with_seed(seed).with_reorder(reorder);
+        let result = crate::nndescent::NnDescent::new(params.clone()).build(&data).unwrap();
+        (
+            Index::from_build(data.clone(), result, params, "t".into(), "clustered".into()),
+            data,
+        )
+    }
+
+    #[test]
+    fn id_mapping_roundtrips_and_results_are_original_space() {
+        let (idx, data) = built(500, true, 9);
+        assert!(idx.is_reordered());
+        for u in (0..500u32).step_by(41) {
+            let o = OriginalId(u);
+            assert_eq!(idx.to_original(idx.to_working(o)), o, "σ⁻¹∘σ = id");
+            // searching with an original row must find that row as top hit
+            let (res, _) = idx.search(data.row_logical(u as usize), 3, &SearchParams::default());
+            assert_eq!(res[0].id, o, "top hit is the query row, in original ids");
+            assert!(res[0].dist < 1e-6);
+        }
+    }
+
+    #[test]
+    fn neighbors_match_build_result_original_mapping() {
+        let (data, _) = SynthClustered::new(400, 8, 4, 3).generate_labeled();
+        let params = Params::default().with_k(8).with_seed(3).with_reorder(true);
+        let result = crate::nndescent::NnDescent::new(params.clone()).build(&data).unwrap();
+        let expect: Vec<Vec<(u32, f32)>> =
+            (0..400).map(|u| result.neighbors_original(u)).collect();
+        let idx = Index::from_build(data, result, params, "t".into(), "d".into());
+        for u in (0..400).step_by(29) {
+            let got = idx.neighbors(OriginalId(u as u32));
+            assert_eq!(got.len(), expect[u].len());
+            for (g, e) in got.iter().zip(&expect[u]) {
+                assert_eq!((g.id.get(), g.dist.to_bits()), (e.0, e.1.to_bits()), "node {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_produces_a_coherent_report() {
+        let (idx, _) = built(600, false, 21);
+        let report = idx.evaluate(&EvalOptions::new().with_recall_queries(60).with_seed(1));
+        assert_eq!(report.n, 600);
+        assert_eq!(report.dim, 8);
+        assert!(report.iterations >= 2);
+        assert!(report.recall.unwrap() > 0.9, "recall {:?}", report.recall);
+        let skipped = idx.evaluate(&EvalOptions::skip_recall());
+        assert!(skipped.recall.is_none());
+    }
+
+    #[test]
+    fn save_load_roundtrip_serves_identically() {
+        let dir = std::env::temp_dir().join("knng_api_index_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.knni");
+        let (idx, data) = built(500, true, 13);
+        idx.save(&path).unwrap();
+        let loaded = Index::load(&path).unwrap();
+        assert!(loaded.telemetry().is_none());
+        assert_eq!(loaded.len(), idx.len());
+        assert_eq!(loaded.params(), idx.params());
+        let sp = SearchParams::default();
+        for qi in (0..500).step_by(71) {
+            let (a, _) = idx.search(data.row_logical(qi), 5, &sp);
+            let (b, _) = loaded.search(data.row_logical(qi), 5, &sp);
+            assert_eq!(a, b, "query {qi}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,85 @@
+//! # `api` — the crate's public face
+//!
+//! One coherent surface over the paper's pipeline (NN-Descent build →
+//! greedy reorder → blocked serving), replacing the three historical
+//! entry points (`pipeline::run_experiment_full`'s bare tuple, the
+//! panicking `NnDescent::build`, and a `GraphIndex` that answered in
+//! working ids):
+//!
+//! * [`IndexBuilder`] — typed, fallible construction from a
+//!   [`DatasetSpec`](crate::config::DatasetSpec) or an owned
+//!   [`AlignedMatrix`](crate::dataset::AlignedMatrix), with progress as
+//!   typed [`BuildEvent`]s through a [`BuildObserver`].
+//! * [`Index`] — the sealed build product: graph + working-layout data
+//!   + σ + telemetry, persistable as a `KNNIv1` bundle.
+//! * [`Searcher`] — the serving trait (`search`, `search_batch`, stats)
+//!   implemented by [`Index`], by the underlying
+//!   [`GraphIndex`](crate::search::GraphIndex), and by
+//!   [`ShardedSearcher`].
+//!
+//! ## Id-space safety
+//!
+//! A reordered build permutes memory, so node ids exist in two spaces;
+//! [`OriginalId`] and [`WorkingId`] make the distinction a type. The
+//! rule: everything that crosses the `api` boundary (search results,
+//! [`Index::neighbors`]) is `OriginalId`; `KnnGraph`/`BuildResult`
+//! internals stay in working space. Conversions go through
+//! [`Index::to_original`]/[`Index::to_working`], which own σ.
+//!
+//! ## End to end
+//!
+//! ```
+//! use knng::api::{EvalOptions, IndexBuilder, OriginalId, Searcher, ShardedSearcher};
+//! use knng::dataset::clustered::SynthClustered;
+//! use knng::nndescent::Params;
+//!
+//! let (corpus, _labels) = SynthClustered::new(400, 8, 4, 42).generate_labeled();
+//! let params = Params::default().with_k(8).with_seed(42).with_reorder(true);
+//! let index = IndexBuilder::new()
+//!     .data_named(corpus.clone(), "clustered")
+//!     .params(params.clone())
+//!     .build()?;
+//!
+//! // Serve: results are OriginalId even though the build reordered —
+//! // corpus row 17's nearest neighbor is row 17 itself.
+//! let query = corpus.row_logical(17).to_vec();
+//! let (hits, stats) = index.search(&query, 5, &Default::default());
+//! assert_eq!(hits[0].id, OriginalId(17));
+//! assert!(stats.dist_evals > 0);
+//!
+//! // Evaluate: recall vs sampled brute force, as a standard report.
+//! let report = index.evaluate(&EvalOptions::new().with_recall_queries(50).with_seed(1));
+//! assert!(report.recall.unwrap() > 0.9);
+//!
+//! // Scale out: two independently-built shards over the same corpus.
+//! // Shard from the ORIGINAL row order (a shard's input order defines
+//! // its id space) — never from a reordered index's working layout.
+//! let sharded = ShardedSearcher::build(&corpus, 2, &params)?;
+//! let (shard_hits, _) = sharded.search(&query, 5, &Default::default());
+//! assert_eq!(shard_hits[0].id, OriginalId(17));
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+pub mod builder;
+pub mod ids;
+pub mod index;
+pub mod searcher;
+pub mod sharded;
+
+pub use builder::IndexBuilder;
+pub use ids::{Neighbor, OriginalId, WorkingId};
+pub use index::{BuildTelemetry, Index};
+pub use searcher::Searcher;
+pub use sharded::ShardedSearcher;
+
+// The observer types live beside the driver that emits them
+// (`nndescent::observer`) so the engine layer stays facade-independent;
+// this is their public spelling.
+pub use crate::nndescent::observer::{
+    BuildEvent, BuildObserver, FnObserver, LoggingObserver, NoopObserver,
+};
+
+// Re-exported so facade users need no second import path for the
+// types that flow through builder/searcher signatures.
+pub use crate::pipeline::EvalOptions;
+pub use crate::search::{BatchStats, QueryStats, SearchParams};

@@ -1,0 +1,112 @@
+//! The serving abstraction: anything that can answer K-NN queries in
+//! the caller's original id space.
+//!
+//! Implementations in this crate:
+//!
+//! * [`GraphIndex`] — a single in-memory graph over one corpus. A bare
+//!   `GraphIndex` has no reorder permutation, so its working ids *are*
+//!   the row ids of the data it was constructed with; results pass
+//!   through unmapped.
+//! * [`Index`](super::Index) — a built (possibly reordered) index; maps
+//!   every result back through σ⁻¹ before it crosses the boundary.
+//! * [`ShardedSearcher`](super::ShardedSearcher) — S independently-built
+//!   shards with per-shard offset mapping and a global top-k merge.
+
+use super::ids::{Neighbor, OriginalId};
+use crate::dataset::AlignedMatrix;
+use crate::search::{BatchStats, GraphIndex, QueryStats, SearchParams};
+
+/// An ANN query server over a fixed corpus. All results are
+/// [`OriginalId`]-typed: implementations own whatever id mapping their
+/// internal layout requires, so callers never see working ids.
+pub trait Searcher {
+    /// Number of points this searcher can return.
+    fn len(&self) -> usize;
+
+    /// True when the searcher holds no points.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The `k` nearest neighbors of `query` (logical or padded row),
+    /// ascending by distance, ids in the original dataset order.
+    fn search(
+        &self,
+        query: &[f32],
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Neighbor>, QueryStats);
+
+    /// Serve a batch of queries (rows of `queries`) through the blocked
+    /// kernels; per-query results plus aggregate stats.
+    fn search_batch(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats);
+}
+
+/// Map a raw working-space result list into the boundary type without
+/// remapping (identity id spaces).
+pub(crate) fn neighbors_identity(raw: Vec<(u32, f32)>) -> Vec<Neighbor> {
+    raw.into_iter().map(|(v, d)| Neighbor { id: OriginalId(v), dist: d }).collect()
+}
+
+impl Searcher for GraphIndex {
+    fn len(&self) -> usize {
+        self.n()
+    }
+
+    fn search(
+        &self,
+        query: &[f32],
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Neighbor>, QueryStats) {
+        // A bare GraphIndex carries no permutation: its graph/data id
+        // space is the caller's row space, so the mapping is identity.
+        let (raw, stats) = GraphIndex::search(self, query, k, params);
+        (neighbors_identity(raw), stats)
+    }
+
+    fn search_batch(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        let (raw, stats) = GraphIndex::search_batch(self, queries, k, params);
+        (raw.into_iter().map(neighbors_identity).collect(), stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::clustered::SynthClustered;
+    use crate::nndescent::{NnDescent, Params};
+
+    #[test]
+    fn graph_index_results_pass_through_as_original_ids() {
+        let (data, _) = SynthClustered::new(400, 8, 4, 5).generate_labeled();
+        let result = NnDescent::new(Params::default().with_k(8).with_seed(5)).build(&data).unwrap();
+        let idx = GraphIndex::new(data.clone(), result.graph);
+
+        let sp = SearchParams::default();
+        for qi in (0..400).step_by(67) {
+            // the trait result must be the inherent result, retyped
+            let (raw, raw_stats) = GraphIndex::search(&idx, data.row_logical(qi), 5, &sp);
+            let (typed, typed_stats) = Searcher::search(&idx, data.row_logical(qi), 5, &sp);
+            assert_eq!(raw_stats, typed_stats);
+            assert_eq!(raw.len(), typed.len());
+            for (r, t) in raw.iter().zip(&typed) {
+                assert_eq!(t.id, OriginalId(r.0));
+                assert_eq!(t.dist.to_bits(), r.1.to_bits());
+            }
+            assert_eq!(typed[0].id, OriginalId(qi as u32), "self is the top hit");
+        }
+        assert_eq!(Searcher::len(&idx), 400);
+        assert!(!idx.is_empty());
+    }
+}

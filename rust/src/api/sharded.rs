@@ -1,0 +1,257 @@
+//! Sharded serving: partition the corpus into S independently-built
+//! slices, fan every query (or batch) out to each shard through the
+//! existing blocked kernels, and merge the per-shard pools into one
+//! global top-k — the first concrete step on the ROADMAP sharding item.
+//!
+//! Sharding trades one global graph for S smaller ones. Each shard's
+//! NN-Descent build is cheaper (the paper's cost is ~n^1.14, so S
+//! builds over n/S points do less total work) and the per-shard beam
+//! searches are independent, which is what later multi-core/multi-node
+//! fan-out needs. The price is recall at shard boundaries: a query's
+//! true neighbors all live in *some* shard, so the merged exact top-k
+//! is a superset union — but the per-shard *approximate* searches can
+//! each miss locally. On clustered data (the paper's core assumption)
+//! the loss is small; the facade's tests gate it at ≤ 0.02 vs a single
+//! index.
+//!
+//! With S = 1 the single shard sees the whole corpus and the merge is
+//! the identity, so results are bit-identical to
+//! [`GraphIndex::search_batch`] — a property the integration tests pin
+//! down exactly.
+//!
+//! [`GraphIndex::search_batch`]: crate::search::GraphIndex::search_batch
+
+use super::ids::{Neighbor, OriginalId, WorkingId};
+use super::searcher::Searcher;
+use crate::dataset::AlignedMatrix;
+use crate::nndescent::observer::{BuildObserver, NoopObserver};
+use crate::nndescent::reorder::Reordering;
+use crate::nndescent::{BuildResult, Params};
+use crate::search::{BatchStats, GraphIndex, QueryStats, SearchParams};
+use std::time::Instant;
+
+/// One shard: a graph over a contiguous slice of the corpus, plus the
+/// bookkeeping to map its working ids back to global original ids.
+struct Shard {
+    core: GraphIndex,
+    /// Shard-local reorder permutation (iff the build reordered).
+    reordering: Option<Reordering>,
+    /// First global row id of this shard's slice.
+    offset: u32,
+}
+
+impl Shard {
+    /// Map a shard-working id to the global original id: undo the
+    /// shard-local σ, then add the slice offset.
+    #[inline]
+    fn to_global(&self, w: WorkingId) -> OriginalId {
+        let local = match &self.reordering {
+            Some(r) => r.inv[w.index()],
+            None => w.get(),
+        };
+        OriginalId(self.offset + local)
+    }
+
+    fn map_results(&self, raw: Vec<(u32, f32)>) -> Vec<Neighbor> {
+        raw.into_iter()
+            .map(|(v, d)| Neighbor { id: self.to_global(WorkingId(v)), dist: d })
+            .collect()
+    }
+}
+
+/// A [`Searcher`] over S independently-built shards.
+pub struct ShardedSearcher {
+    shards: Vec<Shard>,
+    n: usize,
+    dim: usize,
+}
+
+impl ShardedSearcher {
+    /// Partition `data` into `shards` contiguous slices, build a graph
+    /// over each with the same `params`, and assemble the searcher.
+    ///
+    /// `data`'s row order **defines the original id space** of every
+    /// result: pass the corpus as the caller ordered it, never a
+    /// reordered index's working-layout matrix (per-shard reorder
+    /// permutations are handled internally). Each shard must end up
+    /// with at least two points. With `shards == 1` the searcher is
+    /// equivalent (bit-identical results) to a single [`GraphIndex`]
+    /// built with the same parameters.
+    pub fn build(data: &AlignedMatrix, shards: usize, params: &Params) -> crate::Result<Self> {
+        Self::build_observed(data, shards, params, &mut NoopObserver)
+    }
+
+    /// Like [`build`](Self::build), forwarding each shard build's
+    /// events to `observer` (shards are announced by their `Started`
+    /// events, in slice order).
+    pub fn build_observed(
+        data: &AlignedMatrix,
+        shards: usize,
+        params: &Params,
+        observer: &mut dyn BuildObserver,
+    ) -> crate::Result<Self> {
+        Self::build_with(data, shards, params, "artifacts", observer)
+    }
+
+    /// Fully-configured entry point: `artifacts_dir` feeds the `pjrt`
+    /// backend when `params.compute` asks for it
+    /// ([`IndexBuilder::build_sharded`](super::IndexBuilder::build_sharded)
+    /// routes its configured directory through here).
+    pub fn build_with(
+        data: &AlignedMatrix,
+        shards: usize,
+        params: &Params,
+        artifacts_dir: &str,
+        observer: &mut dyn BuildObserver,
+    ) -> crate::Result<Self> {
+        let n = data.n();
+        anyhow::ensure!(shards >= 1, "need at least one shard");
+        anyhow::ensure!(
+            n / shards >= 2,
+            "corpus of {n} points cannot fill {shards} shards (each needs ≥ 2 points)"
+        );
+        let mut built = Vec::with_capacity(shards);
+        for s in 0..shards {
+            let lo = s * n / shards;
+            let hi = (s + 1) * n / shards;
+            let rows: Vec<f32> =
+                (lo..hi).flat_map(|i| data.row_logical(i).to_vec()).collect();
+            let shard_data = AlignedMatrix::from_rows(hi - lo, data.dim(), &rows);
+            let result = super::builder::run_build(params, &shard_data, artifacts_dir, observer)?;
+            let working = result.working_data(shard_data);
+            let BuildResult { graph, reordering, .. } = result;
+            built.push(Shard {
+                core: GraphIndex::new(working, graph),
+                reordering,
+                offset: lo as u32,
+            });
+        }
+        Ok(Self { shards: built, n, dim: data.dim() })
+    }
+
+    /// Number of shards.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Logical dimensionality of the corpus.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Shard slice sizes, in slice order.
+    pub fn shard_sizes(&self) -> Vec<usize> {
+        self.shards.iter().map(|s| s.core.n()).collect()
+    }
+
+    /// Merge per-shard candidate lists into the global top-k: sort by
+    /// (distance, global id) — the same comparator the beam search's
+    /// final sort uses — and truncate. Stable, so with a single shard
+    /// the already-sorted input passes through unchanged.
+    fn merge(mut all: Vec<Neighbor>, k: usize) -> Vec<Neighbor> {
+        all.sort_by(|a, b| {
+            a.dist.partial_cmp(&b.dist).unwrap().then(a.id.get().cmp(&b.id.get()))
+        });
+        all.truncate(k);
+        all
+    }
+}
+
+impl Searcher for ShardedSearcher {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn search(
+        &self,
+        query: &[f32],
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Neighbor>, QueryStats) {
+        let mut stats = QueryStats::default();
+        let mut all = Vec::with_capacity(k * self.shards.len());
+        for shard in &self.shards {
+            let (raw, s) = shard.core.search(query, k, params);
+            stats.dist_evals += s.dist_evals;
+            stats.expansions += s.expansions;
+            all.extend(shard.map_results(raw));
+        }
+        (Self::merge(all, k), stats)
+    }
+
+    fn search_batch(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        let t0 = Instant::now();
+        let mut agg = BatchStats { queries: queries.n(), ..Default::default() };
+        let mut merged: Vec<Vec<Neighbor>> = Vec::new();
+        merged.resize_with(queries.n(), || Vec::with_capacity(k * self.shards.len()));
+        for shard in &self.shards {
+            let (raw, s) = shard.core.search_batch(queries, k, params);
+            agg.dist_evals += s.dist_evals;
+            agg.expansions += s.expansions;
+            for (qi, r) in raw.into_iter().enumerate() {
+                merged[qi].extend(shard.map_results(r));
+            }
+        }
+        let results = merged.into_iter().map(|all| Self::merge(all, k)).collect();
+        agg.secs = t0.elapsed().as_secs_f64();
+        (results, agg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::clustered::SynthClustered;
+
+    fn corpus(n: usize, seed: u64) -> AlignedMatrix {
+        let (data, _) = SynthClustered::new(n, 8, 4, seed).generate_labeled();
+        data
+    }
+
+    #[test]
+    fn rejects_degenerate_partitions() {
+        let data = corpus(40, 1);
+        assert!(ShardedSearcher::build(&data, 0, &Params::default()).is_err());
+        assert!(ShardedSearcher::build(&data, 21, &Params::default()).is_err(), "shards of <2");
+        let ok = ShardedSearcher::build(&data, 8, &Params::default().with_k(3)).unwrap();
+        assert_eq!(ok.shard_count(), 8);
+        assert_eq!(ok.shard_sizes(), vec![5, 5, 5, 5, 5, 5, 5, 5]);
+    }
+
+    #[test]
+    fn shards_cover_the_corpus_and_map_to_global_ids() {
+        let data = corpus(603, 7); // non-divisible on purpose
+        let params = Params::default().with_k(6).with_seed(7).with_reorder(true);
+        let sharded = ShardedSearcher::build(&data, 4, &params).unwrap();
+        assert_eq!(sharded.shard_sizes().iter().sum::<usize>(), 603);
+        assert_eq!(Searcher::len(&sharded), 603);
+
+        // querying any corpus row must return that global row as top hit
+        let sp = SearchParams::default();
+        for qi in (0..603).step_by(83) {
+            let (res, _) = sharded.search(data.row_logical(qi), 3, &sp);
+            assert_eq!(res[0].id, OriginalId(qi as u32), "self hit in global ids");
+            assert!(res[0].dist < 1e-6);
+        }
+    }
+
+    #[test]
+    fn merge_sorts_by_distance_then_id_and_truncates() {
+        let all = vec![
+            Neighbor::new(9, 2.0),
+            Neighbor::new(1, 1.0),
+            Neighbor::new(4, 1.0),
+            Neighbor::new(2, 3.0),
+        ];
+        let m = ShardedSearcher::merge(all, 3);
+        assert_eq!(
+            m,
+            vec![Neighbor::new(1, 1.0), Neighbor::new(4, 1.0), Neighbor::new(9, 2.0)]
+        );
+    }
+}

@@ -64,7 +64,9 @@ impl PyNndBaseline {
             reorder_iter: 1,
             max_candidates: 60, // pynndescent's internal cap
         };
-        NnDescent::new(params).build(data)
+        NnDescent::new(params)
+            .build(data)
+            .expect("baseline profile uses only native backends")
     }
 }
 

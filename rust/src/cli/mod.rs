@@ -119,10 +119,9 @@ impl ArgMatches {
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
         match self.get(name) {
             None => Ok(default),
-            Some(s) => s
-                .replace('_', "")
-                .parse::<u64>()
-                .map_err(|_| CliError(format!("--{name}: bad integer `{s}`"))),
+            Some(s) => {
+                parse_u64(s).ok_or_else(|| CliError(format!("--{name}: bad integer `{s}`")))
+            }
         }
     }
     pub fn f64_or(&self, name: &str, default: f64) -> Result<f64, CliError> {
@@ -150,16 +149,23 @@ impl ArgMatches {
     }
 }
 
-/// Accept `16384`, `16_384`, and `16k`/`131072`… suffixes (k, m).
-fn parse_usize(s: &str) -> Option<usize> {
+/// Accept `16384`, `16_384`, and `16k`/`1M` suffixes (×1024 / ×1024²).
+/// The one integer grammar every numeric getter shares, so `--n 16k`
+/// and `--seed 16k` parse identically.
+fn parse_u64(s: &str) -> Option<u64> {
     let s = s.replace('_', "");
     if let Some(num) = s.strip_suffix(['k', 'K']) {
-        return num.parse::<usize>().ok().map(|v| v * 1024);
+        return num.parse::<u64>().ok()?.checked_mul(1024);
     }
     if let Some(num) = s.strip_suffix(['m', 'M']) {
-        return num.parse::<usize>().ok().map(|v| v * 1024 * 1024);
+        return num.parse::<u64>().ok()?.checked_mul(1024 * 1024);
     }
-    s.parse::<usize>().ok()
+    s.parse::<u64>().ok()
+}
+
+/// [`parse_u64`] narrowed to usize.
+fn parse_usize(s: &str) -> Option<usize> {
+    parse_u64(s).and_then(|v| usize::try_from(v).ok())
 }
 
 /// Parse `argv` (excluding the program/subcommand names) against a spec.
@@ -269,6 +275,28 @@ mod tests {
         assert_eq!(parse_usize("1M"), Some(1 << 20));
         assert_eq!(parse_usize("16_384"), Some(16384));
         assert_eq!(parse_usize("x"), None);
+        // the u64 path shares the same grammar
+        assert_eq!(parse_u64("128k"), Some(131072));
+        assert_eq!(parse_u64("1M"), Some(1 << 20));
+        assert_eq!(parse_u64("16_384"), Some(16384));
+        assert_eq!(parse_u64("9x"), None);
+        // and overflow is a parse failure, not a wrap
+        assert_eq!(parse_u64("18446744073709551615k"), None);
+    }
+
+    #[test]
+    fn u64_and_usize_getters_accept_identical_inputs() {
+        let spec = ArgSpec::new().value("n", "count").value("seed", "seed");
+        for raw in ["16k", "1M", "16_384", "42"] {
+            let m = parse_args(&spec, &argv(&["--n", raw, "--seed", raw])).unwrap();
+            let n = m.usize_or("n", 0).unwrap();
+            let seed = m.u64_or("seed", 0).unwrap();
+            assert_eq!(n as u64, seed, "`{raw}` must parse identically on both paths");
+        }
+        // both reject the same garbage
+        let m = parse_args(&spec, &argv(&["--n", "16q", "--seed", "16q"])).unwrap();
+        assert!(m.usize_or("n", 0).is_err());
+        assert!(m.u64_or("seed", 0).is_err());
     }
 
     #[test]

@@ -151,7 +151,7 @@ mod tests {
     #[test]
     fn roundtrip_preserves_neighbor_sets() {
         let data = SynthGaussian::single(300, 16, 5).generate();
-        let built = NnDescent::new(Params::default().with_k(8).with_seed(5)).build(&data);
+        let built = NnDescent::new(Params::default().with_k(8).with_seed(5)).build(&data).unwrap();
         let path = tmp("g.knng");
         save_graph(&path, &built.graph).unwrap();
         let loaded = load_graph(&path).unwrap();
@@ -166,7 +166,7 @@ mod tests {
     #[test]
     fn detects_corruption() {
         let data = SynthGaussian::single(100, 8, 1).generate();
-        let built = NnDescent::new(Params::default().with_k(5).with_seed(1)).build(&data);
+        let built = NnDescent::new(Params::default().with_k(5).with_seed(1)).build(&data).unwrap();
         let path = tmp("c.knng");
         save_graph(&path, &built.graph).unwrap();
         let mut bytes = std::fs::read(&path).unwrap();

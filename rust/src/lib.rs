@@ -27,17 +27,28 @@
 //!
 //! ## Quickstart
 //!
-//! ```no_run
-//! use knng::dataset::synth::SynthGaussian;
-//! use knng::nndescent::{NnDescent, Params};
+//! The [`api`] module is the crate's public face: a typed builder, a
+//! sealed index, and searchers that always answer in the caller's
+//! original id space.
 //!
-//! let data = SynthGaussian::single(4096, 32, 0x5eed).generate();
-//! let params = Params::default().with_k(20);
-//! let result = NnDescent::new(params).build(&data);
+//! ```no_run
+//! use knng::api::{IndexBuilder, Searcher};
+//! use knng::config::DatasetSpec;
+//! use knng::nndescent::Params;
+//!
+//! let index = IndexBuilder::new()
+//!     .dataset(DatasetSpec::Gaussian { n: 4096, dim: 32, single: true, seed: 0x5eed })
+//!     .params(Params::default().with_k(20).with_reorder(true))
+//!     .build()?;
+//! let telemetry = index.telemetry().unwrap();
 //! println!("graph built in {} iterations, {} distance evals",
-//!          result.iterations, result.stats.dist_evals);
+//!          telemetry.iterations, telemetry.stats.dist_evals);
+//! let (neighbors, _stats) = index.search(index.data().row_logical(0), 10, &Default::default());
+//! println!("nearest neighbor of node 0: {}", neighbors[1].id);
+//! # Ok::<(), anyhow::Error>(())
 //! ```
 
+pub mod api;
 pub mod baseline;
 pub mod bench;
 pub mod cachesim;

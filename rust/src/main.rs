@@ -19,10 +19,10 @@
 //!   knng gen --dataset gaussian --n 4096 --dim 64 --out /tmp/g.fvecs
 //!   knng check --artifacts artifacts
 
+use knng::api::{EvalOptions, Index, IndexBuilder, Searcher};
 use knng::cli::{parse_args, ArgSpec};
 use knng::config::schema::{ComputeKind, SelectionKind};
 use knng::config::{DatasetSpec, ExperimentConfig, RunConfig};
-use knng::pipeline::EvalOptions;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -139,23 +139,20 @@ fn cmd_build(argv: &[String]) -> anyhow::Result<()> {
     }
     cfg.run.artifacts_dir = m.str_or("artifacts", &cfg.run.artifacts_dir).to_string();
 
-    let eval = EvalOptions { recall_queries: m.usize_or("recall-queries", 500)?, seed: cfg.run.seed };
-    let (report, result, ds) = knng::pipeline::run_experiment_full(&cfg, eval)?;
+    let eval = EvalOptions::new()
+        .with_recall_queries(m.usize_or("recall-queries", 500)?)
+        .with_seed(cfg.run.seed);
+    let index = IndexBuilder::from_config(&cfg).log_progress().build()?;
+    let report = index.evaluate(&eval);
     if let Some(path) = m.get("save") {
         // persist in the *original* id space (undo any reordering)
-        let graph = match &result.reordering {
-            Some(r) => result.graph.apply_permutation(&r.inv),
-            None => result.graph.clone(),
-        };
-        knng::graph::save_graph(std::path::Path::new(path), &graph)?;
+        index.save_graph(std::path::Path::new(path))?;
         eprintln!("saved graph to {path}");
     }
     if let Some(path) = m.get("save-index") {
         // persist the full serving bundle: graph + data in the *working*
         // layout (keeps reorder locality) + σ to map ids back + params
-        let params = knng::nndescent::Params::from(&cfg.run);
-        let bundle = knng::search::IndexBundle::from_build(&ds.data, &result, &params);
-        knng::search::save_index(std::path::Path::new(path), &bundle)?;
+        index.save(std::path::Path::new(path))?;
         eprintln!("saved index bundle to {path}");
     }
     if m.has("tsv") {
@@ -195,23 +192,19 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
             .get("batch")
             .or_else(|| m.get("queries"))
             .ok_or_else(|| anyhow::anyhow!("--batch <fvecs> is required with --index"))?;
-        let bundle = knng::search::load_index(std::path::Path::new(index_path))?;
+        let index = Index::load(std::path::Path::new(index_path))?;
         let queries = knng::dataset::fvecs::read_fvecs(std::path::Path::new(qpath), usize::MAX)?;
         anyhow::ensure!(
-            queries.dim() == bundle.data.dim(),
+            queries.dim() == index.dim(),
             "query dim {} does not match index dim {}",
             queries.dim(),
-            bundle.data.dim()
+            index.dim()
         );
-        let (index, reordering, built_with) = bundle.into_index();
+        // Searcher results are OriginalId — no σ bookkeeping here.
         let (results, stats) = index.search_batch(&queries, k, &params);
         for (qi, res) in results.iter().enumerate() {
-            let row: Vec<String> = res
-                .iter()
-                .map(|&(v, d)| {
-                    format!("{}:{d:.4}", knng::search::IndexBundle::original_id(&reordering, v))
-                })
-                .collect();
+            let row: Vec<String> =
+                res.iter().map(|nb| format!("{}:{:.4}", nb.id, nb.dist)).collect();
             println!("{qi}\t{}", row.join("\t"));
         }
         eprintln!(
@@ -222,11 +215,11 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
             stats.qps(),
             stats.dist_evals_per_query(),
             stats.expansions_per_query(),
-            index.n(),
-            index.graph().k(),
-            built_with.selection.name(),
-            built_with.compute.name(),
-            if reordering.is_some() { "+reorder" } else { "" },
+            index.len(),
+            index.graph_k(),
+            index.params().selection.name(),
+            index.params().compute.name(),
+            if index.is_reordered() { "+reorder" } else { "" },
         );
         if m.has("stats") {
             eprintln!(
@@ -246,13 +239,15 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
     let queries =
         knng::dataset::fvecs::read_fvecs(std::path::Path::new(&need("queries")?), usize::MAX)?;
     anyhow::ensure!(queries.dim() == data.dim(), "query/corpus dim mismatch");
-    let index = knng::search::GraphIndex::new(data, graph);
+    // a bare graph has no σ, so GraphIndex's id space is already the
+    // caller's original row space; the Searcher impl types it as such
+    let index: &dyn Searcher = &knng::search::GraphIndex::new(data, graph);
     let t0 = std::time::Instant::now();
     let mut total_evals = 0u64;
     for qi in 0..queries.n() {
         let (res, stats) = index.search(queries.row_logical(qi), k, &params);
         total_evals += stats.dist_evals;
-        let row: Vec<String> = res.iter().map(|(v, d)| format!("{v}:{d:.4}")).collect();
+        let row: Vec<String> = res.iter().map(|nb| format!("{}:{:.4}", nb.id, nb.dist)).collect();
         println!("{qi}\t{}", row.join("\t"));
     }
     let secs = t0.elapsed().as_secs_f64();

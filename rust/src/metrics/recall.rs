@@ -5,7 +5,10 @@
 //! exact list as computed (deterministic tie-break by id), which matches
 //! how the paper's ≥99% numbers are normally measured.
 
+use crate::api::ids::Neighbor;
 use crate::baseline::brute::GroundTruth;
+use crate::dataset::AlignedMatrix;
+use crate::distance::sq_l2_unrolled;
 use crate::graph::heap::EMPTY_ID;
 use crate::graph::KnnGraph;
 use crate::nndescent::driver::BuildResult;
@@ -36,6 +39,59 @@ pub fn recall_of_graph(graph: &KnnGraph, truth: &GroundTruth) -> f64 {
     total / truth.queries.len() as f64
 }
 
+/// Exact top-`k` neighbor ids of each held-out query, by brute force
+/// over the whole `corpus` (ties at the k-th distance break by id).
+/// Compute this once and score several result sets against it with
+/// [`recall_vs_exact`] — the exact scan is the expensive half.
+pub fn exact_neighbor_ids(
+    corpus: &AlignedMatrix,
+    queries: &AlignedMatrix,
+    k: usize,
+) -> Vec<Vec<u32>> {
+    assert_eq!(corpus.dim(), queries.dim(), "corpus/query dim mismatch");
+    let k = k.min(corpus.n());
+    (0..queries.n())
+        .map(|qi| {
+            let mut exact: Vec<(u32, f32)> = (0..corpus.n() as u32)
+                .map(|v| (v, sq_l2_unrolled(queries.row(qi), corpus.row(v as usize))))
+                .collect();
+            exact.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
+            exact[..k].iter().map(|&(v, _)| v).collect()
+        })
+        .collect()
+}
+
+/// Mean recall of per-query [`Searcher`](crate::api::Searcher) results
+/// against precomputed per-query exact id lists
+/// (see [`exact_neighbor_ids`]).
+pub fn recall_vs_exact(results: &[Vec<Neighbor>], exact: &[Vec<u32>]) -> f64 {
+    assert_eq!(results.len(), exact.len(), "one result list per query");
+    let denom: usize = exact.iter().map(|e| e.len()).sum();
+    if denom == 0 {
+        return 1.0;
+    }
+    let hits: usize = results
+        .iter()
+        .zip(exact)
+        .map(|(res, ex)| ex.iter().filter(|v| res.iter().any(|nb| nb.id.get() == **v)).count())
+        .sum();
+    hits as f64 / denom as f64
+}
+
+/// One-shot convenience over [`exact_neighbor_ids`] + [`recall_vs_exact`]:
+/// mean recall@k of held-out-query results against brute force over the
+/// corpus (both in the same — original — id space). One shared
+/// definition, so the facade's sharded-vs-single acceptance gates in
+/// tests and benches measure the same thing.
+pub fn recall_of_results(
+    results: &[Vec<Neighbor>],
+    corpus: &AlignedMatrix,
+    queries: &AlignedMatrix,
+    k: usize,
+) -> f64 {
+    recall_vs_exact(results, &exact_neighbor_ids(corpus, queries, k))
+}
+
 fn overlap(approx: &[(u32, f32)], exact: &[(u32, f32)]) -> f64 {
     if exact.is_empty() {
         return 1.0;
@@ -64,6 +120,24 @@ mod tests {
             }
         }
         assert_eq!(recall_of_graph(&graph, &truth), 1.0);
+    }
+
+    #[test]
+    fn results_recall_scores_held_out_queries() {
+        let corpus = AlignedMatrix::from_rows(6, 1, &[0.0, 1.0, 2.0, 10.0, 11.0, 12.0]);
+        let queries = AlignedMatrix::from_rows(2, 1, &[0.1, 11.1]);
+        // exact top-2 for q0 is {0, 1}; for q1 it's {4, 5}
+        let perfect = vec![
+            vec![Neighbor::new(0, 0.01), Neighbor::new(1, 0.81)],
+            vec![Neighbor::new(4, 0.01), Neighbor::new(5, 0.81)],
+        ];
+        assert_eq!(recall_of_results(&perfect, &corpus, &queries, 2), 1.0);
+        let half = vec![
+            vec![Neighbor::new(0, 0.01), Neighbor::new(5, 141.61)],
+            vec![Neighbor::new(4, 0.01), Neighbor::new(0, 123.21)],
+        ];
+        assert_eq!(recall_of_results(&half, &corpus, &queries, 2), 0.5);
+        assert_eq!(recall_of_results(&[], &corpus, &AlignedMatrix::zeroed(0, 1), 2), 1.0);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 use super::candidates::CandidateLists;
 use super::compute::{compute_step, ComputeScratch, NativeEngine, PairwiseEngine};
 use super::init::init_random;
+use super::observer::{BuildEvent, BuildObserver, NoopObserver};
 use super::params::Params;
 use super::reorder::{greedy_permutation, Reordering};
 use super::selection::Selector;
@@ -54,6 +55,28 @@ impl BuildResult {
     pub fn total_updates(&self) -> u64 {
         self.per_iter.iter().map(|s| s.updates).sum()
     }
+
+    /// `data_original` brought into this build's *working* layout: row
+    /// `w` becomes original row σ⁻¹(w) when the build reordered, the
+    /// matrix passes through untouched otherwise. The single home of
+    /// the permute-to-working convention (facade and bundle both use
+    /// it), so graph and data can never disagree about the layout.
+    pub fn working_data(&self, data_original: AlignedMatrix) -> AlignedMatrix {
+        match &self.reordering {
+            Some(r) => data_original.permuted(&r.inv),
+            None => data_original,
+        }
+    }
+
+    /// Borrowing [`working_data`](Self::working_data): always produces
+    /// a fresh matrix (permuted copy, or a plain clone when the build
+    /// did not reorder).
+    pub fn working_data_ref(&self, data_original: &AlignedMatrix) -> AlignedMatrix {
+        match &self.reordering {
+            Some(r) => data_original.permuted(&r.inv),
+            None => data_original.clone(),
+        }
+    }
 }
 
 /// NN-Descent builder. Construct with [`Params`], call [`build`].
@@ -73,18 +96,32 @@ impl NnDescent {
         &self.params
     }
 
-    /// Build with the configured native backend (panics if params ask
-    /// for `pjrt` — use [`build_with_engine`] for that).
+    /// Build with the configured native backend. Fails (instead of the
+    /// historical panic) when params ask for the `pjrt` backend, which
+    /// needs an explicit engine — use [`build_with_engine`] for that, or
+    /// the [`api::IndexBuilder`] facade which routes both cases.
     ///
     /// [`build_with_engine`]: NnDescent::build_with_engine
-    pub fn build(&self, data: &AlignedMatrix) -> BuildResult {
-        assert!(
+    /// [`api::IndexBuilder`]: crate::api::IndexBuilder
+    pub fn build(&self, data: &AlignedMatrix) -> crate::Result<BuildResult> {
+        self.build_observed(data, &mut NoopObserver)
+    }
+
+    /// Like [`build`], reporting progress through a [`BuildObserver`].
+    ///
+    /// [`build`]: NnDescent::build
+    pub fn build_observed(
+        &self,
+        data: &AlignedMatrix,
+        observer: &mut dyn BuildObserver,
+    ) -> crate::Result<BuildResult> {
+        anyhow::ensure!(
             self.params.compute != ComputeKind::Pjrt,
             "pjrt backend needs an engine: enable the `pjrt` cargo feature and use \
              build_with_engine(runtime::PjrtEngine); native builds use scalar|unrolled|blocked"
         );
         let mut engine = NativeEngine::new(self.params.compute);
-        self.build_with_engine(data, &mut engine, &mut NoTracer)
+        Ok(self.build_with_engine_observed(data, &mut engine, &mut NoTracer, observer))
     }
 
     /// Build with an explicit pairwise engine and memory tracer.
@@ -93,6 +130,19 @@ impl NnDescent {
         data: &AlignedMatrix,
         engine: &mut E,
         tracer: &mut T,
+    ) -> BuildResult {
+        self.build_with_engine_observed(data, engine, tracer, &mut NoopObserver)
+    }
+
+    /// Build with an explicit pairwise engine, memory tracer, and
+    /// progress observer — the fully-general entry point every other
+    /// `build*` method funnels into.
+    pub fn build_with_engine_observed<E: PairwiseEngine, T: Tracer>(
+        &self,
+        data: &AlignedMatrix,
+        engine: &mut E,
+        tracer: &mut T,
+        observer: &mut dyn BuildObserver,
     ) -> BuildResult {
         let p = &self.params;
         let n = data.n();
@@ -110,6 +160,7 @@ impl NnDescent {
         let mut cands = CandidateLists::new(n, cap);
         let mut scratch = ComputeScratch::new(cap);
 
+        observer.on_event(&BuildEvent::Started { n, dim: data.dim(), k });
         init_random(&mut graph, data, &mut rng, &mut counter, tracer);
 
         // After a reorder we own the permuted matrix; start borrowed.
@@ -119,6 +170,7 @@ impl NnDescent {
         let mut per_iter = Vec::new();
         let threshold = (p.delta * n as f64 * k as f64) as u64;
         let mut iterations = 0;
+        let mut converged = false;
 
         for it in 0..p.max_iters {
             iterations = it + 1;
@@ -137,6 +189,7 @@ impl NnDescent {
                 reordering = Some(r);
                 t.stop();
                 stats.reorder_secs = t.secs();
+                observer.on_event(&BuildEvent::Reordered { secs: stats.reorder_secs });
             }
             let active: &AlignedMatrix = owned.as_ref().unwrap_or(data);
 
@@ -157,14 +210,21 @@ impl NnDescent {
             stats.compute_secs = t.secs();
             stats.dist_evals = counter.dist_evals - evals_before;
             stats.updates = updates;
+            observer.on_event(&BuildEvent::from_iter_stats(&stats));
             per_iter.push(stats);
 
             if updates <= threshold {
+                converged = true;
                 break;
             }
         }
 
         total.stop();
+        observer.on_event(&BuildEvent::Finished {
+            iterations,
+            converged,
+            total_secs: total.secs(),
+        });
         BuildResult {
             graph,
             iterations,
@@ -198,7 +258,7 @@ mod tests {
             .with_selection(sel)
             .with_compute(comp)
             .with_reorder(reorder);
-        NnDescent::new(params).build(data)
+        NnDescent::new(params).build(data).unwrap()
     }
 
     #[test]
@@ -269,9 +329,50 @@ mod tests {
         // δ = 0.9 → stop after the first iteration whose updates fall
         // below 0.9·n·k, i.e. almost immediately.
         let data = SynthGaussian::single(400, 8, 6).generate();
-        let fast = NnDescent::new(Params::default().with_k(8).with_delta(0.9)).build(&data);
-        let slow = NnDescent::new(Params::default().with_k(8).with_delta(0.0001)).build(&data);
+        let fast = NnDescent::new(Params::default().with_k(8).with_delta(0.9)).build(&data).unwrap();
+        let slow =
+            NnDescent::new(Params::default().with_k(8).with_delta(0.0001)).build(&data).unwrap();
         assert!(fast.iterations <= slow.iterations);
+    }
+
+    #[test]
+    fn pjrt_without_engine_is_an_error_not_a_panic() {
+        let data = SynthGaussian::single(100, 8, 2).generate();
+        let nnd = NnDescent::new(Params::default().with_k(5).with_compute(ComputeKind::Pjrt));
+        let err = nnd.build(&data).unwrap_err().to_string();
+        assert!(err.contains("pjrt"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn observer_sees_ordered_lifecycle_events() {
+        use crate::nndescent::observer::FnObserver;
+        let data = SynthGaussian::single(300, 8, 11).generate();
+        let mut events: Vec<BuildEvent> = Vec::new();
+        let params = Params::default().with_k(8).with_seed(11).with_reorder(true);
+        let result = NnDescent::new(params)
+            .build_observed(&data, &mut FnObserver(|e: &BuildEvent| events.push(*e)))
+            .unwrap();
+
+        assert!(matches!(events.first(), Some(BuildEvent::Started { n: 300, dim: 8, k: 8 })));
+        assert!(matches!(events.last(), Some(BuildEvent::Finished { .. })));
+        let iters: Vec<_> =
+            events.iter().filter(|e| matches!(e, BuildEvent::Iteration { .. })).collect();
+        assert_eq!(iters.len(), result.iterations, "one Iteration event per iteration");
+        assert_eq!(
+            events.iter().filter(|e| matches!(e, BuildEvent::Reordered { .. })).count(),
+            1,
+            "reorder runs exactly once"
+        );
+        // per-iteration events must mirror the returned stats
+        for (e, s) in iters.iter().zip(&result.per_iter) {
+            if let BuildEvent::Iteration { iter, updates, dist_evals, .. } = e {
+                assert_eq!((*iter, *updates, *dist_evals), (s.iter, s.updates, s.dist_evals));
+            }
+        }
+        if let Some(BuildEvent::Finished { iterations, total_secs, .. }) = events.last() {
+            assert_eq!(*iterations, result.iterations);
+            assert!((*total_secs - result.total_secs).abs() < 1e-9);
+        }
     }
 
     #[test]

@@ -25,6 +25,7 @@ pub mod candidates;
 pub mod compute;
 pub mod driver;
 pub mod init;
+pub mod observer;
 pub mod params;
 pub mod reorder;
 pub mod reorder_alt;
@@ -32,4 +33,5 @@ pub mod selection;
 
 pub use candidates::CandidateLists;
 pub use driver::{BuildResult, NnDescent};
+pub use observer::{BuildEvent, BuildObserver, FnObserver, LoggingObserver, NoopObserver};
 pub use params::Params;

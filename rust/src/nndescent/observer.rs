@@ -1,0 +1,175 @@
+//! Build progress events: a typed channel replacing ad-hoc `log_info!`
+//! calls as the way callers watch an index build.
+//!
+//! The NN-Descent driver emits one [`BuildEvent`] per lifecycle step
+//! through a [`BuildObserver`]. Three implementations ship with the
+//! crate: [`NoopObserver`] (the default), [`LoggingObserver`] (renders
+//! events through the crate logger, the CLI's choice), and
+//! [`FnObserver`] (wraps a closure, convenient for tests and
+//! embedders).
+//!
+//! The types live here — next to the driver that emits them — so the
+//! engine layer stays independent of the [`api`](crate::api) facade;
+//! the facade re-exports them (`knng::api::BuildEvent` etc.) as its
+//! public spelling.
+
+use crate::util::counters::IterStats;
+
+/// One step of an index build, emitted in order.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum BuildEvent {
+    /// The build started: graph of `n` points, `dim` logical dimensions,
+    /// `k` neighbors per node.
+    Started { n: usize, dim: usize, k: usize },
+    /// The greedy reorder heuristic ran (at most once per build).
+    Reordered { secs: f64 },
+    /// One NN-Descent iteration finished.
+    Iteration {
+        /// Iteration index (0-based).
+        iter: usize,
+        /// Graph updates this iteration (the convergence signal).
+        updates: u64,
+        /// Distance evaluations this iteration.
+        dist_evals: u64,
+        /// Seconds in the selection step.
+        select_secs: f64,
+        /// Seconds in the compute step.
+        compute_secs: f64,
+    },
+    /// The build finished. `converged` is false when the iteration cap
+    /// stopped it instead of the δ·n·k update threshold.
+    Finished { iterations: usize, converged: bool, total_secs: f64 },
+}
+
+impl BuildEvent {
+    /// Event for a finished iteration, from the driver's per-iteration
+    /// stats record.
+    pub(crate) fn from_iter_stats(s: &IterStats) -> Self {
+        BuildEvent::Iteration {
+            iter: s.iter,
+            updates: s.updates,
+            dist_evals: s.dist_evals,
+            select_secs: s.select_secs,
+            compute_secs: s.compute_secs,
+        }
+    }
+}
+
+/// Receiver for [`BuildEvent`]s. Implementations must be cheap: the
+/// driver calls `on_event` from the build loop (once per iteration, not
+/// per distance evaluation, so allocation is acceptable but blocking
+/// I/O should be buffered).
+pub trait BuildObserver {
+    fn on_event(&mut self, event: &BuildEvent);
+}
+
+/// Ignores all events (the default when no observer is installed).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopObserver;
+
+impl BuildObserver for NoopObserver {
+    fn on_event(&mut self, _event: &BuildEvent) {}
+}
+
+/// Renders events through the crate logger (`log_info!`/`log_debug!`),
+/// reproducing the progress lines the pipeline used to hard-code.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct LoggingObserver;
+
+impl BuildObserver for LoggingObserver {
+    fn on_event(&mut self, event: &BuildEvent) {
+        match *event {
+            BuildEvent::Started { n, dim, k } => {
+                crate::log_info!("build started: n={n}, d={dim}, k={k}");
+            }
+            BuildEvent::Reordered { secs } => {
+                crate::log_info!("greedy reorder ran in {secs:.3}s");
+            }
+            BuildEvent::Iteration { iter, updates, dist_evals, select_secs, compute_secs } => {
+                crate::log_debug!(
+                    "iter {iter}: {updates} updates, {dist_evals} dist evals \
+                     (select {select_secs:.3}s, compute {compute_secs:.3}s)"
+                );
+            }
+            BuildEvent::Finished { iterations, converged, total_secs } => {
+                crate::log_info!(
+                    "build {} after {iterations} iterations in {total_secs:.3}s",
+                    if converged { "converged" } else { "hit the iteration cap" }
+                );
+            }
+        }
+    }
+}
+
+/// Adapts a closure into a [`BuildObserver`]:
+/// `FnObserver(|e| events.push(*e))`.
+pub struct FnObserver<F: FnMut(&BuildEvent)>(pub F);
+
+impl<F: FnMut(&BuildEvent)> BuildObserver for FnObserver<F> {
+    fn on_event(&mut self, event: &BuildEvent) {
+        (self.0)(event)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fn_observer_records() {
+        let mut seen = Vec::new();
+        {
+            let mut obs = FnObserver(|e: &BuildEvent| seen.push(*e));
+            obs.on_event(&BuildEvent::Started { n: 10, dim: 8, k: 3 });
+            obs.on_event(&BuildEvent::Finished { iterations: 2, converged: true, total_secs: 0.1 });
+        }
+        assert_eq!(seen.len(), 2);
+        assert!(matches!(seen[0], BuildEvent::Started { n: 10, .. }));
+        assert!(matches!(seen[1], BuildEvent::Finished { converged: true, .. }));
+    }
+
+    #[test]
+    fn noop_and_logging_accept_all_events() {
+        let events = [
+            BuildEvent::Started { n: 4, dim: 8, k: 2 },
+            BuildEvent::Reordered { secs: 0.01 },
+            BuildEvent::Iteration {
+                iter: 0,
+                updates: 5,
+                dist_evals: 10,
+                select_secs: 0.0,
+                compute_secs: 0.0,
+            },
+            BuildEvent::Finished { iterations: 1, converged: false, total_secs: 0.02 },
+        ];
+        let mut noop = NoopObserver;
+        let mut logging = LoggingObserver;
+        for e in &events {
+            noop.on_event(e);
+            logging.on_event(e);
+        }
+    }
+
+    #[test]
+    fn iteration_event_mirrors_iter_stats() {
+        let s = IterStats {
+            iter: 3,
+            select_secs: 0.5,
+            compute_secs: 1.5,
+            reorder_secs: 0.0,
+            dist_evals: 77,
+            updates: 9,
+        };
+        let e = BuildEvent::from_iter_stats(&s);
+        assert_eq!(
+            e,
+            BuildEvent::Iteration {
+                iter: 3,
+                updates: 9,
+                dist_evals: 77,
+                select_secs: 0.5,
+                compute_secs: 1.5,
+            }
+        );
+    }
+}

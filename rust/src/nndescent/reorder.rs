@@ -116,7 +116,7 @@ mod tests {
             .with_selection(SelectionKind::Turbo)
             .with_compute(ComputeKind::Blocked)
             .with_max_iters(2); // early approximation, like the real use
-        let result = NnDescent::new(params).build(&data);
+        let result = NnDescent::new(params).build(&data).unwrap();
         (result.graph, labels)
     }
 

@@ -164,7 +164,7 @@ mod tests {
     fn graph_and_labels(n: usize, c: usize, seed: u64) -> (KnnGraph, Vec<u32>) {
         let (data, labels) = SynthClustered::new(n, 8, c, seed).generate_labeled();
         let params = Params::default().with_k(10).with_seed(seed).with_max_iters(3);
-        (NnDescent::new(params).build(&data).graph, labels)
+        (NnDescent::new(params).build(&data).unwrap().graph, labels)
     }
 
     #[test]

@@ -1,19 +1,42 @@
 //! End-to-end pipeline orchestration: config → dataset → graph build →
-//! evaluation → report. This is the layer the CLI, the examples, and
-//! the benches share, so every entry point exercises the same code path.
+//! evaluation → report.
+//!
+//! **Deprecated surface.** The free functions here predate the
+//! [`api`](crate::api) facade and now delegate to it; they are kept as
+//! thin shims so old callers keep compiling. New code should use
+//! [`api::IndexBuilder`](crate::api::IndexBuilder) (build) and
+//! [`api::Index::evaluate`](crate::api::Index::evaluate) (report):
+//! the facade returns a sealed [`Index`](crate::api::Index) instead of
+//! this module's bare `(RunReport, BuildResult, Dataset)` tuple, and
+//! its search results are typed in the original id space.
+//!
+//! [`EvalOptions`] and [`RunReport`] remain first-class: the facade
+//! shares them.
 
 pub mod report;
 
 pub use report::RunReport;
 
-use crate::baseline::brute::brute_force_knn_sampled;
-use crate::config::schema::ComputeKind;
+use crate::api::IndexBuilder;
 use crate::config::ExperimentConfig;
 use crate::dataset::{self, Dataset};
-use crate::metrics::recall::recall_against_truth;
-use crate::nndescent::{NnDescent, Params};
+use crate::nndescent::Params;
 
-/// Options controlling the evaluation stage.
+/// Default seed for ground-truth query sampling — the single home of
+/// the magic value (see [`EvalOptions::default`]).
+pub const DEFAULT_EVAL_SEED: u64 = 0xE7A1;
+
+/// Options controlling the evaluation stage. Construct with the
+/// builder-style methods so defaults stay in one place:
+///
+/// ```
+/// use knng::pipeline::EvalOptions;
+///
+/// let eval = EvalOptions::new().with_recall_queries(100).with_seed(7);
+/// assert_eq!(eval.recall_queries, 100);
+/// assert_eq!(EvalOptions::skip_recall().recall_queries, 0);
+/// assert_eq!(EvalOptions::new().seed, knng::pipeline::DEFAULT_EVAL_SEED);
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct EvalOptions {
     /// Number of sampled ground-truth queries (0 = skip recall).
@@ -24,29 +47,62 @@ pub struct EvalOptions {
 
 impl Default for EvalOptions {
     fn default() -> Self {
-        Self { recall_queries: 500, seed: 0xE7A1 }
+        Self { recall_queries: 500, seed: DEFAULT_EVAL_SEED }
+    }
+}
+
+impl EvalOptions {
+    /// The defaults: 500 sampled queries, seed [`DEFAULT_EVAL_SEED`].
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Evaluation disabled (no ground-truth sampling, recall `None`).
+    pub fn skip_recall() -> Self {
+        Self::new().with_recall_queries(0)
+    }
+
+    /// Set the number of sampled ground-truth queries (0 disables).
+    pub fn with_recall_queries(mut self, queries: usize) -> Self {
+        self.recall_queries = queries;
+        self
+    }
+
+    /// Set the query-sampling seed.
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
     }
 }
 
 /// Run a full experiment from a parsed config.
+#[deprecated(note = "use api::IndexBuilder::from_config(cfg).build() + Index::evaluate(eval)")]
 pub fn run_experiment(cfg: &ExperimentConfig, eval: EvalOptions) -> anyhow::Result<RunReport> {
-    Ok(run_experiment_full(cfg, eval)?.0)
+    #[allow(deprecated)]
+    let (report, _result, _ds) = run_experiment_full(cfg, eval)?;
+    Ok(report)
 }
 
 /// Like [`run_experiment`] but also returns the build result (graph,
 /// permutation, stats) and the materialized dataset, for callers that
 /// persist or serve the graph.
+#[deprecated(
+    note = "use api::IndexBuilder::from_config(cfg).build(): the Index owns what this \
+            tuple leaked (graph, σ, telemetry) and serves queries in original ids"
+)]
 pub fn run_experiment_full(
     cfg: &ExperimentConfig,
     eval: EvalOptions,
 ) -> anyhow::Result<(RunReport, crate::nndescent::BuildResult, Dataset)> {
     let ds = dataset::from_spec(&cfg.dataset)?;
+    #[allow(deprecated)]
     let (report, result) =
         run_on_dataset(&ds, &Params::from(&cfg.run), &cfg.run.artifacts_dir, eval, &cfg.name)?;
     Ok((report, result, ds))
 }
 
 /// Run on an already-materialized dataset.
+#[deprecated(note = "use api::IndexBuilder::data_named(..).build() + Index::evaluate(eval)")]
 pub fn run_on_dataset(
     ds: &Dataset,
     params: &Params,
@@ -63,61 +119,24 @@ pub fn run_on_dataset(
         params.compute.name(),
         params.reorder
     );
-
-    let nnd = NnDescent::new(params.clone());
-    let result = if params.compute == ComputeKind::Pjrt {
-        build_pjrt(&nnd, ds, artifacts_dir)?
-    } else {
-        nnd.build(&ds.data)
-    };
-
-    let recall = if eval.recall_queries > 0 {
-        let truth =
-            brute_force_knn_sampled(&ds.data, params.k, eval.recall_queries, eval.seed);
-        Some(recall_against_truth(&result, &truth))
-    } else {
-        None
-    };
-
-    let report = RunReport::new(name, ds, params, &result, recall);
-    Ok((report, result))
-}
-
-/// Build through the PJRT engine (pjrt feature on).
-#[cfg(feature = "pjrt")]
-fn build_pjrt(
-    nnd: &NnDescent,
-    ds: &Dataset,
-    artifacts_dir: &str,
-) -> anyhow::Result<crate::nndescent::BuildResult> {
-    let mut engine = crate::runtime::PjrtEngine::open(artifacts_dir)?;
-    let r = nnd.build_with_engine(&ds.data, &mut engine, &mut crate::cachesim::trace::NoTracer);
-    crate::log_info!(
-        "pjrt engine: {} executions, {} rows gathered",
-        engine.executions,
-        engine.rows_gathered
-    );
-    Ok(r)
-}
-
-/// The pjrt feature is off: fail with an actionable message instead of
-/// a missing-module compile error.
-#[cfg(not(feature = "pjrt"))]
-fn build_pjrt(
-    _nnd: &NnDescent,
-    _ds: &Dataset,
-    _artifacts_dir: &str,
-) -> anyhow::Result<crate::nndescent::BuildResult> {
-    anyhow::bail!(
-        "compute backend `pjrt` requires the `pjrt` cargo feature \
-         (rebuild with `--features pjrt` and vendor the `xla` crate); \
-         the native backends are scalar|unrolled|blocked"
-    )
+    // The builder takes ownership of the corpus, so this shim pays one
+    // O(n·dim) copy the old borrow-based path didn't; migrate to
+    // IndexBuilder::data(..) to hand the matrix over instead.
+    let index = IndexBuilder::new()
+        .data_named(ds.data.clone(), &ds.name)
+        .params(params.clone())
+        .artifacts_dir(artifacts_dir)
+        .name(name)
+        .log_progress()
+        .build()?;
+    let report = index.evaluate(&eval);
+    Ok((report, index.into_build_result()))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::Searcher;
     use crate::config::schema::SelectionKind;
     use crate::config::DatasetSpec;
 
@@ -132,7 +151,8 @@ mod tests {
                 ..Default::default()
             },
         };
-        let report = run_experiment(&cfg, EvalOptions { recall_queries: 50, seed: 1 }).unwrap();
+        let index = IndexBuilder::from_config(&cfg).build().unwrap();
+        let report = index.evaluate(&EvalOptions::new().with_recall_queries(50).with_seed(1));
         assert_eq!(report.n, 400);
         assert!(report.recall.unwrap() > 0.9, "recall {:?}", report.recall);
         assert!(report.total_secs > 0.0);
@@ -148,7 +168,8 @@ mod tests {
             dataset: DatasetSpec::Gaussian { n: 200, dim: 8, single: true, seed: 1 },
             run: crate::config::RunConfig { k: 5, ..Default::default() },
         };
-        let report = run_experiment(&cfg, EvalOptions { recall_queries: 0, seed: 1 }).unwrap();
+        let index = IndexBuilder::from_config(&cfg).build().unwrap();
+        let report = index.evaluate(&EvalOptions::skip_recall().with_seed(1));
         assert!(report.recall.is_none());
     }
 
@@ -164,8 +185,59 @@ mod tests {
                 ..Default::default()
             },
         };
-        let report = run_experiment(&cfg, EvalOptions { recall_queries: 30, seed: 2 }).unwrap();
+        let index = IndexBuilder::from_config(&cfg).build().unwrap();
+        let report = index.evaluate(&EvalOptions::new().with_recall_queries(30).with_seed(2));
         assert!(report.reordered);
         assert!(report.recall.unwrap() > 0.85);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_still_answer_like_the_facade() {
+        // the migration contract: the old tuple API keeps working and
+        // its pieces agree with the facade-built index
+        let cfg = ExperimentConfig {
+            name: "shim".into(),
+            dataset: DatasetSpec::Clustered { n: 350, dim: 8, clusters: 4, seed: 11 },
+            run: crate::config::RunConfig { k: 8, reorder: true, ..Default::default() },
+        };
+        let eval = EvalOptions::new().with_recall_queries(40).with_seed(9);
+        let (report, result, ds) = run_experiment_full(&cfg, eval).unwrap();
+        assert_eq!(report.n, 350);
+        assert!(result.reordering.is_some());
+        assert_eq!(ds.n(), 350);
+        assert!(report.recall.unwrap() > 0.85);
+
+        let index = IndexBuilder::from_config(&cfg).build().unwrap();
+        assert_eq!(index.len(), 350);
+        // same build → same graph workload
+        let t = index.telemetry().unwrap();
+        assert_eq!(t.iterations, result.iterations);
+        assert_eq!(t.stats.dist_evals, result.stats.dist_evals);
+        // and the facade's neighbors match the tuple's original-space view
+        for u in (0..350).step_by(53) {
+            let shim = result.neighbors_original(u);
+            let facade = index.neighbors(crate::api::OriginalId(u as u32));
+            assert_eq!(shim.len(), facade.len());
+            for (s, f) in shim.iter().zip(&facade) {
+                assert_eq!((s.0, s.1.to_bits()), (f.id.get(), f.dist.to_bits()), "node {u}");
+            }
+        }
+        let report2 = run_experiment(&cfg, eval).unwrap();
+        assert_eq!(report.recall, report2.recall);
+        assert_eq!(report.dist_evals, report2.dist_evals);
+    }
+
+    #[test]
+    fn facade_search_serves_the_built_graph() {
+        let cfg = ExperimentConfig {
+            name: "serve".into(),
+            dataset: DatasetSpec::Clustered { n: 300, dim: 8, clusters: 4, seed: 21 },
+            run: crate::config::RunConfig { k: 8, ..Default::default() },
+        };
+        let index = IndexBuilder::from_config(&cfg).build().unwrap();
+        let q = index.data().row_logical(5).to_vec();
+        let (res, _) = index.search(&q, 3, &Default::default());
+        assert_eq!(res[0].id.get(), 5);
     }
 }

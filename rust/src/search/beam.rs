@@ -204,6 +204,12 @@ impl GraphIndex {
         &self.data
     }
 
+    /// Decompose into the owned data matrix and graph (consumes the
+    /// index; used by the `api` facade to reassemble build results).
+    pub fn into_parts(self) -> (AlignedMatrix, KnnGraph) {
+        (self.data, self.graph)
+    }
+
     /// k nearest neighbors of `query` (padded or logical length),
     /// ascending by distance.
     pub fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> (Vec<(u32, f32)>, QueryStats) {
@@ -368,7 +374,8 @@ mod tests {
 
     fn index(n: usize, dim: usize, seed: u64) -> (GraphIndex, AlignedMatrix) {
         let (data, _) = SynthClustered::new(n, dim, 8, seed).generate_labeled();
-        let result = NnDescent::new(Params::default().with_k(16).with_seed(seed)).build(&data);
+        let result =
+            NnDescent::new(Params::default().with_k(16).with_seed(seed)).build(&data).unwrap();
         (GraphIndex::new(data.clone(), result.graph), data)
     }
 
@@ -393,7 +400,7 @@ mod tests {
             AlignedMatrix::from_rows(1000, 16, &rows)
         };
         let result =
-            NnDescent::new(Params::default().with_k(16).with_seed(9)).build(&index_data);
+            NnDescent::new(Params::default().with_k(16).with_seed(9)).build(&index_data).unwrap();
         let idx = GraphIndex::new(index_data.clone(), result.graph);
 
         let k = 10;
@@ -472,7 +479,7 @@ mod tests {
         let (data, _) = SynthClustered::new(1400, 16, 8, 17).generate_labeled();
         let index_data = query_matrix(&data, 0, 1200);
         let result =
-            NnDescent::new(Params::default().with_k(16).with_seed(17)).build(&index_data);
+            NnDescent::new(Params::default().with_k(16).with_seed(17)).build(&index_data).unwrap();
         let idx = GraphIndex::new(index_data, result.graph);
         let queries = query_matrix(&data, 1200, 200);
 

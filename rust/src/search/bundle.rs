@@ -62,10 +62,7 @@ impl IndexBundle {
     /// dataset in its original id space (as fed to `NnDescent::build`);
     /// it is permuted into the working layout when the build reordered.
     pub fn from_build(data_original: &AlignedMatrix, result: &BuildResult, params: &Params) -> Self {
-        let data = match &result.reordering {
-            Some(r) => data_original.permuted(&r.inv),
-            None => data_original.clone(),
-        };
+        let data = result.working_data_ref(data_original);
         Self {
             data,
             graph: result.graph.clone(),
@@ -127,9 +124,21 @@ fn decode_params(b: &[u8; 64]) -> Result<Params> {
 
 /// Serialize an index bundle.
 pub fn save_index(path: &Path, bundle: &IndexBundle) -> Result<()> {
-    let (data, graph) = (&bundle.data, &bundle.graph);
+    save_index_parts(path, &bundle.data, &bundle.graph, bundle.reordering.as_ref(), &bundle.params)
+}
+
+/// Serialize an index bundle from borrowed components (avoids cloning
+/// the data matrix when the caller — e.g. `api::Index::save` — owns the
+/// parts separately).
+pub fn save_index_parts(
+    path: &Path,
+    data: &AlignedMatrix,
+    graph: &KnnGraph,
+    reordering: Option<&Reordering>,
+    params: &Params,
+) -> Result<()> {
     assert_eq!(data.n(), graph.n(), "bundle graph/data size mismatch");
-    if let Some(r) = &bundle.reordering {
+    if let Some(r) = reordering {
         r.validate().map_err(|e| anyhow::anyhow!("invalid reordering: {e}"))?;
         assert_eq!(r.sigma.len(), data.n(), "reordering length mismatch");
     }
@@ -145,9 +154,9 @@ pub fn save_index(path: &Path, bundle: &IndexBundle) -> Result<()> {
     emit(&mut w, &(data.n() as u64).to_le_bytes())?;
     emit(&mut w, &(data.dim() as u64).to_le_bytes())?;
     emit(&mut w, &(graph.k() as u64).to_le_bytes())?;
-    let flags = if bundle.reordering.is_some() { FLAG_REORDERING } else { 0 };
+    let flags = if reordering.is_some() { FLAG_REORDERING } else { 0 };
     emit(&mut w, &flags.to_le_bytes())?;
-    emit(&mut w, &encode_params(&bundle.params))?;
+    emit(&mut w, &encode_params(params))?;
     for u in 0..graph.n() {
         for &v in graph.ids(u) {
             emit(&mut w, &v.to_le_bytes())?;
@@ -166,7 +175,7 @@ pub fn save_index(path: &Path, bundle: &IndexBundle) -> Result<()> {
         }
         emit(&mut w, &row_buf)?;
     }
-    if let Some(r) = &bundle.reordering {
+    if let Some(r) = reordering {
         for &s in &r.sigma {
             emit(&mut w, &s.to_le_bytes())?;
         }
@@ -325,7 +334,7 @@ mod tests {
     fn build_bundle(n: usize, seed: u64, reorder: bool) -> (IndexBundle, AlignedMatrix, Params) {
         let (data, _) = SynthClustered::new(n, 16, 6, seed).generate_labeled();
         let params = Params::default().with_k(10).with_seed(seed).with_reorder(reorder);
-        let result = NnDescent::new(params.clone()).build(&data);
+        let result = NnDescent::new(params.clone()).build(&data).unwrap();
         (IndexBundle::from_build(&data, &result, &params), data, params)
     }
 

@@ -15,4 +15,4 @@ pub mod beam;
 pub mod bundle;
 
 pub use beam::{BatchStats, GraphIndex, QueryStats, SearchParams};
-pub use bundle::{load_index, save_index, IndexBundle};
+pub use bundle::{load_index, save_index, save_index_parts, IndexBundle};

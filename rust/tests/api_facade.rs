@@ -1,0 +1,187 @@
+//! `api` facade integration: sharded-vs-single equivalence (the S=1
+//! bit-identity and S>1 recall acceptance gates), id-space guarantees
+//! under reorder, and builder fallibility.
+
+use knng::api::{EvalOptions, IndexBuilder, OriginalId, Searcher, ShardedSearcher};
+use knng::config::schema::ComputeKind;
+use knng::config::DatasetSpec;
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::metrics::recall::{exact_neighbor_ids, recall_vs_exact};
+use knng::nndescent::{NnDescent, Params};
+use knng::search::{GraphIndex, SearchParams};
+use knng::testing::{check_result, Config};
+
+/// Rows `[from, from+count)` of `data` as a fresh matrix.
+fn slice_rows(data: &AlignedMatrix, from: usize, count: usize) -> AlignedMatrix {
+    let rows: Vec<f32> =
+        (from..from + count).flat_map(|i| data.row_logical(i).to_vec()).collect();
+    AlignedMatrix::from_rows(count, data.dim(), &rows)
+}
+
+#[test]
+fn sharded_s1_is_bit_identical_to_graph_index_batch() {
+    // the acceptance criterion: one shard sees the whole corpus and the
+    // merge is the identity, so ids AND distance bits must match
+    // GraphIndex::search_batch exactly, as must the aggregate work.
+    let (all, _) = SynthClustered::new(1400, 16, 8, 17).generate_labeled();
+    let corpus = slice_rows(&all, 0, 1200);
+    let queries = slice_rows(&all, 1200, 200);
+    let params = Params::default().with_k(16).with_seed(17);
+
+    let result = NnDescent::new(params.clone()).build(&corpus).unwrap();
+    let single = GraphIndex::new(corpus.clone(), result.graph);
+    let sharded = ShardedSearcher::build(&corpus, 1, &params).unwrap();
+    assert_eq!(sharded.shard_count(), 1);
+
+    for sp in [
+        SearchParams::default(),
+        SearchParams { ef: 16, ..Default::default() },
+        SearchParams { ef: 128, seeds: 4, ..Default::default() },
+        SearchParams { probes: 64, ..Default::default() },
+    ] {
+        let (raw, raw_stats) = GraphIndex::search_batch(&single, &queries, 10, &sp);
+        let (typed, typed_stats) = sharded.search_batch(&queries, 10, &sp);
+        assert_eq!(raw.len(), typed.len());
+        for (qi, (r, t)) in raw.iter().zip(&typed).enumerate() {
+            assert_eq!(r.len(), t.len(), "ef={} query {qi} arity", sp.ef);
+            for (j, (&(v, d), nb)) in r.iter().zip(t).enumerate() {
+                assert_eq!(nb.id, OriginalId(v), "ef={} query {qi} rank {j} id", sp.ef);
+                assert_eq!(
+                    nb.dist.to_bits(),
+                    d.to_bits(),
+                    "ef={} query {qi} rank {j} distance bits",
+                    sp.ef
+                );
+            }
+        }
+        assert_eq!(raw_stats.dist_evals, typed_stats.dist_evals, "aggregate evals");
+        assert_eq!(raw_stats.expansions, typed_stats.expansions, "aggregate expansions");
+    }
+}
+
+#[test]
+fn sharded_s4_recall_within_002_of_single_on_clustered() {
+    // sharding may cost at most 0.02 recall on the clustered config
+    let (all, _) = SynthClustered::new(2200, 16, 8, 29).generate_labeled();
+    let corpus = slice_rows(&all, 0, 2000);
+    let queries = slice_rows(&all, 2000, 200);
+    let k = 10;
+    let params = Params::default().with_k(16).with_seed(29).with_reorder(true);
+
+    let single = IndexBuilder::new()
+        .data_named(corpus.clone(), "clustered")
+        .params(params.clone())
+        .build()
+        .unwrap();
+    let sharded = ShardedSearcher::build(&corpus, 4, &params).unwrap();
+    assert_eq!(sharded.shard_sizes().iter().sum::<usize>(), 2000);
+
+    let sp = SearchParams::default();
+    let (single_res, _) = single.search_batch(&queries, k, &sp);
+    let (sharded_res, _) = sharded.search_batch(&queries, k, &sp);
+
+    // the shared recall definition the bench's 0.02 gate also uses
+    let truth = exact_neighbor_ids(&corpus, &queries, k);
+    let rs = recall_vs_exact(&single_res, &truth);
+    let rsh = recall_vs_exact(&sharded_res, &truth);
+    assert!(rs > 0.9, "single-index recall {rs} suspiciously low");
+    assert!(rsh >= rs - 0.02, "sharded recall {rsh} dropped > 0.02 below single {rs}");
+}
+
+#[test]
+fn property_sharded_results_are_valid_and_s1_matches_single() {
+    // randomized configs: n, shard count, k, ef — invariants that must
+    // hold for every draw. Few cases: each runs a full (small) build.
+    check_result(Config::cases(6).with_seed(0xA91), "sharded invariants", |g| {
+        let n = g.usize_in(80..240);
+        let shards = g.usize_in(1..5).min(n / 2);
+        let k = g.usize_in(3..9);
+        let ef = g.usize_in(16..64);
+        let (data, _) = SynthClustered::new(n, 8, 4, g.u64()).generate_labeled();
+        let params = Params::default().with_k(10).with_seed(7);
+        let sharded = ShardedSearcher::build(&data, shards, &params)
+            .map_err(|e| format!("build failed: {e}"))?;
+        let sp = SearchParams { ef, ..Default::default() };
+
+        // query a handful of corpus rows
+        for qi in [0usize, n / 3, n - 1] {
+            let (res, stats) = sharded.search(data.row_logical(qi), k, &sp);
+            if res.len() != k.min(n) {
+                return Err(format!("n={n} S={shards}: got {} results for k={k}", res.len()));
+            }
+            if stats.dist_evals == 0 {
+                return Err("no distance evaluations recorded".into());
+            }
+            // sorted ascending, ids in range, unique
+            for w in res.windows(2) {
+                if w[0].dist > w[1].dist {
+                    return Err(format!("unsorted results at n={n} S={shards}"));
+                }
+                if w[0].id == w[1].id {
+                    return Err(format!("duplicate id {} at n={n} S={shards}", w[0].id));
+                }
+            }
+            if res.iter().any(|nb| nb.id.index() >= n) {
+                return Err(format!("id out of range at n={n} S={shards}"));
+            }
+            if res[0].id.index() != qi || res[0].dist > 1e-6 {
+                return Err(format!("self hit missing for row {qi} at n={n} S={shards}"));
+            }
+        }
+
+        // S=1 must agree with a directly-built single index, bit for bit
+        if shards == 1 {
+            let result =
+                NnDescent::new(params).build(&data).map_err(|e| format!("single: {e}"))?;
+            let single = GraphIndex::new(data.clone(), result.graph);
+            for qi in [0usize, n / 2] {
+                let (raw, _) = GraphIndex::search(&single, data.row_logical(qi), k, &sp);
+                let (typed, _) = sharded.search(data.row_logical(qi), k, &sp);
+                for (&(v, d), nb) in raw.iter().zip(&typed) {
+                    if nb.id != OriginalId(v) || nb.dist.to_bits() != d.to_bits() {
+                        return Err(format!("S=1 divergence at n={n} qi={qi}"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn facade_serves_original_ids_under_reorder_end_to_end() {
+    let index = IndexBuilder::new()
+        .dataset(DatasetSpec::Clustered { n: 700, dim: 8, clusters: 6, seed: 3 })
+        .params(Params::default().with_k(10).with_seed(3).with_reorder(true))
+        .build()
+        .unwrap();
+    assert!(index.is_reordered());
+    let report = index.evaluate(&EvalOptions::new().with_recall_queries(60).with_seed(2));
+    assert!(report.recall.unwrap() > 0.9, "recall {:?}", report.recall);
+
+    // the working layout really is permuted, yet every search answers in
+    // original ids: row w of the working data is original node σ⁻¹(w)
+    let sp = SearchParams::default();
+    for w in (0..700usize).step_by(97) {
+        let (res, _) = index.search(index.data().row_logical(w), 1, &sp);
+        let expect = index.to_original(knng::api::WorkingId(w as u32));
+        assert_eq!(res[0].id, expect, "working row {w} must answer as its original id");
+    }
+}
+
+#[test]
+fn builder_is_fallible_end_to_end() {
+    // pjrt without the feature/engine: Err with an actionable message
+    let res = IndexBuilder::new()
+        .dataset(DatasetSpec::Gaussian { n: 100, dim: 8, single: true, seed: 1 })
+        .params(Params::default().with_k(5).with_compute(ComputeKind::Pjrt))
+        .build();
+    assert!(res.is_err());
+
+    // missing dataset file: Err, not panic
+    let res = IndexBuilder::new()
+        .dataset(DatasetSpec::Fvecs { path: "/nonexistent/corpus.fvecs".into(), limit: 10 })
+        .build();
+    assert!(res.is_err());
+}

@@ -2,13 +2,13 @@
 //! family × selection × compute × reorder combination, result-semantics
 //! invariants, and config-file round trips.
 
+use knng::api::{EvalOptions, IndexBuilder};
 use knng::baseline::brute::brute_force_knn_sampled;
 use knng::config::schema::{ComputeKind, SelectionKind};
 use knng::config::{DatasetSpec, ExperimentConfig};
 use knng::dataset::from_spec;
 use knng::metrics::recall::recall_against_truth;
 use knng::nndescent::{NnDescent, Params};
-use knng::pipeline::{run_experiment, EvalOptions};
 
 #[test]
 fn matrix_of_variants_converges_on_clustered_data() {
@@ -23,7 +23,7 @@ fn matrix_of_variants_converges_on_clustered_data() {
                     .with_selection(sel)
                     .with_compute(comp)
                     .with_reorder(reorder);
-                let r = NnDescent::new(params).build(&ds.data);
+                let r = NnDescent::new(params).build(&ds.data).unwrap();
                 r.graph.validate().unwrap_or_else(|e| {
                     panic!("{sel:?}/{comp:?}/reorder={reorder}: graph invalid: {e}")
                 });
@@ -48,7 +48,7 @@ fn every_dataset_family_builds() {
     ];
     for spec in specs {
         let ds = from_spec(&spec).unwrap();
-        let r = NnDescent::new(Params::default().with_k(8).with_seed(9)).build(&ds.data);
+        let r = NnDescent::new(Params::default().with_k(8).with_seed(9)).build(&ds.data).unwrap();
         assert!(r.iterations >= 2, "{}: converged suspiciously fast", ds.name);
         r.graph.validate().unwrap();
         // distances in results must be true squared-L2 of the rows
@@ -66,8 +66,8 @@ fn every_dataset_family_builds() {
 fn reordered_and_plain_runs_agree_on_quality_not_layout() {
     let ds = from_spec(&DatasetSpec::Clustered { n: 800, dim: 8, clusters: 8, seed: 13 }).unwrap();
     let base = Params::default().with_k(12).with_seed(13);
-    let plain = NnDescent::new(base.clone()).build(&ds.data);
-    let reord = NnDescent::new(base.with_reorder(true)).build(&ds.data);
+    let plain = NnDescent::new(base.clone()).build(&ds.data).unwrap();
+    let reord = NnDescent::new(base.with_reorder(true)).build(&ds.data).unwrap();
     let r = reord.reordering.as_ref().expect("must reorder");
     r.validate().unwrap();
     // permutation must be non-trivial on clustered data
@@ -101,8 +101,10 @@ fn pipeline_runs_bundled_configs() {
             DatasetSpec::Audio { dim, seed, .. } => DatasetSpec::Audio { n: 300, dim, seed },
             other => other,
         };
-        let report = run_experiment(&cfg, EvalOptions { recall_queries: 50, seed: 2 })
+        let index = IndexBuilder::from_config(&cfg)
+            .build()
             .unwrap_or_else(|e| panic!("{}: {e:#}", path.display()));
+        let report = index.evaluate(&EvalOptions::new().with_recall_queries(50).with_seed(2));
         assert!(report.recall.unwrap() > 0.8, "{}: recall {:?}", path.display(), report.recall);
     }
 }
@@ -125,8 +127,9 @@ fn determinism_across_full_pipeline() {
         "#,
     )
     .unwrap();
-    let a = run_experiment(&cfg, EvalOptions { recall_queries: 40, seed: 1 }).unwrap();
-    let b = run_experiment(&cfg, EvalOptions { recall_queries: 40, seed: 1 }).unwrap();
+    let eval = EvalOptions::new().with_recall_queries(40).with_seed(1);
+    let a = IndexBuilder::from_config(&cfg).build().unwrap().evaluate(&eval);
+    let b = IndexBuilder::from_config(&cfg).build().unwrap().evaluate(&eval);
     assert_eq!(a.dist_evals, b.dist_evals);
     assert_eq!(a.iterations, b.iterations);
     assert_eq!(a.recall, b.recall);

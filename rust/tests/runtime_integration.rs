@@ -93,7 +93,8 @@ fn pjrt_full_build_reaches_native_recall() {
     let truth = knng::baseline::brute::brute_force_knn_sampled(&data, 10, 200, 5);
 
     let base = Params::default().with_k(10).with_seed(33).with_selection(SelectionKind::Turbo);
-    let native = NnDescent::new(base.clone().with_compute(ComputeKind::Blocked)).build(&data);
+    let native =
+        NnDescent::new(base.clone().with_compute(ComputeKind::Blocked)).build(&data).unwrap();
     let mut engine = PjrtEngine::open("artifacts").unwrap();
     let pjrt = NnDescent::new(base.with_compute(ComputeKind::Pjrt)).build_with_engine(
         &data,
