@@ -11,14 +11,17 @@
 //! Run: `cargo bench --bench bench_query_throughput`
 
 use knng::api::{IndexBuilder, Searcher, ShardedSearcher};
-use knng::bench::{full_scale, measure_once, Table};
+use knng::bench::{full_scale, measure_once, write_bench_json, Json, Table};
 use knng::dataset::clustered::SynthClustered;
 use knng::dataset::AlignedMatrix;
+use knng::distance::dispatch;
+use knng::distance::KernelWidth;
 use knng::metrics::recall::{exact_neighbor_ids, recall_vs_exact};
 use knng::nndescent::Params;
 use knng::search::SearchParams;
 
 fn main() {
+    println!("kernel dispatch: {}", dispatch::describe());
     let scale = if full_scale() { 4 } else { 1 };
     let n = 16_384 * scale;
     let n_queries = 1024 * scale;
@@ -42,7 +45,7 @@ fn main() {
     let params = Params::default().with_k(20).with_seed(7).with_reorder(true);
     let corpus_for_build = corpus.clone();
     let build_params = params.clone();
-    let (index, build_secs) = measure_once(move || {
+    let (mut index, build_secs) = measure_once(move || {
         IndexBuilder::new()
             .data_named(corpus_for_build, "clustered")
             .params(build_params)
@@ -148,10 +151,76 @@ fn main() {
     let sp = SearchParams::default();
     let (_, sstats) = sharded.search_batch(&qmat, k, &sp);
     println!(
-        "S=4 full-batch throughput: {:.0} qps over {} queries (ef={})",
+        "S=4 full-batch throughput: {:.0} qps over {} queries (ef={}, kernel {})",
         sstats.qps(),
         sstats.queries,
-        sp.ef
+        sp.ef,
+        sstats.kernel
     );
     table.finish();
+
+    // ---- per-kernel-width comparison (the dispatch engine's A/B) ----
+    // Force each width in turn on the single index's full-batch path,
+    // refreshing the corpus norms each time so every row measures
+    // exactly what a build/load at that width would serve. Forcing is
+    // safe on any CPU (portable SIMD); only speed differs.
+    let mut wtable = Table::new(
+        "query_throughput_by_kernel",
+        &["kernel", "qps", "evals/query", "recall@10", "note"],
+    );
+    let mut json_rows = Vec::new();
+    for width in KernelWidth::ALL {
+        dispatch::force(Some(width));
+        index.refresh_norms();
+        let (res, wstats) = index.search_batch(&qmat, k, &sp);
+        let recall = recall_vs_exact(&res[..sample], &truth);
+        let note = if width == KernelWidth::W16 && !dispatch::avx512_supported() {
+            "no avx512f on this CPU"
+        } else {
+            ""
+        };
+        wtable.row(&[
+            width.name().into(),
+            format!("{:.0}", wstats.qps()),
+            format!("{:.0}", wstats.dist_evals_per_query()),
+            format!("{recall:.4}"),
+            note.into(),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("kernel", Json::s(width.name())),
+            ("qps", Json::Num(wstats.qps())),
+            ("evals_per_query", Json::Num(wstats.dist_evals_per_query())),
+            ("recall", Json::Num(recall)),
+            ("ef", Json::Int(sp.ef as u64)),
+            ("batch", Json::Int(n_queries as u64)),
+        ]));
+    }
+    dispatch::force(None);
+    index.refresh_norms();
+
+    // sharded S=4 full-batch row at the default width, for trajectory
+    json_rows.push(Json::obj(vec![
+        ("kernel", Json::s(sstats.kernel)),
+        ("qps", Json::Num(sstats.qps())),
+        ("evals_per_query", Json::Num(sstats.dist_evals_per_query())),
+        ("recall", Json::Num(sharded_recall)),
+        ("ef", Json::Int(sp.ef as u64)),
+        ("batch", Json::Int(n_queries as u64)),
+        ("searcher", Json::s("S=4")),
+    ]));
+    wtable.finish();
+
+    write_bench_json(
+        "BENCH_query.json",
+        &Json::obj(vec![
+            ("bench", Json::s("query_throughput")),
+            ("dataset", Json::s("clustered")),
+            ("n", Json::Int(n as u64)),
+            ("dim", Json::Int(dim as u64)),
+            ("k", Json::Int(k as u64)),
+            ("queries", Json::Int(n_queries as u64)),
+            ("detected_kernel", Json::s(dispatch::detect().name())),
+            ("rows", Json::Arr(json_rows)),
+        ]),
+    );
 }

@@ -12,10 +12,12 @@
 //!
 //! Run: `cargo bench --bench bench_roofline` (`KNNG_BENCH_FULL=1` = paper n)
 
-use knng::bench::{full_scale, measure_once, Table};
+use knng::bench::{full_scale, measure_once, write_bench_json, Json, Table};
 use knng::cachesim::{CacheTracer, Geometry};
 use knng::config::schema::{ComputeKind, SelectionKind};
 use knng::dataset::synth::SynthGaussian;
+use knng::distance::dispatch;
+use knng::distance::KernelWidth;
 use knng::nndescent::compute::NativeEngine;
 use knng::nndescent::{NnDescent, Params};
 use knng::roofline::{ridge_intensity, Machine, RooflinePoint};
@@ -95,4 +97,85 @@ fn main() {
     );
     assert!(d8.intensity() < d256.intensity(), "d=256 must have higher intensity");
     assert!(d8g.intensity() > d8.intensity(), "greedy must raise operational intensity");
+
+    // ---- per-kernel-width rows on the compute-bound shape ------------
+    // d=256 is right of the ridge, so kernel width is the lever there;
+    // a smaller n keeps the scalar build affordable.
+    println!("\nkernel dispatch: {}", dispatch::describe());
+    let n_w = if full_scale() { 16_384 } else { 4_096 };
+    let d_w = 256;
+    let mut wtable = Table::new(
+        "roofline_by_kernel",
+        &["kernel", "secs", "dist_evals", "gflops/s", "vs w8"],
+    );
+    // dataset and params do not depend on the forced width — generate
+    // once; measure all widths first so every row (including scalar,
+    // which runs before w8) gets a "vs w8" ratio
+    let data = SynthGaussian::multi(n_w, d_w, 0xF13).generate();
+    let mut runs = Vec::new();
+    for width in KernelWidth::ALL {
+        dispatch::force(Some(width));
+        let params = Params::default()
+            .with_k(20)
+            .with_seed(3)
+            .with_selection(SelectionKind::Turbo)
+            .with_compute(ComputeKind::Blocked);
+        let (result, secs) = measure_once(|| NnDescent::new(params).build(&data).unwrap());
+        runs.push((width, secs, result.stats.dist_evals, result.stats.flops()));
+    }
+    dispatch::force(None);
+
+    let w8_secs = runs
+        .iter()
+        .find(|(w, ..)| *w == KernelWidth::W8)
+        .map(|&(_, secs, ..)| secs)
+        .unwrap_or(0.0);
+    let mut rows_json = Vec::new();
+    for &(width, secs, dist_evals, flops) in &runs {
+        let gflops = flops as f64 / secs / 1e9;
+        wtable.row(&[
+            width.name().into(),
+            format!("{secs:.2}"),
+            format!("{dist_evals}"),
+            format!("{gflops:.2}"),
+            if w8_secs > 0.0 { format!("{:.2}x", w8_secs / secs) } else { "-".into() },
+        ]);
+        rows_json.push(Json::obj(vec![
+            ("kernel", Json::s(width.name())),
+            ("n", Json::Int(n_w as u64)),
+            ("d", Json::Int(d_w as u64)),
+            ("secs", Json::Num(secs)),
+            ("dist_evals", Json::Int(dist_evals)),
+            ("flops", Json::Int(flops)),
+            ("gflops_per_sec", Json::Num(gflops)),
+        ]));
+    }
+    wtable.finish();
+
+    // Fig-3 points + per-width rows as the machine-readable artifact
+    let fig3_json: Vec<Json> = pts
+        .iter()
+        .map(|p| {
+            Json::obj(vec![
+                ("label", Json::s(p.label.clone())),
+                ("kernel", Json::s(dispatch::active_width().name())),
+                ("n", Json::Int(n as u64)),
+                ("flops", Json::Num(p.flops)),
+                ("bytes", Json::Num(p.bytes)),
+                ("intensity", Json::Num(p.intensity())),
+                ("perf_f_per_c", Json::Num(p.perf(&machine))),
+                ("memory_bound", Json::Bool(p.memory_bound(&machine))),
+            ])
+        })
+        .collect();
+    write_bench_json(
+        "BENCH_roofline.json",
+        &Json::obj(vec![
+            ("bench", Json::s("roofline")),
+            ("dataset", Json::s("gaussian-multi")),
+            ("detected_kernel", Json::s(dispatch::detect().name())),
+            ("fig3_points", Json::Arr(fig3_json)),
+            ("by_kernel", Json::Arr(rows_json)),
+        ]),
+    );
 }

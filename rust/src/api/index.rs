@@ -68,14 +68,18 @@ impl Index {
     }
 
     /// Reload an index from a `KNNIv1` bundle written by [`Index::save`]
-    /// (or the CLI's `build --save-index`).
+    /// (or the CLI's `build --save-index`). Bundles without a persisted
+    /// norms section (pre-norms artifacts) stay loadable — the corpus
+    /// norms for the norm-trick serving path are recomputed from the
+    /// data section.
     pub fn load(path: &Path) -> crate::Result<Self> {
         let bundle = crate::search::load_index(path)?;
         let name = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+        let (core, reordering, params) = bundle.into_index();
         Ok(Self {
-            core: GraphIndex::new(bundle.data, bundle.graph),
-            reordering: bundle.reordering,
-            params: bundle.params,
+            core,
+            reordering,
+            params,
             dataset: name.clone(),
             name,
             telemetry: None,
@@ -83,7 +87,7 @@ impl Index {
     }
 
     /// Persist as a checksummed `KNNIv1` bundle (graph + working-layout
-    /// data + σ + build params).
+    /// data + σ + corpus norms + build params).
     pub fn save(&self, path: &Path) -> crate::Result<()> {
         crate::search::bundle::save_index_parts(
             path,
@@ -91,6 +95,7 @@ impl Index {
             self.core.graph(),
             self.reordering.as_ref(),
             &self.params,
+            Some((self.core.norms(), self.core.norm_lanes())),
         )
     }
 
@@ -155,6 +160,13 @@ impl Index {
         self.core.data()
     }
 
+    /// Recompute the corpus norms at the current active kernel width
+    /// (see [`GraphIndex::refresh_norms`]); needed after
+    /// `distance::dispatch::force` switches widths mid-process.
+    pub fn refresh_norms(&mut self) {
+        self.core.refresh_norms();
+    }
+
     /// The underlying graph (working id space — see [`WorkingId`]).
     pub fn graph(&self) -> &KnnGraph {
         self.core.graph()
@@ -212,6 +224,17 @@ impl Index {
             None
         };
         let t = self.telemetry.clone().unwrap_or_default();
+        // Builds record the width their counters ran on; PJRT builds
+        // ran on the PJRT backend regardless of the native width, and
+        // reloaded bundles carry no telemetry — report the serving
+        // width for those.
+        let kernel = if self.params.compute == crate::config::schema::ComputeKind::Pjrt {
+            "pjrt"
+        } else if t.stats.kernel.is_empty() {
+            crate::distance::dispatch::active_width().name()
+        } else {
+            t.stats.kernel
+        };
         RunReport {
             name: self.name.clone(),
             dataset: self.dataset.clone(),
@@ -220,6 +243,7 @@ impl Index {
             k: self.params.k,
             selection: self.params.selection.name(),
             compute: self.params.compute.name(),
+            kernel,
             reordered: self.is_reordered(),
             iterations: t.iterations,
             total_secs: t.total_secs,

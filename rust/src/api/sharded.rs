@@ -186,7 +186,11 @@ impl Searcher for ShardedSearcher {
         params: &SearchParams,
     ) -> (Vec<Vec<Neighbor>>, BatchStats) {
         let t0 = Instant::now();
-        let mut agg = BatchStats { queries: queries.n(), ..Default::default() };
+        let mut agg = BatchStats {
+            queries: queries.n(),
+            kernel: crate::distance::dispatch::active_width().name(),
+            ..Default::default()
+        };
         let mut merged: Vec<Vec<Neighbor>> = Vec::new();
         merged.resize_with(queries.n(), || Vec::with_capacity(k * self.shards.len()));
         for shard in &self.shards {

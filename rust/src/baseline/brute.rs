@@ -8,7 +8,6 @@
 //! sample, as is standard for ANN benchmarks).
 
 use crate::dataset::AlignedMatrix;
-use crate::distance::sq_l2_unrolled;
 use crate::graph::heap::{heap_push, sorted_neighbors, EMPTY_ID};
 use crate::util::rng::Pcg64;
 
@@ -52,6 +51,8 @@ pub fn brute_force_knn_sampled(data: &AlignedMatrix, k: usize, m: usize, seed: u
 fn exact_for_queries(data: &AlignedMatrix, k: usize, queries: &[u32]) -> GroundTruth {
     let n = data.n();
     let k = k.min(n - 1);
+    // resolve the dispatched pair kernel once for the O(n·|queries|) scan
+    let pair = crate::distance::dispatch::active().pair;
     let mut out = Vec::with_capacity(queries.len());
     let mut ids = vec![EMPTY_ID; k];
     let mut dists = vec![f32::INFINITY; k];
@@ -64,7 +65,7 @@ fn exact_for_queries(data: &AlignedMatrix, k: usize, queries: &[u32]) -> GroundT
             if v == q {
                 continue;
             }
-            let d = sq_l2_unrolled(a, data.row(v as usize));
+            let d = pair(a, data.row(v as usize));
             heap_push(&mut ids, &mut dists, &mut flags, v, d, false);
         }
         out.push((q, sorted_neighbors(&ids, &dists)));

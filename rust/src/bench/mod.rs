@@ -125,6 +125,79 @@ impl Table {
     }
 }
 
+/// Minimal JSON value for machine-readable bench artifacts
+/// (`BENCH_*.json`) — no serde offline, so a tiny hand-rolled tree.
+#[derive(Debug, Clone)]
+pub enum Json {
+    Str(String),
+    Num(f64),
+    Int(u64),
+    Bool(bool),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// String value helper.
+    pub fn s(v: impl Into<String>) -> Json {
+        Json::Str(v.into())
+    }
+
+    /// Object from `(key, value)` pairs.
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    /// Render to compact JSON text (non-finite numbers become `null`).
+    pub fn render(&self) -> String {
+        match self {
+            Json::Str(s) => {
+                let mut out = String::with_capacity(s.len() + 2);
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+                out
+            }
+            Json::Num(x) if x.is_finite() => format!("{x}"),
+            Json::Num(_) => "null".into(),
+            Json::Int(x) => format!("{x}"),
+            Json::Bool(b) => format!("{b}"),
+            Json::Arr(xs) => {
+                format!("[{}]", xs.iter().map(Json::render).collect::<Vec<_>>().join(","))
+            }
+            Json::Obj(kv) => format!(
+                "{{{}}}",
+                kv.iter()
+                    .map(|(k, v)| format!("{}:{}", Json::s(k.clone()).render(), v.render()))
+                    .collect::<Vec<_>>()
+                    .join(",")
+            ),
+        }
+    }
+}
+
+/// Write a machine-readable bench artifact (e.g. `BENCH_query.json`)
+/// into the current directory so the perf trajectory can be tracked
+/// across PRs. Best-effort: failures are reported, never fatal.
+pub fn write_bench_json(file_name: &str, value: &Json) {
+    let mut text = value.render();
+    text.push('\n');
+    match std::fs::write(file_name, &text) {
+        Ok(()) => eprintln!("[bench] wrote {file_name}"),
+        Err(e) => eprintln!("[bench] could not write {file_name}: {e}"),
+    }
+}
+
 /// Format seconds with adaptive precision.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-6 {
@@ -192,6 +265,36 @@ mod tests {
         assert!(fmt_secs(0.002).contains("ms"));
         assert!(fmt_secs(2e-6).contains("µs"));
         assert!(fmt_secs(5e-9).contains("ns"));
+    }
+
+    #[test]
+    fn json_rendering_escapes_and_nests() {
+        let v = Json::obj(vec![
+            ("name", Json::s("a\"b\nc")),
+            ("n", Json::Int(42)),
+            ("qps", Json::Num(1.5)),
+            ("nan", Json::Num(f64::NAN)),
+            ("ok", Json::Bool(true)),
+            ("rows", Json::Arr(vec![Json::obj(vec![("k", Json::s("w8"))])])),
+        ]);
+        let text = v.render();
+        assert_eq!(
+            text,
+            "{\"name\":\"a\\\"b\\nc\",\"n\":42,\"qps\":1.5,\"nan\":null,\"ok\":true,\
+             \"rows\":[{\"k\":\"w8\"}]}"
+        );
+    }
+
+    #[test]
+    fn json_written_to_disk() {
+        let dir = std::env::temp_dir().join("knng_bench_json_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("BENCH_test.json");
+        let v = Json::obj(vec![("x", Json::Int(1))]);
+        write_bench_json(path.to_str().unwrap(), &v);
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(content.trim(), "{\"x\":1}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

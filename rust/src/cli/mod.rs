@@ -168,6 +168,26 @@ fn parse_usize(s: &str) -> Option<usize> {
     parse_u64(s).and_then(|v| usize::try_from(v).ok())
 }
 
+/// The `--kernel` flag definition shared by every subcommand that runs
+/// distance kernels (attach with `.value(KERNEL_FLAG, KERNEL_HELP)`).
+pub const KERNEL_FLAG: &str = "kernel";
+/// Help string for [`KERNEL_FLAG`].
+pub const KERNEL_HELP: &str = "force distance-kernel width: scalar|w8|w16 (default: PALLAS_KERNEL env, else CPU detect)";
+
+/// Apply a parsed `--kernel` override to the process-global distance
+/// dispatcher ([`crate::distance::dispatch::force`]). Call once at
+/// subcommand startup, before any kernel work; absent flag = no change
+/// (env/CPU selection stays in effect).
+pub fn apply_kernel_override(m: &ArgMatches) -> Result<(), CliError> {
+    if let Some(s) = m.get(KERNEL_FLAG) {
+        let w = crate::distance::dispatch::KernelWidth::parse(s).ok_or_else(|| {
+            CliError(format!("--{KERNEL_FLAG}: unknown width `{s}` (scalar|w8|w16)"))
+        })?;
+        crate::distance::dispatch::force(Some(w));
+    }
+    Ok(())
+}
+
 /// Parse `argv` (excluding the program/subcommand names) against a spec.
 pub fn parse_args(spec: &ArgSpec, argv: &[String]) -> Result<ArgMatches, CliError> {
     let mut m = ArgMatches::default();
@@ -297,6 +317,19 @@ mod tests {
         let m = parse_args(&spec, &argv(&["--n", "16q", "--seed", "16q"])).unwrap();
         assert!(m.usize_or("n", 0).is_err());
         assert!(m.u64_or("seed", 0).is_err());
+    }
+
+    #[test]
+    fn kernel_override_flag_validates() {
+        // only the error/no-op paths run here: actually forcing a width
+        // is process-global and would race concurrently-running kernel
+        // tests (the CLI calls it from single-threaded main)
+        let spec = ArgSpec::new().value(KERNEL_FLAG, KERNEL_HELP);
+        let bad = parse_args(&spec, &argv(&["--kernel", "avx9000"])).unwrap();
+        let err = apply_kernel_override(&bad).unwrap_err();
+        assert!(err.0.contains("unknown width"), "{err}");
+        let none = parse_args(&spec, &argv(&[])).unwrap();
+        assert!(apply_kernel_override(&none).is_ok());
     }
 
     #[test]

@@ -1,23 +1,27 @@
 //! Blocked mutual squared-L2 evaluation — the paper's `blocked` tag
-//! (§3.3, Fig 2).
+//! (§3.3, Fig 2), served by the width-generic kernel engine.
 //!
 //! The compute step needs *all* pairwise distances inside a candidate
 //! set (≤ 50 vectors). Evaluating them pair-by-pair loads every vector
 //! once per distance; evaluating a 5×5 block of vector pairs at once
-//! loads 10 vectors per 8-lane chunk and produces 25 distances — a 1 vs
+//! loads 10 vectors per SIMD chunk and produces 25 distances — a 1 vs
 //! 25 loads-per-component reduction that dominates in high dimensions.
 //!
-//! Layout of one off-diagonal block step (paper Fig 2): 5 "row" vectors
-//! × 5 "col" vectors, 25 8-lane accumulators, advancing 8 components at
-//! a time. Diagonal blocks evaluate the 10 unordered pairs. Remainders
-//! (m % 5 ≠ 0) fall back to the flexible pairwise kernel, exactly as the
-//! paper describes.
+//! Since the kernel engine landed, this module is the *stable surface*:
+//! [`PairwiseBuf`], the [`BLOCK`] constant, and thin shims that route
+//! each shape through [`dispatch::active`](super::dispatch::active) —
+//! the ~25 call sites across the crate keep compiling unchanged while
+//! the actual loops live width-generically in
+//! [`kernel`](super::kernel). Per pair, every routed kernel performs
+//! the same floating-point sequence as
+//! [`sq_l2_unrolled`](super::unrolled::sq_l2_unrolled) at the active
+//! width, so the historical guarantee stands: blocked results are
+//! **bit-equal** to the pairwise kernel, whatever width the dispatcher
+//! picked.
 
-use super::unrolled::sq_l2_unrolled;
 use crate::dataset::AlignedMatrix;
-use std::simd::f32x8;
-use std::simd::num::SimdFloat;
-use std::simd::StdFloat;
+
+use super::dispatch;
 
 /// Block edge in vectors (paper: 5 — 25 accumulators fit registers).
 pub const BLOCK: usize = 5;
@@ -65,8 +69,9 @@ impl PairwiseBuf {
         self.buf[i * self.m + j] = v;
     }
 
-    /// Store a distance for pair (i, j), i ≠ j — for external engines
-    /// (e.g. the PJRT runtime) filling the buffer from a batch result.
+    /// Store a distance for pair (i, j), i ≠ j — the write door used by
+    /// the kernel engine and external engines (e.g. the PJRT runtime)
+    /// filling the buffer from a batch result.
     #[inline]
     pub fn put(&mut self, i: usize, j: usize, v: f32) {
         let (lo, hi) = if i < j { (i, j) } else { (j, i) };
@@ -75,8 +80,8 @@ impl PairwiseBuf {
 }
 
 /// Compute all pairwise distances among `ids` (rows of `data`) into
-/// `out`, using 5×5 blocking. Returns the number of distance
-/// evaluations performed (m·(m−1)/2).
+/// `out`, using 5×5 blocking at the dispatched width. Returns the
+/// number of distance evaluations performed (m·(m−1)/2).
 pub fn pairwise_blocked(data: &AlignedMatrix, ids: &[u32], out: &mut PairwiseBuf) -> u64 {
     pairwise_blocked_active(data, ids, ids.len(), out)
 }
@@ -87,213 +92,62 @@ pub fn pairwise_blocked(data: &AlignedMatrix, ids: &[u32], out: &mut PairwiseBuf
 /// entirely — ~25% of the kernel work at default parameters — while
 /// keeping the blocked load-amortization for everything consumed.
 /// Returns the number of distances actually evaluated.
-pub fn pairwise_blocked_active(data: &AlignedMatrix, ids: &[u32], active: usize, out: &mut PairwiseBuf) -> u64 {
-    let m = ids.len();
-    let active = active.min(m);
-    out.reset(m);
-    if m < 2 || active == 0 {
-        return 0;
-    }
-    let full = (m / BLOCK) * BLOCK;
-    let dpad = data.dim_pad();
-    let mut evals = 0u64;
-
-    // Block rows that contain at least one active row.
-    for ib in (0..full.min(round_up_block(active))).step_by(BLOCK) {
-        diag_block(data, ids, ib, dpad, out);
-        evals += (BLOCK * (BLOCK - 1) / 2) as u64;
-        for jb in ((ib + BLOCK)..full).step_by(BLOCK) {
-            off_diag_block(data, ids, ib, jb, dpad, out);
-            evals += (BLOCK * BLOCK) as u64;
-        }
-    }
-
-    // Remainder rows (m % 5): flexible pairwise kernel vs everything
-    // with an index below them that could be consumed.
-    for i in full..m {
-        for j in 0..i {
-            if j >= active && i >= active {
-                continue;
-            }
-            let d = sq_l2_unrolled(data.row(ids[i] as usize), data.row(ids[j] as usize));
-            out.set(j, i, d);
-            evals += 1;
-        }
-    }
-    evals
-}
-
-#[inline]
-fn round_up_block(x: usize) -> usize {
-    x.div_ceil(BLOCK) * BLOCK
-}
-
-/// One full 5×5 block: rows `ib..ib+5` × cols `jb..jb+5`.
-///
-/// 25 `f32x8` accumulators stay register-resident across the whole
-/// d-loop (AVX-512 has 32 vector registers; this is the paper's "25
-/// accumulators allocated to registers" claim, checked by disassembly —
-/// EXPERIMENTS.md §Perf). Per 8-component step: 10 loads feed 25
-/// sub+fma pairs, the 1-vs-25 loads-per-component reduction of Fig 2.
-#[inline]
-fn off_diag_block(data: &AlignedMatrix, ids: &[u32], ib: usize, jb: usize, dpad: usize, out: &mut PairwiseBuf) {
-    let rows: [&[f32]; BLOCK] = std::array::from_fn(|a| data.row(ids[ib + a] as usize));
-    let cols: [&[f32]; BLOCK] = std::array::from_fn(|b| data.row(ids[jb + b] as usize));
-
-    let mut acc = [[f32x8::splat(0.0); BLOCK]; BLOCK];
-    let mut c = 0;
-    while c < dpad {
-        // Load the 5 column chunks once; they feed 25 accumulations.
-        let cv: [f32x8; BLOCK] = std::array::from_fn(|b| f32x8::from_slice(&cols[b][c..c + 8]));
-        for a in 0..BLOCK {
-            let ra = f32x8::from_slice(&rows[a][c..c + 8]);
-            for b in 0..BLOCK {
-                let d = ra - cv[b];
-                acc[a][b] = d.mul_add(d, acc[a][b]);
-            }
-        }
-        c += 8;
-    }
-    for a in 0..BLOCK {
-        for b in 0..BLOCK {
-            out.set(ib + a, jb + b, acc[a][b].reduce_sum());
-        }
-    }
-}
-
-/// Diagonal 5×5 block: the 10 unordered pairs within `ib..ib+5`.
-#[inline]
-fn diag_block(data: &AlignedMatrix, ids: &[u32], ib: usize, dpad: usize, out: &mut PairwiseBuf) {
-    let rows: [&[f32]; BLOCK] = std::array::from_fn(|a| data.row(ids[ib + a] as usize));
-    // 10 pair slots: (a,b) with a<b, flattened.
-    const PAIRS: [(usize, usize); 10] =
-        [(0, 1), (0, 2), (0, 3), (0, 4), (1, 2), (1, 3), (1, 4), (2, 3), (2, 4), (3, 4)];
-    let mut acc = [f32x8::splat(0.0); 10];
-    let mut c = 0;
-    while c < dpad {
-        let chunk: [f32x8; BLOCK] =
-            std::array::from_fn(|a| f32x8::from_slice(&rows[a][c..c + 8]));
-        for (p, &(a, b)) in PAIRS.iter().enumerate() {
-            let d = chunk[a] - chunk[b];
-            acc[p] = d.mul_add(d, acc[p]);
-        }
-        c += 8;
-    }
-    for (p, &(a, b)) in PAIRS.iter().enumerate() {
-        out.set(ib + a, ib + b, acc[p].reduce_sum());
-    }
+pub fn pairwise_blocked_active(
+    data: &AlignedMatrix,
+    ids: &[u32],
+    active: usize,
+    out: &mut PairwiseBuf,
+) -> u64 {
+    (dispatch::active().pairwise_active)(data, ids, active, out)
 }
 
 /// Distances from one padded query row to the `ids` rows of `data`,
-/// written into `out[j]` (cleared and resized). 1×5 blocking: each
-/// 8-lane step loads the query chunk once and five row chunks — 6 loads
-/// feed 5 accumulations, vs 2 loads per 1 for pair-at-a-time — which is
-/// the serving-path analogue of the build kernel's Fig-2 amortization.
+/// written into `out[j]` (cleared and resized). 1×5 blocking at the
+/// dispatched width: each SIMD step loads the query chunk once and five
+/// row chunks — 6 loads feed 5 accumulations, vs 2 loads per 1 for
+/// pair-at-a-time — the serving-path analogue of the build kernel's
+/// Fig-2 amortization.
 ///
-/// Per pair, the floating-point operation sequence (chunk order, fused
-/// multiply-add accumulation, lane reduction) is identical to
-/// [`sq_l2_unrolled`], so results are **bit-equal** to the pairwise
-/// kernel — batched query serving can match sequential search exactly.
-/// Returns the number of distance evaluations (`ids.len()`).
+/// Per pair, the floating-point operation sequence is identical to
+/// [`sq_l2_unrolled`](super::unrolled::sq_l2_unrolled) at the active
+/// width, so results are **bit-equal** to the pairwise kernel — batched
+/// query serving can match sequential search exactly. Returns the
+/// number of distance evaluations (`ids.len()`).
 pub fn one_to_many_blocked(q: &[f32], data: &AlignedMatrix, ids: &[u32], out: &mut Vec<f32>) -> u64 {
-    let dpad = data.dim_pad();
-    debug_assert_eq!(q.len(), dpad, "query must be padded to the matrix width");
-    let m = ids.len();
-    out.clear();
-    out.resize(m, 0.0);
-    let full = (m / BLOCK) * BLOCK;
-    for jb in (0..full).step_by(BLOCK) {
-        let rows: [&[f32]; BLOCK] = std::array::from_fn(|b| data.row(ids[jb + b] as usize));
-        let mut acc = [f32x8::splat(0.0); BLOCK];
-        let mut c = 0;
-        while c < dpad {
-            let qv = f32x8::from_slice(&q[c..c + 8]);
-            for b in 0..BLOCK {
-                let d = qv - f32x8::from_slice(&rows[b][c..c + 8]);
-                acc[b] = d.mul_add(d, acc[b]);
-            }
-            c += 8;
-        }
-        for b in 0..BLOCK {
-            out[jb + b] = acc[b].reduce_sum();
-        }
-    }
-    for j in full..m {
-        out[j] = sq_l2_unrolled(q, data.row(ids[j] as usize));
-    }
-    m as u64
+    (dispatch::active().one_to_many)(q, data, ids, out)
 }
 
 /// All distances from the rows of `queries` to the `ids` rows of `data`,
 /// row-major into `out[qi · ids.len() + j]`. 5×5 tiles across the two
-/// matrices: 10 loads per 8-lane step feed 25 accumulations — the
-/// paper's blocked kernel applied to the batched query×corpus workload.
-/// Remainder rows/columns fall back to [`sq_l2_unrolled`]; like
-/// [`one_to_many_blocked`], every pair is bit-equal to the pairwise
-/// kernel. Returns the number of distance evaluations.
-pub fn cross_blocked(queries: &AlignedMatrix, data: &AlignedMatrix, ids: &[u32], out: &mut [f32]) -> u64 {
-    assert_eq!(queries.dim_pad(), data.dim_pad(), "query/corpus width mismatch");
-    let (nq, m) = (queries.n(), ids.len());
-    assert_eq!(out.len(), nq * m, "output buffer size mismatch");
-    let dpad = data.dim_pad();
-    let qfull = (nq / BLOCK) * BLOCK;
-    let cfull = (m / BLOCK) * BLOCK;
-    for ib in (0..qfull).step_by(BLOCK) {
-        let qrows: [&[f32]; BLOCK] = std::array::from_fn(|a| queries.row(ib + a));
-        for jb in (0..cfull).step_by(BLOCK) {
-            let crows: [&[f32]; BLOCK] = std::array::from_fn(|b| data.row(ids[jb + b] as usize));
-            let mut acc = [[f32x8::splat(0.0); BLOCK]; BLOCK];
-            let mut c = 0;
-            while c < dpad {
-                let cv: [f32x8; BLOCK] =
-                    std::array::from_fn(|b| f32x8::from_slice(&crows[b][c..c + 8]));
-                for a in 0..BLOCK {
-                    let qa = f32x8::from_slice(&qrows[a][c..c + 8]);
-                    for b in 0..BLOCK {
-                        let d = qa - cv[b];
-                        acc[a][b] = d.mul_add(d, acc[a][b]);
-                    }
-                }
-                c += 8;
-            }
-            for a in 0..BLOCK {
-                for b in 0..BLOCK {
-                    out[(ib + a) * m + jb + b] = acc[a][b].reduce_sum();
-                }
-            }
-        }
-        for j in cfull..m {
-            let row = data.row(ids[j] as usize);
-            for (a, q) in qrows.iter().enumerate() {
-                out[(ib + a) * m + j] = sq_l2_unrolled(q, row);
-            }
-        }
-    }
-    for qi in qfull..nq {
-        let q = queries.row(qi);
-        for j in 0..m {
-            out[qi * m + j] = sq_l2_unrolled(q, data.row(ids[j] as usize));
-        }
-    }
-    (nq * m) as u64
+/// matrices at the dispatched width — the paper's blocked kernel applied
+/// to the batched query×corpus workload. Like [`one_to_many_blocked`],
+/// every pair is bit-equal to the pairwise kernel. Returns the number of
+/// distance evaluations.
+pub fn cross_blocked(
+    queries: &AlignedMatrix,
+    data: &AlignedMatrix,
+    ids: &[u32],
+    out: &mut [f32],
+) -> u64 {
+    (dispatch::active().cross)(queries, data, ids, out)
 }
 
 /// Unblocked reference: same contract as [`pairwise_blocked`] but one
 /// pair at a time (used by the `scalar`/`unrolled` compute backends and
 /// as the oracle for the blocked path).
 pub fn pairwise_flat(data: &AlignedMatrix, ids: &[u32], out: &mut PairwiseBuf, use_unrolled: bool) -> u64 {
+    // Resolve the dispatched pair kernel once, not per pair — the
+    // indirect call amortizes poorly at small d. Same function the
+    // `sq_l2_unrolled` shim would reach, so bit-equality holds.
+    let pair: fn(&[f32], &[f32]) -> f32 =
+        if use_unrolled { dispatch::active().pair } else { super::scalar::sq_l2_scalar };
     let m = ids.len();
     out.reset(m);
     for i in 0..m {
         for j in (i + 1)..m {
             let a = data.row(ids[i] as usize);
             let b = data.row(ids[j] as usize);
-            let d = if use_unrolled {
-                sq_l2_unrolled(a, b)
-            } else {
-                super::scalar::sq_l2_scalar(a, b)
-            };
-            out.set(i, j, d);
+            out.set(i, j, pair(a, b));
         }
     }
     (m * m.saturating_sub(1) / 2) as u64
@@ -303,6 +157,7 @@ pub fn pairwise_flat(data: &AlignedMatrix, ids: &[u32], out: &mut PairwiseBuf, u
 mod tests {
     use super::*;
     use crate::dataset::AlignedMatrix;
+    use crate::distance::unrolled::sq_l2_unrolled;
     use crate::testing::{check, Config};
 
     fn random_matrix(g: &mut crate::testing::Gen, n: usize, dim: usize) -> AlignedMatrix {

@@ -1,0 +1,329 @@
+//! Runtime kernel dispatch: pick a distance-kernel width once per
+//! process and route every hot shape through it.
+//!
+//! The engine exposes three [`KernelSet`]s — `scalar`, `w8` (the
+//! paper's `f32x8` configuration), and `w16` (`f32x16`, which lowers to
+//! AVX-512 instructions where available) — each a table of function
+//! pointers into the monomorphized micro-kernels of
+//! [`kernel`](super::kernel). Selection order:
+//!
+//! 1. a programmatic override ([`force`], set by the CLI's `--kernel`
+//!    flag or by benches doing per-width A/B comparisons), else
+//! 2. the `PALLAS_KERNEL` environment variable (`scalar` | `w8` |
+//!    `w16`), read once, else
+//! 3. CPU detection: x86 with `avx512f` → `w16`; everything else → `w8`.
+//!
+//! Forcing `w16` on hardware without AVX-512 is *allowed*: the kernels
+//! are portable SIMD, so they stay correct everywhere — the width is a
+//! performance choice, never a safety one. All shapes in one process
+//! always share one active width, which is what keeps the engine's
+//! bit-equality guarantees (see `kernel.rs`) intact across the
+//! sequential and batched serving paths.
+//!
+//! `active()` costs one relaxed atomic load — negligible next to any
+//! distance evaluation — so the thin shims in `unrolled.rs`/`blocked.rs`
+//! can consult it per call without a measurable hot-path tax.
+
+use crate::dataset::AlignedMatrix;
+use crate::distance::blocked::PairwiseBuf;
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+
+use super::kernel;
+
+/// A selectable distance-kernel width.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KernelWidth {
+    /// Plain-loop reference kernels (forced-path testing, oracles).
+    Scalar,
+    /// 8-lane portable SIMD (`f32x8`; AVX2-class — the paper's config).
+    W8,
+    /// 16-lane portable SIMD (`f32x16`; AVX-512-class).
+    W16,
+}
+
+impl KernelWidth {
+    /// Parse a `PALLAS_KERNEL` / `--kernel` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "scalar" => Some(Self::Scalar),
+            "w8" | "8" => Some(Self::W8),
+            "w16" | "16" => Some(Self::W16),
+            _ => None,
+        }
+    }
+
+    /// Stable label used in reports, bench rows, and counters.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Scalar => "scalar",
+            Self::W8 => "w8",
+            Self::W16 => "w16",
+        }
+    }
+
+    /// SIMD lanes per accumulator (1 for the scalar reference).
+    pub fn lanes(self) -> usize {
+        match self {
+            Self::Scalar => 1,
+            Self::W8 => 8,
+            Self::W16 => 16,
+        }
+    }
+
+    /// All selectable widths, narrowest reference first.
+    pub const ALL: [KernelWidth; 3] = [Self::Scalar, Self::W8, Self::W16];
+}
+
+/// One width's complete kernel table — every hot distance shape plus
+/// the norm-trick (GEMM-style) batch variants.
+pub struct KernelSet {
+    pub width: KernelWidth,
+    /// One squared-L2 evaluation over padded rows.
+    pub pair: fn(&[f32], &[f32]) -> f32,
+    /// Squared norm of one padded row.
+    pub sq_norm: fn(&[f32]) -> f32,
+    /// 5×5-blocked mutual distances (compute-step shape).
+    pub pairwise_active: fn(&AlignedMatrix, &[u32], usize, &mut PairwiseBuf) -> u64,
+    /// 1×5-blocked one-to-many strip (expansion shape).
+    pub one_to_many: fn(&[f32], &AlignedMatrix, &[u32], &mut Vec<f32>) -> u64,
+    /// 5×5 query×corpus cross tiles (batch probe shape).
+    pub cross: fn(&AlignedMatrix, &AlignedMatrix, &[u32], &mut [f32]) -> u64,
+    /// Norm-trick one-to-many: `(q, ‖q‖², data, norms, ids, out)`.
+    pub one_to_many_norms: fn(&[f32], f32, &AlignedMatrix, &[f32], &[u32], &mut Vec<f32>) -> u64,
+    /// Norm-trick cross: `(queries, qnorms, data, norms, ids, out)`.
+    pub cross_norms: fn(&AlignedMatrix, &[f32], &AlignedMatrix, &[f32], &[u32], &mut [f32]) -> u64,
+}
+
+static SCALAR_SET: KernelSet = KernelSet {
+    width: KernelWidth::Scalar,
+    pair: crate::distance::scalar::sq_l2_scalar,
+    sq_norm: kernel::sq_norm_scalar,
+    pairwise_active: kernel::pairwise_scalar,
+    one_to_many: kernel::one_to_many_scalar,
+    cross: kernel::cross_scalar,
+    one_to_many_norms: kernel::one_to_many_dot_scalar,
+    cross_norms: kernel::cross_dot_scalar,
+};
+
+static W8_SET: KernelSet = KernelSet {
+    width: KernelWidth::W8,
+    pair: kernel::sq_l2_w::<8>,
+    sq_norm: kernel::sq_norm_w::<8>,
+    pairwise_active: kernel::pairwise_w::<8>,
+    one_to_many: kernel::one_to_many_w::<8>,
+    cross: kernel::cross_w::<8>,
+    one_to_many_norms: kernel::one_to_many_dot_w::<8>,
+    cross_norms: kernel::cross_dot_w::<8>,
+};
+
+static W16_SET: KernelSet = KernelSet {
+    width: KernelWidth::W16,
+    pair: kernel::sq_l2_w::<16>,
+    sq_norm: kernel::sq_norm_w::<16>,
+    pairwise_active: kernel::pairwise_w::<16>,
+    one_to_many: kernel::one_to_many_w::<16>,
+    cross: kernel::cross_w::<16>,
+    one_to_many_norms: kernel::one_to_many_dot_w::<16>,
+    cross_norms: kernel::cross_dot_w::<16>,
+};
+
+/// The static kernel table of a given width (width-explicit access for
+/// parity tests and A/B harnesses; production code uses [`active`]).
+pub fn kernel_set(w: KernelWidth) -> &'static KernelSet {
+    match w {
+        KernelWidth::Scalar => &SCALAR_SET,
+        KernelWidth::W8 => &W8_SET,
+        KernelWidth::W16 => &W16_SET,
+    }
+}
+
+// Programmatic override: 0 = none, else KernelWidth discriminant + 1.
+static OVERRIDE: AtomicU8 = AtomicU8::new(0);
+// Env/CPU default, resolved once on first use.
+static DEFAULT: OnceLock<KernelWidth> = OnceLock::new();
+
+fn code(w: KernelWidth) -> u8 {
+    match w {
+        KernelWidth::Scalar => 1,
+        KernelWidth::W8 => 2,
+        KernelWidth::W16 => 3,
+    }
+}
+
+fn from_code(c: u8) -> Option<KernelWidth> {
+    match c {
+        1 => Some(KernelWidth::Scalar),
+        2 => Some(KernelWidth::W8),
+        3 => Some(KernelWidth::W16),
+        _ => None,
+    }
+}
+
+/// True when the CPU exposes AVX-512 foundation instructions.
+#[cfg(any(target_arch = "x86", target_arch = "x86_64"))]
+pub fn avx512_supported() -> bool {
+    is_x86_feature_detected!("avx512f")
+}
+
+/// True when the CPU exposes AVX-512 foundation instructions.
+#[cfg(not(any(target_arch = "x86", target_arch = "x86_64")))]
+pub fn avx512_supported() -> bool {
+    false
+}
+
+/// The width CPU detection alone would pick (ignores overrides).
+pub fn detect() -> KernelWidth {
+    if avx512_supported() {
+        KernelWidth::W16
+    } else {
+        KernelWidth::W8
+    }
+}
+
+/// The `PALLAS_KERNEL` environment override, if present and valid.
+pub fn env_override() -> Option<KernelWidth> {
+    std::env::var("PALLAS_KERNEL").ok().and_then(|v| KernelWidth::parse(&v))
+}
+
+fn resolve_default() -> KernelWidth {
+    match std::env::var("PALLAS_KERNEL") {
+        Ok(v) => KernelWidth::parse(&v).unwrap_or_else(|| {
+            eprintln!(
+                "warning: PALLAS_KERNEL=`{v}` is not one of scalar|w8|w16 — \
+                 falling back to CPU detection"
+            );
+            detect()
+        }),
+        Err(_) => detect(),
+    }
+}
+
+/// Force a kernel width process-wide (`None` clears the override and
+/// returns to env/CPU selection). Meant for startup configuration (the
+/// CLI's `--kernel` flag) and single-threaded A/B harnesses: switching
+/// widths while other threads run distance kernels breaks the
+/// bit-equality guarantees *between* their calls (each call is still
+/// individually correct).
+pub fn force(w: Option<KernelWidth>) {
+    OVERRIDE.store(w.map_or(0, code), Ordering::Relaxed);
+    if let Some(w) = w {
+        if w == KernelWidth::W16 && !avx512_supported() {
+            eprintln!(
+                "note: w16 kernels forced without AVX-512 — portable SIMD keeps them \
+                 correct, but expect no speedup on this CPU"
+            );
+        }
+    }
+}
+
+/// The active kernel width (override → `PALLAS_KERNEL` → CPU detection).
+#[inline]
+pub fn active_width() -> KernelWidth {
+    match from_code(OVERRIDE.load(Ordering::Relaxed)) {
+        Some(w) => w,
+        None => *DEFAULT.get_or_init(resolve_default),
+    }
+}
+
+/// The active kernel table — what every shim in `unrolled.rs` /
+/// `blocked.rs` routes through.
+#[inline]
+pub fn active() -> &'static KernelSet {
+    kernel_set(active_width())
+}
+
+/// Human-readable description of the current selection (CLI `info`,
+/// bench headers).
+pub fn describe() -> String {
+    let w = active_width();
+    let source = if from_code(OVERRIDE.load(Ordering::Relaxed)).is_some() {
+        "forced"
+    } else if env_override().is_some() {
+        "PALLAS_KERNEL"
+    } else {
+        "cpu-detect"
+    };
+    format!(
+        "{} ({} lanes, via {source}; avx512f {})",
+        w.name(),
+        w.lanes(),
+        if avx512_supported() { "available" } else { "unavailable" }
+    )
+}
+
+/// Dispatch-routed norm-trick one-to-many (see
+/// [`KernelSet::one_to_many_norms`]).
+#[inline]
+pub fn one_to_many_norms(
+    q: &[f32],
+    q2: f32,
+    data: &AlignedMatrix,
+    norms: &[f32],
+    ids: &[u32],
+    out: &mut Vec<f32>,
+) -> u64 {
+    (active().one_to_many_norms)(q, q2, data, norms, ids, out)
+}
+
+/// Dispatch-routed norm-trick cross (see [`KernelSet::cross_norms`]).
+#[inline]
+pub fn cross_norms(
+    queries: &AlignedMatrix,
+    qnorms: &[f32],
+    data: &AlignedMatrix,
+    norms: &[f32],
+    ids: &[u32],
+    out: &mut [f32],
+) -> u64 {
+    (active().cross_norms)(queries, qnorms, data, norms, ids, out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_roundtrips_names() {
+        for w in KernelWidth::ALL {
+            assert_eq!(KernelWidth::parse(w.name()), Some(w));
+        }
+        assert_eq!(KernelWidth::parse("W16"), Some(KernelWidth::W16));
+        assert_eq!(KernelWidth::parse("8"), Some(KernelWidth::W8));
+        assert_eq!(KernelWidth::parse("avx512"), None);
+    }
+
+    #[test]
+    fn lanes_match_widths() {
+        assert_eq!(KernelWidth::Scalar.lanes(), 1);
+        assert_eq!(KernelWidth::W8.lanes(), 8);
+        assert_eq!(KernelWidth::W16.lanes(), 16);
+    }
+
+    #[test]
+    fn kernel_sets_carry_their_width() {
+        for w in KernelWidth::ALL {
+            assert_eq!(kernel_set(w).width, w);
+        }
+    }
+
+    #[test]
+    fn active_honors_env_when_no_override() {
+        // No override is ever set by lib tests (forcing is process-global
+        // and would race concurrently-running kernel tests), so `active`
+        // must equal the env override when one is present, and a SIMD
+        // width from detection otherwise.
+        let w = active_width();
+        match env_override() {
+            Some(e) => assert_eq!(w, e, "env override must win"),
+            None => assert!(matches!(w, KernelWidth::W8 | KernelWidth::W16)),
+        }
+        assert_eq!(active().width, w);
+    }
+
+    #[test]
+    fn describe_mentions_active_width() {
+        let d = describe();
+        assert!(d.contains(active_width().name()), "{d}");
+    }
+}

@@ -1,0 +1,674 @@
+//! Width-generic distance micro-kernels — the compute core behind the
+//! [`dispatch`](super::dispatch) engine.
+//!
+//! Every hot distance shape exists here three times: monomorphized at
+//! `LANES = 8` (AVX2-class `f32x8`, the paper's configuration),
+//! `LANES = 16` (AVX-512-class `f32x16`), and as a scalar reference.
+//! The shapes are the ones the paper's §3.3 blocking argument covers:
+//!
+//! * **pair** — one squared-L2 evaluation (`sq_l2_w`), the flexible
+//!   kernel every remainder path shares.
+//! * **pairwise 5×5** — all mutual distances of a candidate set
+//!   (`pairwise_w`), NN-Descent's compute step (paper Fig 2).
+//! * **one-to-many 1×5** — one query against a strip of corpus rows
+//!   (`one_to_many_w`), the beam search's expansion shape.
+//! * **cross 5×5** — a query tile against a corpus tile (`cross_w`),
+//!   the batched serving probe shape.
+//! * **norm-trick dot variants** (`one_to_many_dot_w`, `cross_dot_w`) —
+//!   the GEMM-style factorization ‖q−y‖² = ‖q‖² + ‖y‖² − 2⟨q,y⟩ with
+//!   precomputed norms, leaving only register-tiled dot products on the
+//!   batch hot path (one fused multiply-add per component instead of a
+//!   subtract + fused multiply-add).
+//!
+//! ## Bit-equality contract
+//!
+//! At a fixed width, every shape performs the *identical* per-pair
+//! floating-point sequence: ascending `LANES`-wide chunks into one SIMD
+//! accumulator via `mul_add`, one lane reduction, then (16-lane widths
+//! on rows padded to 8) one shared 8-wide tail step. Blocking changes
+//! only the load schedule, never the per-accumulator op order, so
+//! results of the pair, strip, and tile kernels agree **bitwise** —
+//! the property the serving layer's batch-equals-sequential guarantee
+//! and the tests in `blocked.rs` pin down. The two dot kernels obey the
+//! same contract with each other (and `sq_norm_w(q)` ≡ `dot_w(q, q)`
+//! bitwise, which is what makes self-distances exactly zero on the
+//! norm-trick path).
+//!
+//! Rows must be padded to a multiple of 8 zero-tailed lanes
+//! ([`AlignedMatrix`] guarantees it); with `LANES = 16` a padded width
+//! of `16m + 8` leaves exactly one 8-wide tail chunk.
+
+use crate::dataset::AlignedMatrix;
+use std::simd::num::SimdFloat;
+use std::simd::{f32x8, LaneCount, Simd, StdFloat, SupportedLaneCount};
+
+use super::blocked::{PairwiseBuf, BLOCK};
+use super::scalar::sq_l2_scalar;
+
+/// Reduce a spilled accumulator register to its lane sum — the engine's
+/// one horizontal-sum helper (any supported width).
+#[inline]
+pub fn reduce_lanes<const L: usize>(acc: &[f32; L]) -> f32
+where
+    LaneCount<L>: SupportedLaneCount,
+{
+    Simd::from_array(*acc).reduce_sum()
+}
+
+/// Finish one norm-trick evaluation: ‖q‖² + ‖y‖² − 2⟨q,y⟩, clamped at
+/// zero (catastrophic cancellation on near-identical rows can produce a
+/// tiny negative). Both dot shapes share this exact expression, so the
+/// sequential and batched probe paths stay bit-equal.
+#[inline]
+pub fn finish_norm_trick(q2: f32, y2: f32, dot: f32) -> f32 {
+    ((q2 + y2) - 2.0 * dot).max(0.0)
+}
+
+/// Shared 8-wide tail step for squared-L2 (see module docs: rows are
+/// padded to 8 lanes, so a 16-lane main loop leaves 0 or 1 such chunks).
+#[inline]
+fn sq_tail8(a: &[f32], b: &[f32], c: usize) -> f32 {
+    let d = f32x8::from_slice(&a[c..c + 8]) - f32x8::from_slice(&b[c..c + 8]);
+    d.mul_add(d, f32x8::splat(0.0)).reduce_sum()
+}
+
+/// Shared 8-wide tail step for dot products.
+#[inline]
+fn dot_tail8(a: &[f32], b: &[f32], c: usize) -> f32 {
+    let x = f32x8::from_slice(&a[c..c + 8]);
+    x.mul_add(f32x8::from_slice(&b[c..c + 8]), f32x8::splat(0.0)).reduce_sum()
+}
+
+/// Squared L2 over padded rows with one `L`-lane SIMD accumulator.
+#[inline]
+pub fn sq_l2_w<const L: usize>(a: &[f32], b: &[f32]) -> f32
+where
+    LaneCount<L>: SupportedLaneCount,
+{
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len() % 8, 0, "rows must be padded to 8 lanes");
+    let mut acc = Simd::<f32, L>::splat(0.0);
+    let mut c = 0;
+    while c + L <= a.len() {
+        let d = Simd::<f32, L>::from_slice(&a[c..c + L]) - Simd::<f32, L>::from_slice(&b[c..c + L]);
+        acc = d.mul_add(d, acc);
+        c += L;
+    }
+    let mut s = acc.reduce_sum();
+    if c < a.len() {
+        s += sq_tail8(a, b, c);
+    }
+    s
+}
+
+/// Dot product over padded rows, same loop shape as [`sq_l2_w`].
+#[inline]
+pub fn dot_w<const L: usize>(a: &[f32], b: &[f32]) -> f32
+where
+    LaneCount<L>: SupportedLaneCount,
+{
+    debug_assert_eq!(a.len(), b.len());
+    debug_assert_eq!(a.len() % 8, 0, "rows must be padded to 8 lanes");
+    let mut acc = Simd::<f32, L>::splat(0.0);
+    let mut c = 0;
+    while c + L <= a.len() {
+        let x = Simd::<f32, L>::from_slice(&a[c..c + L]);
+        acc = x.mul_add(Simd::<f32, L>::from_slice(&b[c..c + L]), acc);
+        c += L;
+    }
+    let mut s = acc.reduce_sum();
+    if c < a.len() {
+        s += dot_tail8(a, b, c);
+    }
+    s
+}
+
+/// Squared norm of a padded row — bitwise identical to `dot_w(a, a)`.
+#[inline]
+pub fn sq_norm_w<const L: usize>(a: &[f32]) -> f32
+where
+    LaneCount<L>: SupportedLaneCount,
+{
+    dot_w::<L>(a, a)
+}
+
+#[inline]
+fn round_up_block(x: usize) -> usize {
+    x.div_ceil(BLOCK) * BLOCK
+}
+
+/// All mutual distances among `ids` with entries `(i, j)`, `i < active`,
+/// `i < j` guaranteed — the 5×5-blocked compute-step kernel at width
+/// `L`. Same fill pattern and evaluation accounting as the original
+/// `f32x8` implementation (see `blocked::pairwise_blocked_active`).
+pub fn pairwise_w<const L: usize>(
+    data: &AlignedMatrix,
+    ids: &[u32],
+    active: usize,
+    out: &mut PairwiseBuf,
+) -> u64
+where
+    LaneCount<L>: SupportedLaneCount,
+{
+    let m = ids.len();
+    let active = active.min(m);
+    out.reset(m);
+    if m < 2 || active == 0 {
+        return 0;
+    }
+    let full = (m / BLOCK) * BLOCK;
+    let dpad = data.dim_pad();
+    let mut evals = 0u64;
+
+    // Block rows that contain at least one active row.
+    for ib in (0..full.min(round_up_block(active))).step_by(BLOCK) {
+        diag_block_w::<L>(data, ids, ib, dpad, out);
+        evals += (BLOCK * (BLOCK - 1) / 2) as u64;
+        for jb in ((ib + BLOCK)..full).step_by(BLOCK) {
+            off_diag_block_w::<L>(data, ids, ib, jb, dpad, out);
+            evals += (BLOCK * BLOCK) as u64;
+        }
+    }
+
+    // Remainder rows (m % 5): flexible pairwise kernel vs everything
+    // with an index below them that could be consumed.
+    for i in full..m {
+        for j in 0..i {
+            if j >= active && i >= active {
+                continue;
+            }
+            let d = sq_l2_w::<L>(data.row(ids[i] as usize), data.row(ids[j] as usize));
+            out.put(j, i, d);
+            evals += 1;
+        }
+    }
+    evals
+}
+
+/// One full 5×5 block: rows `ib..ib+5` × cols `jb..jb+5`. 25 `L`-lane
+/// accumulators stay register-resident across the whole d-loop; per
+/// step 10 loads feed 25 sub+fma pairs (paper Fig 2).
+#[inline]
+fn off_diag_block_w<const L: usize>(
+    data: &AlignedMatrix,
+    ids: &[u32],
+    ib: usize,
+    jb: usize,
+    dpad: usize,
+    out: &mut PairwiseBuf,
+) where
+    LaneCount<L>: SupportedLaneCount,
+{
+    let rows: [&[f32]; BLOCK] = std::array::from_fn(|a| data.row(ids[ib + a] as usize));
+    let cols: [&[f32]; BLOCK] = std::array::from_fn(|b| data.row(ids[jb + b] as usize));
+
+    let mut acc = [[Simd::<f32, L>::splat(0.0); BLOCK]; BLOCK];
+    let mut c = 0;
+    while c + L <= dpad {
+        // Load the 5 column chunks once; they feed 25 accumulations.
+        let cv: [Simd<f32, L>; BLOCK] =
+            std::array::from_fn(|b| Simd::from_slice(&cols[b][c..c + L]));
+        for a in 0..BLOCK {
+            let ra = Simd::<f32, L>::from_slice(&rows[a][c..c + L]);
+            for b in 0..BLOCK {
+                let d = ra - cv[b];
+                acc[a][b] = d.mul_add(d, acc[a][b]);
+            }
+        }
+        c += L;
+    }
+    for a in 0..BLOCK {
+        for b in 0..BLOCK {
+            let mut s = acc[a][b].reduce_sum();
+            if c < dpad {
+                s += sq_tail8(rows[a], cols[b], c);
+            }
+            out.put(ib + a, jb + b, s);
+        }
+    }
+}
+
+/// Diagonal 5×5 block: the 10 unordered pairs within `ib..ib+5`.
+#[inline]
+fn diag_block_w<const L: usize>(
+    data: &AlignedMatrix,
+    ids: &[u32],
+    ib: usize,
+    dpad: usize,
+    out: &mut PairwiseBuf,
+) where
+    LaneCount<L>: SupportedLaneCount,
+{
+    let rows: [&[f32]; BLOCK] = std::array::from_fn(|a| data.row(ids[ib + a] as usize));
+    // 10 pair slots: (a,b) with a<b, flattened.
+    const PAIRS: [(usize, usize); 10] =
+        [(0, 1), (0, 2), (0, 3), (0, 4), (1, 2), (1, 3), (1, 4), (2, 3), (2, 4), (3, 4)];
+    let mut acc = [Simd::<f32, L>::splat(0.0); 10];
+    let mut c = 0;
+    while c + L <= dpad {
+        let chunk: [Simd<f32, L>; BLOCK] =
+            std::array::from_fn(|a| Simd::from_slice(&rows[a][c..c + L]));
+        for (p, &(a, b)) in PAIRS.iter().enumerate() {
+            let d = chunk[a] - chunk[b];
+            acc[p] = d.mul_add(d, acc[p]);
+        }
+        c += L;
+    }
+    for (p, &(a, b)) in PAIRS.iter().enumerate() {
+        let mut s = acc[p].reduce_sum();
+        if c < dpad {
+            s += sq_tail8(rows[a], rows[b], c);
+        }
+        out.put(ib + a, ib + b, s);
+    }
+}
+
+/// Distances from one padded query row to the `ids` rows of `data` —
+/// the 1×5-blocked expansion strip at width `L`. Bit-equal per pair to
+/// [`sq_l2_w`]`::<L>`. Returns `ids.len()` evaluations.
+pub fn one_to_many_w<const L: usize>(
+    q: &[f32],
+    data: &AlignedMatrix,
+    ids: &[u32],
+    out: &mut Vec<f32>,
+) -> u64
+where
+    LaneCount<L>: SupportedLaneCount,
+{
+    let dpad = data.dim_pad();
+    debug_assert_eq!(q.len(), dpad, "query must be padded to the matrix width");
+    let m = ids.len();
+    out.clear();
+    out.resize(m, 0.0);
+    let full = (m / BLOCK) * BLOCK;
+    for jb in (0..full).step_by(BLOCK) {
+        let rows: [&[f32]; BLOCK] = std::array::from_fn(|b| data.row(ids[jb + b] as usize));
+        let mut acc = [Simd::<f32, L>::splat(0.0); BLOCK];
+        let mut c = 0;
+        while c + L <= dpad {
+            let qv = Simd::<f32, L>::from_slice(&q[c..c + L]);
+            for b in 0..BLOCK {
+                let d = qv - Simd::<f32, L>::from_slice(&rows[b][c..c + L]);
+                acc[b] = d.mul_add(d, acc[b]);
+            }
+            c += L;
+        }
+        for b in 0..BLOCK {
+            let mut s = acc[b].reduce_sum();
+            if c < dpad {
+                s += sq_tail8(q, rows[b], c);
+            }
+            out[jb + b] = s;
+        }
+    }
+    for j in full..m {
+        out[j] = sq_l2_w::<L>(q, data.row(ids[j] as usize));
+    }
+    m as u64
+}
+
+/// Query×corpus 5×5 cross tiles at width `L`, row-major into
+/// `out[qi · ids.len() + j]`. Bit-equal per pair to [`sq_l2_w`]`::<L>`.
+pub fn cross_w<const L: usize>(
+    queries: &AlignedMatrix,
+    data: &AlignedMatrix,
+    ids: &[u32],
+    out: &mut [f32],
+) -> u64
+where
+    LaneCount<L>: SupportedLaneCount,
+{
+    assert_eq!(queries.dim_pad(), data.dim_pad(), "query/corpus width mismatch");
+    let (nq, m) = (queries.n(), ids.len());
+    assert_eq!(out.len(), nq * m, "output buffer size mismatch");
+    let dpad = data.dim_pad();
+    let qfull = (nq / BLOCK) * BLOCK;
+    let cfull = (m / BLOCK) * BLOCK;
+    for ib in (0..qfull).step_by(BLOCK) {
+        let qrows: [&[f32]; BLOCK] = std::array::from_fn(|a| queries.row(ib + a));
+        for jb in (0..cfull).step_by(BLOCK) {
+            let crows: [&[f32]; BLOCK] = std::array::from_fn(|b| data.row(ids[jb + b] as usize));
+            let mut acc = [[Simd::<f32, L>::splat(0.0); BLOCK]; BLOCK];
+            let mut c = 0;
+            while c + L <= dpad {
+                let cv: [Simd<f32, L>; BLOCK] =
+                    std::array::from_fn(|b| Simd::from_slice(&crows[b][c..c + L]));
+                for a in 0..BLOCK {
+                    let qa = Simd::<f32, L>::from_slice(&qrows[a][c..c + L]);
+                    for b in 0..BLOCK {
+                        let d = qa - cv[b];
+                        acc[a][b] = d.mul_add(d, acc[a][b]);
+                    }
+                }
+                c += L;
+            }
+            for a in 0..BLOCK {
+                for b in 0..BLOCK {
+                    let mut s = acc[a][b].reduce_sum();
+                    if c < dpad {
+                        s += sq_tail8(qrows[a], crows[b], c);
+                    }
+                    out[(ib + a) * m + jb + b] = s;
+                }
+            }
+        }
+        for j in cfull..m {
+            let row = data.row(ids[j] as usize);
+            for (a, q) in qrows.iter().enumerate() {
+                out[(ib + a) * m + j] = sq_l2_w::<L>(q, row);
+            }
+        }
+    }
+    for qi in qfull..nq {
+        let q = queries.row(qi);
+        for j in 0..m {
+            out[qi * m + j] = sq_l2_w::<L>(q, data.row(ids[j] as usize));
+        }
+    }
+    (nq * m) as u64
+}
+
+/// Norm-trick expansion strip: distances from one padded query (norm
+/// `q2`) to the `ids` rows, using precomputed per-row `norms` and 1×5
+/// register-tiled dot products. Per pair: one fused multiply-add per
+/// component (vs subtract + fma on the direct path).
+pub fn one_to_many_dot_w<const L: usize>(
+    q: &[f32],
+    q2: f32,
+    data: &AlignedMatrix,
+    norms: &[f32],
+    ids: &[u32],
+    out: &mut Vec<f32>,
+) -> u64
+where
+    LaneCount<L>: SupportedLaneCount,
+{
+    let dpad = data.dim_pad();
+    debug_assert_eq!(q.len(), dpad, "query must be padded to the matrix width");
+    debug_assert_eq!(norms.len(), data.n(), "one norm per corpus row");
+    let m = ids.len();
+    out.clear();
+    out.resize(m, 0.0);
+    let full = (m / BLOCK) * BLOCK;
+    for jb in (0..full).step_by(BLOCK) {
+        let rows: [&[f32]; BLOCK] = std::array::from_fn(|b| data.row(ids[jb + b] as usize));
+        let mut acc = [Simd::<f32, L>::splat(0.0); BLOCK];
+        let mut c = 0;
+        while c + L <= dpad {
+            let qv = Simd::<f32, L>::from_slice(&q[c..c + L]);
+            for b in 0..BLOCK {
+                acc[b] = qv.mul_add(Simd::<f32, L>::from_slice(&rows[b][c..c + L]), acc[b]);
+            }
+            c += L;
+        }
+        for b in 0..BLOCK {
+            let mut dot = acc[b].reduce_sum();
+            if c < dpad {
+                dot += dot_tail8(q, rows[b], c);
+            }
+            out[jb + b] = finish_norm_trick(q2, norms[ids[jb + b] as usize], dot);
+        }
+    }
+    for j in full..m {
+        let dot = dot_w::<L>(q, data.row(ids[j] as usize));
+        out[j] = finish_norm_trick(q2, norms[ids[j] as usize], dot);
+    }
+    m as u64
+}
+
+/// Norm-trick cross tiles: query×corpus distances via 5×5 register-tiled
+/// dot products plus precomputed norms (`qnorms[qi]`, `norms[row]`).
+/// Bit-equal per pair to [`one_to_many_dot_w`]`::<L>` — the batched
+/// probe stage matches the sequential one exactly.
+pub fn cross_dot_w<const L: usize>(
+    queries: &AlignedMatrix,
+    qnorms: &[f32],
+    data: &AlignedMatrix,
+    norms: &[f32],
+    ids: &[u32],
+    out: &mut [f32],
+) -> u64
+where
+    LaneCount<L>: SupportedLaneCount,
+{
+    assert_eq!(queries.dim_pad(), data.dim_pad(), "query/corpus width mismatch");
+    debug_assert_eq!(qnorms.len(), queries.n(), "one norm per query row");
+    debug_assert_eq!(norms.len(), data.n(), "one norm per corpus row");
+    let (nq, m) = (queries.n(), ids.len());
+    assert_eq!(out.len(), nq * m, "output buffer size mismatch");
+    let dpad = data.dim_pad();
+    let qfull = (nq / BLOCK) * BLOCK;
+    let cfull = (m / BLOCK) * BLOCK;
+    for ib in (0..qfull).step_by(BLOCK) {
+        let qrows: [&[f32]; BLOCK] = std::array::from_fn(|a| queries.row(ib + a));
+        for jb in (0..cfull).step_by(BLOCK) {
+            let crows: [&[f32]; BLOCK] = std::array::from_fn(|b| data.row(ids[jb + b] as usize));
+            let mut acc = [[Simd::<f32, L>::splat(0.0); BLOCK]; BLOCK];
+            let mut c = 0;
+            while c + L <= dpad {
+                let cv: [Simd<f32, L>; BLOCK] =
+                    std::array::from_fn(|b| Simd::from_slice(&crows[b][c..c + L]));
+                for a in 0..BLOCK {
+                    let qa = Simd::<f32, L>::from_slice(&qrows[a][c..c + L]);
+                    for b in 0..BLOCK {
+                        acc[a][b] = qa.mul_add(cv[b], acc[a][b]);
+                    }
+                }
+                c += L;
+            }
+            for a in 0..BLOCK {
+                for b in 0..BLOCK {
+                    let mut dot = acc[a][b].reduce_sum();
+                    if c < dpad {
+                        dot += dot_tail8(qrows[a], crows[b], c);
+                    }
+                    out[(ib + a) * m + jb + b] =
+                        finish_norm_trick(qnorms[ib + a], norms[ids[jb + b] as usize], dot);
+                }
+            }
+        }
+        for j in cfull..m {
+            let row = data.row(ids[j] as usize);
+            let y2 = norms[ids[j] as usize];
+            for (a, q) in qrows.iter().enumerate() {
+                let dot = dot_w::<L>(q, row);
+                out[(ib + a) * m + j] = finish_norm_trick(qnorms[ib + a], y2, dot);
+            }
+        }
+    }
+    for qi in qfull..nq {
+        let q = queries.row(qi);
+        for j in 0..m {
+            let dot = dot_w::<L>(q, data.row(ids[j] as usize));
+            out[qi * m + j] = finish_norm_trick(qnorms[qi], norms[ids[j] as usize], dot);
+        }
+    }
+    (nq * m) as u64
+}
+
+// ---------------------------------------------------------------------
+// Scalar reference set (the `PALLAS_KERNEL=scalar` forced path): same
+// contracts, same fill patterns, same evaluation accounting — one pair
+// at a time through `scalar::sq_l2_scalar` / plain-loop dot products.
+// ---------------------------------------------------------------------
+
+/// Scalar squared norm (plain loop).
+pub fn sq_norm_scalar(a: &[f32]) -> f32 {
+    dot_scalar(a, a)
+}
+
+/// Scalar dot product (plain loop).
+pub fn dot_scalar(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = 0.0f32;
+    for i in 0..a.len() {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Scalar pairwise: exactly the pairs `(i, j)`, `i < j` with at least
+/// one endpoint below `active` (the minimal fill the contract requires).
+pub fn pairwise_scalar(
+    data: &AlignedMatrix,
+    ids: &[u32],
+    active: usize,
+    out: &mut PairwiseBuf,
+) -> u64 {
+    let m = ids.len();
+    let active = active.min(m);
+    out.reset(m);
+    if m < 2 || active == 0 {
+        return 0;
+    }
+    let mut evals = 0u64;
+    for i in 0..m {
+        for j in (i + 1)..m {
+            if i >= active && j >= active {
+                continue;
+            }
+            let d = sq_l2_scalar(data.row(ids[i] as usize), data.row(ids[j] as usize));
+            out.put(i, j, d);
+            evals += 1;
+        }
+    }
+    evals
+}
+
+/// Scalar one-to-many.
+pub fn one_to_many_scalar(
+    q: &[f32],
+    data: &AlignedMatrix,
+    ids: &[u32],
+    out: &mut Vec<f32>,
+) -> u64 {
+    debug_assert_eq!(q.len(), data.dim_pad(), "query must be padded to the matrix width");
+    out.clear();
+    out.extend(ids.iter().map(|&v| sq_l2_scalar(q, data.row(v as usize))));
+    ids.len() as u64
+}
+
+/// Scalar cross.
+pub fn cross_scalar(
+    queries: &AlignedMatrix,
+    data: &AlignedMatrix,
+    ids: &[u32],
+    out: &mut [f32],
+) -> u64 {
+    assert_eq!(queries.dim_pad(), data.dim_pad(), "query/corpus width mismatch");
+    let (nq, m) = (queries.n(), ids.len());
+    assert_eq!(out.len(), nq * m, "output buffer size mismatch");
+    for qi in 0..nq {
+        let q = queries.row(qi);
+        for (j, &v) in ids.iter().enumerate() {
+            out[qi * m + j] = sq_l2_scalar(q, data.row(v as usize));
+        }
+    }
+    (nq * m) as u64
+}
+
+/// Scalar norm-trick one-to-many.
+pub fn one_to_many_dot_scalar(
+    q: &[f32],
+    q2: f32,
+    data: &AlignedMatrix,
+    norms: &[f32],
+    ids: &[u32],
+    out: &mut Vec<f32>,
+) -> u64 {
+    debug_assert_eq!(q.len(), data.dim_pad(), "query must be padded to the matrix width");
+    debug_assert_eq!(norms.len(), data.n(), "one norm per corpus row");
+    out.clear();
+    out.extend(ids.iter().map(|&v| {
+        finish_norm_trick(q2, norms[v as usize], dot_scalar(q, data.row(v as usize)))
+    }));
+    ids.len() as u64
+}
+
+/// Scalar norm-trick cross.
+pub fn cross_dot_scalar(
+    queries: &AlignedMatrix,
+    qnorms: &[f32],
+    data: &AlignedMatrix,
+    norms: &[f32],
+    ids: &[u32],
+    out: &mut [f32],
+) -> u64 {
+    assert_eq!(queries.dim_pad(), data.dim_pad(), "query/corpus width mismatch");
+    debug_assert_eq!(qnorms.len(), queries.n(), "one norm per query row");
+    debug_assert_eq!(norms.len(), data.n(), "one norm per corpus row");
+    let (nq, m) = (queries.n(), ids.len());
+    assert_eq!(out.len(), nq * m, "output buffer size mismatch");
+    for qi in 0..nq {
+        let q = queries.row(qi);
+        for (j, &v) in ids.iter().enumerate() {
+            let dot = dot_scalar(q, data.row(v as usize));
+            out[qi * m + j] = finish_norm_trick(qnorms[qi], norms[v as usize], dot);
+        }
+    }
+    (nq * m) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distance::scalar::sq_l2_f64;
+    use crate::testing::{check, Config};
+
+    #[test]
+    fn reduce_lanes_exact() {
+        // the engine's one horizontal-sum helper (absorbed the old
+        // `unrolled::horizontal_sum`): exactness at both widths
+        let acc8 = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        assert_eq!(reduce_lanes::<8>(&acc8), 36.0);
+        let acc16: [f32; 16] = std::array::from_fn(|i| (i + 1) as f32);
+        assert_eq!(reduce_lanes::<16>(&acc16), 136.0);
+    }
+
+    #[test]
+    fn w16_tail_handles_odd_chunk_counts() {
+        // dpad % 16 == 8 is the interesting case: one 8-wide tail chunk
+        for chunks in [1usize, 2, 3, 5] {
+            let len = chunks * 8;
+            let mut g = crate::testing::Gen::new_for_test(chunks as u64);
+            let a = g.vec_f32(len, 6.0);
+            let b = g.vec_f32(len, 6.0);
+            let w16 = sq_l2_w::<16>(&a, &b) as f64;
+            let o = sq_l2_f64(&a, &b);
+            assert!((w16 - o).abs() <= 1e-4 * (1.0 + o), "chunks={chunks}: {w16} vs {o}");
+        }
+    }
+
+    #[test]
+    fn dot_and_norm_consistency() {
+        check(Config::cases(100), "sq_norm_w == dot_w(a,a) bitwise", |g| {
+            let len = 8 * g.usize_in(1..12);
+            let a = g.vec_f32(len, 5.0);
+            sq_norm_w::<8>(&a).to_bits() == dot_w::<8>(&a, &a).to_bits()
+                && sq_norm_w::<16>(&a).to_bits() == dot_w::<16>(&a, &a).to_bits()
+                && sq_norm_scalar(&a).to_bits() == dot_scalar(&a, &a).to_bits()
+        });
+    }
+
+    #[test]
+    fn norm_trick_self_distance_is_exactly_zero() {
+        // the clamp + shared-sequence argument: q2 == y2 == dot bitwise
+        // for identical rows, so the finish expression is exactly 0
+        let mut g = crate::testing::Gen::new_for_test(9);
+        for len in [8usize, 24, 40] {
+            let a = g.vec_f32(len, 100.0);
+            for (q2, dot) in [
+                (sq_norm_w::<8>(&a), dot_w::<8>(&a, &a)),
+                (sq_norm_w::<16>(&a), dot_w::<16>(&a, &a)),
+                (sq_norm_scalar(&a), dot_scalar(&a, &a)),
+            ] {
+                assert_eq!(finish_norm_trick(q2, q2, dot), 0.0, "len={len}");
+            }
+        }
+    }
+
+    #[test]
+    fn finish_norm_trick_clamps_negative() {
+        assert_eq!(finish_norm_trick(1.0, 1.0, 1.0000001), 0.0);
+    }
+}

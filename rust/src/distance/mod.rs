@@ -1,30 +1,52 @@
-//! Squared-L2 distance kernels (paper §3.3).
+//! Squared-L2 distance kernels (paper §3.3) behind a width-generic
+//! kernel engine with runtime CPU dispatch.
 //!
 //! The implementation is restricted to (squared) L2 — exactly the
 //! trade-off the paper makes: giving up generic metrics buys blocked
-//! evaluation. Three native tiers mirror the paper's version tags:
+//! evaluation. The engine is organised in three layers:
+//!
+//! | layer | module | role |
+//! |-------|--------|------|
+//! | micro-kernels | [`kernel`] | width-generic loops (`Simd<f32, L>`, `L ∈ {8, 16}`) + scalar references for every hot shape |
+//! | dispatch | [`dispatch`] | one process-wide width pick: `--kernel`/[`dispatch::force`] → `PALLAS_KERNEL` env → CPU detection (`avx512f` → 16 lanes) |
+//! | stable shims | [`unrolled`], [`blocked`] | the historical free functions, now one indirect call into the active [`dispatch::KernelSet`] |
+//!
+//! The paper's version tags map onto the shims unchanged:
 //!
 //! | paper tag       | function                 | idea |
 //! |-----------------|--------------------------|------|
 //! | (baseline)      | [`scalar::sq_l2_scalar`] | plain loop |
-//! | `l2intrinsics` + `mem-align` | [`unrolled::sq_l2_unrolled`] | 8 independent accumulator lanes over the padded row (compiles to 8-wide FMA SIMD) |
+//! | `l2intrinsics` + `mem-align` | [`unrolled::sq_l2_unrolled`] | one SIMD accumulator over the padded row (8- or 16-wide FMA) |
 //! | `blocked`       | [`blocked::pairwise_blocked`] | 5×5-vector blocks: 10 row loads feed 25 distance accumulations |
+//!
+//! Serving additionally uses the engine's **norm-trick** shapes
+//! ([`dispatch::one_to_many_norms`], [`dispatch::cross_norms`]):
+//! ‖q−y‖² = ‖q‖² + ‖y‖² − 2⟨q,y⟩ with per-index precomputed corpus
+//! norms, reducing the batch probe stage to register-tiled dot products.
 //!
 //! All kernels consume **padded** rows from
 //! [`AlignedMatrix`](crate::dataset::AlignedMatrix) (width a multiple of
-//! 8, zero tail), so no remainder handling exists anywhere — the same
-//! simplification the paper gets from requiring `d % 8 == 0`.
+//! 8, zero tail); 16-lane kernels absorb the possible `8 mod 16` rest
+//! with one shared 8-wide tail step, so no general remainder handling
+//! exists anywhere — the same simplification the paper gets from
+//! requiring `d % 8 == 0`.
 //!
 //! The fourth backend (`pjrt`) lives in [`crate::runtime`]: it executes
 //! the AOT-lowered Pallas kernel instead of native code.
 
 pub mod blocked;
+pub mod dispatch;
+pub mod kernel;
 pub mod scalar;
 pub mod unrolled;
 
+#[cfg(test)]
+mod parity;
+
 pub use blocked::{cross_blocked, one_to_many_blocked, pairwise_blocked, PairwiseBuf};
+pub use dispatch::KernelWidth;
 pub use scalar::sq_l2_scalar;
-pub use unrolled::sq_l2_unrolled;
+pub use unrolled::{sq_l2_unrolled, sq_norm};
 
 use crate::config::schema::ComputeKind;
 

@@ -1,0 +1,234 @@
+//! Cross-width parity suite: every kernel shape of every selectable
+//! width ([`KernelWidth::ALL`]) against the f64 scalar oracle, on random
+//! and adversarial inputs.
+//!
+//! This is the gate behind the dispatcher: forcing `PALLAS_KERNEL` to
+//! any width must never change *correctness*, only speed. The suite
+//! exercises each width's [`KernelSet`] directly (not through the
+//! process-global dispatch), so one test run covers the scalar, w8, and
+//! w16 paths regardless of what the current machine/env selected —
+//! including the 16-lane tail step on rows whose padded width is
+//! `8 mod 16`. CI additionally re-runs the whole `distance::` module
+//! with `PALLAS_KERNEL=scalar` and `=w8` so the env override and the
+//! narrow fallback stay exercised end-to-end on runners without
+//! AVX-512 (w16 needs no hardware gate: portable SIMD keeps it correct
+//! everywhere, so it is tested unconditionally here).
+//!
+//! Tolerances: direct kernels are compared at `1e-3` relative to the
+//! oracle distance. Norm-trick results compare at `1e-3` relative to
+//! the *magnitude scale* (`1 + ‖q‖² + ‖y‖²`): the factorization
+//! ‖q‖² + ‖y‖² − 2⟨q,y⟩ inherently loses the low bits of the norms to
+//! cancellation when the true distance is far smaller than the norms —
+//! that is the documented trade-off of the GEMM-style path, not a bug.
+
+use crate::dataset::AlignedMatrix;
+use crate::testing::{check, Config, Gen};
+
+use super::dispatch::{kernel_set, KernelSet, KernelWidth};
+use super::scalar::sq_l2_f64;
+use super::PairwiseBuf;
+
+fn dot_f64(a: &[f32], b: &[f32]) -> f64 {
+    a.iter().zip(b).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+/// Direct-kernel tolerance: relative to the oracle distance.
+fn close_direct(got: f32, oracle: f64) -> bool {
+    (got as f64 - oracle).abs() <= 1e-3 * (1.0 + oracle.abs())
+}
+
+/// Norm-trick tolerance: relative to the magnitude scale of the inputs.
+fn close_norm_trick(got: f32, oracle: f64, a: &[f32], b: &[f32]) -> bool {
+    let scale = 1.0 + dot_f64(a, a) + dot_f64(b, b);
+    (got as f64 - oracle).abs() <= 1e-3 * scale
+}
+
+/// Run every shape of one kernel set over (queries × corpus[ids]) and
+/// compare each produced distance to the f64 oracle.
+fn check_set(set: &KernelSet, queries: &AlignedMatrix, data: &AlignedMatrix, ids: &[u32]) {
+    let w = set.width.name();
+    let m = ids.len();
+    let nq = queries.n();
+
+    // pair + sq_norm
+    for qi in 0..nq {
+        let q = queries.row(qi);
+        let n2 = (set.sq_norm)(q);
+        assert!(
+            close_direct(n2, dot_f64(q, q)),
+            "{w}: sq_norm q{qi}: {n2} vs {}",
+            dot_f64(q, q)
+        );
+        for &v in ids {
+            let o = sq_l2_f64(q, data.row(v as usize));
+            let d = (set.pair)(q, data.row(v as usize));
+            assert!(close_direct(d, o), "{w}: pair q{qi}×{v}: {d} vs {o}");
+        }
+    }
+
+    // pairwise 5×5 over the corpus subset (full active)
+    let mut buf = PairwiseBuf::with_capacity(m.max(1));
+    let evals = (set.pairwise_active)(data, ids, m, &mut buf);
+    if m >= 2 {
+        assert_eq!(evals, (m * (m - 1) / 2) as u64, "{w}: pairwise eval count");
+        for i in 0..m {
+            for j in (i + 1)..m {
+                let o = sq_l2_f64(data.row(ids[i] as usize), data.row(ids[j] as usize));
+                let d = buf.get(i, j);
+                assert!(close_direct(d, o), "{w}: pairwise ({i},{j}): {d} vs {o}");
+            }
+        }
+    }
+
+    // one-to-many strips + cross tiles
+    let mut strip = Vec::new();
+    let mut tile = vec![0f32; nq * m];
+    (set.cross)(queries, data, ids, &mut tile);
+    for qi in 0..nq {
+        let q = queries.row(qi);
+        (set.one_to_many)(q, data, ids, &mut strip);
+        for (j, &v) in ids.iter().enumerate() {
+            let o = sq_l2_f64(q, data.row(v as usize));
+            assert!(close_direct(strip[j], o), "{w}: one_to_many q{qi}×{v}: {} vs {o}", strip[j]);
+            assert!(
+                close_direct(tile[qi * m + j], o),
+                "{w}: cross q{qi}×{v}: {} vs {o}",
+                tile[qi * m + j]
+            );
+        }
+    }
+
+    // norm-trick path: precomputed norms, strips and tiles
+    let norms: Vec<f32> = (0..data.n()).map(|i| (set.sq_norm)(data.row(i))).collect();
+    let qnorms: Vec<f32> = (0..nq).map(|qi| (set.sq_norm)(queries.row(qi))).collect();
+    let mut ntile = vec![0f32; nq * m];
+    (set.cross_norms)(queries, &qnorms, data, &norms, ids, &mut ntile);
+    for qi in 0..nq {
+        let q = queries.row(qi);
+        (set.one_to_many_norms)(q, qnorms[qi], data, &norms, ids, &mut strip);
+        for (j, &v) in ids.iter().enumerate() {
+            let y = data.row(v as usize);
+            let o = sq_l2_f64(q, y);
+            assert!(
+                close_norm_trick(strip[j], o, q, y),
+                "{w}: one_to_many_norms q{qi}×{v}: {} vs {o}",
+                strip[j]
+            );
+            assert!(
+                close_norm_trick(ntile[qi * m + j], o, q, y),
+                "{w}: cross_norms q{qi}×{v}: {} vs {o}",
+                ntile[qi * m + j]
+            );
+            // sequential and batched norm-trick paths must agree bitwise
+            assert_eq!(
+                strip[j].to_bits(),
+                ntile[qi * m + j].to_bits(),
+                "{w}: norm-trick strip/tile divergence at q{qi}×{v}"
+            );
+        }
+    }
+}
+
+fn random_matrix(g: &mut Gen, n: usize, dim: usize, scale: f32) -> AlignedMatrix {
+    let data = g.vec_f32(n * dim, scale);
+    AlignedMatrix::from_rows(n, dim, &data)
+}
+
+#[test]
+fn parity_random_inputs_all_widths_all_shapes() {
+    // dims chosen to hit every 16-lane layout: pad % 16 == 8 (pure-tail
+    // and mixed) and pad % 16 == 0 (no tail)
+    check(Config::cases(40), "kernel parity vs f64 oracle", |g| {
+        let dim = [8, 9, 16, 17, 24, 40, 48][g.usize_in(0..7)];
+        let n = g.usize_in(6..28);
+        let nq = g.usize_in(1..9);
+        let data = random_matrix(g, n, dim, 8.0);
+        let queries = random_matrix(g, nq, dim, 8.0);
+        let m = g.usize_in(1..n + 1);
+        // ids may repeat rows — kernels must not care
+        let ids: Vec<u32> = (0..m).map(|_| g.u32_in(0..n as u32)).collect();
+        for width in KernelWidth::ALL {
+            check_set(kernel_set(width), &queries, &data, &ids);
+        }
+        true
+    });
+}
+
+#[test]
+fn parity_adversarial_inputs() {
+    // zero rows, exact duplicates, large magnitudes, and tail-exercising
+    // padded widths — the cases where summation-order bugs would hide
+    for dim in [8usize, 17, 24] {
+        let mut g = Gen::new_for_test(dim as u64);
+        let n = 12;
+        let mut rows: Vec<f32> = Vec::new();
+        for i in 0..n {
+            let row: Vec<f32> = match i {
+                0 => vec![0.0; dim],                        // zero row
+                1 => vec![1e4; dim],                        // large constant
+                2 => vec![-1e4; dim],                       // large negative
+                3 => (0..dim).map(|j| j as f32 * 1e3).collect(), // large ramp
+                _ => g.vec_f32(dim, 50.0),
+            };
+            rows.extend(row);
+        }
+        // row 4 duplicates row 1 exactly (self-distance stress)
+        let dup = rows[dim..2 * dim].to_vec();
+        rows.splice(4 * dim..5 * dim, dup);
+        let data = AlignedMatrix::from_rows(n, dim, &rows);
+        // queries: the adversarial rows themselves + one random row
+        let qrows: Vec<f32> = rows[..5 * dim]
+            .iter()
+            .copied()
+            .chain(g.vec_f32(dim, 50.0))
+            .collect();
+        let queries = AlignedMatrix::from_rows(6, dim, &qrows);
+        let ids: Vec<u32> = (0..n as u32).collect();
+        for width in KernelWidth::ALL {
+            check_set(kernel_set(width), &queries, &data, &ids);
+        }
+    }
+}
+
+#[test]
+fn parity_norm_trick_exact_zero_on_duplicates() {
+    // querying with a corpus row must give exactly 0 on the norm-trick
+    // path at every width (the bit-identity argument in kernel.rs)
+    for dim in [8usize, 16, 17] {
+        let mut g = Gen::new_for_test(0xD0 + dim as u64);
+        let data = random_matrix(&mut g, 10, dim, 1e3);
+        let ids: Vec<u32> = (0..10).collect();
+        for width in KernelWidth::ALL {
+            let set = kernel_set(width);
+            let norms: Vec<f32> = (0..10).map(|i| (set.sq_norm)(data.row(i))).collect();
+            let mut out = Vec::new();
+            for qi in 0..10usize {
+                let q = data.row(qi);
+                (set.one_to_many_norms)(q, norms[qi], &data, &norms, &ids, &mut out);
+                assert_eq!(
+                    out[qi],
+                    0.0,
+                    "{}: self distance of row {qi} (dim {dim}) not exactly zero",
+                    width.name()
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn parity_empty_id_sets() {
+    let mut g = Gen::new_for_test(77);
+    let data = random_matrix(&mut g, 4, 16, 2.0);
+    let queries = random_matrix(&mut g, 2, 16, 2.0);
+    for width in KernelWidth::ALL {
+        let set = kernel_set(width);
+        let mut out = Vec::new();
+        assert_eq!((set.one_to_many)(queries.row(0), &data, &[], &mut out), 0);
+        assert!(out.is_empty());
+        let mut tile: Vec<f32> = Vec::new();
+        assert_eq!((set.cross)(&queries, &data, &[], &mut tile), 0);
+        let mut buf = PairwiseBuf::with_capacity(4);
+        assert_eq!((set.pairwise_active)(&data, &[], 0, &mut buf), 0);
+    }
+}

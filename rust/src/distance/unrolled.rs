@@ -1,51 +1,35 @@
-//! 8-lane SIMD squared-L2 kernel — the paper's `l2intrinsics` +
-//! `mem-align` adaptation (§3.3).
+//! The paper's `l2intrinsics` + `mem-align` kernel (§3.3), routed
+//! through the runtime-dispatched kernel engine.
 //!
-//! The paper keeps one AVX2 register of accumulators and processes 8
-//! single-precision components per `vsubps` + `vfmadd231ps`. Portable
-//! equivalent: `std::simd::f32x8` — one SIMD accumulator updated per
-//! exact 8-lane chunk, which lowers to the same instruction sequence
-//! under `-C target-cpu=native` (the paper's `-march=native`; verified
-//! by disassembly, EXPERIMENTS.md §Perf). An earlier array-of-lanes
-//! formulation relied on LLVM's loop vectorizer and left the
-//! accumulators spilled — 3.5× slower; see the §Perf log.
+//! Historically this file held the fixed `f32x8` loop: one SIMD
+//! register of accumulators, 8 single-precision components per
+//! `vsubps` + `vfmadd231ps`. That loop now lives width-generically in
+//! [`kernel::sq_l2_w`](super::kernel::sq_l2_w) (8 or 16 lanes, selected
+//! once per process by [`dispatch`](super::dispatch)); `sq_l2_unrolled`
+//! is the stable name the crate's ~25 call sites keep using. At the
+//! default `w8` width the instruction sequence is unchanged from the
+//! original (verified by disassembly, EXPERIMENTS.md §Perf).
 //!
 //! Inputs must be padded rows (length divisible by 8, zero tails), which
 //! [`AlignedMatrix`](crate::dataset::AlignedMatrix) guarantees.
 
-use std::simd::f32x8;
-use std::simd::num::SimdFloat;
-use std::simd::StdFloat;
+use super::dispatch;
 
-/// Squared L2 over padded rows using one 8-lane SIMD accumulator.
+/// Squared L2 over padded rows at the dispatched kernel width (one SIMD
+/// accumulator per pair; scalar when forced). Every blocked kernel is
+/// bit-equal to this function at the same width.
 #[inline]
 pub fn sq_l2_unrolled(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    debug_assert_eq!(a.len() % 8, 0, "rows must be padded to 8 lanes");
-    let mut acc = f32x8::splat(0.0);
-    for (ca, cb) in a.chunks_exact(8).zip(b.chunks_exact(8)) {
-        let d = f32x8::from_slice(ca) - f32x8::from_slice(cb);
-        acc = d.mul_add(d, acc);
-    }
-    acc.reduce_sum()
+    (dispatch::active().pair)(a, b)
 }
 
-/// Horizontal sum of 8 lanes (exposed for the blocked kernel/tests).
+/// Squared norm of a padded row at the dispatched kernel width — used
+/// by the norm-trick serving path (`search::GraphIndex` precomputes one
+/// per corpus row), the PJRT batcher, and tests. Bitwise identical to
+/// the dot product of a row with itself at the same width.
 #[inline]
-pub fn horizontal_sum(acc: &[f32; 8]) -> f32 {
-    f32x8::from_array(*acc).reduce_sum()
-}
-
-/// Squared norm of a padded row — used by the PJRT batcher to validate
-/// kernel outputs and by tests.
 pub fn sq_norm(a: &[f32]) -> f32 {
-    debug_assert_eq!(a.len() % 8, 0);
-    let mut acc = f32x8::splat(0.0);
-    for ca in a.chunks_exact(8) {
-        let v = f32x8::from_slice(ca);
-        acc = v.mul_add(v, acc);
-    }
-    acc.reduce_sum()
+    (dispatch::active().sq_norm)(a)
 }
 
 #[cfg(test)]
@@ -94,11 +78,5 @@ mod tests {
             let z = vec![0.0f32; 24];
             (sq_norm(&a) - sq_l2_unrolled(&a, &z)).abs() < 1e-3
         });
-    }
-
-    #[test]
-    fn horizontal_sum_exact() {
-        let acc = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
-        assert_eq!(horizontal_sum(&acc), 36.0);
     }
 }

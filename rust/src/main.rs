@@ -16,11 +16,12 @@
 //!   knng build --dataset fvecs --path corpus.fvecs --n 100k --reorder \
 //!              --save-index corpus.knni
 //!   knng query --index corpus.knni --batch queries.fvecs --k 10 --ef 64
+//!   knng query --index corpus.knni --batch queries.fvecs --kernel w16
 //!   knng gen --dataset gaussian --n 4096 --dim 64 --out /tmp/g.fvecs
 //!   knng check --artifacts artifacts
 
 use knng::api::{EvalOptions, Index, IndexBuilder, Searcher};
-use knng::cli::{parse_args, ArgSpec};
+use knng::cli::{apply_kernel_override, parse_args, ArgSpec, KERNEL_FLAG, KERNEL_HELP};
 use knng::config::schema::{ComputeKind, SelectionKind};
 use knng::config::{DatasetSpec, ExperimentConfig, RunConfig};
 
@@ -75,6 +76,7 @@ fn build_spec() -> ArgSpec {
         .value("delta", "convergence threshold (default 0.001)")
         .value("selection", "naive|heap|turbo (default turbo)")
         .value("compute", "scalar|unrolled|blocked|pjrt (default blocked)")
+        .value(KERNEL_FLAG, KERNEL_HELP)
         .flag("reorder", "enable the greedy reordering heuristic")
         .value("seed", "PRNG seed (default 1)")
         .value("max-iters", "iteration cap (default 40)")
@@ -93,6 +95,7 @@ fn cmd_build(argv: &[String]) -> anyhow::Result<()> {
         print!("{}", spec.usage("build"));
         return Ok(());
     }
+    apply_kernel_override(&m)?;
 
     let mut cfg = match m.get("config") {
         Some(path) => ExperimentConfig::load(std::path::Path::new(path))?,
@@ -173,6 +176,7 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
         .value("queries", ".fvecs query vectors, served one at a time (with --graph)")
         .value("k", "neighbors per query (default 10)")
         .value("ef", "beam width (default 64)")
+        .value(KERNEL_FLAG, KERNEL_HELP)
         .flag("stats", "print the aggregate QueryStats breakdown to stderr")
         .flag("help", "show this help");
     let m = parse_args(&spec, argv)?;
@@ -180,6 +184,7 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
         print!("{}", spec.usage("query"));
         return Ok(());
     }
+    apply_kernel_override(&m)?;
     let k = m.usize_or("k", 10)?;
     let params = knng::search::SearchParams {
         ef: m.usize_or("ef", 64)?,
@@ -209,12 +214,13 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
         }
         eprintln!(
             "{} queries in {:.3}s ({:.0} qps), {:.0} evals/query, {:.1} expansions/query \
-             [index n={}, graph k={}, built {}/{}{}]",
+             [kernel {}; index n={}, graph k={}, built {}/{}{}]",
             stats.queries,
             stats.secs,
             stats.qps(),
             stats.dist_evals_per_query(),
             stats.expansions_per_query(),
+            stats.kernel,
             index.len(),
             index.graph_k(),
             index.params().selection.name(),
@@ -386,6 +392,7 @@ fn cmd_info(argv: &[String]) -> anyhow::Result<()> {
         d.compute.name(),
         d.max_candidates
     );
+    println!("kernel dispatch: {}", knng::distance::dispatch::describe());
     let dir = m.str_or("artifacts", "artifacts");
     artifact_inventory(dir);
     Ok(())

@@ -8,7 +8,6 @@
 use crate::api::ids::Neighbor;
 use crate::baseline::brute::GroundTruth;
 use crate::dataset::AlignedMatrix;
-use crate::distance::sq_l2_unrolled;
 use crate::graph::heap::EMPTY_ID;
 use crate::graph::KnnGraph;
 use crate::nndescent::driver::BuildResult;
@@ -50,10 +49,12 @@ pub fn exact_neighbor_ids(
 ) -> Vec<Vec<u32>> {
     assert_eq!(corpus.dim(), queries.dim(), "corpus/query dim mismatch");
     let k = k.min(corpus.n());
+    // resolve the dispatched pair kernel once for the full scan
+    let pair = crate::distance::dispatch::active().pair;
     (0..queries.n())
         .map(|qi| {
             let mut exact: Vec<(u32, f32)> = (0..corpus.n() as u32)
-                .map(|v| (v, sq_l2_unrolled(queries.row(qi), corpus.row(v as usize))))
+                .map(|v| (v, pair(queries.row(qi), corpus.row(v as usize))))
                 .collect();
             exact.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)));
             exact[..k].iter().map(|&(v, _)| v).collect()

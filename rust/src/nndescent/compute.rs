@@ -6,7 +6,12 @@
 //! evaluated in an earlier iteration (Dong et al.'s incremental search).
 //!
 //! Distance evaluation is pluggable via [`PairwiseEngine`]:
-//! * [`NativeEngine`] — scalar / unrolled / 5×5-blocked kernels.
+//! * [`NativeEngine`] — scalar / unrolled / 5×5-blocked kernels. The
+//!   unrolled and blocked tiers route through the runtime-dispatched
+//!   kernel engine (`distance::dispatch`), so the same compute step
+//!   runs 8- or 16-lane SIMD depending on the CPU (or a forced
+//!   `PALLAS_KERNEL` width); the `FlopCounter` the driver hands in is
+//!   tagged with that width.
 //! * `runtime::PjrtEngine` — the AOT-compiled Pallas kernel via PJRT.
 //!
 //! With the blocked/PJRT engines, *all* mutual distances of the set are
@@ -18,7 +23,6 @@ use crate::cachesim::trace::Tracer;
 use crate::config::schema::ComputeKind;
 use crate::dataset::AlignedMatrix;
 use crate::distance::blocked::{pairwise_blocked_active, pairwise_flat, PairwiseBuf, BLOCK};
-use crate::distance::sq_l2;
 use crate::graph::KnnGraph;
 use crate::util::counters::FlopCounter;
 
@@ -157,6 +161,13 @@ pub fn compute_step<E: PairwiseEngine, T: Tracer>(
     let n = graph.n();
     let mut updates = 0u64;
     let blocked = engine.is_blocked();
+    // Flat-path pair kernel, resolved once — the per-pair dispatch
+    // indirection is measurable at small d (same function the
+    // `sq_l2_unrolled` shim reaches, so numerics are unchanged).
+    let flat_pair: fn(&[f32], &[f32]) -> f32 = match native_kind(engine) {
+        ComputeKind::Scalar => crate::distance::sq_l2_scalar,
+        _ => crate::distance::dispatch::active().pair,
+    };
 
     for u in 0..n {
         let newc = cands.new_slice(u);
@@ -227,7 +238,7 @@ pub fn compute_step<E: PairwiseEngine, T: Tracer>(
                     }
                     tracer.read(base + a * data.row_bytes(), rb);
                     tracer.read(base + b * data.row_bytes(), rb);
-                    let d = sq_l2(native_kind(engine), data.row(a), data.row(b));
+                    let d = flat_pair(data.row(a), data.row(b));
                     counter.add_evals(1);
                     let s = &scratch.set;
                     apply_update_pair(graph, s[i], s[j], d, &mut updates, tracer);

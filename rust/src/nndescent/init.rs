@@ -4,7 +4,6 @@
 
 use crate::cachesim::trace::Tracer;
 use crate::dataset::AlignedMatrix;
-use crate::distance::sq_l2_unrolled;
 use crate::graph::KnnGraph;
 use crate::util::counters::FlopCounter;
 use crate::util::rng::Pcg64;
@@ -20,6 +19,8 @@ pub fn init_random<T: Tracer>(
     let n = graph.n();
     let k = graph.k().min(n - 1);
     let row_bytes = data.row_bytes() as u32;
+    // resolve the dispatched pair kernel once for the n·k init scan
+    let pair = crate::distance::dispatch::active().pair;
     let mut sample: Vec<u32> = Vec::with_capacity(k);
     for u in 0..n {
         // k distinct ids ≠ u by rejection (k ≪ n, expected O(k) draws;
@@ -45,7 +46,7 @@ pub fn init_random<T: Tracer>(
         let a = data.row(u);
         for &v in sample.iter() {
             tracer.read(data.base_addr() + v as usize * data.row_bytes(), row_bytes);
-            let d = sq_l2_unrolled(a, data.row(v as usize));
+            let d = pair(a, data.row(v as usize));
             counter.add_evals(1);
             graph.push(u, v, d, true);
         }
@@ -57,6 +58,7 @@ mod tests {
     use super::*;
     use crate::cachesim::trace::NoTracer;
     use crate::dataset::synth::SynthGaussian;
+    use crate::distance::sq_l2_unrolled;
     use crate::graph::heap::EMPTY_ID;
 
     fn setup(n: usize, k: usize, dim: usize) -> (KnnGraph, AlignedMatrix, FlopCounter) {

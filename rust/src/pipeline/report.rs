@@ -16,6 +16,8 @@ pub struct RunReport {
     pub k: usize,
     pub selection: &'static str,
     pub compute: &'static str,
+    /// Distance-kernel width the build's evaluations ran on.
+    pub kernel: &'static str,
     pub reordered: bool,
     pub iterations: usize,
     pub total_secs: f64,
@@ -42,6 +44,13 @@ impl RunReport {
             k: params.k,
             selection: params.selection.name(),
             compute: params.compute.name(),
+            // the tag names what executed the evals: the PJRT runtime
+            // is its own backend, not a native SIMD width
+            kernel: if params.compute == crate::config::schema::ComputeKind::Pjrt {
+                "pjrt"
+            } else {
+                result.stats.kernel
+            },
             reordered: result.reordering.is_some(),
             iterations: result.iterations,
             total_secs: result.total_secs,
@@ -59,8 +68,8 @@ impl RunReport {
         s.push_str(&format!("run       : {}\n", self.name));
         s.push_str(&format!("dataset   : {} (n={}, d={})\n", self.dataset, self.n, self.dim));
         s.push_str(&format!(
-            "variant   : k={} selection={} compute={} reorder={}\n",
-            self.k, self.selection, self.compute, self.reordered
+            "variant   : k={} selection={} compute={} kernel={} reorder={}\n",
+            self.k, self.selection, self.compute, self.kernel, self.reordered
         ));
         s.push_str(&format!(
             "result    : {} iterations, {:.3}s total, {} dist evals ({:.2e} flops), {} updates\n",
@@ -82,7 +91,7 @@ impl RunReport {
     /// Single TSV row (header via [`RunReport::tsv_header`]).
     pub fn tsv_row(&self) -> String {
         format!(
-            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.4}\t{}\t{}\t{}\t{}",
+            "{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{}\t{:.4}\t{}\t{}\t{}\t{}",
             self.name,
             self.dataset,
             self.n,
@@ -90,6 +99,7 @@ impl RunReport {
             self.k,
             self.selection,
             self.compute,
+            self.kernel,
             self.reordered,
             self.iterations,
             self.total_secs,
@@ -101,7 +111,7 @@ impl RunReport {
     }
 
     pub fn tsv_header() -> &'static str {
-        "name\tdataset\tn\tdim\tk\tselection\tcompute\treordered\titerations\tsecs\tdist_evals\tflops\tupdates\trecall"
+        "name\tdataset\tn\tdim\tk\tselection\tcompute\tkernel\treordered\titerations\tsecs\tdist_evals\tflops\tupdates\trecall"
     }
 }
 
@@ -118,6 +128,7 @@ mod tests {
             k: 5,
             selection: "turbo",
             compute: "blocked",
+            kernel: "w8",
             reordered: true,
             iterations: 3,
             total_secs: 1.5,

@@ -1,16 +1,27 @@
 //! Greedy beam search over the K-NN graph — single-query and batched.
 //!
 //! Both entry points share one search core, and all candidate distances
-//! flow through the blocked kernels in `distance::blocked`, whose
-//! per-pair results are bit-equal to `sq_l2_unrolled`. Consequently
+//! flow through the dispatched kernel engine (`distance::kernel` via
+//! `distance::dispatch`). The **probe stage** uses the engine's
+//! norm-trick shapes: the index precomputes ‖y‖² once per corpus row
+//! (persisted in `KNNIv1` bundles, recomputed on load when absent), the
+//! query side contributes ‖q‖² once per query, and the query×probe
+//! evaluations reduce to register-tiled dot products — the GEMM-style
+//! factorization of the batch kernel. The **expansion stage** stays on
+//! the direct 1×5 strips (short, latency-bound, and exact).
+//!
+//! Because the sequential and batched variants of each shape are
+//! bit-equal per pair at the active width,
 //! [`GraphIndex::search_batch`] returns *exactly* the results of the
 //! equivalent sequence of [`GraphIndex::search`] calls while doing its
-//! probe evaluations as one query×corpus blocked tile and its expansion
-//! evaluations as 1×5 blocked strips, and reusing all per-query scratch
+//! probe evaluations as one query×corpus tile and its expansion
+//! evaluations as 1×5 strips, and reusing all per-query scratch
 //! (visited map, heaps, candidate buffers) across the batch.
 
 use crate::dataset::AlignedMatrix;
-use crate::distance::blocked::{cross_blocked, one_to_many_blocked};
+use crate::distance::blocked::one_to_many_blocked;
+use crate::distance::dispatch;
+use crate::distance::sq_norm;
 use crate::graph::heap::EMPTY_ID;
 use crate::graph::KnnGraph;
 use crate::util::rng::Pcg64;
@@ -61,6 +72,9 @@ pub struct BatchStats {
     pub expansions: u64,
     /// Wall time for the whole batch, seconds.
     pub secs: f64,
+    /// Active distance-kernel width the batch ran on (`scalar`/`w8`/
+    /// `w16`; empty only for default-constructed stats).
+    pub kernel: &'static str,
 }
 
 impl BatchStats {
@@ -91,10 +105,21 @@ impl BatchStats {
 }
 
 /// An immutable ANN index: the built graph + the (possibly reordered)
-/// data matrix it refers to.
+/// data matrix it refers to, plus the per-row squared norms the
+/// norm-trick probe kernels consume.
 pub struct GraphIndex {
     data: AlignedMatrix,
     graph: KnnGraph,
+    /// ‖row‖² per corpus row, computed once at construction (or loaded
+    /// from a `KNNIv1` bundle) at the active kernel width.
+    norms: Vec<f32>,
+    /// Lane count of the kernel width `norms` was computed at — the
+    /// truthful tag persisted into bundles, so a save after a mid-
+    /// process `dispatch::force` (without [`refresh_norms`]) cannot
+    /// defeat the loader's width-mismatch guard.
+    ///
+    /// [`refresh_norms`]: GraphIndex::refresh_norms
+    norm_lanes: usize,
 }
 
 /// Ordered f32 wrapper (distances are never NaN here).
@@ -187,9 +212,47 @@ fn probe_ids(n: usize, params: &SearchParams, scratch: &mut QueryScratch) -> Vec
 impl GraphIndex {
     /// Build an index from a finished graph and its data (both in the
     /// same id space — pass the *working* layout from a reordered build).
+    /// Corpus norms for the norm-trick probe path are computed here,
+    /// once, at the active kernel width.
     pub fn new(data: AlignedMatrix, graph: KnnGraph) -> Self {
+        let norms = Self::compute_norms(&data);
+        Self::with_norms(data, graph, norms)
+    }
+
+    /// Like [`new`](Self::new) with precomputed per-row squared norms.
+    /// The norms **must** have been computed at the currently active
+    /// kernel width (the bundle loader guarantees this by discarding
+    /// foreign-width sections before calling here).
+    pub fn with_norms(data: AlignedMatrix, graph: KnnGraph, norms: Vec<f32>) -> Self {
         assert_eq!(data.n(), graph.n(), "graph/data size mismatch");
-        Self { data, graph }
+        assert_eq!(norms.len(), data.n(), "one norm per corpus row");
+        let norm_lanes = dispatch::active_width().lanes();
+        Self { data, graph, norms, norm_lanes }
+    }
+
+    /// ‖row‖² for every row of `data` at the active kernel width.
+    pub fn compute_norms(data: &AlignedMatrix) -> Vec<f32> {
+        (0..data.n()).map(|i| sq_norm(data.row(i))).collect()
+    }
+
+    /// Recompute the corpus norms at the *current* active kernel width.
+    /// Call after `dispatch::force` switches widths mid-process (A/B
+    /// harnesses) so the norm-trick path measures the same
+    /// configuration a fresh build/load at that width would serve.
+    pub fn refresh_norms(&mut self) {
+        self.norms = Self::compute_norms(&self.data);
+        self.norm_lanes = dispatch::active_width().lanes();
+    }
+
+    /// Per-row squared corpus norms (working id space).
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    /// Lane count of the kernel width [`norms`](Self::norms) was
+    /// computed at.
+    pub fn norm_lanes(&self) -> usize {
+        self.norm_lanes
     }
 
     pub fn n(&self) -> usize {
@@ -211,13 +274,16 @@ impl GraphIndex {
     }
 
     /// k nearest neighbors of `query` (padded or logical length),
-    /// ascending by distance.
+    /// ascending by distance. The probe evaluations run on the
+    /// norm-trick path (precomputed corpus norms + ‖q‖² computed here),
+    /// bit-equal per pair to the batched probe tile.
     pub fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> (Vec<(u32, f32)>, QueryStats) {
         let q = self.pad_query(query);
+        let q2 = sq_norm(&q);
         let mut scratch = QueryScratch::new(self.data.n());
         let probes = probe_ids(self.data.n(), params, &mut scratch);
         let mut probe_dists = Vec::new();
-        one_to_many_blocked(&q, &self.data, &probes, &mut probe_dists);
+        dispatch::one_to_many_norms(&q, q2, &self.data, &self.norms, &probes, &mut probe_dists);
         self.search_core(&q, k, params, &probes, &probe_dists, &mut scratch)
     }
 
@@ -248,10 +314,18 @@ impl GraphIndex {
         let mut scratch = QueryScratch::new(n);
         let probes = probe_ids(n, params, &mut scratch);
         let p = probes.len();
+        // Norm-trick probe tile: ‖q‖² per batch row, ‖y‖² from the
+        // index, register-tiled dot products for the whole query×probe
+        // tile — the GEMM-style batch kernel.
+        let qnorms: Vec<f32> = (0..queries.n()).map(|qi| sq_norm(queries.row(qi))).collect();
         let mut probe_dists = vec![0f32; queries.n() * p];
-        cross_blocked(queries, &self.data, &probes, &mut probe_dists);
+        dispatch::cross_norms(queries, &qnorms, &self.data, &self.norms, &probes, &mut probe_dists);
         let mut results = Vec::with_capacity(queries.n());
-        let mut agg = BatchStats { queries: queries.n(), ..Default::default() };
+        let mut agg = BatchStats {
+            queries: queries.n(),
+            kernel: dispatch::active_width().name(),
+            ..Default::default()
+        };
         for qi in 0..queries.n() {
             let (res, stats) = self.search_core(
                 queries.row(qi),
@@ -528,6 +602,8 @@ mod tests {
         assert_eq!(agg.dist_evals, 0);
         assert_eq!(agg.qps(), 0.0);
         assert_eq!(agg.dist_evals_per_query(), 0.0);
+        // batches are tagged with the kernel width that served them
+        assert_eq!(agg.kernel, crate::distance::dispatch::active_width().name());
     }
 
     #[test]

@@ -13,7 +13,8 @@
 //! n        8 B   u64  points
 //! dim      8 B   u64  logical dimensionality
 //! k        8 B   u64  neighbors per node in the stored graph
-//! flags    8 B   u64  bit 0: reordering present
+//! flags    8 B   u64  bit 0: reordering present · bit 1: norms present
+//!                bits 8–15: SIMD lane count the norms were computed at
 //! params  64 B   build parameters:
 //!                k, max_iters, seed, reorder_iter, max_candidates (u64)
 //!                rho, delta (f64)
@@ -23,8 +24,19 @@
 //! data     n·dim·4 B f32 row-major logical rows (padding rebuilt on load)
 //! sigma    n·4 B  u32 node → working position   (iff flags bit 0)
 //! inv      n·4 B  u32 working position → node   (iff flags bit 0)
+//! norms    n·4 B  f32 per-row squared corpus norms (iff flags bit 1)
 //! crc      8 B   FNV-1a over everything above
 //! ```
+//!
+//! The norms section feeds the serving layer's norm-trick probe
+//! kernels. It is optional so every pre-existing `KNNIv1` file stays
+//! loadable: when the flag is absent, [`IndexBundle::into_index`]
+//! recomputes the norms from the data section at the active kernel
+//! width. Norm values depend on the summation order of the kernel
+//! width that produced them, so the width is recorded in flags bits
+//! 8–15 and the loader *discards* stored norms computed at a different
+//! width than the active one (recomputing preserves the exact-zero
+//! self-distance guarantee of the norm-trick path across machines).
 //!
 //! Like `KNNGv1`, a bundle is a finished artifact, not a resumable
 //! build: graph flags/counters are rebuilt on load.
@@ -41,6 +53,11 @@ use std::path::Path;
 
 const MAGIC: &[u8; 8] = b"KNNIv1\0\0";
 const FLAG_REORDERING: u64 = 1;
+const FLAG_NORMS: u64 = 2;
+/// Bits 8–15 of `flags`: lane count of the kernel width the norms
+/// section was computed at (1 = scalar, 8, 16; 0 only in legacy files).
+const FLAG_NORM_LANES_SHIFT: u64 = 8;
+const FLAG_NORM_LANES_MASK: u64 = 0xFF << FLAG_NORM_LANES_SHIFT;
 
 /// A loaded (or about-to-be-saved) index bundle. `data` and `graph`
 /// share one id space — the *working* layout of the build, so a served
@@ -55,6 +72,13 @@ pub struct IndexBundle {
     pub reordering: Option<Reordering>,
     /// Parameters the graph was built with.
     pub params: Params,
+    /// Per-row squared corpus norms for the norm-trick serving path
+    /// (absent in legacy bundles; recomputed by
+    /// [`into_index`](Self::into_index)).
+    pub norms: Option<Vec<f32>>,
+    /// Lane count of the kernel width `norms` was computed at
+    /// (0 when `norms` is `None`).
+    pub norm_lanes: usize,
 }
 
 impl IndexBundle {
@@ -63,18 +87,27 @@ impl IndexBundle {
     /// it is permuted into the working layout when the build reordered.
     pub fn from_build(data_original: &AlignedMatrix, result: &BuildResult, params: &Params) -> Self {
         let data = result.working_data_ref(data_original);
+        let norms = Some(GraphIndex::compute_norms(&data));
+        let norm_lanes = crate::distance::dispatch::active_width().lanes();
         Self {
             data,
             graph: result.graph.clone(),
             reordering: result.reordering.clone(),
             params: params.clone(),
+            norms,
+            norm_lanes,
         }
     }
 
     /// Turn the bundle into a servable index plus the id mapping and
-    /// build parameters.
+    /// build parameters. Norms absent from the bundle (legacy files)
+    /// are recomputed here.
     pub fn into_index(self) -> (GraphIndex, Option<Reordering>, Params) {
-        (GraphIndex::new(self.data, self.graph), self.reordering, self.params)
+        let index = match self.norms {
+            Some(norms) => GraphIndex::with_norms(self.data, self.graph, norms),
+            None => GraphIndex::new(self.data, self.graph),
+        };
+        (index, self.reordering, self.params)
     }
 
     /// Map a working-space result id back to the original dataset id.
@@ -124,23 +157,39 @@ fn decode_params(b: &[u8; 64]) -> Result<Params> {
 
 /// Serialize an index bundle.
 pub fn save_index(path: &Path, bundle: &IndexBundle) -> Result<()> {
-    save_index_parts(path, &bundle.data, &bundle.graph, bundle.reordering.as_ref(), &bundle.params)
+    save_index_parts(
+        path,
+        &bundle.data,
+        &bundle.graph,
+        bundle.reordering.as_ref(),
+        &bundle.params,
+        bundle.norms.as_deref().map(|ns| (ns, bundle.norm_lanes)),
+    )
 }
 
 /// Serialize an index bundle from borrowed components (avoids cloning
 /// the data matrix when the caller — e.g. `api::Index::save` — owns the
-/// parts separately).
+/// parts separately). `norms` pairs the per-row squared norms with the
+/// lane count of the kernel width that *computed* them (the tag the
+/// loader's width-mismatch guard trusts — pass the recorded width, not
+/// the current one). Passing `None` writes the legacy layout without a
+/// norms section (the loader recomputes them).
 pub fn save_index_parts(
     path: &Path,
     data: &AlignedMatrix,
     graph: &KnnGraph,
     reordering: Option<&Reordering>,
     params: &Params,
+    norms: Option<(&[f32], usize)>,
 ) -> Result<()> {
     assert_eq!(data.n(), graph.n(), "bundle graph/data size mismatch");
     if let Some(r) = reordering {
         r.validate().map_err(|e| anyhow::anyhow!("invalid reordering: {e}"))?;
         assert_eq!(r.sigma.len(), data.n(), "reordering length mismatch");
+    }
+    if let Some((ns, lanes)) = norms {
+        assert_eq!(ns.len(), data.n(), "norms length mismatch");
+        assert!(lanes > 0 && lanes <= 0xFF, "implausible norm lane count {lanes}");
     }
     let f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(f);
@@ -154,7 +203,16 @@ pub fn save_index_parts(
     emit(&mut w, &(data.n() as u64).to_le_bytes())?;
     emit(&mut w, &(data.dim() as u64).to_le_bytes())?;
     emit(&mut w, &(graph.k() as u64).to_le_bytes())?;
-    let flags = if reordering.is_some() { FLAG_REORDERING } else { 0 };
+    let mut flags = 0u64;
+    if reordering.is_some() {
+        flags |= FLAG_REORDERING;
+    }
+    if let Some((_, lanes)) = norms {
+        // norm values are summation-order-dependent: record the width
+        // that computed them so a different-width loader recomputes
+        flags |= FLAG_NORMS;
+        flags |= (lanes as u64) << FLAG_NORM_LANES_SHIFT;
+    }
     emit(&mut w, &flags.to_le_bytes())?;
     emit(&mut w, &encode_params(params))?;
     for u in 0..graph.n() {
@@ -181,6 +239,11 @@ pub fn save_index_parts(
         }
         for &p in &r.inv {
             emit(&mut w, &p.to_le_bytes())?;
+        }
+    }
+    if let Some((ns, _)) = norms {
+        for &x in ns {
+            emit(&mut w, &x.to_le_bytes())?;
         }
     }
     w.write_all(&crc.0.to_le_bytes())?;
@@ -232,7 +295,7 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
     if n.checked_mul(dim).is_none() || n * dim > (1 << 36) {
         bail!("implausible data size: n={n}, dim={dim}");
     }
-    if flags & !FLAG_REORDERING != 0 {
+    if flags & !(FLAG_REORDERING | FLAG_NORMS | FLAG_NORM_LANES_MASK) != 0 {
         bail!("unknown flag bits {flags:#x}");
     }
 
@@ -242,10 +305,12 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
     // allocations below to absurd sizes before the CRC could object.
     let actual = std::fs::metadata(path)?.len();
     let reorder_bytes = if flags & FLAG_REORDERING != 0 { 2 * n as u64 * 4 } else { 0 };
+    let norm_bytes = if flags & FLAG_NORMS != 0 { n as u64 * 4 } else { 0 };
     let expected = 8 + 32 + 64 // magic + header + params
         + 2 * (n as u64 * k as u64 * 4) // ids + dists
         + n as u64 * dim as u64 * 4 // data rows
         + reorder_bytes
+        + norm_bytes
         + 8; // crc
     if actual != expected {
         bail!(
@@ -302,6 +367,33 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
         None
     };
 
+    let norms = if flags & FLAG_NORMS != 0 {
+        let mut ns = vec![0f32; n];
+        for slot in ns.iter_mut() {
+            r.read_exact(&mut buf4)?;
+            crc.update(&buf4);
+            *slot = f32::from_le_bytes(buf4);
+        }
+        // Stored norms carry the summation order of the width that
+        // computed them. Keep them only when it matches the active
+        // width; otherwise drop the section (into_index recomputes) so
+        // the norm-trick path keeps its exact-zero self-distance
+        // guarantee on this machine.
+        let stored_lanes = ((flags & FLAG_NORM_LANES_MASK) >> FLAG_NORM_LANES_SHIFT) as usize;
+        if stored_lanes == crate::distance::dispatch::active_width().lanes() {
+            Some(ns)
+        } else {
+            None
+        }
+    } else {
+        None
+    };
+    let norm_lanes = if norms.is_some() {
+        ((flags & FLAG_NORM_LANES_MASK) >> FLAG_NORM_LANES_SHIFT) as usize
+    } else {
+        0
+    };
+
     let mut trailer = [0u8; 8];
     r.read_exact(&mut trailer).context("reading checksum")?;
     if u64::from_le_bytes(trailer) != crc.0 {
@@ -315,7 +407,7 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
     }
     let graph = crate::graph::io::rebuild_graph(n, k, &ids, &dists)?;
 
-    Ok(IndexBundle { data, graph, reordering, params })
+    Ok(IndexBundle { data, graph, reordering, params, norms, norm_lanes })
 }
 
 #[cfg(test)]
@@ -362,6 +454,53 @@ mod tests {
         let (rs, ls) = (bundle.reordering.as_ref().unwrap(), loaded.reordering.as_ref().unwrap());
         assert_eq!(rs.sigma, ls.sigma);
         assert_eq!(rs.inv, ls.inv);
+        // persisted norms come back bit-exact
+        let (ns, ln) = (bundle.norms.as_ref().unwrap(), loaded.norms.as_ref().unwrap());
+        assert_eq!(ns.len(), ln.len());
+        for (a, b) in ns.iter().zip(ln) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn legacy_bundle_without_norms_loads_and_serves_identically() {
+        // a file written without the norms section (every pre-norms
+        // KNNIv1 artifact) must load, recompute norms, and serve exactly
+        // like a with-norms bundle of the same build
+        let (bundle, data, _) = build_bundle(400, 31, true);
+        let with = tmp("with_norms.knni");
+        let without = tmp("without_norms.knni");
+        save_index(&with, &bundle).unwrap();
+        save_index_parts(
+            &without,
+            &bundle.data,
+            &bundle.graph,
+            bundle.reordering.as_ref(),
+            &bundle.params,
+            None,
+        )
+        .unwrap();
+        assert!(
+            std::fs::metadata(&with).unwrap().len()
+                > std::fs::metadata(&without).unwrap().len(),
+            "norms section must add bytes"
+        );
+        let legacy = load_index(&without).unwrap();
+        assert!(legacy.norms.is_none(), "legacy file carries no norms");
+        let (idx_legacy, _, _) = legacy.into_index();
+        let (idx_with, _, _) = load_index(&with).unwrap().into_index();
+        // recomputed norms equal persisted ones (same width, same data)
+        assert_eq!(idx_legacy.norms().len(), idx_with.norms().len());
+        for (a, b) in idx_legacy.norms().iter().zip(idx_with.norms()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        let sp = SearchParams::default();
+        for qi in (0..400).step_by(37) {
+            let (a, sa) = idx_legacy.search(data.row_logical(qi), 5, &sp);
+            let (b, sb) = idx_with.search(data.row_logical(qi), 5, &sp);
+            assert_eq!(a, b, "query {qi}");
+            assert_eq!(sa, sb);
+        }
     }
 
     #[test]
@@ -395,6 +534,37 @@ mod tests {
             let top = IndexBundle::original_id(&reordering, res[0].0);
             assert_eq!(top as usize, qi, "self hit must map back to original id");
             assert!(res[0].1 < 1e-6);
+        }
+    }
+
+    #[test]
+    fn norms_from_a_different_kernel_width_are_discarded_on_load() {
+        // simulate a bundle written on a machine with another active
+        // width: patch the recorded lane count in the flags word (and
+        // refresh the CRC) — the loader must drop the stored norms and
+        // serve from recomputed ones, identically to a legacy bundle
+        let (bundle, data, _) = build_bundle(300, 41, false);
+        let path = tmp("xwidth.knni");
+        save_index(&path, &bundle).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let lanes_off = 33; // flags u64 at 32..40, lane count in byte 1
+        let other = if bytes[lanes_off] == 16 { 8 } else { 16 };
+        bytes[lanes_off] = other;
+        let mut crc = Fnv::new();
+        crc.update(&bytes[..bytes.len() - 8]);
+        let crc_off = bytes.len() - 8;
+        bytes[crc_off..].copy_from_slice(&crc.0.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+
+        let loaded = load_index(&path).unwrap();
+        assert!(loaded.norms.is_none(), "foreign-width norms must be dropped");
+        let (idx, _, _) = loaded.into_index();
+        let (orig, _, _) = bundle.into_index();
+        let sp = SearchParams::default();
+        for qi in (0..300).step_by(41) {
+            let (a, _) = orig.search(data.row_logical(qi), 5, &sp);
+            let (b, _) = idx.search(data.row_logical(qi), 5, &sp);
+            assert_eq!(a, b, "query {qi}");
         }
     }
 

@@ -2,14 +2,17 @@
 //! what downstream consumers (UMAP and friends, §1 of the paper) do
 //! with the graph once NN-Descent has produced it.
 //!
-//! * [`GraphIndex`] wraps the finished graph + data and answers queries
-//!   with the standard greedy beam search (best-first expansion over the
-//!   graph with a bounded candidate pool, PyNNDescent-style), one query
-//!   at a time ([`GraphIndex::search`]) or as a batch tiled through the
-//!   blocked distance kernels ([`GraphIndex::search_batch`]).
+//! * [`GraphIndex`] wraps the finished graph + data (plus precomputed
+//!   per-row corpus norms for the norm-trick probe kernels) and answers
+//!   queries with the standard greedy beam search (best-first expansion
+//!   over the graph with a bounded candidate pool, PyNNDescent-style),
+//!   one query at a time ([`GraphIndex::search`]) or as a batch tiled
+//!   through the dispatched blocked kernels
+//!   ([`GraphIndex::search_batch`]).
 //! * [`IndexBundle`] + [`save_index`]/[`load_index`] persist everything
 //!   a serving process needs — graph, aligned data matrix, reordering,
-//!   build parameters — as one checksummed `KNNIv1` artifact.
+//!   corpus norms, build parameters — as one checksummed `KNNIv1`
+//!   artifact (pre-norms bundles load fine; norms are recomputed).
 
 pub mod beam;
 pub mod bundle;

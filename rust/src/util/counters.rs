@@ -14,12 +14,23 @@ pub struct FlopCounter {
     /// Dimensionality used to convert evaluations to flops (logical d,
     /// not the padded width — padding lanes multiply zeros).
     pub dim: u64,
+    /// Distance-kernel width the counted evaluations ran on (`scalar` /
+    /// `w8` / `w16`; stamped at construction from the active dispatch,
+    /// empty only for default-constructed counters). Surfaced by
+    /// `RunReport` and the bench JSON artifacts so perf numbers always
+    /// say which kernel produced them.
+    pub kernel: &'static str,
 }
 
 impl FlopCounter {
-    /// New counter for data of logical dimensionality `dim`.
+    /// New counter for data of logical dimensionality `dim`, tagged
+    /// with the active distance-kernel width.
     pub fn new(dim: usize) -> Self {
-        Self { dist_evals: 0, dim: dim as u64 }
+        Self {
+            dist_evals: 0,
+            dim: dim as u64,
+            kernel: crate::distance::dispatch::active_width().name(),
+        }
     }
 
     /// Record `k` distance evaluations.
@@ -82,8 +93,9 @@ mod tests {
         c.add_evals(10);
         assert_eq!(c.flops_per_eval(), 23);
         assert_eq!(c.flops(), 230);
+        assert!(!c.kernel.is_empty(), "counters are tagged with the kernel width");
 
-        let c = FlopCounter { dist_evals: 1, dim: 784 };
+        let c = FlopCounter { dist_evals: 1, dim: 784, ..Default::default() };
         assert_eq!(c.flops(), 3 * 784 - 1);
     }
 
