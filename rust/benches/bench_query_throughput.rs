@@ -10,7 +10,7 @@
 //!
 //! Run: `cargo bench --bench bench_query_throughput`
 
-use knng::api::{IndexBuilder, Searcher, ShardedSearcher};
+use knng::api::{FrontConfig, IndexBuilder, Searcher, ServeFront, ShardPool, ShardedSearcher};
 use knng::bench::{full_scale, measure_once, write_bench_json, Json, Table};
 use knng::dataset::clustered::SynthClustered;
 use knng::dataset::AlignedMatrix;
@@ -209,6 +209,95 @@ fn main() {
         ("searcher", Json::s("S=4")),
     ]));
     wtable.finish();
+
+    // ---- thread-per-shard serving (api::serve::ShardPool) ----
+    // Full-batch fan-out over the same 4 shards at 1/2/4 worker
+    // threads. The pool must stay bit-identical to the inline fan-out
+    // at every thread count (asserted here, not just eyeballed); the
+    // speedup column shows what threading actually buys on this CPU.
+    let (sharded_full, _) = sharded.search_batch(&qmat, k, &sp);
+    let mut ttable = Table::new(
+        "query_throughput_threaded",
+        &["searcher", "threads", "qps", "vs 1 thread", "bit-identical"],
+    );
+    let mut one_thread_qps = 0.0;
+    for threads in [1usize, 2, 4] {
+        let pool = ShardPool::new(&sharded, threads).unwrap();
+        let (res, pstats) = pool.search_batch(&qmat, k, &sp);
+        knng::testing::assert_neighbors_bitwise_eq(
+            &sharded_full,
+            &res,
+            &format!("threads={threads}"),
+        );
+        if threads == 1 {
+            one_thread_qps = pstats.qps();
+        }
+        ttable.row(&[
+            "S=4 pool".into(),
+            format!("{threads}"),
+            format!("{:.0}", pstats.qps()),
+            format!("{:.2}x", pstats.qps() / one_thread_qps.max(1e-12)),
+            "yes".into(),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("kernel", Json::s(pstats.kernel)),
+            ("qps", Json::Num(pstats.qps())),
+            ("evals_per_query", Json::Num(pstats.dist_evals_per_query())),
+            ("recall", Json::Num(sharded_recall)),
+            ("ef", Json::Int(sp.ef as u64)),
+            ("batch", Json::Int(n_queries as u64)),
+            ("searcher", Json::s("S=4 pool")),
+            ("threads", Json::Int(threads as u64)),
+        ]));
+    }
+
+    // ---- micro-batching front-end (api::front::ServeFront) ----
+    // Queries submitted one at a time, coalesced into windows — the
+    // serving-edge view of the same pool (per-query results identical
+    // to the batched path by construction; here we measure the
+    // amortization the window buys over truly individual dispatch).
+    let pool = ShardPool::new(&sharded, 4).unwrap();
+    let front = ServeFront::spawn(
+        pool,
+        dim,
+        FrontConfig {
+            k,
+            params: sp,
+            max_batch: 256,
+            max_wait: std::time::Duration::from_micros(200),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (front_totals, front_secs) = measure_once(|| {
+        let tickets: Vec<_> = (0..n_queries)
+            .map(|qi| front.submit(qmat.row_logical(qi).to_vec()).unwrap())
+            .collect();
+        for ticket in tickets {
+            ticket.wait().unwrap();
+        }
+        front.stats()
+    });
+    let front_qps = n_queries as f64 / front_secs;
+    ttable.row(&[
+        "S=4 front".into(),
+        "4".into(),
+        format!("{front_qps:.0}"),
+        format!("{:.2}x", front_qps / one_thread_qps.max(1e-12)),
+        format!("{} windows", front_totals.windows),
+    ]);
+    json_rows.push(Json::obj(vec![
+        ("kernel", Json::s(dispatch::active_width().name())),
+        ("qps", Json::Num(front_qps)),
+        ("ef", Json::Int(sp.ef as u64)),
+        ("batch", Json::Int(n_queries as u64)),
+        ("searcher", Json::s("S=4 front")),
+        ("threads", Json::Int(4)),
+        ("windows", Json::Int(front_totals.windows)),
+        ("coalesced", Json::Int(front_totals.coalesced)),
+    ]));
+    drop(front);
+    ttable.finish();
 
     write_bench_json(
         "BENCH_query.json",

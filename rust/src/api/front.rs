@@ -1,0 +1,339 @@
+//! Micro-batching query front-end: individual queries in, batched
+//! execution underneath — the serving edge for the "heavy traffic"
+//! north star.
+//!
+//! [`ServeFront`] owns a [`Searcher`] (typically a
+//! [`ShardPool`](super::ShardPool)) on a dispatcher thread behind a
+//! **bounded** submission queue. Callers [`submit`](ServeFront::submit)
+//! one query at a time and get a [`QueryTicket`] to wait on; the
+//! dispatcher coalesces arrivals into windows:
+//!
+//! * a window opens when the first request arrives and closes after
+//!   [`FrontConfig::max_wait`] or once [`FrontConfig::max_batch`]
+//!   requests are queued, whichever comes first — the batch-amortization
+//!   trade (a bounded latency tax buys the batch path's tile kernels);
+//! * requests with **identical query bytes** (`f32` bit patterns) in
+//!   one window are answered by a single execution and the result is
+//!   fanned back to every submitter (duplicate-query coalescing);
+//! * the window's unique queries run through one
+//!   [`Searcher::search_batch`] call.
+//!
+//! Because the batch path is bit-equal to the sequential path per query
+//! (and per-query results never depend on what else shares the batch),
+//! **window composition cannot change any caller's answer**: a query
+//! returns the same neighbors whether it rode alone, shared a window
+//! with 63 strangers, or was deduplicated against an identical twin.
+//! That invariant is what makes micro-batching transparent, and it is
+//! pinned by the serve-stack integration tests.
+
+use super::ids::Neighbor;
+use super::searcher::Searcher;
+use crate::dataset::AlignedMatrix;
+use crate::search::SearchParams;
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+/// Batching-window and queue knobs for a [`ServeFront`]. `k` and
+/// `params` are fixed per front: every query in a window shares one
+/// `search_batch` call, so they must agree on the search configuration.
+#[derive(Debug, Clone)]
+pub struct FrontConfig {
+    /// Neighbors returned per query.
+    pub k: usize,
+    /// Search parameters applied to every query.
+    pub params: SearchParams,
+    /// Maximum requests coalesced into one window (≥ 1).
+    pub max_batch: usize,
+    /// Maximum time a window stays open after its first request.
+    pub max_wait: Duration,
+    /// Capacity of the bounded submission queue; a full queue makes
+    /// [`ServeFront::submit`] block (backpressure, not unbounded memory).
+    pub queue_depth: usize,
+}
+
+impl Default for FrontConfig {
+    fn default() -> Self {
+        Self {
+            k: 10,
+            params: SearchParams::default(),
+            max_batch: 64,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 1024,
+        }
+    }
+}
+
+/// One submitted query awaiting dispatch.
+struct Request {
+    query: Vec<f32>,
+    reply: mpsc::Sender<Served>,
+}
+
+/// A served answer: the neighbors plus how the window treated the query.
+#[derive(Debug, Clone)]
+pub struct Served {
+    /// The k nearest neighbors, ascending by (distance, original id).
+    pub neighbors: Vec<Neighbor>,
+    /// Shape of the window this query rode in.
+    pub window: WindowInfo,
+}
+
+/// Diagnostics about one batching window, from a caller's perspective.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WindowInfo {
+    /// Requests coalesced into the window (including this one).
+    pub requests: usize,
+    /// Unique query vectors actually executed.
+    pub unique: usize,
+    /// True when this query shared its execution with an identical
+    /// twin (duplicate-query coalescing fired for it).
+    pub coalesced: bool,
+}
+
+/// Running totals across a front's lifetime (monotonic counters).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FrontStats {
+    /// Batching windows executed.
+    pub windows: u64,
+    /// Requests answered.
+    pub queries: u64,
+    /// Requests answered from another request's execution
+    /// (`queries - coalesced` executions actually hit the searcher).
+    pub coalesced: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    windows: AtomicU64,
+    queries: AtomicU64,
+    coalesced: AtomicU64,
+}
+
+/// Handle for one submitted query; [`wait`](QueryTicket::wait) blocks
+/// until the window it lands in has been served.
+pub struct QueryTicket {
+    rx: mpsc::Receiver<Served>,
+}
+
+impl QueryTicket {
+    /// Block until the answer arrives. Errors only if the front shut
+    /// down before serving this query.
+    pub fn wait(self) -> crate::Result<Served> {
+        self.rx.recv().map_err(|_| anyhow::anyhow!("serve front shut down before answering"))
+    }
+}
+
+/// The micro-batching front-end. Dropping it (or calling
+/// [`shutdown`](ServeFront::shutdown)) drains the dispatcher and joins
+/// its thread; already-queued queries are still served.
+pub struct ServeFront {
+    tx: Option<mpsc::SyncSender<Request>>,
+    handle: Option<JoinHandle<()>>,
+    dim: usize,
+    counters: Arc<Counters>,
+}
+
+impl ServeFront {
+    /// Move `searcher` onto a dispatcher thread serving queries of
+    /// logical dimensionality `dim` under `cfg`.
+    pub fn spawn<S: Searcher + Send + 'static>(
+        searcher: S,
+        dim: usize,
+        cfg: FrontConfig,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(dim >= 1, "queries must have at least one dimension");
+        anyhow::ensure!(cfg.max_batch >= 1, "max_batch must be at least 1");
+        anyhow::ensure!(cfg.queue_depth >= 1, "queue_depth must be at least 1");
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+        let counters = Arc::new(Counters::default());
+        let thread_counters = Arc::clone(&counters);
+        let handle = std::thread::Builder::new()
+            .name("knng-serve-front".into())
+            .spawn(move || dispatch_loop(searcher, dim, cfg, rx, thread_counters))?;
+        Ok(Self { tx: Some(tx), handle: Some(handle), dim, counters })
+    }
+
+    /// Enqueue one query (length must equal the front's logical `dim`).
+    /// Blocks while the submission queue is full; errors if the query
+    /// has the wrong arity or the dispatcher is gone.
+    pub fn submit(&self, query: Vec<f32>) -> crate::Result<QueryTicket> {
+        anyhow::ensure!(
+            query.len() == self.dim,
+            "query length {} does not match front dim {}",
+            query.len(),
+            self.dim
+        );
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("sender present until shutdown")
+            .send(Request { query, reply })
+            .map_err(|_| anyhow::anyhow!("serve front dispatcher is gone"))?;
+        Ok(QueryTicket { rx })
+    }
+
+    /// Snapshot of the running totals.
+    pub fn stats(&self) -> FrontStats {
+        FrontStats {
+            windows: self.counters.windows.load(Ordering::Relaxed),
+            queries: self.counters.queries.load(Ordering::Relaxed),
+            coalesced: self.counters.coalesced.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Stop accepting queries, drain what is queued, join the
+    /// dispatcher, and return the final totals.
+    pub fn shutdown(mut self) -> FrontStats {
+        self.close();
+        self.stats()
+    }
+
+    fn close(&mut self) {
+        self.tx = None; // disconnects the queue → dispatcher drains and exits
+        if let Some(handle) = self.handle.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
+impl Drop for ServeFront {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+/// Dispatcher body: open a window on the first arrival, close it on
+/// `max_wait`/`max_batch`, serve, repeat until the queue disconnects.
+fn dispatch_loop<S: Searcher>(
+    searcher: S,
+    dim: usize,
+    cfg: FrontConfig,
+    rx: mpsc::Receiver<Request>,
+    counters: Arc<Counters>,
+) {
+    loop {
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // queue disconnected and empty: shutdown
+        };
+        let mut window = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while window.len() < cfg.max_batch {
+            let Some(left) = deadline.checked_duration_since(Instant::now()) else { break };
+            match rx.recv_timeout(left) {
+                Ok(r) => window.push(r),
+                Err(mpsc::RecvTimeoutError::Timeout) => break,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        serve_window(&searcher, dim, &cfg, window, &counters);
+    }
+}
+
+/// The window plan: `assign[i]` is the index into `unique` answering
+/// request `i`; `unique` holds request indices in first-arrival order.
+struct WindowPlan {
+    assign: Vec<usize>,
+    unique: Vec<usize>,
+}
+
+/// Deduplicate a window by exact query bytes (`f32` bit patterns, so
+/// `-0.0`/`0.0` and NaN payloads are distinct — byte semantics, not
+/// float semantics). Pure, deterministic: first arrival of each
+/// distinct query executes, later twins coalesce onto it.
+fn plan_window(rows: &[&[f32]]) -> WindowPlan {
+    let mut seen: HashMap<Vec<u32>, usize> = HashMap::with_capacity(rows.len());
+    let mut assign = Vec::with_capacity(rows.len());
+    let mut unique = Vec::new();
+    for (i, row) in rows.iter().enumerate() {
+        let key: Vec<u32> = row.iter().map(|x| x.to_bits()).collect();
+        match seen.entry(key) {
+            Entry::Occupied(e) => assign.push(*e.get()),
+            Entry::Vacant(e) => {
+                e.insert(unique.len());
+                assign.push(unique.len());
+                unique.push(i);
+            }
+        }
+    }
+    WindowPlan { assign, unique }
+}
+
+fn serve_window<S: Searcher>(
+    searcher: &S,
+    dim: usize,
+    cfg: &FrontConfig,
+    window: Vec<Request>,
+    counters: &Counters,
+) {
+    let rows: Vec<&[f32]> = window.iter().map(|r| r.query.as_slice()).collect();
+    let plan = plan_window(&rows);
+    let flat: Vec<f32> =
+        plan.unique.iter().flat_map(|&i| window[i].query.iter().copied()).collect();
+    let tile = AlignedMatrix::from_rows(plan.unique.len(), dim, &flat);
+    let (results, _stats) = searcher.search_batch(&tile, cfg.k, &cfg.params);
+
+    let mut fanout = vec![0usize; plan.unique.len()];
+    for &u in &plan.assign {
+        fanout[u] += 1;
+    }
+    counters.windows.fetch_add(1, Ordering::Relaxed);
+    counters.queries.fetch_add(window.len() as u64, Ordering::Relaxed);
+    counters
+        .coalesced
+        .fetch_add((window.len() - plan.unique.len()) as u64, Ordering::Relaxed);
+
+    let info_base = (window.len(), plan.unique.len());
+    for (req, u) in window.into_iter().zip(plan.assign) {
+        // a dead receiver just means the caller stopped waiting
+        let _ = req.reply.send(Served {
+            neighbors: results[u].clone(),
+            window: WindowInfo {
+                requests: info_base.0,
+                unique: info_base.1,
+                coalesced: fanout[u] > 1,
+            },
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_window_coalesces_exact_duplicates_only() {
+        let a = [1.0f32, 2.0];
+        let a2 = [1.0f32, 2.0];
+        let b = [1.0f32, 2.5];
+        let c = [-0.0f32, 2.0];
+        let d = [0.0f32, 2.0];
+        let plan = plan_window(&[&a, &b, &a2, &c, &d, &b]);
+        // uniques in first-arrival order: a, b, c, d
+        assert_eq!(plan.unique, vec![0, 1, 3, 4]);
+        // a2 coalesces onto a, the second b onto the first; -0.0 ≠ 0.0
+        // under byte semantics
+        assert_eq!(plan.assign, vec![0, 1, 0, 2, 3, 1]);
+    }
+
+    #[test]
+    fn plan_window_identity_when_all_distinct() {
+        let rows: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32, 1.0]).collect();
+        let slices: Vec<&[f32]> = rows.iter().map(|r| r.as_slice()).collect();
+        let plan = plan_window(&slices);
+        assert_eq!(plan.unique, vec![0, 1, 2, 3, 4]);
+        assert_eq!(plan.assign, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let cfg = FrontConfig::default();
+        assert!(cfg.max_batch >= 1);
+        assert!(cfg.queue_depth >= 1);
+        assert!(cfg.max_wait > Duration::ZERO);
+    }
+}

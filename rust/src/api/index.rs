@@ -255,6 +255,14 @@ impl Index {
         }
     }
 
+    /// Decompose into the serving core + σ — what
+    /// [`ShardedSearcher::from_index`](super::ShardedSearcher::from_index)
+    /// uses to re-wrap a loaded bundle as a single shard (name, dataset,
+    /// and telemetry are presentation-only and dropped).
+    pub(crate) fn into_core_parts(self) -> (GraphIndex, Option<Reordering>) {
+        (self.core, self.reordering)
+    }
+
     /// Decompose back into a [`BuildResult`] (graph in working space +
     /// σ + telemetry), dropping the data matrix. Exists for the
     /// deprecated `pipeline` shims; facade users should not need it.
@@ -300,9 +308,23 @@ impl Searcher for Index {
 
 impl Index {
     fn map_results(&self, raw: Vec<(u32, f32)>) -> Vec<Neighbor> {
-        raw.into_iter()
+        let mut out: Vec<Neighbor> = raw
+            .into_iter()
             .map(|(v, d)| Neighbor { id: self.to_original(WorkingId(v)), dist: d })
-            .collect()
+            .collect();
+        // Canonical boundary order is (distance, original id). The beam
+        // core breaks distance ties by *working* id — an internal
+        // artifact of σ — so a reordered index must re-sort after the
+        // id mapping or tied neighbors would surface in layout order
+        // (and diverge from the sharded/threaded serving paths, which
+        // all merge by original id). Without σ the spaces coincide and
+        // the list is already in canonical order.
+        if self.reordering.is_some() {
+            out.sort_unstable_by(|a, b| {
+                a.dist.total_cmp(&b.dist).then(a.id.get().cmp(&b.id.get()))
+            });
+        }
+        out
     }
 }
 
@@ -349,6 +371,35 @@ mod tests {
             for (g, e) in got.iter().zip(&expect[u]) {
                 assert_eq!((g.id.get(), g.dist.to_bits()), (e.0, e.1.to_bits()), "node {u}");
             }
+        }
+    }
+
+    #[test]
+    fn reordered_index_breaks_distance_ties_by_original_id() {
+        // two copies of each base point: every query has an exact-tie
+        // pair. A reordered build must still answer ties in original-id
+        // order (the canonical boundary order every serving path —
+        // Index, ShardedSearcher, ShardPool — shares), not in σ's
+        // working-layout order.
+        let dim = 8;
+        let rows: Vec<f32> = (0..20)
+            .flat_map(|i| {
+                let j = (i % 10) as f32;
+                (0..dim).map(move |c| j * 10.0 + c as f32)
+            })
+            .collect();
+        let data = AlignedMatrix::from_rows(20, dim, &rows);
+        let params = Params::default().with_k(4).with_seed(5).with_reorder(true);
+        let result = crate::nndescent::NnDescent::new(params.clone()).build(&data).unwrap();
+        let idx = Index::from_build(data.clone(), result, params, "t".into(), "dup".into());
+        assert!(idx.is_reordered());
+
+        // exhaustive search (probe everything, pool holds everything)
+        let sp = SearchParams { ef: 20, probes: 20, ..Default::default() };
+        for j in 0..10u32 {
+            let (res, _) = idx.search(data.row_logical(j as usize), 2, &sp);
+            assert_eq!(res[0], Neighbor::new(j, 0.0), "query {j}: lower original id first");
+            assert_eq!(res[1], Neighbor::new(j + 10, 0.0), "query {j}: its twin second");
         }
     }
 

@@ -14,8 +14,12 @@
 //!   + σ + telemetry, persistable as a `KNNIv1` bundle.
 //! * [`Searcher`] — the serving trait (`search`, `search_batch`, stats)
 //!   implemented by [`Index`], by the underlying
-//!   [`GraphIndex`](crate::search::GraphIndex), and by
-//!   [`ShardedSearcher`].
+//!   [`GraphIndex`](crate::search::GraphIndex), by [`ShardedSearcher`],
+//!   and by the thread-per-shard [`ShardPool`].
+//! * [`ShardPool`] / [`ServeFront`] — the concurrent serving runtime:
+//!   worker threads owning one shard group each (bit-identical to the
+//!   inline fan-out), fronted by a micro-batching queue that coalesces
+//!   individual queries (and exact duplicates) into batched windows.
 //!
 //! ## Id-space safety
 //!
@@ -61,15 +65,19 @@
 //! ```
 
 pub mod builder;
+pub mod front;
 pub mod ids;
 pub mod index;
 pub mod searcher;
+pub mod serve;
 pub mod sharded;
 
 pub use builder::IndexBuilder;
+pub use front::{FrontConfig, FrontStats, QueryTicket, Served, ServeFront, WindowInfo};
 pub use ids::{Neighbor, OriginalId, WorkingId};
 pub use index::{BuildTelemetry, Index};
 pub use searcher::Searcher;
+pub use serve::ShardPool;
 pub use sharded::ShardedSearcher;
 
 // The observer types live beside the driver that emits them

@@ -1,0 +1,321 @@
+//! Thread-per-shard serving: the concurrent execution layer under the
+//! facade — the first multi-threaded code path in the crate.
+//!
+//! [`ShardPool`] takes the S independently-built shards of a
+//! [`ShardedSearcher`] and pins them to `T ≤ S` long-lived worker
+//! threads (contiguous groups, so worker `w` owns shards
+//! `[w·S/T, (w+1)·S/T)`). Each worker has **exclusive ownership** of
+//! its shards' search scratch ([`GraphIndex::scratch`]) — the probe
+//! path's buffers are per-worker state, never shared — so workers need
+//! no locks: a query batch is fanned out over per-worker channels, each
+//! worker runs its shards' batch searches back to back, and the pool
+//! merges the per-shard top-k lists into the global top-k.
+//!
+//! ## Bit-equality with the single-threaded fan-out
+//!
+//! The pool's results are **bit-identical** to
+//! `ShardedSearcher::search_batch` for every (S, T) combination:
+//!
+//! * each shard runs the *same* computation it runs in the sequential
+//!   fan-out (same probe sequence, same scratch-reset discipline, same
+//!   kernels at the same width);
+//! * per-shard replies are keyed by shard index and re-assembled in
+//!   slice order before merging, so arrival order is irrelevant;
+//! * the merge comparator (`ShardedSearcher::merge`) is a total order
+//!   on (distance, global id), which never repeats across shards.
+//!
+//! Aggregate `dist_evals`/`expansions` are exact sums and match the
+//! sequential fan-out too; only wall-clock (`secs`) differs. This is
+//! the parallel-streams decomposition of NN-Descent serving: shard
+//! searches share no state, so threading them changes nothing but
+//! latency.
+//!
+//! [`GraphIndex::scratch`]: crate::search::GraphIndex::scratch
+
+use super::ids::Neighbor;
+use super::searcher::Searcher;
+use super::sharded::{Shard, ShardedSearcher};
+use crate::dataset::AlignedMatrix;
+use crate::distance::dispatch;
+use crate::search::{BatchStats, QueryStats, SearchParams};
+use std::sync::{mpsc, Arc};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// One fan-out request to a worker: a shared query tile plus the reply
+/// channel the worker posts its per-shard answers to.
+struct Job {
+    queries: Arc<AlignedMatrix>,
+    k: usize,
+    params: SearchParams,
+    reply: mpsc::Sender<ShardReply>,
+}
+
+/// One shard's answer to a [`Job`], already mapped to global ids.
+struct ShardReply {
+    /// Index of the shard in slice order (the merge key).
+    shard: usize,
+    /// Per-query top-k candidates from this shard.
+    results: Vec<Vec<Neighbor>>,
+    dist_evals: u64,
+    expansions: u64,
+}
+
+/// A [`Searcher`] that executes shard fan-out on worker threads.
+/// Created over a borrowed [`ShardedSearcher`] (shards are shared via
+/// `Arc`, so the original stays usable — handy for A/B comparisons);
+/// dropping the pool shuts the workers down and joins them.
+pub struct ShardPool {
+    senders: Vec<mpsc::Sender<Job>>,
+    handles: Vec<JoinHandle<()>>,
+    n: usize,
+    dim: usize,
+    dim_pad: usize,
+    shard_count: usize,
+}
+
+impl ShardPool {
+    /// Spawn `threads` workers (clamped to the shard count — a worker
+    /// with nothing to own would be pure overhead) over `sharded`'s
+    /// shards. `threads == 1` is a valid degenerate pool: one worker
+    /// owning every shard, still bit-identical to the inline fan-out.
+    pub fn new(sharded: &ShardedSearcher, threads: usize) -> crate::Result<Self> {
+        anyhow::ensure!(threads >= 1, "need at least one worker thread");
+        let s = sharded.shard_count();
+        let t = threads.min(s);
+        let mut senders = Vec::with_capacity(t);
+        let mut handles = Vec::with_capacity(t);
+        for w in 0..t {
+            let lo = w * s / t;
+            let hi = (w + 1) * s / t;
+            let owned: Vec<(usize, Arc<Shard>)> =
+                (lo..hi).map(|i| (i, Arc::clone(&sharded.shards()[i]))).collect();
+            let (tx, rx) = mpsc::channel::<Job>();
+            let handle = std::thread::Builder::new()
+                .name(format!("knng-shard-{w}"))
+                .spawn(move || worker_loop(owned, rx))?;
+            senders.push(tx);
+            handles.push(handle);
+        }
+        let dim_pad = sharded.shards()[0].core.data().dim_pad();
+        Ok(Self {
+            senders,
+            handles,
+            n: Searcher::len(sharded),
+            dim: sharded.dim(),
+            dim_pad,
+            shard_count: s,
+        })
+    }
+
+    /// Number of worker threads actually running (≤ the requested
+    /// count, clamped to the shard count).
+    pub fn threads(&self) -> usize {
+        self.senders.len()
+    }
+
+    /// Number of shards served by the pool.
+    pub fn shard_count(&self) -> usize {
+        self.shard_count
+    }
+
+    /// Logical dimensionality of the corpus.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+}
+
+/// Worker body: serve jobs until every sender is gone. Each owned shard
+/// gets its own persistent scratch — allocated once here, reused for
+/// every batch this worker ever serves.
+fn worker_loop(owned: Vec<(usize, Arc<Shard>)>, rx: mpsc::Receiver<Job>) {
+    let mut scratch: Vec<_> = owned.iter().map(|(_, sh)| sh.core.scratch()).collect();
+    while let Ok(job) = rx.recv() {
+        for ((slot, shard), scr) in owned.iter().zip(scratch.iter_mut()) {
+            let (raw, stats) = shard.core.search_batch_with(&job.queries, job.k, &job.params, scr);
+            let results = raw.into_iter().map(|r| shard.map_results(r)).collect();
+            // a send error means the caller dropped its reply channel
+            // (e.g. panicked mid-collect); nothing useful to do but
+            // move on to the next job
+            let _ = job.reply.send(ShardReply {
+                shard: *slot,
+                results,
+                dist_evals: stats.dist_evals,
+                expansions: stats.expansions,
+            });
+        }
+    }
+}
+
+impl Searcher for ShardPool {
+    fn len(&self) -> usize {
+        self.n
+    }
+
+    fn search(
+        &self,
+        query: &[f32],
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Neighbor>, QueryStats) {
+        assert!(
+            query.len() == self.dim || query.len() == self.dim_pad,
+            "query length {} matches neither dim {} nor padded {}",
+            query.len(),
+            self.dim,
+            self.dim_pad
+        );
+        // a 1-row tile through the batch path: per-pair bit-equal to the
+        // sequential probe kernels, so this matches
+        // ShardedSearcher::search exactly (ids, distance bits, stats)
+        let qm = AlignedMatrix::from_rows(1, self.dim, &query[..self.dim]);
+        let (mut results, agg) = self.search_batch(&qm, k, params);
+        let only = results.pop().unwrap_or_default();
+        (only, QueryStats { dist_evals: agg.dist_evals, expansions: agg.expansions })
+    }
+
+    fn search_batch(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        // validate before fan-out: a bad tile must fail *this* call
+        // with the same message the inline path gives, not panic a
+        // worker thread and poison the pool for every other caller
+        assert_eq!(
+            queries.dim(),
+            self.dim,
+            "query batch dim {} does not match index dim {}",
+            queries.dim(),
+            self.dim
+        );
+        let t0 = Instant::now();
+        // one shared copy of the tile for all workers ('static for the
+        // worker threads; the copy is tiny next to the search work)
+        let tile = Arc::new(queries.clone());
+        let (tx, rx) = mpsc::channel::<ShardReply>();
+        for sender in &self.senders {
+            sender
+                .send(Job { queries: Arc::clone(&tile), k, params: *params, reply: tx.clone() })
+                .expect("shard worker exited before the pool was dropped");
+        }
+        drop(tx);
+
+        // collect exactly one reply per shard, slotted by shard index so
+        // arrival order cannot influence anything downstream
+        let mut per_shard: Vec<Option<ShardReply>> = Vec::new();
+        per_shard.resize_with(self.shard_count, || None);
+        for _ in 0..self.shard_count {
+            let reply = rx.recv().expect("shard worker died mid-batch");
+            per_shard[reply.shard] = Some(reply);
+        }
+
+        let mut agg = BatchStats {
+            queries: queries.n(),
+            kernel: dispatch::active_width().name(),
+            ..Default::default()
+        };
+        let mut merged: Vec<Vec<Neighbor>> = Vec::new();
+        merged.resize_with(queries.n(), || Vec::with_capacity(k * self.shard_count));
+        for slot in per_shard {
+            let reply = slot.expect("a shard never replied");
+            agg.dist_evals += reply.dist_evals;
+            agg.expansions += reply.expansions;
+            for (qi, r) in reply.results.into_iter().enumerate() {
+                merged[qi].extend(r);
+            }
+        }
+        let results = merged.into_iter().map(|all| ShardedSearcher::merge(all, k)).collect();
+        agg.secs = t0.elapsed().as_secs_f64();
+        (results, agg)
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        // disconnect every job channel, then join: workers exit their
+        // recv loop as soon as the senders are gone
+        self.senders.clear();
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::clustered::SynthClustered;
+    use crate::nndescent::Params;
+    use crate::testing::assert_neighbors_bitwise_eq;
+
+    fn corpus(n: usize, seed: u64) -> AlignedMatrix {
+        let (data, _) = SynthClustered::new(n, 8, 4, seed).generate_labeled();
+        data
+    }
+
+    #[test]
+    fn pool_matches_inline_fanout_bitwise() {
+        let data = corpus(400, 3);
+        let params = Params::default().with_k(8).with_seed(3);
+        let sharded = ShardedSearcher::build(&data, 4, &params).unwrap();
+        let sp = SearchParams::default();
+        let queries = AlignedMatrix::from_rows(
+            30,
+            data.dim(),
+            &(0..30).flat_map(|i| data.row_logical(i * 13).to_vec()).collect::<Vec<f32>>(),
+        );
+        let (expect, estats) = sharded.search_batch(&queries, 5, &sp);
+        for threads in [1usize, 2, 4, 9] {
+            let pool = ShardPool::new(&sharded, threads).unwrap();
+            assert_eq!(pool.threads(), threads.min(4));
+            assert_eq!(pool.shard_count(), 4);
+            assert_eq!(Searcher::len(&pool), 400);
+            let (got, gstats) = pool.search_batch(&queries, 5, &sp);
+            assert_neighbors_bitwise_eq(&expect, &got, &format!("threads={threads}"));
+            assert_eq!(estats.dist_evals, gstats.dist_evals);
+            assert_eq!(estats.expansions, gstats.expansions);
+        }
+    }
+
+    #[test]
+    fn pool_single_query_matches_sharded_search() {
+        let data = corpus(300, 5);
+        let params = Params::default().with_k(8).with_seed(5);
+        let sharded = ShardedSearcher::build(&data, 3, &params).unwrap();
+        let pool = ShardPool::new(&sharded, 2).unwrap();
+        let sp = SearchParams::default();
+        for qi in (0..300).step_by(37) {
+            let (a, sa) = sharded.search(data.row_logical(qi), 4, &sp);
+            let (b, sb) = pool.search(data.row_logical(qi), 4, &sp);
+            assert_neighbors_bitwise_eq(
+                std::slice::from_ref(&a),
+                std::slice::from_ref(&b),
+                &format!("query {qi}"),
+            );
+            assert_eq!(sa, sb, "query {qi} stats");
+        }
+    }
+
+    #[test]
+    fn empty_batch_is_fine() {
+        let data = corpus(120, 7);
+        let sharded =
+            ShardedSearcher::build(&data, 2, &Params::default().with_k(6).with_seed(7)).unwrap();
+        let pool = ShardPool::new(&sharded, 2).unwrap();
+        let queries = AlignedMatrix::zeroed(0, data.dim());
+        let (res, agg) = pool.search_batch(&queries, 5, &SearchParams::default());
+        assert!(res.is_empty());
+        assert_eq!(agg.queries, 0);
+        assert_eq!(agg.kernel, dispatch::active_width().name());
+    }
+
+    #[test]
+    fn rejects_zero_threads() {
+        let data = corpus(100, 9);
+        let sharded =
+            ShardedSearcher::build(&data, 2, &Params::default().with_k(6).with_seed(9)).unwrap();
+        assert!(ShardPool::new(&sharded, 0).is_err());
+    }
+}

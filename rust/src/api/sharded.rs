@@ -28,16 +28,20 @@ use crate::nndescent::observer::{BuildObserver, NoopObserver};
 use crate::nndescent::reorder::Reordering;
 use crate::nndescent::{BuildResult, Params};
 use crate::search::{BatchStats, GraphIndex, QueryStats, SearchParams};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// One shard: a graph over a contiguous slice of the corpus, plus the
 /// bookkeeping to map its working ids back to global original ids.
-struct Shard {
-    core: GraphIndex,
+/// Shards are held behind `Arc` so the thread-per-shard pool
+/// (`api::serve`) can hand each worker thread shared ownership of its
+/// shard without rebuilding or cloning the graph.
+pub(crate) struct Shard {
+    pub(crate) core: GraphIndex,
     /// Shard-local reorder permutation (iff the build reordered).
-    reordering: Option<Reordering>,
+    pub(crate) reordering: Option<Reordering>,
     /// First global row id of this shard's slice.
-    offset: u32,
+    pub(crate) offset: u32,
 }
 
 impl Shard {
@@ -52,7 +56,7 @@ impl Shard {
         OriginalId(self.offset + local)
     }
 
-    fn map_results(&self, raw: Vec<(u32, f32)>) -> Vec<Neighbor> {
+    pub(crate) fn map_results(&self, raw: Vec<(u32, f32)>) -> Vec<Neighbor> {
         raw.into_iter()
             .map(|(v, d)| Neighbor { id: self.to_global(WorkingId(v)), dist: d })
             .collect()
@@ -61,7 +65,7 @@ impl Shard {
 
 /// A [`Searcher`] over S independently-built shards.
 pub struct ShardedSearcher {
-    shards: Vec<Shard>,
+    shards: Vec<Arc<Shard>>,
     n: usize,
     dim: usize,
 }
@@ -120,13 +124,32 @@ impl ShardedSearcher {
             let result = super::builder::run_build(params, &shard_data, artifacts_dir, observer)?;
             let working = result.working_data(shard_data);
             let BuildResult { graph, reordering, .. } = result;
-            built.push(Shard {
+            built.push(Arc::new(Shard {
                 core: GraphIndex::new(working, graph),
                 reordering,
                 offset: lo as u32,
-            });
+            }));
         }
         Ok(Self { shards: built, n, dim: data.dim() })
+    }
+
+    /// Wrap one built (or bundle-loaded) [`Index`](super::Index) as a
+    /// single-shard searcher. Serving is bit-identical to the `Index`
+    /// itself (the shard's id mapping is exactly the index's σ⁻¹ with a
+    /// zero offset) — this is the bridge that lets the CLI put a loaded
+    /// `KNNIv1` bundle behind the thread-per-shard pool and the
+    /// micro-batching front-end.
+    pub fn from_index(index: super::Index) -> Self {
+        let n = index.len();
+        let dim = index.dim();
+        let (core, reordering) = index.into_core_parts();
+        Self { shards: vec![Arc::new(Shard { core, reordering, offset: 0 })], n, dim }
+    }
+
+    /// Shared handles to the shards, in slice order — what
+    /// [`ShardPool`](super::ShardPool) distributes over its workers.
+    pub(crate) fn shards(&self) -> &[Arc<Shard>] {
+        &self.shards
     }
 
     /// Number of shards.
@@ -145,12 +168,20 @@ impl ShardedSearcher {
     }
 
     /// Merge per-shard candidate lists into the global top-k: sort by
-    /// (distance, global id) — the same comparator the beam search's
-    /// final sort uses — and truncate. Stable, so with a single shard
-    /// the already-sorted input passes through unchanged.
-    fn merge(mut all: Vec<Neighbor>, k: usize) -> Vec<Neighbor> {
-        all.sort_by(|a, b| {
-            a.dist.partial_cmp(&b.dist).unwrap().then(a.id.get().cmp(&b.id.get()))
+    /// (distance, global id) and truncate.
+    ///
+    /// The comparator is **total** (`f32::total_cmp`, so a corrupt NaN
+    /// cannot panic the serving path; squared-L2 distances are never
+    /// `-0.0`, for which `total_cmp` would differ from `==`) and its key
+    /// is unique per entry (global ids never repeat across shards), so
+    /// the output is a pure function of the candidate *set*: equal
+    /// distances from different shards break by global id, never by
+    /// fan-out or arrival order. This is the invariant that lets the
+    /// thread-per-shard pool merge replies in whatever order workers
+    /// finish and still match the single-threaded fan-out bit for bit.
+    pub(crate) fn merge(mut all: Vec<Neighbor>, k: usize) -> Vec<Neighbor> {
+        all.sort_unstable_by(|a, b| {
+            a.dist.total_cmp(&b.dist).then(a.id.get().cmp(&b.id.get()))
         });
         all.truncate(k);
         all
@@ -257,5 +288,61 @@ mod tests {
             m,
             vec![Neighbor::new(1, 1.0), Neighbor::new(4, 1.0), Neighbor::new(9, 2.0)]
         );
+    }
+
+    #[test]
+    fn merge_is_independent_of_fanout_concatenation_order() {
+        // equal distances from different shards: the output depends only
+        // on the candidate set, never on which shard replied first
+        let base = vec![
+            Neighbor::new(9, 1.0),
+            Neighbor::new(1, 1.0),
+            Neighbor::new(5, 0.5),
+            Neighbor::new(3, 1.0),
+            Neighbor::new(7, 0.5),
+        ];
+        let expect = vec![Neighbor::new(5, 0.5), Neighbor::new(7, 0.5), Neighbor::new(1, 1.0)];
+        assert_eq!(ShardedSearcher::merge(base.clone(), 3), expect);
+        let mut reversed = base.clone();
+        reversed.reverse();
+        assert_eq!(ShardedSearcher::merge(reversed, 3), expect);
+        let mut rotated = base.clone();
+        rotated.rotate_left(2);
+        assert_eq!(ShardedSearcher::merge(rotated, 3), expect);
+    }
+
+    /// 4 copies of 10 distinct points, one copy per shard — so every
+    /// query has exact-tie answers in *every* shard.
+    fn duplicated_corpus() -> AlignedMatrix {
+        let dim = 8;
+        let rows: Vec<f32> = (0..40)
+            .flat_map(|i| {
+                let j = (i % 10) as f32;
+                (0..dim).map(move |c| j * 10.0 + c as f32)
+            })
+            .collect();
+        AlignedMatrix::from_rows(40, dim, &rows)
+    }
+
+    #[test]
+    fn cross_shard_ties_break_by_global_id() {
+        let data = duplicated_corpus();
+        let params = Params::default().with_k(4).with_seed(11);
+        let sharded = ShardedSearcher::build(&data, 4, &params).unwrap();
+        assert_eq!(sharded.shard_sizes(), vec![10, 10, 10, 10]);
+
+        // exhaustive search per shard (probe every point, pool holds
+        // all), so each shard answers its zero-distance copy exactly
+        let sp = SearchParams { ef: 40, probes: 40, ..Default::default() };
+        for j in 0..10u32 {
+            let (res, _) = sharded.search(data.row_logical(j as usize), 4, &sp);
+            let expect: Vec<Neighbor> =
+                (0..4).map(|s| Neighbor::new(s * 10 + j, 0.0)).collect();
+            assert_eq!(res, expect, "query {j}: ties must order by global id");
+            // batch path agrees bit for bit
+            let qm = AlignedMatrix::from_rows(1, data.dim(), data.row_logical(j as usize));
+            let (bres, _) = sharded.search_batch(&qm, 4, &sp);
+            assert_eq!(bres[0], expect, "query {j} batch path");
+        }
     }
 }

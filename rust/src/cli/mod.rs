@@ -113,7 +113,9 @@ impl ArgMatches {
     pub fn usize_or(&self, name: &str, default: usize) -> Result<usize, CliError> {
         match self.get(name) {
             None => Ok(default),
-            Some(s) => parse_usize(s).ok_or_else(|| CliError(format!("--{name}: bad integer `{s}`"))),
+            Some(s) => {
+                parse_usize(s).ok_or_else(|| CliError(format!("--{name}: bad integer `{s}`")))
+            }
         }
     }
     pub fn u64_or(&self, name: &str, default: u64) -> Result<u64, CliError> {
@@ -302,6 +304,34 @@ mod tests {
         assert_eq!(parse_u64("9x"), None);
         // and overflow is a parse failure, not a wrap
         assert_eq!(parse_u64("18446744073709551615k"), None);
+    }
+
+    #[test]
+    fn numeric_edge_cases_error_instead_of_panicking() {
+        // suffix overflow at the u64 boundary: 2^54·1024 and 2^44·1024²
+        // are exactly 2^64 — checked_mul must turn both into None
+        assert_eq!(parse_u64("18014398509481984k"), None);
+        assert_eq!(parse_u64("17592186044416M"), None);
+        // one below the boundary still parses
+        assert_eq!(parse_u64("18014398509481983k"), Some(u64::MAX - 1023)); // 2^64 − 1024
+        assert_eq!(parse_u64("17592186044415M"), Some(((1 << 44) - 1) * (1 << 20)));
+        // u64::MAX without a suffix is fine; one more is not
+        assert_eq!(parse_u64("18446744073709551615"), Some(u64::MAX));
+        assert_eq!(parse_u64("18446744073709551616"), None);
+        // degenerate strings: bare separators, empty, suffix-only, junk
+        for s in ["", "_", "__", "k", "K", "M", "m", "_k", "_M", "-1", " 1", "1 ", "1.5k"] {
+            assert_eq!(parse_u64(s), None, "`{s}` must not parse");
+            assert_eq!(parse_usize(s), None, "`{s}` must not parse as usize");
+        }
+
+        // and through the getters: a CliError, never a panic
+        let spec = ArgSpec::new().value("n", "count");
+        for raw in ["18014398509481984k", "_", ""] {
+            let m = parse_args(&spec, &argv(&["--n", raw])).unwrap();
+            assert!(m.usize_or("n", 0).is_err(), "`{raw}` via usize_or");
+            assert!(m.u64_or("n", 0).is_err(), "`{raw}` via u64_or");
+            assert!(m.usize_list("n").is_err() || raw.is_empty(), "`{raw}` via usize_list");
+        }
     }
 
     #[test]

@@ -17,6 +17,8 @@
 //!              --save-index corpus.knni
 //!   knng query --index corpus.knni --batch queries.fvecs --k 10 --ef 64
 //!   knng query --index corpus.knni --batch queries.fvecs --kernel w16
+//!   knng query --index corpus.knni --batch queries.fvecs --serve \
+//!              --threads 4 --max-batch 128 --batch-window 500
 //!   knng gen --dataset gaussian --n 4096 --dim 64 --out /tmp/g.fvecs
 //!   knng check --artifacts artifacts
 
@@ -177,6 +179,10 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
         .value("k", "neighbors per query (default 10)")
         .value("ef", "beam width (default 64)")
         .value(KERNEL_FLAG, KERNEL_HELP)
+        .flag("serve", "serve via the threaded micro-batching runtime (with --index)")
+        .value("threads", "worker threads for --serve (clamped to the shard count; default 1)")
+        .value("max-batch", "max queries coalesced per window for --serve (default 64)")
+        .value("batch-window", "batching window for --serve, microseconds (default 200)")
         .flag("stats", "print the aggregate QueryStats breakdown to stderr")
         .flag("help", "show this help");
     let m = parse_args(&spec, argv)?;
@@ -205,6 +211,9 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
             queries.dim(),
             index.dim()
         );
+        if m.has("serve") {
+            return serve_queries(index, queries, k, params, &m);
+        }
         // Searcher results are OriginalId — no σ bookkeeping here.
         let (results, stats) = index.search_batch(&queries, k, &params);
         for (qi, res) in results.iter().enumerate() {
@@ -263,6 +272,65 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
         secs,
         queries.n() as f64 / secs,
         total_evals as f64 / queries.n() as f64
+    );
+    Ok(())
+}
+
+/// The `query --serve` path: wrap the loaded index as a single shard,
+/// spawn the thread-per-shard pool, and stream each query through the
+/// micro-batching front-end individually — the full serving runtime,
+/// end to end, with results identical to the plain batched path.
+fn serve_queries(
+    index: Index,
+    queries: knng::dataset::AlignedMatrix,
+    k: usize,
+    params: knng::search::SearchParams,
+    m: &knng::cli::ArgMatches,
+) -> anyhow::Result<()> {
+    use knng::api::{FrontConfig, ServeFront, ShardPool, ShardedSearcher};
+
+    let threads = m.usize_or("threads", 1)?;
+    let max_batch = m.usize_or("max-batch", 64)?;
+    let window_us = m.u64_or("batch-window", 200)?;
+    let dim = index.dim();
+    let (index_n, graph_k) = (index.len(), index.graph_k());
+
+    let sharded = ShardedSearcher::from_index(index);
+    let pool = ShardPool::new(&sharded, threads)?;
+    let workers = pool.threads();
+    if workers < threads {
+        eprintln!("note: --threads {threads} clamped to {workers} (one worker per shard)");
+    }
+    let cfg = FrontConfig {
+        k,
+        params,
+        max_batch,
+        max_wait: std::time::Duration::from_micros(window_us),
+        ..Default::default()
+    };
+    let front = ServeFront::spawn(pool, dim, cfg)?;
+
+    let t0 = std::time::Instant::now();
+    let tickets: Vec<_> = (0..queries.n())
+        .map(|qi| front.submit(queries.row_logical(qi).to_vec()))
+        .collect::<anyhow::Result<_>>()?;
+    for (qi, ticket) in tickets.into_iter().enumerate() {
+        let served = ticket.wait()?;
+        let row: Vec<String> =
+            served.neighbors.iter().map(|nb| format!("{}:{:.4}", nb.id, nb.dist)).collect();
+        println!("{qi}\t{}", row.join("\t"));
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let totals = front.shutdown();
+    eprintln!(
+        "served {} queries in {secs:.3}s ({:.0} qps) — {} worker(s), {} window(s) \
+         (max {max_batch}/{window_us}µs), {} duplicate(s) coalesced \
+         [index n={index_n}, graph k={graph_k}]",
+        totals.queries,
+        totals.queries as f64 / secs.max(1e-12),
+        workers,
+        totals.windows,
+        totals.coalesced,
     );
     Ok(())
 }

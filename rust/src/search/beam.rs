@@ -151,6 +151,21 @@ struct QueryScratch {
     cand_dists: Vec<f32>,
 }
 
+/// Owned, reusable search scratch for one [`GraphIndex`] — the
+/// per-worker state of the thread-per-shard serving runtime
+/// (`api::serve`). Every search entry point resets it before use, so a
+/// long-lived worker can serve any number of queries/batches through
+/// one scratch with results identical to fresh allocations, while two
+/// workers never share buffers (the probe path's scratch is owned, not
+/// shared — which is what makes `GraphIndex` safely `Sync`).
+///
+/// Sized for a specific index (`O(n)` visited map): obtain one from
+/// [`GraphIndex::scratch`] and only pass it back to the same index
+/// (enforced by an assert).
+pub struct SearchScratch {
+    inner: QueryScratch,
+}
+
 impl QueryScratch {
     fn new(n: usize) -> Self {
         Self {
@@ -273,18 +288,56 @@ impl GraphIndex {
         (self.data, self.graph)
     }
 
+    /// Allocate a reusable [`SearchScratch`] sized for this index (one
+    /// `O(n)` visited map). Long-lived serving workers hold one per
+    /// index and thread it through [`search_with`]/[`search_batch_with`]
+    /// so the per-call allocation disappears from the hot path.
+    ///
+    /// [`search_with`]: GraphIndex::search_with
+    /// [`search_batch_with`]: GraphIndex::search_batch_with
+    pub fn scratch(&self) -> SearchScratch {
+        SearchScratch { inner: QueryScratch::new(self.data.n()) }
+    }
+
+    #[inline]
+    fn check_scratch(&self, scratch: &SearchScratch) {
+        assert_eq!(
+            scratch.inner.visited.len(),
+            self.data.n(),
+            "scratch was built for a different index size"
+        );
+    }
+
     /// k nearest neighbors of `query` (padded or logical length),
     /// ascending by distance. The probe evaluations run on the
     /// norm-trick path (precomputed corpus norms + ‖q‖² computed here),
     /// bit-equal per pair to the batched probe tile.
-    pub fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> (Vec<(u32, f32)>, QueryStats) {
+    pub fn search(
+        &self,
+        query: &[f32],
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<(u32, f32)>, QueryStats) {
+        self.search_with(query, k, params, &mut self.scratch())
+    }
+
+    /// [`search`](GraphIndex::search) through a caller-owned
+    /// [`SearchScratch`] (reset here; results are identical to a fresh
+    /// scratch).
+    pub fn search_with(
+        &self,
+        query: &[f32],
+        k: usize,
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<(u32, f32)>, QueryStats) {
+        self.check_scratch(scratch);
         let q = self.pad_query(query);
         let q2 = sq_norm(&q);
-        let mut scratch = QueryScratch::new(self.data.n());
-        let probes = probe_ids(self.data.n(), params, &mut scratch);
+        let probes = probe_ids(self.data.n(), params, &mut scratch.inner);
         let mut probe_dists = Vec::new();
         dispatch::one_to_many_norms(&q, q2, &self.data, &self.norms, &probes, &mut probe_dists);
-        self.search_core(&q, k, params, &probes, &probe_dists, &mut scratch)
+        self.search_core(&q, k, params, &probes, &probe_dists, &mut scratch.inner)
     }
 
     /// Serve a batch of queries (rows of `queries`, logical width equal
@@ -302,6 +355,21 @@ impl GraphIndex {
         k: usize,
         params: &SearchParams,
     ) -> (Vec<Vec<(u32, f32)>>, BatchStats) {
+        self.search_batch_with(queries, k, params, &mut self.scratch())
+    }
+
+    /// [`search_batch`](GraphIndex::search_batch) through a
+    /// caller-owned [`SearchScratch`] — the serving runtime's entry
+    /// point: each shard worker owns one scratch for its shard and
+    /// serves every incoming batch through it, with results identical
+    /// to fresh per-call allocations.
+    pub fn search_batch_with(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Vec<(u32, f32)>>, BatchStats) {
         assert_eq!(
             queries.dim(),
             self.data.dim(),
@@ -309,10 +377,11 @@ impl GraphIndex {
             queries.dim(),
             self.data.dim()
         );
+        self.check_scratch(scratch);
         let t0 = Instant::now();
         let n = self.data.n();
-        let mut scratch = QueryScratch::new(n);
-        let probes = probe_ids(n, params, &mut scratch);
+        let scratch = &mut scratch.inner;
+        let probes = probe_ids(n, params, scratch);
         let p = probes.len();
         // Norm-trick probe tile: ‖q‖² per batch row, ‖y‖² from the
         // index, register-tiled dot products for the whole query×probe
@@ -333,7 +402,7 @@ impl GraphIndex {
                 params,
                 &probes,
                 &probe_dists[qi * p..(qi + 1) * p],
-                &mut scratch,
+                scratch,
             );
             agg.dist_evals += stats.dist_evals;
             agg.expansions += stats.expansions;
@@ -604,6 +673,58 @@ mod tests {
         assert_eq!(agg.dist_evals_per_query(), 0.0);
         // batches are tagged with the kernel width that served them
         assert_eq!(agg.kernel, crate::distance::dispatch::active_width().name());
+    }
+
+    #[test]
+    fn index_and_scratch_are_thread_mobile() {
+        // the Send/Sync audit behind the thread-per-shard runtime:
+        // GraphIndex owns plain data (matrix, graph, norms) and every
+        // search entry point takes &self + an owned scratch, so sharing
+        // an index across workers is safe by construction. If a future
+        // change sneaks interior mutability into the probe path, this
+        // stops compiling.
+        fn assert_send_sync<T: Send + Sync>() {}
+        fn assert_send<T: Send>() {}
+        assert_send_sync::<GraphIndex>();
+        assert_send::<SearchScratch>();
+    }
+
+    #[test]
+    fn reused_scratch_serves_identically_to_fresh() {
+        // a long-lived worker's scratch must be equivalent to fresh
+        // allocations no matter what ran through it before
+        let (idx, data) = index(700, 16, 31);
+        let mut scratch = idx.scratch();
+        let sp = SearchParams::default();
+        let batch_a = query_matrix(&data, 0, 40);
+        let batch_b = query_matrix(&data, 300, 25);
+
+        // interleave single queries and batches through ONE scratch
+        let (w1, s1) = idx.search_with(data.row_logical(5), 7, &sp, &mut scratch);
+        let (b1, a1) = idx.search_batch_with(&batch_a, 7, &sp, &mut scratch);
+        let (b2, a2) = idx.search_batch_with(&batch_b, 7, &sp, &mut scratch);
+        let (w2, s2) = idx.search_with(data.row_logical(5), 7, &sp, &mut scratch);
+
+        let (fw, fs) = idx.search(data.row_logical(5), 7, &sp);
+        let (fb1, fa1) = idx.search_batch(&batch_a, 7, &sp);
+        let (fb2, fa2) = idx.search_batch(&batch_b, 7, &sp);
+        assert_eq!(w1, fw);
+        assert_eq!(w2, fw);
+        assert_eq!(s1, fs);
+        assert_eq!(s2, fs);
+        assert_eq!(b1, fb1);
+        assert_eq!(b2, fb2);
+        assert_eq!((a1.dist_evals, a1.expansions), (fa1.dist_evals, fa1.expansions));
+        assert_eq!((a2.dist_evals, a2.expansions), (fa2.dist_evals, fa2.expansions));
+    }
+
+    #[test]
+    #[should_panic(expected = "different index size")]
+    fn scratch_is_pinned_to_its_index_size() {
+        let (idx_a, _) = index(300, 16, 33);
+        let (idx_b, data_b) = index(400, 16, 34);
+        let mut scratch = idx_a.scratch();
+        let _ = idx_b.search_with(data_b.row_logical(0), 3, &SearchParams::default(), &mut scratch);
     }
 
     #[test]

@@ -85,7 +85,11 @@ impl IndexBundle {
     /// Assemble a bundle from a finished build. `data_original` is the
     /// dataset in its original id space (as fed to `NnDescent::build`);
     /// it is permuted into the working layout when the build reordered.
-    pub fn from_build(data_original: &AlignedMatrix, result: &BuildResult, params: &Params) -> Self {
+    pub fn from_build(
+        data_original: &AlignedMatrix,
+        result: &BuildResult,
+        params: &Params,
+    ) -> Self {
         let data = result.working_data_ref(data_original);
         let norms = Some(GraphIndex::compute_norms(&data));
         let norm_lanes = crate::distance::dispatch::active_width().lanes();
@@ -298,6 +302,18 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
     if flags & !(FLAG_REORDERING | FLAG_NORMS | FLAG_NORM_LANES_MASK) != 0 {
         bail!("unknown flag bits {flags:#x}");
     }
+    // The lane tag can only be a width this engine ever computes norms
+    // at (1 = scalar, 8, 16); anything else is corruption or a future
+    // format, and silently recomputing would mask it. Without a norms
+    // section the tag must be zero.
+    let stored_lanes = ((flags & FLAG_NORM_LANES_MASK) >> FLAG_NORM_LANES_SHIFT) as usize;
+    if flags & FLAG_NORMS != 0 {
+        if !matches!(stored_lanes, 1 | 8 | 16) {
+            bail!("implausible norm lane count {stored_lanes} (valid widths: 1, 8, 16)");
+        }
+    } else if stored_lanes != 0 {
+        bail!("norm lane count {stored_lanes} recorded without a norms section");
+    }
 
     // The format is fixed-size given the header, so the exact file
     // length is known up front. Checking it here (a) catches truncation
@@ -379,7 +395,6 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
         // width; otherwise drop the section (into_index recomputes) so
         // the norm-trick path keeps its exact-zero self-distance
         // guarantee on this machine.
-        let stored_lanes = ((flags & FLAG_NORM_LANES_MASK) >> FLAG_NORM_LANES_SHIFT) as usize;
         if stored_lanes == crate::distance::dispatch::active_width().lanes() {
             Some(ns)
         } else {
@@ -388,11 +403,7 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
     } else {
         None
     };
-    let norm_lanes = if norms.is_some() {
-        ((flags & FLAG_NORM_LANES_MASK) >> FLAG_NORM_LANES_SHIFT) as usize
-    } else {
-        0
-    };
+    let norm_lanes = if norms.is_some() { stored_lanes } else { 0 };
 
     let mut trailer = [0u8; 8];
     r.read_exact(&mut trailer).context("reading checksum")?;
@@ -566,6 +577,63 @@ mod tests {
             let (b, _) = idx.search(data.row_logical(qi), 5, &sp);
             assert_eq!(a, b, "query {qi}");
         }
+    }
+
+    #[test]
+    fn huge_header_on_a_tiny_file_fails_before_allocating() {
+        // a corrupt header with n near u32::MAX - 1 passes the
+        // plausibility caps (n·k and n·dim stay under their limits when
+        // k = dim = 1) — the file-length check must reject it *before*
+        // the multi-GB strip allocations are reached
+        let path = tmp("huge_n.knni");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(MAGIC);
+        bytes.extend_from_slice(&(u32::MAX as u64 - 1).to_le_bytes()); // n
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // dim
+        bytes.extend_from_slice(&1u64.to_le_bytes()); // k
+        bytes.extend_from_slice(&0u64.to_le_bytes()); // flags
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_index(&path).unwrap_err().to_string();
+        assert!(err.contains("size mismatch"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_nonsense_norm_lane_counts() {
+        // only 1/8/16 are widths this engine computes norms at; a
+        // corrupt tag must be an error, not a silent recompute
+        let (bundle, _, _) = build_bundle(200, 17, false);
+        let path = tmp("badlanes.knni");
+        let lanes_off = 33; // flags u64 at 32..40, lane count in byte 1
+        for bad in [3u8, 0, 0xFF] {
+            save_index(&path, &bundle).unwrap();
+            let mut bytes = std::fs::read(&path).unwrap();
+            bytes[lanes_off] = bad;
+            let mut crc = Fnv::new();
+            crc.update(&bytes[..bytes.len() - 8]);
+            let crc_off = bytes.len() - 8;
+            bytes[crc_off..].copy_from_slice(&crc.0.to_le_bytes());
+            std::fs::write(&path, &bytes).unwrap();
+            let err = load_index(&path).unwrap_err().to_string();
+            assert!(err.contains("norm lane count"), "lanes={bad}: unexpected error: {err}");
+        }
+    }
+
+    #[test]
+    fn rejects_lane_tag_without_norms_section() {
+        // legacy layout (no norms section) with lane bits smuggled into
+        // the flags word: structurally consistent, semantically nonsense
+        let (bundle, _, _) = build_bundle(200, 19, false);
+        let path = tmp("lanes_no_norms.knni");
+        save_index_parts(&path, &bundle.data, &bundle.graph, None, &bundle.params, None).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[33] = 8; // lane tag without FLAG_NORMS
+        let mut crc = Fnv::new();
+        crc.update(&bytes[..bytes.len() - 8]);
+        let crc_off = bytes.len() - 8;
+        bytes[crc_off..].copy_from_slice(&crc.0.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_index(&path).unwrap_err().to_string();
+        assert!(err.contains("without a norms section"), "unexpected error: {err}");
     }
 
     #[test]

@@ -13,9 +13,15 @@
 //!   a serving process needs — graph, aligned data matrix, reordering,
 //!   corpus norms, build parameters — as one checksummed `KNNIv1`
 //!   artifact (pre-norms bundles load fine; norms are recomputed).
+//! * [`SearchScratch`] makes the per-query working state an owned,
+//!   reusable value: `GraphIndex` is `Send + Sync` (plain owned data,
+//!   `&self` search entry points), and each worker thread of the
+//!   concurrent serving runtime (`api::serve`) holds its own scratch —
+//!   the ownership discipline that keeps multi-threaded fan-out
+//!   lock-free and bit-identical to sequential serving.
 
 pub mod beam;
 pub mod bundle;
 
-pub use beam::{BatchStats, GraphIndex, QueryStats, SearchParams};
+pub use beam::{BatchStats, GraphIndex, QueryStats, SearchParams, SearchScratch};
 pub use bundle::{load_index, save_index, save_index_parts, IndexBundle};

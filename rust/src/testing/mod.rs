@@ -20,3 +20,27 @@
 pub mod prop;
 
 pub use prop::{check, check_result, Config, Gen};
+
+/// Assert two per-query result sets are **bitwise** identical: same
+/// arity, same ids, same distance *bits* per rank. The one definition
+/// of the serving layer's bit-equality acceptance check, shared by the
+/// serve-stack unit/integration tests and `bench_query_throughput`
+/// (equality on `f32` values would let `-0.0`/`0.0` or NaN drift pass).
+pub fn assert_neighbors_bitwise_eq(
+    a: &[Vec<crate::api::Neighbor>],
+    b: &[Vec<crate::api::Neighbor>],
+    ctx: &str,
+) {
+    assert_eq!(a.len(), b.len(), "{ctx}: result arity");
+    for (qi, (ra, rb)) in a.iter().zip(b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "{ctx}: query {qi} arity");
+        for (j, (na, nb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(na.id, nb.id, "{ctx}: query {qi} rank {j} id");
+            assert_eq!(
+                na.dist.to_bits(),
+                nb.dist.to_bits(),
+                "{ctx}: query {qi} rank {j} distance bits"
+            );
+        }
+    }
+}

@@ -152,6 +152,57 @@ fn index_bundle_build_query_roundtrip() {
 }
 
 #[test]
+fn serve_mode_matches_plain_batched_output() {
+    // gen → build --save-index → query twice: once through the plain
+    // batched path, once through --serve (thread-per-shard pool +
+    // micro-batching front). Same queries, so stdout must be identical
+    // line for line — the CLI-level spelling of the bit-equality
+    // guarantee.
+    let dir = std::env::temp_dir().join("knng_cli_serve");
+    std::fs::create_dir_all(&dir).unwrap();
+    let data_path = dir.join("corpus.fvecs");
+    let index_path = dir.join("corpus.knni");
+
+    let out = knng(&[
+        "gen", "--dataset", "clustered", "--n", "500", "--dim", "8",
+        "--clusters", "6", "--seed", "23",
+        "--out", data_path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let out = knng(&[
+        "build", "--dataset", "fvecs", "--path", data_path.to_str().unwrap(),
+        "--n", "500", "--k", "12", "--reorder", "--recall-queries", "0",
+        "--save-index", index_path.to_str().unwrap(),
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+
+    let plain = knng(&[
+        "query", "--index", index_path.to_str().unwrap(),
+        "--batch", data_path.to_str().unwrap(), "--k", "5",
+    ]);
+    assert!(plain.status.success(), "stderr: {}", String::from_utf8_lossy(&plain.stderr));
+
+    let served = knng(&[
+        "query", "--index", index_path.to_str().unwrap(),
+        "--batch", data_path.to_str().unwrap(), "--k", "5",
+        "--serve", "--threads", "2", "--max-batch", "64", "--batch-window", "2000",
+    ]);
+    assert!(served.status.success(), "stderr: {}", String::from_utf8_lossy(&served.stderr));
+
+    assert_eq!(
+        String::from_utf8_lossy(&plain.stdout),
+        String::from_utf8_lossy(&served.stdout),
+        "serve mode must answer exactly like the plain batched path"
+    );
+    let stderr = String::from_utf8_lossy(&served.stderr);
+    assert!(stderr.contains("served 500 queries"), "serve summary on stderr: {stderr}");
+    assert!(stderr.contains("window"), "serve summary on stderr: {stderr}");
+    // a single-shard index clamps the worker count, with a note
+    assert!(stderr.contains("clamped"), "clamp note on stderr: {stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn bad_input_fails_cleanly() {
     let out = knng(&["frobnicate"]);
     assert!(!out.status.success());

@@ -1,0 +1,247 @@
+//! Serve-stack integration: the thread-per-shard pool's bit-equality
+//! with the single-threaded fan-out (the acceptance matrix S ∈ {1, 4} ×
+//! threads ∈ {1, 4}), the micro-batching front-end's transparency
+//! (window composition and duplicate coalescing never change answers),
+//! and the `Index` → single-shard bridge the CLI serve path uses.
+
+use knng::api::{FrontConfig, IndexBuilder, Searcher, ServeFront, ShardPool, ShardedSearcher};
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::nndescent::Params;
+use knng::search::SearchParams;
+use knng::testing::assert_neighbors_bitwise_eq;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Rows `[from, from+count)` of `data` as a fresh matrix.
+fn slice_rows(data: &AlignedMatrix, from: usize, count: usize) -> AlignedMatrix {
+    let rows: Vec<f32> =
+        (from..from + count).flat_map(|i| data.row_logical(i).to_vec()).collect();
+    AlignedMatrix::from_rows(count, data.dim(), &rows)
+}
+
+#[test]
+fn pool_is_bit_identical_to_inline_fanout_for_the_acceptance_matrix() {
+    // the acceptance criterion: threaded search_batch ==
+    // single-threaded ShardedSearcher fan-out, bit for bit, for
+    // S ∈ {1, 4} and threads ∈ {1, 4}
+    let (all, _) = SynthClustered::new(1000, 16, 8, 41).generate_labeled();
+    let corpus = slice_rows(&all, 0, 900);
+    let queries = slice_rows(&all, 900, 100);
+    let params = Params::default().with_k(12).with_seed(41).with_reorder(true);
+    let k = 8;
+
+    for shards in [1usize, 4] {
+        let sharded = ShardedSearcher::build(&corpus, shards, &params).unwrap();
+        for sp in [
+            SearchParams::default(),
+            SearchParams { ef: 16, ..Default::default() },
+            SearchParams { ef: 128, seeds: 4, ..Default::default() },
+        ] {
+            let (expect, estats) = sharded.search_batch(&queries, k, &sp);
+            for threads in [1usize, 4] {
+                let pool = ShardPool::new(&sharded, threads).unwrap();
+                assert_eq!(pool.threads(), threads.min(shards));
+                let (got, gstats) = pool.search_batch(&queries, k, &sp);
+                let ctx = format!("S={shards} threads={threads} ef={}", sp.ef);
+                assert_neighbors_bitwise_eq(&expect, &got, &ctx);
+                assert_eq!(estats.dist_evals, gstats.dist_evals, "{ctx}: aggregate evals");
+                assert_eq!(estats.expansions, gstats.expansions, "{ctx}: aggregate expansions");
+
+                // single-query path matches too (same kernels, 1-row tile)
+                for qi in (0..queries.n()).step_by(29) {
+                    let (a, sa) = sharded.search(queries.row_logical(qi), k, &sp);
+                    let (b, sb) = pool.search(queries.row_logical(qi), k, &sp);
+                    assert_neighbors_bitwise_eq(
+                        std::slice::from_ref(&a),
+                        std::slice::from_ref(&b),
+                        &format!("{ctx} single query {qi}"),
+                    );
+                    assert_eq!(sa, sb, "{ctx} single query {qi} stats");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pool_serves_concurrent_callers_deterministically() {
+    // several OS threads hammer one pool with the same batch: every
+    // caller must get the bit-identical reference answer (workers
+    // interleave jobs from different callers; per-worker scratch and
+    // slot-keyed merging keep them independent)
+    let (all, _) = SynthClustered::new(700, 8, 4, 47).generate_labeled();
+    let corpus = slice_rows(&all, 0, 600);
+    let queries = Arc::new(slice_rows(&all, 600, 100));
+    let params = Params::default().with_k(10).with_seed(47);
+    let sharded = ShardedSearcher::build(&corpus, 4, &params).unwrap();
+    let sp = SearchParams::default();
+    let (expect, _) = sharded.search_batch(&queries, 5, &sp);
+    let pool = Arc::new(ShardPool::new(&sharded, 4).unwrap());
+
+    std::thread::scope(|scope| {
+        for caller in 0..4 {
+            let pool = Arc::clone(&pool);
+            let queries = Arc::clone(&queries);
+            let expect = &expect;
+            scope.spawn(move || {
+                for round in 0..3 {
+                    let (got, _) = pool.search_batch(&queries, 5, &sp);
+                    let ctx = format!("caller {caller} round {round}");
+                    assert_neighbors_bitwise_eq(expect, &got, &ctx);
+                }
+            });
+        }
+    });
+}
+
+#[test]
+fn from_index_single_shard_serves_like_the_index() {
+    // the CLI serve path's bridge: Index → 1-shard searcher → pool,
+    // all three bit-identical (reordered build, so σ mapping is live)
+    let (all, _) = SynthClustered::new(600, 8, 4, 53).generate_labeled();
+    let corpus = slice_rows(&all, 0, 500);
+    let queries = slice_rows(&all, 500, 80);
+    let params = Params::default().with_k(10).with_seed(53).with_reorder(true);
+    let index = IndexBuilder::new()
+        .data_named(corpus.clone(), "clustered")
+        .params(params.clone())
+        .build()
+        .unwrap();
+    let sp = SearchParams::default();
+    let (expect, estats) = index.search_batch(&queries, 6, &sp);
+
+    let sharded = ShardedSearcher::from_index(index);
+    assert_eq!(sharded.shard_count(), 1);
+    assert_eq!(Searcher::len(&sharded), 500);
+    let (via_shard, sstats) = sharded.search_batch(&queries, 6, &sp);
+    assert_neighbors_bitwise_eq(&expect, &via_shard, "from_index");
+    assert_eq!(estats.dist_evals, sstats.dist_evals);
+
+    let pool = ShardPool::new(&sharded, 4).unwrap();
+    assert_eq!(pool.threads(), 1, "threads clamp to the single shard");
+    let (via_pool, pstats) = pool.search_batch(&queries, 6, &sp);
+    assert_neighbors_bitwise_eq(&expect, &via_pool, "from_index pool");
+    assert_eq!(estats.dist_evals, pstats.dist_evals);
+}
+
+#[test]
+fn front_answers_match_direct_batch_regardless_of_window_composition() {
+    // micro-batching transparency: whatever windows form (and however
+    // duplicates coalesce), every caller's answer equals the direct
+    // search_batch result for its query
+    let (all, _) = SynthClustered::new(700, 8, 4, 59).generate_labeled();
+    let corpus = slice_rows(&all, 0, 600);
+    let queries = slice_rows(&all, 600, 60);
+    let params = Params::default().with_k(10).with_seed(59);
+    let k = 5;
+    let sp = SearchParams::default();
+
+    let sharded = ShardedSearcher::build(&corpus, 4, &params).unwrap();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+    let pool = ShardPool::new(&sharded, 4).unwrap();
+    let front = ServeFront::spawn(
+        pool,
+        corpus.dim(),
+        FrontConfig {
+            k,
+            params: sp,
+            max_batch: 16,
+            max_wait: Duration::from_millis(2),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    // 4 submitter threads × 30 queries each, with every query submitted
+    // twice overall (dup pressure) — window composition is nondeterministic
+    // by construction, answers must not be
+    std::thread::scope(|scope| {
+        for t in 0..4 {
+            let front = &front;
+            let queries = &queries;
+            let expect = &expect;
+            scope.spawn(move || {
+                for i in 0..30 {
+                    let qi = (t * 15 + i) % 60; // overlapping ranges → duplicates
+                    let ticket = front.submit(queries.row_logical(qi).to_vec()).unwrap();
+                    let served = ticket.wait().unwrap();
+                    assert!(served.window.requests >= 1);
+                    assert!(served.window.unique >= 1);
+                    assert!(served.window.unique <= served.window.requests);
+                    assert_neighbors_bitwise_eq(
+                        std::slice::from_ref(&expect[qi]),
+                        std::slice::from_ref(&served.neighbors),
+                        &format!("submitter {t} query {qi}"),
+                    );
+                }
+            });
+        }
+    });
+
+    let totals = front.shutdown();
+    assert_eq!(totals.queries, 120, "every submission answered");
+    assert!(totals.windows >= 1);
+    assert!(totals.coalesced <= totals.queries);
+}
+
+#[test]
+fn front_coalesces_a_burst_of_identical_queries() {
+    // one searcher execution may answer many identical submissions;
+    // robust assertions only (window formation is timing-dependent):
+    // all answers identical and bit-equal to the direct result, totals
+    // consistent
+    let (all, _) = SynthClustered::new(400, 8, 4, 61).generate_labeled();
+    let corpus = slice_rows(&all, 0, 350);
+    let params = Params::default().with_k(8).with_seed(61);
+    let sp = SearchParams::default();
+    let sharded = ShardedSearcher::build(&corpus, 2, &params).unwrap();
+    let (expect, _) = sharded.search(all.row_logical(380), 4, &sp);
+    let pool = ShardPool::new(&sharded, 2).unwrap();
+    let front = ServeFront::spawn(
+        pool,
+        corpus.dim(),
+        FrontConfig {
+            k: 4,
+            params: sp,
+            max_batch: 32,
+            max_wait: Duration::from_millis(50),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let q = all.row_logical(380).to_vec();
+    let tickets: Vec<_> = (0..20).map(|_| front.submit(q.clone()).unwrap()).collect();
+    for ticket in tickets {
+        let served = ticket.wait().unwrap();
+        assert_neighbors_bitwise_eq(
+            std::slice::from_ref(&expect),
+            std::slice::from_ref(&served.neighbors),
+            "identical burst",
+        );
+        // any window holding more than one of these requests must have
+        // deduplicated down to a single unique query
+        assert_eq!(served.window.unique, 1, "identical queries never multiply uniques");
+        assert_eq!(served.window.coalesced, served.window.requests > 1);
+    }
+    let totals = front.shutdown();
+    assert_eq!(totals.queries, 20);
+    // executions = queries − coalesced = number of windows (1 unique each)
+    assert_eq!(totals.queries - totals.coalesced, totals.windows);
+}
+
+#[test]
+fn front_rejects_wrong_arity_and_survives_shutdown() {
+    let (all, _) = SynthClustered::new(200, 8, 4, 67).generate_labeled();
+    let corpus = slice_rows(&all, 0, 180);
+    let sharded =
+        ShardedSearcher::build(&corpus, 2, &Params::default().with_k(6).with_seed(67)).unwrap();
+    let pool = ShardPool::new(&sharded, 2).unwrap();
+    let front = ServeFront::spawn(pool, corpus.dim(), FrontConfig::default()).unwrap();
+    assert!(front.submit(vec![0.0; 3]).is_err(), "wrong arity must be rejected");
+    let ticket = front.submit(all.row_logical(190).to_vec()).unwrap();
+    assert_eq!(ticket.wait().unwrap().neighbors.len(), 10.min(180));
+    let totals = front.shutdown();
+    assert_eq!(totals.queries, 1);
+}
