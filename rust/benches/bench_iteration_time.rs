@@ -1,16 +1,22 @@
-//! Fig 5 — per-iteration time with/without the greedy reordering.
+//! Fig 5 — per-iteration time with/without the greedy reordering, plus
+//! the parallel-build scaling rows (threads ∈ {1, 2, 4}).
 //!
 //! Paper: Synthetic Clustered (n=16'384, 16 clusters, d=8). The
 //! reordered run pays overhead in the iteration where the heuristic
 //! executes, then wins every subsequent iteration; total speedup
 //! ≈18.46% over all iterations.
 //!
+//! The threaded section measures the same build at T ∈ {1, 2, 4} and
+//! writes `BENCH_build.json` so the build-perf trajectory is tracked
+//! across PRs. It also re-asserts the parity contract every run: the
+//! T=1 knob must be bit-identical to the plain sequential build.
+//!
 //! Run: `cargo bench --bench bench_iteration_time`
 
-use knng::bench::{full_scale, Table};
+use knng::bench::{full_scale, measure_once, write_bench_json, Json, Table};
 use knng::config::schema::{ComputeKind, SelectionKind};
 use knng::dataset::clustered::SynthClustered;
-use knng::nndescent::{NnDescent, Params};
+use knng::nndescent::{BuildResult, NnDescent, Params};
 
 fn main() {
     let n = if full_scale() { 16_384 } else { 8_192 };
@@ -24,8 +30,13 @@ fn main() {
         .with_selection(SelectionKind::Turbo)
         .with_compute(ComputeKind::Blocked);
 
-    let plain = NnDescent::new(base.clone().with_reorder(false)).build(&data).unwrap();
-    let greedy = NnDescent::new(base.with_reorder(true)).build(&data).unwrap();
+    // fig5 reproduces the *paper's sequential* per-iteration profile:
+    // pin T=1 so a PALLAS_BUILD_THREADS environment cannot silently
+    // swap the measurement onto the parallel engine (the threaded
+    // section below owns that comparison)
+    let fig5 = base.clone().with_threads(1);
+    let plain = NnDescent::new(fig5.clone().with_reorder(false)).build(&data).unwrap();
+    let greedy = NnDescent::new(fig5.with_reorder(true)).build(&data).unwrap();
 
     let mut table = Table::new(
         "fig5_iteration_time",
@@ -48,4 +59,81 @@ fn main() {
     let tg: f64 = greedy.per_iter.iter().map(|s| s.total_secs()).sum();
     println!("\ntotal: no-heuristic {tp:.3}s, greedy {tg:.3}s → speedup {:.2}%", (tp / tg - 1.0) * 100.0);
     println!("paper reference: 18.46% total speedup; first post-reorder iteration slower");
+
+    threaded_build_section(&data, &base, n, d, k);
+}
+
+/// Parity gate run on every bench invocation: `--threads 1` must be
+/// bit-identical to the plain sequential build (graph, counters,
+/// per-iteration stats) — the hard requirement of the parallel engine.
+fn assert_t1_parity(seq: &BuildResult, t1: &BuildResult) {
+    assert_eq!(seq.iterations, t1.iterations, "T=1 parity: iterations");
+    assert_eq!(seq.stats.dist_evals, t1.stats.dist_evals, "T=1 parity: dist evals");
+    assert_eq!(seq.total_updates(), t1.total_updates(), "T=1 parity: updates");
+    for u in 0..seq.graph.n() {
+        assert_eq!(seq.graph.sorted(u), t1.graph.sorted(u), "T=1 parity: node {u}");
+    }
+    println!("T=1 parity assert passed (bit-identical to the sequential build)");
+}
+
+/// Build-time scaling over worker threads; emits `BENCH_build.json`.
+fn threaded_build_section(
+    data: &knng::dataset::AlignedMatrix,
+    base: &Params,
+    n: usize,
+    d: usize,
+    k: usize,
+) {
+    // reference build through the explicit-engine funnel, which is
+    // *always* the sequential code path (immune to PALLAS_BUILD_THREADS)
+    let mut engine = knng::nndescent::compute::NativeEngine::new(base.compute);
+    let seq = NnDescent::new(base.clone()).build_with_engine(
+        data,
+        &mut engine,
+        &mut knng::cachesim::trace::NoTracer,
+    );
+    let mut table = Table::new(
+        "parallel_build_scaling",
+        &["threads", "wall_secs", "iterations", "dist_evals", "updates", "speedup_vs_t1"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut t1_secs = f64::NAN;
+    for threads in [1usize, 2, 4] {
+        let params = base.clone().with_threads(threads);
+        let (result, secs) = measure_once(|| NnDescent::new(params.clone()).build(data).unwrap());
+        if threads == 1 {
+            assert_t1_parity(&seq, &result);
+            t1_secs = secs;
+        }
+        table.row(&[
+            threads.to_string(),
+            format!("{secs:.4}"),
+            result.iterations.to_string(),
+            result.stats.dist_evals.to_string(),
+            result.total_updates().to_string(),
+            format!("{:.2}x", t1_secs / secs),
+        ]);
+        rows.push(Json::obj(vec![
+            ("threads", Json::Int(threads as u64)),
+            ("wall_secs", Json::Num(secs)),
+            ("build_total_secs", Json::Num(result.total_secs)),
+            ("iterations", Json::Int(result.iterations as u64)),
+            ("dist_evals", Json::Int(result.stats.dist_evals)),
+            ("updates", Json::Int(result.total_updates())),
+            ("speedup_vs_t1", Json::Num(t1_secs / secs)),
+        ]));
+    }
+    table.finish();
+    write_bench_json(
+        "BENCH_build.json",
+        &Json::obj(vec![
+            ("bench", Json::s("build")),
+            ("dataset", Json::s("clustered")),
+            ("n", Json::Int(n as u64)),
+            ("dim", Json::Int(d as u64)),
+            ("k", Json::Int(k as u64)),
+            ("kernel", Json::s(knng::distance::dispatch::active_width().name())),
+            ("rows", Json::Arr(rows)),
+        ]),
+    );
 }

@@ -121,6 +121,19 @@ impl<'a> IndexBuilder<'a> {
         self
     }
 
+    /// Build worker threads (shorthand for
+    /// [`Params::threads`](crate::nndescent::Params::threads)): an
+    /// explicit value here wins over the `PALLAS_BUILD_THREADS`
+    /// environment variable; 1 pins the bit-exact sequential engine;
+    /// `> 1` runs the deterministic phased parallel engine. For
+    /// [`build_sharded`](Self::build_sharded) the same budget is spent
+    /// across shards instead: up to `t` whole-shard builds run
+    /// concurrently, each sequential inside.
+    pub fn threads(mut self, t: usize) -> Self {
+        self.params.threads = t;
+        self
+    }
+
     /// Name used in reports (defaults to `"api"`).
     pub fn name(mut self, name: &str) -> Self {
         self.name = name.to_string();

@@ -16,7 +16,10 @@
 //!   one window are answered by a single execution and the result is
 //!   fanned back to every submitter (duplicate-query coalescing);
 //! * the window's unique queries run through one
-//!   [`Searcher::search_batch`] call.
+//!   [`Searcher::search_batch_owned`] call (an `Arc`'d tile, so a
+//!   thread-per-shard pool underneath shares it with its workers
+//!   without another copy — each window's queries are copied exactly
+//!   once, flat buffer → aligned tile).
 //!
 //! Because the batch path is bit-equal to the sequential path per query
 //! (and per-query results never depend on what else shares the batch),
@@ -274,8 +277,11 @@ fn serve_window<S: Searcher>(
     let plan = plan_window(&rows);
     let flat: Vec<f32> =
         plan.unique.iter().flat_map(|&i| window[i].query.iter().copied()).collect();
-    let tile = AlignedMatrix::from_rows(plan.unique.len(), dim, &flat);
-    let (results, _stats) = searcher.search_batch(&tile, cfg.k, &cfg.params);
+    // the one copy on this path: flat queries → aligned tile. Handing
+    // the tile over as an Arc lets a thread-per-shard pool share it
+    // with its workers directly instead of re-cloning it 'static.
+    let tile = Arc::new(AlignedMatrix::from_rows(plan.unique.len(), dim, &flat));
+    let (results, _stats) = searcher.search_batch_owned(tile, cfg.k, &cfg.params);
 
     let mut fanout = vec![0usize; plan.unique.len()];
     for &u in &plan.assign {

@@ -45,6 +45,22 @@ pub trait Searcher {
         k: usize,
         params: &SearchParams,
     ) -> (Vec<Vec<Neighbor>>, BatchStats);
+
+    /// [`search_batch`](Self::search_batch) with a shared, owned tile.
+    /// The default just borrows the tile — results are identical by
+    /// construction. Implementations that hand the batch to worker
+    /// threads (the thread-per-shard [`ShardPool`](super::ShardPool))
+    /// override this to share the `Arc` directly instead of cloning the
+    /// tile to make it `'static`, which removes the second copy from
+    /// the front-end → pool hot path.
+    fn search_batch_owned(
+        &self,
+        queries: std::sync::Arc<AlignedMatrix>,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        self.search_batch(&queries, k, params)
+    }
 }
 
 /// Map a raw working-space result list into the boundary type without

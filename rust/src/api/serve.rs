@@ -180,6 +180,18 @@ impl Searcher for ShardPool {
         k: usize,
         params: &SearchParams,
     ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        // the borrowed entry point has to copy once: workers need a
+        // 'static tile. Callers that already own the tile (the
+        // micro-batching front) use search_batch_owned and skip this.
+        self.search_batch_owned(Arc::new(queries.clone()), k, params)
+    }
+
+    fn search_batch_owned(
+        &self,
+        queries: Arc<AlignedMatrix>,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
         // validate before fan-out: a bad tile must fail *this* call
         // with the same message the inline path gives, not panic a
         // worker thread and poison the pool for every other caller
@@ -191,13 +203,12 @@ impl Searcher for ShardPool {
             self.dim
         );
         let t0 = Instant::now();
-        // one shared copy of the tile for all workers ('static for the
-        // worker threads; the copy is tiny next to the search work)
-        let tile = Arc::new(queries.clone());
+        // the Arc is shared as-is with every worker: zero tile copies
+        // on this path
         let (tx, rx) = mpsc::channel::<ShardReply>();
         for sender in &self.senders {
             sender
-                .send(Job { queries: Arc::clone(&tile), k, params: *params, reply: tx.clone() })
+                .send(Job { queries: Arc::clone(&queries), k, params: *params, reply: tx.clone() })
                 .expect("shard worker exited before the pool was dropped");
         }
         drop(tx);
@@ -296,6 +307,30 @@ mod tests {
             );
             assert_eq!(sa, sb, "query {qi} stats");
         }
+    }
+
+    #[test]
+    fn owned_tile_entry_point_matches_borrowed() {
+        // the Arc handoff (no tile clone) must not change anything:
+        // same results, same stats, for both the pool and — through the
+        // trait default — the inline sharded searcher
+        let data = corpus(300, 11);
+        let params = Params::default().with_k(8).with_seed(11);
+        let sharded = ShardedSearcher::build(&data, 3, &params).unwrap();
+        let pool = ShardPool::new(&sharded, 2).unwrap();
+        let sp = SearchParams::default();
+        let queries = AlignedMatrix::from_rows(
+            12,
+            data.dim(),
+            &(0..12).flat_map(|i| data.row_logical(i * 23).to_vec()).collect::<Vec<f32>>(),
+        );
+        let (expect, estats) = pool.search_batch(&queries, 4, &sp);
+        let tile = std::sync::Arc::new(queries.clone());
+        let (got, gstats) = pool.search_batch_owned(std::sync::Arc::clone(&tile), 4, &sp);
+        assert_neighbors_bitwise_eq(&expect, &got, "owned vs borrowed");
+        assert_eq!(estats.dist_evals, gstats.dist_evals);
+        let (inline, _) = sharded.search_batch_owned(tile, 4, &sp);
+        assert_neighbors_bitwise_eq(&expect, &inline, "trait default");
     }
 
     #[test]

@@ -23,10 +23,11 @@
 
 use super::ids::{Neighbor, OriginalId, WorkingId};
 use super::searcher::Searcher;
+use crate::config::schema::ComputeKind;
 use crate::dataset::AlignedMatrix;
-use crate::nndescent::observer::{BuildObserver, NoopObserver};
+use crate::nndescent::observer::{BuildEvent, BuildObserver, FnObserver, NoopObserver};
 use crate::nndescent::reorder::Reordering;
-use crate::nndescent::{BuildResult, Params};
+use crate::nndescent::{BuildResult, NnDescent, Params};
 use crate::search::{BatchStats, GraphIndex, QueryStats, SearchParams};
 use std::sync::Arc;
 use std::time::Instant;
@@ -101,6 +102,17 @@ impl ShardedSearcher {
     /// backend when `params.compute` asks for it
     /// ([`IndexBuilder::build_sharded`](super::IndexBuilder::build_sharded)
     /// routes its configured directory through here).
+    ///
+    /// With a resolved [`Params::threads`] budget `T > 1` (explicit or
+    /// via `PALLAS_BUILD_THREADS`) and `S > 1` native-backend shards,
+    /// the S independent shard builds run concurrently on
+    /// `min(T, S)` workers — one whole-shard build per worker,
+    /// contiguous groups, each inner build pinned to a single thread —
+    /// and the assembled searcher is **bit-identical** to the
+    /// sequential shard loop (shard builds share no state; observers
+    /// see each shard's events replayed in slice order, tagged by
+    /// [`BuildEvent::ShardStarted`]). With `S = 1` the thread budget
+    /// flows into the single shard's build instead.
     pub fn build_with(
         data: &AlignedMatrix,
         shards: usize,
@@ -114,13 +126,43 @@ impl ShardedSearcher {
             n / shards >= 2,
             "corpus of {n} points cannot fill {shards} shards (each needs ≥ 2 points)"
         );
+        let workers = crate::nndescent::resolve_build_threads(params.threads).min(shards);
+        let built = if workers > 1 && params.compute != ComputeKind::Pjrt {
+            Self::build_shards_parallel(data, shards, params, workers, observer)?
+        } else {
+            Self::build_shards_sequential(data, shards, params, artifacts_dir, observer)?
+        };
+        Ok(Self { shards: built, n, dim: data.dim() })
+    }
+
+    /// One shard's contiguous slice copied out of the corpus. Slices
+    /// are cut lazily — one at a time sequentially, one per in-flight
+    /// build in the worker pool — so a sharded build never holds a
+    /// second full corpus copy beyond the shards it is actively
+    /// building (the finished shards own their working-layout data
+    /// either way).
+    fn cut_slice(data: &AlignedMatrix, shards: usize, idx: usize) -> (usize, AlignedMatrix) {
+        let n = data.n();
+        let lo = idx * n / shards;
+        let hi = (idx + 1) * n / shards;
+        let rows: Vec<f32> = (lo..hi).flat_map(|i| data.row_logical(i).to_vec()).collect();
+        (lo, AlignedMatrix::from_rows(hi - lo, data.dim(), &rows))
+    }
+
+    /// The sequential shard loop (also the `pjrt` path: that engine is
+    /// exclusive state). Events stream through directly, tagged per
+    /// shard.
+    fn build_shards_sequential(
+        data: &AlignedMatrix,
+        shards: usize,
+        params: &Params,
+        artifacts_dir: &str,
+        observer: &mut dyn BuildObserver,
+    ) -> crate::Result<Vec<Arc<Shard>>> {
         let mut built = Vec::with_capacity(shards);
-        for s in 0..shards {
-            let lo = s * n / shards;
-            let hi = (s + 1) * n / shards;
-            let rows: Vec<f32> =
-                (lo..hi).flat_map(|i| data.row_logical(i).to_vec()).collect();
-            let shard_data = AlignedMatrix::from_rows(hi - lo, data.dim(), &rows);
+        for idx in 0..shards {
+            let (lo, shard_data) = Self::cut_slice(data, shards, idx);
+            observer.on_event(&BuildEvent::ShardStarted { shard: idx, n: shard_data.n() });
             let result = super::builder::run_build(params, &shard_data, artifacts_dir, observer)?;
             let working = result.working_data(shard_data);
             let BuildResult { graph, reordering, .. } = result;
@@ -130,7 +172,87 @@ impl ShardedSearcher {
                 offset: lo as u32,
             }));
         }
-        Ok(Self { shards: built, n, dim: data.dim() })
+        Ok(built)
+    }
+
+    /// Build the shards concurrently: `workers` scoped threads own
+    /// contiguous shard groups (the `api::serve` distribution idiom),
+    /// each running whole-shard builds pinned to `threads = 1` — the
+    /// parallelism budget is spent *across* shards. Builds share no
+    /// state, so the result is bit-identical to the sequential loop.
+    /// Observer events are buffered per shard and replayed in slice
+    /// order afterwards (a `&mut dyn` observer cannot be shared across
+    /// workers, and interleaved progress would be useless anyway); on a
+    /// build error, the first failing shard in slice order wins.
+    fn build_shards_parallel(
+        data: &AlignedMatrix,
+        shards: usize,
+        params: &Params,
+        workers: usize,
+        observer: &mut dyn BuildObserver,
+    ) -> crate::Result<Vec<Arc<Shard>>> {
+        let inner = Params { threads: 1, ..params.clone() };
+        let mut groups: Vec<Vec<usize>> = (0..workers).map(|_| Vec::new()).collect();
+        for idx in 0..shards {
+            groups[idx * workers / shards].push(idx);
+        }
+
+        type ShardOut = (usize, usize, crate::Result<Shard>, Vec<BuildEvent>);
+        let results: Vec<ShardOut> = std::thread::scope(|scope| {
+            let handles: Vec<_> = groups
+                .into_iter()
+                .map(|group| {
+                    let inner = &inner;
+                    scope.spawn(move || {
+                        group
+                            .into_iter()
+                            .map(|idx| {
+                                // each worker cuts its own slice just
+                                // in time: at most one in-flight slice
+                                // per worker, never a full corpus copy
+                                let (lo, shard_data) = Self::cut_slice(data, shards, idx);
+                                let sn = shard_data.n();
+                                let mut events: Vec<BuildEvent> = Vec::new();
+                                let built = NnDescent::new(inner.clone()).build_observed(
+                                    &shard_data,
+                                    &mut FnObserver(|e: &BuildEvent| events.push(*e)),
+                                );
+                                let shard = built.map(|result| {
+                                    let working = result.working_data(shard_data);
+                                    let BuildResult { graph, reordering, .. } = result;
+                                    Shard {
+                                        core: GraphIndex::new(working, graph),
+                                        reordering,
+                                        offset: lo as u32,
+                                    }
+                                });
+                                (idx, sn, shard, events)
+                            })
+                            .collect::<Vec<ShardOut>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("shard build worker panicked"))
+                .collect()
+        });
+
+        let mut slots: Vec<Option<ShardOut>> = Vec::new();
+        slots.resize_with(shards, || None);
+        for out in results {
+            slots[out.0] = Some(out);
+        }
+        let mut built = Vec::with_capacity(shards);
+        for slot in slots {
+            let (idx, sn, shard, events) = slot.expect("every shard is built exactly once");
+            observer.on_event(&BuildEvent::ShardStarted { shard: idx, n: sn });
+            for e in &events {
+                observer.on_event(e);
+            }
+            built.push(Arc::new(shard?));
+        }
+        Ok(built)
     }
 
     /// Wrap one built (or bundle-loaded) [`Index`](super::Index) as a
@@ -272,6 +394,77 @@ mod tests {
             let (res, _) = sharded.search(data.row_logical(qi), 3, &sp);
             assert_eq!(res[0].id, OriginalId(qi as u32), "self hit in global ids");
             assert!(res[0].dist < 1e-6);
+        }
+    }
+
+    #[test]
+    fn parallel_shard_builds_match_sequential_bitwise() {
+        let data = corpus(600, 13);
+        let seq_params = Params::default().with_k(6).with_seed(13).with_threads(1);
+        let par_params = seq_params.clone().with_threads(4);
+        let seq = ShardedSearcher::build(&data, 4, &seq_params).unwrap();
+        let par = ShardedSearcher::build(&data, 4, &par_params).unwrap();
+        assert_eq!(seq.shard_sizes(), par.shard_sizes());
+        let sp = SearchParams::default();
+        for qi in (0..600).step_by(29) {
+            let (a, sa) = seq.search(data.row_logical(qi), 5, &sp);
+            let (b, sb) = par.search(data.row_logical(qi), 5, &sp);
+            assert_eq!(sa, sb, "query {qi} stats");
+            assert_eq!(a.len(), b.len(), "query {qi}");
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.id, y.id, "query {qi}");
+                assert_eq!(x.dist.to_bits(), y.dist.to_bits(), "query {qi}");
+            }
+        }
+    }
+
+    #[test]
+    fn observer_events_are_tagged_and_in_shard_order() {
+        use crate::nndescent::observer::FnObserver;
+        let data = corpus(400, 17);
+        // exercise both the concurrent (threads=4) and sequential paths
+        for threads in [1usize, 4] {
+            let params = Params::default().with_k(5).with_seed(17).with_threads(threads);
+            let mut events: Vec<BuildEvent> = Vec::new();
+            let built = ShardedSearcher::build_observed(
+                &data,
+                4,
+                &params,
+                &mut FnObserver(|e: &BuildEvent| events.push(*e)),
+            )
+            .unwrap();
+            assert_eq!(built.shard_count(), 4);
+            let tags: Vec<(usize, usize)> = events
+                .iter()
+                .filter_map(|e| match e {
+                    BuildEvent::ShardStarted { shard, n } => Some((*shard, *n)),
+                    _ => None,
+                })
+                .collect();
+            assert_eq!(
+                tags,
+                vec![(0, 100), (1, 100), (2, 100), (3, 100)],
+                "threads={threads}: one tag per shard, slice order"
+            );
+            // every shard segment carries a full build lifecycle
+            assert_eq!(
+                events.iter().filter(|e| matches!(e, BuildEvent::Started { .. })).count(),
+                4,
+                "threads={threads}"
+            );
+            assert_eq!(
+                events.iter().filter(|e| matches!(e, BuildEvent::Finished { .. })).count(),
+                4,
+                "threads={threads}"
+            );
+            // tags precede their shard's Started event
+            let first_started =
+                events.iter().position(|e| matches!(e, BuildEvent::Started { .. })).unwrap();
+            let first_tag = events
+                .iter()
+                .position(|e| matches!(e, BuildEvent::ShardStarted { .. }))
+                .unwrap();
+            assert!(first_tag < first_started, "threads={threads}");
         }
     }
 

@@ -63,6 +63,7 @@ impl PyNndBaseline {
             reorder: false,
             reorder_iter: 1,
             max_candidates: 60, // pynndescent's internal cap
+            threads: 1,         // the baseline is explicitly single-core
         };
         NnDescent::new(params)
             .build(data)
@@ -101,6 +102,7 @@ mod tests {
             reorder: false,
             reorder_iter: 1,
             max_candidates: 60,
+            threads: 1,
         };
         assert_eq!(params.selection, SelectionKind::Heap);
         assert_eq!(params.compute, ComputeKind::Scalar);

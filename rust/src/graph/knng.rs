@@ -3,6 +3,40 @@
 
 use super::heap::{siftdown, sorted_neighbors, EMPTY_ID};
 
+/// One buffered candidate improvement from a parallel compute phase:
+/// "`nb` at distance `dist` may improve `target`'s list". Workers emit
+/// these instead of touching the heaps; [`KnnGraph::apply_updates`]
+/// replays a whole buffer in one deterministic merge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GraphUpdate {
+    /// Node whose neighbor list the update targets.
+    pub target: u32,
+    /// Candidate neighbor id.
+    pub nb: u32,
+    /// Squared-L2 distance between `target` and `nb`.
+    pub dist: f32,
+}
+
+impl GraphUpdate {
+    /// The one total order on update records — (target, distance,
+    /// neighbor id) — shared by [`KnnGraph::apply_updates`] and the
+    /// compute phase's buffer compaction. They **must** sort
+    /// identically: compaction's losslessness proof ("a record outside
+    /// its per-target 2k prefix is outside the merged apply prefix")
+    /// only holds when both sites use this exact ordering.
+    ///
+    /// `f32::total_cmp` keeps the comparator total (squared-L2
+    /// distances are never `-0.0` or NaN on this path, so it agrees
+    /// with the numeric order while staying panic-free).
+    #[inline]
+    pub fn order(a: &GraphUpdate, b: &GraphUpdate) -> std::cmp::Ordering {
+        a.target
+            .cmp(&b.target)
+            .then_with(|| a.dist.total_cmp(&b.dist))
+            .then_with(|| a.nb.cmp(&b.nb))
+    }
+}
+
 /// Approximate K-NN graph under construction.
 ///
 /// Storage is struct-of-arrays: separate `ids` / `dists` / `flags`
@@ -169,6 +203,30 @@ impl KnnGraph {
             self.rev_old[v as usize] += 1;
         }
         true
+    }
+
+    /// Apply a buffer of candidate updates in one deterministic phased
+    /// merge: records are sorted by (target, distance, neighbor id) and
+    /// replayed through [`push`](Self::push), so the outcome is a pure
+    /// function of the update *set* — independent of which worker
+    /// produced a record first or how per-thread buffers were
+    /// concatenated. `push`'s usual rules reject records that no longer
+    /// improve a list or duplicate an existing neighbor, and applying
+    /// best-first per target means a record is only counted when it
+    /// survives every better record for the same node. All updates carry
+    /// the `new` flag, matching the sequential compute step. Drains the
+    /// buffer; returns the number of successful updates (the convergence
+    /// signal `c` in Dong et al.).
+    pub fn apply_updates(&mut self, updates: &mut Vec<GraphUpdate>) -> u64 {
+        updates.sort_unstable_by(GraphUpdate::order);
+        let mut applied = 0u64;
+        for rec in updates.iter() {
+            if self.push(rec.target as usize, rec.nb, rec.dist, true) {
+                applied += 1;
+            }
+        }
+        updates.clear();
+        applied
     }
 
     /// Neighbors of `u` sorted ascending by distance.
@@ -364,6 +422,86 @@ mod tests {
             perm.sort_unstable();
             orig == perm
         });
+    }
+
+    /// Full-strip equality (ids, distance bits, flags) — the "same
+    /// graph" notion the parallel build's determinism contract uses.
+    fn assert_graphs_identical(a: &KnnGraph, b: &KnnGraph) {
+        assert_eq!(a.n(), b.n());
+        assert_eq!(a.k(), b.k());
+        for u in 0..a.n() {
+            assert_eq!(a.ids(u), b.ids(u), "node {u} ids");
+            let da: Vec<u32> = a.dists(u).iter().map(|d| d.to_bits()).collect();
+            let db: Vec<u32> = b.dists(u).iter().map(|d| d.to_bits()).collect();
+            assert_eq!(da, db, "node {u} dists");
+            assert_eq!(a.flags(u), b.flags(u), "node {u} flags");
+        }
+    }
+
+    #[test]
+    fn apply_updates_is_independent_of_buffer_order() {
+        // a realistic buffer: duplicates, cross-target interleaving,
+        // exact distance ties broken by id, and records that lose to
+        // better ones for the same target
+        let fresh = || {
+            let mut g = KnnGraph::new(8, 2);
+            g.push(0, 7, 9.0, true);
+            g.push(1, 7, 9.0, true);
+            g
+        };
+        let base = vec![
+            GraphUpdate { target: 0, nb: 1, dist: 2.0 },
+            GraphUpdate { target: 0, nb: 2, dist: 1.0 },
+            GraphUpdate { target: 0, nb: 3, dist: 1.0 }, // tie with nb=2 by distance
+            GraphUpdate { target: 1, nb: 4, dist: 3.0 },
+            GraphUpdate { target: 0, nb: 2, dist: 1.0 }, // duplicate record
+            GraphUpdate { target: 1, nb: 5, dist: 0.5 },
+            GraphUpdate { target: 1, nb: 6, dist: 4.0 }, // loses: two better fill k=2
+        ];
+        let mut expect_graph = fresh();
+        let mut buf = base.clone();
+        let expect_applied = expect_graph.apply_updates(&mut buf);
+        assert!(buf.is_empty(), "apply drains the buffer");
+        expect_graph.validate().unwrap();
+
+        // every permutation style a worker merge could produce
+        let mut shuffles: Vec<Vec<GraphUpdate>> = Vec::new();
+        let mut rev = base.clone();
+        rev.reverse();
+        shuffles.push(rev);
+        let mut rot = base.clone();
+        rot.rotate_left(3);
+        shuffles.push(rot);
+        check(Config::cases(20), "apply_updates order-independent", |g| {
+            let mut perm = base.clone();
+            for i in (1..perm.len()).rev() {
+                perm.swap(i, g.usize_in(0..i + 1));
+            }
+            shuffles.push(perm);
+            true
+        });
+        for (i, shuffle) in shuffles.into_iter().enumerate() {
+            let mut graph = fresh();
+            let mut buf = shuffle;
+            let applied = graph.apply_updates(&mut buf);
+            assert_eq!(applied, expect_applied, "shuffle {i} update count");
+            assert_graphs_identical(&expect_graph, &graph);
+        }
+    }
+
+    #[test]
+    fn apply_updates_counts_only_successful_pushes() {
+        let mut g = KnnGraph::new(4, 2);
+        g.push(0, 1, 1.0, true);
+        g.push(0, 2, 2.0, true);
+        let mut buf = vec![
+            GraphUpdate { target: 0, nb: 3, dist: 5.0 }, // worse than worst: rejected
+            GraphUpdate { target: 0, nb: 1, dist: 0.5 }, // duplicate neighbor: rejected
+            GraphUpdate { target: 0, nb: 3, dist: 0.5 }, // improves: applied
+        ];
+        assert_eq!(g.apply_updates(&mut buf), 1);
+        g.validate().unwrap();
+        assert!(g.ids(0).contains(&3));
     }
 
     #[test]

@@ -9,4 +9,4 @@ pub mod knng;
 
 pub use heap::{heap_push, siftdown, EMPTY_ID};
 pub use io::{load_graph, save_graph};
-pub use knng::KnnGraph;
+pub use knng::{GraphUpdate, KnnGraph};

@@ -13,6 +13,7 @@
 //!   knng build --config configs/mnist.toml
 //!   knng build --dataset clustered --n 16k --dim 8 --clusters 16 \
 //!              --selection turbo --compute blocked --reorder
+//!   knng build --dataset clustered --n 131k --dim 8 --threads 4
 //!   knng build --dataset fvecs --path corpus.fvecs --n 100k --reorder \
 //!              --save-index corpus.knni
 //!   knng query --index corpus.knni --batch queries.fvecs --k 10 --ef 64
@@ -78,6 +79,7 @@ fn build_spec() -> ArgSpec {
         .value("delta", "convergence threshold (default 0.001)")
         .value("selection", "naive|heap|turbo (default turbo)")
         .value("compute", "scalar|unrolled|blocked|pjrt (default blocked)")
+        .value("threads", "build worker threads; 1 = exact sequential engine (default: PALLAS_BUILD_THREADS env, else 1)")
         .value(KERNEL_FLAG, KERNEL_HELP)
         .flag("reorder", "enable the greedy reordering heuristic")
         .value("seed", "PRNG seed (default 1)")
@@ -147,7 +149,14 @@ fn cmd_build(argv: &[String]) -> anyhow::Result<()> {
     let eval = EvalOptions::new()
         .with_recall_queries(m.usize_or("recall-queries", 500)?)
         .with_seed(cfg.run.seed);
-    let index = IndexBuilder::from_config(&cfg).log_progress().build()?;
+    let mut builder = IndexBuilder::from_config(&cfg).log_progress();
+    // knob precedence: --threads > PALLAS_BUILD_THREADS env > 1
+    // (0 = "not given here", which leaves the env/default resolution on)
+    let threads = m.usize_or("threads", 0)?;
+    if threads > 0 {
+        builder = builder.threads(threads);
+    }
+    let index = builder.build()?;
     let report = index.evaluate(&eval);
     if let Some(path) = m.get("save") {
         // persist in the *original* id space (undo any reordering)

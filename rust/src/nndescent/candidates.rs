@@ -137,6 +137,137 @@ impl CandidateLists {
         self.new_len.iter().map(|&l| l as usize).sum::<usize>()
             + self.old_len.iter().map(|&l| l as usize).sum::<usize>()
     }
+
+    /// Clear all lists and split the storage into per-range mutable
+    /// chunks — one per entry of `bounds`, which must be ascending,
+    /// disjoint, and cover `0..n` exactly. Node ranges map to contiguous
+    /// slices of the flat arrays, so the chunks borrow disjoint storage
+    /// and can be handed to different worker threads (the parallel
+    /// selection phase's write decomposition).
+    pub(crate) fn split_ranges(&mut self, bounds: &[std::ops::Range<usize>]) -> Vec<CandChunk<'_>> {
+        self.clear();
+        let cap = self.cap;
+        let mut out = Vec::with_capacity(bounds.len());
+        let mut new_ids: &mut [u32] = &mut self.new_ids;
+        let mut new_len: &mut [u16] = &mut self.new_len;
+        let mut old_ids: &mut [u32] = &mut self.old_ids;
+        let mut old_len: &mut [u16] = &mut self.old_len;
+        let mut prev = 0usize;
+        for r in bounds {
+            assert_eq!(r.start, prev, "ranges must be ascending and gap-free");
+            let len = r.end - r.start;
+            let (ni, rest) = std::mem::take(&mut new_ids).split_at_mut(len * cap);
+            new_ids = rest;
+            let (nl, rest) = std::mem::take(&mut new_len).split_at_mut(len);
+            new_len = rest;
+            let (oi, rest) = std::mem::take(&mut old_ids).split_at_mut(len * cap);
+            old_ids = rest;
+            let (ol, rest) = std::mem::take(&mut old_len).split_at_mut(len);
+            old_len = rest;
+            out.push(CandChunk {
+                range: r.clone(),
+                cap,
+                new_ids: ni,
+                new_len: nl,
+                old_ids: oi,
+                old_len: ol,
+            });
+            prev = r.end;
+        }
+        assert_eq!(prev, self.n, "ranges must cover every node");
+        out
+    }
+}
+
+/// Mutable view over one contiguous node range of a [`CandidateLists`]:
+/// the same bounded-list operations, restricted to `range` so disjoint
+/// chunks can be written concurrently. Indices are *global* node ids —
+/// the chunk translates internally.
+#[derive(Debug)]
+pub(crate) struct CandChunk<'a> {
+    range: std::ops::Range<usize>,
+    cap: usize,
+    new_ids: &'a mut [u32],
+    new_len: &'a mut [u16],
+    old_ids: &'a mut [u32],
+    old_len: &'a mut [u16],
+}
+
+impl CandChunk<'_> {
+    /// The global node range this chunk owns.
+    pub(crate) fn range(&self) -> std::ops::Range<usize> {
+        self.range.clone()
+    }
+
+    #[inline]
+    fn local(&self, u: usize) -> usize {
+        debug_assert!(self.range.contains(&u), "node {u} outside chunk {:?}", self.range);
+        u - self.range.start
+    }
+
+    #[inline]
+    pub(crate) fn new_slice(&self, u: usize) -> &[u32] {
+        let l = self.local(u);
+        &self.new_ids[l * self.cap..l * self.cap + self.new_len[l] as usize]
+    }
+
+    #[inline]
+    pub(crate) fn old_slice(&self, u: usize) -> &[u32] {
+        let l = self.local(u);
+        &self.old_ids[l * self.cap..l * self.cap + self.old_len[l] as usize]
+    }
+
+    #[inline]
+    pub(crate) fn new_len(&self, u: usize) -> usize {
+        self.new_len[self.local(u)] as usize
+    }
+
+    #[inline]
+    pub(crate) fn old_len(&self, u: usize) -> usize {
+        self.old_len[self.local(u)] as usize
+    }
+
+    /// Append `v` to `u`'s new list; returns false when full.
+    #[inline]
+    pub(crate) fn push_new(&mut self, u: usize, v: u32) -> bool {
+        let l = self.local(u);
+        let len = self.new_len[l] as usize;
+        if len >= self.cap {
+            return false;
+        }
+        self.new_ids[l * self.cap + len] = v;
+        self.new_len[l] = (len + 1) as u16;
+        true
+    }
+
+    /// Append `v` to `u`'s old list; returns false when full.
+    #[inline]
+    pub(crate) fn push_old(&mut self, u: usize, v: u32) -> bool {
+        let l = self.local(u);
+        let len = self.old_len[l] as usize;
+        if len >= self.cap {
+            return false;
+        }
+        self.old_ids[l * self.cap + len] = v;
+        self.old_len[l] = (len + 1) as u16;
+        true
+    }
+
+    /// Overwrite slot `slot` of `u`'s new list (reservoir replacement).
+    #[inline]
+    pub(crate) fn replace_new(&mut self, u: usize, slot: usize, v: u32) {
+        let l = self.local(u);
+        debug_assert!(slot < self.new_len[l] as usize);
+        self.new_ids[l * self.cap + slot] = v;
+    }
+
+    /// Overwrite slot `slot` of `u`'s old list.
+    #[inline]
+    pub(crate) fn replace_old(&mut self, u: usize, slot: usize, v: u32) {
+        let l = self.local(u);
+        debug_assert!(slot < self.old_len[l] as usize);
+        self.old_ids[l * self.cap + slot] = v;
+    }
 }
 
 #[cfg(test)]
@@ -185,5 +316,42 @@ mod tests {
         c.set_old(1, &[6]);
         assert_eq!(c.new_slice(1), &[3, 4, 5]);
         assert_eq!(c.old_slice(1), &[6]);
+    }
+
+    #[test]
+    fn split_ranges_gives_disjoint_global_indexed_chunks() {
+        let mut c = CandidateLists::new(10, 3);
+        c.push_new(0, 99); // split must clear leftovers from prior use
+        {
+            let mut chunks = c.split_ranges(&[0..4, 4..7, 7..10]);
+            assert_eq!(chunks.len(), 3);
+            assert_eq!(chunks[1].range(), 4..7);
+            // writes through a chunk use global node ids
+            assert!(chunks[0].push_new(0, 5));
+            assert!(chunks[1].push_new(4, 8));
+            assert!(chunks[1].push_old(6, 2));
+            assert!(chunks[2].push_new(9, 1));
+            // cap respected per list
+            assert!(chunks[2].push_old(7, 1) && chunks[2].push_old(7, 2) && chunks[2].push_old(7, 3));
+            assert!(!chunks[2].push_old(7, 4), "full");
+            chunks[2].replace_old(7, 1, 6);
+            assert_eq!(chunks[2].old_slice(7), &[1, 6, 3]);
+            assert_eq!(chunks[1].new_len(4), 1);
+            assert_eq!(chunks[1].old_len(4), 0);
+        }
+        // the writes landed in the parent structure at the same ids
+        assert_eq!(c.new_slice(0), &[5]);
+        assert_eq!(c.new_slice(4), &[8]);
+        assert_eq!(c.old_slice(6), &[2]);
+        assert_eq!(c.new_slice(9), &[1]);
+        assert_eq!(c.old_slice(7), &[1, 6, 3]);
+        assert_eq!(c.new_slice(1), &[] as &[u32], "split cleared the stale entry");
+    }
+
+    #[test]
+    #[should_panic(expected = "cover every node")]
+    fn split_ranges_rejects_partial_cover() {
+        let mut c = CandidateLists::new(6, 2);
+        let _ = c.split_ranges(&[0..3]);
     }
 }

@@ -19,11 +19,11 @@
 //! flop counter counts what the hardware actually evaluated.
 
 use super::candidates::CandidateLists;
-use crate::cachesim::trace::Tracer;
+use crate::cachesim::trace::{NoTracer, Tracer};
 use crate::config::schema::ComputeKind;
 use crate::dataset::AlignedMatrix;
 use crate::distance::blocked::{pairwise_blocked_active, pairwise_flat, PairwiseBuf, BLOCK};
-use crate::graph::KnnGraph;
+use crate::graph::{GraphUpdate, KnnGraph};
 use crate::util::counters::FlopCounter;
 
 /// A batch pairwise-distance backend.
@@ -249,6 +249,145 @@ pub fn compute_step<E: PairwiseEngine, T: Tracer>(
     updates
 }
 
+/// Frozen-graph compute step over a node range — the parallel build's
+/// worker body. Like [`compute_step`] restricted to `range`, except the
+/// graph is read-only: improvements are screened against the
+/// *phase-start* heap thresholds and buffered as [`GraphUpdate`]s
+/// instead of pushed, so T workers over disjoint ranges share the graph
+/// without locks and [`KnnGraph::apply_updates`] replays the merged
+/// buffer deterministically afterwards.
+///
+/// Because the screen never tightens mid-phase (the sequential step
+/// tightens after every successful push), the buffer can contain
+/// records the apply phase will reject — that is the phased-update
+/// relaxation of NN-Descent, and it is what makes the buffered set a
+/// pure function of `(graph, candidates)`, independent of the range
+/// partitioning. Returns the number of distance evaluations performed —
+/// unchanged from the sequential step (the same candidate sets run
+/// through the same kernels); the caller folds it into its counter.
+///
+/// Memory: early iterations would otherwise buffer most evaluated
+/// pairs (a random heap's worst-of-k is easy to beat), so the buffer is
+/// periodically compacted with [`compact_updates`] — an
+/// outcome-preserving reduction, see its proof sketch — keeping the
+/// footprint at O(k · targets) instead of O(dist_evals).
+pub(crate) fn compute_step_frozen(
+    graph: &KnnGraph,
+    data: &AlignedMatrix,
+    cands: &CandidateLists,
+    range: std::ops::Range<usize>,
+    engine: &mut NativeEngine,
+    scratch: &mut ComputeScratch,
+    out: &mut Vec<GraphUpdate>,
+) -> u64 {
+    // compact every ~64k appended records (~768 KB of buffer)
+    const COMPACT_CHUNK: usize = 1 << 16;
+    let keep = 2 * graph.k();
+    let mut next_compact = out.len() + COMPACT_CHUNK;
+    let mut evals = 0u64;
+    let blocked = engine.is_blocked();
+    let flat_pair: fn(&[f32], &[f32]) -> f32 = match engine.kind {
+        ComputeKind::Scalar => crate::distance::sq_l2_scalar,
+        _ => crate::distance::dispatch::active().pair,
+    };
+
+    for u in range {
+        let newc = cands.new_slice(u);
+        if newc.is_empty() {
+            continue;
+        }
+        let oldc = cands.old_slice(u);
+        let n_new = newc.len();
+        let m = n_new + oldc.len();
+        if m < 2 {
+            continue;
+        }
+        scratch.set.clear();
+        scratch.set.extend_from_slice(newc);
+        scratch.set.extend_from_slice(oldc);
+        scratch.thresholds.clear();
+        scratch.thresholds.extend(scratch.set.iter().map(|&v| graph.worst(v as usize)));
+
+        if blocked {
+            // full mutual block, same accounting as the sequential step
+            evals += engine.pairwise(data, &scratch.set, m, &mut scratch.buf, &mut NoTracer);
+            for i in 0..n_new {
+                for j in (i + 1)..m {
+                    let d = scratch.buf.get(i, j);
+                    if d >= scratch.thresholds[i] && d >= scratch.thresholds[j] {
+                        continue;
+                    }
+                    let (a, b) = (scratch.set[i], scratch.set[j]);
+                    if a == b {
+                        continue;
+                    }
+                    if d < scratch.thresholds[i] {
+                        out.push(GraphUpdate { target: a, nb: b, dist: d });
+                    }
+                    if d < scratch.thresholds[j] {
+                        out.push(GraphUpdate { target: b, nb: a, dist: d });
+                    }
+                }
+            }
+        } else {
+            // pair-at-a-time over exactly the new×new + new×old pairs
+            for i in 0..n_new {
+                let a = scratch.set[i];
+                for j in (i + 1)..m {
+                    let b = scratch.set[j];
+                    if a == b {
+                        continue;
+                    }
+                    let d = flat_pair(data.row(a as usize), data.row(b as usize));
+                    evals += 1;
+                    if d < scratch.thresholds[i] {
+                        out.push(GraphUpdate { target: a, nb: b, dist: d });
+                    }
+                    if d < scratch.thresholds[j] {
+                        out.push(GraphUpdate { target: b, nb: a, dist: d });
+                    }
+                }
+            }
+        }
+        if out.len() >= next_compact {
+            compact_updates(out, keep);
+            next_compact = out.len() + COMPACT_CHUNK;
+        }
+    }
+    evals
+}
+
+/// Shrink an update buffer to the `keep` best distinct-neighbor records
+/// per target (sorted by the apply comparator, exact duplicates
+/// removed) without changing what [`KnnGraph::apply_updates`] will do
+/// with it.
+///
+/// Why `keep = 2k` is lossless: the apply phase replays records
+/// best-first per target, so it can perform at most `k` successful
+/// pushes (after the k-th, the heap's worst is ≤ every later record)
+/// and at most `k` duplicate-rejections against pre-existing neighbors
+/// (each distinct id once — same-buffer duplicates are removed here).
+/// Every record beyond that 2k-long active prefix is distance-rejected
+/// with no effect on the graph *or* the update count, so dropping it is
+/// invisible. This also keeps per-worker compaction consistent with the
+/// global merge: a record outside its own worker's per-target 2k prefix
+/// is outside the merged prefix too.
+pub(crate) fn compact_updates(buf: &mut Vec<GraphUpdate>, keep: usize) {
+    buf.sort_unstable_by(GraphUpdate::order);
+    // same (target, nb) ⇒ same pair ⇒ bit-equal distance: true duplicates
+    buf.dedup_by(|a, b| a.target == b.target && a.nb == b.nb);
+    let mut cur = u32::MAX; // no valid target (ids are < n ≤ u32::MAX − 1)
+    let mut count = 0usize;
+    buf.retain(|r| {
+        if r.target != cur {
+            cur = r.target;
+            count = 0;
+        }
+        count += 1;
+        count <= keep
+    });
+}
+
 #[inline]
 fn native_kind<E: PairwiseEngine>(e: &E) -> ComputeKind {
     match e.name() {
@@ -343,6 +482,93 @@ mod tests {
         assert!((ms - mu).abs() / ms < 1e-5, "scalar {ms} vs unrolled {mu}");
         // blocked can only be ≤ flat quality-wise (it evaluates a superset)
         assert!(mb <= ms * 1.001, "blocked {mb} should be at least as good as scalar {ms}");
+    }
+
+    /// One selection's worth of shared state for the frozen-vs-live
+    /// comparison below.
+    fn graph_and_candidates(seed: u64) -> (KnnGraph, crate::dataset::AlignedMatrix, CandidateLists) {
+        let n = 400;
+        let k = 8;
+        let cap = 6;
+        let data = SynthGaussian::single(n, 16, seed).generate();
+        let mut graph = KnnGraph::new(n, k);
+        let mut rng = Pcg64::new(seed);
+        let mut counter = FlopCounter::new(16);
+        init_random(&mut graph, &data, &mut rng, &mut counter, &mut NoTracer);
+        let mut sel = Selector::new(SelectionKind::Turbo, n, cap);
+        let mut cands = CandidateLists::new(n, cap);
+        sel.select(&mut graph, &mut rng, &mut cands, &mut NoTracer);
+        (graph, data, cands)
+    }
+
+    #[test]
+    fn frozen_step_plus_apply_matches_live_step() {
+        // the phased relaxation must land on the same neighbor lists as
+        // the in-place step: both are top-k over the same evaluated
+        // pairs (ties at the k-th boundary could differ, but are
+        // measure-zero on continuous data) — and the evaluation counts
+        // must be identical
+        for kind in [ComputeKind::Scalar, ComputeKind::Unrolled, ComputeKind::Blocked] {
+            let (graph0, data, cands) = graph_and_candidates(13);
+            let mut scratch = ComputeScratch::new(6);
+
+            let mut live = graph0.clone();
+            let mut live_counter = FlopCounter::new(16);
+            let mut engine = NativeEngine::new(kind);
+            compute_step(
+                &mut live,
+                &data,
+                &cands,
+                &mut engine,
+                &mut live_counter,
+                &mut scratch,
+                &mut NoTracer,
+            );
+
+            let mut frozen = graph0.clone();
+            let mut engine = NativeEngine::new(kind);
+            let mut buf = Vec::new();
+            // two disjoint ranges, as two workers would cover them
+            let mut frozen_evals =
+                compute_step_frozen(&graph0, &data, &cands, 0..200, &mut engine, &mut scratch, &mut buf);
+            frozen_evals +=
+                compute_step_frozen(&graph0, &data, &cands, 200..400, &mut engine, &mut scratch, &mut buf);
+            let applied = frozen.apply_updates(&mut buf);
+            assert!(applied > 0, "{kind:?}: phase must make progress");
+            assert_eq!(
+                live_counter.dist_evals, frozen_evals,
+                "{kind:?}: same candidate sets ⇒ same evaluation count"
+            );
+            frozen.validate().unwrap();
+            for u in 0..400 {
+                assert_eq!(live.sorted(u), frozen.sorted(u), "{kind:?}: node {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn compaction_is_invisible_to_the_apply_phase() {
+        // full buffer vs aggressively compacted buffer: same graph,
+        // same update count — the losslessness claim of compact_updates
+        let (graph0, data, cands) = graph_and_candidates(29);
+        let mut scratch = ComputeScratch::new(6);
+        let mut engine = NativeEngine::new(ComputeKind::Blocked);
+        let mut full = Vec::new();
+        compute_step_frozen(&graph0, &data, &cands, 0..400, &mut engine, &mut scratch, &mut full);
+        assert!(!full.is_empty());
+        let mut compacted = full.clone();
+        compact_updates(&mut compacted, 2 * graph0.k());
+        assert!(compacted.len() <= full.len());
+
+        let mut a = graph0.clone();
+        let mut b = graph0.clone();
+        let applied_full = a.apply_updates(&mut full);
+        let applied_compacted = b.apply_updates(&mut compacted);
+        assert_eq!(applied_full, applied_compacted, "update counts must match");
+        for u in 0..400 {
+            assert_eq!(a.sorted(u), b.sorted(u), "node {u}");
+        }
+        b.validate().unwrap();
     }
 
     #[test]

@@ -109,6 +109,13 @@ impl NnDescent {
 
     /// Like [`build`], reporting progress through a [`BuildObserver`].
     ///
+    /// When the resolved thread count ([`Params::threads`], then the
+    /// `PALLAS_BUILD_THREADS` environment, then 1) exceeds 1, the build
+    /// runs on the phased multi-threaded engine
+    /// ([`parallel`](super::parallel)); `T = 1` takes the unchanged
+    /// sequential path below, so single-threaded builds stay
+    /// bit-identical across versions of this knob.
+    ///
     /// [`build`]: NnDescent::build
     pub fn build_observed(
         &self,
@@ -120,6 +127,22 @@ impl NnDescent {
             "pjrt backend needs an engine: enable the `pjrt` cargo feature and use \
              build_with_engine(runtime::PjrtEngine); native builds use scalar|unrolled|blocked"
         );
+        let threads = super::parallel::effective_build_threads(&self.params, data.n());
+        if threads > 1 {
+            // The parallel engine implements exactly one sampling
+            // scheme (the paper's turbosampling). Substituting it for a
+            // requested naive/heap run would silently change the
+            // algorithm under test, so those ablation selections keep
+            // their configured (sequential) implementation instead.
+            if self.params.selection == crate::config::schema::SelectionKind::Turbo {
+                return Ok(super::parallel::build(&self.params, data, threads, observer));
+            }
+            crate::log_info!(
+                "build threads={threads} requested, but selection `{}` has no parallel \
+                 implementation (only turbo does) — running the sequential engine",
+                self.params.selection.name()
+            );
+        }
         let mut engine = NativeEngine::new(self.params.compute);
         Ok(self.build_with_engine_observed(data, &mut engine, &mut NoTracer, observer))
     }
@@ -135,8 +158,12 @@ impl NnDescent {
     }
 
     /// Build with an explicit pairwise engine, memory tracer, and
-    /// progress observer — the fully-general entry point every other
-    /// `build*` method funnels into.
+    /// progress observer — the fully-general *sequential* entry point.
+    /// Explicit-engine builds (cache-simulation runs, the PJRT backend)
+    /// always run single-threaded: an engine is `&mut` shared state and
+    /// a tracer records a serial access stream, so [`Params::threads`]
+    /// is deliberately ignored here (`build_observed` owns the parallel
+    /// routing for native backends).
     pub fn build_with_engine_observed<E: PairwiseEngine, T: Tracer>(
         &self,
         data: &AlignedMatrix,

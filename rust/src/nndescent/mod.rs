@@ -19,13 +19,17 @@
 //! matrix and graph so data-space neighbors become memory neighbors.
 //!
 //! [`driver::NnDescent`] owns the loop, timing, convergence, and the
-//! permutation bookkeeping.
+//! permutation bookkeeping. With [`Params::threads`] > 1 (or
+//! `PALLAS_BUILD_THREADS` set) the driver routes the build through the
+//! phased multi-threaded engine in [`parallel`]; `threads = 1` stays on
+//! the bit-exact sequential path.
 
 pub mod candidates;
 pub mod compute;
 pub mod driver;
 pub mod init;
 pub mod observer;
+pub mod parallel;
 pub mod params;
 pub mod reorder;
 pub mod reorder_alt;
@@ -34,4 +38,5 @@ pub mod selection;
 pub use candidates::CandidateLists;
 pub use driver::{BuildResult, NnDescent};
 pub use observer::{BuildEvent, BuildObserver, FnObserver, LoggingObserver, NoopObserver};
+pub use parallel::{effective_build_threads, resolve_build_threads};
 pub use params::Params;

@@ -18,6 +18,14 @@ use crate::util::counters::IterStats;
 /// One step of an index build, emitted in order.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum BuildEvent {
+    /// A sharded build is about to report shard `shard`'s events: every
+    /// event until the next `ShardStarted` belongs to that shard (`n`
+    /// is the shard's slice size). Emitted only by
+    /// [`ShardedSearcher`](crate::api::ShardedSearcher) builds, in
+    /// slice order — including when the shards themselves were built
+    /// concurrently (each shard's events are buffered and replayed in
+    /// order, so observers never see interleaving).
+    ShardStarted { shard: usize, n: usize },
     /// The build started: graph of `n` points, `dim` logical dimensions,
     /// `k` neighbors per node.
     Started { n: usize, dim: usize, k: usize },
@@ -79,6 +87,9 @@ pub struct LoggingObserver;
 impl BuildObserver for LoggingObserver {
     fn on_event(&mut self, event: &BuildEvent) {
         match *event {
+            BuildEvent::ShardStarted { shard, n } => {
+                crate::log_info!("shard {shard}: build starting ({n} points)");
+            }
             BuildEvent::Started { n, dim, k } => {
                 crate::log_info!("build started: n={n}, d={dim}, k={k}");
             }
@@ -131,6 +142,7 @@ mod tests {
     #[test]
     fn noop_and_logging_accept_all_events() {
         let events = [
+            BuildEvent::ShardStarted { shard: 0, n: 4 },
             BuildEvent::Started { n: 4, dim: 8, k: 2 },
             BuildEvent::Reordered { secs: 0.01 },
             BuildEvent::Iteration {

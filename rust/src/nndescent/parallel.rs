@@ -1,0 +1,366 @@
+//! Multi-threaded NN-Descent: partitioned select/compute phases with a
+//! deterministic phased update merge.
+//!
+//! The sequential driver's iteration is `select → [reorder] → compute`,
+//! every step mutating one `KnnGraph` in place. This engine keeps the
+//! same skeleton but runs the two heavy phases data-parallel over
+//! contiguous working-id ranges, one range per worker (Baron & Darling,
+//! arXiv:2202.00517: NN-Descent parallelizes via partitioned candidate
+//! generation with phased update application):
+//!
+//! * **Select** — each worker fills its range's candidate lists through
+//!   a disjoint `CandChunk`, using the counter-based partitioned
+//!   sampler (`selection::partitioned`); the graph is read-only. The
+//!   driver then runs the sequential flag-clear pass (cheap `O(n·k)`,
+//!   and it touches cross-range reverse counters).
+//! * **Compute** — each worker evaluates its range's candidate pairs
+//!   through its own [`ComputeScratch`] and kernel engine
+//!   ([`compute_step_frozen`]), buffering `(target, nb, dist)` records
+//!   instead of touching the heaps. The driver concatenates the buffers
+//!   and replays them in one deterministic merge, sorted by (target,
+//!   distance, id) ([`KnnGraph::apply_updates`]).
+//!
+//! ## Determinism contract
+//!
+//! Coin flips and reservoir slots are counter-based (keyed by seed,
+//! iteration, and edge/target — never by worker), the frozen compute
+//! screen never depends on phase progress, and the update merge sorts
+//! before applying. The built graph is therefore a pure function of
+//! `(params, data)` — independent of thread interleaving **and of the
+//! thread count**: `threads = 2` and `threads = 8` produce bit-identical
+//! results. `threads = 1` does not enter this engine at all; the driver
+//! routes it to the unchanged sequential path, so T=1 stays bit-identical
+//! to historical builds. The phased merge relaxes Dong et al.'s
+//! immediate updates (a worker cannot see improvements buffered in the
+//! same phase), so the T>1 graph differs from the sequential one — same
+//! algorithm family, equal quality (gated within 0.02 recall by the
+//! integration tests), typically ±1 iteration to converge.
+//!
+//! ## Threading model
+//!
+//! Worker *state* (scratch, buffers, counters) is long-lived — allocated
+//! once per build and reused across every phase of every iteration. The
+//! OS threads are scoped per phase (`std::thread::scope`): the graph
+//! alternates between shared (phases) and exclusive (merge, reorder)
+//! access, which scoped borrows express safely where a persistent
+//! channel/worker pool (the `api::serve` idiom) would need the phase
+//! lifetimes erased. Spawn cost is a few µs per phase — noise next to a
+//! compute phase. Std threads only, no dependencies.
+
+use super::candidates::CandidateLists;
+use super::compute::{compute_step_frozen, ComputeScratch, NativeEngine};
+use super::driver::BuildResult;
+use super::init::init_random;
+use super::observer::{BuildEvent, BuildObserver};
+use super::params::Params;
+use super::reorder::{greedy_permutation, Reordering};
+use super::selection::clear_sampled_flags;
+use super::selection::partitioned::{select_into_chunk, selection_seed, SelectionThresholds};
+use crate::cachesim::trace::NoTracer;
+use crate::dataset::AlignedMatrix;
+use crate::graph::{GraphUpdate, KnnGraph};
+use crate::util::counters::{FlopCounter, IterStats};
+use crate::util::rng::Pcg64;
+use crate::util::timer::Timer;
+use std::ops::Range;
+
+/// Smallest node range worth a worker: below this the spawn + merge
+/// overhead dominates and the thread count is clamped down.
+const MIN_NODES_PER_WORKER: usize = 8;
+
+/// Resolve the configured thread count against the environment:
+/// explicit `Params::threads` wins, then `PALLAS_BUILD_THREADS`, then 1.
+/// (Unparseable or zero environment values fall back to 1 rather than
+/// erroring: the env var is an operator override, not an API surface.)
+pub fn resolve_build_threads(params_threads: usize) -> usize {
+    if params_threads > 0 {
+        return params_threads;
+    }
+    std::env::var("PALLAS_BUILD_THREADS")
+        .ok()
+        .and_then(|s| s.trim().parse::<usize>().ok())
+        .filter(|&t| t >= 1)
+        .unwrap_or(1)
+}
+
+/// Worker count actually used for a corpus of `n` points: the resolved
+/// count clamped so every range keeps at least [`MIN_NODES_PER_WORKER`]
+/// nodes. A result of 1 means "run the sequential engine".
+pub fn effective_build_threads(params: &Params, n: usize) -> usize {
+    resolve_build_threads(params.threads).clamp(1, (n / MIN_NODES_PER_WORKER).max(1))
+}
+
+/// Long-lived per-worker build state, reused across every phase of
+/// every iteration (see module docs: only the OS threads are scoped).
+struct WorkerState {
+    scratch: ComputeScratch,
+    counter: FlopCounter,
+    updates: Vec<GraphUpdate>,
+    stats: IterStats,
+}
+
+impl WorkerState {
+    fn new(cap: usize, dim: usize) -> Self {
+        Self {
+            scratch: ComputeScratch::new(cap),
+            counter: FlopCounter::new(dim),
+            updates: Vec::new(),
+            stats: IterStats::default(),
+        }
+    }
+
+    /// Compute-phase body: evaluate this range's candidate pairs against
+    /// the frozen graph, buffering improvement records.
+    fn compute_phase(
+        &mut self,
+        iter: usize,
+        graph: &KnnGraph,
+        data: &AlignedMatrix,
+        cands: &CandidateLists,
+        range: Range<usize>,
+        kind: crate::config::schema::ComputeKind,
+    ) {
+        let mut t = Timer::new();
+        t.start();
+        self.updates.clear();
+        // per-phase counter: the driver folds it into the build total
+        // through FlopCounter::merge after the workers join
+        self.counter.dist_evals = 0;
+        let mut engine = NativeEngine::new(kind);
+        let evals = compute_step_frozen(
+            graph,
+            data,
+            cands,
+            range,
+            &mut engine,
+            &mut self.scratch,
+            &mut self.updates,
+        );
+        self.counter.add_evals(evals);
+        t.stop();
+        self.stats =
+            IterStats { iter, compute_secs: t.secs(), dist_evals: evals, ..Default::default() };
+    }
+}
+
+/// Build a K-NN graph with `threads ≥ 2` workers. The caller (the
+/// driver) resolves the thread count and routes `threads == 1` to the
+/// sequential engine; `params.compute` must be a native backend.
+pub(crate) fn build(
+    params: &Params,
+    data: &AlignedMatrix,
+    threads: usize,
+    observer: &mut dyn BuildObserver,
+) -> BuildResult {
+    let p = params;
+    let n = data.n();
+    assert!(n >= 2, "need at least two points");
+    debug_assert!(threads >= 2, "the driver routes T=1 to the sequential engine");
+    debug_assert_eq!(
+        p.selection,
+        crate::config::schema::SelectionKind::Turbo,
+        "the driver routes non-turbo selections to their sequential implementations"
+    );
+    let k = p.k.min(n - 1);
+    let cap = p.cand_cap();
+
+    let mut total = Timer::new();
+    total.start();
+
+    // same init stream as the sequential driver: the random starting
+    // graph is identical for every thread count
+    let mut rng = Pcg64::new_stream(p.seed, 0xD00D);
+    let mut graph = KnnGraph::new(n, k);
+    let mut counter = FlopCounter::new(data.dim());
+    let mut cands = CandidateLists::new(n, cap);
+
+    observer.on_event(&BuildEvent::Started { n, dim: data.dim(), k });
+    init_random(&mut graph, data, &mut rng, &mut counter, &mut NoTracer);
+
+    let bounds: Vec<Range<usize>> =
+        (0..threads).map(|w| w * n / threads..(w + 1) * n / threads).collect();
+    let mut workers: Vec<WorkerState> =
+        (0..threads).map(|_| WorkerState::new(cap, data.dim())).collect();
+    let mut merged: Vec<GraphUpdate> = Vec::new();
+
+    let mut owned: Option<AlignedMatrix> = None;
+    let mut reordering: Option<Reordering> = None;
+    let mut per_iter = Vec::new();
+    let threshold = (p.delta * n as f64 * k as f64) as u64;
+    let mut iterations = 0;
+    let mut converged = false;
+
+    for it in 0..p.max_iters {
+        iterations = it + 1;
+        let mut stats = IterStats { iter: it, ..Default::default() };
+
+        // ---- greedy reorder (sequential, once — same as the driver) ----
+        if p.reorder && it == p.reorder_iter && reordering.is_none() {
+            let mut t = Timer::new();
+            t.start();
+            let active: &AlignedMatrix = owned.as_ref().unwrap_or(data);
+            let r = greedy_permutation(&graph, &mut NoTracer);
+            let permuted = active.permuted(&r.inv);
+            graph = graph.apply_permutation(&r.sigma);
+            owned = Some(permuted);
+            reordering = Some(r);
+            t.stop();
+            stats.reorder_secs = t.secs();
+            observer.on_event(&BuildEvent::Reordered { secs: stats.reorder_secs });
+        }
+        let active: &AlignedMatrix = owned.as_ref().unwrap_or(data);
+
+        // ---- selection (parallel, owner-writes partition) --------------
+        let mut t = Timer::new();
+        t.start();
+        let iter_seed = selection_seed(p.seed, it);
+        let thr = SelectionThresholds::compute(&graph, cap);
+        {
+            let graph_ref = &graph;
+            let thr_ref = &thr;
+            std::thread::scope(|s| {
+                for mut chunk in cands.split_ranges(&bounds) {
+                    s.spawn(move || select_into_chunk(graph_ref, thr_ref, iter_seed, &mut chunk));
+                }
+            });
+        }
+        clear_sampled_flags(&mut graph, &cands, &mut NoTracer);
+        t.stop();
+        stats.select_secs = t.secs();
+
+        // ---- compute (parallel, frozen graph) + phased merge -----------
+        let mut t = Timer::new();
+        t.start();
+        {
+            let graph_ref = &graph;
+            let cands_ref = &cands;
+            std::thread::scope(|s| {
+                for (state, range) in workers.iter_mut().zip(&bounds) {
+                    let range = range.clone();
+                    s.spawn(move || {
+                        state.compute_phase(it, graph_ref, active, cands_ref, range, p.compute)
+                    });
+                }
+            });
+        }
+        for state in &mut workers {
+            stats.merge(&state.stats);
+            counter.merge(&state.counter);
+            merged.append(&mut state.updates);
+        }
+        let updates = graph.apply_updates(&mut merged);
+        t.stop();
+        // the phase wall-clock (workers + merge), not the max worker span
+        stats.compute_secs = t.secs();
+        stats.updates = updates;
+        observer.on_event(&BuildEvent::from_iter_stats(&stats));
+        per_iter.push(stats);
+
+        if updates <= threshold {
+            converged = true;
+            break;
+        }
+    }
+
+    total.stop();
+    observer.on_event(&BuildEvent::Finished { iterations, converged, total_secs: total.secs() });
+    BuildResult {
+        graph,
+        iterations,
+        per_iter,
+        stats: counter,
+        reordering,
+        total_secs: total.secs(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::schema::ComputeKind;
+    use crate::dataset::synth::SynthGaussian;
+    use crate::nndescent::observer::NoopObserver;
+
+    #[test]
+    fn worker_state_and_shared_refs_are_thread_safe() {
+        // Send/Sync audit: the spawn sites require exactly these bounds;
+        // a field change that breaks them should fail here, loudly, not
+        // deep inside a scope (“the new worker state stays shippable”).
+        fn assert_send<T: Send>() {}
+        fn assert_sync<T: Sync>() {}
+        assert_send::<WorkerState>();
+        assert_send::<&mut WorkerState>();
+        assert_sync::<KnnGraph>();
+        assert_sync::<CandidateLists>();
+        assert_sync::<AlignedMatrix>();
+        assert_sync::<SelectionThresholds>();
+        assert_send::<Vec<GraphUpdate>>();
+    }
+
+    #[test]
+    fn resolve_prefers_explicit_over_default() {
+        // explicit values win unconditionally (the env path is covered
+        // by the integration suite, which owns process-global state)
+        assert_eq!(resolve_build_threads(3), 3);
+        assert_eq!(resolve_build_threads(1), 1);
+    }
+
+    #[test]
+    fn effective_threads_clamps_to_corpus_size() {
+        let p = Params::default().with_threads(16);
+        assert_eq!(effective_build_threads(&p, 10_000), 16);
+        assert_eq!(effective_build_threads(&p, 64), 8, "ranges keep ≥ 8 nodes");
+        assert_eq!(effective_build_threads(&p, 9), 1, "tiny corpora run sequentially");
+        let p1 = Params::default().with_threads(1);
+        assert_eq!(effective_build_threads(&p1, 10_000), 1);
+    }
+
+    #[test]
+    fn parallel_build_is_valid_and_deterministic() {
+        let data = SynthGaussian::single(400, 8, 21).generate();
+        let params = Params::default()
+            .with_k(8)
+            .with_seed(21)
+            .with_compute(ComputeKind::Blocked)
+            .with_threads(2);
+        let a = build(&params, &data, 2, &mut NoopObserver);
+        let b = build(&params, &data, 2, &mut NoopObserver);
+        a.graph.validate().unwrap();
+        assert!(a.iterations >= 2);
+        assert_eq!(a.iterations, b.iterations);
+        assert_eq!(a.stats.dist_evals, b.stats.dist_evals);
+        assert_eq!(a.total_updates(), b.total_updates());
+        for u in 0..400 {
+            assert_eq!(a.graph.sorted(u), b.graph.sorted(u), "node {u}");
+        }
+    }
+
+    #[test]
+    fn thread_count_does_not_change_the_result() {
+        // the counter-based phases make T a pure performance knob:
+        // 2, 3, and 4 workers produce bit-identical graphs and stats
+        let data = SynthGaussian::single(500, 8, 5).generate();
+        let params =
+            Params::default().with_k(10).with_seed(5).with_compute(ComputeKind::Blocked);
+        let base = build(&params, &data, 2, &mut NoopObserver);
+        for t in [3usize, 4] {
+            let other = build(&params, &data, t, &mut NoopObserver);
+            assert_eq!(base.iterations, other.iterations, "T={t}");
+            assert_eq!(base.stats.dist_evals, other.stats.dist_evals, "T={t}");
+            for u in 0..500 {
+                assert_eq!(base.graph.sorted(u), other.graph.sorted(u), "T={t} node {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_iter_stats_account_for_all_evaluations() {
+        let data = SynthGaussian::single(300, 8, 9).generate();
+        let params = Params::default().with_k(8).with_seed(9);
+        let r = build(&params, &data, 4, &mut NoopObserver);
+        let per_iter_evals: u64 = r.per_iter.iter().map(|s| s.dist_evals).sum();
+        // total = init (n·k) + per-iteration compute phases
+        assert_eq!(r.stats.dist_evals, 300 * 8 + per_iter_evals);
+        assert!(r.per_iter.iter().all(|s| s.updates > 0 || s.dist_evals > 0));
+    }
+}

@@ -28,6 +28,20 @@ pub struct Params {
     pub reorder_iter: usize,
     /// Hard cap on candidate-set size (paper: 50).
     pub max_candidates: usize,
+    /// Build worker threads. `0` (the default) resolves from the
+    /// `PALLAS_BUILD_THREADS` environment variable, falling back to 1;
+    /// an explicit value wins over the environment. `1` is the exact
+    /// sequential engine (bit-identical to builds before the knob
+    /// existed); `> 1` runs the phased parallel engine
+    /// ([`nndescent::parallel`](crate::nndescent::parallel)) — still
+    /// deterministic for a fixed seed, but a different (equally valid)
+    /// graph than the sequential one. The parallel engine implements
+    /// turbo selection only: `naive`/`heap` builds keep their
+    /// configured algorithm and run sequentially (with a log notice).
+    /// Ignored by `build_with_engine*` (explicit-engine builds stay
+    /// sequential) and not persisted in `KNNIv1` bundles (build-time
+    /// knob; loaded params report 0).
+    pub threads: usize,
 }
 
 impl Default for Params {
@@ -43,6 +57,7 @@ impl Default for Params {
             reorder: false,
             reorder_iter: 1,
             max_candidates: 50,
+            threads: 0,
         }
     }
 }
@@ -89,6 +104,12 @@ impl Params {
         self.delta = d;
         self
     }
+    /// Build worker threads (see [`Params::threads`]; 0 = resolve from
+    /// the `PALLAS_BUILD_THREADS` environment, else 1).
+    pub fn with_threads(mut self, t: usize) -> Self {
+        self.threads = t;
+        self
+    }
 }
 
 impl From<&RunConfig> for Params {
@@ -104,6 +125,7 @@ impl From<&RunConfig> for Params {
             reorder: rc.reorder,
             reorder_iter: 1,
             max_candidates: rc.max_candidates,
+            threads: 0,
         }
     }
 }

@@ -17,9 +17,15 @@
 //! All three have the same output contract: new/old lists bounded by
 //! `cap`, duplicates excluded, and the incremental-search flag cleared
 //! for forward neighbors that were sampled into their node's new list.
+//!
+//! A fourth, crate-internal implementation ([`partitioned`]) re-derives
+//! the turbo scheme with counter-based randomness and an owner-writes
+//! node-range decomposition — the selection phase of the multi-threaded
+//! build (`nndescent::parallel`). Same output contract.
 
 pub mod heap;
 pub mod naive;
+pub(crate) mod partitioned;
 pub mod turbo;
 
 use super::candidates::CandidateLists;

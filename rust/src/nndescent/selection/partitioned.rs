@@ -1,0 +1,260 @@
+//! Partitioned selection for the multi-threaded build: turbosampling
+//! with counter-based randomness, restricted to a node range.
+//!
+//! The sequential selectors are inherently serial in two ways: they
+//! draw from one PRNG stream (so the sample depends on visit order) and
+//! they write candidate lists of *both* endpoints of every edge (so a
+//! node-range partition of the scan still writes anywhere). This module
+//! removes both obstacles:
+//!
+//! * **Counter-based coins** — every edge `(u, slot)` gets its own
+//!   [`SplitMix64`] draw at stream position `u·k + slot`
+//!   ([`SplitMix64::at`]), keyed by a per-iteration seed. Any worker
+//!   computing any edge gets the same coins, so the sampled candidate
+//!   sets are a pure function of `(seed, iteration, graph)` —
+//!   independent of the thread count *and* of scheduling.
+//! * **Owner-writes decomposition** — each worker scans the whole edge
+//!   list (a cheap `n·k` id/flag sweep next to the distance work) but
+//!   applies only the insertions whose **target** node falls in its
+//!   range, writing through a disjoint [`CandChunk`]. Reservoir
+//!   replacement slots are keyed by `(seed, target, #replacements)`,
+//!   again counter-based, so they too are partition-invariant.
+//!
+//! The output contract matches the sequential selectors: new/old lists
+//! bounded by `cap`, duplicates excluded, only graph-adjacent
+//! candidates, every edge endpoint sampled with probability
+//! `min(1, cap/|N(u)|)` per direction. This is the parallel engine's
+//! only sampler (the paper's turbosampling scheme, its best variant);
+//! builds configured with `naive`/`heap` selection keep their
+//! configured algorithm and run sequentially instead — the driver never
+//! silently substitutes the scheme under test.
+
+use super::super::candidates::CandChunk;
+use super::turbo::to_threshold;
+use crate::graph::heap::EMPTY_ID;
+use crate::graph::KnnGraph;
+use crate::util::rng::SplitMix64;
+
+/// Per-node inclusion thresholds for one iteration, computed once from
+/// the graph's neighborhood-size counters and shared read-only with
+/// every worker.
+#[derive(Debug)]
+pub(crate) struct SelectionThresholds {
+    new: Vec<u32>,
+    old: Vec<u32>,
+}
+
+impl SelectionThresholds {
+    /// `O(n)` threshold pass over the counters (the turbosampling trick:
+    /// the graph already knows every |N(u)|).
+    pub(crate) fn compute(graph: &KnnGraph, cap: usize) -> Self {
+        let n = graph.n();
+        Self {
+            new: (0..n).map(|u| to_threshold(cap, graph.new_size(u))).collect(),
+            old: (0..n).map(|u| to_threshold(cap, graph.old_size(u))).collect(),
+        }
+    }
+}
+
+/// Per-iteration selection seed: one hop of a SplitMix64 stream keyed
+/// by the build seed, so iterations draw disjoint coin sequences.
+pub(crate) fn selection_seed(seed: u64, iter: usize) -> u64 {
+    SplitMix64::at(seed ^ 0x5E1E_C7ED_BAD5_EED5, iter as u64).next_u64()
+}
+
+/// One worker's selection pass: scan every edge of the frozen graph in
+/// global order, apply only the insertions targeting this chunk's
+/// range. See the module docs for why this is deterministic and
+/// thread-count invariant.
+pub(crate) fn select_into_chunk(
+    graph: &KnnGraph,
+    thr: &SelectionThresholds,
+    iter_seed: u64,
+    chunk: &mut CandChunk<'_>,
+) {
+    let n = graph.n();
+    let k = graph.k();
+    let range = chunk.range();
+    // replacement-draw counters, per target in range × {new, old}
+    let mut repl_new = vec![0u32; range.len()];
+    let mut repl_old = vec![0u32; range.len()];
+    for u in 0..n {
+        let u_in = range.contains(&u);
+        for (slot, (&v, &f)) in graph.ids(u).iter().zip(graph.flags(u)).enumerate() {
+            if v == EMPTY_ID {
+                continue;
+            }
+            let v_in = range.contains(&(v as usize));
+            if !u_in && !v_in {
+                continue;
+            }
+            // one u64 draw per edge = both directions' coins, at the
+            // edge's fixed stream position
+            let r = SplitMix64::at(iter_seed, (u * k + slot) as u64).next_u64();
+            let (r_fwd, r_rev) = (r as u32, (r >> 32) as u32);
+            let (thr_u, thr_v) = if f {
+                (thr.new[u], thr.new[v as usize])
+            } else {
+                (thr.old[u], thr.old[v as usize])
+            };
+            // forward direction: v into the lists of u
+            if u_in && r_fwd < thr_u {
+                insert(chunk, &mut repl_new, &mut repl_old, u, v, f, iter_seed);
+            }
+            // reverse direction: u into the lists of v
+            if v_in && r_rev < thr_v {
+                insert(chunk, &mut repl_new, &mut repl_old, v as usize, u as u32, f, iter_seed);
+            }
+        }
+    }
+}
+
+/// Append-or-reservoir-replace with duplicate rejection — the
+/// sequential turbo selector's `insert`, with the replacement slot
+/// drawn from a counter-based stream keyed by (seed, target, list,
+/// #replacements) so it does not depend on which worker runs it.
+fn insert(
+    chunk: &mut CandChunk<'_>,
+    repl_new: &mut [u32],
+    repl_old: &mut [u32],
+    u: usize,
+    v: u32,
+    new: bool,
+    iter_seed: u64,
+) {
+    let local = u - chunk.range().start;
+    if new {
+        if chunk.new_slice(u).contains(&v) {
+            return;
+        }
+        if !chunk.push_new(u, v) {
+            let slot = replacement_slot(iter_seed, u, true, repl_new[local], chunk.new_len(u));
+            repl_new[local] += 1;
+            chunk.replace_new(u, slot, v);
+        }
+    } else {
+        if chunk.old_slice(u).contains(&v) {
+            return;
+        }
+        if !chunk.push_old(u, v) {
+            let slot = replacement_slot(iter_seed, u, false, repl_old[local], chunk.old_len(u));
+            repl_old[local] += 1;
+            chunk.replace_old(u, slot, v);
+        }
+    }
+}
+
+/// Uniform slot in `0..len` from a counter-based draw. Two SplitMix64
+/// hops: the first decorrelates (seed, target, list), the second indexes
+/// the replacement counter. Modulo bias over `len ≤ 25` is ≪ 2⁻²⁵.
+#[inline]
+fn replacement_slot(iter_seed: u64, target: usize, new: bool, count: u32, len: usize) -> usize {
+    let stream = SplitMix64::at(iter_seed ^ 0x9E1E_C7_0000_0001, (target as u64) << 1 | new as u64)
+        .next_u64();
+    let r = SplitMix64::at(stream, count as u64).next_u64();
+    (r % len as u64) as usize
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cachesim::trace::NoTracer;
+    use crate::dataset::synth::SynthGaussian;
+    use crate::nndescent::candidates::CandidateLists;
+    use crate::nndescent::init::init_random;
+    use crate::nndescent::selection::clear_sampled_flags;
+    use crate::util::counters::FlopCounter;
+    use crate::util::rng::Pcg64;
+
+    fn initialized(n: usize, k: usize, seed: u64) -> KnnGraph {
+        let data = SynthGaussian::single(n, 8, seed).generate();
+        let mut graph = KnnGraph::new(n, k);
+        let mut rng = Pcg64::new(seed);
+        init_random(&mut graph, &data, &mut rng, &mut FlopCounter::new(8), &mut NoTracer);
+        graph
+    }
+
+    fn run_partitioned(graph: &KnnGraph, cap: usize, seed: u64, parts: usize) -> CandidateLists {
+        let n = graph.n();
+        let mut out = CandidateLists::new(n, cap);
+        let thr = SelectionThresholds::compute(graph, cap);
+        let iter_seed = selection_seed(seed, 0);
+        let bounds: Vec<std::ops::Range<usize>> =
+            (0..parts).map(|w| w * n / parts..(w + 1) * n / parts).collect();
+        for mut chunk in out.split_ranges(&bounds) {
+            select_into_chunk(graph, &thr, iter_seed, &mut chunk);
+        }
+        out
+    }
+
+    #[test]
+    fn output_contract_matches_sequential_selectors() {
+        let n = 300;
+        let cap = 5;
+        let mut graph = initialized(n, 10, 42);
+        let out = run_partitioned(&graph, cap, 9, 4);
+        let mut total_new = 0usize;
+        for u in 0..n {
+            let newc = out.new_slice(u);
+            let oldc = out.old_slice(u);
+            assert!(newc.len() <= cap && oldc.len() <= cap, "cap respected");
+            total_new += newc.len();
+            assert!(!newc.contains(&(u as u32)) && !oldc.contains(&(u as u32)), "self in list");
+            for list in [newc, oldc] {
+                let mut s = list.to_vec();
+                s.sort_unstable();
+                let before = s.len();
+                s.dedup();
+                assert_eq!(before, s.len(), "duplicates in node {u}: {list:?}");
+            }
+            for &v in newc {
+                let fwd = graph.ids(u).contains(&v);
+                let rev = graph.ids(v as usize).contains(&(u as u32));
+                assert!(fwd || rev, "candidate {v} of {u} not adjacent");
+            }
+        }
+        assert!(total_new > 0, "first-round selection must produce new candidates");
+        // the driver's flag-clear pass composes with the output
+        clear_sampled_flags(&mut graph, &out, &mut NoTracer);
+        graph.validate().unwrap();
+    }
+
+    #[test]
+    fn partitioning_does_not_change_the_sample() {
+        // 1, 2, 3, and 7 ranges must produce byte-identical lists —
+        // the property that makes T>1 builds thread-count invariant
+        let graph = initialized(200, 8, 7);
+        let reference = run_partitioned(&graph, 4, 11, 1);
+        for parts in [2usize, 3, 7] {
+            let got = run_partitioned(&graph, 4, 11, parts);
+            for u in 0..200 {
+                assert_eq!(reference.new_slice(u), got.new_slice(u), "parts={parts} node {u}");
+                assert_eq!(reference.old_slice(u), got.old_slice(u), "parts={parts} node {u}");
+            }
+        }
+    }
+
+    #[test]
+    fn different_iterations_draw_different_coins() {
+        assert_ne!(selection_seed(1, 0), selection_seed(1, 1));
+        assert_ne!(selection_seed(1, 0), selection_seed(2, 0));
+        let graph = initialized(200, 8, 3);
+        let a = run_partitioned(&graph, 4, selection_seed(5, 0), 2);
+        let b = run_partitioned(&graph, 4, selection_seed(5, 1), 2);
+        let differs = (0..200).any(|u| a.new_slice(u) != b.new_slice(u));
+        assert!(differs, "two iterations should not sample identically");
+    }
+
+    #[test]
+    fn small_neighborhoods_sample_everything() {
+        // cap ≥ |N(u)| ⇒ p = 1 ⇒ every edge endpoint present (mod dups)
+        let graph = initialized(30, 3, 4);
+        let out = run_partitioned(&graph, 30, 6, 3);
+        for (u, v, _) in graph.edges() {
+            assert!(
+                out.new_slice(u as usize).contains(&v) || out.old_slice(u as usize).contains(&v),
+                "edge {u}→{v} lost despite p=1"
+            );
+        }
+    }
+}

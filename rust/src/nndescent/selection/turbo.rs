@@ -35,8 +35,10 @@ pub struct TurboSelector {
 }
 
 /// Convert an inclusion probability to a 32-bit comparison threshold.
+/// Shared with the partitioned (parallel-build) selector, which samples
+/// the same `cap/|N|` coin flips from counter-based streams.
 #[inline]
-fn to_threshold(cap: usize, size: u32) -> u32 {
+pub(crate) fn to_threshold(cap: usize, size: u32) -> u32 {
     if size <= cap as u32 {
         u32::MAX
     } else {

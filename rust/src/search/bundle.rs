@@ -156,6 +156,8 @@ fn decode_params(b: &[u8; 64]) -> Result<Params> {
         selection,
         compute,
         reorder: b[58] != 0,
+        // build-time knob, not persisted: loaded bundles report "auto"
+        threads: 0,
     })
 }
 

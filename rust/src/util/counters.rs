@@ -80,6 +80,20 @@ impl IterStats {
     pub fn total_secs(&self) -> f64 {
         self.select_secs + self.compute_secs + self.reorder_secs
     }
+
+    /// Fold a worker's partial record for the *same* iteration into this
+    /// one: work counts add, phase times take the max (parallel workers
+    /// overlap in wall-clock, so summing their spans would double-count).
+    /// With one worker this is plain accumulation, so the sequential and
+    /// parallel drivers share the same aggregation path.
+    pub fn merge(&mut self, other: &IterStats) {
+        debug_assert_eq!(self.iter, other.iter, "merging stats across iterations");
+        self.select_secs = self.select_secs.max(other.select_secs);
+        self.compute_secs = self.compute_secs.max(other.compute_secs);
+        self.reorder_secs = self.reorder_secs.max(other.reorder_secs);
+        self.dist_evals += other.dist_evals;
+        self.updates += other.updates;
+    }
 }
 
 #[cfg(test)]
@@ -113,5 +127,30 @@ mod tests {
     fn iter_stats_total() {
         let s = IterStats { select_secs: 1.0, compute_secs: 2.0, reorder_secs: 0.5, ..Default::default() };
         assert!((s.total_secs() - 3.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn iter_stats_merge_adds_counts_and_maxes_times() {
+        let mut a = IterStats {
+            iter: 3,
+            select_secs: 0.1,
+            compute_secs: 0.5,
+            dist_evals: 10,
+            updates: 2,
+            ..Default::default()
+        };
+        let b = IterStats {
+            iter: 3,
+            select_secs: 0.3,
+            compute_secs: 0.2,
+            dist_evals: 7,
+            updates: 5,
+            ..Default::default()
+        };
+        a.merge(&b);
+        assert_eq!(a.dist_evals, 17);
+        assert_eq!(a.updates, 7);
+        assert!((a.select_secs - 0.3).abs() < 1e-12, "overlapping spans take the max");
+        assert!((a.compute_secs - 0.5).abs() < 1e-12);
     }
 }

@@ -1,0 +1,212 @@
+//! Parallel NN-Descent build — the cross-layer contracts:
+//!
+//! * `threads = 1` is **bit-identical** to the sequential engine
+//!   (graph, σ, `FlopCounter`, per-iteration stats), asserted against
+//!   the explicit-engine funnel which never routes parallel.
+//! * `threads ∈ {2, 4}` builds are valid, deterministic, thread-count
+//!   invariant, and land within 0.02 recall of the sequential build on
+//!   the clustered corpus.
+//! * The knob's precedence: explicit `Params::threads` / builder /
+//!   `--threads` beat `PALLAS_BUILD_THREADS`, which beats the default.
+//! * Sharded builds distribute whole-shard builds over the worker pool
+//!   and stay bit-identical to the sequential shard loop.
+
+use knng::api::{IndexBuilder, Searcher};
+use knng::baseline::brute::brute_force_knn;
+use knng::cachesim::trace::NoTracer;
+use knng::config::schema::ComputeKind;
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::metrics::recall::recall_against_truth;
+use knng::nndescent::compute::NativeEngine;
+use knng::nndescent::{BuildResult, NnDescent, Params};
+
+fn corpus(n: usize, seed: u64) -> AlignedMatrix {
+    let (data, _) = SynthClustered::new(n, 8, 6, seed).generate_labeled();
+    data
+}
+
+/// The always-sequential reference: the explicit-engine funnel ignores
+/// the threads knob by contract, so it is exactly the historical build.
+fn sequential_reference(params: &Params, data: &AlignedMatrix) -> BuildResult {
+    let mut engine = NativeEngine::new(params.compute);
+    NnDescent::new(params.clone()).build_with_engine(data, &mut engine, &mut NoTracer)
+}
+
+/// Bit-level equality of two build results: graph strips (ids, distance
+/// bits, flags), σ, flop counter, and the per-iteration work columns.
+fn assert_builds_bit_identical(a: &BuildResult, b: &BuildResult, ctx: &str) {
+    assert_eq!(a.iterations, b.iterations, "{ctx}: iterations");
+    assert_eq!(a.stats.dist_evals, b.stats.dist_evals, "{ctx}: dist_evals");
+    assert_eq!(a.stats.dim, b.stats.dim, "{ctx}: counter dim");
+    assert_eq!(a.per_iter.len(), b.per_iter.len(), "{ctx}: per-iter rows");
+    for (x, y) in a.per_iter.iter().zip(&b.per_iter) {
+        assert_eq!(x.iter, y.iter, "{ctx}: iter index");
+        assert_eq!(x.updates, y.updates, "{ctx}: iter {} updates", x.iter);
+        assert_eq!(x.dist_evals, y.dist_evals, "{ctx}: iter {} evals", x.iter);
+    }
+    match (&a.reordering, &b.reordering) {
+        (None, None) => {}
+        (Some(ra), Some(rb)) => assert_eq!(ra.sigma, rb.sigma, "{ctx}: σ"),
+        _ => panic!("{ctx}: one build reordered, the other did not"),
+    }
+    let g = &a.graph;
+    let h = &b.graph;
+    assert_eq!(g.n(), h.n(), "{ctx}");
+    assert_eq!(g.k(), h.k(), "{ctx}");
+    for u in 0..g.n() {
+        assert_eq!(g.ids(u), h.ids(u), "{ctx}: node {u} ids");
+        let da: Vec<u32> = g.dists(u).iter().map(|d| d.to_bits()).collect();
+        let db: Vec<u32> = h.dists(u).iter().map(|d| d.to_bits()).collect();
+        assert_eq!(da, db, "{ctx}: node {u} dists");
+        assert_eq!(g.flags(u), h.flags(u), "{ctx}: node {u} flags");
+    }
+}
+
+#[test]
+fn t1_is_bit_identical_to_the_sequential_engine() {
+    // with and without the reorder heuristic, across compute backends
+    for (compute, reorder) in [
+        (ComputeKind::Blocked, false),
+        (ComputeKind::Blocked, true),
+        (ComputeKind::Scalar, false),
+    ] {
+        let data = corpus(500, 3);
+        let params = Params::default()
+            .with_k(8)
+            .with_seed(3)
+            .with_compute(compute)
+            .with_reorder(reorder)
+            .with_threads(1);
+        let seq = sequential_reference(&params, &data);
+        let t1 = NnDescent::new(params.clone()).build(&data).unwrap();
+        assert_builds_bit_identical(&seq, &t1, &format!("{compute:?}/reorder={reorder}"));
+    }
+}
+
+#[test]
+fn non_turbo_selections_keep_their_algorithm_and_run_sequentially() {
+    // threads > 1 with naive/heap selection must not silently swap in
+    // the turbo sampler: the build falls back to the configured
+    // sequential implementation, bit-identical to a plain run
+    use knng::config::schema::SelectionKind;
+    for selection in [SelectionKind::Naive, SelectionKind::Heap] {
+        let data = corpus(400, 31);
+        let params =
+            Params::default().with_k(6).with_seed(31).with_selection(selection).with_threads(4);
+        let seq = sequential_reference(&params, &data);
+        let got = NnDescent::new(params.clone()).build(&data).unwrap();
+        assert_builds_bit_identical(&seq, &got, &format!("{selection:?} + threads=4"));
+    }
+}
+
+#[test]
+fn parallel_builds_are_valid_and_within_the_recall_gate() {
+    let data = corpus(1200, 7);
+    let truth = brute_force_knn(&data, 10);
+    let base = Params::default().with_k(10).with_seed(7);
+    let seq = NnDescent::new(base.clone().with_threads(1)).build(&data).unwrap();
+    let seq_recall = recall_against_truth(&seq, &truth);
+    assert!(seq_recall > 0.9, "sequential baseline recall {seq_recall}");
+    for threads in [2usize, 4] {
+        let par = NnDescent::new(base.clone().with_threads(threads)).build(&data).unwrap();
+        par.graph.validate().unwrap();
+        assert!(par.iterations >= 2, "T={threads}: suspiciously fast convergence");
+        let r = recall_against_truth(&par, &truth);
+        assert!(
+            r > seq_recall - 0.02,
+            "T={threads}: recall {r} more than 0.02 below sequential {seq_recall}"
+        );
+    }
+}
+
+#[test]
+fn parallel_build_is_deterministic_and_thread_count_invariant() {
+    let data = corpus(800, 11);
+    let base = Params::default().with_k(8).with_seed(11).with_reorder(true);
+    let t2a = NnDescent::new(base.clone().with_threads(2)).build(&data).unwrap();
+    let t2b = NnDescent::new(base.clone().with_threads(2)).build(&data).unwrap();
+    assert_builds_bit_identical(&t2a, &t2b, "T=2 repeat");
+    // the counter-based phases make the thread count a pure perf knob
+    let t4 = NnDescent::new(base.clone().with_threads(4)).build(&data).unwrap();
+    assert_builds_bit_identical(&t2a, &t4, "T=2 vs T=4");
+    assert!(t2a.reordering.is_some(), "reorder must compose with the parallel engine");
+    t2a.reordering.as_ref().unwrap().validate().unwrap();
+}
+
+#[test]
+fn env_var_sets_the_default_and_explicit_threads_win() {
+    // Process-global state: this is the only test in the crate that
+    // *sets* the variable, and every other build in this suite pins an
+    // explicit thread count, which shields it from the env.
+    let data = corpus(400, 19);
+    let base = Params::default().with_k(6).with_seed(19);
+    let explicit2 = NnDescent::new(base.clone().with_threads(2)).build(&data).unwrap();
+    let explicit1 = NnDescent::new(base.clone().with_threads(1)).build(&data).unwrap();
+    let prior = std::env::var("PALLAS_BUILD_THREADS").ok();
+    std::env::set_var("PALLAS_BUILD_THREADS", "2");
+    let via_env = NnDescent::new(base.clone()).build(&data).unwrap();
+    let overridden = NnDescent::new(base.clone().with_threads(1)).build(&data).unwrap();
+    match prior {
+        Some(v) => std::env::set_var("PALLAS_BUILD_THREADS", v),
+        None => std::env::remove_var("PALLAS_BUILD_THREADS"),
+    }
+    assert_builds_bit_identical(&explicit2, &via_env, "env default");
+    assert_builds_bit_identical(&explicit1, &overridden, "explicit beats env");
+    assert_eq!(knng::nndescent::resolve_build_threads(5), 5);
+}
+
+#[test]
+fn builder_facade_carries_the_knob_end_to_end() {
+    let data = corpus(600, 23);
+    let params = Params::default().with_k(8).with_seed(23);
+    let seq = IndexBuilder::new()
+        .data_named(data.clone(), "clustered")
+        .params(params.clone())
+        .threads(1)
+        .build()
+        .unwrap();
+    let par = IndexBuilder::new()
+        .data_named(data.clone(), "clustered")
+        .params(params)
+        .threads(4)
+        .build()
+        .unwrap();
+    assert_eq!(seq.len(), par.len());
+    // both serve sane results over the same corpus; exact graphs differ
+    // (phased vs immediate updates), quality must not
+    let sp = Default::default();
+    for qi in (0..600).step_by(97) {
+        let (a, _) = seq.search(data.row_logical(qi), 5, &sp);
+        let (b, _) = par.search(data.row_logical(qi), 5, &sp);
+        assert_eq!(a[0].id, b[0].id, "query {qi}: self hit");
+        assert!(b[0].dist < 1e-6, "query {qi}");
+    }
+    let t = par.telemetry().expect("built indexes carry telemetry");
+    assert!(t.iterations >= 2);
+}
+
+#[test]
+fn sharded_parallel_build_is_bit_identical_to_sequential_sharding() {
+    let data = corpus(800, 29);
+    let params = Params::default().with_k(6).with_seed(29);
+    let seq = knng::api::ShardedSearcher::build(&data, 4, &params.clone().with_threads(1)).unwrap();
+    let par = knng::api::ShardedSearcher::build(&data, 4, &params.with_threads(3)).unwrap();
+    assert_eq!(seq.shard_sizes(), par.shard_sizes());
+    let sp = Default::default();
+    let queries = AlignedMatrix::from_rows(
+        20,
+        data.dim(),
+        &(0..20).flat_map(|i| data.row_logical(i * 37).to_vec()).collect::<Vec<f32>>(),
+    );
+    let (a, sa) = seq.search_batch(&queries, 5, &sp);
+    let (b, sb) = par.search_batch(&queries, 5, &sp);
+    assert_eq!(sa.dist_evals, sb.dist_evals);
+    for (qi, (ra, rb)) in a.iter().zip(&b).enumerate() {
+        assert_eq!(ra.len(), rb.len(), "query {qi}");
+        for (x, y) in ra.iter().zip(rb) {
+            assert_eq!(x.id, y.id, "query {qi}");
+            assert_eq!(x.dist.to_bits(), y.dist.to_bits(), "query {qi}");
+        }
+    }
+}
