@@ -10,7 +10,9 @@
 //!
 //! Run: `cargo bench --bench bench_query_throughput`
 
-use knng::api::{FrontConfig, IndexBuilder, Searcher, ServeFront, ShardPool, ShardedSearcher};
+use knng::api::{
+    FrontConfig, IndexBuilder, KMeans, Searcher, ServeFront, ShardPool, ShardedSearcher,
+};
 use knng::bench::{full_scale, measure_once, write_bench_json, Json, Table};
 use knng::dataset::clustered::SynthClustered;
 use knng::dataset::AlignedMatrix;
@@ -298,6 +300,88 @@ fn main() {
     ]));
     drop(front);
     ttable.finish();
+
+    // ---- centroid-routed fan-out (api::partition::KMeans router) ----
+    // k-means S=4 shards over the same corpus; each query fans out only
+    // to its top-m shards by query-to-centroid distance. m = S must
+    // reproduce the full fan-out bit for bit (asserted); m = 2 is the
+    // acceptance point: ≥ 1.5× fewer distance evaluations per query at
+    // ≤ 0.03 recall cost (also asserted, not just reported).
+    let (kshard, kshard_secs) = measure_once(|| {
+        ShardedSearcher::build_partitioned(&corpus, 4, &params, &KMeans::new(7)).unwrap()
+    });
+    println!(
+        "k-means sharded searcher built in {kshard_secs:.2}s (sizes {:?})",
+        kshard.shard_sizes()
+    );
+    let mut rtable = Table::new(
+        "query_throughput_routed",
+        &["fanout", "qps", "evals/query", "visits/query", "recall@10", "eval reduction"],
+    );
+    let (full_res, full_stats) = kshard.search_batch(&qmat, k, &sp);
+    let full_recall = recall_vs_exact(&full_res[..sample], &truth);
+    let mut route_rows = Vec::new();
+    for top_m in [4usize, 2, 1] {
+        let (res, rstats) = kshard.search_batch_routed(&qmat, k, &sp, top_m);
+        if top_m == 4 {
+            knng::testing::assert_neighbors_bitwise_eq(&full_res, &res, "routed m=S");
+            assert_eq!(
+                full_stats.dist_evals, rstats.dist_evals,
+                "m=S routing must add no distance evaluations"
+            );
+        }
+        let recall = recall_vs_exact(&res[..sample], &truth);
+        let reduction = full_stats.dist_evals as f64 / rstats.dist_evals.max(1) as f64;
+        if top_m == 2 {
+            assert!(
+                reduction >= 1.5,
+                "m=2 must cut evals ≥1.5×: full {} vs routed {}",
+                full_stats.dist_evals,
+                rstats.dist_evals
+            );
+            assert!(
+                recall >= full_recall - 0.03,
+                "m=2 recall {recall} fell more than 0.03 below full fan-out {full_recall}"
+            );
+        }
+        rtable.row(&[
+            format!("{top_m}/4"),
+            format!("{:.0}", rstats.qps()),
+            format!("{:.0}", rstats.dist_evals_per_query()),
+            format!("{:.2}", rstats.shard_visits as f64 / n_queries as f64),
+            format!("{recall:.4}"),
+            format!("{reduction:.2}x"),
+        ]);
+        route_rows.push(Json::obj(vec![
+            ("fanout", Json::Int(top_m as u64)),
+            ("shards", Json::Int(4)),
+            ("qps", Json::Num(rstats.qps())),
+            ("evals_per_query", Json::Num(rstats.dist_evals_per_query())),
+            (
+                "shard_visits_per_query",
+                Json::Num(rstats.shard_visits as f64 / n_queries as f64),
+            ),
+            ("recall", Json::Num(recall)),
+            ("eval_reduction_vs_full", Json::Num(reduction)),
+            ("ef", Json::Int(sp.ef as u64)),
+        ]));
+    }
+    rtable.finish();
+    write_bench_json(
+        "BENCH_route.json",
+        &Json::obj(vec![
+            ("bench", Json::s("routed_fanout")),
+            ("dataset", Json::s("clustered")),
+            ("partitioner", Json::s("kmeans")),
+            ("n", Json::Int(n as u64)),
+            ("dim", Json::Int(dim as u64)),
+            ("k", Json::Int(k as u64)),
+            ("queries", Json::Int(n_queries as u64)),
+            ("full_fanout_recall", Json::Num(full_recall)),
+            ("detected_kernel", Json::s(dispatch::detect().name())),
+            ("rows", Json::Arr(route_rows)),
+        ]),
+    );
 
     write_bench_json(
         "BENCH_query.json",

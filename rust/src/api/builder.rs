@@ -176,13 +176,33 @@ impl<'a> IndexBuilder<'a> {
     /// independently with the same parameters, and return the fanning
     /// [`ShardedSearcher`]. See [`ShardedSearcher::build`].
     pub fn build_sharded(self, shards: usize) -> crate::Result<ShardedSearcher> {
+        self.build_sharded_with(shards, &crate::api::partition::Contiguous)
+    }
+
+    /// [`build_sharded`](Self::build_sharded) with an explicit
+    /// [`Partitioner`](crate::api::partition::Partitioner) — e.g.
+    /// [`KMeans`](crate::api::partition::KMeans) for cluster-aware
+    /// shards whose queries can be centroid-routed. See
+    /// [`ShardedSearcher::build_planned`].
+    pub fn build_sharded_with(
+        self,
+        shards: usize,
+        partitioner: &dyn crate::api::partition::Partitioner,
+    ) -> crate::Result<ShardedSearcher> {
         let Self { name: _, params, artifacts_dir, source, observer } = self;
         let (data, _dataset) = materialize(source)?;
         let mut observer: Box<dyn BuildObserver + 'a> = match observer {
             Some(o) => o,
             None => Box::new(NoopObserver),
         };
-        ShardedSearcher::build_with(&data, shards, &params, &artifacts_dir, &mut *observer)
+        ShardedSearcher::build_planned(
+            &data,
+            shards,
+            &params,
+            partitioner,
+            &artifacts_dir,
+            &mut *observer,
+        )
     }
 }
 

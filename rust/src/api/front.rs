@@ -56,6 +56,14 @@ pub struct FrontConfig {
     /// Capacity of the bounded submission queue; a full queue makes
     /// [`ServeFront::submit`] block (backpressure, not unbounded memory).
     pub queue_depth: usize,
+    /// Centroid routing: serve each window through
+    /// [`Searcher::search_batch_routed_owned`] with this fan-out bound
+    /// (each query visits at most `m` shards, nearest centroids first —
+    /// after [`plan_window`] dedup, the searcher's bucketing groups the
+    /// window's queries by routed shard). `None` (the default) keeps
+    /// the full fan-out, bit-identical to the historical behavior; so
+    /// does any `m ≥ S`.
+    pub route_top_m: Option<usize>,
 }
 
 impl Default for FrontConfig {
@@ -66,6 +74,7 @@ impl Default for FrontConfig {
             max_batch: 64,
             max_wait: Duration::from_micros(200),
             queue_depth: 1024,
+            route_top_m: None,
         }
     }
 }
@@ -107,6 +116,11 @@ pub struct FrontStats {
     /// Requests answered from another request's execution
     /// (`queries - coalesced` executions actually hit the searcher).
     pub coalesced: u64,
+    /// Shard visits reported by the searcher across all windows:
+    /// `unique queries × S` under full fan-out, fewer under centroid
+    /// routing ([`FrontConfig::route_top_m`]). Zero over unsharded
+    /// searchers, which report no fan-out.
+    pub shard_visits: u64,
 }
 
 #[derive(Default)]
@@ -114,6 +128,7 @@ struct Counters {
     windows: AtomicU64,
     queries: AtomicU64,
     coalesced: AtomicU64,
+    shard_visits: AtomicU64,
 }
 
 /// Handle for one submitted query; [`wait`](QueryTicket::wait) blocks
@@ -185,6 +200,7 @@ impl ServeFront {
             windows: self.counters.windows.load(Ordering::Relaxed),
             queries: self.counters.queries.load(Ordering::Relaxed),
             coalesced: self.counters.coalesced.load(Ordering::Relaxed),
+            shard_visits: self.counters.shard_visits.load(Ordering::Relaxed),
         }
     }
 
@@ -281,7 +297,10 @@ fn serve_window<S: Searcher>(
     // the tile over as an Arc lets a thread-per-shard pool share it
     // with its workers directly instead of re-cloning it 'static.
     let tile = Arc::new(AlignedMatrix::from_rows(plan.unique.len(), dim, &flat));
-    let (results, _stats) = searcher.search_batch_owned(tile, cfg.k, &cfg.params);
+    let (results, stats) = match cfg.route_top_m {
+        Some(m) => searcher.search_batch_routed_owned(tile, cfg.k, &cfg.params, m),
+        None => searcher.search_batch_owned(tile, cfg.k, &cfg.params),
+    };
 
     let mut fanout = vec![0usize; plan.unique.len()];
     for &u in &plan.assign {
@@ -292,6 +311,7 @@ fn serve_window<S: Searcher>(
     counters
         .coalesced
         .fetch_add((window.len() - plan.unique.len()) as u64, Ordering::Relaxed);
+    counters.shard_visits.fetch_add(stats.shard_visits, Ordering::Relaxed);
 
     let info_base = (window.len(), plan.unique.len());
     for (req, u) in window.into_iter().zip(plan.assign) {

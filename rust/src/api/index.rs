@@ -42,6 +42,10 @@ pub struct Index {
     name: String,
     dataset: String,
     telemetry: Option<BuildTelemetry>,
+    /// Partition centroids carried by a sharded bundle (one row per
+    /// shard of the sharded index this bundle belongs to); `None` for
+    /// plain single-index builds and legacy bundles.
+    centroids: Option<AlignedMatrix>,
 }
 
 impl Index {
@@ -64,6 +68,7 @@ impl Index {
             name,
             dataset,
             telemetry: Some(BuildTelemetry { iterations, per_iter, stats, total_secs }),
+            centroids: None,
         }
     }
 
@@ -73,8 +78,9 @@ impl Index {
     /// norms for the norm-trick serving path are recomputed from the
     /// data section.
     pub fn load(path: &Path) -> crate::Result<Self> {
-        let bundle = crate::search::load_index(path)?;
+        let mut bundle = crate::search::load_index(path)?;
         let name = path.file_stem().map(|s| s.to_string_lossy().into_owned()).unwrap_or_default();
+        let centroids = bundle.centroids.take();
         let (core, reordering, params) = bundle.into_index();
         Ok(Self {
             core,
@@ -83,6 +89,7 @@ impl Index {
             dataset: name.clone(),
             name,
             telemetry: None,
+            centroids,
         })
     }
 
@@ -96,6 +103,7 @@ impl Index {
             self.reordering.as_ref(),
             &self.params,
             Some((self.core.norms(), self.core.norm_lanes())),
+            self.centroids.as_ref(),
         )
     }
 
@@ -153,6 +161,18 @@ impl Index {
     /// Build telemetry (None for indexes reloaded from a bundle).
     pub fn telemetry(&self) -> Option<&BuildTelemetry> {
         self.telemetry.as_ref()
+    }
+
+    /// Partition centroids carried by a sharded bundle (`None` for
+    /// plain builds and legacy bundles).
+    pub fn centroids(&self) -> Option<&AlignedMatrix> {
+        self.centroids.as_ref()
+    }
+
+    /// Attach the partition centroids of the sharded index this bundle
+    /// belongs to (persisted by [`save`](Self::save)).
+    pub(crate) fn set_centroids(&mut self, centroids: AlignedMatrix) {
+        self.centroids = Some(centroids);
     }
 
     /// The data matrix in the working layout (row `w` is working id `w`).
@@ -258,9 +278,10 @@ impl Index {
     /// Decompose into the serving core + σ — what
     /// [`ShardedSearcher::from_index`](super::ShardedSearcher::from_index)
     /// uses to re-wrap a loaded bundle as a single shard (name, dataset,
-    /// and telemetry are presentation-only and dropped).
-    pub(crate) fn into_core_parts(self) -> (GraphIndex, Option<Reordering>) {
-        (self.core, self.reordering)
+    /// and telemetry are presentation-only and dropped; the centroids —
+    /// if the bundle carried any — ride along for routed serving).
+    pub(crate) fn into_core_parts(self) -> (GraphIndex, Option<Reordering>, Option<AlignedMatrix>) {
+        (self.core, self.reordering, self.centroids)
     }
 
     /// Decompose back into a [`BuildResult`] (graph in working space +

@@ -68,6 +68,7 @@ pub mod builder;
 pub mod front;
 pub mod ids;
 pub mod index;
+pub mod partition;
 pub mod searcher;
 pub mod serve;
 pub mod sharded;
@@ -76,6 +77,7 @@ pub use builder::IndexBuilder;
 pub use front::{FrontConfig, FrontStats, QueryTicket, Served, ServeFront, WindowInfo};
 pub use ids::{Neighbor, OriginalId, WorkingId};
 pub use index::{BuildTelemetry, Index};
+pub use partition::{Contiguous, KMeans, PartitionPlan, Partitioner, ShardPlan};
 pub use searcher::Searcher;
 pub use serve::ShardPool;
 pub use sharded::ShardedSearcher;

@@ -1,0 +1,486 @@
+//! Pluggable corpus partitioning for sharded builds.
+//!
+//! [`ShardedSearcher`](super::ShardedSearcher) historically hard-coded
+//! one partitioning decision — contiguous working-id slices — which
+//! forces every query to fan out to all S shards. This module makes the
+//! decision a first-class value: a [`Partitioner`] produces a
+//! [`PartitionPlan`] (per-shard row sets plus one centroid per shard),
+//! and the sharded build/serve layers consume the plan without knowing
+//! which strategy produced it.
+//!
+//! Two implementations ship:
+//!
+//! * [`Contiguous`] — the historical `lo = idx·n/S` slice split,
+//!   bit-for-bit. It remains the default, so every existing build and
+//!   serve path is unchanged.
+//! * [`KMeans`] — seeded, sample-based Lloyd iterations over the
+//!   dispatched distance kernels. Rows are assigned to their nearest
+//!   centroid, and each shard additionally receives a bounded set of
+//!   *ghost* rows — boundary points whose runner-up centroid is that
+//!   shard — which act as the cross-cluster stitch candidates of the
+//!   divide-and-conquer scheme (Wang et al., arXiv:2103.15386): they
+//!   join the shard's NN-Descent build, so boundary neighborhoods exist
+//!   in both adjacent subgraphs, and the serve-time merge deduplicates
+//!   the copies.
+//!
+//! Planning is single-threaded and all randomness flows from one seeded
+//! [`Pcg64`] stream, so a plan is deterministic and — like the PR 5
+//! build — invariant to the build thread count (the plan is computed
+//! before any worker spawns).
+
+use crate::dataset::AlignedMatrix;
+use crate::distance::dispatch;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, ensure};
+
+/// One shard's row set: the global (original-corpus) ids it owns.
+#[derive(Debug, Clone)]
+pub struct ShardPlan {
+    /// Global row ids: `primaries` owned rows first (ascending), then
+    /// the ghost rows (ascending). Ghosts are *copies* of rows owned by
+    /// other shards, included in this shard's subgraph build as
+    /// boundary-stitch candidates.
+    pub rows: Vec<u32>,
+    /// Number of owned rows at the head of `rows`.
+    pub primaries: usize,
+}
+
+impl ShardPlan {
+    /// The ghost (non-owned) tail of `rows`.
+    pub fn ghosts(&self) -> &[u32] {
+        &self.rows[self.primaries..]
+    }
+}
+
+/// A complete partitioning decision: per-shard row sets plus one
+/// centroid per shard (row `s` of `centroids` is shard `s`'s centroid,
+/// used for query routing and persisted in `KNNIv1` bundles).
+#[derive(Debug, Clone)]
+pub struct PartitionPlan {
+    pub shards: Vec<ShardPlan>,
+    pub centroids: AlignedMatrix,
+}
+
+impl PartitionPlan {
+    /// Structural validity: every corpus row owned by exactly one
+    /// shard, every shard non-degenerate, ghosts never self-owned.
+    pub fn validate(&self, n: usize) -> crate::Result<()> {
+        let mut owner = vec![u32::MAX; n];
+        for (s, plan) in self.shards.iter().enumerate() {
+            ensure!(plan.primaries >= 2, "shard {s} owns {} rows (needs ≥ 2)", plan.primaries);
+            ensure!(plan.primaries <= plan.rows.len(), "shard {s}: primaries out of range");
+            for &r in &plan.rows[..plan.primaries] {
+                ensure!((r as usize) < n, "shard {s}: row {r} out of range");
+                ensure!(owner[r as usize] == u32::MAX, "row {r} owned by two shards");
+                owner[r as usize] = s as u32;
+            }
+        }
+        ensure!(owner.iter().all(|&o| o != u32::MAX), "some rows unowned");
+        for (s, plan) in self.shards.iter().enumerate() {
+            for &g in plan.ghosts() {
+                ensure!(owner[g as usize] != s as u32, "shard {s}: ghost {g} is self-owned");
+            }
+        }
+        ensure!(self.centroids.n() == self.shards.len(), "one centroid per shard");
+        Ok(())
+    }
+}
+
+/// A partitioning strategy: split `data` into `shards` row sets.
+pub trait Partitioner {
+    /// Stable label (CLI value, bench rows).
+    fn name(&self) -> &'static str;
+    /// Compute the plan. Must be deterministic for fixed inputs.
+    fn plan(&self, data: &AlignedMatrix, shards: usize) -> crate::Result<PartitionPlan>;
+}
+
+/// Mean of a set of rows, accumulated in f64 (order-stable: ascending
+/// row id), written as the f32 centroid row `slot`.
+fn write_mean(centroids: &mut AlignedMatrix, slot: usize, data: &AlignedMatrix, rows: &[u32]) {
+    let dim = data.dim();
+    let mut acc = vec![0.0f64; dim];
+    for &r in rows {
+        for (a, &x) in acc.iter_mut().zip(data.row_logical(r as usize)) {
+            *a += x as f64;
+        }
+    }
+    let inv = 1.0 / rows.len().max(1) as f64;
+    for (c, a) in centroids.row_mut(slot).iter_mut().zip(&acc) {
+        *c = (a * inv) as f32;
+    }
+}
+
+/// The historical contiguous split: shard `idx` owns rows
+/// `[idx·n/S, (idx+1)·n/S)` — exactly the arithmetic `api::sharded`
+/// used before this module existed, so Contiguous-planned builds are
+/// bit-identical to pre-plan builds. No ghosts; centroids are the
+/// per-slice means (used only for routing).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Contiguous;
+
+impl Partitioner for Contiguous {
+    fn name(&self) -> &'static str {
+        "contiguous"
+    }
+
+    fn plan(&self, data: &AlignedMatrix, shards: usize) -> crate::Result<PartitionPlan> {
+        let n = data.n();
+        ensure!(shards >= 1, "cannot partition into 0 shards");
+        ensure!(
+            n / shards >= 2,
+            "corpus of {n} points cannot fill {shards} shards (each needs ≥ 2 points)"
+        );
+        let mut plans = Vec::with_capacity(shards);
+        let mut centroids = AlignedMatrix::zeroed(shards, data.dim());
+        for idx in 0..shards {
+            let lo = idx * n / shards;
+            let hi = (idx + 1) * n / shards;
+            let rows: Vec<u32> = (lo as u32..hi as u32).collect();
+            write_mean(&mut centroids, idx, data, &rows);
+            plans.push(ShardPlan { primaries: rows.len(), rows });
+        }
+        Ok(PartitionPlan { shards: plans, centroids })
+    }
+}
+
+/// Ghost budget per shard: `⌈primaries / GHOST_DENOM⌉` boundary rows.
+const GHOST_DENOM: usize = 8;
+
+/// Seeded, sample-based k-means (Lloyd) partitioner.
+///
+/// Centroids are fit on a bounded sample (`sample_cap` rows) with
+/// `iters` Lloyd iterations over the dispatched pair kernel, then every
+/// corpus row is assigned to its nearest centroid (ties break toward
+/// the lowest centroid id). Shards that end up with fewer than two
+/// owned rows steal their nearest rows from over-full shards, so every
+/// shard can build a graph. Finally each shard receives up to
+/// `⌈primaries/8⌉` ghost rows — the not-owned rows with the smallest
+/// routing margin (distance to runner-up minus distance to owner)
+/// whose runner-up centroid is that shard.
+#[derive(Debug, Clone)]
+pub struct KMeans {
+    /// Seed for sampling, initialization, and reseeding.
+    pub seed: u64,
+    /// Lloyd iterations run on the sample.
+    pub iters: usize,
+    /// Upper bound on the Lloyd sample size.
+    pub sample_cap: usize,
+}
+
+impl KMeans {
+    pub fn new(seed: u64) -> Self {
+        Self { seed, iters: 10, sample_cap: 4096 }
+    }
+}
+
+impl Default for KMeans {
+    fn default() -> Self {
+        Self::new(0xC3A7)
+    }
+}
+
+/// Nearest and runner-up centroids of one row (ties toward the lower
+/// centroid id — iteration order is ascending and comparisons strict).
+fn two_nearest(
+    pair: fn(&[f32], &[f32]) -> f32,
+    row: &[f32],
+    centroids: &AlignedMatrix,
+) -> (f32, u32, f32, u32) {
+    let (mut d1, mut c1) = (f32::INFINITY, 0u32);
+    let (mut d2, mut c2) = (f32::INFINITY, 0u32);
+    for c in 0..centroids.n() {
+        let d = pair(row, centroids.row(c));
+        if d < d1 {
+            (d2, c2) = (d1, c1);
+            (d1, c1) = (d, c as u32);
+        } else if d < d2 {
+            (d2, c2) = (d, c as u32);
+        }
+    }
+    (d1, c1, d2, c2)
+}
+
+impl Partitioner for KMeans {
+    fn name(&self) -> &'static str {
+        "kmeans"
+    }
+
+    fn plan(&self, data: &AlignedMatrix, shards: usize) -> crate::Result<PartitionPlan> {
+        let n = data.n();
+        ensure!(shards >= 1, "cannot partition into 0 shards");
+        ensure!(
+            n / shards >= 2,
+            "corpus of {n} points cannot fill {shards} shards (each needs ≥ 2 points)"
+        );
+        ensure!(shards <= u16::MAX as usize, "at most {} shards", u16::MAX);
+        let pair = dispatch::active().pair;
+        let mut rng = Pcg64::new_stream(self.seed, 0x9AEA5);
+
+        // Bounded Lloyd sample (sorted: reservoir order is unspecified,
+        // ascending ids make every later step's iteration order obvious).
+        let m = self.sample_cap.max(shards).min(n);
+        let mut sample: Vec<u32> = Vec::new();
+        rng.sample_indices(n, m, &mut sample);
+        sample.sort_unstable();
+
+        // Initial centroids: distinct-valued sample rows in shuffled
+        // order (duplicate-heavy corpora fall back to repeats and rely
+        // on the empty-cluster reseed below).
+        let mut order = sample.clone();
+        rng.shuffle(&mut order);
+        let mut centroids = AlignedMatrix::zeroed(shards, data.dim());
+        let mut chosen: Vec<u32> = Vec::with_capacity(shards);
+        for &cand in &order {
+            if chosen.len() == shards {
+                break;
+            }
+            let row = data.row(cand as usize);
+            if chosen.iter().all(|&c| data.row(c as usize) != row) {
+                chosen.push(cand);
+            }
+        }
+        let mut wrap = 0usize;
+        while chosen.len() < shards {
+            chosen.push(order[wrap % order.len()]);
+            wrap += 1;
+        }
+        for (s, &cand) in chosen.iter().enumerate() {
+            let dim = data.dim();
+            centroids.row_mut(s)[..dim].copy_from_slice(data.row_logical(cand as usize));
+        }
+
+        // Lloyd iterations on the sample.
+        let mut assign = vec![0u32; sample.len()];
+        let mut dist = vec![0.0f32; sample.len()];
+        for _ in 0..self.iters {
+            for (i, &p) in sample.iter().enumerate() {
+                let (d1, c1, _, _) = two_nearest(pair, data.row(p as usize), &centroids);
+                assign[i] = c1;
+                dist[i] = d1;
+            }
+            let mut counts = vec![0u64; shards];
+            for &a in &assign {
+                counts[a as usize] += 1;
+            }
+            // Empty clusters reseed deterministically to the sample
+            // point farthest from its current centroid (ties: lowest
+            // sample position), each stolen point used at most once.
+            let mut stolen = vec![false; sample.len()];
+            for s in 0..shards {
+                if counts[s] > 0 {
+                    continue;
+                }
+                let mut best: Option<usize> = None;
+                for (i, (&st, &d)) in stolen.iter().zip(&dist).enumerate() {
+                    if st || counts[assign[i] as usize] <= 1 {
+                        continue;
+                    }
+                    let better = match best {
+                        None => true,
+                        Some(b) => d > dist[b],
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+                let Some(i) = best else { continue };
+                stolen[i] = true;
+                counts[assign[i] as usize] -= 1;
+                counts[s] += 1;
+                assign[i] = s as u32;
+            }
+            // Means in f64, ascending sample order.
+            let dim = data.dim();
+            let mut sums = vec![0.0f64; shards * dim];
+            for (i, &p) in sample.iter().enumerate() {
+                let base = assign[i] as usize * dim;
+                for (j, &x) in data.row_logical(p as usize).iter().enumerate() {
+                    sums[base + j] += x as f64;
+                }
+            }
+            for s in 0..shards {
+                if counts[s] == 0 {
+                    continue; // keep the previous centroid
+                }
+                let inv = 1.0 / counts[s] as f64;
+                for (j, c) in centroids.row_mut(s).iter_mut().take(dim).enumerate() {
+                    *c = (sums[s * dim + j] * inv) as f32;
+                }
+            }
+        }
+
+        // Full assignment: nearest + runner-up per corpus row.
+        let mut owner = vec![0u32; n];
+        let mut runner = vec![0u32; n];
+        let mut margin = vec![0.0f32; n];
+        let mut counts = vec![0usize; shards];
+        for r in 0..n {
+            let (d1, c1, d2, c2) = two_nearest(pair, data.row(r), &centroids);
+            owner[r] = c1;
+            runner[r] = if shards > 1 { c2 } else { c1 };
+            margin[r] = if d2.is_finite() { d2 - d1 } else { 0.0 };
+            counts[c1 as usize] += 1;
+        }
+
+        // Repair: every shard must own ≥ 2 rows to build a graph. Move
+        // the globally nearest row (to the starving shard's centroid)
+        // out of any shard that can spare one; ties break by row id.
+        for s in 0..shards {
+            while counts[s] < 2 {
+                let mut best: Option<usize> = None;
+                for r in 0..n {
+                    if owner[r] as usize == s || counts[owner[r] as usize] <= 2 {
+                        continue;
+                    }
+                    let d = pair(data.row(r), centroids.row(s));
+                    let better = match best {
+                        None => true,
+                        Some(b) => d < pair(data.row(b), centroids.row(s)),
+                    };
+                    if better {
+                        best = Some(r);
+                    }
+                }
+                let Some(r) = best else {
+                    bail!("k-means repair failed: no shard can spare a row for shard {s}")
+                };
+                counts[owner[r] as usize] -= 1;
+                runner[r] = owner[r];
+                owner[r] = s as u32;
+                margin[r] = 0.0;
+                counts[s] += 1;
+            }
+        }
+
+        // Primaries, ascending by row id.
+        let mut plans: Vec<ShardPlan> = (0..shards)
+            .map(|s| ShardPlan { rows: Vec::with_capacity(counts[s]), primaries: 0 })
+            .collect();
+        for (r, &o) in owner.iter().enumerate() {
+            plans[o as usize].rows.push(r as u32);
+        }
+        for plan in &mut plans {
+            plan.primaries = plan.rows.len();
+        }
+
+        // Ghosts: per shard, the not-owned rows whose runner-up is this
+        // shard, smallest routing margin first, capped at ⌈primaries/8⌉.
+        let mut ghost_cands: Vec<Vec<u32>> = vec![Vec::new(); shards];
+        for r in 0..n {
+            let g = runner[r];
+            if g != owner[r] {
+                ghost_cands[g as usize].push(r as u32);
+            }
+        }
+        for (s, plan) in plans.iter_mut().enumerate() {
+            let cap = plan.primaries.div_ceil(GHOST_DENOM);
+            let cands = &mut ghost_cands[s];
+            cands.sort_unstable_by(|&a, &b| {
+                margin[a as usize].total_cmp(&margin[b as usize]).then(a.cmp(&b))
+            });
+            cands.truncate(cap);
+            cands.sort_unstable();
+            plan.rows.extend_from_slice(cands);
+        }
+
+        let mut final_centroids = AlignedMatrix::zeroed(shards, data.dim());
+        for (s, plan) in plans.iter().enumerate() {
+            write_mean(&mut final_centroids, s, data, &plan.rows[..plan.primaries]);
+        }
+        let plan = PartitionPlan { shards: plans, centroids: final_centroids };
+        plan.validate(n)?;
+        Ok(plan)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::clustered::SynthClustered;
+
+    fn corpus(n: usize, seed: u64) -> (AlignedMatrix, Vec<u32>) {
+        SynthClustered::new(n, 8, 4, seed).generate_labeled()
+    }
+
+    #[test]
+    fn contiguous_reproduces_the_historical_cut() {
+        let (data, _) = corpus(403, 3);
+        for shards in [1usize, 2, 5, 8] {
+            let plan = Contiguous.plan(&data, shards).unwrap();
+            plan.validate(data.n()).unwrap();
+            assert_eq!(plan.shards.len(), shards);
+            for (idx, sp) in plan.shards.iter().enumerate() {
+                let lo = idx * data.n() / shards;
+                let hi = (idx + 1) * data.n() / shards;
+                assert_eq!(sp.rows, (lo as u32..hi as u32).collect::<Vec<_>>(), "shard {idx}");
+                assert_eq!(sp.primaries, hi - lo);
+                assert!(sp.ghosts().is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn contiguous_rejects_degenerate_partitions() {
+        let (data, _) = corpus(40, 1);
+        assert!(Contiguous.plan(&data, 0).is_err());
+        assert!(Contiguous.plan(&data, 21).is_err());
+        assert!(KMeans::default().plan(&data, 21).is_err());
+    }
+
+    #[test]
+    fn kmeans_plan_is_deterministic() {
+        let (data, _) = corpus(600, 7);
+        let a = KMeans::default().plan(&data, 4).unwrap();
+        let b = KMeans::default().plan(&data, 4).unwrap();
+        assert_eq!(a.shards.len(), b.shards.len());
+        for (sa, sb) in a.shards.iter().zip(&b.shards) {
+            assert_eq!(sa.rows, sb.rows);
+            assert_eq!(sa.primaries, sb.primaries);
+        }
+        assert_eq!(a.centroids.as_slice(), b.centroids.as_slice());
+    }
+
+    #[test]
+    fn kmeans_partitions_every_row_once_with_bounded_ghosts() {
+        let (data, _) = corpus(600, 11);
+        let plan = KMeans::default().plan(&data, 4).unwrap();
+        plan.validate(data.n()).unwrap();
+        let owned: usize = plan.shards.iter().map(|s| s.primaries).sum();
+        assert_eq!(owned, data.n());
+        for (s, sp) in plan.shards.iter().enumerate() {
+            assert!(sp.primaries >= 2, "shard {s}");
+            assert!(
+                sp.ghosts().len() <= sp.primaries.div_ceil(GHOST_DENOM),
+                "shard {s}: {} ghosts over budget",
+                sp.ghosts().len()
+            );
+            // ghosts ascending and distinct
+            assert!(sp.ghosts().windows(2).all(|w| w[0] < w[1]), "shard {s} ghost order");
+        }
+    }
+
+    #[test]
+    fn kmeans_recovers_well_separated_clusters() {
+        // SynthClustered's separation ≫ spread, so a 4-way k-means over
+        // a 4-cluster corpus should produce label-pure shards.
+        let (data, labels) = corpus(800, 13);
+        let plan = KMeans::default().plan(&data, 4).unwrap();
+        let mut pure = 0usize;
+        for sp in &plan.shards {
+            let first = labels[sp.rows[0] as usize];
+            if sp.rows[..sp.primaries].iter().all(|&r| labels[r as usize] == first) {
+                pure += 1;
+            }
+        }
+        assert!(pure >= 3, "only {pure}/4 shards label-pure");
+    }
+
+    #[test]
+    fn kmeans_handles_single_shard() {
+        let (data, _) = corpus(50, 17);
+        let plan = KMeans::default().plan(&data, 1).unwrap();
+        plan.validate(data.n()).unwrap();
+        assert_eq!(plan.shards[0].primaries, 50);
+        assert!(plan.shards[0].ghosts().is_empty(), "S=1 has no runner-up shard");
+    }
+}

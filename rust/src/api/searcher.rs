@@ -61,6 +61,40 @@ pub trait Searcher {
     ) -> (Vec<Vec<Neighbor>>, BatchStats) {
         self.search_batch(&queries, k, params)
     }
+
+    /// [`search_batch`](Self::search_batch) with centroid routing: fan
+    /// each query out to at most `top_m` shards (nearest partition
+    /// centroids first). Searchers without a shard/routing structure —
+    /// a single [`GraphIndex`] or [`Index`](super::Index) — have
+    /// nothing to route over, so the default ignores `top_m` and serves
+    /// the full batch; sharded implementations
+    /// ([`ShardedSearcher`](super::ShardedSearcher),
+    /// [`ShardPool`](super::ShardPool)) override it. `top_m ≥ S` is
+    /// always exactly [`search_batch`](Self::search_batch).
+    fn search_batch_routed(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+        top_m: usize,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        let _ = top_m;
+        self.search_batch(queries, k, params)
+    }
+
+    /// [`search_batch_routed`](Self::search_batch_routed) with a
+    /// shared, owned tile (the micro-batching front-end's routed entry
+    /// point). Same override contract as
+    /// [`search_batch_owned`](Self::search_batch_owned).
+    fn search_batch_routed_owned(
+        &self,
+        queries: std::sync::Arc<AlignedMatrix>,
+        k: usize,
+        params: &SearchParams,
+        top_m: usize,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        self.search_batch_routed(&queries, k, params, top_m)
+    }
 }
 
 /// Map a raw working-space result list into the boundary type without

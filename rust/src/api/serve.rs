@@ -34,7 +34,7 @@
 
 use super::ids::Neighbor;
 use super::searcher::Searcher;
-use super::sharded::{Shard, ShardedSearcher};
+use super::sharded::{gather_rows, Router, Shard, ShardedSearcher};
 use crate::dataset::AlignedMatrix;
 use crate::distance::dispatch;
 use crate::search::{BatchStats, QueryStats, SearchParams};
@@ -48,6 +48,11 @@ struct Job {
     queries: Arc<AlignedMatrix>,
     k: usize,
     params: SearchParams,
+    /// Centroid-routing buckets (`routes[s]` = query indices bound for
+    /// shard `s`, ascending): `None` fans the whole tile out to every
+    /// shard. Computed once by the pool, shared read-only with every
+    /// worker.
+    routes: Option<Arc<Vec<Vec<u32>>>>,
     reply: mpsc::Sender<ShardReply>,
 }
 
@@ -68,6 +73,10 @@ struct ShardReply {
 pub struct ShardPool {
     senders: Vec<mpsc::Sender<Job>>,
     handles: Vec<JoinHandle<()>>,
+    /// Shared with the source `ShardedSearcher`: the pool routes
+    /// through the exact same centroids and kernels as the inline
+    /// fan-out, so routed results are bit-identical too.
+    router: Arc<Router>,
     n: usize,
     dim: usize,
     dim_pad: usize,
@@ -101,6 +110,7 @@ impl ShardPool {
         Ok(Self {
             senders,
             handles,
+            router: sharded.router_arc(),
             n: Searcher::len(sharded),
             dim: sharded.dim(),
             dim_pad,
@@ -132,16 +142,44 @@ fn worker_loop(owned: Vec<(usize, Arc<Shard>)>, rx: mpsc::Receiver<Job>) {
     let mut scratch: Vec<_> = owned.iter().map(|(_, sh)| sh.core.scratch()).collect();
     while let Ok(job) = rx.recv() {
         for ((slot, shard), scr) in owned.iter().zip(scratch.iter_mut()) {
-            let (raw, stats) = shard.core.search_batch_with(&job.queries, job.k, &job.params, scr);
-            let results = raw.into_iter().map(|r| shard.map_results(r)).collect();
             // a send error means the caller dropped its reply channel
             // (e.g. panicked mid-collect); nothing useful to do but
             // move on to the next job
-            let _ = job.reply.send(ShardReply {
-                shard: *slot,
-                results,
-                dist_evals: stats.dist_evals,
-                expansions: stats.expansions,
+            let _ = job.reply.send(match &job.routes {
+                None => {
+                    let (raw, stats) =
+                        shard.core.search_batch_with(&job.queries, job.k, &job.params, scr);
+                    ShardReply {
+                        shard: *slot,
+                        results: raw.into_iter().map(|r| shard.map_results(r)).collect(),
+                        dist_evals: stats.dist_evals,
+                        expansions: stats.expansions,
+                    }
+                }
+                Some(routes) => {
+                    // routed: serve only this shard's bucket. The pool
+                    // collects exactly one reply per shard, so an
+                    // unrouted shard still replies — just empty.
+                    let qids = &routes[*slot];
+                    if qids.is_empty() {
+                        ShardReply {
+                            shard: *slot,
+                            results: Vec::new(),
+                            dist_evals: 0,
+                            expansions: 0,
+                        }
+                    } else {
+                        let tile = gather_rows(&job.queries, qids);
+                        let (raw, stats) =
+                            shard.core.search_batch_with(&tile, job.k, &job.params, scr);
+                        ShardReply {
+                            shard: *slot,
+                            results: raw.into_iter().map(|r| shard.map_results(r)).collect(),
+                            dist_evals: stats.dist_evals,
+                            expansions: stats.expansions,
+                        }
+                    }
+                }
             });
         }
     }
@@ -208,7 +246,13 @@ impl Searcher for ShardPool {
         let (tx, rx) = mpsc::channel::<ShardReply>();
         for sender in &self.senders {
             sender
-                .send(Job { queries: Arc::clone(&queries), k, params: *params, reply: tx.clone() })
+                .send(Job {
+                    queries: Arc::clone(&queries),
+                    k,
+                    params: *params,
+                    routes: None,
+                    reply: tx.clone(),
+                })
                 .expect("shard worker exited before the pool was dropped");
         }
         drop(tx);
@@ -225,6 +269,7 @@ impl Searcher for ShardPool {
         let mut agg = BatchStats {
             queries: queries.n(),
             kernel: dispatch::active_width().name(),
+            shard_visits: (queries.n() * self.shard_count) as u64,
             ..Default::default()
         };
         let mut merged: Vec<Vec<Neighbor>> = Vec::new();
@@ -235,6 +280,83 @@ impl Searcher for ShardPool {
             agg.expansions += reply.expansions;
             for (qi, r) in reply.results.into_iter().enumerate() {
                 merged[qi].extend(r);
+            }
+        }
+        let results = merged.into_iter().map(|all| ShardedSearcher::merge(all, k)).collect();
+        agg.secs = t0.elapsed().as_secs_f64();
+        (results, agg)
+    }
+
+    fn search_batch_routed(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+        top_m: usize,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        self.search_batch_routed_owned(Arc::new(queries.clone()), k, params, top_m)
+    }
+
+    fn search_batch_routed_owned(
+        &self,
+        queries: Arc<AlignedMatrix>,
+        k: usize,
+        params: &SearchParams,
+        top_m: usize,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        assert_eq!(
+            queries.dim(),
+            self.dim,
+            "query batch dim {} does not match index dim {}",
+            queries.dim(),
+            self.dim
+        );
+        let t0 = Instant::now();
+        // route on the calling thread (one pass over the query×centroid
+        // tile), then share the buckets read-only with every worker —
+        // identical code path to ShardedSearcher::search_batch_routed,
+        // so the pool's routed results are bit-identical to the inline
+        // routed fan-out
+        let m = top_m.clamp(1, self.shard_count);
+        let (buckets, route_evals) = self.router.bucket(&queries, m);
+        let buckets = Arc::new(buckets);
+        let (tx, rx) = mpsc::channel::<ShardReply>();
+        for sender in &self.senders {
+            sender
+                .send(Job {
+                    queries: Arc::clone(&queries),
+                    k,
+                    params: *params,
+                    routes: Some(Arc::clone(&buckets)),
+                    reply: tx.clone(),
+                })
+                .expect("shard worker exited before the pool was dropped");
+        }
+        drop(tx);
+
+        let mut per_shard: Vec<Option<ShardReply>> = Vec::new();
+        per_shard.resize_with(self.shard_count, || None);
+        for _ in 0..self.shard_count {
+            let reply = rx.recv().expect("shard worker died mid-batch");
+            per_shard[reply.shard] = Some(reply);
+        }
+
+        let mut agg = BatchStats {
+            queries: queries.n(),
+            kernel: dispatch::active_width().name(),
+            dist_evals: route_evals,
+            ..Default::default()
+        };
+        let mut merged: Vec<Vec<Neighbor>> = Vec::new();
+        merged.resize_with(queries.n(), || Vec::with_capacity(k * m));
+        for slot in per_shard {
+            let reply = slot.expect("a shard never replied");
+            agg.dist_evals += reply.dist_evals;
+            agg.expansions += reply.expansions;
+            let qids = &buckets[reply.shard];
+            agg.shard_visits += qids.len() as u64;
+            for (pos, r) in reply.results.into_iter().enumerate() {
+                merged[qids[pos] as usize].extend(r);
             }
         }
         let results = merged.into_iter().map(|all| ShardedSearcher::merge(all, k)).collect();
@@ -331,6 +453,35 @@ mod tests {
         assert_eq!(estats.dist_evals, gstats.dist_evals);
         let (inline, _) = sharded.search_batch_owned(tile, 4, &sp);
         assert_neighbors_bitwise_eq(&expect, &inline, "trait default");
+    }
+
+    #[test]
+    fn pool_routed_matches_inline_routed_bitwise() {
+        use crate::api::partition::KMeans;
+        let data = corpus(600, 15);
+        let params = Params::default().with_k(8).with_seed(15);
+        let sharded =
+            ShardedSearcher::build_partitioned(&data, 4, &params, &KMeans::default()).unwrap();
+        let sp = SearchParams::default();
+        let queries = AlignedMatrix::from_rows(
+            40,
+            data.dim(),
+            &(0..40).flat_map(|i| data.row_logical(i * 11).to_vec()).collect::<Vec<f32>>(),
+        );
+        for threads in [1usize, 3] {
+            let pool = ShardPool::new(&sharded, threads).unwrap();
+            for m in [1usize, 2, 4] {
+                let (expect, estats) = sharded.search_batch_routed(&queries, 5, &sp, m);
+                let (got, gstats) = pool.search_batch_routed(&queries, 5, &sp, m);
+                assert_neighbors_bitwise_eq(&expect, &got, &format!("threads={threads} m={m}"));
+                assert_eq!(estats.dist_evals, gstats.dist_evals, "threads={threads} m={m}");
+                assert_eq!(estats.expansions, gstats.expansions, "threads={threads} m={m}");
+                assert_eq!(
+                    estats.shard_visits, gstats.shard_visits,
+                    "threads={threads} m={m}"
+                );
+            }
+        }
     }
 
     #[test]

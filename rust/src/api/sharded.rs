@@ -1,7 +1,6 @@
 //! Sharded serving: partition the corpus into S independently-built
-//! slices, fan every query (or batch) out to each shard through the
-//! existing blocked kernels, and merge the per-shard pools into one
-//! global top-k — the first concrete step on the ROADMAP sharding item.
+//! subsets, fan every query (or batch) out through the existing blocked
+//! kernels, and merge the per-shard pools into one global top-k.
 //!
 //! Sharding trades one global graph for S smaller ones. Each shard's
 //! NN-Descent build is cheaper (the paper's cost is ~n^1.14, so S
@@ -14,6 +13,17 @@
 //! the loss is small; the facade's tests gate it at ≤ 0.02 vs a single
 //! index.
 //!
+//! **Which rows land in which shard is a pluggable decision** — a
+//! [`Partitioner`](super::partition::Partitioner) plan. The default
+//! [`Contiguous`] split preserves the historical behavior bit for bit;
+//! the [`KMeans`](super::partition::KMeans) partitioner groups rows by
+//! nearest centroid (plus bounded boundary-ghost stitching) and unlocks
+//! **routed search**: [`Router`] scores query-to-centroid distances
+//! with the norm-trick kernels and fans out only to the top-m shards.
+//! With `m = S` routing degenerates to the full fan-out — same
+//! results, same evaluation counts — a contract the serve-stack tests
+//! pin bitwise.
+//!
 //! With S = 1 the single shard sees the whole corpus and the merge is
 //! the identity, so results are bit-identical to
 //! [`GraphIndex::search_batch`] — a property the integration tests pin
@@ -22,39 +32,51 @@
 //! [`GraphIndex::search_batch`]: crate::search::GraphIndex::search_batch
 
 use super::ids::{Neighbor, OriginalId, WorkingId};
+use super::partition::{Contiguous, PartitionPlan, Partitioner};
 use super::searcher::Searcher;
 use crate::config::schema::ComputeKind;
 use crate::dataset::AlignedMatrix;
+use crate::distance::{dispatch, sq_norm};
 use crate::nndescent::observer::{BuildEvent, BuildObserver, FnObserver, NoopObserver};
 use crate::nndescent::reorder::Reordering;
 use crate::nndescent::{BuildResult, NnDescent, Params};
 use crate::search::{BatchStats, GraphIndex, QueryStats, SearchParams};
+use std::path::{Path, PathBuf};
 use std::sync::Arc;
 use std::time::Instant;
 
-/// One shard: a graph over a contiguous slice of the corpus, plus the
-/// bookkeeping to map its working ids back to global original ids.
-/// Shards are held behind `Arc` so the thread-per-shard pool
-/// (`api::serve`) can hand each worker thread shared ownership of its
-/// shard without rebuilding or cloning the graph.
+/// One shard: a graph over a subset of the corpus, plus the bookkeeping
+/// to map its working ids back to global original ids. Shards are held
+/// behind `Arc` so the thread-per-shard pool (`api::serve`) can hand
+/// each worker thread shared ownership of its shard without rebuilding
+/// or cloning the graph.
 pub(crate) struct Shard {
     pub(crate) core: GraphIndex,
     /// Shard-local reorder permutation (iff the build reordered).
     pub(crate) reordering: Option<Reordering>,
-    /// First global row id of this shard's slice.
+    /// First global row id of a contiguous shard's slice (0 when `rows`
+    /// carries an explicit map).
     pub(crate) offset: u32,
+    /// Explicit local→global row map for scattered (cluster) shards:
+    /// `rows[local]` is the global id of shard-local row `local`,
+    /// including any ghost rows at the tail. `None` for contiguous
+    /// shards, where global = `offset + local`.
+    pub(crate) rows: Option<Vec<u32>>,
 }
 
 impl Shard {
     /// Map a shard-working id to the global original id: undo the
-    /// shard-local σ, then add the slice offset.
+    /// shard-local σ, then apply the shard's row mapping.
     #[inline]
     fn to_global(&self, w: WorkingId) -> OriginalId {
         let local = match &self.reordering {
             Some(r) => r.inv[w.index()],
             None => w.get(),
         };
-        OriginalId(self.offset + local)
+        match &self.rows {
+            Some(rows) => OriginalId(rows[local as usize]),
+            None => OriginalId(self.offset + local),
+        }
     }
 
     pub(crate) fn map_results(&self, raw: Vec<(u32, f32)>) -> Vec<Neighbor> {
@@ -64,9 +86,134 @@ impl Shard {
     }
 }
 
+/// Query-to-shard routing table: one centroid per shard, scored through
+/// the same norm-trick kernels the probe stage uses (centroid norms are
+/// precomputed here, ‖q‖² once per query). Shared by the inline
+/// fan-out and the thread-per-shard pool via `Arc`, so both serving
+/// layers route identically.
+pub(crate) struct Router {
+    centroids: AlignedMatrix,
+    /// ‖centroid‖² per shard, at the active kernel width.
+    norms: Vec<f32>,
+    /// `[0, S)` — the id list the one-to-many kernels iterate.
+    ids: Vec<u32>,
+}
+
+impl Router {
+    pub(crate) fn new(centroids: AlignedMatrix) -> Self {
+        let norms = (0..centroids.n()).map(|i| sq_norm(centroids.row(i))).collect();
+        let ids = (0..centroids.n() as u32).collect();
+        Self { centroids, norms, ids }
+    }
+
+    /// The routing table itself (persisted into per-shard bundles).
+    pub(crate) fn centroids(&self) -> &AlignedMatrix {
+        &self.centroids
+    }
+
+    /// The `m` nearest shards (ties toward the lower shard id),
+    /// ascending by shard id so the fan-out loop visits shards in slice
+    /// order — the same order the full fan-out uses. Returns the
+    /// centroid evaluations spent. **`m ≥ S` selects every shard
+    /// without scoring anything** (zero routing evaluations), which is
+    /// what makes `m = S` routed search reproduce the full fan-out
+    /// exactly, evaluation counts included.
+    pub(crate) fn route(&self, query: &[f32], m: usize) -> (Vec<u32>, u64) {
+        let s = self.centroids.n();
+        if m >= s {
+            return (self.ids.clone(), 0);
+        }
+        let dp = self.centroids.dim_pad();
+        let mut q = vec![0f32; dp];
+        let take = query.len().min(dp);
+        q[..take].copy_from_slice(&query[..take]);
+        let q2 = sq_norm(&q);
+        let mut dists = Vec::new();
+        let evals =
+            dispatch::one_to_many_norms(&q, q2, &self.centroids, &self.norms, &self.ids, &mut dists);
+        (Self::top_m(&dists, m), evals)
+    }
+
+    /// Per-shard query buckets for a batch: `buckets[s]` lists the
+    /// query indices routed to shard `s`, ascending. The query×centroid
+    /// tile runs through the GEMM-style cross kernel; `m ≥ S` skips the
+    /// scoring (every bucket holds every query).
+    pub(crate) fn bucket(&self, queries: &AlignedMatrix, m: usize) -> (Vec<Vec<u32>>, u64) {
+        let s = self.centroids.n();
+        let mut buckets: Vec<Vec<u32>> = vec![Vec::new(); s];
+        if m >= s {
+            for b in buckets.iter_mut() {
+                *b = (0..queries.n() as u32).collect();
+            }
+            return (buckets, 0);
+        }
+        let qnorms: Vec<f32> = (0..queries.n()).map(|qi| sq_norm(queries.row(qi))).collect();
+        let mut dists = vec![0f32; queries.n() * s];
+        let evals = dispatch::cross_norms(
+            queries,
+            &qnorms,
+            &self.centroids,
+            &self.norms,
+            &self.ids,
+            &mut dists,
+        );
+        for qi in 0..queries.n() {
+            for pick in Self::top_m(&dists[qi * s..(qi + 1) * s], m) {
+                buckets[pick as usize].push(qi as u32);
+            }
+        }
+        (buckets, evals)
+    }
+
+    /// Indices of the `m` smallest distances, ties toward the lower
+    /// index, returned ascending by index.
+    fn top_m(dists: &[f32], m: usize) -> Vec<u32> {
+        let mut order: Vec<u32> = (0..dists.len() as u32).collect();
+        order.sort_unstable_by(|&a, &b| {
+            dists[a as usize].total_cmp(&dists[b as usize]).then(a.cmp(&b))
+        });
+        order.truncate(m);
+        order.sort_unstable();
+        order
+    }
+}
+
+/// Rows `qids` of `queries` gathered into a fresh tile (the per-shard
+/// sub-batch of routed search). Row content is copied logically, so a
+/// gather of *all* rows in order reproduces the original tile's
+/// logical content exactly — which is why routed `m = S` search is
+/// bit-identical to the full fan-out.
+pub(crate) fn gather_rows(queries: &AlignedMatrix, qids: &[u32]) -> AlignedMatrix {
+    let flat: Vec<f32> =
+        qids.iter().flat_map(|&qi| queries.row_logical(qi as usize).to_vec()).collect();
+    AlignedMatrix::from_rows(qids.len(), queries.dim(), &flat)
+}
+
+/// Per-shard mean rows of `mats` — the fallback routing table when no
+/// partition plan or persisted centroids exist (f64 accumulation).
+fn data_means(mats: &[&AlignedMatrix]) -> AlignedMatrix {
+    let dim = mats[0].dim();
+    let mut out = AlignedMatrix::zeroed(mats.len(), dim);
+    for (s, m) in mats.iter().enumerate() {
+        let mut acc = vec![0.0f64; dim];
+        for i in 0..m.n() {
+            for (a, &x) in acc.iter_mut().zip(m.row_logical(i)) {
+                *a += x as f64;
+            }
+        }
+        let inv = 1.0 / m.n().max(1) as f64;
+        for (c, a) in out.row_mut(s).iter_mut().zip(&acc) {
+            *c = (a * inv) as f32;
+        }
+    }
+    out
+}
+
 /// A [`Searcher`] over S independently-built shards.
 pub struct ShardedSearcher {
     shards: Vec<Arc<Shard>>,
+    router: Arc<Router>,
+    params: Params,
     n: usize,
     dim: usize,
 }
@@ -98,21 +245,24 @@ impl ShardedSearcher {
         Self::build_with(data, shards, params, "artifacts", observer)
     }
 
-    /// Fully-configured entry point: `artifacts_dir` feeds the `pjrt`
-    /// backend when `params.compute` asks for it
-    /// ([`IndexBuilder::build_sharded`](super::IndexBuilder::build_sharded)
-    /// routes its configured directory through here).
-    ///
-    /// With a resolved [`Params::threads`] budget `T > 1` (explicit or
-    /// via `PALLAS_BUILD_THREADS`) and `S > 1` native-backend shards,
-    /// the S independent shard builds run concurrently on
-    /// `min(T, S)` workers — one whole-shard build per worker,
-    /// contiguous groups, each inner build pinned to a single thread —
-    /// and the assembled searcher is **bit-identical** to the
-    /// sequential shard loop (shard builds share no state; observers
-    /// see each shard's events replayed in slice order, tagged by
-    /// [`BuildEvent::ShardStarted`]). With `S = 1` the thread budget
-    /// flows into the single shard's build instead.
+    /// Like [`build`](Self::build) with an explicit
+    /// [`Partitioner`](super::partition::Partitioner) — e.g.
+    /// [`KMeans`](super::partition::KMeans) for cluster-aware shards
+    /// whose queries can be centroid-routed
+    /// ([`search_batch_routed`](Searcher::search_batch_routed)).
+    pub fn build_partitioned(
+        data: &AlignedMatrix,
+        shards: usize,
+        params: &Params,
+        partitioner: &dyn Partitioner,
+    ) -> crate::Result<Self> {
+        Self::build_planned(data, shards, params, partitioner, "artifacts", &mut NoopObserver)
+    }
+
+    /// Contiguous-partitioned entry point with artifacts/observer
+    /// plumbing (kept for the historical callers; the partitioning
+    /// decision itself now lives in
+    /// [`build_planned`](Self::build_planned)).
     pub fn build_with(
         data: &AlignedMatrix,
         shards: usize,
@@ -120,33 +270,70 @@ impl ShardedSearcher {
         artifacts_dir: &str,
         observer: &mut dyn BuildObserver,
     ) -> crate::Result<Self> {
-        let n = data.n();
-        anyhow::ensure!(shards >= 1, "need at least one shard");
-        anyhow::ensure!(
-            n / shards >= 2,
-            "corpus of {n} points cannot fill {shards} shards (each needs ≥ 2 points)"
-        );
-        let workers = crate::nndescent::resolve_build_threads(params.threads).min(shards);
-        let built = if workers > 1 && params.compute != ComputeKind::Pjrt {
-            Self::build_shards_parallel(data, shards, params, workers, observer)?
-        } else {
-            Self::build_shards_sequential(data, shards, params, artifacts_dir, observer)?
-        };
-        Ok(Self { shards: built, n, dim: data.dim() })
+        Self::build_planned(data, shards, params, &Contiguous, artifacts_dir, observer)
     }
 
-    /// One shard's contiguous slice copied out of the corpus. Slices
-    /// are cut lazily — one at a time sequentially, one per in-flight
-    /// build in the worker pool — so a sharded build never holds a
-    /// second full corpus copy beyond the shards it is actively
-    /// building (the finished shards own their working-layout data
-    /// either way).
-    fn cut_slice(data: &AlignedMatrix, shards: usize, idx: usize) -> (usize, AlignedMatrix) {
+    /// Fully-configured entry point: partition `data` with
+    /// `partitioner`, build every shard's subgraph, and assemble the
+    /// routing table from the plan's centroids. `artifacts_dir` feeds
+    /// the `pjrt` backend when `params.compute` asks for it.
+    ///
+    /// With a resolved [`Params::threads`] budget `T > 1` (explicit or
+    /// via `PALLAS_BUILD_THREADS`) and `S > 1` native-backend shards,
+    /// the S independent shard builds run concurrently on
+    /// `min(T, S)` workers — one whole-shard build per worker,
+    /// contiguous groups, each inner build pinned to a single thread —
+    /// and the assembled searcher is **bit-identical** to the
+    /// sequential shard loop (shard builds share no state; the plan is
+    /// computed once, single-threaded, before any worker spawns;
+    /// observers see each shard's events replayed in slice order,
+    /// tagged by [`BuildEvent::ShardStarted`]). With `S = 1` the thread
+    /// budget flows into the single shard's build instead.
+    pub fn build_planned(
+        data: &AlignedMatrix,
+        shards: usize,
+        params: &Params,
+        partitioner: &dyn Partitioner,
+        artifacts_dir: &str,
+        observer: &mut dyn BuildObserver,
+    ) -> crate::Result<Self> {
         let n = data.n();
-        let lo = idx * n / shards;
-        let hi = (idx + 1) * n / shards;
-        let rows: Vec<f32> = (lo..hi).flat_map(|i| data.row_logical(i).to_vec()).collect();
-        (lo, AlignedMatrix::from_rows(hi - lo, data.dim(), &rows))
+        let plan = partitioner.plan(data, shards)?;
+        let workers = crate::nndescent::resolve_build_threads(params.threads).min(shards);
+        let built = if workers > 1 && params.compute != ComputeKind::Pjrt {
+            Self::build_shards_parallel(data, &plan, params, workers, observer)?
+        } else {
+            Self::build_shards_sequential(data, &plan, params, artifacts_dir, observer)?
+        };
+        Ok(Self {
+            shards: built,
+            router: Arc::new(Router::new(plan.centroids)),
+            params: params.clone(),
+            n,
+            dim: data.dim(),
+        })
+    }
+
+    /// One shard's rows copied out of the corpus (primaries then
+    /// ghosts, in plan order). Tiles are cut lazily — one at a time
+    /// sequentially, one per in-flight build in the worker pool — so a
+    /// sharded build never holds a second full corpus copy beyond the
+    /// shards it is actively building.
+    fn cut_plan_rows(data: &AlignedMatrix, rows: &[u32]) -> AlignedMatrix {
+        let flat: Vec<f32> =
+            rows.iter().flat_map(|&r| data.row_logical(r as usize).to_vec()).collect();
+        AlignedMatrix::from_rows(rows.len(), data.dim(), &flat)
+    }
+
+    /// The shard's id-mapping representation: contiguous row runs keep
+    /// the compact offset form (and stay exportable as per-shard
+    /// bundles); anything else carries the explicit map.
+    fn shard_mapping(rows: &[u32]) -> (u32, Option<Vec<u32>>) {
+        if rows.windows(2).all(|w| w[1] == w[0] + 1) {
+            (rows[0], None)
+        } else {
+            (0, Some(rows.to_vec()))
+        }
     }
 
     /// The sequential shard loop (also the `pjrt` path: that engine is
@@ -154,22 +341,24 @@ impl ShardedSearcher {
     /// shard.
     fn build_shards_sequential(
         data: &AlignedMatrix,
-        shards: usize,
+        plan: &PartitionPlan,
         params: &Params,
         artifacts_dir: &str,
         observer: &mut dyn BuildObserver,
     ) -> crate::Result<Vec<Arc<Shard>>> {
-        let mut built = Vec::with_capacity(shards);
-        for idx in 0..shards {
-            let (lo, shard_data) = Self::cut_slice(data, shards, idx);
+        let mut built = Vec::with_capacity(plan.shards.len());
+        for (idx, sp) in plan.shards.iter().enumerate() {
+            let shard_data = Self::cut_plan_rows(data, &sp.rows);
             observer.on_event(&BuildEvent::ShardStarted { shard: idx, n: shard_data.n() });
             let result = super::builder::run_build(params, &shard_data, artifacts_dir, observer)?;
             let working = result.working_data(shard_data);
             let BuildResult { graph, reordering, .. } = result;
+            let (offset, rows) = Self::shard_mapping(&sp.rows);
             built.push(Arc::new(Shard {
                 core: GraphIndex::new(working, graph),
                 reordering,
-                offset: lo as u32,
+                offset,
+                rows,
             }));
         }
         Ok(built)
@@ -186,11 +375,12 @@ impl ShardedSearcher {
     /// build error, the first failing shard in slice order wins.
     fn build_shards_parallel(
         data: &AlignedMatrix,
-        shards: usize,
+        plan: &PartitionPlan,
         params: &Params,
         workers: usize,
         observer: &mut dyn BuildObserver,
     ) -> crate::Result<Vec<Arc<Shard>>> {
+        let shards = plan.shards.len();
         let inner = Params { threads: 1, ..params.clone() };
         let mut groups: Vec<Vec<usize>> = (0..workers).map(|_| Vec::new()).collect();
         for idx in 0..shards {
@@ -207,10 +397,11 @@ impl ShardedSearcher {
                         group
                             .into_iter()
                             .map(|idx| {
-                                // each worker cuts its own slice just
-                                // in time: at most one in-flight slice
-                                // per worker, never a full corpus copy
-                                let (lo, shard_data) = Self::cut_slice(data, shards, idx);
+                                // each worker cuts its own tile just in
+                                // time: at most one in-flight tile per
+                                // worker, never a full corpus copy
+                                let sp = &plan.shards[idx];
+                                let shard_data = Self::cut_plan_rows(data, &sp.rows);
                                 let sn = shard_data.n();
                                 let mut events: Vec<BuildEvent> = Vec::new();
                                 let built = NnDescent::new(inner.clone()).build_observed(
@@ -220,10 +411,12 @@ impl ShardedSearcher {
                                 let shard = built.map(|result| {
                                     let working = result.working_data(shard_data);
                                     let BuildResult { graph, reordering, .. } = result;
+                                    let (offset, rows) = Self::shard_mapping(&sp.rows);
                                     Shard {
                                         core: GraphIndex::new(working, graph),
                                         reordering,
-                                        offset: lo as u32,
+                                        offset,
+                                        rows,
                                     }
                                 });
                                 (idx, sn, shard, events)
@@ -264,14 +457,126 @@ impl ShardedSearcher {
     pub fn from_index(index: super::Index) -> Self {
         let n = index.len();
         let dim = index.dim();
-        let (core, reordering) = index.into_core_parts();
-        Self { shards: vec![Arc::new(Shard { core, reordering, offset: 0 })], n, dim }
+        let params = index.params().clone();
+        let (core, reordering, centroids) = index.into_core_parts();
+        let router = Router::new(match centroids {
+            // a single-shard bundle's own centroid, if it carried one
+            Some(c) if c.n() == 1 && c.dim() == dim => c,
+            _ => data_means(&[core.data()]),
+        });
+        Self {
+            shards: vec![Arc::new(Shard { core, reordering, offset: 0, rows: None })],
+            router: Arc::new(router),
+            params,
+            n,
+            dim,
+        }
+    }
+
+    /// Assemble several loaded bundles into one sharded searcher —
+    /// bundle `i` becomes shard `i`, and global ids are the
+    /// **concatenation order**: bundle 0's rows first, then bundle 1's,
+    /// and so on (exactly undoing [`save_shards`](Self::save_shards)).
+    ///
+    /// The routing table prefers the centroids persisted in the first
+    /// bundle when they are consistent (one centroid per bundle, same
+    /// dimensionality); otherwise it falls back to per-shard data
+    /// means, which routes reasonably for naturally-clustered bundles.
+    pub fn from_indexes(indexes: Vec<super::Index>) -> crate::Result<Self> {
+        anyhow::ensure!(!indexes.is_empty(), "need at least one index bundle");
+        let s = indexes.len();
+        let dim = indexes[0].dim();
+        let params = indexes[0].params().clone();
+        let mut stored: Option<AlignedMatrix> = None;
+        let mut shards = Vec::with_capacity(s);
+        let mut offset = 0u64;
+        for (i, index) in indexes.into_iter().enumerate() {
+            anyhow::ensure!(
+                index.dim() == dim,
+                "bundle {i} dimensionality {} does not match bundle 0's {dim}",
+                index.dim()
+            );
+            let len = index.len() as u64;
+            let (core, reordering, centroids) = index.into_core_parts();
+            if i == 0 {
+                stored = centroids.filter(|c| c.n() == s && c.dim() == dim);
+            }
+            shards.push(Arc::new(Shard { core, reordering, offset: offset as u32, rows: None }));
+            offset += len;
+        }
+        anyhow::ensure!(offset <= u32::MAX as u64, "combined corpus exceeds the u32 id space");
+        let router = Router::new(match stored {
+            Some(c) => c,
+            None => {
+                let mats: Vec<&AlignedMatrix> = shards.iter().map(|sh| sh.core.data()).collect();
+                data_means(&mats)
+            }
+        });
+        Ok(Self { shards, router: Arc::new(router), params, n: offset as usize, dim })
+    }
+
+    /// Persist every shard as its own `KNNIv1` bundle:
+    /// `base = out.knni` writes `out-shard0.knni`, `out-shard1.knni`, …
+    /// each carrying the **full** S-row routing table, so any one
+    /// bundle (or all of them through
+    /// [`from_indexes`](Self::from_indexes)) can reconstruct routing.
+    ///
+    /// Only contiguous (offset-mapped) shards are exportable: the
+    /// bundle format stores no per-row id map, so reloading recovers
+    /// global ids from concatenation order alone. K-means-partitioned
+    /// searchers (scattered row maps, ghost rows) are rejected.
+    pub fn save_shards(&self, base: &Path) -> crate::Result<Vec<PathBuf>> {
+        let mut out = Vec::with_capacity(self.shards.len());
+        for (i, shard) in self.shards.iter().enumerate() {
+            anyhow::ensure!(
+                shard.rows.is_none(),
+                "per-shard bundles require contiguous shards (shard {i} has a scattered row \
+                 map); rebuild with the contiguous partitioner to export"
+            );
+            let path = Self::shard_bundle_path(base, i);
+            crate::search::bundle::save_index_parts(
+                &path,
+                shard.core.data(),
+                shard.core.graph(),
+                shard.reordering.as_ref(),
+                &self.params,
+                Some((shard.core.norms(), shard.core.norm_lanes())),
+                Some(self.router.centroids()),
+            )?;
+            out.push(path);
+        }
+        Ok(out)
+    }
+
+    /// `out.knni` → `out-shard{i}.knni` (extension preserved).
+    fn shard_bundle_path(base: &Path, i: usize) -> PathBuf {
+        let stem = base
+            .file_stem()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "index".into());
+        let name = match base.extension() {
+            Some(ext) => format!("{stem}-shard{i}.{}", ext.to_string_lossy()),
+            None => format!("{stem}-shard{i}"),
+        };
+        base.with_file_name(name)
     }
 
     /// Shared handles to the shards, in slice order — what
     /// [`ShardPool`](super::ShardPool) distributes over its workers.
     pub(crate) fn shards(&self) -> &[Arc<Shard>] {
         &self.shards
+    }
+
+    /// Shared handle to the routing table — the pool routes through the
+    /// exact same centroids and kernels as the inline fan-out.
+    pub(crate) fn router_arc(&self) -> Arc<Router> {
+        Arc::clone(&self.router)
+    }
+
+    /// The partition centroids queries are routed by (one row per
+    /// shard).
+    pub fn centroids(&self) -> &AlignedMatrix {
+        self.router.centroids()
     }
 
     /// Number of shards.
@@ -284,24 +589,61 @@ impl ShardedSearcher {
         self.dim
     }
 
-    /// Shard slice sizes, in slice order.
+    /// Shard sizes (including any ghost rows), in slice order.
     pub fn shard_sizes(&self) -> Vec<usize> {
         self.shards.iter().map(|s| s.core.n()).collect()
     }
 
-    /// Merge per-shard candidate lists into the global top-k: sort by
-    /// (distance, global id) and truncate.
+    /// Single-query routed search: fan out only to the `top_m` shards
+    /// nearest the query (clamped to `[1, S]`). The centroid scoring
+    /// evaluations are included in the returned stats; with
+    /// `top_m ≥ S` this is exactly [`search`](Searcher::search).
+    pub fn search_routed(
+        &self,
+        query: &[f32],
+        k: usize,
+        params: &SearchParams,
+        top_m: usize,
+    ) -> (Vec<Neighbor>, QueryStats) {
+        let m = top_m.clamp(1, self.shards.len());
+        let (picks, route_evals) = self.router.route(query, m);
+        let mut stats = QueryStats { dist_evals: route_evals, expansions: 0 };
+        let mut all = Vec::with_capacity(k * picks.len());
+        for &si in &picks {
+            let shard = &self.shards[si as usize];
+            let (raw, s) = shard.core.search(query, k, params);
+            stats.dist_evals += s.dist_evals;
+            stats.expansions += s.expansions;
+            all.extend(shard.map_results(raw));
+        }
+        (Self::merge(all, k), stats)
+    }
+
+    /// Merge per-shard candidate lists into the global top-k: drop
+    /// ghost duplicates, sort by (distance, global id), truncate.
+    ///
+    /// Ghost rows (k-means boundary stitching) can surface the *same
+    /// global row* from two shards, possibly with different distance
+    /// bits (one shard may have scored it on the norm-trick probe path,
+    /// the other on the direct expansion strip). The first pass groups
+    /// by id and keeps each id's nearest copy; with unique ids — every
+    /// contiguous-partitioned searcher — it keeps everything, and the
+    /// final order equals the historical single sort.
     ///
     /// The comparator is **total** (`f32::total_cmp`, so a corrupt NaN
     /// cannot panic the serving path; squared-L2 distances are never
-    /// `-0.0`, for which `total_cmp` would differ from `==`) and its key
-    /// is unique per entry (global ids never repeat across shards), so
-    /// the output is a pure function of the candidate *set*: equal
-    /// distances from different shards break by global id, never by
-    /// fan-out or arrival order. This is the invariant that lets the
-    /// thread-per-shard pool merge replies in whatever order workers
-    /// finish and still match the single-threaded fan-out bit for bit.
+    /// `-0.0`, for which `total_cmp` would differ from `==`) and its
+    /// final key is unique per entry, so the output is a pure function
+    /// of the candidate *set*: equal distances break by global id,
+    /// never by fan-out or arrival order. This is the invariant that
+    /// lets the thread-per-shard pool merge replies in whatever order
+    /// workers finish and still match the single-threaded fan-out bit
+    /// for bit.
     pub(crate) fn merge(mut all: Vec<Neighbor>, k: usize) -> Vec<Neighbor> {
+        all.sort_unstable_by(|a, b| {
+            a.id.get().cmp(&b.id.get()).then(a.dist.total_cmp(&b.dist))
+        });
+        all.dedup_by(|a, b| a.id == b.id);
         all.sort_unstable_by(|a, b| {
             a.dist.total_cmp(&b.dist).then(a.id.get().cmp(&b.id.get()))
         });
@@ -342,6 +684,7 @@ impl Searcher for ShardedSearcher {
         let mut agg = BatchStats {
             queries: queries.n(),
             kernel: crate::distance::dispatch::active_width().name(),
+            shard_visits: (queries.n() * self.shards.len()) as u64,
             ..Default::default()
         };
         let mut merged: Vec<Vec<Neighbor>> = Vec::new();
@@ -358,12 +701,51 @@ impl Searcher for ShardedSearcher {
         agg.secs = t0.elapsed().as_secs_f64();
         (results, agg)
     }
+
+    fn search_batch_routed(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+        top_m: usize,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        let t0 = Instant::now();
+        let m = top_m.clamp(1, self.shards.len());
+        let (buckets, route_evals) = self.router.bucket(queries, m);
+        let mut agg = BatchStats {
+            queries: queries.n(),
+            kernel: crate::distance::dispatch::active_width().name(),
+            dist_evals: route_evals,
+            ..Default::default()
+        };
+        let mut merged: Vec<Vec<Neighbor>> = Vec::new();
+        merged.resize_with(queries.n(), || Vec::with_capacity(k * m));
+        for (si, shard) in self.shards.iter().enumerate() {
+            let qids = &buckets[si];
+            if qids.is_empty() {
+                continue;
+            }
+            agg.shard_visits += qids.len() as u64;
+            let tile = gather_rows(queries, qids);
+            let (raw, s) = shard.core.search_batch(&tile, k, params);
+            agg.dist_evals += s.dist_evals;
+            agg.expansions += s.expansions;
+            for (pos, r) in raw.into_iter().enumerate() {
+                merged[qids[pos] as usize].extend(shard.map_results(r));
+            }
+        }
+        let results = merged.into_iter().map(|all| Self::merge(all, k)).collect();
+        agg.secs = t0.elapsed().as_secs_f64();
+        (results, agg)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::api::partition::KMeans;
     use crate::dataset::clustered::SynthClustered;
+    use crate::testing::assert_neighbors_bitwise_eq;
 
     fn corpus(n: usize, seed: u64) -> AlignedMatrix {
         let (data, _) = SynthClustered::new(n, 8, 4, seed).generate_labeled();
@@ -504,6 +886,23 @@ mod tests {
         assert_eq!(ShardedSearcher::merge(rotated, 3), expect);
     }
 
+    #[test]
+    fn merge_deduplicates_ghost_copies_keeping_the_nearest() {
+        // the same global row from two shards (a ghost copy), slightly
+        // different distance bits: one survivor, at the nearer distance
+        let all = vec![
+            Neighbor::new(4, 2.0),
+            Neighbor::new(7, 1.0000001),
+            Neighbor::new(7, 1.0),
+            Neighbor::new(2, 0.5),
+        ];
+        let m = ShardedSearcher::merge(all, 4);
+        assert_eq!(
+            m,
+            vec![Neighbor::new(2, 0.5), Neighbor::new(7, 1.0), Neighbor::new(4, 2.0)]
+        );
+    }
+
     /// 4 copies of 10 distinct points, one copy per shard — so every
     /// query has exact-tie answers in *every* shard.
     fn duplicated_corpus() -> AlignedMatrix {
@@ -537,5 +936,155 @@ mod tests {
             let (bres, _) = sharded.search_batch(&qm, 4, &sp);
             assert_eq!(bres[0], expect, "query {j} batch path");
         }
+    }
+
+    fn query_tile(data: &AlignedMatrix, from: usize, count: usize) -> AlignedMatrix {
+        let rows: Vec<f32> =
+            (from..from + count).flat_map(|i| data.row_logical(i).to_vec()).collect();
+        AlignedMatrix::from_rows(count, data.dim(), &rows)
+    }
+
+    #[test]
+    fn kmeans_build_covers_the_corpus_and_serves_global_ids() {
+        let data = corpus(600, 19);
+        let params = Params::default().with_k(8).with_seed(19).with_reorder(true);
+        let sharded =
+            ShardedSearcher::build_partitioned(&data, 4, &params, &KMeans::default()).unwrap();
+        assert_eq!(Searcher::len(&sharded), 600);
+        // shard sizes include ghosts, so they sum to ≥ n
+        assert!(sharded.shard_sizes().iter().sum::<usize>() >= 600);
+        let sp = SearchParams::default();
+        for qi in (0..600).step_by(53) {
+            let (res, _) = sharded.search(data.row_logical(qi), 3, &sp);
+            assert_eq!(res[0].id, OriginalId(qi as u32), "self hit in global ids");
+            assert!(res[0].dist < 1e-6);
+            // ghost duplicates never surface twice
+            let mut ids: Vec<u32> = res.iter().map(|r| r.id.get()).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            assert_eq!(ids.len(), res.len(), "query {qi}: duplicate ids in results");
+        }
+    }
+
+    #[test]
+    fn routed_full_fanout_is_bit_identical_for_both_partitioners() {
+        let data = corpus(600, 23);
+        let queries = query_tile(&data, 0, 60);
+        let params = Params::default().with_k(8).with_seed(23);
+        let sp = SearchParams::default();
+        for (name, sharded) in [
+            ("contiguous", ShardedSearcher::build(&data, 4, &params).unwrap()),
+            (
+                "kmeans",
+                ShardedSearcher::build_partitioned(&data, 4, &params, &KMeans::default())
+                    .unwrap(),
+            ),
+        ] {
+            let (expect, estats) = sharded.search_batch(&queries, 5, &sp);
+            // m = S (and anything larger) routes to every shard with
+            // zero scoring overhead: identical results AND eval counts
+            for m in [4usize, 9] {
+                let (got, gstats) = sharded.search_batch_routed(&queries, 5, &sp, m);
+                assert_neighbors_bitwise_eq(&expect, &got, &format!("{name} m={m}"));
+                assert_eq!(estats.dist_evals, gstats.dist_evals, "{name} m={m}");
+                assert_eq!(estats.expansions, gstats.expansions, "{name} m={m}");
+                assert_eq!(estats.shard_visits, gstats.shard_visits, "{name} m={m}");
+            }
+            // single-query routed path agrees with Searcher::search
+            for qi in (0..60).step_by(13) {
+                let (a, sa) = sharded.search(queries.row_logical(qi), 5, &sp);
+                let (b, sb) = sharded.search_routed(queries.row_logical(qi), 5, &sp, 4);
+                assert_neighbors_bitwise_eq(
+                    std::slice::from_ref(&a),
+                    std::slice::from_ref(&b),
+                    &format!("{name} single {qi}"),
+                );
+                assert_eq!(sa, sb, "{name} single {qi} stats");
+            }
+        }
+    }
+
+    #[test]
+    fn routed_search_visits_fewer_shards_and_counts_them() {
+        let data = corpus(800, 29);
+        let queries = query_tile(&data, 0, 50);
+        let params = Params::default().with_k(8).with_seed(29);
+        let sharded =
+            ShardedSearcher::build_partitioned(&data, 4, &params, &KMeans::default()).unwrap();
+        let sp = SearchParams::default();
+        let (_, full) = sharded.search_batch(&queries, 5, &sp);
+        assert_eq!(full.shard_visits, 50 * 4);
+        let (res, routed) = sharded.search_batch_routed(&queries, 5, &sp, 2);
+        assert_eq!(routed.shard_visits, 50 * 2, "m=2 visits exactly 2 shards per query");
+        assert!(routed.dist_evals < full.dist_evals, "routing must cut work");
+        assert_eq!(res.len(), 50);
+        // self-queries still find themselves through the routed path
+        for (qi, r) in res.iter().enumerate() {
+            assert_eq!(r[0].id, OriginalId(qi as u32), "query {qi}");
+        }
+    }
+
+    #[test]
+    fn save_shards_roundtrips_through_from_indexes() {
+        let dir = std::env::temp_dir().join("knng_shard_export_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let base = dir.join("out.knni");
+        let data = corpus(400, 31);
+        let params = Params::default().with_k(6).with_seed(31).with_reorder(true);
+        let sharded = ShardedSearcher::build(&data, 2, &params).unwrap();
+        let paths = sharded.save_shards(&base).unwrap();
+        assert_eq!(paths.len(), 2);
+        assert!(paths[0].to_string_lossy().ends_with("out-shard0.knni"));
+
+        let loaded: Vec<super::super::Index> =
+            paths.iter().map(|p| super::super::Index::load(p).unwrap()).collect();
+        // every shard bundle carries the full routing table
+        for idx in &loaded {
+            let c = idx.centroids().expect("shard bundles persist centroids");
+            assert_eq!((c.n(), c.dim()), (2, data.dim()));
+        }
+        let rebuilt = ShardedSearcher::from_indexes(loaded).unwrap();
+        assert_eq!(rebuilt.shard_count(), 2);
+        assert_eq!(Searcher::len(&rebuilt), 400);
+        assert_eq!(rebuilt.centroids().as_slice(), sharded.centroids().as_slice());
+
+        let queries = query_tile(&data, 0, 40);
+        let sp = SearchParams::default();
+        let (expect, estats) = sharded.search_batch(&queries, 5, &sp);
+        let (got, gstats) = rebuilt.search_batch(&queries, 5, &sp);
+        assert_neighbors_bitwise_eq(&expect, &got, "reloaded shard bundles");
+        assert_eq!(estats.dist_evals, gstats.dist_evals);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn save_shards_rejects_scattered_kmeans_shards() {
+        let data = corpus(300, 37);
+        let params = Params::default().with_k(6).with_seed(37);
+        let sharded =
+            ShardedSearcher::build_partitioned(&data, 3, &params, &KMeans::default()).unwrap();
+        let dir = std::env::temp_dir().join("knng_shard_export_reject");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = sharded.save_shards(&dir.join("out.knni")).unwrap_err().to_string();
+        assert!(err.contains("contiguous"), "unexpected error: {err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn from_indexes_rejects_empty_and_mismatched_dims() {
+        assert!(ShardedSearcher::from_indexes(Vec::new()).is_err());
+        let a = super::super::IndexBuilder::new()
+            .data(corpus(100, 41))
+            .params(Params::default().with_k(5).with_seed(41))
+            .build()
+            .unwrap();
+        let (wide, _) = SynthClustered::new(100, 16, 4, 41).generate_labeled();
+        let b = super::super::IndexBuilder::new()
+            .data(wide)
+            .params(Params::default().with_k(5).with_seed(41))
+            .build()
+            .unwrap();
+        let err = ShardedSearcher::from_indexes(vec![a, b]).unwrap_err().to_string();
+        assert!(err.contains("dimensionality"), "unexpected error: {err}");
     }
 }

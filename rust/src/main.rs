@@ -16,7 +16,11 @@
 //!   knng build --dataset clustered --n 131k --dim 8 --threads 4
 //!   knng build --dataset fvecs --path corpus.fvecs --n 100k --reorder \
 //!              --save-index corpus.knni
+//!   knng build --dataset clustered --n 64k --dim 8 --shards 4 \
+//!              --partitioner kmeans
 //!   knng query --index corpus.knni --batch queries.fvecs --k 10 --ef 64
+//!   knng query --index a.knni --index b.knni --batch queries.fvecs \
+//!              --route-top-m 1
 //!   knng query --index corpus.knni --batch queries.fvecs --kernel w16
 //!   knng query --index corpus.knni --batch queries.fvecs --serve \
 //!              --threads 4 --max-batch 128 --batch-window 500
@@ -80,6 +84,8 @@ fn build_spec() -> ArgSpec {
         .value("selection", "naive|heap|turbo (default turbo)")
         .value("compute", "scalar|unrolled|blocked|pjrt (default blocked)")
         .value("threads", "build worker threads; 1 = exact sequential engine (default: PALLAS_BUILD_THREADS env, else 1)")
+        .value("shards", "partition the corpus and build S independent shard subgraphs (default 1 = single index)")
+        .value("partitioner", "shard partitioner: contiguous|kmeans (with --shards; default contiguous)")
         .value(KERNEL_FLAG, KERNEL_HELP)
         .flag("reorder", "enable the greedy reordering heuristic")
         .value("seed", "PRNG seed (default 1)")
@@ -156,6 +162,15 @@ fn cmd_build(argv: &[String]) -> anyhow::Result<()> {
     if threads > 0 {
         builder = builder.threads(threads);
     }
+    // --shards S > 1 diverts into the sharded build path (no recall
+    // report there: the RunReport machinery evaluates single indexes)
+    let shards = m.usize_or("shards", 1)?;
+    if m.has("partitioner") && shards <= 1 {
+        anyhow::bail!("--partitioner requires --shards > 1");
+    }
+    if shards > 1 {
+        return build_sharded(builder, shards, cfg.run.seed, &m);
+    }
     let index = builder.build()?;
     let report = index.evaluate(&eval);
     if let Some(path) = m.get("save") {
@@ -178,15 +193,60 @@ fn cmd_build(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// The `build --shards S` path: partition the corpus, build every
+/// shard's subgraph (concurrently when `--threads` allows), and
+/// optionally persist one KNNIv1 bundle per shard via `--save-index`.
+/// Bundles can only express contiguous row ranges, so `--save-index`
+/// pairs with the contiguous partitioner; k-means shards serve
+/// in-process.
+fn build_sharded(
+    builder: IndexBuilder<'_>,
+    shards: usize,
+    seed: u64,
+    m: &knng::cli::ArgMatches,
+) -> anyhow::Result<()> {
+    use knng::api::partition::{Contiguous, KMeans, Partitioner};
+    if m.get("save").is_some() {
+        anyhow::bail!("--save (bare graph) is not available with --shards; use --save-index");
+    }
+    let kind = m.str_or("partitioner", "contiguous");
+    let partitioner: Box<dyn Partitioner> = match kind {
+        "contiguous" => Box::new(Contiguous),
+        "kmeans" => Box::new(KMeans::new(seed)),
+        other => anyhow::bail!("unknown --partitioner `{other}` (contiguous|kmeans)"),
+    };
+    let t0 = std::time::Instant::now();
+    let sharded = builder.build_sharded_with(shards, &*partitioner)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "built {} {kind} shard(s) over {} points (dim {}) in {secs:.3}s — sizes {:?}",
+        sharded.shard_count(),
+        sharded.len(),
+        sharded.dim(),
+        sharded.shard_sizes(),
+    );
+    if let Some(path) = m.get("save-index") {
+        let paths = sharded.save_shards(std::path::Path::new(path))?;
+        for p in &paths {
+            eprintln!("saved shard bundle to {}", p.display());
+        }
+        let flags: Vec<String> =
+            paths.iter().map(|p| format!("--index {}", p.display())).collect();
+        eprintln!("serve them together: knng query {} --batch <fvecs>", flags.join(" "));
+    }
+    Ok(())
+}
+
 fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
     let spec = ArgSpec::new()
-        .value("index", "KNNIv1 index bundle from `build --save-index` (batched serving)")
+        .multi("index", "KNNIv1 index bundle from `build --save-index`; repeat to serve several bundles as shards")
         .value("batch", ".fvecs query vectors, served through the batched path (with --index)")
         .value("graph", "saved graph file from `build --save` (legacy; pairs with --data)")
         .value("data", ".fvecs corpus the graph was built on (with --graph)")
         .value("queries", ".fvecs query vectors, served one at a time (with --graph)")
         .value("k", "neighbors per query (default 10)")
         .value("ef", "beam width (default 64)")
+        .value("route-top-m", "centroid-route each query to its m nearest shards (default: full fan-out)")
         .value(KERNEL_FLAG, KERNEL_HELP)
         .flag("serve", "serve via the threaded micro-batching runtime (with --index)")
         .value("threads", "worker threads for --serve (clamped to the shard count; default 1)")
@@ -206,49 +266,112 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
         ..Default::default()
     };
 
-    if let Some(index_path) = m.get("index") {
-        // ---- batched serving from a KNNIv1 bundle -----------------------
+    let index_paths = m.get_all("index");
+    if !index_paths.is_empty() {
+        use knng::api::ShardedSearcher;
+        // ---- batched serving from KNNIv1 bundle(s) ----------------------
         let qpath = m
             .get("batch")
             .or_else(|| m.get("queries"))
             .ok_or_else(|| anyhow::anyhow!("--batch <fvecs> is required with --index"))?;
-        let index = Index::load(std::path::Path::new(index_path))?;
         let queries = knng::dataset::fvecs::read_fvecs(std::path::Path::new(qpath), usize::MAX)?;
+        let route_top_m = match m.get("route-top-m") {
+            None => None,
+            Some(_) => {
+                let v = m.usize_or("route-top-m", 0)?;
+                anyhow::ensure!(v >= 1, "--route-top-m must be at least 1");
+                Some(v)
+            }
+        };
+
+        if index_paths.len() == 1 && route_top_m.is_none() {
+            // single bundle, full fan-out: the historical serving path
+            let index = Index::load(std::path::Path::new(&index_paths[0]))?;
+            anyhow::ensure!(
+                queries.dim() == index.dim(),
+                "query dim {} does not match index dim {}",
+                queries.dim(),
+                index.dim()
+            );
+            if m.has("serve") {
+                let label = (index.len(), index.graph_k());
+                let sharded = ShardedSearcher::from_index(index);
+                return serve_queries(sharded, queries, k, params, None, label, &m);
+            }
+            // Searcher results are OriginalId — no σ bookkeeping here.
+            let (results, stats) = index.search_batch(&queries, k, &params);
+            print_result_rows(&results);
+            eprintln!(
+                "{} queries in {:.3}s ({:.0} qps), {:.0} evals/query, {:.1} expansions/query \
+                 [kernel {}; index n={}, graph k={}, built {}/{}{}]",
+                stats.queries,
+                stats.secs,
+                stats.qps(),
+                stats.dist_evals_per_query(),
+                stats.expansions_per_query(),
+                stats.kernel,
+                index.len(),
+                index.graph_k(),
+                index.params().selection.name(),
+                index.params().compute.name(),
+                if index.is_reordered() { "+reorder" } else { "" },
+            );
+            if m.has("stats") {
+                eprintln!(
+                    "totals: {} distance evaluations, {} expansions, ef={}, k={k}",
+                    stats.dist_evals, stats.expansions, params.ef
+                );
+            }
+            return Ok(());
+        }
+
+        // ---- several bundles as shards, and/or centroid routing ---------
+        let mut indexes = Vec::with_capacity(index_paths.len());
+        for p in index_paths {
+            indexes.push(Index::load(std::path::Path::new(p))?);
+        }
+        let graph_k = indexes[0].graph_k();
+        let sharded = match indexes.len() {
+            1 => ShardedSearcher::from_index(indexes.pop().expect("one bundle")),
+            _ => ShardedSearcher::from_indexes(indexes)?,
+        };
         anyhow::ensure!(
-            queries.dim() == index.dim(),
+            queries.dim() == sharded.dim(),
             "query dim {} does not match index dim {}",
             queries.dim(),
-            index.dim()
+            sharded.dim()
         );
         if m.has("serve") {
-            return serve_queries(index, queries, k, params, &m);
+            let label = (sharded.len(), graph_k);
+            return serve_queries(sharded, queries, k, params, route_top_m, label, &m);
         }
-        // Searcher results are OriginalId — no σ bookkeeping here.
-        let (results, stats) = index.search_batch(&queries, k, &params);
-        for (qi, res) in results.iter().enumerate() {
-            let row: Vec<String> =
-                res.iter().map(|nb| format!("{}:{:.4}", nb.id, nb.dist)).collect();
-            println!("{qi}\t{}", row.join("\t"));
-        }
+        let (results, stats) = match route_top_m {
+            Some(top_m) => sharded.search_batch_routed(&queries, k, &params, top_m),
+            None => sharded.search_batch(&queries, k, &params),
+        };
+        print_result_rows(&results);
+        let fanout = match route_top_m {
+            Some(v) => format!("top-{}", v.min(sharded.shard_count())),
+            None => "full".to_string(),
+        };
         eprintln!(
-            "{} queries in {:.3}s ({:.0} qps), {:.0} evals/query, {:.1} expansions/query \
-             [kernel {}; index n={}, graph k={}, built {}/{}{}]",
+            "{} queries in {:.3}s ({:.0} qps), {:.0} evals/query, {:.1} expansions/query, \
+             {:.2} shard visit(s)/query [kernel {}; {} shard(s), n={}, graph k={graph_k}, \
+             fan-out {fanout}]",
             stats.queries,
             stats.secs,
             stats.qps(),
             stats.dist_evals_per_query(),
             stats.expansions_per_query(),
+            stats.shard_visits as f64 / stats.queries.max(1) as f64,
             stats.kernel,
-            index.len(),
-            index.graph_k(),
-            index.params().selection.name(),
-            index.params().compute.name(),
-            if index.is_reordered() { "+reorder" } else { "" },
+            sharded.shard_count(),
+            sharded.len(),
         );
         if m.has("stats") {
             eprintln!(
-                "totals: {} distance evaluations, {} expansions, ef={}, k={k}",
-                stats.dist_evals, stats.expansions, params.ef
+                "totals: {} distance evaluations, {} expansions, {} shard visits, ef={}, k={k}",
+                stats.dist_evals, stats.expansions, stats.shard_visits, params.ef
             );
         }
         return Ok(());
@@ -285,26 +408,39 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
     Ok(())
 }
 
-/// The `query --serve` path: wrap the loaded index as a single shard,
-/// spawn the thread-per-shard pool, and stream each query through the
-/// micro-batching front-end individually — the full serving runtime,
-/// end to end, with results identical to the plain batched path.
+/// Emit one tab-separated `qi\tid:dist...` line per query (the stable
+/// stdout contract shared by every `query` serving path).
+fn print_result_rows(results: &[Vec<knng::api::Neighbor>]) {
+    for (qi, res) in results.iter().enumerate() {
+        let row: Vec<String> =
+            res.iter().map(|nb| format!("{}:{:.4}", nb.id, nb.dist)).collect();
+        println!("{qi}\t{}", row.join("\t"));
+    }
+}
+
+/// The `query --serve` path: spawn the thread-per-shard pool over the
+/// (possibly multi-bundle) sharded searcher and stream each query
+/// through the micro-batching front-end individually — the full
+/// serving runtime, end to end, with results identical to the plain
+/// batched path (and, with `route_top_m`, to the inline routed path).
 fn serve_queries(
-    index: Index,
+    sharded: knng::api::ShardedSearcher,
     queries: knng::dataset::AlignedMatrix,
     k: usize,
     params: knng::search::SearchParams,
+    route_top_m: Option<usize>,
+    label: (usize, usize),
     m: &knng::cli::ArgMatches,
 ) -> anyhow::Result<()> {
-    use knng::api::{FrontConfig, ServeFront, ShardPool, ShardedSearcher};
+    use knng::api::{FrontConfig, ServeFront, ShardPool};
 
     let threads = m.usize_or("threads", 1)?;
     let max_batch = m.usize_or("max-batch", 64)?;
     let window_us = m.u64_or("batch-window", 200)?;
-    let dim = index.dim();
-    let (index_n, graph_k) = (index.len(), index.graph_k());
+    let dim = sharded.dim();
+    let shard_count = sharded.shard_count();
+    let (index_n, graph_k) = label;
 
-    let sharded = ShardedSearcher::from_index(index);
     let pool = ShardPool::new(&sharded, threads)?;
     let workers = pool.threads();
     if workers < threads {
@@ -315,6 +451,7 @@ fn serve_queries(
         params,
         max_batch,
         max_wait: std::time::Duration::from_micros(window_us),
+        route_top_m,
         ..Default::default()
     };
     let front = ServeFront::spawn(pool, dim, cfg)?;
@@ -341,6 +478,15 @@ fn serve_queries(
         totals.windows,
         totals.coalesced,
     );
+    if let Some(top_m) = route_top_m {
+        eprintln!(
+            "routing: fan-out top-{} of {shard_count} shard(s), {} shard visit(s) \
+             ({:.2}/query)",
+            top_m.min(shard_count),
+            totals.shard_visits,
+            totals.shard_visits as f64 / totals.queries.max(1) as f64,
+        );
+    }
     Ok(())
 }
 

@@ -53,6 +53,76 @@ pub fn init_random<T: Tracer>(
     }
 }
 
+/// Parallel init for the T>1 engine: each node draws its k random
+/// neighbors from its **own** counter-based stream (keyed by node id,
+/// never by worker), so the starting graph is a pure function of
+/// `(seed, data)` — deterministic and thread-count invariant, exactly
+/// like the engine's select/compute phases. It is a *different*,
+/// equally-uniform random graph than the sequential stream walk
+/// produces, which is fine: the T>1 engine's results already differ
+/// from T=1's (same algorithm family, gated equal quality).
+///
+/// Workers buffer their ranges' edges; the driver replays them into the
+/// graph in node order afterwards, so heap insertion order and eval
+/// accounting (exactly `n·k` evaluations) match the sequential init
+/// discipline.
+pub fn init_random_parallel(
+    graph: &mut KnnGraph,
+    data: &AlignedMatrix,
+    seed: u64,
+    bounds: &[std::ops::Range<usize>],
+    counter: &mut FlopCounter,
+) {
+    let n = graph.n();
+    let k = graph.k().min(n - 1);
+    let pair = crate::distance::dispatch::active().pair;
+    let mut buffers: Vec<Vec<(u32, f32)>> =
+        bounds.iter().map(|r| Vec::with_capacity(r.len() * k)).collect();
+    std::thread::scope(|s| {
+        for (range, buf) in bounds.iter().zip(buffers.iter_mut()) {
+            let range = range.clone();
+            s.spawn(move || {
+                let mut sample: Vec<u32> = Vec::with_capacity(k);
+                for u in range {
+                    // one distinct stream per node: any worker owning u
+                    // draws the identical sample
+                    let mut rng = Pcg64::new_stream(seed ^ 0x1217_AB1E, u as u64);
+                    sample.clear();
+                    if n <= 2 * k + 2 {
+                        rng.sample_indices(n - 1, k, &mut sample);
+                        for raw in sample.iter_mut() {
+                            if (*raw as usize) >= u {
+                                *raw += 1;
+                            }
+                        }
+                    } else {
+                        while sample.len() < k {
+                            let v = rng.gen_index(n) as u32;
+                            if v as usize != u && !sample.contains(&v) {
+                                sample.push(v);
+                            }
+                        }
+                    }
+                    let a = data.row(u);
+                    for &v in sample.iter() {
+                        buf.push((v, pair(a, data.row(v as usize))));
+                    }
+                }
+            });
+        }
+    });
+    for (range, buf) in bounds.iter().zip(buffers) {
+        let mut edges = buf.into_iter();
+        for u in range.clone() {
+            for _ in 0..k {
+                let (v, d) = edges.next().expect("exactly k edges buffered per node");
+                counter.add_evals(1);
+                graph.push(u, v, d, true);
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +171,43 @@ mod tests {
         let (graph, _, _) = setup(30, 4, 8);
         for u in 0..30 {
             assert!(graph.flags(u).iter().all(|&f| f));
+        }
+    }
+
+    fn parallel_setup(n: usize, k: usize, workers: usize) -> (KnnGraph, FlopCounter) {
+        let data = SynthGaussian::single(n, 8, 3).generate();
+        let mut graph = KnnGraph::new(n, k);
+        let mut counter = FlopCounter::new(8);
+        let bounds: Vec<std::ops::Range<usize>> =
+            (0..workers).map(|w| w * n / workers..(w + 1) * n / workers).collect();
+        init_random_parallel(&mut graph, &data, 42, &bounds, &mut counter);
+        (graph, counter)
+    }
+
+    #[test]
+    fn parallel_init_is_valid_and_fully_counted() {
+        let (graph, counter) = parallel_setup(200, 8, 4);
+        for u in 0..200 {
+            let ids = graph.ids(u);
+            assert!(ids.iter().all(|&v| v != EMPTY_ID && v as usize != u));
+            let mut s: Vec<u32> = ids.to_vec();
+            s.sort_unstable();
+            s.dedup();
+            assert_eq!(s.len(), 8, "node {u} has duplicate neighbors");
+        }
+        assert_eq!(counter.dist_evals, 200 * 8, "init accounts exactly n·k evals");
+        graph.validate().unwrap();
+    }
+
+    #[test]
+    fn parallel_init_is_worker_count_invariant() {
+        // per-node streams: the partition into ranges must not matter
+        let (base, _) = parallel_setup(300, 6, 1);
+        for workers in [2usize, 3, 7] {
+            let (other, _) = parallel_setup(300, 6, workers);
+            for u in 0..300 {
+                assert_eq!(base.sorted(u), other.sorted(u), "workers={workers} node {u}");
+            }
         }
     }
 

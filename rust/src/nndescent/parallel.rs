@@ -50,17 +50,16 @@
 use super::candidates::CandidateLists;
 use super::compute::{compute_step_frozen, ComputeScratch, NativeEngine};
 use super::driver::BuildResult;
-use super::init::init_random;
+use super::init::init_random_parallel;
 use super::observer::{BuildEvent, BuildObserver};
 use super::params::Params;
-use super::reorder::{greedy_permutation, Reordering};
+use super::reorder::{greedy_permutation_segmented, Reordering, REORDER_SEGMENT_LEN};
 use super::selection::clear_sampled_flags;
 use super::selection::partitioned::{select_into_chunk, selection_seed, SelectionThresholds};
 use crate::cachesim::trace::NoTracer;
 use crate::dataset::AlignedMatrix;
 use crate::graph::{GraphUpdate, KnnGraph};
 use crate::util::counters::{FlopCounter, IterStats};
-use crate::util::rng::Pcg64;
 use crate::util::timer::Timer;
 use std::ops::Range;
 
@@ -167,18 +166,19 @@ pub(crate) fn build(
     let mut total = Timer::new();
     total.start();
 
-    // same init stream as the sequential driver: the random starting
-    // graph is identical for every thread count
-    let mut rng = Pcg64::new_stream(p.seed, 0xD00D);
     let mut graph = KnnGraph::new(n, k);
     let mut counter = FlopCounter::new(data.dim());
     let mut cands = CandidateLists::new(n, cap);
 
-    observer.on_event(&BuildEvent::Started { n, dim: data.dim(), k });
-    init_random(&mut graph, data, &mut rng, &mut counter, &mut NoTracer);
-
     let bounds: Vec<Range<usize>> =
         (0..threads).map(|w| w * n / threads..(w + 1) * n / threads).collect();
+
+    observer.on_event(&BuildEvent::Started { n, dim: data.dim(), k });
+    // per-node counter-based streams: the starting graph is a pure
+    // function of (seed, data), thread-count invariant like every other
+    // phase of this engine
+    init_random_parallel(&mut graph, data, p.seed, &bounds, &mut counter);
+
     let mut workers: Vec<WorkerState> =
         (0..threads).map(|_| WorkerState::new(cap, data.dim())).collect();
     let mut merged: Vec<GraphUpdate> = Vec::new();
@@ -194,12 +194,15 @@ pub(crate) fn build(
         iterations = it + 1;
         let mut stats = IterStats { iter: it, ..Default::default() };
 
-        // ---- greedy reorder (sequential, once — same as the driver) ----
+        // ---- greedy reorder (segmented, once) --------------------------
+        // fixed-length segments run on the worker threads; corpora with
+        // n ≤ REORDER_SEGMENT_LEN form one segment and reproduce the
+        // sequential pass bit for bit
         if p.reorder && it == p.reorder_iter && reordering.is_none() {
             let mut t = Timer::new();
             t.start();
             let active: &AlignedMatrix = owned.as_ref().unwrap_or(data);
-            let r = greedy_permutation(&graph, &mut NoTracer);
+            let r = greedy_permutation_segmented(&graph, REORDER_SEGMENT_LEN, threads);
             let permuted = active.permuted(&r.inv);
             graph = graph.apply_permutation(&r.sigma);
             owned = Some(permuted);

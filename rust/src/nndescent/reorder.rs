@@ -99,6 +99,124 @@ pub fn greedy_permutation<T: Tracer>(graph: &KnnGraph, tracer: &mut T) -> Reorde
     Reordering { sigma, inv }
 }
 
+/// Segment length of the parallel reorder pass: segments this size keep
+/// the greedy chain long enough to recover clusters (paper Fig 4 uses
+/// corpora well under this per cluster) while giving big corpora real
+/// parallelism. Fixed — never derived from the thread count — so the
+/// permutation is thread-count invariant.
+pub const REORDER_SEGMENT_LEN: usize = 4096;
+
+/// One segment's greedy pass, restricted to the ids *and* positions in
+/// `[lo, hi)`: the walk is Algorithm 1 verbatim except that adjacency
+/// entries outside the segment are ignored (their positions belong to
+/// other segments and must not move). Returns segment-local σ and σ⁻¹
+/// (`sigma[j]` = local position of node `lo + j`). With `lo = 0,
+/// hi = n` the swap sequence is *identical* to [`greedy_permutation`].
+fn segment_pass(graph: &KnnGraph, lo: usize, hi: usize) -> (Vec<u32>, Vec<u32>) {
+    let len = hi - lo;
+    let mut sigma: Vec<u32> = (0..len as u32).collect();
+    let mut inv: Vec<u32> = (0..len as u32).collect();
+    let mut adj: Vec<(f32, u32)> = Vec::with_capacity(graph.k());
+
+    for i in 0..len.saturating_sub(1) {
+        let u = lo + inv[i] as usize;
+        adj.clear();
+        for (&v, &d) in graph.ids(u).iter().zip(graph.dists(u)) {
+            if v != EMPTY_ID && (v as usize) >= lo && (v as usize) < hi {
+                adj.push((d, v));
+            }
+        }
+        adj.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(a.1.cmp(&b.1)));
+
+        for &(_, cand) in adj.iter() {
+            let cl = cand as usize - lo;
+            let pos = sigma[cl] as usize;
+            if pos < i + 1 {
+                continue;
+            }
+            if pos == i + 1 {
+                break;
+            }
+            let displaced = inv[i + 1] as usize;
+            sigma.swap(cl, displaced);
+            inv.swap(i + 1, pos);
+            break;
+        }
+    }
+    (sigma, inv)
+}
+
+/// Parallel greedy reorder: cut the id/position space into fixed
+/// [`REORDER_SEGMENT_LEN`] segments, run [`segment_pass`] on each
+/// (`threads` workers, contiguous segment groups), and stitch the local
+/// permutations back into one global σ/σ⁻¹ (segments never exchange
+/// positions, so the stitch is a plain offset shift).
+///
+/// Corpora with `n ≤` [`REORDER_SEGMENT_LEN`] form a single segment, so
+/// the result is **bit-identical** to the sequential
+/// [`greedy_permutation`] there — which keeps the T>1 engine's output
+/// unchanged for every corpus the determinism tests pin. Larger corpora
+/// lose only the cross-segment chain links (at most one boundary per
+/// 4096 positions); within each segment the cluster-recovery behaviour
+/// is the sequential heuristic's.
+pub fn greedy_permutation_segmented(
+    graph: &KnnGraph,
+    seg_len: usize,
+    threads: usize,
+) -> Reordering {
+    assert!(seg_len >= 1, "segments must hold at least one position");
+    let n = graph.n();
+    let segs: Vec<(usize, usize)> =
+        (0..n).step_by(seg_len).map(|lo| (lo, (lo + seg_len).min(n))).collect();
+
+    let locals: Vec<(Vec<u32>, Vec<u32>)> = if threads <= 1 || segs.len() <= 1 {
+        segs.iter().map(|&(lo, hi)| segment_pass(graph, lo, hi)).collect()
+    } else {
+        let workers = threads.min(segs.len());
+        let mut groups: Vec<Vec<usize>> = (0..workers).map(|_| Vec::new()).collect();
+        for si in 0..segs.len() {
+            groups[si * workers / segs.len()].push(si);
+        }
+        let mut slots: Vec<Option<(Vec<u32>, Vec<u32>)>> = Vec::new();
+        slots.resize_with(segs.len(), || None);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = groups
+                .into_iter()
+                .map(|group| {
+                    let segs = &segs;
+                    s.spawn(move || {
+                        group
+                            .into_iter()
+                            .map(|si| {
+                                let (lo, hi) = segs[si];
+                                (si, segment_pass(graph, lo, hi))
+                            })
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            for h in handles {
+                for (si, local) in h.join().expect("reorder worker panicked") {
+                    slots[si] = Some(local);
+                }
+            }
+        });
+        slots.into_iter().map(|s| s.expect("every segment computed")).collect()
+    };
+
+    let mut sigma = vec![0u32; n];
+    let mut inv = vec![0u32; n];
+    for (&(lo, _), (ls, li)) in segs.iter().zip(&locals) {
+        for (j, &p) in ls.iter().enumerate() {
+            sigma[lo + j] = (lo + p as usize) as u32;
+        }
+        for (i, &v) in li.iter().enumerate() {
+            inv[lo + i] = (lo + v as usize) as u32;
+        }
+    }
+    Reordering { sigma, inv }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -158,6 +276,55 @@ mod tests {
         let graph = KnnGraph::new(10, 3);
         let r = greedy_permutation(&graph, &mut NoTracer);
         assert_eq!(r.sigma, (0..10).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn single_segment_matches_sequential_exactly() {
+        // n ≤ seg_len ⇒ one segment ⇒ the identical swap sequence
+        let (graph, _) = graph_for(800, 4, 9);
+        let seq = greedy_permutation(&graph, &mut NoTracer);
+        for threads in [1usize, 4] {
+            let seg = greedy_permutation_segmented(&graph, REORDER_SEGMENT_LEN, threads);
+            assert_eq!(seq.sigma, seg.sigma, "threads={threads}");
+            assert_eq!(seq.inv, seg.inv, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn segmented_is_a_valid_thread_invariant_permutation() {
+        // force many segments with a small seg_len: still a valid
+        // permutation, identical for every worker count, and each
+        // segment's ids stay inside its own position range
+        let (graph, _) = graph_for(1000, 4, 13);
+        let seg_len = 128;
+        let base = greedy_permutation_segmented(&graph, seg_len, 1);
+        base.validate().unwrap();
+        for threads in [2usize, 3, 8] {
+            let other = greedy_permutation_segmented(&graph, seg_len, threads);
+            assert_eq!(base.sigma, other.sigma, "threads={threads}");
+            assert_eq!(base.inv, other.inv, "threads={threads}");
+        }
+        for (v, &p) in base.sigma.iter().enumerate() {
+            assert_eq!(v / seg_len, p as usize / seg_len, "node {v} left its segment");
+        }
+    }
+
+    #[test]
+    fn segmented_keeps_cluster_contiguity() {
+        // segment boundaries cost at most one adjacency per 4096 — the
+        // recovery property must survive comfortably
+        let clusters = 8;
+        let (graph, labels) = graph_for(1600, clusters, 7);
+        let r = greedy_permutation_segmented(&graph, 400, 4);
+        r.validate().unwrap();
+        let same_adjacent = (0..1599)
+            .filter(|&p| labels[r.inv[p] as usize] == labels[r.inv[p + 1] as usize])
+            .count();
+        let frac = same_adjacent as f64 / 1599.0;
+        assert!(
+            frac > 2.0 / clusters as f64,
+            "segmented contiguity {frac:.3} barely better than random"
+        );
     }
 
     #[test]

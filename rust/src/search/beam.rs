@@ -75,6 +75,10 @@ pub struct BatchStats {
     /// Active distance-kernel width the batch ran on (`scalar`/`w8`/
     /// `w16`; empty only for default-constructed stats).
     pub kernel: &'static str,
+    /// Shards visited across the batch: `queries × S` under full
+    /// fan-out, fewer under centroid routing. Zero for single-index
+    /// (unsharded) searches, which have no fan-out to count.
+    pub shard_visits: u64,
 }
 
 impl BatchStats {

@@ -14,7 +14,9 @@
 //! dim      8 B   u64  logical dimensionality
 //! k        8 B   u64  neighbors per node in the stored graph
 //! flags    8 B   u64  bit 0: reordering present · bit 1: norms present
+//!                bit 2: centroids present
 //!                bits 8–15: SIMD lane count the norms were computed at
+//!                bits 16–31: centroid count (0 iff bit 2 clear)
 //! params  64 B   build parameters:
 //!                k, max_iters, seed, reorder_iter, max_candidates (u64)
 //!                rho, delta (f64)
@@ -25,6 +27,8 @@
 //! sigma    n·4 B  u32 node → working position   (iff flags bit 0)
 //! inv      n·4 B  u32 working position → node   (iff flags bit 0)
 //! norms    n·4 B  f32 per-row squared corpus norms (iff flags bit 1)
+//! centroids c·dim·4 B f32 partition centroid rows (iff flags bit 2;
+//!                c from flags bits 16–31)
 //! crc      8 B   FNV-1a over everything above
 //! ```
 //!
@@ -37,6 +41,13 @@
 //! 8–15 and the loader *discards* stored norms computed at a different
 //! width than the active one (recomputing preserves the exact-zero
 //! self-distance guarantee of the norm-trick path across machines).
+//!
+//! The centroids section carries the partition centroids of a
+//! cluster-aware sharded build (`api::partition`), so a per-shard
+//! bundle can reconstruct query routing without re-planning. It is
+//! optional exactly like norms: legacy bundles load unchanged, and the
+//! centroid count lives in the flags word (bits 16–31) so the exact
+//! expected file size stays header-derivable.
 //!
 //! Like `KNNGv1`, a bundle is a finished artifact, not a resumable
 //! build: graph flags/counters are rebuilt on load.
@@ -54,10 +65,16 @@ use std::path::Path;
 const MAGIC: &[u8; 8] = b"KNNIv1\0\0";
 const FLAG_REORDERING: u64 = 1;
 const FLAG_NORMS: u64 = 2;
+const FLAG_CENTROIDS: u64 = 4;
 /// Bits 8–15 of `flags`: lane count of the kernel width the norms
 /// section was computed at (1 = scalar, 8, 16; 0 only in legacy files).
 const FLAG_NORM_LANES_SHIFT: u64 = 8;
 const FLAG_NORM_LANES_MASK: u64 = 0xFF << FLAG_NORM_LANES_SHIFT;
+/// Bits 16–31 of `flags`: number of centroid rows in the centroids
+/// section (0 iff the section is absent). Kept in the header so the
+/// exact-file-size check can account for the section before any reads.
+const FLAG_CENTROID_COUNT_SHIFT: u64 = 16;
+const FLAG_CENTROID_COUNT_MASK: u64 = 0xFFFF << FLAG_CENTROID_COUNT_SHIFT;
 
 /// A loaded (or about-to-be-saved) index bundle. `data` and `graph`
 /// share one id space — the *working* layout of the build, so a served
@@ -79,6 +96,11 @@ pub struct IndexBundle {
     /// Lane count of the kernel width `norms` was computed at
     /// (0 when `norms` is `None`).
     pub norm_lanes: usize,
+    /// Partition centroids of a cluster-aware sharded build (one row
+    /// per shard of the *whole* sharded index, so every shard's bundle
+    /// carries the full routing table). Absent in legacy bundles and
+    /// unsharded builds.
+    pub centroids: Option<AlignedMatrix>,
 }
 
 impl IndexBundle {
@@ -100,6 +122,7 @@ impl IndexBundle {
             params: params.clone(),
             norms,
             norm_lanes,
+            centroids: None,
         }
     }
 
@@ -170,6 +193,7 @@ pub fn save_index(path: &Path, bundle: &IndexBundle) -> Result<()> {
         bundle.reordering.as_ref(),
         &bundle.params,
         bundle.norms.as_deref().map(|ns| (ns, bundle.norm_lanes)),
+        bundle.centroids.as_ref(),
     )
 }
 
@@ -179,7 +203,9 @@ pub fn save_index(path: &Path, bundle: &IndexBundle) -> Result<()> {
 /// lane count of the kernel width that *computed* them (the tag the
 /// loader's width-mismatch guard trusts — pass the recorded width, not
 /// the current one). Passing `None` writes the legacy layout without a
-/// norms section (the loader recomputes them).
+/// norms section (the loader recomputes them). `centroids` optionally
+/// persists the partition centroids of a sharded build (rows must share
+/// the data's logical dimensionality).
 pub fn save_index_parts(
     path: &Path,
     data: &AlignedMatrix,
@@ -187,6 +213,7 @@ pub fn save_index_parts(
     reordering: Option<&Reordering>,
     params: &Params,
     norms: Option<(&[f32], usize)>,
+    centroids: Option<&AlignedMatrix>,
 ) -> Result<()> {
     assert_eq!(data.n(), graph.n(), "bundle graph/data size mismatch");
     if let Some(r) = reordering {
@@ -196,6 +223,10 @@ pub fn save_index_parts(
     if let Some((ns, lanes)) = norms {
         assert_eq!(ns.len(), data.n(), "norms length mismatch");
         assert!(lanes > 0 && lanes <= 0xFF, "implausible norm lane count {lanes}");
+    }
+    if let Some(c) = centroids {
+        assert_eq!(c.dim(), data.dim(), "centroid/data dim mismatch");
+        assert!(c.n() >= 1 && c.n() <= u16::MAX as usize, "implausible centroid count {}", c.n());
     }
     let f = std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
     let mut w = BufWriter::new(f);
@@ -218,6 +249,10 @@ pub fn save_index_parts(
         // that computed them so a different-width loader recomputes
         flags |= FLAG_NORMS;
         flags |= (lanes as u64) << FLAG_NORM_LANES_SHIFT;
+    }
+    if let Some(c) = centroids {
+        flags |= FLAG_CENTROIDS;
+        flags |= (c.n() as u64) << FLAG_CENTROID_COUNT_SHIFT;
     }
     emit(&mut w, &flags.to_le_bytes())?;
     emit(&mut w, &encode_params(params))?;
@@ -250,6 +285,15 @@ pub fn save_index_parts(
     if let Some((ns, _)) = norms {
         for &x in ns {
             emit(&mut w, &x.to_le_bytes())?;
+        }
+    }
+    if let Some(c) = centroids {
+        for i in 0..c.n() {
+            row_buf.clear();
+            for &x in c.row_logical(i) {
+                row_buf.extend_from_slice(&x.to_le_bytes());
+            }
+            emit(&mut w, &row_buf)?;
         }
     }
     w.write_all(&crc.0.to_le_bytes())?;
@@ -301,7 +345,12 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
     if n.checked_mul(dim).is_none() || n * dim > (1 << 36) {
         bail!("implausible data size: n={n}, dim={dim}");
     }
-    if flags & !(FLAG_REORDERING | FLAG_NORMS | FLAG_NORM_LANES_MASK) != 0 {
+    let known = FLAG_REORDERING
+        | FLAG_NORMS
+        | FLAG_CENTROIDS
+        | FLAG_NORM_LANES_MASK
+        | FLAG_CENTROID_COUNT_MASK;
+    if flags & !known != 0 {
         bail!("unknown flag bits {flags:#x}");
     }
     // The lane tag can only be a width this engine ever computes norms
@@ -316,6 +365,16 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
     } else if stored_lanes != 0 {
         bail!("norm lane count {stored_lanes} recorded without a norms section");
     }
+    // Centroid count and flag must agree: a count without the section
+    // (or the section without a count) is corruption, not a default.
+    let cent_count = ((flags & FLAG_CENTROID_COUNT_MASK) >> FLAG_CENTROID_COUNT_SHIFT) as usize;
+    if flags & FLAG_CENTROIDS != 0 {
+        if cent_count == 0 {
+            bail!("centroids section recorded with a zero centroid count");
+        }
+    } else if cent_count != 0 {
+        bail!("centroid count {cent_count} recorded without a centroids section");
+    }
 
     // The format is fixed-size given the header, so the exact file
     // length is known up front. Checking it here (a) catches truncation
@@ -324,11 +383,13 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
     let actual = std::fs::metadata(path)?.len();
     let reorder_bytes = if flags & FLAG_REORDERING != 0 { 2 * n as u64 * 4 } else { 0 };
     let norm_bytes = if flags & FLAG_NORMS != 0 { n as u64 * 4 } else { 0 };
+    let cent_bytes = cent_count as u64 * dim as u64 * 4;
     let expected = 8 + 32 + 64 // magic + header + params
         + 2 * (n as u64 * k as u64 * 4) // ids + dists
         + n as u64 * dim as u64 * 4 // data rows
         + reorder_bytes
         + norm_bytes
+        + cent_bytes
         + 8; // crc
     if actual != expected {
         bail!(
@@ -407,6 +468,21 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
     };
     let norm_lanes = if norms.is_some() { stored_lanes } else { 0 };
 
+    let centroids = if flags & FLAG_CENTROIDS != 0 {
+        let mut c = AlignedMatrix::zeroed(cent_count, dim);
+        for i in 0..cent_count {
+            r.read_exact(&mut row_buf).with_context(|| format!("reading centroid row {i}"))?;
+            crc.update(&row_buf);
+            let row = c.row_mut(i);
+            for (j, chunk) in row_buf.chunks_exact(4).enumerate() {
+                row[j] = f32::from_le_bytes(chunk.try_into().unwrap());
+            }
+        }
+        Some(c)
+    } else {
+        None
+    };
+
     let mut trailer = [0u8; 8];
     r.read_exact(&mut trailer).context("reading checksum")?;
     if u64::from_le_bytes(trailer) != crc.0 {
@@ -420,7 +496,7 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
     }
     let graph = crate::graph::io::rebuild_graph(n, k, &ids, &dists)?;
 
-    Ok(IndexBundle { data, graph, reordering, params, norms, norm_lanes })
+    Ok(IndexBundle { data, graph, reordering, params, norms, norm_lanes, centroids })
 }
 
 #[cfg(test)]
@@ -490,6 +566,7 @@ mod tests {
             &bundle.graph,
             bundle.reordering.as_ref(),
             &bundle.params,
+            None,
             None,
         )
         .unwrap();
@@ -626,7 +703,8 @@ mod tests {
         // the flags word: structurally consistent, semantically nonsense
         let (bundle, _, _) = build_bundle(200, 19, false);
         let path = tmp("lanes_no_norms.knni");
-        save_index_parts(&path, &bundle.data, &bundle.graph, None, &bundle.params, None).unwrap();
+        save_index_parts(&path, &bundle.data, &bundle.graph, None, &bundle.params, None, None)
+            .unwrap();
         let mut bytes = std::fs::read(&path).unwrap();
         bytes[33] = 8; // lane tag without FLAG_NORMS
         let mut crc = Fnv::new();
@@ -636,6 +714,100 @@ mod tests {
         std::fs::write(&path, &bytes).unwrap();
         let err = load_index(&path).unwrap_err().to_string();
         assert!(err.contains("without a norms section"), "unexpected error: {err}");
+    }
+
+    /// Rewrite the FNV trailer after a byte patch (the corruption tests
+    /// that target *semantic* checks must get past the CRC first).
+    fn refresh_crc(bytes: &mut [u8]) {
+        let mut crc = Fnv::new();
+        let crc_off = bytes.len() - 8;
+        crc.update(&bytes[..crc_off]);
+        bytes[crc_off..].copy_from_slice(&crc.0.to_le_bytes());
+    }
+
+    /// A small centroid matrix sharing the bundle data's dim.
+    fn test_centroids(data: &AlignedMatrix, count: usize) -> AlignedMatrix {
+        let rows: Vec<f32> =
+            (0..count).flat_map(|i| data.row_logical(i * 7).to_vec()).collect();
+        AlignedMatrix::from_rows(count, data.dim(), &rows)
+    }
+
+    #[test]
+    fn centroids_roundtrip_bit_exact() {
+        let (mut bundle, data, _) = build_bundle(300, 43, true);
+        bundle.centroids = Some(test_centroids(&data, 4));
+        let path = tmp("cent_rt.knni");
+        save_index(&path, &bundle).unwrap();
+        let loaded = load_index(&path).unwrap();
+        let (want, got) = (bundle.centroids.as_ref().unwrap(), loaded.centroids.as_ref().unwrap());
+        assert_eq!((got.n(), got.dim()), (4, data.dim()));
+        for i in 0..4 {
+            let (a, b) = (want.row_logical(i), got.row_logical(i));
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "centroid row {i}");
+            }
+        }
+        // everything else must survive the new section untouched
+        assert_eq!(loaded.params, bundle.params);
+        for u in 0..bundle.graph.n() {
+            assert_eq!(bundle.graph.sorted(u), loaded.graph.sorted(u), "node {u}");
+        }
+    }
+
+    #[test]
+    fn legacy_bundle_without_centroids_loads_with_none() {
+        let (bundle, _, _) = build_bundle(250, 47, false);
+        assert!(bundle.centroids.is_none());
+        let path = tmp("cent_legacy.knni");
+        save_index(&path, &bundle).unwrap();
+        let loaded = load_index(&path).unwrap();
+        assert!(loaded.centroids.is_none(), "no-centroids bundle must load with None");
+    }
+
+    #[test]
+    fn oversized_centroid_count_fails_before_allocating() {
+        // inflate the recorded centroid count: the expected-size check
+        // must reject the file before any section read or allocation
+        let (mut bundle, data, _) = build_bundle(250, 51, false);
+        bundle.centroids = Some(test_centroids(&data, 2));
+        let path = tmp("cent_oversize.knni");
+        save_index(&path, &bundle).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // flags u64 at 32..40; count bits 16–31 are bytes 34–35
+        bytes[34] = 0xFF;
+        bytes[35] = 0xFF;
+        refresh_crc(&mut bytes);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_index(&path).unwrap_err().to_string();
+        assert!(err.contains("size mismatch"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_centroid_flag_with_zero_count() {
+        let (mut bundle, data, _) = build_bundle(250, 53, false);
+        bundle.centroids = Some(test_centroids(&data, 2));
+        let path = tmp("cent_zero.knni");
+        save_index(&path, &bundle).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[34] = 0;
+        bytes[35] = 0;
+        refresh_crc(&mut bytes);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_index(&path).unwrap_err().to_string();
+        assert!(err.contains("zero centroid count"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_centroid_count_without_section() {
+        let (bundle, _, _) = build_bundle(250, 57, false);
+        let path = tmp("cent_no_flag.knni");
+        save_index(&path, &bundle).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[34] = 2; // count bits without FLAG_CENTROIDS
+        refresh_crc(&mut bytes);
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load_index(&path).unwrap_err().to_string();
+        assert!(err.contains("without a centroids section"), "unexpected error: {err}");
     }
 
     #[test]

@@ -1,0 +1,56 @@
+//! Recall-vs-fanout gate for centroid-routed serving: on clustered
+//! data, a k-means sharded searcher answering from only the top-2 of 4
+//! shards must stay within 0.03 recall of the full fan-out while doing
+//! substantially less distance work. This is the tier-1 CI guard for
+//! the routing layer — if the partitioner or router regresses (bad
+//! centroids, wrong routing order, broken ghost stitching), recall
+//! collapses long before 0.03.
+
+use knng::api::{KMeans, Searcher, ShardedSearcher};
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::metrics::recall::{exact_neighbor_ids, recall_vs_exact};
+use knng::nndescent::Params;
+use knng::search::SearchParams;
+
+/// Rows `[from, from+count)` of `data` as a fresh matrix.
+fn slice_rows(data: &AlignedMatrix, from: usize, count: usize) -> AlignedMatrix {
+    let rows: Vec<f32> =
+        (from..from + count).flat_map(|i| data.row_logical(i).to_vec()).collect();
+    AlignedMatrix::from_rows(count, data.dim(), &rows)
+}
+
+#[test]
+fn kmeans_top2_of_4_recall_stays_within_the_gate() {
+    let (all, _) = SynthClustered::new(4096, 8, 8, 0xF14).generate_labeled();
+    let corpus = slice_rows(&all, 0, 3896);
+    let queries = slice_rows(&all, 3896, 200);
+    let params = Params::default().with_k(20).with_seed(4).with_max_iters(8);
+    let k = 10;
+    let sp = SearchParams::default();
+
+    let sharded =
+        ShardedSearcher::build_partitioned(&corpus, 4, &params, &KMeans::new(4)).unwrap();
+    let exact = exact_neighbor_ids(&corpus, &queries, k);
+
+    let (full, full_stats) = sharded.search_batch(&queries, k, &sp);
+    let (routed, routed_stats) = sharded.search_batch_routed(&queries, k, &sp, 2);
+
+    let full_recall = recall_vs_exact(&full, &exact);
+    let routed_recall = recall_vs_exact(&routed, &exact);
+    assert!(full_recall > 0.9, "full fan-out recall {full_recall} unexpectedly low");
+    assert!(
+        routed_recall >= full_recall - 0.03,
+        "routed recall {routed_recall} fell more than 0.03 below full fan-out {full_recall}"
+    );
+
+    // the whole point of routing: visit half the shards, skip a
+    // commensurate share of the distance work (route scoring included)
+    assert_eq!(routed_stats.shard_visits, 2 * queries.n() as u64);
+    assert!(
+        (full_stats.dist_evals as f64) >= 1.3 * routed_stats.dist_evals as f64,
+        "expected ≥1.3× eval reduction: full {} vs routed {}",
+        full_stats.dist_evals,
+        routed_stats.dist_evals
+    );
+}

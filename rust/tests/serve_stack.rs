@@ -4,7 +4,9 @@
 //! (window composition and duplicate coalescing never change answers),
 //! and the `Index` → single-shard bridge the CLI serve path uses.
 
-use knng::api::{FrontConfig, IndexBuilder, Searcher, ServeFront, ShardPool, ShardedSearcher};
+use knng::api::{
+    FrontConfig, IndexBuilder, KMeans, Searcher, ServeFront, ShardPool, ShardedSearcher,
+};
 use knng::dataset::clustered::SynthClustered;
 use knng::dataset::AlignedMatrix;
 use knng::nndescent::Params;
@@ -229,6 +231,164 @@ fn front_coalesces_a_burst_of_identical_queries() {
     assert_eq!(totals.queries, 20);
     // executions = queries − coalesced = number of windows (1 unique each)
     assert_eq!(totals.queries - totals.coalesced, totals.windows);
+}
+
+#[test]
+fn routed_full_fanout_matches_plain_fanout_across_the_stack() {
+    // m = S routing skips centroid scoring entirely, so inline, pool,
+    // and front answers (and eval counts) must be bit-identical to the
+    // plain full fan-out for S ∈ {1, 4} — the acceptance criterion for
+    // the routed serving path
+    let (all, _) = SynthClustered::new(800, 8, 4, 71).generate_labeled();
+    let corpus = slice_rows(&all, 0, 700);
+    let queries = slice_rows(&all, 700, 60);
+    let params = Params::default().with_k(10).with_seed(71);
+    let k = 6;
+    let sp = SearchParams::default();
+
+    for shards in [1usize, 4] {
+        let sharded =
+            ShardedSearcher::build_partitioned(&corpus, shards, &params, &KMeans::new(71))
+                .unwrap();
+        let (expect, estats) = sharded.search_batch(&queries, k, &sp);
+
+        let (inline_routed, rstats) = sharded.search_batch_routed(&queries, k, &sp, shards);
+        assert_neighbors_bitwise_eq(&expect, &inline_routed, &format!("S={shards} inline"));
+        assert_eq!(estats.dist_evals, rstats.dist_evals, "S={shards}: m=S adds no route evals");
+        assert_eq!(rstats.shard_visits, (queries.n() * shards) as u64);
+
+        let pool = ShardPool::new(&sharded, 2).unwrap();
+        let (via_pool, pstats) = pool.search_batch_routed(&queries, k, &sp, shards);
+        assert_neighbors_bitwise_eq(&expect, &via_pool, &format!("S={shards} pool"));
+        assert_eq!(estats.dist_evals, pstats.dist_evals, "S={shards}: pool evals");
+
+        let front = ServeFront::spawn(
+            ShardPool::new(&sharded, 2).unwrap(),
+            corpus.dim(),
+            FrontConfig {
+                k,
+                params: sp,
+                max_batch: 16,
+                max_wait: Duration::from_millis(2),
+                route_top_m: Some(shards),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let tickets: Vec<_> = (0..queries.n())
+            .map(|qi| front.submit(queries.row_logical(qi).to_vec()).unwrap())
+            .collect();
+        for (qi, ticket) in tickets.into_iter().enumerate() {
+            let served = ticket.wait().unwrap();
+            assert_neighbors_bitwise_eq(
+                std::slice::from_ref(&expect[qi]),
+                std::slice::from_ref(&served.neighbors),
+                &format!("S={shards} front query {qi}"),
+            );
+        }
+        let totals = front.shutdown();
+        assert_eq!(totals.queries, queries.n() as u64);
+        assert_eq!(
+            totals.shard_visits,
+            (totals.queries - totals.coalesced) * shards as u64,
+            "full fan-out visits every shard per executed query"
+        );
+    }
+}
+
+#[test]
+fn front_routing_reduces_fanout_and_matches_inline_routing() {
+    // m < S: the front's routed path answers exactly like the inline
+    // routed batch — window composition never changes a query's route
+    // or result — while visiting only m shards per executed query
+    let (all, _) = SynthClustered::new(900, 8, 4, 73).generate_labeled();
+    let corpus = slice_rows(&all, 0, 800);
+    let queries = slice_rows(&all, 800, 50);
+    let params = Params::default().with_k(10).with_seed(73);
+    let k = 6;
+    let sp = SearchParams::default();
+    let top_m = 2;
+
+    let sharded =
+        ShardedSearcher::build_partitioned(&corpus, 4, &params, &KMeans::new(73)).unwrap();
+    let (expect, rstats) = sharded.search_batch_routed(&queries, k, &sp, top_m);
+    let (_, full_stats) = sharded.search_batch(&queries, k, &sp);
+    assert!(
+        rstats.dist_evals < full_stats.dist_evals,
+        "routing must cut distance work: {} vs {}",
+        rstats.dist_evals,
+        full_stats.dist_evals
+    );
+
+    let front = ServeFront::spawn(
+        ShardPool::new(&sharded, 3).unwrap(),
+        corpus.dim(),
+        FrontConfig {
+            k,
+            params: sp,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            route_top_m: Some(top_m),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let tickets: Vec<_> = (0..queries.n())
+        .map(|qi| front.submit(queries.row_logical(qi).to_vec()).unwrap())
+        .collect();
+    for (qi, ticket) in tickets.into_iter().enumerate() {
+        let served = ticket.wait().unwrap();
+        assert_neighbors_bitwise_eq(
+            std::slice::from_ref(&expect[qi]),
+            std::slice::from_ref(&served.neighbors),
+            &format!("front routed query {qi}"),
+        );
+    }
+    let totals = front.shutdown();
+    assert_eq!(totals.queries, queries.n() as u64);
+    assert_eq!(
+        totals.shard_visits,
+        (totals.queries - totals.coalesced) * top_m as u64,
+        "routed serving visits exactly m shards per executed query"
+    );
+}
+
+#[test]
+fn saved_shard_bundles_reassemble_and_route_identically() {
+    // the multi-bundle CLI workflow in-process: build contiguous shards
+    // → save_shards → load each bundle → from_indexes → identical
+    // answers (plain and routed) to the searcher that wrote them
+    let dir = std::env::temp_dir().join("knng_serve_multibundle");
+    std::fs::create_dir_all(&dir).unwrap();
+    let (all, _) = SynthClustered::new(700, 8, 4, 79).generate_labeled();
+    let corpus = slice_rows(&all, 0, 600);
+    let queries = slice_rows(&all, 600, 40);
+    let params = Params::default().with_k(10).with_seed(79).with_reorder(true);
+    let k = 5;
+    let sp = SearchParams::default();
+
+    let built = ShardedSearcher::build(&corpus, 3, &params).unwrap();
+    let paths = built.save_shards(&dir.join("corpus.knni")).unwrap();
+    assert_eq!(paths.len(), 3);
+
+    let indexes: Vec<_> =
+        paths.iter().map(|p| knng::api::Index::load(p).unwrap()).collect();
+    let reloaded = ShardedSearcher::from_indexes(indexes).unwrap();
+    assert_eq!(reloaded.shard_count(), 3);
+
+    let (expect, estats) = built.search_batch(&queries, k, &sp);
+    let (got, gstats) = reloaded.search_batch(&queries, k, &sp);
+    assert_neighbors_bitwise_eq(&expect, &got, "reloaded full fan-out");
+    assert_eq!(estats.dist_evals, gstats.dist_evals);
+
+    for top_m in [1usize, 2, 3] {
+        let (a, sa) = built.search_batch_routed(&queries, k, &sp, top_m);
+        let (b, sb) = reloaded.search_batch_routed(&queries, k, &sp, top_m);
+        assert_neighbors_bitwise_eq(&a, &b, &format!("reloaded routed m={top_m}"));
+        assert_eq!(sa.dist_evals, sb.dist_evals, "m={top_m}: routing evals preserved");
+        assert_eq!(sa.shard_visits, sb.shard_visits, "m={top_m}: identical routes");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]
