@@ -1,0 +1,204 @@
+//! Network serving throughput — the `KNNQv1` loopback stack against the
+//! same `ServeFront` driven in-process, at 1 / 4 / 16 concurrent
+//! clients submitting one query per request. Reports qps and per-query
+//! round-trip p50/p99, so the table answers "what does the wire cost"
+//! directly: both modes run the identical micro-batching front over the
+//! identical S=4 thread pool, and the only delta is TCP + the frame
+//! codec. The bit-identity gate is asserted in-bench (a full query tile
+//! over loopback must match direct `search_batch` bit for bit), not
+//! just eyeballed.
+//!
+//! Run: `cargo bench --bench bench_net_throughput`
+
+use knng::api::{FrontConfig, Searcher, ServeFront, ShardPool, ShardedSearcher};
+use knng::bench::{full_scale, measure_once, write_bench_json, Json, Table};
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::distance::dispatch;
+use knng::net::{NetClient, NetServer, ServerConfig};
+use knng::nndescent::Params;
+use knng::search::SearchParams;
+use std::time::{Duration, Instant};
+
+const CONNS: [usize; 3] = [1, 4, 16];
+
+/// Percentile of an ascending-sorted slice (nearest-rank).
+fn pctl(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+fn main() {
+    println!("kernel dispatch: {}", dispatch::describe());
+    let scale = if full_scale() { 4 } else { 1 };
+    let n = 8192 * scale;
+    let n_queries = 512 * scale;
+    let (dim, k) = (32, 10);
+    println!("net throughput — corpus n={n} d={dim}, {n_queries} queries, k={k}, loopback TCP");
+
+    let (all, _) = SynthClustered::new(n + n_queries, dim, 16, 0x4E7).generate_labeled();
+    let corpus = {
+        let rows: Vec<f32> = (0..n).flat_map(|i| all.row_logical(i).to_vec()).collect();
+        AlignedMatrix::from_rows(n, dim, &rows)
+    };
+    let queries_flat: Vec<f32> =
+        (n..n + n_queries).flat_map(|i| all.row_logical(i).to_vec()).collect();
+    let qmat = AlignedMatrix::from_rows(n_queries, dim, &queries_flat);
+
+    let params = Params::default().with_k(16).with_seed(7).with_reorder(true);
+    let (sharded, build_secs) =
+        measure_once(|| ShardedSearcher::build(&corpus, 4, &params).unwrap());
+    println!("S=4 sharded searcher built in {build_secs:.2}s");
+    let sp = SearchParams::default();
+    let (expect, _) = sharded.search_batch(&qmat, k, &sp);
+
+    let front_cfg = || FrontConfig {
+        k,
+        params: sp,
+        max_batch: 256,
+        max_wait: Duration::from_micros(200),
+        ..Default::default()
+    };
+
+    let mut table =
+        Table::new("net_throughput", &["mode", "conns", "qps", "p50 µs", "p99 µs", "vs in-proc"]);
+    let mut json_rows = Vec::new();
+    let mut in_proc_qps = [0.0f64; CONNS.len()];
+
+    // ---- in-process baseline: same front, same pool, no wire ----
+    {
+        let pool = ShardPool::new(&sharded, 4).unwrap();
+        let front = ServeFront::spawn(pool, dim, front_cfg()).unwrap();
+        for (ci, &conns) in CONNS.iter().enumerate() {
+            let t0 = Instant::now();
+            let mut lats: Vec<f64> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..conns)
+                    .map(|t| {
+                        let front = &front;
+                        let qmat = &qmat;
+                        s.spawn(move || {
+                            let mut lat = Vec::new();
+                            let mut qi = t;
+                            while qi < n_queries {
+                                let q0 = Instant::now();
+                                let ticket = front.submit(qmat.row_logical(qi).to_vec()).unwrap();
+                                ticket.wait().unwrap();
+                                lat.push(q0.elapsed().as_secs_f64() * 1e6);
+                                qi += conns;
+                            }
+                            lat
+                        })
+                    })
+                    .collect();
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            });
+            let secs = t0.elapsed().as_secs_f64();
+            lats.sort_by(|a, b| a.total_cmp(b));
+            let qps = n_queries as f64 / secs;
+            in_proc_qps[ci] = qps;
+            let (p50, p99) = (pctl(&lats, 0.50), pctl(&lats, 0.99));
+            table.row(&[
+                "in-process".into(),
+                format!("{conns}"),
+                format!("{qps:.0}"),
+                format!("{p50:.0}"),
+                format!("{p99:.0}"),
+                "1.00x".into(),
+            ]);
+            json_rows.push(Json::obj(vec![
+                ("mode", Json::s("in_process")),
+                ("conns", Json::Int(conns as u64)),
+                ("qps", Json::Num(qps)),
+                ("p50_us", Json::Num(p50)),
+                ("p99_us", Json::Num(p99)),
+            ]));
+        }
+        front.shutdown();
+    }
+
+    // ---- loopback: the same front behind the KNNQv1 server ----
+    let pool = ShardPool::new(&sharded, 4).unwrap();
+    let front = ServeFront::spawn(pool, dim, front_cfg()).unwrap();
+    let server_cfg = ServerConfig { workers: 16, ..Default::default() };
+    let handle = NetServer::bind("127.0.0.1:0", front, server_cfg).unwrap().spawn().unwrap();
+    let addr = handle.addr();
+
+    // the acceptance gate: a full tile over loopback is bit-identical
+    // to direct search_batch (transport adds no computation)
+    let mut gate = NetClient::connect(addr).unwrap();
+    let (wire_res, _) = gate.query_batch(&qmat, k, None).unwrap();
+    knng::testing::assert_neighbors_bitwise_eq(&expect, &wire_res, "loopback vs direct");
+    drop(gate);
+    println!("bit-identity gate: loopback full-tile answers == direct search_batch");
+
+    for (ci, &conns) in CONNS.iter().enumerate() {
+        let t0 = Instant::now();
+        let mut lats: Vec<f64> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..conns)
+                .map(|t| {
+                    let qmat = &qmat;
+                    s.spawn(move || {
+                        let mut client = NetClient::connect(addr).unwrap();
+                        let mut lat = Vec::new();
+                        let mut qi = t;
+                        while qi < n_queries {
+                            let tile = AlignedMatrix::from_rows(1, dim, qmat.row_logical(qi));
+                            let q0 = Instant::now();
+                            client.query_batch(&tile, k, None).unwrap();
+                            lat.push(q0.elapsed().as_secs_f64() * 1e6);
+                            qi += conns;
+                        }
+                        lat
+                    })
+                })
+                .collect();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        let secs = t0.elapsed().as_secs_f64();
+        lats.sort_by(|a, b| a.total_cmp(b));
+        let qps = n_queries as f64 / secs;
+        let (p50, p99) = (pctl(&lats, 0.50), pctl(&lats, 0.99));
+        table.row(&[
+            "loopback".into(),
+            format!("{conns}"),
+            format!("{qps:.0}"),
+            format!("{p50:.0}"),
+            format!("{p99:.0}"),
+            format!("{:.2}x", qps / in_proc_qps[ci].max(1e-12)),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("mode", Json::s("loopback")),
+            ("conns", Json::Int(conns as u64)),
+            ("qps", Json::Num(qps)),
+            ("p50_us", Json::Num(p50)),
+            ("p99_us", Json::Num(p99)),
+            ("vs_in_process", Json::Num(qps / in_proc_qps[ci].max(1e-12))),
+        ]));
+    }
+    table.finish();
+
+    let (net, totals) = handle.stop().unwrap();
+    println!(
+        "server totals: {} connections, {} frames, {} queries, {} windows, {} coalesced",
+        net.connections, net.frames, net.queries, totals.windows, totals.coalesced
+    );
+
+    write_bench_json(
+        "BENCH_net.json",
+        &Json::obj(vec![
+            ("bench", Json::s("net_throughput")),
+            ("protocol", Json::s("KNNQv1")),
+            ("dataset", Json::s("clustered")),
+            ("n", Json::Int(n as u64)),
+            ("dim", Json::Int(dim as u64)),
+            ("k", Json::Int(k as u64)),
+            ("queries", Json::Int(n_queries as u64)),
+            ("bit_identical_to_in_process", Json::Bool(true)),
+            ("detected_kernel", Json::s(dispatch::detect().name())),
+            ("rows", Json::Arr(json_rows)),
+        ]),
+    );
+}

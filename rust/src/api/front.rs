@@ -64,6 +64,14 @@ pub struct FrontConfig {
     /// the full fan-out, bit-identical to the historical behavior; so
     /// does any `m ≥ S`.
     pub route_top_m: Option<usize>,
+    /// Capacity of the cross-window LRU answer cache (distinct query
+    /// vectors retained); `0` (the default) disables it. The cache is
+    /// keyed by exact `f32` bit patterns — the same key
+    /// [`plan_window`] coalesces on — and stores final [`Neighbor`]
+    /// lists only, so with the front's `k`/`params`/`route_top_m`
+    /// fixed for its lifetime, cache-on and cache-off answers are
+    /// bit-identical: a hit replays a previous window's exact result.
+    pub answer_cache: usize,
 }
 
 impl Default for FrontConfig {
@@ -75,9 +83,32 @@ impl Default for FrontConfig {
             max_wait: Duration::from_micros(200),
             queue_depth: 1024,
             route_top_m: None,
+            answer_cache: 0,
         }
     }
 }
+
+/// Typed rejection for a per-request `k` that does not match the
+/// front's configured [`FrontConfig::k`]. Every query in a window
+/// shares one `search_batch` call, so `k` is fixed per front; callers
+/// that carry their own `k` (notably the `KNNQv1` wire protocol) get
+/// this error from [`ServeFront::submit_with_k`] instead of a silently
+/// different answer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KMismatch {
+    /// The `k` the caller asked for.
+    pub requested: usize,
+    /// The `k` this front serves.
+    pub serving: usize,
+}
+
+impl std::fmt::Display for KMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "requested k={} but this front serves k={}", self.requested, self.serving)
+    }
+}
+
+impl std::error::Error for KMismatch {}
 
 /// One submitted query awaiting dispatch.
 struct Request {
@@ -121,6 +152,10 @@ pub struct FrontStats {
     /// routing ([`FrontConfig::route_top_m`]). Zero over unsharded
     /// searchers, which report no fan-out.
     pub shard_visits: u64,
+    /// Unique window queries answered from the cross-window LRU answer
+    /// cache ([`FrontConfig::answer_cache`]) without touching the
+    /// searcher. Always zero with the cache disabled.
+    pub cache_hits: u64,
 }
 
 #[derive(Default)]
@@ -129,6 +164,7 @@ struct Counters {
     queries: AtomicU64,
     coalesced: AtomicU64,
     shard_visits: AtomicU64,
+    cache_hits: AtomicU64,
 }
 
 /// Handle for one submitted query; [`wait`](QueryTicket::wait) blocks
@@ -152,6 +188,9 @@ pub struct ServeFront {
     tx: Option<mpsc::SyncSender<Request>>,
     handle: Option<JoinHandle<()>>,
     dim: usize,
+    k: usize,
+    route_top_m: Option<usize>,
+    corpus_len: usize,
     counters: Arc<Counters>,
 }
 
@@ -169,10 +208,11 @@ impl ServeFront {
         let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
         let counters = Arc::new(Counters::default());
         let thread_counters = Arc::clone(&counters);
+        let (k, route_top_m, corpus_len) = (cfg.k, cfg.route_top_m, searcher.len());
         let handle = std::thread::Builder::new()
             .name("knng-serve-front".into())
             .spawn(move || dispatch_loop(searcher, dim, cfg, rx, thread_counters))?;
-        Ok(Self { tx: Some(tx), handle: Some(handle), dim, counters })
+        Ok(Self { tx: Some(tx), handle: Some(handle), dim, k, route_top_m, corpus_len, counters })
     }
 
     /// Enqueue one query (length must equal the front's logical `dim`).
@@ -194,6 +234,41 @@ impl ServeFront {
         Ok(QueryTicket { rx })
     }
 
+    /// Enqueue one query that carries its own `k`. The front's `k` is
+    /// fixed for its lifetime (every query in a window shares one
+    /// `search_batch` call, and the answer cache replays whole
+    /// results), so a mismatched `k` is **rejected** with a typed
+    /// [`KMismatch`] error rather than re-bucketed into a separate
+    /// window; `k == serving_k()` behaves exactly like
+    /// [`submit`](ServeFront::submit).
+    pub fn submit_with_k(&self, query: Vec<f32>, k: usize) -> crate::Result<QueryTicket> {
+        if k != self.k {
+            return Err(anyhow::Error::new(KMismatch { requested: k, serving: self.k }));
+        }
+        self.submit(query)
+    }
+
+    /// The fixed `k` this front serves ([`FrontConfig::k`]).
+    pub fn serving_k(&self) -> usize {
+        self.k
+    }
+
+    /// Logical dimensionality of accepted queries.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Rows in the served corpus (the searcher's `len` at spawn time).
+    pub fn corpus_len(&self) -> usize {
+        self.corpus_len
+    }
+
+    /// Centroid-routing fan-out bound ([`FrontConfig::route_top_m`]);
+    /// `None` means full fan-out.
+    pub fn route_top_m(&self) -> Option<usize> {
+        self.route_top_m
+    }
+
     /// Snapshot of the running totals.
     pub fn stats(&self) -> FrontStats {
         FrontStats {
@@ -201,6 +276,7 @@ impl ServeFront {
             queries: self.counters.queries.load(Ordering::Relaxed),
             coalesced: self.counters.coalesced.load(Ordering::Relaxed),
             shard_visits: self.counters.shard_visits.load(Ordering::Relaxed),
+            cache_hits: self.counters.cache_hits.load(Ordering::Relaxed),
         }
     }
 
@@ -234,6 +310,7 @@ fn dispatch_loop<S: Searcher>(
     rx: mpsc::Receiver<Request>,
     counters: Arc<Counters>,
 ) {
+    let mut cache = AnswerCache::new(cfg.answer_cache);
     loop {
         let first = match rx.recv() {
             Ok(r) => r,
@@ -249,7 +326,63 @@ fn dispatch_loop<S: Searcher>(
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
         }
-        serve_window(&searcher, dim, &cfg, window, &counters);
+        serve_window(&searcher, dim, &cfg, window, &counters, &mut cache);
+    }
+}
+
+/// The exact-bytes identity of a query vector: its `f32` bit patterns,
+/// so `-0.0`/`0.0` and NaN payloads stay distinct (byte semantics, not
+/// float semantics). Shared by [`plan_window`]'s in-window coalescing
+/// and the cross-window [`AnswerCache`].
+fn query_key(row: &[f32]) -> Vec<u32> {
+    row.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Bounded cross-window LRU answer cache. Lives on the dispatcher
+/// thread (no locking); stores final [`Neighbor`] lists only, never
+/// partial search state, so a hit replays a previous window's exact
+/// answer — with `k`/`params`/`route_top_m` fixed per front, cache-on
+/// and cache-off results are bit-identical.
+struct AnswerCache {
+    cap: usize,
+    tick: u64,
+    map: HashMap<Vec<u32>, (u64, Vec<Neighbor>)>,
+}
+
+impl AnswerCache {
+    fn new(cap: usize) -> Self {
+        Self { cap, tick: 0, map: HashMap::new() }
+    }
+
+    fn get(&mut self, row: &[f32]) -> Option<Vec<Neighbor>> {
+        if self.cap == 0 {
+            return None;
+        }
+        self.tick += 1;
+        let tick = self.tick;
+        self.map.get_mut(&query_key(row)).map(|slot| {
+            slot.0 = tick; // refresh recency
+            slot.1.clone()
+        })
+    }
+
+    fn insert(&mut self, row: &[f32], neighbors: &[Neighbor]) {
+        if self.cap == 0 {
+            return;
+        }
+        self.tick += 1;
+        self.map.insert(query_key(row), (self.tick, neighbors.to_vec()));
+        while self.map.len() > self.cap {
+            // capacity is a small knob; an O(cap) eviction scan beats
+            // carrying a linked order structure for it
+            let oldest = self
+                .map
+                .iter()
+                .min_by_key(|(_, (t, _))| *t)
+                .map(|(key, _)| key.clone())
+                .expect("map is non-empty while over capacity");
+            self.map.remove(&oldest);
+        }
     }
 }
 
@@ -269,8 +402,7 @@ fn plan_window(rows: &[&[f32]]) -> WindowPlan {
     let mut assign = Vec::with_capacity(rows.len());
     let mut unique = Vec::new();
     for (i, row) in rows.iter().enumerate() {
-        let key: Vec<u32> = row.iter().map(|x| x.to_bits()).collect();
-        match seen.entry(key) {
+        match seen.entry(query_key(row)) {
             Entry::Occupied(e) => assign.push(*e.get()),
             Entry::Vacant(e) => {
                 e.insert(unique.len());
@@ -288,19 +420,47 @@ fn serve_window<S: Searcher>(
     cfg: &FrontConfig,
     window: Vec<Request>,
     counters: &Counters,
+    cache: &mut AnswerCache,
 ) {
     let rows: Vec<&[f32]> = window.iter().map(|r| r.query.as_slice()).collect();
     let plan = plan_window(&rows);
-    let flat: Vec<f32> =
-        plan.unique.iter().flat_map(|&i| window[i].query.iter().copied()).collect();
-    // the one copy on this path: flat queries → aligned tile. Handing
-    // the tile over as an Arc lets a thread-per-shard pool share it
-    // with its workers directly instead of re-cloning it 'static.
-    let tile = Arc::new(AlignedMatrix::from_rows(plan.unique.len(), dim, &flat));
-    let (results, stats) = match cfg.route_top_m {
-        Some(m) => searcher.search_batch_routed_owned(tile, cfg.k, &cfg.params, m),
-        None => searcher.search_batch_owned(tile, cfg.k, &cfg.params),
-    };
+
+    // Each unique query is answered from the cross-window cache (hit)
+    // or marked for execution (miss). With the cache disabled every
+    // unique is a miss and this is the historical single-tile path.
+    let mut answers: Vec<Option<Vec<Neighbor>>> = vec![None; plan.unique.len()];
+    let mut misses: Vec<usize> = Vec::new(); // indices into plan.unique
+    for (u, &req_i) in plan.unique.iter().enumerate() {
+        match cache.get(rows[req_i]) {
+            Some(hit) => answers[u] = Some(hit),
+            None => misses.push(u),
+        }
+    }
+    let hits = (plan.unique.len() - misses.len()) as u64;
+
+    let mut shard_visits = 0u64;
+    if !misses.is_empty() {
+        let flat: Vec<f32> = misses
+            .iter()
+            .flat_map(|&u| window[plan.unique[u]].query.iter().copied())
+            .collect();
+        // the one copy on this path: flat queries → aligned tile.
+        // Handing the tile over as an Arc lets a thread-per-shard pool
+        // share it with its workers directly instead of re-cloning it
+        // 'static.
+        let tile = Arc::new(AlignedMatrix::from_rows(misses.len(), dim, &flat));
+        let (results, stats) = match cfg.route_top_m {
+            Some(m) => searcher.search_batch_routed_owned(tile, cfg.k, &cfg.params, m),
+            None => searcher.search_batch_owned(tile, cfg.k, &cfg.params),
+        };
+        shard_visits = stats.shard_visits;
+        for (&u, neighbors) in misses.iter().zip(results) {
+            cache.insert(rows[plan.unique[u]], &neighbors);
+            answers[u] = Some(neighbors);
+        }
+    }
+    let answers: Vec<Vec<Neighbor>> =
+        answers.into_iter().map(|a| a.expect("every unique answered")).collect();
 
     let mut fanout = vec![0usize; plan.unique.len()];
     for &u in &plan.assign {
@@ -311,13 +471,14 @@ fn serve_window<S: Searcher>(
     counters
         .coalesced
         .fetch_add((window.len() - plan.unique.len()) as u64, Ordering::Relaxed);
-    counters.shard_visits.fetch_add(stats.shard_visits, Ordering::Relaxed);
+    counters.shard_visits.fetch_add(shard_visits, Ordering::Relaxed);
+    counters.cache_hits.fetch_add(hits, Ordering::Relaxed);
 
     let info_base = (window.len(), plan.unique.len());
     for (req, u) in window.into_iter().zip(plan.assign) {
         // a dead receiver just means the caller stopped waiting
         let _ = req.reply.send(Served {
-            neighbors: results[u].clone(),
+            neighbors: answers[u].clone(),
             window: WindowInfo {
                 requests: info_base.0,
                 unique: info_base.1,
@@ -361,5 +522,46 @@ mod tests {
         assert!(cfg.max_batch >= 1);
         assert!(cfg.queue_depth >= 1);
         assert!(cfg.max_wait > Duration::ZERO);
+        // cache off by default: the historical behavior is the default
+        assert_eq!(cfg.answer_cache, 0);
+    }
+
+    #[test]
+    fn answer_cache_zero_capacity_is_inert() {
+        let mut cache = AnswerCache::new(0);
+        let row = [1.0f32, 2.0];
+        cache.insert(&row, &[Neighbor::new(7, 0.5)]);
+        assert!(cache.get(&row).is_none());
+        assert!(cache.map.is_empty());
+    }
+
+    #[test]
+    fn answer_cache_hits_exact_bits_and_evicts_lru() {
+        let mut cache = AnswerCache::new(2);
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        let c = [5.0f32, 6.0];
+        cache.insert(&a, &[Neighbor::new(1, 0.1)]);
+        cache.insert(&b, &[Neighbor::new(2, 0.2)]);
+        // touch `a` so `b` is the least recently used entry
+        assert_eq!(cache.get(&a).unwrap()[0].id.0, 1);
+        cache.insert(&c, &[Neighbor::new(3, 0.3)]);
+        assert_eq!(cache.map.len(), 2);
+        assert!(cache.get(&b).is_none(), "LRU entry should have been evicted");
+        assert_eq!(cache.get(&a).unwrap()[0].id.0, 1);
+        assert_eq!(cache.get(&c).unwrap()[0].id.0, 3);
+        // byte semantics: -0.0 is not a hit for 0.0
+        cache.insert(&[0.0f32, 0.0], &[Neighbor::new(4, 0.4)]);
+        assert!(cache.get(&[-0.0f32, 0.0]).is_none());
+    }
+
+    #[test]
+    fn k_mismatch_is_typed_and_displayable() {
+        let err = KMismatch { requested: 5, serving: 10 };
+        let msg = err.to_string();
+        assert!(msg.contains("k=5") && msg.contains("k=10"), "unhelpful message: {msg}");
+        // the anyhow wrapper used by submit_with_k must stay downcastable
+        let any = anyhow::Error::new(err);
+        assert_eq!(any.downcast_ref::<KMismatch>(), Some(&err));
     }
 }

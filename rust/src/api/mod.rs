@@ -74,7 +74,7 @@ pub mod serve;
 pub mod sharded;
 
 pub use builder::IndexBuilder;
-pub use front::{FrontConfig, FrontStats, QueryTicket, Served, ServeFront, WindowInfo};
+pub use front::{FrontConfig, FrontStats, KMismatch, QueryTicket, Served, ServeFront, WindowInfo};
 pub use ids::{Neighbor, OriginalId, WorkingId};
 pub use index::{BuildTelemetry, Index};
 pub use partition::{Contiguous, KMeans, PartitionPlan, Partitioner, ShardPlan};

@@ -58,6 +58,7 @@ pub mod dataset;
 pub mod distance;
 pub mod graph;
 pub mod metrics;
+pub mod net;
 pub mod nndescent;
 pub mod pipeline;
 pub mod roofline;

@@ -4,7 +4,9 @@
 //!   build     build a K-NN graph (config file or flags), report stats
 //!   gen       generate a dataset and write it as .fvecs
 //!   query     serve ANN queries — batched from a KNNIv1 index bundle,
-//!             or one at a time from a bare graph + corpus
+//!             over the wire from a running server (--connect), or one
+//!             at a time from a bare graph + corpus
+//!   serve     run the KNNQv1 network server over KNNIv1 bundle(s)
 //!   check     verify AOT artifacts load and the PJRT engine matches
 //!             the native kernels (requires --features pjrt)
 //!   info      print version, defaults, artifact inventory
@@ -24,6 +26,9 @@
 //!   knng query --index corpus.knni --batch queries.fvecs --kernel w16
 //!   knng query --index corpus.knni --batch queries.fvecs --serve \
 //!              --threads 4 --max-batch 128 --batch-window 500
+//!   knng serve --listen 127.0.0.1:7070 --index corpus.knni --k 10 \
+//!              --threads 4 --answer-cache 4096
+//!   knng query --connect 127.0.0.1:7070 --batch queries.fvecs --k 10
 //!   knng gen --dataset gaussian --n 4096 --dim 64 --out /tmp/g.fvecs
 //!   knng check --artifacts artifacts
 
@@ -38,6 +43,7 @@ fn main() {
         Some("build") => cmd_build(&args[1..]),
         Some("gen") => cmd_gen(&args[1..]),
         Some("query") => cmd_query(&args[1..]),
+        Some("serve") => cmd_serve(&args[1..]),
         Some("check") => cmd_check(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
         Some("--help") | Some("-h") | Some("help") | None => {
@@ -62,7 +68,8 @@ fn print_help() {
          subcommands:\n  \
          build   build a K-NN graph and report stats/recall\n  \
          gen     generate a synthetic dataset to .fvecs\n  \
-         query   serve ANN queries (batched via --index bundle, or --graph)\n  \
+         query   serve ANN queries (batched via --index bundle, --connect, or --graph)\n  \
+         serve   run the KNNQv1 network server over KNNIv1 bundle(s)\n  \
          check   validate AOT artifacts + PJRT numerics\n  \
          info    version, defaults, artifact inventory\n\n\
          run `knng <cmd> --help` for flags",
@@ -244,6 +251,8 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
         .value("graph", "saved graph file from `build --save` (legacy; pairs with --data)")
         .value("data", ".fvecs corpus the graph was built on (with --graph)")
         .value("queries", ".fvecs query vectors, served one at a time (with --graph)")
+        .value("connect", "query a running `knng serve` server at this address instead of loading bundles")
+        .value("net-timeout", "wire read/write timeout for --connect, seconds (default 30, 0 = none)")
         .value("k", "neighbors per query (default 10)")
         .value("ef", "beam width (default 64)")
         .value("route-top-m", "centroid-route each query to its m nearest shards (default: full fan-out)")
@@ -266,6 +275,11 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
         ..Default::default()
     };
 
+    if let Some(addr) = m.get("connect") {
+        // ---- wire path: query a running `knng serve` server -------------
+        return query_connect(addr, k, &m);
+    }
+
     let index_paths = m.get_all("index");
     if !index_paths.is_empty() {
         use knng::api::ShardedSearcher;
@@ -275,14 +289,7 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
             .or_else(|| m.get("queries"))
             .ok_or_else(|| anyhow::anyhow!("--batch <fvecs> is required with --index"))?;
         let queries = knng::dataset::fvecs::read_fvecs(std::path::Path::new(qpath), usize::MAX)?;
-        let route_top_m = match m.get("route-top-m") {
-            None => None,
-            Some(_) => {
-                let v = m.usize_or("route-top-m", 0)?;
-                anyhow::ensure!(v >= 1, "--route-top-m must be at least 1");
-                Some(v)
-            }
-        };
+        let route_top_m = parse_route_top_m(&m)?;
 
         if index_paths.len() == 1 && route_top_m.is_none() {
             // single bundle, full fan-out: the historical serving path
@@ -404,6 +411,159 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
         secs,
         queries.n() as f64 / secs,
         total_evals as f64 / queries.n() as f64
+    );
+    Ok(())
+}
+
+/// Shared `--route-top-m` parsing: absent = full fan-out, present
+/// must be ≥ 1.
+fn parse_route_top_m(m: &knng::cli::ArgMatches) -> anyhow::Result<Option<usize>> {
+    match m.get("route-top-m") {
+        None => Ok(None),
+        Some(_) => {
+            let v = m.usize_or("route-top-m", 0)?;
+            anyhow::ensure!(v >= 1, "--route-top-m must be at least 1");
+            Ok(Some(v))
+        }
+    }
+}
+
+/// The `query --connect` path: ship the batch to a running
+/// `knng serve` server over the KNNQv1 wire protocol. Same stdout
+/// contract as every other `query` serving path — and the same
+/// neighbors, bit for bit (the loopback bit-equality guarantee).
+fn query_connect(addr: &str, k: usize, m: &knng::cli::ArgMatches) -> anyhow::Result<()> {
+    use knng::net::NetClient;
+    let qpath = m
+        .get("batch")
+        .or_else(|| m.get("queries"))
+        .ok_or_else(|| anyhow::anyhow!("--batch <fvecs> is required with --connect"))?;
+    let queries = knng::dataset::fvecs::read_fvecs(std::path::Path::new(qpath), usize::MAX)?;
+    let route_top_m = parse_route_top_m(m)?;
+    let timeout_s = m.u64_or("net-timeout", 30)?;
+    let timeout = (timeout_s > 0).then(|| std::time::Duration::from_secs(timeout_s));
+    let mut client = NetClient::connect_with(addr, timeout, knng::net::wire::DEFAULT_MAX_FRAME)?;
+    let info = client.ping()?;
+    anyhow::ensure!(
+        queries.dim() == info.dim as usize,
+        "query dim {} does not match served dim {}",
+        queries.dim(),
+        info.dim
+    );
+    let t0 = std::time::Instant::now();
+    let (results, windows) = client.query_batch(&queries, k, route_top_m)?;
+    let secs = t0.elapsed().as_secs_f64();
+    print_result_rows(&results);
+    let coalesced = windows.iter().filter(|w| w.coalesced).count();
+    eprintln!(
+        "{} queries over the wire in {secs:.3}s ({:.0} qps) \
+         [server {addr}: n={}, dim={}, k={}; {coalesced} coalesced]",
+        results.len(),
+        results.len() as f64 / secs.max(1e-12),
+        info.n,
+        info.dim,
+        info.k,
+    );
+    Ok(())
+}
+
+/// The `serve` subcommand: KNNIv1 bundle(s) → `ShardedSearcher` →
+/// thread-per-shard `ShardPool` → micro-batching `ServeFront` →
+/// `NetServer` speaking KNNQv1 on a TCP listener. Runs until SIGINT
+/// or a wire shutdown frame, then drains in-flight windows.
+fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
+    use knng::api::{FrontConfig, ServeFront, ShardPool, ShardedSearcher};
+    use knng::net::{install_sigint_handler, NetServer, ServerConfig};
+
+    let spec = ArgSpec::new()
+        .value("listen", "address to listen on, e.g. 127.0.0.1:7070 (required; port 0 = ephemeral)")
+        .multi("index", "KNNIv1 index bundle from `build --save-index`; repeat to serve several bundles as shards")
+        .value("k", "neighbors served per query; wire requests must match (default 10)")
+        .value("ef", "beam width (default 64)")
+        .value("route-top-m", "centroid-route each query to its m nearest shards; wire requests must match (default: full fan-out)")
+        .value("threads", "shard-pool worker threads (clamped to the shard count; default 1)")
+        .value("max-batch", "max queries coalesced per window (default 64)")
+        .value("batch-window", "batching window, microseconds (default 200)")
+        .value("answer-cache", "cross-window LRU answer cache capacity, distinct queries (default 0 = off)")
+        .value("net-workers", "connection-handler threads (default 4)")
+        .value("net-timeout", "per-connection read timeout, seconds (default 30)")
+        .value("max-frame", "largest accepted wire frame payload, bytes (default 16M)")
+        .value(KERNEL_FLAG, KERNEL_HELP)
+        .flag("help", "show this help");
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("serve"));
+        return Ok(());
+    }
+    apply_kernel_override(&m)?;
+    let listen = m.get("listen").ok_or_else(|| anyhow::anyhow!("--listen <addr> is required"))?;
+    let index_paths = m.get_all("index");
+    anyhow::ensure!(
+        !index_paths.is_empty(),
+        "--index <bundle> is required (repeat the flag to serve several bundles as shards)"
+    );
+
+    let mut indexes = Vec::with_capacity(index_paths.len());
+    for p in index_paths {
+        indexes.push(Index::load(std::path::Path::new(p))?);
+    }
+    let graph_k = indexes[0].graph_k();
+    let sharded = match indexes.len() {
+        1 => ShardedSearcher::from_index(indexes.pop().expect("one bundle")),
+        _ => ShardedSearcher::from_indexes(indexes)?,
+    };
+    let (n, dim, shards) = (sharded.len(), sharded.dim(), sharded.shard_count());
+
+    let k = m.usize_or("k", 10)?;
+    let params = knng::search::SearchParams {
+        ef: m.usize_or("ef", 64)?,
+        ..Default::default()
+    };
+    let route_top_m = parse_route_top_m(&m)?;
+    let threads = m.usize_or("threads", 1)?;
+    let pool = ShardPool::new(&sharded, threads)?;
+    let workers = pool.threads();
+    let cfg = FrontConfig {
+        k,
+        params,
+        max_batch: m.usize_or("max-batch", 64)?,
+        max_wait: std::time::Duration::from_micros(m.u64_or("batch-window", 200)?),
+        route_top_m,
+        answer_cache: m.usize_or("answer-cache", 0)?,
+        ..Default::default()
+    };
+    let cache = cfg.answer_cache;
+    let front = ServeFront::spawn(pool, dim, cfg)?;
+
+    let net_timeout = std::time::Duration::from_secs(m.u64_or("net-timeout", 30)?.max(1));
+    let server_cfg = ServerConfig {
+        workers: m.usize_or("net-workers", 4)?,
+        read_timeout: net_timeout,
+        write_timeout: net_timeout,
+        max_frame: m.usize_or("max-frame", knng::net::wire::DEFAULT_MAX_FRAME)?,
+    };
+    let server = NetServer::bind(listen, front, server_cfg)?;
+    let addr = server.local_addr()?;
+    install_sigint_handler();
+    eprintln!(
+        "serving n={n} dim={dim} (graph k={graph_k}) on {addr} — {shards} shard(s), \
+         {workers} pool worker(s), k={k}, route {}, answer cache {cache}; Ctrl-C drains",
+        match route_top_m {
+            Some(v) => format!("top-{v}"),
+            None => "full".to_string(),
+        },
+    );
+    let (net, totals) = server.run()?;
+    eprintln!(
+        "drained: {} connection(s), {} frame(s), {} wire quer(ies), {} protocol error(s); \
+         {} window(s), {} coalesced, {} cache hit(s)",
+        net.connections,
+        net.frames,
+        net.queries,
+        net.protocol_errors,
+        totals.windows,
+        totals.coalesced,
+        totals.cache_hits,
     );
     Ok(())
 }

@@ -1,0 +1,148 @@
+//! A small blocking `KNNQv1` client: connect / ping / query_batch /
+//! shutdown. Used by the CLI `query --connect` path, the loopback
+//! integration tests, and `bench_net_throughput`.
+//!
+//! Server-side rejections (typed [`Frame::Error`] replies) surface as
+//! a downcastable [`ServerRejection`], so callers can distinguish "the
+//! server said no" (and why) from transport failures.
+
+use super::wire::{self, ErrorCode, Frame, QueryFrame};
+use crate::api::{Neighbor, WindowInfo};
+use crate::dataset::AlignedMatrix;
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+/// Corpus shape reported by a [`Frame::Pong`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerInfo {
+    /// Rows in the served corpus.
+    pub n: u64,
+    /// Query dimensionality the server expects.
+    pub dim: u32,
+    /// The fixed `k` the server serves.
+    pub k: u32,
+}
+
+/// A typed error frame received from the server, as a Rust error.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ServerRejection {
+    /// What the server objected to.
+    pub code: ErrorCode,
+    /// Code-specific detail (see [`ErrorCode`] docs).
+    pub detail: u32,
+    /// The server's human-readable context.
+    pub message: String,
+}
+
+impl std::fmt::Display for ServerRejection {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let Self { code, detail, message } = self;
+        write!(f, "server rejected request: {code} (detail {detail}): {message}")
+    }
+}
+
+impl std::error::Error for ServerRejection {}
+
+/// Blocking `KNNQv1` client over one TCP connection.
+pub struct NetClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    max_frame: usize,
+    token: u64,
+}
+
+impl NetClient {
+    /// Connect with a 30 s I/O timeout and the default max-frame cap.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> crate::Result<Self> {
+        Self::connect_with(addr, Some(Duration::from_secs(30)), wire::DEFAULT_MAX_FRAME)
+    }
+
+    /// Connect with explicit read/write timeouts (`None` blocks
+    /// indefinitely) and reply-frame size cap.
+    pub fn connect_with<A: ToSocketAddrs>(
+        addr: A,
+        io_timeout: Option<Duration>,
+        max_frame: usize,
+    ) -> crate::Result<Self> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        stream.set_read_timeout(io_timeout)?;
+        stream.set_write_timeout(io_timeout)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let writer = BufWriter::new(stream);
+        Ok(Self { reader, writer, max_frame, token: 0 })
+    }
+
+    /// Send one frame and read one reply, mapping error frames to a
+    /// typed [`ServerRejection`].
+    fn round_trip(&mut self, frame: &Frame) -> crate::Result<Frame> {
+        wire::write_frame(&mut self.writer, frame)?;
+        self.writer.flush()?;
+        let reply = wire::read_frame(&mut self.reader, self.max_frame)?;
+        if let Frame::Error(e) = reply {
+            let rejection = ServerRejection { code: e.code, detail: e.detail, message: e.message };
+            return Err(anyhow::Error::new(rejection));
+        }
+        Ok(reply)
+    }
+
+    /// Liveness + metadata probe: returns the served corpus shape.
+    pub fn ping(&mut self) -> crate::Result<ServerInfo> {
+        self.token += 1;
+        let token = self.token;
+        match self.round_trip(&Frame::Ping { token })? {
+            Frame::Pong { token: echoed, n, dim, k } => {
+                anyhow::ensure!(echoed == token, "pong echoed token {echoed}, expected {token}");
+                Ok(ServerInfo { n, dim, k })
+            }
+            other => anyhow::bail!("expected a pong, got {other:?}"),
+        }
+    }
+
+    /// Send a dense query tile and block for the per-query neighbor
+    /// lists plus the window diagnostics each query rode with. The
+    /// tile's `f32` bit patterns cross the wire exactly, so answers
+    /// are bit-identical to submitting the same rows to the server's
+    /// `ServeFront` in-process.
+    pub fn query_batch(
+        &mut self,
+        tile: &AlignedMatrix,
+        k: usize,
+        route_top_m: Option<usize>,
+    ) -> crate::Result<(Vec<Vec<Neighbor>>, Vec<WindowInfo>)> {
+        let mut data = Vec::with_capacity(tile.n() * tile.dim());
+        for i in 0..tile.n() {
+            data.extend_from_slice(tile.row_logical(i));
+        }
+        let query = QueryFrame {
+            k: k as u32,
+            route_top_m: route_top_m.unwrap_or(0) as u32,
+            count: tile.n() as u32,
+            dim: tile.dim() as u32,
+            data,
+        };
+        match self.round_trip(&Frame::Query(query))? {
+            Frame::Results(r) => {
+                anyhow::ensure!(
+                    r.results.len() == tile.n() && r.windows.len() == tile.n(),
+                    "server answered {} results / {} windows for {} queries",
+                    r.results.len(),
+                    r.windows.len(),
+                    tile.n()
+                );
+                Ok((r.results, r.windows))
+            }
+            other => anyhow::bail!("expected results, got {other:?}"),
+        }
+    }
+
+    /// Ask the server to drain and exit; consumes the client (the
+    /// connection closes after the acknowledgement).
+    pub fn shutdown_server(mut self) -> crate::Result<()> {
+        match self.round_trip(&Frame::Shutdown)? {
+            Frame::Shutdown => Ok(()),
+            other => anyhow::bail!("expected a shutdown acknowledgement, got {other:?}"),
+        }
+    }
+}

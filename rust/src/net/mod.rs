@@ -1,0 +1,28 @@
+//! # `net` — network serving for the sharded, micro-batched stack
+//!
+//! Turns [`ServeFront`](crate::api::ServeFront) into an actual server:
+//!
+//! * [`wire`] — `KNNQv1`, a compact length-prefixed binary protocol,
+//!   versioned and FNV-checksummed in the same style as the `KNNIv1`
+//!   index bundle; decoding never panics on wire input.
+//! * [`server`] — a `TcpListener` accept loop plus a bounded worker
+//!   pool of connection handlers that submit decoded query rows into
+//!   the existing micro-batching windows, so cross-connection batching
+//!   and duplicate coalescing apply across the wire; graceful shutdown
+//!   (SIGINT / shutdown frame) drains in-flight windows.
+//! * [`client`] — a small blocking client (connect / ping /
+//!   query_batch / shutdown) for `query --connect`, the loopback
+//!   tests, and `bench_net_throughput`.
+//!
+//! The serving contract: a query tile served over loopback is
+//! **bit-identical** to the same tile submitted to the `ServeFront`
+//! in-process — `f32` values cross the wire as exact bit patterns and
+//! the server adds no computation of its own.
+
+pub mod client;
+pub mod server;
+pub mod wire;
+
+pub use client::{NetClient, ServerInfo, ServerRejection};
+pub use server::{install_sigint_handler, NetServer, NetStats, ServerConfig, ServerHandle};
+pub use wire::{ErrorCode, ErrorFrame, Frame, QueryFrame, ResultsFrame, WireError};

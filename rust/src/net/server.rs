@@ -1,0 +1,418 @@
+//! The `KNNQv1` server runtime: a `std::net::TcpListener` accept loop
+//! feeding a **bounded** pool of connection-handler workers, each
+//! decoding frames straight into the owned-tile path of the existing
+//! [`ServeFront`] micro-batching windows — so cross-connection
+//! batching and duplicate-query coalescing apply across the wire
+//! exactly as they do in-process.
+//!
+//! Robustness contract:
+//!
+//! * **Never panics on wire input** — every decode failure is a typed
+//!   [`Frame::Error`] reply (in-sync errors keep the connection open;
+//!   a desynced stream is closed).
+//! * **One slow or hostile client cannot wedge the pool** — per-
+//!   connection read/write timeouts drop silent connections back to
+//!   the worker, and the max-frame-size guard rejects giant length
+//!   prefixes before allocating.
+//! * **Graceful shutdown drains in-flight windows** — a SIGINT (via
+//!   [`install_sigint_handler`]), a wire [`Frame::Shutdown`], or
+//!   [`ServerHandle::request_shutdown`] stops the accept loop, lets
+//!   every worker finish its current frame (open connections close at
+//!   the next frame boundary; queued queries answer
+//!   [`ErrorCode::ShuttingDown`]), then joins the workers and shuts
+//!   the front down, which serves everything already queued.
+
+use super::wire::{self, ErrorCode, ErrorFrame, Frame, QueryFrame, ResultsFrame, WireError};
+use crate::api::{FrontStats, KMismatch, ServeFront};
+use std::io::{BufReader, BufWriter, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+/// Knobs for a [`NetServer`].
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Connection-handler worker threads (≥ 1). Also the capacity of
+    /// the bounded accepted-connection queue: with every worker busy
+    /// and the queue full, the accept loop itself applies backpressure.
+    pub workers: usize,
+    /// A connection that sends no complete frame within this window is
+    /// closed (the anti-wedge guarantee: silence returns the worker to
+    /// the pool).
+    pub read_timeout: Duration,
+    /// A peer that will not drain its replies within this window is
+    /// closed.
+    pub write_timeout: Duration,
+    /// Maximum accepted payload length; larger prefixes are rejected
+    /// as [`ErrorCode::Oversized`] without being read.
+    pub max_frame: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self {
+            workers: 4,
+            read_timeout: Duration::from_secs(30),
+            write_timeout: Duration::from_secs(10),
+            max_frame: wire::DEFAULT_MAX_FRAME,
+        }
+    }
+}
+
+/// Lifetime totals for one server run (monotonic counters).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct NetStats {
+    /// Connections accepted.
+    pub connections: u64,
+    /// Well-formed frames handled.
+    pub frames: u64,
+    /// Query rows received over the wire.
+    pub queries: u64,
+    /// Protocol violations answered with typed error frames.
+    pub protocol_errors: u64,
+}
+
+#[derive(Default)]
+struct NetCounters {
+    connections: AtomicU64,
+    frames: AtomicU64,
+    queries: AtomicU64,
+    protocol_errors: AtomicU64,
+}
+
+impl NetCounters {
+    fn snapshot(&self) -> NetStats {
+        NetStats {
+            connections: self.connections.load(Ordering::Relaxed),
+            frames: self.frames.load(Ordering::Relaxed),
+            queries: self.queries.load(Ordering::Relaxed),
+            protocol_errors: self.protocol_errors.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Process-wide SIGINT latch checked by every accept loop.
+static SIGINT_HIT: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sigint(_signum: i32) {
+    SIGINT_HIT.store(true, Ordering::SeqCst);
+}
+
+/// Install a SIGINT handler that asks every running [`NetServer`] to
+/// drain and exit gracefully (the CLI `serve` path calls this). Uses
+/// the raw libc `signal(2)` symbol so the crate stays free of new
+/// dependencies; a no-op on non-unix targets.
+#[cfg(unix)]
+pub fn install_sigint_handler() {
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+    const SIGINT: i32 = 2;
+    unsafe {
+        signal(SIGINT, on_sigint as extern "C" fn(i32) as usize);
+    }
+}
+
+/// No-op outside unix; `Ctrl-C` falls back to process termination.
+#[cfg(not(unix))]
+pub fn install_sigint_handler() {}
+
+/// A bound-but-not-yet-running `KNNQv1` server over a [`ServeFront`].
+pub struct NetServer {
+    listener: TcpListener,
+    front: ServeFront,
+    cfg: ServerConfig,
+}
+
+impl NetServer {
+    /// Bind `addr` (use `127.0.0.1:0` for an ephemeral test port) in
+    /// front of `front`. The front's `k`/`dim`/routing become the
+    /// served contract: wire queries must match them.
+    pub fn bind<A: ToSocketAddrs>(
+        addr: A,
+        front: ServeFront,
+        cfg: ServerConfig,
+    ) -> crate::Result<Self> {
+        anyhow::ensure!(cfg.workers >= 1, "server needs at least one worker");
+        anyhow::ensure!(cfg.max_frame >= wire::MIN_PAYLOAD, "max_frame below minimum payload");
+        let listener = TcpListener::bind(addr)?;
+        // non-blocking accept so the loop can poll the shutdown latch
+        listener.set_nonblocking(true)?;
+        Ok(Self { listener, front, cfg })
+    }
+
+    /// The bound address (resolves the actual port after binding `:0`).
+    pub fn local_addr(&self) -> crate::Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Run the accept loop on the calling thread until a shutdown
+    /// frame or SIGINT arrives, then drain and return the totals.
+    pub fn run(self) -> crate::Result<(NetStats, FrontStats)> {
+        self.run_inner(Arc::new(AtomicBool::new(false)))
+    }
+
+    /// Run on a background thread; the returned handle exposes the
+    /// bound address and a graceful-stop switch (tests and benches).
+    pub fn spawn(self) -> crate::Result<ServerHandle> {
+        let addr = self.listener.local_addr()?;
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = Arc::clone(&shutdown);
+        let join = std::thread::Builder::new()
+            .name("knng-net-accept".into())
+            .spawn(move || self.run_inner(flag))?;
+        Ok(ServerHandle { addr, shutdown, join })
+    }
+
+    fn run_inner(self, shutdown: Arc<AtomicBool>) -> crate::Result<(NetStats, FrontStats)> {
+        let NetServer { listener, front, cfg } = self;
+        let front = Arc::new(front);
+        let counters = Arc::new(NetCounters::default());
+        let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.workers);
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let rx = Arc::clone(&conn_rx);
+            let front = Arc::clone(&front);
+            let flag = Arc::clone(&shutdown);
+            let counters = Arc::clone(&counters);
+            let cfg = cfg.clone();
+            let worker = std::thread::Builder::new()
+                .name(format!("knng-net-worker-{i}"))
+                .spawn(move || worker_loop(rx, front, cfg, flag, counters))?;
+            workers.push(worker);
+        }
+        loop {
+            if shutdown.load(Ordering::SeqCst) || SIGINT_HIT.load(Ordering::SeqCst) {
+                break;
+            }
+            match listener.accept() {
+                Ok((stream, _peer)) => {
+                    counters.connections.fetch_add(1, Ordering::Relaxed);
+                    if conn_tx.send(stream).is_err() {
+                        break; // every worker died; nothing can serve
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e.into()),
+            }
+        }
+        // drain: stop accepting, let workers finish queued connections
+        // and their current frames, then shut the front down (which
+        // serves every window already submitted).
+        shutdown.store(true, Ordering::SeqCst);
+        drop(conn_tx);
+        for worker in workers {
+            let _ = worker.join();
+        }
+        let net = counters.snapshot();
+        let front = match Arc::try_unwrap(front) {
+            Ok(front) => front,
+            Err(_) => anyhow::bail!("a worker leaked the serve front"),
+        };
+        let front_stats = front.shutdown();
+        Ok((net, front_stats))
+    }
+}
+
+/// Handle to a server spawned on a background thread.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    join: JoinHandle<crate::Result<(NetStats, FrontStats)>>,
+}
+
+impl ServerHandle {
+    /// The address clients should connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Flip the graceful-stop switch; the accept loop notices within
+    /// its poll interval and begins draining.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Wait for the server to finish and return its totals.
+    pub fn join(self) -> crate::Result<(NetStats, FrontStats)> {
+        match self.join.join() {
+            Ok(res) => res,
+            Err(_) => Err(anyhow::anyhow!("server thread panicked")),
+        }
+    }
+
+    /// [`request_shutdown`](Self::request_shutdown) + [`join`](Self::join).
+    pub fn stop(self) -> crate::Result<(NetStats, FrontStats)> {
+        self.request_shutdown();
+        self.join()
+    }
+}
+
+fn worker_loop(
+    rx: Arc<Mutex<mpsc::Receiver<TcpStream>>>,
+    front: Arc<ServeFront>,
+    cfg: ServerConfig,
+    shutdown: Arc<AtomicBool>,
+    counters: Arc<NetCounters>,
+) {
+    loop {
+        let stream = {
+            let guard = rx.lock().expect("connection queue lock");
+            guard.recv()
+        };
+        let Ok(stream) = stream else {
+            return; // accept loop gone and queue drained: worker done
+        };
+        // one connection's failure never takes the worker down
+        let _ = handle_connection(stream, &front, &cfg, &shutdown, &counters);
+    }
+}
+
+fn handle_connection(
+    stream: TcpStream,
+    front: &ServeFront,
+    cfg: &ServerConfig,
+    shutdown: &AtomicBool,
+    counters: &NetCounters,
+) -> crate::Result<()> {
+    let _ = stream.set_nodelay(true); // latency over batching at the TCP layer
+    stream.set_read_timeout(Some(cfg.read_timeout))?;
+    stream.set_write_timeout(Some(cfg.write_timeout))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = BufWriter::new(stream);
+    loop {
+        let frame = match wire::read_frame(&mut reader, cfg.max_frame) {
+            Ok(frame) => frame,
+            Err(WireError::Eof) => return Ok(()), // clean hang-up
+            Err(WireError::Io(_)) => return Ok(()), // torn frame, reset, or read timeout
+            Err(WireError::Protocol { code, detail, message, desync }) => {
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let reply = Frame::Error(ErrorFrame { code, detail, message });
+                let _ = wire::write_frame(&mut writer, &reply);
+                let _ = writer.flush();
+                if desync {
+                    return Ok(()); // length prefix untrustworthy: close
+                }
+                continue; // exactly `len` bytes consumed: still framed
+            }
+        };
+        counters.frames.fetch_add(1, Ordering::Relaxed);
+        let reply = match frame {
+            Frame::Ping { token } => Frame::Pong {
+                token,
+                n: front.corpus_len() as u64,
+                dim: front.dim() as u32,
+                k: front.serving_k() as u32,
+            },
+            Frame::Shutdown => {
+                // acknowledge, then latch the graceful drain
+                shutdown.store(true, Ordering::SeqCst);
+                let _ = wire::write_frame(&mut writer, &Frame::Shutdown);
+                let _ = writer.flush();
+                return Ok(());
+            }
+            Frame::Query(q) => {
+                if shutdown.load(Ordering::SeqCst) {
+                    error_reply(ErrorCode::ShuttingDown, 0, "server is draining".into())
+                } else {
+                    counters.queries.fetch_add(q.count as u64, Ordering::Relaxed);
+                    serve_query(front, q)
+                }
+            }
+            Frame::Pong { .. } | Frame::Results(_) | Frame::Error(_) => {
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let msg = "unexpected server-to-client frame kind".to_string();
+                error_reply(ErrorCode::Malformed, 0, msg)
+            }
+        };
+        wire::write_frame(&mut writer, &reply)?;
+        writer.flush()?;
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(()); // drain reached this connection's frame boundary
+        }
+    }
+}
+
+/// Validate one query frame against the front's served contract and
+/// run it through the micro-batching windows. Tile rows are submitted
+/// individually, so rows from *different* connections coalesce into
+/// shared windows — the wire inherits the in-process batching
+/// semantics (and the in-process answers, bit for bit).
+fn serve_query(front: &ServeFront, q: QueryFrame) -> Frame {
+    if q.dim as usize != front.dim() {
+        let msg = format!("query dim {} does not match served dim {}", q.dim, front.dim());
+        return error_reply(ErrorCode::BadQuery, front.dim() as u32, msg);
+    }
+    let configured = front.route_top_m().unwrap_or(0);
+    if q.route_top_m as usize != configured {
+        let msg = format!(
+            "requested route_top_m {} but this server serves {}",
+            q.route_top_m, configured
+        );
+        return error_reply(ErrorCode::MismatchedRoute, configured as u32, msg);
+    }
+    let dim = q.dim as usize;
+    let k = q.k as usize;
+    let mut tickets = Vec::with_capacity(q.count as usize);
+    for row in q.data.chunks_exact(dim) {
+        match front.submit_with_k(row.to_vec(), k) {
+            Ok(ticket) => tickets.push(ticket),
+            Err(e) => {
+                // tickets already submitted are simply dropped: the
+                // front ignores dead reply receivers by design
+                if let Some(m) = e.downcast_ref::<KMismatch>() {
+                    return error_reply(ErrorCode::MismatchedK, m.serving as u32, m.to_string());
+                }
+                return error_reply(ErrorCode::BadQuery, 0, format!("submit failed: {e}"));
+            }
+        }
+    }
+    let mut results = Vec::with_capacity(tickets.len());
+    let mut windows = Vec::with_capacity(tickets.len());
+    for ticket in tickets {
+        match ticket.wait() {
+            Ok(served) => {
+                results.push(served.neighbors);
+                windows.push(served.window);
+            }
+            Err(e) => {
+                return error_reply(ErrorCode::ShuttingDown, 0, format!("front went away: {e}"));
+            }
+        }
+    }
+    Frame::Results(ResultsFrame { k: q.k, results, windows })
+}
+
+fn error_reply(code: ErrorCode, detail: u32, message: String) -> Frame {
+    Frame::Error(ErrorFrame { code, detail, message })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_config_defaults_are_sane() {
+        let cfg = ServerConfig::default();
+        assert!(cfg.workers >= 1);
+        assert!(cfg.read_timeout > Duration::ZERO);
+        assert!(cfg.write_timeout > Duration::ZERO);
+        assert!(cfg.max_frame >= wire::MIN_PAYLOAD);
+    }
+
+    #[test]
+    fn error_reply_wraps_code_and_detail() {
+        let frame = error_reply(ErrorCode::MismatchedK, 10, "nope".into());
+        let Frame::Error(e) = frame else { panic!("expected an error frame") };
+        assert_eq!(e.code, ErrorCode::MismatchedK);
+        assert_eq!(e.detail, 10);
+        assert_eq!(e.message, "nope");
+    }
+}

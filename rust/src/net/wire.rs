@@ -1,0 +1,721 @@
+//! `KNNQv1` — the length-prefixed binary wire protocol for network
+//! serving, versioned and checksummed in the same style as the
+//! `KNNIv1` index bundle (`search::bundle`): magic, version, flags,
+//! FNV-1a CRC trailer, typed errors instead of panics.
+//!
+//! Every frame on the wire is:
+//!
+//! ```text
+//! len      4 B   u32 LE — byte length of the payload that follows
+//! payload:
+//!   magic    4 B   "KNNQ"
+//!   version  1 B   u8 (currently 1)
+//!   kind     1 B   u8 (frame kind, see below)
+//!   flags    2 B   u16 LE (must be 0 in v1)
+//!   body     …     kind-specific, little-endian
+//!   crc      8 B   u64 LE — FNV-1a over magic..body
+//! ```
+//!
+//! Frame kinds:
+//!
+//! | kind | frame    | body |
+//! |-----:|----------|------|
+//! | 1    | Ping     | `token u64` |
+//! | 2    | Pong     | `token u64, n u64, dim u32, k u32` |
+//! | 3    | Query    | `k u32, route_top_m u32 (0 = full fan-out), count u32, dim u32, count·dim × f32` |
+//! | 4    | Results  | `count u32, k u32`, per query `cnt u32 + cnt × (id u32, dist f32)`, per query `requests u32, unique u32, coalesced u8` |
+//! | 5    | Error    | `code u8, detail u32, msg_len u16, msg_len × utf-8` |
+//! | 6    | Shutdown | empty |
+//!
+//! `f32` values cross the wire as their exact little-endian bit
+//! patterns (`to_le_bytes`/`from_le_bytes`), so NaN payloads and
+//! `-0.0` survive a round trip — the loopback bit-identity contract
+//! rests on this.
+//!
+//! Decoding **never panics**: every read is bounds-checked and every
+//! failure is a typed [`WireError`]. A [`WireError::Protocol`] whose
+//! [`desync`](WireError::Protocol::desync) flag is false consumed
+//! exactly `len` payload bytes, so the stream is still framed and the
+//! connection can answer with an [`Frame::Error`] and keep serving;
+//! `desync: true` means the length prefix itself was untrustworthy and
+//! the connection must close.
+
+use crate::api::{Neighbor, WindowInfo};
+use crate::graph::io::Fnv;
+use std::io::{Read, Write};
+
+/// Magic bytes opening every `KNNQv1` payload.
+pub const MAGIC: &[u8; 4] = b"KNNQ";
+/// Protocol version this build speaks.
+pub const VERSION: u8 = 1;
+/// Smallest legal payload: magic + version + kind + flags + crc.
+pub const MIN_PAYLOAD: usize = 16;
+/// Default cap on the payload length prefix (16 MiB); anything larger
+/// is rejected as [`ErrorCode::Oversized`] without being read.
+pub const DEFAULT_MAX_FRAME: usize = 16 << 20;
+
+/// Typed error codes carried by [`Frame::Error`] (and mirrored in
+/// [`WireError::Protocol`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum ErrorCode {
+    /// Structurally invalid frame: bad magic, bad CRC, nonzero flags,
+    /// body/byte-count mismatch, trailing junk, unknown kind.
+    Malformed = 1,
+    /// The version byte is not one this server speaks (`detail` = the
+    /// offered version).
+    UnsupportedVersion = 2,
+    /// The length prefix exceeds the connection's max-frame guard
+    /// (`detail` = the offered length, saturated).
+    Oversized = 3,
+    /// The request's `k` does not match the serving front's fixed `k`
+    /// (`detail` = the `k` this server serves).
+    MismatchedK = 4,
+    /// The query tile is unusable: zero/mismatched dimensionality or
+    /// an empty tile (`detail` = the dimensionality this server
+    /// serves, when relevant).
+    BadQuery = 5,
+    /// The request's `route_top_m` does not match the serving front's
+    /// routing configuration (`detail` = the configured fan-out, 0 for
+    /// full fan-out).
+    MismatchedRoute = 6,
+    /// The server is draining and no longer accepts queries.
+    ShuttingDown = 7,
+}
+
+impl ErrorCode {
+    /// Wire byte for this code.
+    pub fn as_u8(self) -> u8 {
+        self as u8
+    }
+
+    /// Decode a wire byte; `None` for codes this build does not know.
+    pub fn from_u8(byte: u8) -> Option<Self> {
+        match byte {
+            1 => Some(Self::Malformed),
+            2 => Some(Self::UnsupportedVersion),
+            3 => Some(Self::Oversized),
+            4 => Some(Self::MismatchedK),
+            5 => Some(Self::BadQuery),
+            6 => Some(Self::MismatchedRoute),
+            7 => Some(Self::ShuttingDown),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let name = match self {
+            Self::Malformed => "malformed frame",
+            Self::UnsupportedVersion => "unsupported protocol version",
+            Self::Oversized => "oversized frame",
+            Self::MismatchedK => "mismatched k",
+            Self::BadQuery => "bad query tile",
+            Self::MismatchedRoute => "mismatched route_top_m",
+            Self::ShuttingDown => "server shutting down",
+        };
+        f.write_str(name)
+    }
+}
+
+/// A batch query request: `count` dense rows of `dim` f32 values plus
+/// the per-request search configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QueryFrame {
+    /// Neighbors requested per query.
+    pub k: u32,
+    /// Centroid-routing fan-out bound; `0` requests the full fan-out.
+    pub route_top_m: u32,
+    /// Number of query rows in the tile.
+    pub count: u32,
+    /// Dimensionality of each row.
+    pub dim: u32,
+    /// Row-major `count × dim` tile.
+    pub data: Vec<f32>,
+}
+
+/// A batch answer: per-query neighbor lists plus the
+/// [`WindowInfo`]-style batching diagnostics each query rode with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultsFrame {
+    /// The `k` the answers were computed for.
+    pub k: u32,
+    /// Per-query neighbors, ascending by (distance, original id).
+    pub results: Vec<Vec<Neighbor>>,
+    /// Per-query window diagnostics (same order as `results`).
+    pub windows: Vec<WindowInfo>,
+}
+
+/// A typed error reply.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ErrorFrame {
+    /// What went wrong.
+    pub code: ErrorCode,
+    /// Code-specific detail value (see [`ErrorCode`] docs).
+    pub detail: u32,
+    /// Human-readable context (bounded at `u16::MAX` bytes on the wire).
+    pub message: String,
+}
+
+/// One decoded `KNNQv1` frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Liveness/metadata probe carrying an echo token.
+    Ping {
+        /// Echo token the server must return in its [`Frame::Pong`].
+        token: u64,
+    },
+    /// Reply to [`Frame::Ping`]: echoed token plus corpus shape.
+    Pong {
+        /// The token from the ping being answered.
+        token: u64,
+        /// Rows in the served corpus.
+        n: u64,
+        /// Query dimensionality the server expects.
+        dim: u32,
+        /// The fixed `k` the server serves.
+        k: u32,
+    },
+    /// A batch query request.
+    Query(QueryFrame),
+    /// A batch answer.
+    Results(ResultsFrame),
+    /// A typed error reply.
+    Error(ErrorFrame),
+    /// Graceful-shutdown request (client → server) or acknowledgement
+    /// (server → client, sent before the server drains and exits).
+    Shutdown,
+}
+
+impl Frame {
+    fn kind(&self) -> u8 {
+        match self {
+            Self::Ping { .. } => 1,
+            Self::Pong { .. } => 2,
+            Self::Query(_) => 3,
+            Self::Results(_) => 4,
+            Self::Error(_) => 5,
+            Self::Shutdown => 6,
+        }
+    }
+}
+
+/// Why a frame could not be read/decoded.
+#[derive(Debug)]
+pub enum WireError {
+    /// The peer closed the stream cleanly between frames (zero bytes
+    /// where the next length prefix would start). Not an error for a
+    /// server: the client simply hung up.
+    Eof,
+    /// The transport failed mid-frame (includes torn frames —
+    /// `UnexpectedEof` inside a payload — and read timeouts).
+    Io(std::io::Error),
+    /// The bytes arrived but do not form a valid frame.
+    Protocol {
+        /// The typed code a server should answer with.
+        code: ErrorCode,
+        /// Code-specific detail (see [`ErrorCode`]).
+        detail: u32,
+        /// Human-readable context.
+        message: String,
+        /// True when the length prefix itself was untrustworthy, so
+        /// the stream can no longer be framed and the connection must
+        /// close. False means exactly `len` payload bytes were
+        /// consumed: the stream is still in sync and the connection
+        /// can reply with an error frame and keep serving.
+        desync: bool,
+    },
+}
+
+impl WireError {
+    fn malformed(message: impl Into<String>) -> Self {
+        Self::Protocol {
+            code: ErrorCode::Malformed,
+            detail: 0,
+            message: message.into(),
+            desync: false,
+        }
+    }
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::Eof => f.write_str("peer closed the connection"),
+            Self::Io(e) => write!(f, "wire i/o error: {e}"),
+            Self::Protocol { code, detail, message, desync } => {
+                let tail = if *desync { " [desync]" } else { "" };
+                write!(f, "{code} (detail {detail}): {message}{tail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        Self::Io(e)
+    }
+}
+
+/// Encode `frame` and write it (length prefix + payload) to `w`. The
+/// writer is not flushed — callers batching multiple frames flush once.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> std::io::Result<()> {
+    let mut payload = Vec::with_capacity(64);
+    payload.extend_from_slice(MAGIC);
+    payload.push(VERSION);
+    payload.push(frame.kind());
+    payload.extend_from_slice(&0u16.to_le_bytes()); // flags: must be 0 in v1
+    encode_body(&mut payload, frame);
+    let mut crc = Fnv::new();
+    crc.update(&payload);
+    payload.extend_from_slice(&crc.0.to_le_bytes());
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(&payload)
+}
+
+fn encode_body(buf: &mut Vec<u8>, frame: &Frame) {
+    match frame {
+        Frame::Ping { token } => buf.extend_from_slice(&token.to_le_bytes()),
+        Frame::Pong { token, n, dim, k } => {
+            buf.extend_from_slice(&token.to_le_bytes());
+            buf.extend_from_slice(&n.to_le_bytes());
+            buf.extend_from_slice(&dim.to_le_bytes());
+            buf.extend_from_slice(&k.to_le_bytes());
+        }
+        Frame::Query(q) => {
+            buf.extend_from_slice(&q.k.to_le_bytes());
+            buf.extend_from_slice(&q.route_top_m.to_le_bytes());
+            buf.extend_from_slice(&q.count.to_le_bytes());
+            buf.extend_from_slice(&q.dim.to_le_bytes());
+            for &x in &q.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Frame::Results(r) => {
+            buf.extend_from_slice(&(r.results.len() as u32).to_le_bytes());
+            buf.extend_from_slice(&r.k.to_le_bytes());
+            for hits in &r.results {
+                buf.extend_from_slice(&(hits.len() as u32).to_le_bytes());
+                for h in hits {
+                    buf.extend_from_slice(&h.id.0.to_le_bytes());
+                    buf.extend_from_slice(&h.dist.to_le_bytes());
+                }
+            }
+            for wnd in &r.windows {
+                buf.extend_from_slice(&(wnd.requests as u32).to_le_bytes());
+                buf.extend_from_slice(&(wnd.unique as u32).to_le_bytes());
+                buf.push(wnd.coalesced as u8);
+            }
+        }
+        Frame::Error(e) => {
+            buf.push(e.code.as_u8());
+            buf.extend_from_slice(&e.detail.to_le_bytes());
+            let msg = e.message.as_bytes();
+            let take = msg.len().min(u16::MAX as usize);
+            buf.extend_from_slice(&(take as u16).to_le_bytes());
+            buf.extend_from_slice(&msg[..take]);
+        }
+        Frame::Shutdown => {}
+    }
+}
+
+/// Read and decode one frame from `r`, enforcing `max_frame` on the
+/// length prefix before reading the payload. Never panics on wire
+/// input; see [`WireError`] for the failure taxonomy.
+pub fn read_frame<R: Read>(r: &mut R, max_frame: usize) -> Result<Frame, WireError> {
+    let mut len_buf = [0u8; 4];
+    // the first byte distinguishes a clean hang-up (Eof) from a frame
+    // torn mid-way (Io(UnexpectedEof))
+    let first = loop {
+        match r.read(&mut len_buf[..1]) {
+            Ok(n) => break n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(WireError::Io(e)),
+        }
+    };
+    if first == 0 {
+        return Err(WireError::Eof);
+    }
+    r.read_exact(&mut len_buf[1..])?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len < MIN_PAYLOAD {
+        return Err(WireError::Protocol {
+            code: ErrorCode::Malformed,
+            detail: len as u32,
+            message: format!("payload length {len} below minimum {MIN_PAYLOAD}"),
+            desync: true,
+        });
+    }
+    if len > max_frame {
+        return Err(WireError::Protocol {
+            code: ErrorCode::Oversized,
+            detail: len as u32,
+            message: format!("payload length {len} exceeds max frame {max_frame}"),
+            desync: true,
+        });
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    decode_payload(&payload)
+}
+
+/// Decode a complete payload (everything after the length prefix).
+/// All failures are in-sync protocol errors: the caller already
+/// consumed exactly the prefixed length.
+pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
+    if payload.len() < MIN_PAYLOAD {
+        return Err(WireError::malformed("payload below minimum length"));
+    }
+    let body_end = payload.len() - 8;
+    let mut crc = Fnv::new();
+    crc.update(&payload[..body_end]);
+    let mut tail = [0u8; 8];
+    tail.copy_from_slice(&payload[body_end..]);
+    if &payload[..4] != MAGIC {
+        return Err(WireError::malformed("bad magic"));
+    }
+    let version = payload[4];
+    if version != VERSION {
+        return Err(WireError::Protocol {
+            code: ErrorCode::UnsupportedVersion,
+            detail: version as u32,
+            message: format!("version {version} not supported (this build speaks {VERSION})"),
+            desync: false,
+        });
+    }
+    if u64::from_le_bytes(tail) != crc.0 {
+        return Err(WireError::malformed("checksum mismatch"));
+    }
+    let kind = payload[5];
+    let flags = u16::from_le_bytes([payload[6], payload[7]]);
+    if flags != 0 {
+        return Err(WireError::malformed(format!("unknown flags {flags:#06x}")));
+    }
+    let mut dec = Dec { buf: &payload[8..body_end], pos: 0 };
+    let frame = decode_body(kind, &mut dec)?;
+    dec.done()?;
+    Ok(frame)
+}
+
+fn decode_body(kind: u8, dec: &mut Dec<'_>) -> Result<Frame, WireError> {
+    match kind {
+        1 => Ok(Frame::Ping { token: dec.u64()? }),
+        2 => Ok(Frame::Pong { token: dec.u64()?, n: dec.u64()?, dim: dec.u32()?, k: dec.u32()? }),
+        3 => {
+            let (k, route_top_m) = (dec.u32()?, dec.u32()?);
+            let (count, dim) = (dec.u32()?, dec.u32()?);
+            let cells = match (count as usize).checked_mul(dim as usize) {
+                Some(c) if c.checked_mul(4) == Some(dec.remaining()) => c,
+                _ => {
+                    let msg = "query tile byte count does not match count × dim";
+                    return Err(WireError::malformed(msg));
+                }
+            };
+            let mut data = Vec::with_capacity(cells);
+            for _ in 0..cells {
+                data.push(dec.f32()?);
+            }
+            Ok(Frame::Query(QueryFrame { k, route_top_m, count, dim, data }))
+        }
+        4 => {
+            let count = dec.u32()? as usize;
+            let k = dec.u32()?;
+            let mut results = Vec::new();
+            for _ in 0..count {
+                let cnt = dec.u32()? as usize;
+                if cnt > dec.remaining() / 8 {
+                    return Err(WireError::malformed("neighbor count exceeds frame body"));
+                }
+                let mut hits = Vec::with_capacity(cnt);
+                for _ in 0..cnt {
+                    hits.push(Neighbor::new(dec.u32()?, dec.f32()?));
+                }
+                results.push(hits);
+            }
+            let mut windows = Vec::with_capacity(count);
+            for _ in 0..count {
+                windows.push(WindowInfo {
+                    requests: dec.u32()? as usize,
+                    unique: dec.u32()? as usize,
+                    coalesced: dec.u8()? != 0,
+                });
+            }
+            Ok(Frame::Results(ResultsFrame { k, results, windows }))
+        }
+        5 => {
+            let code_byte = dec.u8()?;
+            let code = match ErrorCode::from_u8(code_byte) {
+                Some(c) => c,
+                None => return Err(WireError::malformed(format!("unknown error code {code_byte}"))),
+            };
+            let detail = dec.u32()?;
+            let msg_len = dec.u16()? as usize;
+            let message = String::from_utf8_lossy(dec.take(msg_len)?).into_owned();
+            Ok(Frame::Error(ErrorFrame { code, detail, message }))
+        }
+        6 => Ok(Frame::Shutdown),
+        other => Err(WireError::malformed(format!("unknown frame kind {other}"))),
+    }
+}
+
+/// Bounds-checked little-endian cursor over a frame body; every
+/// overrun is a typed error, never a panic.
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        match self.pos.checked_add(n) {
+            Some(end) if end <= self.buf.len() => {
+                let slice = &self.buf[self.pos..end];
+                self.pos = end;
+                Ok(slice)
+            }
+            _ => Err(WireError::malformed("frame body shorter than its declared contents")),
+        }
+    }
+
+    fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> Result<u16, WireError> {
+        let b = self.take(2)?;
+        Ok(u16::from_le_bytes([b[0], b[1]]))
+    }
+
+    fn u32(&mut self) -> Result<u32, WireError> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn u64(&mut self) -> Result<u64, WireError> {
+        let b = self.take(8)?;
+        let mut arr = [0u8; 8];
+        arr.copy_from_slice(b);
+        Ok(u64::from_le_bytes(arr))
+    }
+
+    fn f32(&mut self) -> Result<f32, WireError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn done(&self) -> Result<(), WireError> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            let msg = format!("{} trailing bytes after frame body", self.remaining());
+            Err(WireError::malformed(msg))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn round_trip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        read_frame(&mut Cursor::new(buf), DEFAULT_MAX_FRAME).unwrap()
+    }
+
+    #[test]
+    fn ping_pong_shutdown_round_trip() {
+        let ping = Frame::Ping { token: 0xDEAD_BEEF_1234_5678 };
+        assert_eq!(round_trip(&ping), ping);
+        let pong = Frame::Pong { token: 7, n: 1_000_000, dim: 128, k: 10 };
+        assert_eq!(round_trip(&pong), pong);
+        assert_eq!(round_trip(&Frame::Shutdown), Frame::Shutdown);
+    }
+
+    #[test]
+    fn query_round_trip_preserves_f32_bits() {
+        let weird = f32::from_bits(0x7FC0_1234); // NaN with a payload
+        let q = Frame::Query(QueryFrame {
+            k: 10,
+            route_top_m: 0,
+            count: 2,
+            dim: 3,
+            data: vec![1.0, -0.0, weird, f32::INFINITY, f32::MIN_POSITIVE, -2.5],
+        });
+        let Frame::Query(back) = round_trip(&q) else { panic!("wrong kind back") };
+        let Frame::Query(orig) = q else { unreachable!() };
+        let orig_bits: Vec<u32> = orig.data.iter().map(|x| x.to_bits()).collect();
+        let back_bits: Vec<u32> = back.data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(orig_bits, back_bits, "f32 bit patterns must survive the wire");
+    }
+
+    #[test]
+    fn results_and_error_round_trip() {
+        let r = Frame::Results(ResultsFrame {
+            k: 2,
+            results: vec![
+                vec![Neighbor::new(3, 0.25), Neighbor::new(9, 1.5)],
+                vec![Neighbor::new(1, 0.0)],
+            ],
+            windows: vec![
+                WindowInfo { requests: 4, unique: 3, coalesced: true },
+                WindowInfo { requests: 4, unique: 3, coalesced: false },
+            ],
+        });
+        assert_eq!(round_trip(&r), r);
+        let e = Frame::Error(ErrorFrame {
+            code: ErrorCode::MismatchedK,
+            detail: 10,
+            message: "requested k=5 but this server serves k=10".into(),
+        });
+        assert_eq!(round_trip(&e), e);
+    }
+
+    #[test]
+    fn empty_query_tile_round_trips() {
+        let q = Frame::Query(QueryFrame { k: 1, route_top_m: 0, count: 0, dim: 8, data: vec![] });
+        assert_eq!(round_trip(&q), q);
+    }
+
+    #[test]
+    fn corrupted_crc_is_in_sync_protocol_error() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Ping { token: 1 }).unwrap();
+        let last = buf.len() - 1;
+        buf[last] ^= 0xFF; // flip a crc byte
+        match read_frame(&mut Cursor::new(buf), DEFAULT_MAX_FRAME) {
+            Err(WireError::Protocol { code: ErrorCode::Malformed, desync: false, .. }) => {}
+            other => panic!("expected in-sync Malformed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn corrupted_body_is_caught_by_crc() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Ping { token: 42 }).unwrap();
+        buf[12] ^= 0x01; // flip a body byte, leaving the crc stale
+        assert!(matches!(
+            read_frame(&mut Cursor::new(buf), DEFAULT_MAX_FRAME),
+            Err(WireError::Protocol { code: ErrorCode::Malformed, desync: false, .. })
+        ));
+    }
+
+    #[test]
+    fn wrong_magic_and_version_are_typed() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Shutdown).unwrap();
+        let mut bad_magic = buf.clone();
+        bad_magic[4] = b'X'; // first magic byte (after the 4 B length prefix)
+        assert!(matches!(
+            read_frame(&mut Cursor::new(bad_magic), DEFAULT_MAX_FRAME),
+            Err(WireError::Protocol { code: ErrorCode::Malformed, desync: false, .. })
+        ));
+        let mut bad_version = buf;
+        bad_version[8] = 9; // version byte
+        match read_frame(&mut Cursor::new(bad_version), DEFAULT_MAX_FRAME) {
+            Err(WireError::Protocol { code: ErrorCode::UnsupportedVersion, detail: 9, .. }) => {}
+            other => panic!("expected UnsupportedVersion(9), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn oversized_and_undersized_lengths_desync() {
+        let huge = u32::MAX.to_le_bytes().to_vec();
+        match read_frame(&mut Cursor::new(huge), DEFAULT_MAX_FRAME) {
+            Err(WireError::Protocol { code: ErrorCode::Oversized, desync: true, .. }) => {}
+            other => panic!("expected desync Oversized, got {other:?}"),
+        }
+        let tiny = 3u32.to_le_bytes().to_vec();
+        assert!(matches!(
+            read_frame(&mut Cursor::new(tiny), DEFAULT_MAX_FRAME),
+            Err(WireError::Protocol { code: ErrorCode::Malformed, desync: true, .. })
+        ));
+    }
+
+    #[test]
+    fn truncation_and_clean_eof_are_distinguished() {
+        assert!(matches!(read_frame(&mut Cursor::new(Vec::new()), 1024), Err(WireError::Eof)));
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Ping { token: 3 }).unwrap();
+        buf.truncate(buf.len() - 5); // tear the frame mid-payload
+        assert!(matches!(read_frame(&mut Cursor::new(buf), 1024), Err(WireError::Io(_))));
+    }
+
+    #[test]
+    fn query_byte_count_mismatch_is_malformed() {
+        // hand-build a query frame claiming 2×3 floats but carrying 5
+        let mut payload = Vec::new();
+        payload.extend_from_slice(MAGIC);
+        payload.push(VERSION);
+        payload.push(3); // kind: Query
+        payload.extend_from_slice(&0u16.to_le_bytes());
+        for v in [10u32, 0, 2, 3] {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        for _ in 0..5 {
+            payload.extend_from_slice(&1.0f32.to_le_bytes());
+        }
+        let mut crc = Fnv::new();
+        crc.update(&payload);
+        payload.extend_from_slice(&crc.0.to_le_bytes());
+        let mut buf = (payload.len() as u32).to_le_bytes().to_vec();
+        buf.extend_from_slice(&payload);
+        assert!(matches!(
+            read_frame(&mut Cursor::new(buf), DEFAULT_MAX_FRAME),
+            Err(WireError::Protocol { code: ErrorCode::Malformed, desync: false, .. })
+        ));
+    }
+
+    #[test]
+    fn nonzero_flags_and_unknown_kind_are_malformed() {
+        // payload offsets: 4 = version, 5 = kind, 6..8 = flags
+        for (offset, value) in [(6usize, 1u8), (5, 200)] {
+            let mut payload = Vec::new();
+            payload.extend_from_slice(MAGIC);
+            payload.push(VERSION);
+            payload.push(6); // kind: Shutdown
+            payload.extend_from_slice(&0u16.to_le_bytes());
+            payload[offset] = value;
+            let mut crc = Fnv::new();
+            crc.update(&payload);
+            payload.extend_from_slice(&crc.0.to_le_bytes());
+            let mut framed = (payload.len() as u32).to_le_bytes().to_vec();
+            framed.extend_from_slice(&payload);
+            assert!(matches!(
+                read_frame(&mut Cursor::new(framed), DEFAULT_MAX_FRAME),
+                Err(WireError::Protocol { code: ErrorCode::Malformed, desync: false, .. })
+            ));
+        }
+    }
+
+    #[test]
+    fn error_codes_round_trip_bytes() {
+        for code in [
+            ErrorCode::Malformed,
+            ErrorCode::UnsupportedVersion,
+            ErrorCode::Oversized,
+            ErrorCode::MismatchedK,
+            ErrorCode::BadQuery,
+            ErrorCode::MismatchedRoute,
+            ErrorCode::ShuttingDown,
+        ] {
+            assert_eq!(ErrorCode::from_u8(code.as_u8()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_u8(0), None);
+        assert_eq!(ErrorCode::from_u8(99), None);
+    }
+}

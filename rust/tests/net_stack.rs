@@ -1,0 +1,362 @@
+//! Network-stack integration over loopback (`127.0.0.1:0`, ephemeral
+//! ports): the KNNQv1 bit-identity contract (wire answers == in-process
+//! `ServeFront` answers == direct `search_batch`), per-request `k`
+//! accept/reject, the cross-window answer cache's transparency, typed
+//! rejections for mismatched routing/dim, graceful shutdown, and a
+//! fuzz-style malformed-frame suite asserting the server keeps serving
+//! well-formed requests after every kind of wire abuse.
+
+use knng::api::{
+    FrontConfig, KMismatch, Neighbor, Searcher, ServeFront, ShardPool, ShardedSearcher,
+};
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::net::{wire, ErrorCode, Frame, NetClient, NetServer, ServerConfig, ServerHandle};
+use knng::nndescent::Params;
+use knng::search::SearchParams;
+use knng::testing::assert_neighbors_bitwise_eq;
+use std::io::Write;
+use std::net::TcpStream;
+use std::time::Duration;
+
+/// Rows `[from, from+count)` of `data` as a fresh matrix.
+fn slice_rows(data: &AlignedMatrix, from: usize, count: usize) -> AlignedMatrix {
+    let rows: Vec<f32> =
+        (from..from + count).flat_map(|i| data.row_logical(i).to_vec()).collect();
+    AlignedMatrix::from_rows(count, data.dim(), &rows)
+}
+
+/// A small-window front config so wire requests exercise real batching.
+fn front_cfg(k: usize, params: SearchParams) -> FrontConfig {
+    FrontConfig {
+        k,
+        params,
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        ..Default::default()
+    }
+}
+
+/// Open a raw connection for wire-level abuse.
+fn raw_conn(
+    addr: std::net::SocketAddr,
+    f: impl FnOnce(&mut TcpStream, &mut std::io::BufReader<TcpStream>),
+) {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+    let mut writer = stream;
+    f(&mut writer, &mut reader);
+}
+
+/// Pool + front + listener on an ephemeral loopback port.
+fn spawn_server(sharded: &ShardedSearcher, cfg: FrontConfig) -> ServerHandle {
+    let pool = ShardPool::new(sharded, 2).unwrap();
+    let front = ServeFront::spawn(pool, sharded.dim(), cfg).unwrap();
+    let server_cfg = ServerConfig {
+        workers: 2,
+        read_timeout: Duration::from_secs(5),
+        write_timeout: Duration::from_secs(5),
+        ..Default::default()
+    };
+    NetServer::bind("127.0.0.1:0", front, server_cfg).unwrap().spawn().unwrap()
+}
+
+#[test]
+fn loopback_is_bit_identical_to_in_process_front() {
+    // the acceptance criterion: the same query tile answered over
+    // loopback, through an in-process front, and by direct
+    // search_batch must be bit-identical — the wire adds transport,
+    // never computation
+    let (all, _) = SynthClustered::new(700, 8, 4, 91).generate_labeled();
+    let corpus = slice_rows(&all, 0, 600);
+    let queries = slice_rows(&all, 600, 50);
+    let params = Params::default().with_k(10).with_seed(91).with_reorder(true);
+    let k = 6;
+    let sp = SearchParams::default();
+    let sharded = ShardedSearcher::build(&corpus, 4, &params).unwrap();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+
+    let pool = ShardPool::new(&sharded, 2).unwrap();
+    let front = ServeFront::spawn(pool, corpus.dim(), front_cfg(k, sp)).unwrap();
+    let tickets: Vec<_> = (0..queries.n())
+        .map(|qi| front.submit(queries.row_logical(qi).to_vec()).unwrap())
+        .collect();
+    let in_process: Vec<Vec<Neighbor>> =
+        tickets.into_iter().map(|t| t.wait().unwrap().neighbors).collect();
+    front.shutdown();
+    assert_neighbors_bitwise_eq(&expect, &in_process, "in-process front vs direct");
+
+    let handle = spawn_server(&sharded, front_cfg(k, sp));
+    let mut client = NetClient::connect(handle.addr()).unwrap();
+    let info = client.ping().unwrap();
+    assert_eq!(info.n, 600);
+    assert_eq!(info.dim, 8);
+    assert_eq!(info.k, k as u32);
+    let (wire_results, windows) = client.query_batch(&queries, k, None).unwrap();
+    assert_eq!(windows.len(), queries.n());
+    for w in &windows {
+        assert!(w.unique >= 1 && w.unique <= w.requests);
+    }
+    assert_neighbors_bitwise_eq(&expect, &wire_results, "loopback vs direct");
+    assert_neighbors_bitwise_eq(&in_process, &wire_results, "loopback vs in-process front");
+
+    drop(client);
+    let (net, totals) = handle.stop().unwrap();
+    assert!(net.connections >= 1);
+    assert_eq!(net.queries, queries.n() as u64);
+    assert_eq!(net.protocol_errors, 0);
+    assert_eq!(totals.queries, queries.n() as u64);
+}
+
+#[test]
+fn wire_rejects_mismatched_k_route_and_dim_with_typed_errors() {
+    let (all, _) = SynthClustered::new(500, 8, 4, 93).generate_labeled();
+    let corpus = slice_rows(&all, 0, 440);
+    let queries = slice_rows(&all, 440, 20);
+    let params = Params::default().with_k(8).with_seed(93);
+    let k = 6;
+    let sp = SearchParams::default();
+    let sharded = ShardedSearcher::build(&corpus, 2, &params).unwrap();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+
+    let handle = spawn_server(&sharded, front_cfg(k, sp));
+    let mut client = NetClient::connect(handle.addr()).unwrap();
+
+    // reject: per-request k that the front does not serve
+    let err = client.query_batch(&queries, 3, None).unwrap_err();
+    let rej = err.downcast_ref::<knng::net::ServerRejection>().expect("typed rejection");
+    assert_eq!(rej.code, ErrorCode::MismatchedK);
+    assert_eq!(rej.detail, k as u32, "detail carries the served k");
+
+    // reject: routing the server was not configured for
+    let err = client.query_batch(&queries, k, Some(2)).unwrap_err();
+    let rej = err.downcast_ref::<knng::net::ServerRejection>().unwrap();
+    assert_eq!(rej.code, ErrorCode::MismatchedRoute);
+    assert_eq!(rej.detail, 0, "detail carries the configured fan-out (0 = full)");
+
+    // reject: wrong dimensionality
+    let skinny = AlignedMatrix::from_rows(2, 3, &[0.0; 6]);
+    let err = client.query_batch(&skinny, k, None).unwrap_err();
+    let rej = err.downcast_ref::<knng::net::ServerRejection>().unwrap();
+    assert_eq!(rej.code, ErrorCode::BadQuery);
+    assert_eq!(rej.detail, 8, "detail carries the served dim");
+
+    // accept: the same connection still serves after three rejections
+    let (results, _) = client.query_batch(&queries, k, None).unwrap();
+    assert_neighbors_bitwise_eq(&expect, &results, "accept path after rejects");
+
+    drop(client);
+    let (net, _) = handle.stop().unwrap();
+    assert_eq!(net.protocol_errors, 0, "typed rejections are not protocol errors");
+}
+
+#[test]
+fn submit_with_k_accepts_matching_and_rejects_mismatched() {
+    // the in-process half of the per-request-k contract: mismatched k
+    // is a typed rejection (windows share one search_batch call, so
+    // the front never re-buckets by k)
+    let (all, _) = SynthClustered::new(220, 8, 4, 95).generate_labeled();
+    let corpus = slice_rows(&all, 0, 200);
+    let sharded =
+        ShardedSearcher::build(&corpus, 2, &Params::default().with_k(8).with_seed(95)).unwrap();
+    let pool = ShardPool::new(&sharded, 2).unwrap();
+    let cfg = FrontConfig { k: 5, ..Default::default() };
+    let front = ServeFront::spawn(pool, corpus.dim(), cfg).unwrap();
+    assert_eq!(front.serving_k(), 5);
+    assert_eq!(front.dim(), corpus.dim());
+    assert_eq!(front.corpus_len(), 200);
+    assert_eq!(front.route_top_m(), None);
+
+    let row = all.row_logical(210).to_vec();
+    let err = front.submit_with_k(row.clone(), 9).unwrap_err();
+    let mismatch = err.downcast_ref::<KMismatch>().expect("typed KMismatch");
+    assert_eq!(*mismatch, KMismatch { requested: 9, serving: 5 });
+
+    let ticket = front.submit_with_k(row, 5).unwrap();
+    assert_eq!(ticket.wait().unwrap().neighbors.len(), 5);
+    let totals = front.shutdown();
+    assert_eq!(totals.queries, 1, "rejected submissions never reach a window");
+}
+
+#[test]
+fn answer_cache_is_bit_transparent_and_counts_hits() {
+    // cache-on vs cache-off answers must be bit-identical (the cache
+    // stores final Neighbors only); repeats hit without touching the
+    // searcher
+    let (all, _) = SynthClustered::new(700, 8, 4, 97).generate_labeled();
+    let corpus = slice_rows(&all, 0, 600);
+    let queries = slice_rows(&all, 600, 40);
+    let params = Params::default().with_k(10).with_seed(97);
+    let k = 5;
+    let sp = SearchParams::default();
+    let sharded = ShardedSearcher::build(&corpus, 2, &params).unwrap();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+
+    for cache in [0usize, 64] {
+        let pool = ShardPool::new(&sharded, 2).unwrap();
+        let cfg = FrontConfig { answer_cache: cache, ..front_cfg(k, sp) };
+        let front = ServeFront::spawn(pool, corpus.dim(), cfg).unwrap();
+        for round in 0..2 {
+            let tickets: Vec<_> = (0..queries.n())
+                .map(|qi| front.submit(queries.row_logical(qi).to_vec()).unwrap())
+                .collect();
+            let answers: Vec<Vec<Neighbor>> =
+                tickets.into_iter().map(|t| t.wait().unwrap().neighbors).collect();
+            assert_neighbors_bitwise_eq(
+                &expect,
+                &answers,
+                &format!("cache={cache} round={round}"),
+            );
+        }
+        let totals = front.shutdown();
+        assert_eq!(totals.queries, 2 * queries.n() as u64);
+        if cache == 0 {
+            assert_eq!(totals.cache_hits, 0, "disabled cache never hits");
+        } else {
+            // round 1 populates (all 40 distinct queries fit in 64
+            // slots), round 2 answers every unique from the cache
+            assert_eq!(totals.cache_hits, queries.n() as u64);
+        }
+    }
+}
+
+#[test]
+fn shutdown_frame_acks_drains_and_stops() {
+    let (all, _) = SynthClustered::new(400, 8, 4, 99).generate_labeled();
+    let corpus = slice_rows(&all, 0, 350);
+    let queries = slice_rows(&all, 350, 10);
+    let params = Params::default().with_k(8).with_seed(99);
+    let k = 4;
+    let sp = SearchParams::default();
+    let sharded = ShardedSearcher::build(&corpus, 2, &params).unwrap();
+
+    let handle = spawn_server(&sharded, front_cfg(k, sp));
+    let addr = handle.addr();
+    let mut client = NetClient::connect(addr).unwrap();
+    let (results, _) = client.query_batch(&queries, k, None).unwrap();
+    assert_eq!(results.len(), queries.n());
+    client.shutdown_server().unwrap(); // acked before the drain
+
+    let (net, totals) = handle.join().unwrap();
+    assert!(net.frames >= 2, "query + shutdown both counted");
+    assert_eq!(totals.queries, queries.n() as u64, "in-flight windows drained");
+
+    // the listener is gone: new connections are refused, or die on
+    // their first read if the OS raced one into the backlog
+    match TcpStream::connect(addr) {
+        Err(_) => {}
+        Ok(stream) => {
+            stream.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+            let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+            let mut writer = stream;
+            let mut buf = Vec::new();
+            wire::write_frame(&mut buf, &Frame::Ping { token: 1 }).unwrap();
+            let _ = writer.write_all(&buf);
+            assert!(
+                wire::read_frame(&mut reader, wire::DEFAULT_MAX_FRAME).is_err(),
+                "nothing may answer after shutdown"
+            );
+        }
+    }
+}
+
+#[test]
+fn malformed_frames_get_typed_errors_and_never_wedge_the_server() {
+    // the fuzz-style robustness gate: truncated frames, oversized
+    // length prefixes, wrong magic/version, raw garbage, and mid-frame
+    // disconnects — after all of it the server must still answer a
+    // fresh well-formed request (no panic, no wedge)
+    let (all, _) = SynthClustered::new(500, 8, 4, 101).generate_labeled();
+    let corpus = slice_rows(&all, 0, 450);
+    let queries = slice_rows(&all, 450, 10);
+    let params = Params::default().with_k(8).with_seed(101);
+    let k = 4;
+    let sp = SearchParams::default();
+    let sharded = ShardedSearcher::build(&corpus, 2, &params).unwrap();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+
+    let handle = spawn_server(&sharded, front_cfg(k, sp));
+    let addr = handle.addr();
+
+    // 1) wrong magic: typed Malformed reply, connection keeps serving
+    raw_conn(addr, |writer, reader| {
+        let mut buf = Vec::new();
+        wire::write_frame(&mut buf, &Frame::Ping { token: 5 }).unwrap();
+        buf[4] = b'X'; // first magic byte (after the 4 B length prefix)
+        writer.write_all(&buf).unwrap();
+        let reply = wire::read_frame(reader, wire::DEFAULT_MAX_FRAME).unwrap();
+        let Frame::Error(e) = reply else { panic!("expected an error frame, got {reply:?}") };
+        assert_eq!(e.code, ErrorCode::Malformed);
+        // same connection, well-formed follow-up: still answered
+        let mut ok = Vec::new();
+        wire::write_frame(&mut ok, &Frame::Ping { token: 6 }).unwrap();
+        writer.write_all(&ok).unwrap();
+        let reply = wire::read_frame(reader, wire::DEFAULT_MAX_FRAME).unwrap();
+        assert!(matches!(reply, Frame::Pong { token: 6, .. }), "got {reply:?}");
+    });
+
+    // 2) wrong version: typed UnsupportedVersion with the offered
+    //    version as detail, connection keeps serving
+    raw_conn(addr, |writer, reader| {
+        let mut buf = Vec::new();
+        wire::write_frame(&mut buf, &Frame::Ping { token: 7 }).unwrap();
+        buf[8] = 9; // version byte
+        writer.write_all(&buf).unwrap();
+        let reply = wire::read_frame(reader, wire::DEFAULT_MAX_FRAME).unwrap();
+        let Frame::Error(e) = reply else { panic!("expected an error frame, got {reply:?}") };
+        assert_eq!(e.code, ErrorCode::UnsupportedVersion);
+        assert_eq!(e.detail, 9);
+        let mut ok = Vec::new();
+        wire::write_frame(&mut ok, &Frame::Ping { token: 8 }).unwrap();
+        writer.write_all(&ok).unwrap();
+        let reply = wire::read_frame(reader, wire::DEFAULT_MAX_FRAME).unwrap();
+        assert!(matches!(reply, Frame::Pong { token: 8, .. }), "got {reply:?}");
+    });
+
+    // 3) oversized length prefix: typed Oversized, then the server
+    //    closes (the stream can no longer be framed)
+    raw_conn(addr, |writer, reader| {
+        writer.write_all(&u32::MAX.to_le_bytes()).unwrap();
+        let reply = wire::read_frame(reader, wire::DEFAULT_MAX_FRAME).unwrap();
+        let Frame::Error(e) = reply else { panic!("expected an error frame, got {reply:?}") };
+        assert_eq!(e.code, ErrorCode::Oversized);
+        assert!(
+            wire::read_frame(reader, wire::DEFAULT_MAX_FRAME).is_err(),
+            "a desynced connection must be closed"
+        );
+    });
+
+    // 4) undersized length prefix: typed Malformed, then closed
+    raw_conn(addr, |writer, reader| {
+        writer.write_all(&3u32.to_le_bytes()).unwrap();
+        let reply = wire::read_frame(reader, wire::DEFAULT_MAX_FRAME).unwrap();
+        let Frame::Error(e) = reply else { panic!("expected an error frame, got {reply:?}") };
+        assert_eq!(e.code, ErrorCode::Malformed);
+        assert!(wire::read_frame(reader, wire::DEFAULT_MAX_FRAME).is_err());
+    });
+
+    // 5) mid-frame disconnect: promise 64 payload bytes, send 10, hang up
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(&64u32.to_le_bytes()).unwrap();
+        stream.write_all(&[0u8; 10]).unwrap();
+        drop(stream);
+    }
+
+    // 6) raw ASCII garbage (reads as a huge length prefix), then hang up
+    {
+        let mut stream = TcpStream::connect(addr).unwrap();
+        stream.write_all(b"GET / HTTP/1.1\r\n\r\n").unwrap();
+        drop(stream);
+    }
+
+    // after all the abuse: a fresh well-formed client gets the exact
+    // bit-identical answers
+    let mut client = NetClient::connect(addr).unwrap();
+    let (results, _) = client.query_batch(&queries, k, None).unwrap();
+    assert_neighbors_bitwise_eq(&expect, &results, "served after wire abuse");
+    drop(client);
+    let (net, _) = handle.stop().unwrap();
+    assert!(net.protocol_errors >= 4, "each typed rejection counted");
+}
