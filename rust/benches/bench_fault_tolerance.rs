@@ -1,0 +1,218 @@
+//! Fault-tolerance cost — what degraded serving does to latency and
+//! answer quality. Three modes over the same S=4 `ShardPool`, one
+//! query per request:
+//!
+//! * **healthy** — all shards answering, no deadline. Asserted in-bench
+//!   to be bit-identical to the pre-pool inline fan-out
+//!   (`ShardedSearcher::search_batch`), so the fault-tolerance
+//!   machinery is provably free of behavior drift on the happy path.
+//! * **one dead shard** — worker 0 killed and buried (zero respawn
+//!   budget); the pool serves survivors. Asserted equal to an honest
+//!   3-shard fan-out; recall is measured against the healthy answers.
+//! * **deadline-capped** — healthy pool, but every query carries a
+//!   budget derived from the healthy p50, so a tail of batches drops
+//!   late shards. Reports the degraded fraction and resulting recall.
+//!
+//! Run: `cargo bench --bench bench_fault_tolerance`
+
+use knng::api::{Neighbor, PoolConfig, Searcher, ShardPool, ShardedSearcher};
+use knng::bench::{full_scale, measure_once, write_bench_json, Json, Table};
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::distance::dispatch;
+use knng::nndescent::Params;
+use knng::search::SearchParams;
+use knng::testing::faults::{self, site, FaultPlan};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// Percentile of an ascending-sorted slice (nearest-rank).
+fn pctl(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let idx = ((sorted.len() - 1) as f64 * p).round() as usize;
+    sorted[idx]
+}
+
+/// Fraction of `truth`'s ids that `got` kept, averaged over queries.
+fn recall_vs(truth: &[Vec<Neighbor>], got: &[Vec<Neighbor>]) -> f64 {
+    let mut acc = 0.0;
+    for (t, g) in truth.iter().zip(got) {
+        if t.is_empty() {
+            acc += 1.0;
+            continue;
+        }
+        let hits = t.iter().filter(|n| g.iter().any(|m| m.id == n.id)).count();
+        acc += hits as f64 / t.len() as f64;
+    }
+    acc / truth.len().max(1) as f64
+}
+
+/// Drive every query through the pool one tile at a time, recording
+/// per-query latency, answers, and how many came back degraded.
+fn run_mode(
+    pool: &ShardPool,
+    qmat: &AlignedMatrix,
+    k: usize,
+    sp: &SearchParams,
+    budget: Option<Duration>,
+) -> (Vec<Vec<Neighbor>>, Vec<f64>, usize, f64) {
+    let dim = qmat.dim();
+    let mut answers = Vec::with_capacity(qmat.n());
+    let mut lats = Vec::with_capacity(qmat.n());
+    let mut degraded = 0usize;
+    let t0 = Instant::now();
+    for qi in 0..qmat.n() {
+        let tile = Arc::new(AlignedMatrix::from_rows(1, dim, qmat.row_logical(qi)));
+        let q0 = Instant::now();
+        let deadline = budget.map(|b| Instant::now() + b);
+        let (mut res, _, degr) = pool.search_batch_deadline_owned(tile, k, sp, None, deadline);
+        lats.push(q0.elapsed().as_secs_f64() * 1e6);
+        if degr.is_some() {
+            degraded += 1;
+        }
+        answers.push(res.pop().expect("one tile row, one answer"));
+    }
+    let qps = qmat.n() as f64 / t0.elapsed().as_secs_f64();
+    lats.sort_by(|a, b| a.total_cmp(b));
+    (answers, lats, degraded, qps)
+}
+
+fn main() {
+    println!("kernel dispatch: {}", dispatch::describe());
+    let scale = if full_scale() { 4 } else { 1 };
+    let n = 8192 * scale;
+    let n_queries = 512 * scale;
+    let (dim, k) = (32, 10);
+    println!("fault tolerance — corpus n={n} d={dim}, {n_queries} queries, k={k}, S=4 pool");
+
+    let (all, _) = SynthClustered::new(n + n_queries, dim, 16, 0xFA17).generate_labeled();
+    let corpus = {
+        let rows: Vec<f32> = (0..n).flat_map(|i| all.row_logical(i).to_vec()).collect();
+        AlignedMatrix::from_rows(n, dim, &rows)
+    };
+    let queries_flat: Vec<f32> =
+        (n..n + n_queries).flat_map(|i| all.row_logical(i).to_vec()).collect();
+    let qmat = AlignedMatrix::from_rows(n_queries, dim, &queries_flat);
+
+    let params = Params::default().with_k(16).with_seed(7).with_reorder(true);
+    let (sharded, build_secs) =
+        measure_once(|| ShardedSearcher::build(&corpus, 4, &params).unwrap());
+    println!("S=4 sharded searcher built in {build_secs:.2}s");
+    let sp = SearchParams::default();
+    // the pre-pool stack's answers: truth for the bit-identity gate and
+    // the recall column
+    let (expect, _) = sharded.search_batch(&qmat, k, &sp);
+
+    let mut table = Table::new(
+        "fault_tolerance",
+        &["mode", "qps", "p50 µs", "p99 µs", "recall", "degraded"],
+    );
+    let mut json_rows = Vec::new();
+    let mut emit = |table: &mut Table,
+                    mode: &str,
+                    lats: &[f64],
+                    qps: f64,
+                    recall: f64,
+                    degraded: usize| {
+        let (p50, p99) = (pctl(lats, 0.50), pctl(lats, 0.99));
+        table.row(&[
+            mode.into(),
+            format!("{qps:.0}"),
+            format!("{p50:.0}"),
+            format!("{p99:.0}"),
+            format!("{recall:.4}"),
+            format!("{degraded}/{n_queries}"),
+        ]);
+        json_rows.push(Json::obj(vec![
+            ("mode", Json::s(mode)),
+            ("qps", Json::Num(qps)),
+            ("p50_us", Json::Num(p50)),
+            ("p99_us", Json::Num(p99)),
+            ("recall_vs_healthy", Json::Num(recall)),
+            ("degraded_queries", Json::Int(degraded as u64)),
+        ]));
+        p50
+    };
+
+    // ---- healthy: the gate + the baseline ----------------------------
+    let healthy_p50;
+    {
+        let pool = ShardPool::new(&sharded, 4).unwrap();
+        let (answers, lats, degraded, qps) = run_mode(&pool, &qmat, k, &sp, None);
+        // the acceptance gate: the fault-tolerant pool on the happy path
+        // is bit-identical to the pre-PR inline fan-out
+        knng::testing::assert_neighbors_bitwise_eq(
+            &expect,
+            &answers,
+            "healthy pool vs inline fan-out",
+        );
+        assert_eq!(degraded, 0, "a healthy pool must not degrade");
+        println!("bit-identity gate: healthy pool answers == inline search_batch");
+        healthy_p50 = emit(&mut table, "healthy", &lats, qps, 1.0, degraded);
+    }
+
+    // ---- one dead shard: survivors keep serving ----------------------
+    {
+        let pool = ShardPool::with_config(
+            &sharded,
+            PoolConfig { threads: 4, respawn_budget: 0 },
+        )
+        .unwrap();
+        // kill worker 0 on its first job and bury shard 0; two warm-up
+        // batches make the burial deterministic before timing starts
+        faults::install(FaultPlan::new().die_always(site::WORKER_JOB, 0));
+        for _ in 0..2 {
+            let tile = Arc::new(AlignedMatrix::from_rows(1, dim, qmat.row_logical(0)));
+            let _ = pool.search_batch_deadline_owned(tile, k, &sp, None, None);
+        }
+        faults::clear();
+        let stats = pool.stats();
+        assert_eq!(stats.dead_shards(), vec![0], "shard 0 must be buried: {stats:?}");
+
+        let (answers, lats, degraded, qps) = run_mode(&pool, &qmat, k, &sp, None);
+        assert_eq!(degraded, n_queries, "every query must be tagged degraded");
+        // degraded answers are the honest survivor fan-out, bit for bit
+        let (honest, _) = sharded.search_batch_subset(&qmat, k, &sp, &[1, 2, 3]);
+        knng::testing::assert_neighbors_bitwise_eq(
+            &honest,
+            &answers,
+            "dead-shard pool vs honest 3-shard fan-out",
+        );
+        let recall = recall_vs(&expect, &answers);
+        emit(&mut table, "one_dead_shard", &lats, qps, recall, degraded);
+    }
+
+    // ---- deadline-capped: healthy pool under a tight budget ----------
+    {
+        let pool = ShardPool::new(&sharded, 4).unwrap();
+        // a budget below the healthy median forces a real miss tail
+        // while letting most shards answer; floor keeps it meaningful
+        // on very fast machines
+        let budget = Duration::from_micros((healthy_p50 * 0.75).max(50.0) as u64);
+        println!("deadline budget: {budget:?} (healthy p50 was {healthy_p50:.0} µs)");
+        let (answers, lats, degraded, qps) = run_mode(&pool, &qmat, k, &sp, Some(budget));
+        let recall = recall_vs(&expect, &answers);
+        emit(&mut table, "deadline_capped", &lats, qps, recall, degraded);
+        let misses = pool.stats().deadline_misses;
+        println!("deadline-capped: {degraded}/{n_queries} degraded, {misses} shard misses");
+    }
+    table.finish();
+
+    write_bench_json(
+        "BENCH_fault.json",
+        &Json::obj(vec![
+            ("bench", Json::s("fault_tolerance")),
+            ("dataset", Json::s("clustered")),
+            ("n", Json::Int(n as u64)),
+            ("dim", Json::Int(dim as u64)),
+            ("k", Json::Int(k as u64)),
+            ("queries", Json::Int(n_queries as u64)),
+            ("shards", Json::Int(4)),
+            ("healthy_bit_identical_to_inline", Json::Bool(true)),
+            ("detected_kernel", Json::s(dispatch::detect().name())),
+            ("rows", Json::Arr(json_rows)),
+        ]),
+    );
+}

@@ -28,9 +28,26 @@
 //! with 63 strangers, or was deduplicated against an identical twin.
 //! That invariant is what makes micro-batching transparent, and it is
 //! pinned by the serve-stack integration tests.
+//!
+//! ## Deadlines and degradation
+//!
+//! [`submit_with_deadline`](ServeFront::submit_with_deadline) attaches
+//! a latency budget to a query. The dispatcher forwards the **earliest**
+//! deadline among a window's members into the searcher
+//! ([`Searcher::search_batch_deadline_owned`]); a pool underneath drops
+//! shards that miss it and the answer comes back tagged with a typed
+//! [`Degradation`] shared by every member of the window (coalescing
+//! means one execution serves them all — a deadline-free request that
+//! rides with a tight-deadline one can therefore see a degraded
+//! answer; segregate traffic onto separate fronts if that matters).
+//! Fronts that never see a deadline never pass one down, so their
+//! behavior — and their bits — are unchanged. Degraded answers are
+//! **never** inserted into the answer cache: a partial answer must not
+//! be replayed after the pool recovers.
 
 use super::ids::Neighbor;
-use super::searcher::Searcher;
+use super::searcher::{Degradation, Searcher};
+use super::serve::{HealthWatch, PoolStats};
 use crate::dataset::AlignedMatrix;
 use crate::search::SearchParams;
 use std::collections::hash_map::Entry;
@@ -113,6 +130,10 @@ impl std::error::Error for KMismatch {}
 /// One submitted query awaiting dispatch.
 struct Request {
     query: Vec<f32>,
+    /// Absolute latency deadline, fixed at submission time (`None` =
+    /// unbounded). The window it lands in honors the earliest deadline
+    /// among its members.
+    deadline: Option<Instant>,
     reply: mpsc::Sender<Served>,
 }
 
@@ -123,6 +144,11 @@ pub struct Served {
     pub neighbors: Vec<Neighbor>,
     /// Shape of the window this query rode in.
     pub window: WindowInfo,
+    /// `Some` when the window's execution dropped shards (deadline
+    /// missed, worker dead): the neighbors are the honest merge over
+    /// the shards that did answer. Shared by every member of the
+    /// window, since one execution served them all.
+    pub degradation: Option<Degradation>,
 }
 
 /// Diagnostics about one batching window, from a caller's perspective.
@@ -156,6 +182,10 @@ pub struct FrontStats {
     /// cache ([`FrontConfig::answer_cache`]) without touching the
     /// searcher. Always zero with the cache disabled.
     pub cache_hits: u64,
+    /// Windows whose execution came back degraded (shards dropped by a
+    /// deadline or a dead worker). Always zero for deadline-free
+    /// traffic over a healthy searcher.
+    pub degraded: u64,
 }
 
 #[derive(Default)]
@@ -165,6 +195,7 @@ struct Counters {
     coalesced: AtomicU64,
     shard_visits: AtomicU64,
     cache_hits: AtomicU64,
+    degraded: AtomicU64,
 }
 
 /// Handle for one submitted query; [`wait`](QueryTicket::wait) blocks
@@ -192,6 +223,9 @@ pub struct ServeFront {
     route_top_m: Option<usize>,
     corpus_len: usize,
     counters: Arc<Counters>,
+    /// Captured from the searcher before it moved onto the dispatcher
+    /// thread; `None` over searchers without supervised workers.
+    health: Option<HealthWatch>,
 }
 
 impl ServeFront {
@@ -209,27 +243,63 @@ impl ServeFront {
         let counters = Arc::new(Counters::default());
         let thread_counters = Arc::clone(&counters);
         let (k, route_top_m, corpus_len) = (cfg.k, cfg.route_top_m, searcher.len());
+        let health = searcher.health_watch();
         let handle = std::thread::Builder::new()
             .name("knng-serve-front".into())
             .spawn(move || dispatch_loop(searcher, dim, cfg, rx, thread_counters))?;
-        Ok(Self { tx: Some(tx), handle: Some(handle), dim, k, route_top_m, corpus_len, counters })
+        Ok(Self {
+            tx: Some(tx),
+            handle: Some(handle),
+            dim,
+            k,
+            route_top_m,
+            corpus_len,
+            counters,
+            health,
+        })
     }
 
     /// Enqueue one query (length must equal the front's logical `dim`).
     /// Blocks while the submission queue is full; errors if the query
     /// has the wrong arity or the dispatcher is gone.
     pub fn submit(&self, query: Vec<f32>) -> crate::Result<QueryTicket> {
+        self.submit_opts(query, None)
+    }
+
+    /// Enqueue one query with a latency budget. The deadline is fixed
+    /// *now* (submission time), so queue wait and window wait spend it
+    /// too — it is an end-to-end budget, not a search-only one. If the
+    /// budget expires before every shard answers, the reply carries the
+    /// honest partial merge plus a typed [`Degradation`]; over a
+    /// searcher that ignores deadlines (anything but a pool) the budget
+    /// is a no-op.
+    pub fn submit_with_deadline(
+        &self,
+        query: Vec<f32>,
+        budget: Duration,
+    ) -> crate::Result<QueryTicket> {
+        self.submit_opts(query, Some(Instant::now() + budget))
+    }
+
+    fn submit_opts(
+        &self,
+        query: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> crate::Result<QueryTicket> {
         anyhow::ensure!(
             query.len() == self.dim,
             "query length {} does not match front dim {}",
             query.len(),
             self.dim
         );
+        // typed check instead of unwrapping the sender: `close` only
+        // runs from shutdown/Drop, but a submit racing a shutdown
+        // should degrade into an error, not a panic
+        let Some(tx) = self.tx.as_ref() else {
+            anyhow::bail!("serve front is shut down");
+        };
         let (reply, rx) = mpsc::channel();
-        self.tx
-            .as_ref()
-            .expect("sender present until shutdown")
-            .send(Request { query, reply })
+        tx.send(Request { query, deadline, reply })
             .map_err(|_| anyhow::anyhow!("serve front dispatcher is gone"))?;
         Ok(QueryTicket { rx })
     }
@@ -246,6 +316,21 @@ impl ServeFront {
             return Err(anyhow::Error::new(KMismatch { requested: k, serving: self.k }));
         }
         self.submit(query)
+    }
+
+    /// [`submit_with_k`](Self::submit_with_k) with a latency budget —
+    /// what the `KNNQv1` server calls for frames that carry both their
+    /// own `k` and a `deadline_us`.
+    pub fn submit_with_k_deadline(
+        &self,
+        query: Vec<f32>,
+        k: usize,
+        budget: Duration,
+    ) -> crate::Result<QueryTicket> {
+        if k != self.k {
+            return Err(anyhow::Error::new(KMismatch { requested: k, serving: self.k }));
+        }
+        self.submit_with_deadline(query, budget)
     }
 
     /// The fixed `k` this front serves ([`FrontConfig::k`]).
@@ -277,7 +362,16 @@ impl ServeFront {
             coalesced: self.counters.coalesced.load(Ordering::Relaxed),
             shard_visits: self.counters.shard_visits.load(Ordering::Relaxed),
             cache_hits: self.counters.cache_hits.load(Ordering::Relaxed),
+            degraded: self.counters.degraded.load(Ordering::Relaxed),
         }
+    }
+
+    /// Live health of the searcher underneath (per-shard liveness and
+    /// fault counters), when it exposes any — a
+    /// [`ShardPool`](super::ShardPool) does; plain searchers return
+    /// `None`. This is what the `KNNQv1` health frame reports.
+    pub fn health(&self) -> Option<PoolStats> {
+        self.health.as_ref().map(HealthWatch::snapshot)
     }
 
     /// Stop accepting queries, drain what is queued, join the
@@ -438,7 +532,13 @@ fn serve_window<S: Searcher>(
     }
     let hits = (plan.unique.len() - misses.len()) as u64;
 
+    // the window honors the *earliest* deadline among its members; a
+    // window with no deadlines forwards None, which is the historical
+    // (bit-identical) path through the searcher
+    let deadline = window.iter().filter_map(|r| r.deadline).min();
+
     let mut shard_visits = 0u64;
+    let mut degradation: Option<Degradation> = None;
     if !misses.is_empty() {
         let flat: Vec<f32> = misses
             .iter()
@@ -449,18 +549,31 @@ fn serve_window<S: Searcher>(
         // share it with its workers directly instead of re-cloning it
         // 'static.
         let tile = Arc::new(AlignedMatrix::from_rows(misses.len(), dim, &flat));
-        let (results, stats) = match cfg.route_top_m {
-            Some(m) => searcher.search_batch_routed_owned(tile, cfg.k, &cfg.params, m),
-            None => searcher.search_batch_owned(tile, cfg.k, &cfg.params),
-        };
+        let (results, stats, degr) = searcher.search_batch_deadline_owned(
+            tile,
+            cfg.k,
+            &cfg.params,
+            cfg.route_top_m,
+            deadline,
+        );
         shard_visits = stats.shard_visits;
         for (&u, neighbors) in misses.iter().zip(results) {
-            cache.insert(rows[plan.unique[u]], &neighbors);
+            if degr.is_none() {
+                // degraded answers are never cached: a partial merge
+                // must not be replayed after the pool recovers
+                cache.insert(rows[plan.unique[u]], &neighbors);
+            }
             answers[u] = Some(neighbors);
         }
+        degradation = degr;
     }
-    let answers: Vec<Vec<Neighbor>> =
-        answers.into_iter().map(|a| a.expect("every unique answered")).collect();
+    let answers: Vec<Vec<Neighbor>> = answers
+        .into_iter()
+        // infallible by construction: every unique index went into
+        // either the cache-hit arm or `misses`, and the searcher
+        // returns one (possibly empty) list per tile row
+        .map(|a| a.expect("every unique answered"))
+        .collect();
 
     let mut fanout = vec![0usize; plan.unique.len()];
     for &u in &plan.assign {
@@ -473,6 +586,9 @@ fn serve_window<S: Searcher>(
         .fetch_add((window.len() - plan.unique.len()) as u64, Ordering::Relaxed);
     counters.shard_visits.fetch_add(shard_visits, Ordering::Relaxed);
     counters.cache_hits.fetch_add(hits, Ordering::Relaxed);
+    if degradation.is_some() {
+        counters.degraded.fetch_add(1, Ordering::Relaxed);
+    }
 
     let info_base = (window.len(), plan.unique.len());
     for (req, u) in window.into_iter().zip(plan.assign) {
@@ -484,6 +600,7 @@ fn serve_window<S: Searcher>(
                 unique: info_base.1,
                 coalesced: fanout[u] > 1,
             },
+            degradation: degradation.clone(),
         });
     }
 }

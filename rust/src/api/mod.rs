@@ -78,8 +78,8 @@ pub use front::{FrontConfig, FrontStats, KMismatch, QueryTicket, Served, ServeFr
 pub use ids::{Neighbor, OriginalId, WorkingId};
 pub use index::{BuildTelemetry, Index};
 pub use partition::{Contiguous, KMeans, PartitionPlan, Partitioner, ShardPlan};
-pub use searcher::Searcher;
-pub use serve::ShardPool;
+pub use searcher::{DegradeCause, Degradation, Searcher};
+pub use serve::{HealthWatch, PoolConfig, PoolStats, ShardPool, ShardState};
 pub use sharded::ShardedSearcher;
 
 // The observer types live beside the driver that emits them

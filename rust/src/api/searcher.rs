@@ -15,6 +15,82 @@
 use super::ids::{Neighbor, OriginalId};
 use crate::dataset::AlignedMatrix;
 use crate::search::{BatchStats, GraphIndex, QueryStats, SearchParams};
+use std::time::Instant;
+
+/// Why a degraded answer is missing shards, ordered by severity
+/// (ascending): a deadline miss is transient by nature, a lost reply
+/// or contained panic is a one-off fault, a dead shard is permanent
+/// until the pool is rebuilt. When several causes apply to one answer,
+/// the record carries the most severe.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DegradeCause {
+    /// The deadline budget expired before every shard replied; the
+    /// missing shards were alive but late.
+    DeadlineExpired,
+    /// A shard's reply was lost in flight (its worker stayed alive).
+    ReplyLost,
+    /// A shard's search panicked; the worker contained it and answered
+    /// with a typed failure instead of results.
+    ShardPanicked,
+    /// The shard's worker died and its respawn budget is exhausted —
+    /// the shard is permanently out of the fan-out.
+    ShardDead,
+}
+
+impl DegradeCause {
+    /// Wire byte for this cause (`KNNQv1` degraded-results frames).
+    pub fn as_u8(self) -> u8 {
+        match self {
+            Self::DeadlineExpired => 1,
+            Self::ReplyLost => 2,
+            Self::ShardPanicked => 3,
+            Self::ShardDead => 4,
+        }
+    }
+
+    /// Decode a wire byte; `None` for bytes this build does not know.
+    pub fn from_u8(byte: u8) -> Option<Self> {
+        match byte {
+            1 => Some(Self::DeadlineExpired),
+            2 => Some(Self::ReplyLost),
+            3 => Some(Self::ShardPanicked),
+            4 => Some(Self::ShardDead),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for DegradeCause {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Self::DeadlineExpired => "deadline expired",
+            Self::ReplyLost => "shard reply lost",
+            Self::ShardPanicked => "shard search panicked",
+            Self::ShardDead => "shard permanently dead",
+        })
+    }
+}
+
+/// A typed record that an answer was served from a *partial* fan-out:
+/// the listed shards contributed nothing to the merge. The neighbors
+/// returned alongside it are exactly the honest reduced fan-out over
+/// the surviving shards (see
+/// [`ShardedSearcher::search_batch_subset`](super::ShardedSearcher::search_batch_subset),
+/// which defines that reference semantics) — degraded answers are
+/// principled, not best-effort garbage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Degradation {
+    /// Shard slots missing from the merge, ascending, deduplicated.
+    pub shards_missing: Vec<u32>,
+    /// The most severe reason among the missing shards.
+    pub cause: DegradeCause,
+}
+
+impl std::fmt::Display for Degradation {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "degraded: {} (missing shards {:?})", self.cause, self.shards_missing)
+    }
+}
 
 /// An ANN query server over a fixed corpus. All results are
 /// [`OriginalId`]-typed: implementations own whatever id mapping their
@@ -95,6 +171,47 @@ pub trait Searcher {
     ) -> (Vec<Vec<Neighbor>>, BatchStats) {
         self.search_batch_routed(&queries, k, params, top_m)
     }
+
+    /// Deadline-bounded batch entry point (the micro-batching front's
+    /// one call site): serve the tile like
+    /// [`search_batch_owned`](Self::search_batch_owned) /
+    /// [`search_batch_routed_owned`](Self::search_batch_routed_owned),
+    /// but give up on shards that have not answered by `deadline` and
+    /// report what was dropped as a typed [`Degradation`].
+    ///
+    /// The default implementation cannot preempt anything — an inline
+    /// searcher runs on the calling thread — so it ignores the deadline
+    /// and always returns a full, never-degraded answer, bit-identical
+    /// to the plain entry points. The thread-per-shard
+    /// [`ShardPool`](super::ShardPool) overrides this with bounded
+    /// reply collection; with `deadline = None` and a healthy pool its
+    /// answers remain bit-identical to the plain path too (asserted by
+    /// the chaos suite).
+    fn search_batch_deadline_owned(
+        &self,
+        queries: std::sync::Arc<AlignedMatrix>,
+        k: usize,
+        params: &SearchParams,
+        route_top_m: Option<usize>,
+        deadline: Option<Instant>,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats, Option<Degradation>) {
+        let _ = deadline;
+        let (results, stats) = match route_top_m {
+            Some(m) => self.search_batch_routed_owned(queries, k, params, m),
+            None => self.search_batch_owned(queries, k, params),
+        };
+        (results, stats, None)
+    }
+
+    /// A live handle onto this searcher's worker-pool health, if it
+    /// has one. The default is `None`: inline searchers have no
+    /// workers to supervise. [`ShardPool`](super::ShardPool) returns a
+    /// watch that stays valid after the pool moves onto a front's
+    /// dispatcher thread, which is how the serving edge (and the
+    /// `KNNQv1` health frame) reads per-shard liveness.
+    fn health_watch(&self) -> Option<super::serve::HealthWatch> {
+        None
+    }
 }
 
 /// Map a raw working-space result list into the boundary type without
@@ -158,5 +275,44 @@ mod tests {
         }
         assert_eq!(Searcher::len(&idx), 400);
         assert!(!idx.is_empty());
+    }
+
+    #[test]
+    fn degrade_cause_round_trips_and_orders_by_severity() {
+        for cause in [
+            DegradeCause::DeadlineExpired,
+            DegradeCause::ReplyLost,
+            DegradeCause::ShardPanicked,
+            DegradeCause::ShardDead,
+        ] {
+            assert_eq!(DegradeCause::from_u8(cause.as_u8()), Some(cause));
+        }
+        assert_eq!(DegradeCause::from_u8(0), None);
+        assert_eq!(DegradeCause::from_u8(9), None);
+        // severity ordering is what the single `cause` field of a mixed
+        // degradation reports (the max)
+        assert!(DegradeCause::DeadlineExpired < DegradeCause::ReplyLost);
+        assert!(DegradeCause::ReplyLost < DegradeCause::ShardPanicked);
+        assert!(DegradeCause::ShardPanicked < DegradeCause::ShardDead);
+    }
+
+    #[test]
+    fn default_deadline_entry_point_is_the_plain_path() {
+        use std::sync::Arc;
+        use std::time::{Duration, Instant};
+        let (data, _) = SynthClustered::new(300, 8, 4, 9).generate_labeled();
+        let result = NnDescent::new(Params::default().with_k(8).with_seed(9)).build(&data).unwrap();
+        let idx = GraphIndex::new(data.clone(), result.graph);
+        let sp = SearchParams::default();
+        let rows: Vec<f32> = (0..3).flat_map(|i| data.row_logical(i * 50).to_vec()).collect();
+        let tile = Arc::new(AlignedMatrix::from_rows(3, data.dim(), &rows));
+        let (expect, _) = idx.search_batch_owned(Arc::clone(&tile), 4, &sp);
+        // an already-expired deadline cannot degrade an inline searcher
+        let past = Instant::now() - Duration::from_secs(1);
+        let (got, _, degr) =
+            idx.search_batch_deadline_owned(tile, 4, &sp, None, Some(past));
+        assert!(degr.is_none(), "inline searchers never degrade");
+        crate::testing::assert_neighbors_bitwise_eq(&expect, &got, "default deadline path");
+        assert!(Searcher::health_watch(&idx).is_none());
     }
 }

@@ -13,7 +13,7 @@
 //!
 //! ## Bit-equality with the single-threaded fan-out
 //!
-//! The pool's results are **bit-identical** to
+//! A healthy pool's results are **bit-identical** to
 //! `ShardedSearcher::search_batch` for every (S, T) combination:
 //!
 //! * each shard runs the *same* computation it runs in the sequential
@@ -30,17 +30,67 @@
 //! searches share no state, so threading them changes nothing but
 //! latency.
 //!
+//! ## Fault tolerance
+//!
+//! Workers are mortal and the pool knows it:
+//!
+//! * **Panic containment** — each shard search runs under
+//!   `catch_unwind`; a panic becomes a typed failure reply (and a
+//!   fresh scratch, so the next batch is served from clean state)
+//!   instead of a dead thread.
+//! * **Supervision** — a worker that *does* die (thread exit) is
+//!   detected at the next batch and respawned with fresh per-shard
+//!   scratch, up to a bounded respawn budget
+//!   ([`PoolConfig::respawn_budget`]); past the budget its shards are
+//!   declared dead and the pool keeps serving from the survivors.
+//! * **Deadlines** — [`Searcher::search_batch_deadline_owned`] bounds
+//!   reply collection; shards that miss the deadline are dropped from
+//!   the merge and reported in a typed
+//!   [`Degradation`](super::searcher::Degradation).
+//! * **Health** — per-shard liveness and fault counters are readable
+//!   at any time through [`ShardPool::stats`] or a detachable
+//!   [`HealthWatch`] that survives the pool moving onto a front's
+//!   dispatcher thread.
+//!
+//! A degraded answer is exactly the honest reduced fan-out over the
+//! surviving shards ([`ShardedSearcher::search_batch_subset`] defines
+//! that reference; the chaos suite asserts the equality bit for bit).
+//!
 //! [`GraphIndex::scratch`]: crate::search::GraphIndex::scratch
+//! [`ShardedSearcher::search_batch_subset`]: super::ShardedSearcher::search_batch_subset
 
 use super::ids::Neighbor;
-use super::searcher::Searcher;
+use super::searcher::{DegradeCause, Degradation, Searcher};
 use super::sharded::{gather_rows, Router, Shard, ShardedSearcher};
 use crate::dataset::AlignedMatrix;
 use crate::distance::dispatch;
 use crate::search::{BatchStats, QueryStats, SearchParams};
-use std::sync::{mpsc, Arc};
+use crate::testing::faults::{self, FaultAction};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Instant;
+
+/// Default [`PoolConfig::respawn_budget`]: how many times one worker
+/// may die and be replaced before its shards are declared dead.
+pub const DEFAULT_RESPAWN_BUDGET: u32 = 3;
+
+/// Construction knobs for a [`ShardPool`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolConfig {
+    /// Worker threads requested (clamped to the shard count).
+    pub threads: usize,
+    /// Times each worker may be respawned after dying before its
+    /// shards are declared permanently dead. `0` means a first death
+    /// is final.
+    pub respawn_budget: u32,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        Self { threads: 1, respawn_budget: DEFAULT_RESPAWN_BUDGET }
+    }
+}
 
 /// One fan-out request to a worker: a shared query tile plus the reply
 /// channel the worker posts its per-shard answers to.
@@ -56,23 +106,154 @@ struct Job {
     reply: mpsc::Sender<ShardReply>,
 }
 
-/// One shard's answer to a [`Job`], already mapped to global ids.
-struct ShardReply {
-    /// Index of the shard in slice order (the merge key).
-    shard: usize,
-    /// Per-query top-k candidates from this shard.
-    results: Vec<Vec<Neighbor>>,
-    dist_evals: u64,
-    expansions: u64,
+/// What one shard made of a [`Job`].
+enum ShardOutcome {
+    /// The search ran; results are already mapped to global ids.
+    Ok { results: Vec<Vec<Neighbor>>, dist_evals: u64, expansions: u64 },
+    /// The search panicked; the worker contained it and stays alive.
+    /// The message is the panic payload (for logs/diagnostics).
+    Panicked { message: String },
 }
 
-/// A [`Searcher`] that executes shard fan-out on worker threads.
-/// Created over a borrowed [`ShardedSearcher`] (shards are shared via
-/// `Arc`, so the original stays usable — handy for A/B comparisons);
-/// dropping the pool shuts the workers down and joins them.
+/// One shard's reply to a [`Job`], keyed by slice-order shard index.
+struct ShardReply {
+    shard: usize,
+    outcome: ShardOutcome,
+}
+
+/// One worker thread's supervision record.
+struct WorkerSlot {
+    /// Stable worker id (names the thread across respawns).
+    id: usize,
+    /// Job channel; `None` once the worker is permanently dead.
+    sender: Option<mpsc::Sender<Job>>,
+    handle: Option<JoinHandle<()>>,
+    /// Slice-order shard indices this worker owns.
+    owned: Vec<usize>,
+    respawns_left: u32,
+}
+
+/// Liveness of one shard in a [`ShardPool`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShardState {
+    /// Served by a live worker.
+    Healthy,
+    /// Its worker exhausted the respawn budget (or could not be
+    /// respawned); the shard no longer participates in fan-out.
+    Dead,
+}
+
+/// Snapshot of a pool's health: per-shard liveness plus monotonic
+/// fault counters (what [`HealthWatch::snapshot`] returns and the
+/// `KNNQv1` health frame reports).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Worker threads the pool was built with.
+    pub threads: usize,
+    /// Per-shard liveness, slice order.
+    pub shards: Vec<ShardState>,
+    /// Workers respawned after dying.
+    pub respawns: u64,
+    /// Shard-search panics contained by `catch_unwind`.
+    pub contained_panics: u64,
+    /// Replies that never arrived from a worker that stayed alive.
+    pub lost_replies: u64,
+    /// Shards dropped from a merge because a deadline expired.
+    pub deadline_misses: u64,
+}
+
+impl PoolStats {
+    /// True when every shard is [`ShardState::Healthy`].
+    pub fn all_healthy(&self) -> bool {
+        self.shards.iter().all(|s| *s == ShardState::Healthy)
+    }
+
+    /// Slice-order indices of dead shards, ascending.
+    pub fn dead_shards(&self) -> Vec<u32> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| **s == ShardState::Dead)
+            .map(|(i, _)| i as u32)
+            .collect()
+    }
+}
+
+/// Lock-free health storage shared between the pool, its workers, and
+/// any detached [`HealthWatch`] handles.
+struct HealthInner {
+    threads: usize,
+    shard_dead: Vec<AtomicBool>,
+    respawns: AtomicU64,
+    contained_panics: AtomicU64,
+    lost_replies: AtomicU64,
+    deadline_misses: AtomicU64,
+}
+
+impl HealthInner {
+    fn new(threads: usize, shard_count: usize) -> Self {
+        Self {
+            threads,
+            shard_dead: (0..shard_count).map(|_| AtomicBool::new(false)).collect(),
+            respawns: AtomicU64::new(0),
+            contained_panics: AtomicU64::new(0),
+            lost_replies: AtomicU64::new(0),
+            deadline_misses: AtomicU64::new(0),
+        }
+    }
+
+    fn bury(&self, shards: &[usize]) {
+        for &s in shards {
+            self.shard_dead[s].store(true, Ordering::Relaxed);
+        }
+    }
+}
+
+/// A cloneable, live view of a [`ShardPool`]'s health that stays valid
+/// after the pool moves onto another thread (a
+/// [`ServeFront`](super::ServeFront) dispatcher). This is what
+/// [`Searcher::health_watch`] hands the serving edge.
+#[derive(Clone)]
+pub struct HealthWatch {
+    inner: Arc<HealthInner>,
+}
+
+impl HealthWatch {
+    /// Current health snapshot.
+    pub fn snapshot(&self) -> PoolStats {
+        PoolStats {
+            threads: self.inner.threads,
+            shards: self
+                .inner
+                .shard_dead
+                .iter()
+                .map(|d| if d.load(Ordering::Relaxed) { ShardState::Dead } else { ShardState::Healthy })
+                .collect(),
+            respawns: self.inner.respawns.load(Ordering::Relaxed),
+            contained_panics: self.inner.contained_panics.load(Ordering::Relaxed),
+            lost_replies: self.inner.lost_replies.load(Ordering::Relaxed),
+            deadline_misses: self.inner.deadline_misses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl std::fmt::Debug for HealthWatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("HealthWatch").field("snapshot", &self.snapshot()).finish()
+    }
+}
+
+/// A [`Searcher`] that executes shard fan-out on supervised worker
+/// threads. Created over a borrowed [`ShardedSearcher`] (shards are
+/// shared via `Arc`, so the original stays usable — handy for A/B
+/// comparisons); dropping the pool shuts the workers down and joins
+/// them.
 pub struct ShardPool {
-    senders: Vec<mpsc::Sender<Job>>,
-    handles: Vec<JoinHandle<()>>,
+    workers: Mutex<Vec<WorkerSlot>>,
+    /// Retained for respawns: a replacement worker re-acquires its
+    /// shard group (and fresh scratch) from here.
+    shards: Vec<Arc<Shard>>,
+    health: HealthWatch,
     /// Shared with the source `ShardedSearcher`: the pool routes
     /// through the exact same centroids and kernels as the inline
     /// fan-out, so routed results are bit-identical too.
@@ -81,50 +262,63 @@ pub struct ShardPool {
     dim: usize,
     dim_pad: usize,
     shard_count: usize,
+    threads: usize,
 }
 
 impl ShardPool {
     /// Spawn `threads` workers (clamped to the shard count — a worker
     /// with nothing to own would be pure overhead) over `sharded`'s
-    /// shards. `threads == 1` is a valid degenerate pool: one worker
-    /// owning every shard, still bit-identical to the inline fan-out.
+    /// shards, with the default respawn budget. `threads == 1` is a
+    /// valid degenerate pool: one worker owning every shard, still
+    /// bit-identical to the inline fan-out.
     pub fn new(sharded: &ShardedSearcher, threads: usize) -> crate::Result<Self> {
-        anyhow::ensure!(threads >= 1, "need at least one worker thread");
+        Self::with_config(sharded, PoolConfig { threads, ..Default::default() })
+    }
+
+    /// [`new`](Self::new) with explicit supervision knobs.
+    pub fn with_config(sharded: &ShardedSearcher, cfg: PoolConfig) -> crate::Result<Self> {
+        anyhow::ensure!(cfg.threads >= 1, "need at least one worker thread");
         let s = sharded.shard_count();
-        let t = threads.min(s);
-        let mut senders = Vec::with_capacity(t);
-        let mut handles = Vec::with_capacity(t);
+        let t = cfg.threads.min(s);
+        let shards: Vec<Arc<Shard>> = sharded.shards().iter().map(Arc::clone).collect();
+        let health = HealthWatch { inner: Arc::new(HealthInner::new(t, s)) };
+        let mut workers = Vec::with_capacity(t);
         for w in 0..t {
             let lo = w * s / t;
             let hi = (w + 1) * s / t;
-            let owned: Vec<(usize, Arc<Shard>)> =
-                (lo..hi).map(|i| (i, Arc::clone(&sharded.shards()[i]))).collect();
-            let (tx, rx) = mpsc::channel::<Job>();
-            let handle = std::thread::Builder::new()
-                .name(format!("knng-shard-{w}"))
-                .spawn(move || worker_loop(owned, rx))?;
-            senders.push(tx);
-            handles.push(handle);
+            let owned: Vec<usize> = (lo..hi).collect();
+            let owned_shards: Vec<(usize, Arc<Shard>)> =
+                owned.iter().map(|&i| (i, Arc::clone(&shards[i]))).collect();
+            let (tx, handle) = spawn_worker(w, owned_shards, Arc::clone(&health.inner))?;
+            workers.push(WorkerSlot {
+                id: w,
+                sender: Some(tx),
+                handle: Some(handle),
+                owned,
+                respawns_left: cfg.respawn_budget,
+            });
         }
-        let dim_pad = sharded.shards()[0].core.data().dim_pad();
+        let dim_pad = shards[0].core.data().dim_pad();
         Ok(Self {
-            senders,
-            handles,
+            workers: Mutex::new(workers),
+            shards,
+            health,
             router: sharded.router_arc(),
             n: Searcher::len(sharded),
             dim: sharded.dim(),
             dim_pad,
             shard_count: s,
+            threads: t,
         })
     }
 
-    /// Number of worker threads actually running (≤ the requested
-    /// count, clamped to the shard count).
+    /// Number of worker threads the pool was built with (≤ the
+    /// requested count, clamped to the shard count).
     pub fn threads(&self) -> usize {
-        self.senders.len()
+        self.threads
     }
 
-    /// Number of shards served by the pool.
+    /// Number of shards served by the pool (live or dead).
     pub fn shard_count(&self) -> usize {
         self.shard_count
     }
@@ -133,55 +327,356 @@ impl ShardPool {
     pub fn dim(&self) -> usize {
         self.dim
     }
+
+    /// Current health snapshot: per-shard liveness and fault counters.
+    pub fn stats(&self) -> PoolStats {
+        self.health.snapshot()
+    }
+
+    fn workers_lock(&self) -> std::sync::MutexGuard<'_, Vec<WorkerSlot>> {
+        // the slots are only mutated under this lock and every mutation
+        // leaves them consistent, so a poisoned lock (a caller thread
+        // panicked mid-batch) is safe to recover
+        self.workers.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    /// Join workers that died since the last batch and respawn them
+    /// (budget permitting) — the supervision pass, run before dispatch
+    /// and after collection.
+    fn supervise(&self, workers: &mut [WorkerSlot]) {
+        for slot in workers.iter_mut() {
+            let died = slot.sender.is_some()
+                && slot.handle.as_ref().is_some_and(|h| h.is_finished());
+            if died {
+                self.respawn_or_bury(slot);
+            }
+        }
+    }
+
+    /// Replace a dead worker with a fresh thread (fresh scratch) or,
+    /// with the budget spent, declare its shards dead.
+    fn respawn_or_bury(&self, slot: &mut WorkerSlot) {
+        if let Some(h) = slot.handle.take() {
+            let _ = h.join();
+        }
+        slot.sender = None;
+        if slot.respawns_left == 0 {
+            self.health.inner.bury(&slot.owned);
+            return;
+        }
+        slot.respawns_left -= 1;
+        self.health.inner.respawns.fetch_add(1, Ordering::Relaxed);
+        let owned_shards: Vec<(usize, Arc<Shard>)> =
+            slot.owned.iter().map(|&i| (i, Arc::clone(&self.shards[i]))).collect();
+        match spawn_worker(slot.id, owned_shards, Arc::clone(&self.health.inner)) {
+            Ok((tx, handle)) => {
+                slot.sender = Some(tx);
+                slot.handle = Some(handle);
+            }
+            Err(_) => self.health.inner.bury(&slot.owned),
+        }
+    }
+
+    /// The one fan-out path: dispatch to live workers (respawning dead
+    /// ones first), collect replies until done or `deadline`, merge the
+    /// survivors, and report anything missing as a typed
+    /// [`Degradation`]. With a healthy pool and no deadline this is
+    /// bit-identical to the historical fan-out.
+    fn run_batch(
+        &self,
+        queries: Arc<AlignedMatrix>,
+        k: usize,
+        params: &SearchParams,
+        top_m: Option<usize>,
+        deadline: Option<Instant>,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats, Option<Degradation>) {
+        assert_eq!(
+            queries.dim(),
+            self.dim,
+            "query batch dim {} does not match index dim {}",
+            queries.dim(),
+            self.dim
+        );
+        let t0 = Instant::now();
+        // route on the calling thread (one pass over the query×centroid
+        // tile), then share the buckets read-only with every worker —
+        // identical code path to ShardedSearcher::search_batch_routed,
+        // so the pool's routed results are bit-identical to the inline
+        // routed fan-out
+        let (routes, route_evals, m) = match top_m {
+            Some(m0) => {
+                let m = m0.clamp(1, self.shard_count);
+                let (buckets, evals) = self.router.bucket(&queries, m);
+                (Some(Arc::new(buckets)), evals, m)
+            }
+            None => (None, 0, self.shard_count),
+        };
+
+        let (tx, rx) = mpsc::channel::<ShardReply>();
+        let mut expected = 0usize;
+        let mut expired_at_dispatch = false;
+        {
+            let mut workers = self.workers_lock();
+            self.supervise(&mut workers);
+            expired_at_dispatch = deadline.is_some_and(|d| Instant::now() >= d);
+            if !expired_at_dispatch {
+                for slot in workers.iter_mut() {
+                    let mut job = Job {
+                        queries: Arc::clone(&queries),
+                        k,
+                        params: *params,
+                        routes: routes.clone(),
+                        reply: tx.clone(),
+                    };
+                    loop {
+                        let Some(sender) = slot.sender.as_ref() else { break };
+                        match sender.send(job) {
+                            Ok(()) => {
+                                expected += slot.owned.len();
+                                break;
+                            }
+                            Err(mpsc::SendError(back)) => {
+                                // the worker died between supervision
+                                // and this send: respawn (bounded) and
+                                // retry; each retry spends budget, so
+                                // the loop terminates
+                                self.respawn_or_bury(slot);
+                                job = back;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        drop(tx); // collection ends when every dispatched job is done
+
+        // collect, slotted by shard index so arrival order cannot
+        // influence anything downstream
+        let mut slots: Vec<Option<ShardOutcome>> = Vec::new();
+        slots.resize_with(self.shard_count, || None);
+        let mut received = 0usize;
+        let mut deadline_hit = expired_at_dispatch;
+        while received < expected {
+            let reply = match deadline {
+                None => match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => break, // a worker died mid-batch or a reply was lost
+                },
+                Some(d) => {
+                    let Some(left) = d.checked_duration_since(Instant::now()) else {
+                        deadline_hit = true;
+                        break;
+                    };
+                    match rx.recv_timeout(left) {
+                        Ok(r) => r,
+                        Err(mpsc::RecvTimeoutError::Timeout) => {
+                            deadline_hit = true;
+                            break;
+                        }
+                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            };
+            if slots[reply.shard].is_none() {
+                received += 1;
+            }
+            slots[reply.shard] = Some(reply.outcome);
+        }
+
+        // classify what is missing, then run supervision again so a
+        // worker that died mid-batch is respawned before the next one
+        let mut missing: Vec<(u32, DegradeCause)> = Vec::new();
+        {
+            let mut workers = self.workers_lock();
+            for slot in workers.iter() {
+                for &s in &slot.owned {
+                    let cause = match &slots[s] {
+                        Some(ShardOutcome::Ok { .. }) => continue,
+                        Some(ShardOutcome::Panicked { .. }) => DegradeCause::ShardPanicked,
+                        None => {
+                            if slot.sender.is_none()
+                                || slot.handle.as_ref().is_some_and(|h| h.is_finished())
+                            {
+                                DegradeCause::ShardDead
+                            } else if deadline_hit {
+                                DegradeCause::DeadlineExpired
+                            } else {
+                                DegradeCause::ReplyLost
+                            }
+                        }
+                    };
+                    missing.push((s as u32, cause));
+                }
+            }
+            self.supervise(&mut workers);
+        }
+        for &(_, cause) in &missing {
+            match cause {
+                DegradeCause::DeadlineExpired => {
+                    self.health.inner.deadline_misses.fetch_add(1, Ordering::Relaxed);
+                }
+                DegradeCause::ReplyLost => {
+                    self.health.inner.lost_replies.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {}
+            }
+        }
+
+        // merge the survivors in shard slice order — with everything
+        // present this is exactly the historical merge input
+        let mut agg = BatchStats {
+            queries: queries.n(),
+            kernel: dispatch::active_width().name(),
+            dist_evals: route_evals,
+            ..Default::default()
+        };
+        let mut merged: Vec<Vec<Neighbor>> = Vec::new();
+        merged.resize_with(queries.n(), || Vec::with_capacity(k * m));
+        for (s, slot) in slots.into_iter().enumerate() {
+            let Some(ShardOutcome::Ok { results, dist_evals, expansions }) = slot else {
+                continue;
+            };
+            agg.dist_evals += dist_evals;
+            agg.expansions += expansions;
+            match &routes {
+                None => {
+                    agg.shard_visits += queries.n() as u64;
+                    for (qi, r) in results.into_iter().enumerate() {
+                        merged[qi].extend(r);
+                    }
+                }
+                Some(buckets) => {
+                    let qids = &buckets[s];
+                    agg.shard_visits += qids.len() as u64;
+                    for (pos, r) in results.into_iter().enumerate() {
+                        merged[qids[pos] as usize].extend(r);
+                    }
+                }
+            }
+        }
+        let results: Vec<Vec<Neighbor>> =
+            merged.into_iter().map(|all| ShardedSearcher::merge(all, k)).collect();
+        agg.secs = t0.elapsed().as_secs_f64();
+
+        let degradation = if missing.is_empty() {
+            None
+        } else {
+            missing.sort_unstable_by_key(|(s, _)| *s);
+            let cause = missing.iter().map(|&(_, c)| c).max().unwrap_or(DegradeCause::ShardDead);
+            Some(Degradation {
+                shards_missing: missing.into_iter().map(|(s, _)| s).collect(),
+                cause,
+            })
+        };
+        (results, agg, degradation)
+    }
+}
+
+/// Spawn one worker thread over its shard group; used for both initial
+/// construction and respawns (a respawned worker allocates fresh
+/// scratch, so whatever state a dying thread abandoned is gone).
+fn spawn_worker(
+    id: usize,
+    owned: Vec<(usize, Arc<Shard>)>,
+    health: Arc<HealthInner>,
+) -> std::io::Result<(mpsc::Sender<Job>, JoinHandle<()>)> {
+    let (tx, rx) = mpsc::channel::<Job>();
+    let handle = std::thread::Builder::new()
+        .name(format!("knng-shard-{id}"))
+        .spawn(move || worker_loop(id, owned, rx, health))?;
+    Ok((tx, handle))
 }
 
 /// Worker body: serve jobs until every sender is gone. Each owned shard
 /// gets its own persistent scratch — allocated once here, reused for
-/// every batch this worker ever serves.
-fn worker_loop(owned: Vec<(usize, Arc<Shard>)>, rx: mpsc::Receiver<Job>) {
+/// every batch this worker ever serves. Each shard search runs under
+/// `catch_unwind`: a panicking search becomes a typed failure reply
+/// (plus a fresh scratch) and the worker keeps serving.
+fn worker_loop(
+    worker_id: usize,
+    owned: Vec<(usize, Arc<Shard>)>,
+    rx: mpsc::Receiver<Job>,
+    health: Arc<HealthInner>,
+) {
     let mut scratch: Vec<_> = owned.iter().map(|(_, sh)| sh.core.scratch()).collect();
     while let Ok(job) = rx.recv() {
+        if matches!(
+            faults::check(faults::site::WORKER_JOB, worker_id as u64),
+            Some(FaultAction::Die)
+        ) {
+            return; // injected thread death: the supervisor takes over
+        }
         for ((slot, shard), scr) in owned.iter().zip(scratch.iter_mut()) {
-            // a send error means the caller dropped its reply channel
-            // (e.g. panicked mid-collect); nothing useful to do but
-            // move on to the next job
-            let _ = job.reply.send(match &job.routes {
-                None => {
-                    let (raw, stats) =
-                        shard.core.search_batch_with(&job.queries, job.k, &job.params, scr);
-                    ShardReply {
-                        shard: *slot,
-                        results: raw.into_iter().map(|r| shard.map_results(r)).collect(),
-                        dist_evals: stats.dist_evals,
-                        expansions: stats.expansions,
-                    }
+            let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                if matches!(
+                    faults::check(faults::site::WORKER_SEARCH, *slot as u64),
+                    Some(FaultAction::Panic)
+                ) {
+                    panic!("injected panic at {} (shard {slot})", faults::site::WORKER_SEARCH);
                 }
-                Some(routes) => {
-                    // routed: serve only this shard's bucket. The pool
-                    // collects exactly one reply per shard, so an
-                    // unrouted shard still replies — just empty.
-                    let qids = &routes[*slot];
-                    if qids.is_empty() {
-                        ShardReply {
-                            shard: *slot,
-                            results: Vec::new(),
-                            dist_evals: 0,
-                            expansions: 0,
-                        }
-                    } else {
-                        let tile = gather_rows(&job.queries, qids);
+                match &job.routes {
+                    None => {
                         let (raw, stats) =
-                            shard.core.search_batch_with(&tile, job.k, &job.params, scr);
-                        ShardReply {
-                            shard: *slot,
+                            shard.core.search_batch_with(&job.queries, job.k, &job.params, scr);
+                        ShardOutcome::Ok {
                             results: raw.into_iter().map(|r| shard.map_results(r)).collect(),
                             dist_evals: stats.dist_evals,
                             expansions: stats.expansions,
                         }
                     }
+                    Some(routes) => {
+                        // routed: serve only this shard's bucket. The
+                        // pool expects one reply per shard, so an
+                        // unrouted shard still replies — just empty.
+                        let qids = &routes[*slot];
+                        if qids.is_empty() {
+                            ShardOutcome::Ok { results: Vec::new(), dist_evals: 0, expansions: 0 }
+                        } else {
+                            let tile = gather_rows(&job.queries, qids);
+                            let (raw, stats) =
+                                shard.core.search_batch_with(&tile, job.k, &job.params, scr);
+                            ShardOutcome::Ok {
+                                results: raw.into_iter().map(|r| shard.map_results(r)).collect(),
+                                dist_evals: stats.dist_evals,
+                                expansions: stats.expansions,
+                            }
+                        }
+                    }
                 }
-            });
+            }));
+            let outcome = match attempt {
+                Ok(outcome) => outcome,
+                Err(payload) => {
+                    health.contained_panics.fetch_add(1, Ordering::Relaxed);
+                    // the unwound search may have left the scratch
+                    // buffers torn; fresh scratch restores the clean-
+                    // state guarantee for every subsequent batch
+                    *scr = shard.core.scratch();
+                    ShardOutcome::Panicked { message: panic_message(&payload) }
+                }
+            };
+            match faults::check(faults::site::WORKER_REPLY, *slot as u64) {
+                Some(FaultAction::Drop) => continue, // reply lost in flight
+                Some(FaultAction::Delay(d)) => std::thread::sleep(d),
+                Some(FaultAction::Die) => return,
+                _ => {}
+            }
+            // a send error means the caller stopped collecting (its
+            // deadline expired or it dropped the batch); nothing useful
+            // to do but move on to the next shard
+            let _ = job.reply.send(ShardReply { shard: *slot, outcome });
         }
+    }
+}
+
+/// Best-effort human-readable text from a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -230,61 +725,13 @@ impl Searcher for ShardPool {
         k: usize,
         params: &SearchParams,
     ) -> (Vec<Vec<Neighbor>>, BatchStats) {
-        // validate before fan-out: a bad tile must fail *this* call
-        // with the same message the inline path gives, not panic a
-        // worker thread and poison the pool for every other caller
-        assert_eq!(
-            queries.dim(),
-            self.dim,
-            "query batch dim {} does not match index dim {}",
-            queries.dim(),
-            self.dim
-        );
-        let t0 = Instant::now();
-        // the Arc is shared as-is with every worker: zero tile copies
-        // on this path
-        let (tx, rx) = mpsc::channel::<ShardReply>();
-        for sender in &self.senders {
-            sender
-                .send(Job {
-                    queries: Arc::clone(&queries),
-                    k,
-                    params: *params,
-                    routes: None,
-                    reply: tx.clone(),
-                })
-                .expect("shard worker exited before the pool was dropped");
-        }
-        drop(tx);
-
-        // collect exactly one reply per shard, slotted by shard index so
-        // arrival order cannot influence anything downstream
-        let mut per_shard: Vec<Option<ShardReply>> = Vec::new();
-        per_shard.resize_with(self.shard_count, || None);
-        for _ in 0..self.shard_count {
-            let reply = rx.recv().expect("shard worker died mid-batch");
-            per_shard[reply.shard] = Some(reply);
-        }
-
-        let mut agg = BatchStats {
-            queries: queries.n(),
-            kernel: dispatch::active_width().name(),
-            shard_visits: (queries.n() * self.shard_count) as u64,
-            ..Default::default()
-        };
-        let mut merged: Vec<Vec<Neighbor>> = Vec::new();
-        merged.resize_with(queries.n(), || Vec::with_capacity(k * self.shard_count));
-        for slot in per_shard {
-            let reply = slot.expect("a shard never replied");
-            agg.dist_evals += reply.dist_evals;
-            agg.expansions += reply.expansions;
-            for (qi, r) in reply.results.into_iter().enumerate() {
-                merged[qi].extend(r);
-            }
-        }
-        let results = merged.into_iter().map(|all| ShardedSearcher::merge(all, k)).collect();
-        agg.secs = t0.elapsed().as_secs_f64();
-        (results, agg)
+        // this signature cannot carry a degradation record; the pool
+        // still serves from the survivors (never panics, never hangs)
+        // and the event stays observable through stats()/health_watch.
+        // Callers that need the typed record use
+        // search_batch_deadline_owned — the serving front does.
+        let (results, stats, _degradation) = self.run_batch(queries, k, params, None, None);
+        (results, stats)
     }
 
     fn search_batch_routed(
@@ -304,64 +751,24 @@ impl Searcher for ShardPool {
         params: &SearchParams,
         top_m: usize,
     ) -> (Vec<Vec<Neighbor>>, BatchStats) {
-        assert_eq!(
-            queries.dim(),
-            self.dim,
-            "query batch dim {} does not match index dim {}",
-            queries.dim(),
-            self.dim
-        );
-        let t0 = Instant::now();
-        // route on the calling thread (one pass over the query×centroid
-        // tile), then share the buckets read-only with every worker —
-        // identical code path to ShardedSearcher::search_batch_routed,
-        // so the pool's routed results are bit-identical to the inline
-        // routed fan-out
-        let m = top_m.clamp(1, self.shard_count);
-        let (buckets, route_evals) = self.router.bucket(&queries, m);
-        let buckets = Arc::new(buckets);
-        let (tx, rx) = mpsc::channel::<ShardReply>();
-        for sender in &self.senders {
-            sender
-                .send(Job {
-                    queries: Arc::clone(&queries),
-                    k,
-                    params: *params,
-                    routes: Some(Arc::clone(&buckets)),
-                    reply: tx.clone(),
-                })
-                .expect("shard worker exited before the pool was dropped");
-        }
-        drop(tx);
+        let (results, stats, _degradation) =
+            self.run_batch(queries, k, params, Some(top_m), None);
+        (results, stats)
+    }
 
-        let mut per_shard: Vec<Option<ShardReply>> = Vec::new();
-        per_shard.resize_with(self.shard_count, || None);
-        for _ in 0..self.shard_count {
-            let reply = rx.recv().expect("shard worker died mid-batch");
-            per_shard[reply.shard] = Some(reply);
-        }
+    fn search_batch_deadline_owned(
+        &self,
+        queries: Arc<AlignedMatrix>,
+        k: usize,
+        params: &SearchParams,
+        route_top_m: Option<usize>,
+        deadline: Option<Instant>,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats, Option<Degradation>) {
+        self.run_batch(queries, k, params, route_top_m, deadline)
+    }
 
-        let mut agg = BatchStats {
-            queries: queries.n(),
-            kernel: dispatch::active_width().name(),
-            dist_evals: route_evals,
-            ..Default::default()
-        };
-        let mut merged: Vec<Vec<Neighbor>> = Vec::new();
-        merged.resize_with(queries.n(), || Vec::with_capacity(k * m));
-        for slot in per_shard {
-            let reply = slot.expect("a shard never replied");
-            agg.dist_evals += reply.dist_evals;
-            agg.expansions += reply.expansions;
-            let qids = &buckets[reply.shard];
-            agg.shard_visits += qids.len() as u64;
-            for (pos, r) in reply.results.into_iter().enumerate() {
-                merged[qids[pos] as usize].extend(r);
-            }
-        }
-        let results = merged.into_iter().map(|all| ShardedSearcher::merge(all, k)).collect();
-        agg.secs = t0.elapsed().as_secs_f64();
-        (results, agg)
+    fn health_watch(&self) -> Option<HealthWatch> {
+        Some(self.health.clone())
     }
 }
 
@@ -369,9 +776,14 @@ impl Drop for ShardPool {
     fn drop(&mut self) {
         // disconnect every job channel, then join: workers exit their
         // recv loop as soon as the senders are gone
-        self.senders.clear();
-        for handle in self.handles.drain(..) {
-            let _ = handle.join();
+        let mut workers = self.workers_lock();
+        for slot in workers.iter_mut() {
+            slot.sender = None;
+        }
+        for slot in workers.iter_mut() {
+            if let Some(handle) = slot.handle.take() {
+                let _ = handle.join();
+            }
         }
     }
 }
@@ -409,6 +821,8 @@ mod tests {
             assert_neighbors_bitwise_eq(&expect, &got, &format!("threads={threads}"));
             assert_eq!(estats.dist_evals, gstats.dist_evals);
             assert_eq!(estats.expansions, gstats.expansions);
+            assert_eq!(estats.shard_visits, gstats.shard_visits);
+            assert!(pool.stats().all_healthy(), "healthy run must stay healthy");
         }
     }
 
@@ -503,5 +917,89 @@ mod tests {
         let sharded =
             ShardedSearcher::build(&data, 2, &Params::default().with_k(6).with_seed(9)).unwrap();
         assert!(ShardPool::new(&sharded, 0).is_err());
+    }
+
+    #[test]
+    fn health_starts_clean_and_watch_outlives_moves() {
+        let data = corpus(200, 13);
+        let sharded =
+            ShardedSearcher::build(&data, 2, &Params::default().with_k(6).with_seed(13)).unwrap();
+        let pool = ShardPool::new(&sharded, 2).unwrap();
+        let watch = Searcher::health_watch(&pool).expect("pools expose health");
+        let stats = pool.stats();
+        assert_eq!(stats.threads, 2);
+        assert_eq!(stats.shards, vec![ShardState::Healthy, ShardState::Healthy]);
+        assert!(stats.all_healthy());
+        assert!(stats.dead_shards().is_empty());
+        assert_eq!(stats.respawns, 0);
+        assert_eq!(stats.contained_panics, 0);
+        // the watch reads the same storage, even after the pool is
+        // moved (here: into a box on another thread)
+        let handle = std::thread::spawn(move || {
+            let boxed = Box::new(pool);
+            let queries = AlignedMatrix::zeroed(0, 8);
+            let _ = boxed.search_batch(&queries, 3, &SearchParams::default());
+        });
+        handle.join().unwrap();
+        assert!(watch.snapshot().all_healthy());
+    }
+
+    #[test]
+    fn deadline_entry_point_without_pressure_is_bitwise_clean() {
+        use std::time::Duration;
+        let data = corpus(300, 17);
+        let params = Params::default().with_k(8).with_seed(17);
+        let sharded = ShardedSearcher::build(&data, 3, &params).unwrap();
+        let pool = ShardPool::new(&sharded, 3).unwrap();
+        let sp = SearchParams::default();
+        let rows: Vec<f32> = (0..10).flat_map(|i| data.row_logical(i * 29).to_vec()).collect();
+        let tile = Arc::new(AlignedMatrix::from_rows(10, data.dim(), &rows));
+        let (expect, _) = sharded.search_batch(&tile, 4, &sp);
+        // a generous deadline on a healthy pool must not change a bit
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let (got, _, degr) =
+            pool.search_batch_deadline_owned(Arc::clone(&tile), 4, &sp, None, Some(deadline));
+        assert!(degr.is_none(), "nothing should miss a 30 s deadline: {degr:?}");
+        assert_neighbors_bitwise_eq(&expect, &got, "deadline-armed healthy pool");
+        // and with no deadline at all, the same entry point is the
+        // plain path exactly
+        let (got2, _, degr2) =
+            pool.search_batch_deadline_owned(tile, 4, &sp, None, None);
+        assert!(degr2.is_none());
+        assert_neighbors_bitwise_eq(&expect, &got2, "deadline entry, no deadline");
+    }
+
+    #[test]
+    fn expired_deadline_degrades_immediately_not_hangs() {
+        use std::time::Duration;
+        let data = corpus(200, 19);
+        let sharded =
+            ShardedSearcher::build(&data, 2, &Params::default().with_k(6).with_seed(19)).unwrap();
+        let pool = ShardPool::new(&sharded, 2).unwrap();
+        let rows: Vec<f32> = data.row_logical(0).to_vec();
+        let tile = Arc::new(AlignedMatrix::from_rows(1, data.dim(), &rows));
+        let t0 = Instant::now();
+        let past = Instant::now() - Duration::from_millis(1);
+        let (res, _, degr) = pool.search_batch_deadline_owned(
+            tile,
+            3,
+            &SearchParams::default(),
+            None,
+            Some(past),
+        );
+        assert!(t0.elapsed() < Duration::from_secs(5), "expired deadline must not hang");
+        let degr = degr.expect("an already-expired deadline degrades everything");
+        assert_eq!(degr.cause, DegradeCause::DeadlineExpired);
+        assert_eq!(degr.shards_missing, vec![0, 1]);
+        assert_eq!(res.len(), 1);
+        assert!(res[0].is_empty(), "no shard answered, so no neighbors");
+        assert!(pool.stats().deadline_misses >= 2);
+    }
+
+    #[test]
+    fn pool_config_defaults_are_sane() {
+        let cfg = PoolConfig::default();
+        assert!(cfg.threads >= 1);
+        assert_eq!(cfg.respawn_budget, DEFAULT_RESPAWN_BUDGET);
     }
 }

@@ -619,6 +619,46 @@ impl ShardedSearcher {
         (Self::merge(all, k), stats)
     }
 
+    /// Full fan-out over a *subset* of the shards: the reference
+    /// semantics for a degraded answer. When a pool drops shards (dead
+    /// worker, missed deadline), what it returns for each query is by
+    /// contract exactly this honest reduced fan-out over the survivors
+    /// — the chaos suite asserts the equality bit for bit. Shard
+    /// indices are slice-order, deduplicated here; out-of-range indices
+    /// panic (caller bug, not a serving-path input).
+    pub fn search_batch_subset(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+        shard_ids: &[usize],
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        let t0 = Instant::now();
+        let mut picks: Vec<usize> = shard_ids.to_vec();
+        picks.sort_unstable();
+        picks.dedup();
+        let mut agg = BatchStats {
+            queries: queries.n(),
+            kernel: crate::distance::dispatch::active_width().name(),
+            shard_visits: (queries.n() * picks.len()) as u64,
+            ..Default::default()
+        };
+        let mut merged: Vec<Vec<Neighbor>> = Vec::new();
+        merged.resize_with(queries.n(), || Vec::with_capacity(k * picks.len()));
+        for &si in &picks {
+            let shard = &self.shards[si];
+            let (raw, s) = shard.core.search_batch(queries, k, params);
+            agg.dist_evals += s.dist_evals;
+            agg.expansions += s.expansions;
+            for (qi, r) in raw.into_iter().enumerate() {
+                merged[qi].extend(shard.map_results(r));
+            }
+        }
+        let results = merged.into_iter().map(|all| Self::merge(all, k)).collect();
+        agg.secs = t0.elapsed().as_secs_f64();
+        (results, agg)
+    }
+
     /// Merge per-shard candidate lists into the global top-k: drop
     /// ghost duplicates, sort by (distance, global id), truncate.
     ///
@@ -777,6 +817,29 @@ mod tests {
             assert_eq!(res[0].id, OriginalId(qi as u32), "self hit in global ids");
             assert!(res[0].dist < 1e-6);
         }
+    }
+
+    #[test]
+    fn subset_fanout_over_all_shards_is_the_full_fanout() {
+        let data = corpus(400, 23);
+        let params = Params::default().with_k(6).with_seed(23);
+        let sharded = ShardedSearcher::build(&data, 3, &params).unwrap();
+        let sp = SearchParams::default();
+        let rows: Vec<f32> = (0..15).flat_map(|i| data.row_logical(i * 19).to_vec()).collect();
+        let queries = AlignedMatrix::from_rows(15, data.dim(), &rows);
+        let (full, fstats) = sharded.search_batch(&queries, 5, &sp);
+        // all shards (any order, with duplicates) == the plain fan-out
+        let (all, astats) = sharded.search_batch_subset(&queries, 5, &sp, &[2, 0, 1, 0]);
+        assert_neighbors_bitwise_eq(&full, &all, "subset=all");
+        assert_eq!(fstats.dist_evals, astats.dist_evals);
+        assert_eq!(fstats.shard_visits, astats.shard_visits);
+        // a strict subset still self-hits for rows that live in it
+        let (sub, sstats) = sharded.search_batch_subset(&queries, 5, &sp, &[0, 1]);
+        assert_eq!(sub.len(), 15);
+        assert_eq!(sstats.shard_visits, 30);
+        let (empty, estats) = sharded.search_batch_subset(&queries, 5, &sp, &[]);
+        assert!(empty.iter().all(|r| r.is_empty()), "no shards, no answers");
+        assert_eq!(estats.dist_evals, 0);
     }
 
     #[test]

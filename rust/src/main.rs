@@ -253,6 +253,8 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
         .value("queries", ".fvecs query vectors, served one at a time (with --graph)")
         .value("connect", "query a running `knng serve` server at this address instead of loading bundles")
         .value("net-timeout", "wire read/write timeout for --connect, seconds (default 30, 0 = none)")
+        .value("deadline-us", "per-query latency budget for --connect, microseconds (default 0 = none; late shards are dropped and the answer tagged degraded)")
+        .value("net-retries", "attempts per wire operation for --connect on transient transport failures (default 3)")
         .value("k", "neighbors per query (default 10)")
         .value("ef", "beam width (default 64)")
         .value("route-top-m", "centroid-route each query to its m nearest shards (default: full fan-out)")
@@ -433,7 +435,7 @@ fn parse_route_top_m(m: &knng::cli::ArgMatches) -> anyhow::Result<Option<usize>>
 /// contract as every other `query` serving path — and the same
 /// neighbors, bit for bit (the loopback bit-equality guarantee).
 fn query_connect(addr: &str, k: usize, m: &knng::cli::ArgMatches) -> anyhow::Result<()> {
-    use knng::net::NetClient;
+    use knng::net::{RetryPolicy, RetryingClient};
     let qpath = m
         .get("batch")
         .or_else(|| m.get("queries"))
@@ -442,7 +444,10 @@ fn query_connect(addr: &str, k: usize, m: &knng::cli::ArgMatches) -> anyhow::Res
     let route_top_m = parse_route_top_m(m)?;
     let timeout_s = m.u64_or("net-timeout", 30)?;
     let timeout = (timeout_s > 0).then(|| std::time::Duration::from_secs(timeout_s));
-    let mut client = NetClient::connect_with(addr, timeout, knng::net::wire::DEFAULT_MAX_FRAME)?;
+    let deadline_us = m.u64_or("deadline-us", 0)?;
+    let attempts = m.u64_or("net-retries", 3)?.max(1) as u32;
+    let policy = RetryPolicy { max_attempts: attempts, ..Default::default() };
+    let mut client = RetryingClient::connect(addr, policy)?.io_timeout(timeout);
     let info = client.ping()?;
     anyhow::ensure!(
         queries.dim() == info.dim as usize,
@@ -451,19 +456,24 @@ fn query_connect(addr: &str, k: usize, m: &knng::cli::ArgMatches) -> anyhow::Res
         info.dim
     );
     let t0 = std::time::Instant::now();
-    let (results, windows) = client.query_batch(&queries, k, route_top_m)?;
+    let (results, windows, degradation) =
+        client.query_batch_deadline(&queries, k, route_top_m, deadline_us)?;
     let secs = t0.elapsed().as_secs_f64();
     print_result_rows(&results);
     let coalesced = windows.iter().filter(|w| w.coalesced).count();
     eprintln!(
         "{} queries over the wire in {secs:.3}s ({:.0} qps) \
-         [server {addr}: n={}, dim={}, k={}; {coalesced} coalesced]",
+         [server {addr}: n={}, dim={}, k={}; {coalesced} coalesced; {} retr(ies)]",
         results.len(),
         results.len() as f64 / secs.max(1e-12),
         info.n,
         info.dim,
         info.k,
+        client.retries(),
     );
+    if let Some(d) = degradation {
+        eprintln!("WARNING: degraded answers: {d}");
+    }
     Ok(())
 }
 

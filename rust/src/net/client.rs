@@ -1,16 +1,28 @@
 //! A small blocking `KNNQv1` client: connect / ping / query_batch /
-//! shutdown. Used by the CLI `query --connect` path, the loopback
-//! integration tests, and `bench_net_throughput`.
+//! health / shutdown. Used by the CLI `query --connect` path, the
+//! loopback integration tests, and the net benches.
 //!
-//! Server-side rejections (typed [`Frame::Error`] replies) surface as
-//! a downcastable [`ServerRejection`], so callers can distinguish "the
-//! server said no" (and why) from transport failures.
+//! Failure taxonomy, so callers (and the retry layer) can tell what
+//! happened:
+//!
+//! * [`ServerRejection`] — a typed [`Frame::Error`] reply: the server
+//!   understood the request and said no. Permanent; retrying the same
+//!   request gets the same answer.
+//! * [`TransportError`] — the bytes never made it: connection refused,
+//!   I/O timeout, mid-stream disconnect, or another I/O failure. The
+//!   first three are *transient* ([`TransportError::is_transient`]) —
+//!   queries are idempotent, so [`RetryingClient`] reconnects and
+//!   retries them with capped exponential backoff and deterministic
+//!   seeded jitter.
+//!
+//! Both are downcastable from the `anyhow::Error` the methods return.
 
-use super::wire::{self, ErrorCode, Frame, QueryFrame};
-use crate::api::{Neighbor, WindowInfo};
+use super::wire::{self, ErrorCode, Frame, HealthFrame, QueryFrame};
+use crate::api::{Degradation, Neighbor, WindowInfo};
 use crate::dataset::AlignedMatrix;
+use crate::util::rng::SplitMix64;
 use std::io::{BufReader, BufWriter, Write};
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 /// Corpus shape reported by a [`Frame::Pong`].
@@ -44,6 +56,76 @@ impl std::fmt::Display for ServerRejection {
 
 impl std::error::Error for ServerRejection {}
 
+/// Why the transport failed, split by what a retry policy needs to
+/// know. Everything but [`Io`](Self::Io) is transient: the failure
+/// says nothing about the request itself, so an idempotent request is
+/// safe to retry on a fresh connection.
+#[derive(Debug)]
+pub enum TransportError {
+    /// The TCP connect itself failed (refused, unreachable, …).
+    ConnectFailed(std::io::Error),
+    /// An I/O deadline expired waiting to send or receive.
+    TimedOut(std::io::Error),
+    /// The peer went away mid-stream: a clean close between frames
+    /// (`None`) or a reset/broken pipe/torn frame (`Some`).
+    Disconnected(Option<std::io::Error>),
+    /// Any other I/O failure; not assumed transient.
+    Io(std::io::Error),
+}
+
+impl TransportError {
+    /// True when a reconnect-and-retry has a chance of succeeding.
+    pub fn is_transient(&self) -> bool {
+        !matches!(self, Self::Io(_))
+    }
+
+    /// Classify an I/O error from an established stream.
+    fn from_io(e: std::io::Error) -> Self {
+        use std::io::ErrorKind as K;
+        match e.kind() {
+            // read/write timeouts surface as TimedOut or WouldBlock
+            // depending on platform
+            K::TimedOut | K::WouldBlock => Self::TimedOut(e),
+            K::UnexpectedEof | K::ConnectionReset | K::ConnectionAborted | K::BrokenPipe => {
+                Self::Disconnected(Some(e))
+            }
+            _ => Self::Io(e),
+        }
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Self::ConnectFailed(e) => write!(f, "connection failed: {e}"),
+            Self::TimedOut(e) => write!(f, "i/o timed out: {e}"),
+            Self::Disconnected(Some(e)) => write!(f, "server disconnected mid-stream: {e}"),
+            Self::Disconnected(None) => f.write_str("server closed the connection"),
+            Self::Io(e) => write!(f, "transport i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TransportError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Self::ConnectFailed(e) | Self::TimedOut(e) | Self::Io(e) => Some(e),
+            Self::Disconnected(e) => e.as_ref().map(|e| e as _),
+        }
+    }
+}
+
+/// Map a [`wire::WireError`] from an established connection into the
+/// client failure taxonomy: transport failures become downcastable
+/// [`TransportError`]s, protocol violations stay [`wire::WireError`].
+fn wire_to_error(e: wire::WireError) -> anyhow::Error {
+    match e {
+        wire::WireError::Eof => anyhow::Error::new(TransportError::Disconnected(None)),
+        wire::WireError::Io(io) => anyhow::Error::new(TransportError::from_io(io)),
+        protocol => anyhow::Error::new(protocol),
+    }
+}
+
 /// Blocking `KNNQv1` client over one TCP connection.
 pub struct NetClient {
     reader: BufReader<TcpStream>,
@@ -59,13 +141,14 @@ impl NetClient {
     }
 
     /// Connect with explicit read/write timeouts (`None` blocks
-    /// indefinitely) and reply-frame size cap.
+    /// indefinitely) and reply-frame size cap. A failed connect is a
+    /// downcastable [`TransportError::ConnectFailed`].
     pub fn connect_with<A: ToSocketAddrs>(
         addr: A,
         io_timeout: Option<Duration>,
         max_frame: usize,
     ) -> crate::Result<Self> {
-        let stream = TcpStream::connect(addr)?;
+        let stream = TcpStream::connect(addr).map_err(TransportError::ConnectFailed)?;
         let _ = stream.set_nodelay(true);
         stream.set_read_timeout(io_timeout)?;
         stream.set_write_timeout(io_timeout)?;
@@ -75,11 +158,13 @@ impl NetClient {
     }
 
     /// Send one frame and read one reply, mapping error frames to a
-    /// typed [`ServerRejection`].
+    /// typed [`ServerRejection`] and transport failures to a typed
+    /// [`TransportError`].
     fn round_trip(&mut self, frame: &Frame) -> crate::Result<Frame> {
-        wire::write_frame(&mut self.writer, frame)?;
-        self.writer.flush()?;
-        let reply = wire::read_frame(&mut self.reader, self.max_frame)?;
+        wire::write_frame(&mut self.writer, frame).map_err(TransportError::from_io)?;
+        self.writer.flush().map_err(TransportError::from_io)?;
+        let reply =
+            wire::read_frame(&mut self.reader, self.max_frame).map_err(wire_to_error)?;
         if let Frame::Error(e) = reply {
             let rejection = ServerRejection { code: e.code, detail: e.detail, message: e.message };
             return Err(anyhow::Error::new(rejection));
@@ -100,17 +185,57 @@ impl NetClient {
         }
     }
 
+    /// Per-shard liveness and fault counters of the serving pool (all
+    /// zeros with an empty shard list when the server has no pool).
+    pub fn health(&mut self) -> crate::Result<HealthFrame> {
+        self.token += 1;
+        let token = self.token;
+        match self.round_trip(&Frame::Health { token })? {
+            Frame::HealthReply(h) => {
+                anyhow::ensure!(
+                    h.token == token,
+                    "health reply echoed token {}, expected {token}",
+                    h.token
+                );
+                Ok(h)
+            }
+            other => anyhow::bail!("expected a health reply, got {other:?}"),
+        }
+    }
+
     /// Send a dense query tile and block for the per-query neighbor
     /// lists plus the window diagnostics each query rode with. The
     /// tile's `f32` bit patterns cross the wire exactly, so answers
     /// are bit-identical to submitting the same rows to the server's
     /// `ServeFront` in-process.
+    ///
+    /// Sends no deadline and drops any degradation tag (a server
+    /// serving from survivors still answers, with the honest partial
+    /// merge). Callers that need the typed record use
+    /// [`query_batch_deadline`](Self::query_batch_deadline).
     pub fn query_batch(
         &mut self,
         tile: &AlignedMatrix,
         k: usize,
         route_top_m: Option<usize>,
     ) -> crate::Result<(Vec<Vec<Neighbor>>, Vec<WindowInfo>)> {
+        let (results, windows, _degradation) =
+            self.query_batch_deadline(tile, k, route_top_m, 0)?;
+        Ok((results, windows))
+    }
+
+    /// [`query_batch`](Self::query_batch) with an end-to-end latency
+    /// budget in microseconds (`0` = none) and the degradation record:
+    /// `None` means every shard contributed; `Some` carries which
+    /// shards the server dropped and why, with the neighbors being the
+    /// honest merge over the rest.
+    pub fn query_batch_deadline(
+        &mut self,
+        tile: &AlignedMatrix,
+        k: usize,
+        route_top_m: Option<usize>,
+        deadline_us: u64,
+    ) -> crate::Result<(Vec<Vec<Neighbor>>, Vec<WindowInfo>, Option<Degradation>)> {
         let mut data = Vec::with_capacity(tile.n() * tile.dim());
         for i in 0..tile.n() {
             data.extend_from_slice(tile.row_logical(i));
@@ -120,21 +245,25 @@ impl NetClient {
             route_top_m: route_top_m.unwrap_or(0) as u32,
             count: tile.n() as u32,
             dim: tile.dim() as u32,
+            deadline_us,
             data,
         };
-        match self.round_trip(&Frame::Query(query))? {
-            Frame::Results(r) => {
-                anyhow::ensure!(
-                    r.results.len() == tile.n() && r.windows.len() == tile.n(),
-                    "server answered {} results / {} windows for {} queries",
-                    r.results.len(),
-                    r.windows.len(),
-                    tile.n()
-                );
-                Ok((r.results, r.windows))
+        let (r, degradation) = match self.round_trip(&Frame::Query(query))? {
+            Frame::Results(r) => (r, None),
+            Frame::Degraded(d) => {
+                let degradation = d.degradation();
+                (d.results, Some(degradation))
             }
             other => anyhow::bail!("expected results, got {other:?}"),
-        }
+        };
+        anyhow::ensure!(
+            r.results.len() == tile.n() && r.windows.len() == tile.n(),
+            "server answered {} results / {} windows for {} queries",
+            r.results.len(),
+            r.windows.len(),
+            tile.n()
+        );
+        Ok((r.results, r.windows, degradation))
     }
 
     /// Ask the server to drain and exit; consumes the client (the
@@ -144,5 +273,287 @@ impl NetClient {
             Frame::Shutdown => Ok(()),
             other => anyhow::bail!("expected a shutdown acknowledgement, got {other:?}"),
         }
+    }
+}
+
+/// Backoff/retry knobs for a [`RetryingClient`]. Delays grow as
+/// `base_delay · 2^(attempt−1)` capped at `max_delay`, each scaled by
+/// a jitter factor in `[0.5, 1.0)` drawn counter-based from `seed` —
+/// the same SplitMix64 discipline as the build engine, so a replayed
+/// run backs off identically.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RetryPolicy {
+    /// Total attempts per operation (first try included; ≥ 1).
+    pub max_attempts: u32,
+    /// Backoff before the second attempt.
+    pub base_delay: Duration,
+    /// Backoff ceiling.
+    pub max_delay: Duration,
+    /// Jitter seed (deterministic: same seed, same delays).
+    pub seed: u64,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self {
+            max_attempts: 3,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_secs(1),
+            seed: 0,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before attempt `attempt + 1`, given `attempt ≥ 1`
+    /// failures so far: capped exponential with seeded jitter.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let doublings = attempt.saturating_sub(1).min(32);
+        let exp = self
+            .base_delay
+            .saturating_mul(1u32 << doublings.min(31))
+            .min(self.max_delay);
+        let draw = SplitMix64::at(self.seed, attempt as u64).next_u64();
+        let unit = (draw >> 11) as f64 * (1.0 / (1u64 << 53) as f64);
+        exp.mul_f64(0.5 + 0.5 * unit)
+    }
+}
+
+/// A [`NetClient`] wrapper that reconnects and retries **transient**
+/// transport failures (see [`TransportError::is_transient`]) with the
+/// capped, jittered backoff of a [`RetryPolicy`]. Safe because every
+/// `KNNQv1` request is idempotent: a query answered twice is the same
+/// answer, and a retried ping/health probe is just a fresher snapshot.
+/// [`ServerRejection`]s and protocol errors are permanent and surface
+/// immediately.
+pub struct RetryingClient {
+    addr: SocketAddr,
+    policy: RetryPolicy,
+    io_timeout: Option<Duration>,
+    max_frame: usize,
+    conn: Option<NetClient>,
+    retries: u64,
+}
+
+impl RetryingClient {
+    /// Resolve `addr` once and connect (retrying the connect itself
+    /// under `policy`).
+    pub fn connect<A: ToSocketAddrs>(addr: A, policy: RetryPolicy) -> crate::Result<Self> {
+        anyhow::ensure!(policy.max_attempts >= 1, "retry policy needs at least one attempt");
+        let addr = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| anyhow::anyhow!("address resolved to nothing"))?;
+        let mut client = Self {
+            addr,
+            policy,
+            io_timeout: Some(Duration::from_secs(30)),
+            max_frame: wire::DEFAULT_MAX_FRAME,
+            conn: None,
+            retries: 0,
+        };
+        client.ensure_connected_with_retry()?;
+        Ok(client)
+    }
+
+    /// Override the per-connection I/O timeout (`None` blocks
+    /// indefinitely). Applies to the *next* (re)connect.
+    pub fn io_timeout(mut self, io_timeout: Option<Duration>) -> Self {
+        self.io_timeout = io_timeout;
+        self
+    }
+
+    /// Transient failures retried so far (monotonic).
+    pub fn retries(&self) -> u64 {
+        self.retries
+    }
+
+    fn ensure_connected(&mut self) -> crate::Result<()> {
+        if self.conn.is_none() {
+            self.conn = Some(NetClient::connect_with(self.addr, self.io_timeout, self.max_frame)?);
+        }
+        Ok(())
+    }
+
+    fn ensure_connected_with_retry(&mut self) -> crate::Result<()> {
+        self.with_retry(|_client| Ok(()))
+    }
+
+    /// Run `op` over a live connection, reconnecting and retrying on
+    /// transient transport failures until the policy's attempts are
+    /// spent; the last error is returned.
+    fn with_retry<T>(
+        &mut self,
+        mut op: impl FnMut(&mut NetClient) -> crate::Result<T>,
+    ) -> crate::Result<T> {
+        let mut attempt = 1u32;
+        loop {
+            let result = self.ensure_connected().and_then(|()| {
+                // infallible: ensure_connected either filled `conn` or
+                // errored out of the and_then chain above
+                op(self.conn.as_mut().expect("connection present after ensure_connected"))
+            });
+            let err = match result {
+                Ok(value) => return Ok(value),
+                Err(err) => err,
+            };
+            let transient =
+                err.downcast_ref::<TransportError>().is_some_and(TransportError::is_transient);
+            if !transient || attempt >= self.policy.max_attempts {
+                return Err(err);
+            }
+            // the old connection is suspect either way: rebuild
+            self.conn = None;
+            self.retries += 1;
+            std::thread::sleep(self.policy.backoff(attempt));
+            attempt += 1;
+        }
+    }
+
+    /// [`NetClient::ping`] with reconnect-and-retry.
+    pub fn ping(&mut self) -> crate::Result<ServerInfo> {
+        self.with_retry(|c| c.ping())
+    }
+
+    /// [`NetClient::health`] with reconnect-and-retry.
+    pub fn health(&mut self) -> crate::Result<HealthFrame> {
+        self.with_retry(|c| c.health())
+    }
+
+    /// [`NetClient::query_batch`] with reconnect-and-retry.
+    pub fn query_batch(
+        &mut self,
+        tile: &AlignedMatrix,
+        k: usize,
+        route_top_m: Option<usize>,
+    ) -> crate::Result<(Vec<Vec<Neighbor>>, Vec<WindowInfo>)> {
+        self.with_retry(|c| c.query_batch(tile, k, route_top_m))
+    }
+
+    /// [`NetClient::query_batch_deadline`] with reconnect-and-retry.
+    pub fn query_batch_deadline(
+        &mut self,
+        tile: &AlignedMatrix,
+        k: usize,
+        route_top_m: Option<usize>,
+        deadline_us: u64,
+    ) -> crate::Result<(Vec<Vec<Neighbor>>, Vec<WindowInfo>, Option<Degradation>)> {
+        self.with_retry(|c| c.query_batch_deadline(tile, k, route_top_m, deadline_us))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transport_error_classification() {
+        use std::io::{Error, ErrorKind};
+        assert!(matches!(
+            TransportError::from_io(Error::new(ErrorKind::TimedOut, "t")),
+            TransportError::TimedOut(_)
+        ));
+        assert!(matches!(
+            TransportError::from_io(Error::new(ErrorKind::WouldBlock, "t")),
+            TransportError::TimedOut(_)
+        ));
+        for kind in [
+            ErrorKind::UnexpectedEof,
+            ErrorKind::ConnectionReset,
+            ErrorKind::ConnectionAborted,
+            ErrorKind::BrokenPipe,
+        ] {
+            assert!(matches!(
+                TransportError::from_io(Error::new(kind, "d")),
+                TransportError::Disconnected(Some(_))
+            ));
+        }
+        let other = TransportError::from_io(Error::new(ErrorKind::PermissionDenied, "x"));
+        assert!(matches!(other, TransportError::Io(_)));
+        assert!(!other.is_transient());
+        assert!(TransportError::Disconnected(None).is_transient());
+        assert!(TransportError::ConnectFailed(Error::new(ErrorKind::ConnectionRefused, "r"))
+            .is_transient());
+    }
+
+    #[test]
+    fn wire_errors_map_into_the_taxonomy() {
+        let eof = wire_to_error(wire::WireError::Eof);
+        assert!(matches!(
+            eof.downcast_ref::<TransportError>(),
+            Some(TransportError::Disconnected(None))
+        ));
+        let io = wire_to_error(wire::WireError::Io(std::io::Error::new(
+            std::io::ErrorKind::TimedOut,
+            "t",
+        )));
+        assert!(matches!(io.downcast_ref::<TransportError>(), Some(TransportError::TimedOut(_))));
+        // protocol violations are NOT transport errors: never retried
+        let proto = wire_to_error(wire::WireError::Protocol {
+            code: ErrorCode::Malformed,
+            detail: 0,
+            message: "bad".into(),
+            desync: false,
+        });
+        assert!(proto.downcast_ref::<TransportError>().is_none());
+        assert!(proto.downcast_ref::<wire::WireError>().is_some());
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential_with_deterministic_jitter() {
+        let policy = RetryPolicy {
+            max_attempts: 10,
+            base_delay: Duration::from_millis(10),
+            max_delay: Duration::from_millis(200),
+            seed: 42,
+        };
+        let delays: Vec<Duration> = (1..=8).map(|a| policy.backoff(a)).collect();
+        let replay: Vec<Duration> = (1..=8).map(|a| policy.backoff(a)).collect();
+        assert_eq!(delays, replay, "same seed must replay the same delays");
+        for (i, d) in delays.iter().enumerate() {
+            let attempt = i as u32 + 1;
+            let exp = policy
+                .base_delay
+                .saturating_mul(1 << attempt.saturating_sub(1).min(31))
+                .min(policy.max_delay);
+            assert!(*d >= exp.mul_f64(0.5), "attempt {attempt}: {d:?} below jitter floor");
+            // <= not <: mul_f64 rounds to the nanosecond, so a draw at
+            // the top of the jitter band can land exactly on exp
+            assert!(*d <= exp, "attempt {attempt}: {d:?} above un-jittered {exp:?}");
+        }
+        // a different seed jitters differently (overwhelmingly likely
+        // across 8 draws)
+        let other = RetryPolicy { seed: 43, ..policy };
+        assert_ne!(delays, (1..=8).map(|a| other.backoff(a)).collect::<Vec<_>>());
+        // deep attempts saturate at the cap's jitter band, no overflow
+        assert!(policy.backoff(100) <= policy.max_delay);
+    }
+
+    #[test]
+    fn connect_refused_is_typed_and_retry_gives_up() {
+        // bind-then-drop gives a port with (almost certainly) no
+        // listener; connect must fail as ConnectFailed
+        let addr = {
+            let sock = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            sock.local_addr().unwrap()
+        };
+        let err = NetClient::connect_with(addr, Some(Duration::from_millis(200)), 1024)
+            .err()
+            .expect("connect to a dead port must fail");
+        assert!(matches!(
+            err.downcast_ref::<TransportError>(),
+            Some(TransportError::ConnectFailed(_))
+        ));
+        let policy = RetryPolicy {
+            max_attempts: 2,
+            base_delay: Duration::from_millis(1),
+            max_delay: Duration::from_millis(2),
+            seed: 7,
+        };
+        let err = RetryingClient::connect(addr, policy).err().expect("retries must give up");
+        assert!(matches!(
+            err.downcast_ref::<TransportError>(),
+            Some(TransportError::ConnectFailed(_))
+        ));
     }
 }

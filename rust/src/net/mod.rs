@@ -10,19 +10,26 @@
 //!   the existing micro-batching windows, so cross-connection batching
 //!   and duplicate coalescing apply across the wire; graceful shutdown
 //!   (SIGINT / shutdown frame) drains in-flight windows.
-//! * [`client`] — a small blocking client (connect / ping /
+//! * [`client`] — a small blocking client (connect / ping / health /
 //!   query_batch / shutdown) for `query --connect`, the loopback
-//!   tests, and `bench_net_throughput`.
+//!   tests, and `bench_net_throughput`, plus [`RetryingClient`], which
+//!   reconnects and retries transient transport failures with capped,
+//!   deterministically jittered backoff.
 //!
 //! The serving contract: a query tile served over loopback is
 //! **bit-identical** to the same tile submitted to the `ServeFront`
 //! in-process — `f32` values cross the wire as exact bit patterns and
-//! the server adds no computation of its own.
+//! the server adds no computation of its own. Under faults the server
+//! degrades rather than fails: answers merged from surviving shards
+//! arrive as `Degraded` frames carrying a typed record of what was
+//! missing, and `Health` probes expose per-shard liveness.
 
 pub mod client;
 pub mod server;
 pub mod wire;
 
-pub use client::{NetClient, ServerInfo, ServerRejection};
+pub use client::{NetClient, RetryPolicy, RetryingClient, ServerInfo, ServerRejection, TransportError};
 pub use server::{install_sigint_handler, NetServer, NetStats, ServerConfig, ServerHandle};
-pub use wire::{ErrorCode, ErrorFrame, Frame, QueryFrame, ResultsFrame, WireError};
+pub use wire::{
+    DegradedFrame, ErrorCode, ErrorFrame, Frame, HealthFrame, QueryFrame, ResultsFrame, WireError,
+};

@@ -14,6 +14,12 @@
 //!   connection read/write timeouts drop silent connections back to
 //!   the worker, and the max-frame-size guard rejects giant length
 //!   prefixes before allocating.
+//! * **Partial answers beat no answers** — a query frame carrying a
+//!   `deadline_us` budget is submitted with a deadline; if the pool
+//!   underneath drops shards (deadline missed, worker dead) the reply
+//!   is a typed [`Frame::Degraded`] carrying the honest partial merge,
+//!   and [`Frame::Health`] probes report per-shard liveness plus the
+//!   pool's fault counters at any time.
 //! * **Graceful shutdown drains in-flight windows** — a SIGINT (via
 //!   [`install_sigint_handler`]), a wire [`Frame::Shutdown`], or
 //!   [`ServerHandle::request_shutdown`] stops the accept loop, lets
@@ -22,8 +28,11 @@
 //!   [`ErrorCode::ShuttingDown`]), then joins the workers and shuts
 //!   the front down, which serves everything already queued.
 
-use super::wire::{self, ErrorCode, ErrorFrame, Frame, QueryFrame, ResultsFrame, WireError};
-use crate::api::{FrontStats, KMismatch, ServeFront};
+use super::wire::{
+    self, DegradedFrame, ErrorCode, ErrorFrame, Frame, HealthFrame, QueryFrame, ResultsFrame,
+    WireError,
+};
+use crate::api::{Degradation, FrontStats, KMismatch, ServeFront, ShardState};
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -264,7 +273,11 @@ fn worker_loop(
 ) {
     loop {
         let stream = {
-            let guard = rx.lock().expect("connection queue lock");
+            // poison recovery, not a panic: the queue itself is just a
+            // Receiver, always consistent, and a sibling worker that
+            // panicked while holding the lock must not cascade into
+            // killing every other worker
+            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
             guard.recv()
         };
         let Ok(stream) = stream else {
@@ -326,7 +339,9 @@ fn handle_connection(
                     serve_query(front, q)
                 }
             }
-            Frame::Pong { .. } | Frame::Results(_) | Frame::Error(_) => {
+            Frame::Health { token } => health_reply(front, token),
+            Frame::Pong { .. } | Frame::Results(_) | Frame::Error(_) | Frame::Degraded(_)
+            | Frame::HealthReply(_) => {
                 counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
                 let msg = "unexpected server-to-client frame kind".to_string();
                 error_reply(ErrorCode::Malformed, 0, msg)
@@ -360,9 +375,15 @@ fn serve_query(front: &ServeFront, q: QueryFrame) -> Frame {
     }
     let dim = q.dim as usize;
     let k = q.k as usize;
+    let budget = Duration::from_micros(q.deadline_us);
     let mut tickets = Vec::with_capacity(q.count as usize);
     for row in q.data.chunks_exact(dim) {
-        match front.submit_with_k(row.to_vec(), k) {
+        let submitted = if q.deadline_us > 0 {
+            front.submit_with_k_deadline(row.to_vec(), k, budget)
+        } else {
+            front.submit_with_k(row.to_vec(), k)
+        };
+        match submitted {
             Ok(ticket) => tickets.push(ticket),
             Err(e) => {
                 // tickets already submitted are simply dropped: the
@@ -376,18 +397,66 @@ fn serve_query(front: &ServeFront, q: QueryFrame) -> Frame {
     }
     let mut results = Vec::with_capacity(tickets.len());
     let mut windows = Vec::with_capacity(tickets.len());
+    // a tile's rows may ride in different windows; the frame-level
+    // degradation is their union (all missing shards, worst cause)
+    let mut degradation: Option<Degradation> = None;
     for ticket in tickets {
         match ticket.wait() {
             Ok(served) => {
                 results.push(served.neighbors);
                 windows.push(served.window);
+                if let Some(d) = served.degradation {
+                    degradation = Some(match degradation.take() {
+                        None => d,
+                        Some(mut acc) => {
+                            acc.cause = acc.cause.max(d.cause);
+                            acc.shards_missing.extend(d.shards_missing);
+                            acc.shards_missing.sort_unstable();
+                            acc.shards_missing.dedup();
+                            acc
+                        }
+                    });
+                }
             }
             Err(e) => {
                 return error_reply(ErrorCode::ShuttingDown, 0, format!("front went away: {e}"));
             }
         }
     }
-    Frame::Results(ResultsFrame { k: q.k, results, windows })
+    let frame = ResultsFrame { k: q.k, results, windows };
+    match degradation {
+        None => Frame::Results(frame),
+        Some(d) => Frame::Degraded(DegradedFrame {
+            results: frame,
+            shards_missing: d.shards_missing,
+            cause: d.cause,
+        }),
+    }
+}
+
+/// Answer a health probe from the front's live pool view; a front over
+/// a plain (unsupervised) searcher reports zero threads and no shards.
+fn health_reply(front: &ServeFront, token: u64) -> Frame {
+    match front.health() {
+        Some(stats) => Frame::HealthReply(HealthFrame {
+            token,
+            threads: stats.threads as u32,
+            respawns: stats.respawns,
+            contained_panics: stats.contained_panics,
+            lost_replies: stats.lost_replies,
+            deadline_misses: stats.deadline_misses,
+            shards_alive: stats.shards.iter().map(|s| *s == ShardState::Healthy).collect(),
+        }),
+        None => Frame::HealthReply(HealthFrame {
+            token,
+            threads: 0,
+            respawns: 0,
+            contained_panics: 0,
+            lost_replies: 0,
+            deadline_misses: 0,
+            shards_alive: Vec::new(),
+        }),
+    }
 }
 
 fn error_reply(code: ErrorCode, detail: u32, message: String) -> Frame {

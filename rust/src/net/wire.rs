@@ -18,14 +18,23 @@
 //!
 //! Frame kinds:
 //!
-//! | kind | frame    | body |
-//! |-----:|----------|------|
-//! | 1    | Ping     | `token u64` |
-//! | 2    | Pong     | `token u64, n u64, dim u32, k u32` |
-//! | 3    | Query    | `k u32, route_top_m u32 (0 = full fan-out), count u32, dim u32, count·dim × f32` |
-//! | 4    | Results  | `count u32, k u32`, per query `cnt u32 + cnt × (id u32, dist f32)`, per query `requests u32, unique u32, coalesced u8` |
-//! | 5    | Error    | `code u8, detail u32, msg_len u16, msg_len × utf-8` |
-//! | 6    | Shutdown | empty |
+//! | kind | frame       | body |
+//! |-----:|-------------|------|
+//! | 1    | Ping        | `token u64` |
+//! | 2    | Pong        | `token u64, n u64, dim u32, k u32` |
+//! | 3    | Query       | `k u32, route_top_m u32 (0 = full fan-out), count u32, dim u32, deadline_us u64 (0 = none; v2+), count·dim × f32` |
+//! | 4    | Results     | `count u32, k u32`, per query `cnt u32 + cnt × (id u32, dist f32)`, per query `requests u32, unique u32, coalesced u8` |
+//! | 5    | Error       | `code u8, detail u32, msg_len u16, msg_len × utf-8` |
+//! | 6    | Shutdown    | empty |
+//! | 7    | Degraded    | `cause u8, missing u32, missing × u32 (shard ids)`, then a Results body (v2+) |
+//! | 8    | Health      | `token u64` (v2+) |
+//! | 9    | HealthReply | `token u64, threads u32, respawns u64, panics u64, lost u64, misses u64, shards u32, shards × u8 (1 = alive)` (v2+) |
+//!
+//! Version 2 added `deadline_us` to Query and the three fault-tolerance
+//! kinds (7–9). Version 1 frames still decode — a v1 Query has no
+//! deadline field and comes back as `deadline_us == 0` ("no deadline"),
+//! so legacy clients keep working unchanged. This build always writes
+//! version 2.
 //!
 //! `f32` values cross the wire as their exact little-endian bit
 //! patterns (`to_le_bytes`/`from_le_bytes`), so NaN payloads and
@@ -40,14 +49,17 @@
 //! `desync: true` means the length prefix itself was untrustworthy and
 //! the connection must close.
 
-use crate::api::{Neighbor, WindowInfo};
+use crate::api::{DegradeCause, Degradation, Neighbor, WindowInfo};
 use crate::graph::io::Fnv;
 use std::io::{Read, Write};
 
 /// Magic bytes opening every `KNNQv1` payload.
 pub const MAGIC: &[u8; 4] = b"KNNQ";
-/// Protocol version this build speaks.
-pub const VERSION: u8 = 1;
+/// Protocol version this build writes.
+pub const VERSION: u8 = 2;
+/// Oldest version this build still decodes (v1: no query deadlines, no
+/// degraded/health kinds).
+pub const LEGACY_VERSION: u8 = 1;
 /// Smallest legal payload: magic + version + kind + flags + crc.
 pub const MIN_PAYLOAD: usize = 16;
 /// Default cap on the payload length prefix (16 MiB); anything larger
@@ -131,6 +143,9 @@ pub struct QueryFrame {
     pub count: u32,
     /// Dimensionality of each row.
     pub dim: u32,
+    /// End-to-end latency budget in microseconds; `0` means no
+    /// deadline. v1 frames have no such field and decode as `0`.
+    pub deadline_us: u64,
     /// Row-major `count × dim` tile.
     pub data: Vec<f32>,
 }
@@ -145,6 +160,46 @@ pub struct ResultsFrame {
     pub results: Vec<Vec<Neighbor>>,
     /// Per-query window diagnostics (same order as `results`).
     pub windows: Vec<WindowInfo>,
+}
+
+/// A degraded batch answer: the honest merge over the shards that did
+/// answer, plus the typed record of what went missing and why.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegradedFrame {
+    /// The partial answers (same layout as a full [`ResultsFrame`]).
+    pub results: ResultsFrame,
+    /// Slice-order shard indices absent from the merge, ascending.
+    pub shards_missing: Vec<u32>,
+    /// The most severe reason anything went missing.
+    pub cause: DegradeCause,
+}
+
+impl DegradedFrame {
+    /// The api-level degradation record this frame carries.
+    pub fn degradation(&self) -> Degradation {
+        Degradation { shards_missing: self.shards_missing.clone(), cause: self.cause }
+    }
+}
+
+/// A health snapshot reply: per-shard liveness plus the pool's fault
+/// counters (zeros and an empty shard list over a server without a
+/// supervised pool).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HealthFrame {
+    /// The token from the health probe being answered.
+    pub token: u64,
+    /// Worker threads in the serving pool (0 = no pool).
+    pub threads: u32,
+    /// Workers respawned after dying.
+    pub respawns: u64,
+    /// Shard-search panics contained.
+    pub contained_panics: u64,
+    /// Replies lost from live workers.
+    pub lost_replies: u64,
+    /// Shards dropped by expired deadlines.
+    pub deadline_misses: u64,
+    /// Per-shard liveness, slice order (`true` = serving).
+    pub shards_alive: Vec<bool>,
 }
 
 /// A typed error reply.
@@ -186,6 +241,17 @@ pub enum Frame {
     /// Graceful-shutdown request (client → server) or acknowledgement
     /// (server → client, sent before the server drains and exits).
     Shutdown,
+    /// A degraded batch answer (shards dropped by a deadline or a dead
+    /// worker). v2+.
+    Degraded(DegradedFrame),
+    /// Liveness/health probe carrying an echo token. v2+.
+    Health {
+        /// Echo token the server must return in its
+        /// [`Frame::HealthReply`].
+        token: u64,
+    },
+    /// Reply to [`Frame::Health`]. v2+.
+    HealthReply(HealthFrame),
 }
 
 impl Frame {
@@ -197,6 +263,9 @@ impl Frame {
             Self::Results(_) => 4,
             Self::Error(_) => 5,
             Self::Shutdown => 6,
+            Self::Degraded(_) => 7,
+            Self::Health { .. } => 8,
+            Self::HealthReply(_) => 9,
         }
     }
 }
@@ -297,24 +366,31 @@ fn encode_body(buf: &mut Vec<u8>, frame: &Frame) {
             buf.extend_from_slice(&q.route_top_m.to_le_bytes());
             buf.extend_from_slice(&q.count.to_le_bytes());
             buf.extend_from_slice(&q.dim.to_le_bytes());
+            buf.extend_from_slice(&q.deadline_us.to_le_bytes());
             for &x in &q.data {
                 buf.extend_from_slice(&x.to_le_bytes());
             }
         }
-        Frame::Results(r) => {
-            buf.extend_from_slice(&(r.results.len() as u32).to_le_bytes());
-            buf.extend_from_slice(&r.k.to_le_bytes());
-            for hits in &r.results {
-                buf.extend_from_slice(&(hits.len() as u32).to_le_bytes());
-                for h in hits {
-                    buf.extend_from_slice(&h.id.0.to_le_bytes());
-                    buf.extend_from_slice(&h.dist.to_le_bytes());
-                }
+        Frame::Results(r) => encode_results(buf, r),
+        Frame::Degraded(d) => {
+            buf.push(d.cause.as_u8());
+            buf.extend_from_slice(&(d.shards_missing.len() as u32).to_le_bytes());
+            for &s in &d.shards_missing {
+                buf.extend_from_slice(&s.to_le_bytes());
             }
-            for wnd in &r.windows {
-                buf.extend_from_slice(&(wnd.requests as u32).to_le_bytes());
-                buf.extend_from_slice(&(wnd.unique as u32).to_le_bytes());
-                buf.push(wnd.coalesced as u8);
+            encode_results(buf, &d.results);
+        }
+        Frame::Health { token } => buf.extend_from_slice(&token.to_le_bytes()),
+        Frame::HealthReply(h) => {
+            buf.extend_from_slice(&h.token.to_le_bytes());
+            buf.extend_from_slice(&h.threads.to_le_bytes());
+            buf.extend_from_slice(&h.respawns.to_le_bytes());
+            buf.extend_from_slice(&h.contained_panics.to_le_bytes());
+            buf.extend_from_slice(&h.lost_replies.to_le_bytes());
+            buf.extend_from_slice(&h.deadline_misses.to_le_bytes());
+            buf.extend_from_slice(&(h.shards_alive.len() as u32).to_le_bytes());
+            for &alive in &h.shards_alive {
+                buf.push(alive as u8);
             }
         }
         Frame::Error(e) => {
@@ -326,6 +402,25 @@ fn encode_body(buf: &mut Vec<u8>, frame: &Frame) {
             buf.extend_from_slice(&msg[..take]);
         }
         Frame::Shutdown => {}
+    }
+}
+
+/// Shared body layout of [`Frame::Results`] and the results section of
+/// [`Frame::Degraded`].
+fn encode_results(buf: &mut Vec<u8>, r: &ResultsFrame) {
+    buf.extend_from_slice(&(r.results.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&r.k.to_le_bytes());
+    for hits in &r.results {
+        buf.extend_from_slice(&(hits.len() as u32).to_le_bytes());
+        for h in hits {
+            buf.extend_from_slice(&h.id.0.to_le_bytes());
+            buf.extend_from_slice(&h.dist.to_le_bytes());
+        }
+    }
+    for wnd in &r.windows {
+        buf.extend_from_slice(&(wnd.requests as u32).to_le_bytes());
+        buf.extend_from_slice(&(wnd.unique as u32).to_le_bytes());
+        buf.push(wnd.coalesced as u8);
     }
 }
 
@@ -385,11 +480,13 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
         return Err(WireError::malformed("bad magic"));
     }
     let version = payload[4];
-    if version != VERSION {
+    if !(LEGACY_VERSION..=VERSION).contains(&version) {
         return Err(WireError::Protocol {
             code: ErrorCode::UnsupportedVersion,
             detail: version as u32,
-            message: format!("version {version} not supported (this build speaks {VERSION})"),
+            message: format!(
+                "version {version} not supported (this build speaks {LEGACY_VERSION}..={VERSION})"
+            ),
             desync: false,
         });
     }
@@ -402,18 +499,20 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
         return Err(WireError::malformed(format!("unknown flags {flags:#06x}")));
     }
     let mut dec = Dec { buf: &payload[8..body_end], pos: 0 };
-    let frame = decode_body(kind, &mut dec)?;
+    let frame = decode_body(version, kind, &mut dec)?;
     dec.done()?;
     Ok(frame)
 }
 
-fn decode_body(kind: u8, dec: &mut Dec<'_>) -> Result<Frame, WireError> {
+fn decode_body(version: u8, kind: u8, dec: &mut Dec<'_>) -> Result<Frame, WireError> {
     match kind {
         1 => Ok(Frame::Ping { token: dec.u64()? }),
         2 => Ok(Frame::Pong { token: dec.u64()?, n: dec.u64()?, dim: dec.u32()?, k: dec.u32()? }),
         3 => {
             let (k, route_top_m) = (dec.u32()?, dec.u32()?);
             let (count, dim) = (dec.u32()?, dec.u32()?);
+            // v1 queries have no deadline field: decode as "no deadline"
+            let deadline_us = if version >= 2 { dec.u64()? } else { 0 };
             let cells = match (count as usize).checked_mul(dim as usize) {
                 Some(c) if c.checked_mul(4) == Some(dec.remaining()) => c,
                 _ => {
@@ -425,32 +524,52 @@ fn decode_body(kind: u8, dec: &mut Dec<'_>) -> Result<Frame, WireError> {
             for _ in 0..cells {
                 data.push(dec.f32()?);
             }
-            Ok(Frame::Query(QueryFrame { k, route_top_m, count, dim, data }))
+            Ok(Frame::Query(QueryFrame { k, route_top_m, count, dim, deadline_us, data }))
         }
-        4 => {
-            let count = dec.u32()? as usize;
-            let k = dec.u32()?;
-            let mut results = Vec::new();
-            for _ in 0..count {
-                let cnt = dec.u32()? as usize;
-                if cnt > dec.remaining() / 8 {
-                    return Err(WireError::malformed("neighbor count exceeds frame body"));
-                }
-                let mut hits = Vec::with_capacity(cnt);
-                for _ in 0..cnt {
-                    hits.push(Neighbor::new(dec.u32()?, dec.f32()?));
-                }
-                results.push(hits);
+        4 => Ok(Frame::Results(decode_results(dec)?)),
+        7 => {
+            let cause_byte = dec.u8()?;
+            let Some(cause) = DegradeCause::from_u8(cause_byte) else {
+                return Err(WireError::malformed(format!(
+                    "unknown degradation cause {cause_byte}"
+                )));
+            };
+            let missing = dec.u32()? as usize;
+            if missing > dec.remaining() / 4 {
+                return Err(WireError::malformed("missing-shard count exceeds frame body"));
             }
-            let mut windows = Vec::with_capacity(count);
-            for _ in 0..count {
-                windows.push(WindowInfo {
-                    requests: dec.u32()? as usize,
-                    unique: dec.u32()? as usize,
-                    coalesced: dec.u8()? != 0,
-                });
+            let mut shards_missing = Vec::with_capacity(missing);
+            for _ in 0..missing {
+                shards_missing.push(dec.u32()?);
             }
-            Ok(Frame::Results(ResultsFrame { k, results, windows }))
+            let results = decode_results(dec)?;
+            Ok(Frame::Degraded(DegradedFrame { results, shards_missing, cause }))
+        }
+        8 => Ok(Frame::Health { token: dec.u64()? }),
+        9 => {
+            let token = dec.u64()?;
+            let threads = dec.u32()?;
+            let respawns = dec.u64()?;
+            let contained_panics = dec.u64()?;
+            let lost_replies = dec.u64()?;
+            let deadline_misses = dec.u64()?;
+            let shards = dec.u32()? as usize;
+            if shards > dec.remaining() {
+                return Err(WireError::malformed("shard count exceeds frame body"));
+            }
+            let mut shards_alive = Vec::with_capacity(shards);
+            for _ in 0..shards {
+                shards_alive.push(dec.u8()? != 0);
+            }
+            Ok(Frame::HealthReply(HealthFrame {
+                token,
+                threads,
+                respawns,
+                contained_panics,
+                lost_replies,
+                deadline_misses,
+                shards_alive,
+            }))
         }
         5 => {
             let code_byte = dec.u8()?;
@@ -466,6 +585,34 @@ fn decode_body(kind: u8, dec: &mut Dec<'_>) -> Result<Frame, WireError> {
         6 => Ok(Frame::Shutdown),
         other => Err(WireError::malformed(format!("unknown frame kind {other}"))),
     }
+}
+
+/// Shared decode of the [`Frame::Results`] body layout (also the tail
+/// of a [`Frame::Degraded`] body).
+fn decode_results(dec: &mut Dec<'_>) -> Result<ResultsFrame, WireError> {
+    let count = dec.u32()? as usize;
+    let k = dec.u32()?;
+    let mut results = Vec::new();
+    for _ in 0..count {
+        let cnt = dec.u32()? as usize;
+        if cnt > dec.remaining() / 8 {
+            return Err(WireError::malformed("neighbor count exceeds frame body"));
+        }
+        let mut hits = Vec::with_capacity(cnt);
+        for _ in 0..cnt {
+            hits.push(Neighbor::new(dec.u32()?, dec.f32()?));
+        }
+        results.push(hits);
+    }
+    let mut windows = Vec::with_capacity(count);
+    for _ in 0..count {
+        windows.push(WindowInfo {
+            requests: dec.u32()? as usize,
+            unique: dec.u32()? as usize,
+            coalesced: dec.u8()? != 0,
+        });
+    }
+    Ok(ResultsFrame { k, results, windows })
 }
 
 /// Bounds-checked little-endian cursor over a frame body; every
@@ -554,6 +701,7 @@ mod tests {
             route_top_m: 0,
             count: 2,
             dim: 3,
+            deadline_us: 2_500,
             data: vec![1.0, -0.0, weird, f32::INFINITY, f32::MIN_POSITIVE, -2.5],
         });
         let Frame::Query(back) = round_trip(&q) else { panic!("wrong kind back") };
@@ -587,7 +735,14 @@ mod tests {
 
     #[test]
     fn empty_query_tile_round_trips() {
-        let q = Frame::Query(QueryFrame { k: 1, route_top_m: 0, count: 0, dim: 8, data: vec![] });
+        let q = Frame::Query(QueryFrame {
+            k: 1,
+            route_top_m: 0,
+            count: 0,
+            dim: 8,
+            deadline_us: 0,
+            data: vec![],
+        });
         assert_eq!(round_trip(&q), q);
     }
 
@@ -666,6 +821,7 @@ mod tests {
         for v in [10u32, 0, 2, 3] {
             payload.extend_from_slice(&v.to_le_bytes());
         }
+        payload.extend_from_slice(&0u64.to_le_bytes()); // deadline_us
         for _ in 0..5 {
             payload.extend_from_slice(&1.0f32.to_le_bytes());
         }
@@ -700,6 +856,114 @@ mod tests {
                 Err(WireError::Protocol { code: ErrorCode::Malformed, desync: false, .. })
             ));
         }
+    }
+
+    #[test]
+    fn legacy_v1_query_decodes_as_no_deadline() {
+        // hand-build a version-1 query frame: no deadline_us field
+        let mut payload = Vec::new();
+        payload.extend_from_slice(MAGIC);
+        payload.push(LEGACY_VERSION);
+        payload.push(3); // kind: Query
+        payload.extend_from_slice(&0u16.to_le_bytes());
+        for v in [7u32, 2, 1, 3] {
+            payload.extend_from_slice(&v.to_le_bytes());
+        }
+        for x in [1.5f32, -0.0, 3.25] {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        let mut crc = Fnv::new();
+        crc.update(&payload);
+        payload.extend_from_slice(&crc.0.to_le_bytes());
+        let mut buf = (payload.len() as u32).to_le_bytes().to_vec();
+        buf.extend_from_slice(&payload);
+        let Frame::Query(q) = read_frame(&mut Cursor::new(buf), DEFAULT_MAX_FRAME).unwrap()
+        else {
+            panic!("expected a query frame back");
+        };
+        assert_eq!((q.k, q.route_top_m, q.count, q.dim), (7, 2, 1, 3));
+        assert_eq!(q.deadline_us, 0, "legacy frames mean 'no deadline'");
+        assert_eq!(q.data.len(), 3);
+        assert_eq!(q.data[1].to_bits(), (-0.0f32).to_bits());
+    }
+
+    #[test]
+    fn degraded_and_health_frames_round_trip() {
+        let d = Frame::Degraded(DegradedFrame {
+            results: ResultsFrame {
+                k: 2,
+                results: vec![vec![Neighbor::new(5, 0.5)], vec![]],
+                windows: vec![
+                    WindowInfo { requests: 2, unique: 2, coalesced: false },
+                    WindowInfo { requests: 2, unique: 2, coalesced: false },
+                ],
+            },
+            shards_missing: vec![1, 3],
+            cause: DegradeCause::DeadlineExpired,
+        });
+        assert_eq!(round_trip(&d), d);
+        let Frame::Degraded(df) = d else { unreachable!() };
+        assert_eq!(df.degradation().shards_missing, vec![1, 3]);
+
+        let probe = Frame::Health { token: 99 };
+        assert_eq!(round_trip(&probe), probe);
+        let h = Frame::HealthReply(HealthFrame {
+            token: 99,
+            threads: 4,
+            respawns: 2,
+            contained_panics: 7,
+            lost_replies: 1,
+            deadline_misses: 12,
+            shards_alive: vec![true, false, true, true],
+        });
+        assert_eq!(round_trip(&h), h);
+        // empty shard list (no pool behind the server) is legal
+        let none = Frame::HealthReply(HealthFrame {
+            token: 1,
+            threads: 0,
+            respawns: 0,
+            contained_panics: 0,
+            lost_replies: 0,
+            deadline_misses: 0,
+            shards_alive: vec![],
+        });
+        assert_eq!(round_trip(&none), none);
+    }
+
+    #[test]
+    fn unknown_degradation_cause_is_malformed() {
+        let mut buf = Vec::new();
+        let d = Frame::Degraded(DegradedFrame {
+            results: ResultsFrame { k: 1, results: vec![], windows: vec![] },
+            shards_missing: vec![0],
+            cause: DegradeCause::ShardDead,
+        });
+        write_frame(&mut buf, &d).unwrap();
+        // the cause byte is the first body byte: 4 B len + 8 B header
+        buf[12] = 200;
+        // re-seal the crc so only the cause byte is at fault
+        let payload_end = buf.len() - 8;
+        let mut crc = Fnv::new();
+        crc.update(&buf[4..payload_end]);
+        buf[payload_end..].copy_from_slice(&crc.0.to_le_bytes());
+        assert!(matches!(
+            read_frame(&mut Cursor::new(buf), DEFAULT_MAX_FRAME),
+            Err(WireError::Protocol { code: ErrorCode::Malformed, desync: false, .. })
+        ));
+    }
+
+    #[test]
+    fn degrade_causes_round_trip_bytes() {
+        for cause in [
+            DegradeCause::DeadlineExpired,
+            DegradeCause::ReplyLost,
+            DegradeCause::ShardPanicked,
+            DegradeCause::ShardDead,
+        ] {
+            assert_eq!(DegradeCause::from_u8(cause.as_u8()), Some(cause));
+        }
+        assert_eq!(DegradeCause::from_u8(0), None);
+        assert_eq!(DegradeCause::from_u8(200), None);
     }
 
     #[test]

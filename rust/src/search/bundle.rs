@@ -839,6 +839,66 @@ mod tests {
     }
 
     #[test]
+    fn truncation_at_every_section_boundary_is_a_typed_error() {
+        // the full layout, all optional sections present — truncate the
+        // file at the start of every section, one byte into it, and one
+        // byte before its end. Every case must return Err (never panic,
+        // never read past the end); from the params section on, the
+        // exact-size check names the mismatch before any strip is read.
+        let (mut bundle, data, _) = build_bundle(120, 61, true);
+        let cent = 3usize;
+        bundle.centroids = Some(test_centroids(&data, cent));
+        assert!(bundle.reordering.is_some() && bundle.norms.is_some());
+        let path = tmp("boundary_trunc.knni");
+        save_index(&path, &bundle).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        let (n, dim, k) = (data.n(), data.dim(), bundle.graph.k());
+        let sections: &[(&str, usize)] = &[
+            ("magic", 8),
+            ("header", 32),
+            ("params", 64),
+            ("ids", n * k * 4),
+            ("dists", n * k * 4),
+            ("data", n * dim * 4),
+            ("sigma", n * 4),
+            ("inv", n * 4),
+            ("norms", n * 4),
+            ("centroids", cent * dim * 4),
+            ("crc", 8),
+        ];
+        assert_eq!(
+            sections.iter().map(|(_, len)| len).sum::<usize>(),
+            bytes.len(),
+            "section table out of sync with the writer"
+        );
+
+        let mut offset = 0usize;
+        for &(name, len) in sections {
+            for (what, keep) in
+                [("start", offset), ("one byte in", offset + 1), ("one short", offset + len - 1)]
+            {
+                if keep == 0 || keep >= bytes.len() {
+                    continue; // empty file / no truncation — not this test
+                }
+                std::fs::write(&path, &bytes[..keep]).unwrap();
+                let err = load_index(&path)
+                    .map(|_| ())
+                    .expect_err(&format!("{name}: truncated at {what} ({keep} B) must fail"));
+                let msg = err.to_string();
+                if keep >= 8 + 32 {
+                    // magic + header readable: the exact-size check fires
+                    assert!(
+                        msg.contains("size mismatch"),
+                        "{name} at {what}: expected a size-mismatch error, got: {msg}"
+                    );
+                }
+            }
+            offset += len;
+        }
+    }
+
+    #[test]
     fn rejects_wrong_magic_and_future_version() {
         let path = tmp("magic.knni");
         std::fs::write(&path, b"NOTANIDXaaaaaaaa").unwrap();

@@ -1,0 +1,341 @@
+//! Deterministic fault injection for the serving runtime.
+//!
+//! The chaos suite (`tests/fault_injection.rs`) needs to make specific
+//! workers panic, die, stall, or lose replies at specific moments —
+//! *reproducibly*, so a failing run replays from its seed. This module
+//! provides that as a process-global [`FaultPlan`]:
+//!
+//! * **Zero cost when disabled.** Every instrumented site guards on a
+//!   single relaxed atomic load ([`check`] returns immediately when no
+//!   plan is installed), so production serving pays one predictable
+//!   branch per site and nothing else — no locks, no allocation.
+//! * **Counter-based determinism.** Rules fire on the *n-th hit* of a
+//!   `(site, index)` pair, or on a seeded coin computed as
+//!   `SplitMix64::at(mix(seed, site, index), hit)` — the same
+//!   counter-based discipline as the parallel build engine's edge
+//!   coins, so a plan's behavior is a pure function of `(plan, call
+//!   sequence)` and never of thread scheduling. Hit counters are kept
+//!   per `(site, index)`, and the index is a *deterministic local
+//!   identity* supplied by the call site (a shard slot, a worker id),
+//!   so concurrent workers cannot race each other's counters.
+//! * **Sites are data.** Instrumented code calls
+//!   [`check`]`(site, index)` and interprets the returned
+//!   [`FaultAction`]; the plan decides *whether*, the site decides
+//!   *how*. The serving runtime's sites are named in [`site`].
+//!
+//! The `PALLAS_FAULT_SEED` environment knob ([`seed_from_env`]) lets CI
+//! replay a failing chaos run from its logged seed.
+
+use crate::util::SplitMix64;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Names of the instrumented sites in the serving runtime.
+pub mod site {
+    /// A pool worker at job receipt; `index` = worker id. `Die` here
+    /// simulates thread death before any shard of the job is served.
+    pub const WORKER_JOB: &str = "pool.worker.job";
+    /// A pool worker about to run one shard's search; `index` = shard
+    /// slot. `Panic` here is contained by the worker's `catch_unwind`.
+    pub const WORKER_SEARCH: &str = "pool.worker.search";
+    /// A pool worker about to post one shard's reply; `index` = shard
+    /// slot. `Delay` stalls the reply, `Drop` loses it, `Die` kills the
+    /// worker after the search but before the reply.
+    pub const WORKER_REPLY: &str = "pool.worker.reply";
+}
+
+/// What an armed site does when its rule fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Panic inside the instrumented scope (the pool worker contains
+    /// it with `catch_unwind` and answers with a typed failure).
+    Panic,
+    /// Simulate thread death: the instrumented loop returns, so the
+    /// supervisor sees a dead worker and respawns it (budget
+    /// permitting).
+    Die,
+    /// Stall for the given duration before proceeding (drives deadline
+    /// expiry without wall-clock flakiness: the stall is much longer
+    /// than the deadline under test).
+    Delay(Duration),
+    /// Lose the message the site was about to send (a reply that never
+    /// arrives, from a worker that stays alive).
+    Drop,
+}
+
+/// When a rule fires, evaluated against the per-`(site, index)` hit
+/// counter (0-based).
+#[derive(Debug, Clone, Copy)]
+pub enum Trigger {
+    /// Fire on exactly the `n`-th hit.
+    Nth(u64),
+    /// Fire on every hit.
+    Always,
+    /// Fire when the counter-based coin for this hit lands under
+    /// `prob`: draw = `SplitMix64::at(mix(seed, site, index), hit)`.
+    /// Deterministic per (seed, site, index, hit); independent of
+    /// scheduling.
+    Seeded {
+        /// Chaos seed (log it; `PALLAS_FAULT_SEED` replays it).
+        seed: u64,
+        /// Probability in `[0, 1]` that a hit fires.
+        prob: f64,
+    },
+}
+
+#[derive(Debug, Clone)]
+struct Rule {
+    site: &'static str,
+    /// `None` matches every index (counters stay per-index).
+    index: Option<u64>,
+    trigger: Trigger,
+    action: FaultAction,
+}
+
+/// A set of injection rules, installed process-wide with [`install`].
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    rules: Vec<Rule>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no rule ever fires).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a rule: at `site` (for `index`, or every index when `None`),
+    /// perform `action` when `trigger` fires.
+    pub fn rule(
+        mut self,
+        site: &'static str,
+        index: Option<u64>,
+        trigger: Trigger,
+        action: FaultAction,
+    ) -> Self {
+        self.rules.push(Rule { site, index, trigger, action });
+        self
+    }
+
+    /// Panic on the `nth` hit of `(site, index)`.
+    pub fn panic_at(self, site: &'static str, index: u64, nth: u64) -> Self {
+        self.rule(site, Some(index), Trigger::Nth(nth), FaultAction::Panic)
+    }
+
+    /// Kill the worker on every hit of `(site, index)` — with a
+    /// bounded respawn budget this drives the shard permanently dead.
+    pub fn die_always(self, site: &'static str, index: u64) -> Self {
+        self.rule(site, Some(index), Trigger::Always, FaultAction::Die)
+    }
+
+    /// Stall every hit of `(site, index)` by `delay`.
+    pub fn delay_always(self, site: &'static str, index: u64, delay: Duration) -> Self {
+        self.rule(site, Some(index), Trigger::Always, FaultAction::Delay(delay))
+    }
+
+    /// Lose the message on the `nth` hit of `(site, index)`.
+    pub fn drop_at(self, site: &'static str, index: u64, nth: u64) -> Self {
+        self.rule(site, Some(index), Trigger::Nth(nth), FaultAction::Drop)
+    }
+}
+
+struct Armed {
+    plan: FaultPlan,
+    hits: HashMap<(&'static str, u64), u64>,
+    injected: u64,
+}
+
+/// The disabled-path guard: one relaxed load per instrumented site.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ARMED: Mutex<Option<Armed>> = Mutex::new(None);
+
+fn armed_lock() -> std::sync::MutexGuard<'static, Option<Armed>> {
+    // a panicking instrumented thread may poison this lock by design
+    // (Panic actions unwind through arbitrary code); the map itself is
+    // always in a consistent state between operations, so recover
+    ARMED.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Install `plan` process-wide, resetting all hit counters. Injection
+/// stays active until [`clear`]. Tests sharing a process must
+/// serialize installation (the chaos suite holds a lock per test).
+pub fn install(plan: FaultPlan) {
+    let mut guard = armed_lock();
+    *guard = Some(Armed { plan, hits: HashMap::new(), injected: 0 });
+    ENABLED.store(true, Ordering::SeqCst);
+}
+
+/// Remove the installed plan; [`check`] returns to its zero-cost path.
+pub fn clear() {
+    ENABLED.store(false, Ordering::SeqCst);
+    *armed_lock() = None;
+}
+
+/// True while a plan is installed.
+pub fn active() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Total faults fired since the current plan was installed.
+pub fn injected() -> u64 {
+    armed_lock().as_ref().map_or(0, |a| a.injected)
+}
+
+/// The instrumentation hook: did a rule fire for this hit of
+/// `(site, index)`? Sites pass a deterministic local identity as
+/// `index` (shard slot, worker id) so hit counters never race across
+/// threads. Returns `None` immediately — one relaxed atomic load —
+/// when no plan is installed.
+#[inline]
+pub fn check(site: &'static str, index: u64) -> Option<FaultAction> {
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    check_armed(site, index)
+}
+
+#[cold]
+fn check_armed(site: &'static str, index: u64) -> Option<FaultAction> {
+    let mut guard = armed_lock();
+    let armed = guard.as_mut()?;
+    let hit = {
+        let counter = armed.hits.entry((site, index)).or_insert(0);
+        let hit = *counter;
+        *counter += 1;
+        hit
+    };
+    for rule in &armed.plan.rules {
+        if rule.site != site || rule.index.is_some_and(|i| i != index) {
+            continue;
+        }
+        let fired = match rule.trigger {
+            Trigger::Nth(n) => hit == n,
+            Trigger::Always => true,
+            Trigger::Seeded { seed, prob } => coin(seed, site, index, hit) < prob,
+        };
+        if fired {
+            armed.injected += 1;
+            return Some(rule.action);
+        }
+    }
+    None
+}
+
+/// Uniform draw in `[0, 1)` for hit `hit` of `(site, index)` under
+/// `seed` — pure function of its arguments (counter-based, like the
+/// build engine's edge coins).
+fn coin(seed: u64, site: &str, index: u64, hit: u64) -> f64 {
+    let mut fnv = crate::graph::io::Fnv::new();
+    fnv.update(site.as_bytes());
+    fnv.update(&index.to_le_bytes());
+    let draw = SplitMix64::at(seed ^ fnv.0, hit).next_u64();
+    (draw >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+}
+
+/// The chaos seed: `PALLAS_FAULT_SEED` when set and parseable, else
+/// `default`. The chaos suite logs the seed it runs with so a CI
+/// failure is replayable.
+pub fn seed_from_env(default: u64) -> u64 {
+    match std::env::var("PALLAS_FAULT_SEED") {
+        Ok(s) => s.trim().parse().unwrap_or(default),
+        Err(_) => default,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The plan/counters are process-global; unit tests here serialize
+    // on their own lock (the integration chaos suite does the same).
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    fn locked() -> std::sync::MutexGuard<'static, ()> {
+        TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
+    #[test]
+    fn disabled_is_none_and_cheap() {
+        let _g = locked();
+        clear();
+        assert!(!active());
+        assert_eq!(check(site::WORKER_SEARCH, 0), None);
+        assert_eq!(injected(), 0);
+    }
+
+    #[test]
+    fn nth_fires_exactly_once_per_index() {
+        let _g = locked();
+        install(FaultPlan::new().panic_at(site::WORKER_SEARCH, 2, 1));
+        // index 2: hits 0, 1, 2 → only hit 1 fires
+        assert_eq!(check(site::WORKER_SEARCH, 2), None);
+        assert_eq!(check(site::WORKER_SEARCH, 2), Some(FaultAction::Panic));
+        assert_eq!(check(site::WORKER_SEARCH, 2), None);
+        // other indexes and sites never fire
+        assert_eq!(check(site::WORKER_SEARCH, 3), None);
+        assert_eq!(check(site::WORKER_SEARCH, 3), None);
+        assert_eq!(check(site::WORKER_REPLY, 2), None);
+        assert_eq!(injected(), 1);
+        clear();
+    }
+
+    #[test]
+    fn always_fires_and_reinstall_resets_counters() {
+        let _g = locked();
+        install(FaultPlan::new().die_always(site::WORKER_JOB, 0));
+        assert_eq!(check(site::WORKER_JOB, 0), Some(FaultAction::Die));
+        assert_eq!(check(site::WORKER_JOB, 0), Some(FaultAction::Die));
+        assert_eq!(check(site::WORKER_JOB, 1), None);
+        install(FaultPlan::new().panic_at(site::WORKER_JOB, 0, 0));
+        // fresh counters: hit 0 again
+        assert_eq!(check(site::WORKER_JOB, 0), Some(FaultAction::Panic));
+        assert_eq!(injected(), 1, "reinstall resets the injected count");
+        clear();
+    }
+
+    #[test]
+    fn seeded_trigger_is_deterministic() {
+        let _g = locked();
+        let run = |seed: u64| -> Vec<bool> {
+            install(FaultPlan::new().rule(
+                site::WORKER_REPLY,
+                None,
+                Trigger::Seeded { seed, prob: 0.3 },
+                FaultAction::Drop,
+            ));
+            let fired: Vec<bool> =
+                (0..64).map(|i| check(site::WORKER_REPLY, i % 4).is_some()).collect();
+            clear();
+            fired
+        };
+        let a = run(7);
+        let b = run(7);
+        assert_eq!(a, b, "same seed, same call sequence, same faults");
+        assert!(a.iter().any(|&f| f), "prob 0.3 over 64 hits should fire");
+        assert!(!a.iter().all(|&f| f), "prob 0.3 should not always fire");
+        let c = run(8);
+        assert_ne!(a, c, "a different seed gives a different schedule");
+    }
+
+    #[test]
+    fn coin_is_counter_based() {
+        // pure function of (seed, site, index, hit) — no hidden state
+        assert_eq!(coin(1, "s", 2, 3), coin(1, "s", 2, 3));
+        assert_ne!(coin(1, "s", 2, 3), coin(1, "s", 2, 4));
+        assert_ne!(coin(1, "s", 2, 3), coin(1, "s", 3, 3));
+        assert_ne!(coin(1, "s", 2, 3), coin(2, "s", 2, 3));
+        let c = coin(99, "x", 0, 0);
+        assert!((0.0..1.0).contains(&c));
+    }
+
+    #[test]
+    fn seed_from_env_parses_or_defaults() {
+        let _g = locked();
+        // no env set in the unit harness: default wins
+        if std::env::var("PALLAS_FAULT_SEED").is_err() {
+            assert_eq!(seed_from_env(42), 42);
+        }
+    }
+}

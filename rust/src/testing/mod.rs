@@ -17,6 +17,7 @@
 //! });
 //! ```
 
+pub mod faults;
 pub mod prop;
 
 pub use prop::{check, check_result, Config, Gen};

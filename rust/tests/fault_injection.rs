@@ -1,0 +1,433 @@
+//! Chaos suite: the serving stack under deterministic fault injection
+//! (`knng::testing::faults`). Proves the fault-tolerance contract:
+//!
+//! * a contained worker panic degrades one batch and the next batch is
+//!   bit-identical to the healthy fan-out;
+//! * a dead worker is respawned (bounded budget) and, once buried, the
+//!   pool keeps serving answers **equal to an honest fan-out over the
+//!   surviving shards** — never garbage, never a hang;
+//! * deadline expiry yields a typed `Degradation` within bounded wall
+//!   time; a lost reply never hangs a batch;
+//! * degradation flows end to end: pool → `ServeFront` ticket → KNNQv1
+//!   `Degraded` frame, with `Health` probes exposing per-shard
+//!   liveness over the wire.
+//!
+//! The fault plan is process-global, so every test serializes on
+//! `FAULT_LOCK` and clears the plan via an RAII guard (panic-safe);
+//! the suite also runs green under `RUST_TEST_THREADS=1` in CI. The
+//! seeded soak logs its seed; replay with `PALLAS_FAULT_SEED`.
+
+use knng::api::{
+    DegradeCause, FrontConfig, Neighbor, PoolConfig, Searcher, ServeFront, ShardPool,
+    ShardState, ShardedSearcher,
+};
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::net::{NetClient, NetServer, ServerConfig};
+use knng::nndescent::Params;
+use knng::search::SearchParams;
+use knng::testing::faults::{self, site, FaultAction, FaultPlan, Trigger};
+use knng::testing::assert_neighbors_bitwise_eq;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+/// The process-global fault plan admits one chaos test at a time.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+/// Serialize + guarantee `faults::clear()` on every exit path, so a
+/// failing test cannot leak its plan into the next one.
+struct ChaosGuard(#[allow(dead_code)] MutexGuard<'static, ()>);
+
+impl ChaosGuard {
+    fn take() -> Self {
+        let g = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        faults::clear();
+        Self(g)
+    }
+}
+
+impl Drop for ChaosGuard {
+    fn drop(&mut self) {
+        faults::clear();
+    }
+}
+
+/// Rows `[from, from+count)` of `data` as a fresh matrix.
+fn slice_rows(data: &AlignedMatrix, from: usize, count: usize) -> AlignedMatrix {
+    let rows: Vec<f32> =
+        (from..from + count).flat_map(|i| data.row_logical(i).to_vec()).collect();
+    AlignedMatrix::from_rows(count, data.dim(), &rows)
+}
+
+/// Corpus + query tile + a 3-shard searcher, deterministic per seed.
+fn stack(seed: u64) -> (ShardedSearcher, AlignedMatrix) {
+    let (all, _) = SynthClustered::new(660, 8, 4, seed).generate_labeled();
+    let corpus = slice_rows(&all, 0, 600);
+    let queries = slice_rows(&all, 600, 40);
+    let params = Params::default().with_k(10).with_seed(seed).with_reorder(true);
+    (ShardedSearcher::build(&corpus, 3, &params).unwrap(), queries)
+}
+
+/// One pool batch through the deadline entry point.
+fn batch(
+    pool: &ShardPool,
+    queries: &AlignedMatrix,
+    k: usize,
+    sp: &SearchParams,
+    deadline: Option<Instant>,
+) -> (Vec<Vec<Neighbor>>, Option<knng::api::Degradation>) {
+    let (res, _, degr) =
+        pool.search_batch_deadline_owned(Arc::new(queries.clone()), k, sp, None, deadline);
+    (res, degr)
+}
+
+/// Every shard slot except `missing`, ascending.
+fn survivors(shard_count: usize, missing: &[u32]) -> Vec<usize> {
+    (0..shard_count).filter(|s| !missing.contains(&(*s as u32))).collect()
+}
+
+#[test]
+fn contained_panic_degrades_one_batch_then_recovers_bitwise() {
+    let _chaos = ChaosGuard::take();
+    let (sharded, queries) = stack(11);
+    let k = 6;
+    let sp = SearchParams::default();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+    let pool = ShardPool::new(&sharded, 3).unwrap();
+
+    // shard 1's very first search panics; the worker contains it
+    faults::install(FaultPlan::new().panic_at(site::WORKER_SEARCH, 1, 0));
+    let (got, degr) = batch(&pool, &queries, k, &sp, None);
+    let degr = degr.expect("a contained panic must be reported");
+    assert_eq!(degr.shards_missing, vec![1]);
+    assert_eq!(degr.cause, DegradeCause::ShardPanicked);
+    let (honest, _) = sharded.search_batch_subset(&queries, k, &sp, &[0, 2]);
+    assert_neighbors_bitwise_eq(&honest, &got, "degraded batch vs honest 2-shard fan-out");
+
+    let stats = pool.stats();
+    assert_eq!(stats.contained_panics, 1, "the panic was contained and counted");
+    assert_eq!(stats.respawns, 0, "containment needs no respawn");
+    assert!(stats.all_healthy(), "a contained panic does not kill the shard");
+
+    // the worker rebuilt its scratch; the next batch is pristine
+    faults::clear();
+    let (again, degr) = batch(&pool, &queries, k, &sp, None);
+    assert!(degr.is_none(), "recovered pool must not report degradation");
+    assert_neighbors_bitwise_eq(&expect, &again, "post-panic batch vs healthy fan-out");
+}
+
+#[test]
+fn dead_worker_is_respawned_and_answers_recover_bitwise() {
+    let _chaos = ChaosGuard::take();
+    let (sharded, queries) = stack(23);
+    let k = 5;
+    let sp = SearchParams::default();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+    let pool = ShardPool::new(&sharded, 3).unwrap();
+
+    // worker 0 (owning shard 0) dies on its first job receipt, once
+    faults::install(FaultPlan::new().rule(
+        site::WORKER_JOB,
+        Some(0),
+        Trigger::Nth(0),
+        FaultAction::Die,
+    ));
+    let (got, degr) = batch(&pool, &queries, k, &sp, None);
+    let degr = degr.expect("a mid-batch worker death must be reported");
+    assert_eq!(degr.shards_missing, vec![0]);
+    // the exact cause races between ShardDead (thread observed
+    // finished) and ReplyLost (it had not flipped yet); both are a
+    // truthful description of a worker that died after accepting a job
+    assert!(
+        matches!(degr.cause, DegradeCause::ShardDead | DegradeCause::ReplyLost),
+        "unexpected cause {:?}",
+        degr.cause
+    );
+    let (honest, _) = sharded.search_batch_subset(&queries, k, &sp, &[1, 2]);
+    assert_neighbors_bitwise_eq(&honest, &got, "death batch vs honest survivor fan-out");
+
+    // supervision respawns it — at the failing batch's end if the
+    // thread's exit was already observable, else before the next
+    // dispatch; either way the next batch is pristine
+    faults::clear();
+    let (again, degr) = batch(&pool, &queries, k, &sp, None);
+    assert!(degr.is_none());
+    assert_neighbors_bitwise_eq(&expect, &again, "post-respawn batch vs healthy fan-out");
+    let stats = pool.stats();
+    assert_eq!(stats.respawns, 1, "supervision must respawn the dead worker");
+    assert!(stats.all_healthy(), "respawned worker leaves no shard dead");
+}
+
+#[test]
+fn buried_shard_keeps_pool_serving_survivors_deterministically() {
+    let _chaos = ChaosGuard::take();
+    let (sharded, queries) = stack(37);
+    let k = 7;
+    let sp = SearchParams::default();
+    let pool = ShardPool::with_config(
+        &sharded,
+        PoolConfig { threads: 3, respawn_budget: 0 },
+    )
+    .unwrap();
+
+    // worker 0 dies on every job; with a zero respawn budget the first
+    // death buries shard 0 permanently
+    faults::install(FaultPlan::new().die_always(site::WORKER_JOB, 0));
+    let (_, degr) = batch(&pool, &queries, k, &sp, None);
+    assert!(degr.is_some(), "the killing batch must be reported degraded");
+
+    // faults off: the shard stays dead, and from the next dispatch on
+    // the degradation is fully deterministic — sender gone, cause
+    // ShardDead (the burial lands at the killing batch's end or at the
+    // next dispatch, whichever observes the thread's exit first)
+    faults::clear();
+    let (honest, _) = sharded.search_batch_subset(&queries, k, &sp, &[1, 2]);
+    for round in 0..3 {
+        let (got, degr) = batch(&pool, &queries, k, &sp, None);
+        let degr = degr.expect("a buried shard must always be reported");
+        assert_eq!(degr.shards_missing, vec![0], "round {round}");
+        assert_eq!(degr.cause, DegradeCause::ShardDead, "round {round}");
+        assert_neighbors_bitwise_eq(
+            &honest,
+            &got,
+            &format!("round {round}: buried-shard pool vs honest survivor fan-out"),
+        );
+    }
+    let stats = pool.stats();
+    assert_eq!(stats.shards[0], ShardState::Dead);
+    assert_eq!(stats.shards[1], ShardState::Healthy);
+    assert_eq!(stats.shards[2], ShardState::Healthy);
+    assert_eq!(stats.dead_shards(), vec![0]);
+}
+
+#[test]
+fn deadline_expiry_is_typed_bounded_and_honest() {
+    let _chaos = ChaosGuard::take();
+    let (sharded, queries) = stack(41);
+    let k = 6;
+    let sp = SearchParams::default();
+    let pool = ShardPool::new(&sharded, 3).unwrap();
+
+    // a generous deadline under no faults changes nothing, bit for bit
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+    let (got, degr) =
+        batch(&pool, &queries, k, &sp, Some(Instant::now() + Duration::from_secs(30)));
+    assert!(degr.is_none(), "a met deadline must not degrade");
+    assert_neighbors_bitwise_eq(&expect, &got, "generous deadline vs no deadline");
+
+    // shard 2's reply stalls far past the budget: the batch returns on
+    // time with a typed record, merged from the shards that made it
+    faults::install(FaultPlan::new().delay_always(
+        site::WORKER_REPLY,
+        2,
+        Duration::from_millis(400),
+    ));
+    let t0 = Instant::now();
+    let (got, degr) =
+        batch(&pool, &queries, k, &sp, Some(Instant::now() + Duration::from_millis(40)));
+    let waited = t0.elapsed();
+    assert!(
+        waited < Duration::from_millis(350),
+        "deadline batch must not wait out the stall (took {waited:?})"
+    );
+    let degr = degr.expect("an expired deadline must be reported");
+    assert_eq!(degr.shards_missing, vec![2]);
+    assert_eq!(degr.cause, DegradeCause::DeadlineExpired);
+    let (honest, _) = sharded.search_batch_subset(&queries, k, &sp, &[0, 1]);
+    assert_neighbors_bitwise_eq(&honest, &got, "deadline batch vs honest on-time fan-out");
+    assert!(pool.stats().deadline_misses >= 1);
+    // dropping the pool joins the stalled worker; bounded by the stall
+}
+
+#[test]
+fn lost_reply_never_hangs_a_batch() {
+    let _chaos = ChaosGuard::take();
+    let (sharded, queries) = stack(53);
+    let k = 6;
+    let sp = SearchParams::default();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+    let pool = ShardPool::new(&sharded, 3).unwrap();
+
+    // shard 1's first reply is lost in transit; the worker stays alive.
+    // With no deadline the batch must still terminate (channel
+    // disconnect, not a timeout) and say what went missing.
+    faults::install(FaultPlan::new().drop_at(site::WORKER_REPLY, 1, 0));
+    let (got, degr) = batch(&pool, &queries, k, &sp, None);
+    let degr = degr.expect("a lost reply must be reported");
+    assert_eq!(degr.shards_missing, vec![1]);
+    assert_eq!(degr.cause, DegradeCause::ReplyLost);
+    let (honest, _) = sharded.search_batch_subset(&queries, k, &sp, &[0, 2]);
+    assert_neighbors_bitwise_eq(&honest, &got, "lost-reply batch vs honest fan-out");
+    assert_eq!(pool.stats().lost_replies, 1);
+    assert!(pool.stats().all_healthy(), "a lost reply is not a dead shard");
+
+    faults::clear();
+    let (again, degr) = batch(&pool, &queries, k, &sp, None);
+    assert!(degr.is_none());
+    assert_neighbors_bitwise_eq(&expect, &again, "post-loss batch vs healthy fan-out");
+}
+
+#[test]
+fn front_tickets_carry_degradation_and_health() {
+    let _chaos = ChaosGuard::take();
+    let (sharded, queries) = stack(67);
+    let k = 5;
+    let sp = SearchParams::default();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+    let pool = ShardPool::new(&sharded, 3).unwrap();
+    let cfg = FrontConfig {
+        k,
+        params: sp,
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        ..Default::default()
+    };
+    let front = ServeFront::spawn(pool, queries.dim(), cfg).unwrap();
+
+    // healthy path: a generous budget degrades nothing and answers are
+    // bit-identical to the direct fan-out
+    let row = queries.row_logical(0).to_vec();
+    let served = front
+        .submit_with_deadline(row.clone(), Duration::from_secs(30))
+        .unwrap()
+        .wait()
+        .unwrap();
+    assert!(served.degradation.is_none());
+    assert_neighbors_bitwise_eq(
+        std::slice::from_ref(&expect[0]),
+        std::slice::from_ref(&served.neighbors),
+        "front deadline ticket vs direct fan-out",
+    );
+    let health = front.health().expect("a pool-backed front exposes health");
+    assert!(health.all_healthy());
+
+    // stalled shard + tight budget: the ticket itself says degraded
+    faults::install(FaultPlan::new().delay_always(
+        site::WORKER_REPLY,
+        1,
+        Duration::from_millis(400),
+    ));
+    let served = front
+        .submit_with_deadline(row, Duration::from_millis(40))
+        .unwrap()
+        .wait()
+        .unwrap();
+    let degr = served.degradation.expect("the ticket must carry the degradation");
+    assert_eq!(degr.cause, DegradeCause::DeadlineExpired);
+    assert!(degr.shards_missing.contains(&1));
+    faults::clear();
+
+    let totals = front.shutdown();
+    assert!(totals.degraded >= 1, "degraded windows are counted: {totals:?}");
+}
+
+#[test]
+fn wire_serves_degraded_frames_and_health_from_a_wounded_pool() {
+    let _chaos = ChaosGuard::take();
+    let (sharded, queries) = stack(79);
+    let k = 6;
+    let sp = SearchParams::default();
+    let pool = ShardPool::with_config(
+        &sharded,
+        PoolConfig { threads: 3, respawn_budget: 0 },
+    )
+    .unwrap();
+    let cfg = FrontConfig {
+        k,
+        params: sp,
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        ..Default::default()
+    };
+    let front = ServeFront::spawn(pool, queries.dim(), cfg).unwrap();
+
+    // wound the pool: worker 0 dies on its first job and stays buried.
+    // The second submission guarantees the burial is observed (its
+    // dispatch supervises before sending), so health is deterministic.
+    faults::install(FaultPlan::new().die_always(site::WORKER_JOB, 0));
+    for _ in 0..2 {
+        let _ = front
+            .submit_with_k(queries.row_logical(0).to_vec(), k)
+            .unwrap()
+            .wait()
+            .unwrap();
+    }
+    faults::clear();
+    let health = front.health().unwrap();
+    assert_eq!(health.dead_shards(), vec![0], "shard 0 must be buried: {health:?}");
+
+    // the wounded front goes on the wire; clients see typed degradation
+    let server_cfg = ServerConfig {
+        workers: 2,
+        read_timeout: Duration::from_secs(5),
+        write_timeout: Duration::from_secs(5),
+        ..Default::default()
+    };
+    let handle = NetServer::bind("127.0.0.1:0", front, server_cfg).unwrap().spawn().unwrap();
+    let mut client = NetClient::connect(handle.addr()).unwrap();
+
+    let h = client.health().unwrap();
+    assert_eq!(h.shards_alive, vec![false, true, true]);
+    assert_eq!(h.threads, 3);
+
+    let (results, windows, degr) = client.query_batch_deadline(&queries, k, None, 0).unwrap();
+    assert_eq!(windows.len(), queries.n());
+    let degr = degr.expect("a dead shard must surface as a Degraded frame");
+    assert_eq!(degr.shards_missing, vec![0]);
+    assert_eq!(degr.cause, DegradeCause::ShardDead);
+    let (honest, _) = sharded.search_batch_subset(&queries, k, &sp, &[1, 2]);
+    assert_neighbors_bitwise_eq(&honest, &results, "wire degraded answers vs honest fan-out");
+
+    handle.stop().unwrap();
+}
+
+#[test]
+fn seeded_soak_terminates_and_clean_batches_stay_bitwise() {
+    let _chaos = ChaosGuard::take();
+    let seed = faults::seed_from_env(0x5EED_CA05);
+    eprintln!("chaos soak seed: {seed:#x} (replay with PALLAS_FAULT_SEED={seed})");
+    let (sharded, queries) = stack(97);
+    let k = 6;
+    let sp = SearchParams::default();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+    let pool = ShardPool::new(&sharded, 3).unwrap();
+
+    // replies vanish at random (deterministically per seed); workers
+    // stay alive, so every batch must terminate and honestly report
+    // exactly the shards whose replies were lost
+    faults::install(FaultPlan::new().rule(
+        site::WORKER_REPLY,
+        None,
+        Trigger::Seeded { seed, prob: 0.25 },
+        FaultAction::Drop,
+    ));
+    let mut degraded_batches = 0u32;
+    for round in 0..12 {
+        let (got, degr) = batch(&pool, &queries, k, &sp, None);
+        match degr {
+            None => {
+                assert_neighbors_bitwise_eq(
+                    &expect,
+                    &got,
+                    &format!("soak round {round}: clean batch vs healthy fan-out"),
+                );
+            }
+            Some(d) => {
+                degraded_batches += 1;
+                assert!(!d.shards_missing.is_empty());
+                assert_eq!(d.cause, DegradeCause::ReplyLost);
+                // `keep` may legitimately be empty (every reply lost):
+                // the honest answer is then the empty fan-out
+                let keep = survivors(3, &d.shards_missing);
+                let (honest, _) = sharded.search_batch_subset(&queries, k, &sp, &keep);
+                assert_neighbors_bitwise_eq(
+                    &honest,
+                    &got,
+                    &format!("soak round {round}: degraded batch vs honest fan-out"),
+                );
+            }
+        }
+        assert!(pool.stats().all_healthy(), "dropped replies never kill shards");
+    }
+    assert!(degraded_batches >= 1, "prob 0.25 over 36 replies should fire at least once");
+}
