@@ -1,0 +1,219 @@
+//! Storage-engine costs — what the `KNNIv2` zero-copy layer buys and
+//! what the mutable path costs on one core:
+//!
+//! * **open time**, mmap vs heap-copy, over the same segment bytes
+//!   (the zero-copy claim in milliseconds), with the bitwise-identity
+//!   gate between the two modes asserted in-bench;
+//! * **insert throughput** through the WAL + delta path;
+//! * **compaction time** for a delta fold with bounded NN-Descent
+//!   repair, and the fraction of a cold full build it costs;
+//! * **query throughput** before the mutations, with the delta
+//!   attached, and after compaction — with the post-compaction
+//!   fresh-open parity gate asserted in-bench.
+//!
+//! Run: `cargo bench --bench bench_store`
+
+use knng::api::IndexBuilder;
+use knng::bench::{fmt_secs, full_scale, measure, measure_once, write_bench_json, Json, Table};
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::distance::dispatch;
+use knng::nndescent::Params;
+use knng::search::SearchParams;
+use knng::store::{MutableIndex, StoreConfig, StoreMode};
+use knng::testing::assert_neighbors_bitwise_eq;
+use std::time::Instant;
+
+fn main() {
+    println!("kernel dispatch: {}", dispatch::describe());
+    let scale = if full_scale() { 4 } else { 1 };
+    let n = 8192 * scale;
+    let n_queries = 256 * scale;
+    let n_inserts = n / 8;
+    let n_deletes = n / 32;
+    let (dim, k) = (32, 10);
+    println!(
+        "store engine — corpus n={n} d={dim}, {n_queries} queries, k={k}, \
+         {n_inserts} inserts + {n_deletes} deletes before compaction"
+    );
+
+    let (all, _) = SynthClustered::new(n + n_queries + n_inserts, dim, 16, 0x57E).generate_labeled();
+    let take = |from: usize, count: usize| -> AlignedMatrix {
+        let rows: Vec<f32> =
+            (from..from + count).flat_map(|i| all.row_logical(i).to_vec()).collect();
+        AlignedMatrix::from_rows(count, dim, &rows)
+    };
+    let corpus = take(0, n);
+    let qmat = take(n, n_queries);
+    let extra = take(n + n_queries, n_inserts);
+
+    let params = Params::default().with_k(16).with_seed(7).with_reorder(true);
+    let (index, build_secs) =
+        measure_once(|| IndexBuilder::new().data(corpus).params(params).build().unwrap());
+    println!("index built in {build_secs:.2}s");
+
+    let dir = std::env::temp_dir().join("knng_bench_store");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let seg_path = dir.join("bench.knni2");
+    index.save_segment(&seg_path).unwrap();
+    let seg_bytes = std::fs::metadata(&seg_path).unwrap().len();
+    println!("segment: {seg_bytes} bytes on disk");
+    drop(index);
+
+    let cfg = |mode: Option<StoreMode>| StoreConfig {
+        mode,
+        auto_compact_ratio: 0.0, // the bench controls the fold
+        ..Default::default()
+    };
+    let sp = SearchParams::default();
+    let mut table = Table::new("store", &["step", "value", "detail"]);
+    let mut json = Vec::new();
+
+    // ---- open time: mmap vs heap copy, same bytes ----
+    let reps = 9;
+    let mut open_ms = [0.0f64; 2];
+    for (i, mode) in [StoreMode::Mmap, StoreMode::Copy].into_iter().enumerate() {
+        let mut samples =
+            measure(reps, || MutableIndex::open_with(&seg_path, cfg(Some(mode))).unwrap());
+        samples.sort_by(|a, b| a.total_cmp(b));
+        open_ms[i] = samples[reps / 2] * 1e3;
+        table.row(&[
+            format!("open ({})", mode.name()),
+            format!("{:.3} ms", open_ms[i]),
+            format!("median of {reps}"),
+        ]);
+        json.push(Json::obj(vec![
+            ("step", Json::s(format!("open_{}", mode.name()))),
+            ("ms", Json::Num(open_ms[i])),
+        ]));
+    }
+    println!(
+        "zero-copy open: mmap {:.3} ms vs heap copy {:.3} ms ({:.1}x)",
+        open_ms[0],
+        open_ms[1],
+        open_ms[1] / open_ms[0].max(1e-9)
+    );
+
+    // the mode-interchangeability gate, asserted on full answers
+    let mmap_store = MutableIndex::open_with(&seg_path, cfg(Some(StoreMode::Mmap))).unwrap();
+    let copy_store = MutableIndex::open_with(&seg_path, cfg(Some(StoreMode::Copy))).unwrap();
+    let (expect, _) = mmap_store.search_batch(&qmat, k, &sp);
+    let (copy_res, _) = copy_store.search_batch(&qmat, k, &sp);
+    assert_neighbors_bitwise_eq(&expect, &copy_res, "mmap vs heap-copy");
+    println!("bit-identity gate: mmap answers == heap-copy answers");
+    drop(copy_store);
+
+    // ---- baseline query throughput (clean base, no delta) ----
+    let qps_base = {
+        let t0 = Instant::now();
+        let (res, _) = mmap_store.search_batch(&qmat, k, &sp);
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(res.len(), n_queries);
+        n_queries as f64 / secs
+    };
+    drop(mmap_store);
+
+    // ---- insert throughput through WAL + delta ----
+    let mut store = MutableIndex::open_with(&seg_path, cfg(None)).unwrap();
+    let t0 = Instant::now();
+    for i in 0..n_inserts {
+        store.insert((n + i) as u32, extra.row_logical(i)).unwrap();
+    }
+    let insert_secs = t0.elapsed().as_secs_f64();
+    let inserts_per_sec = n_inserts as f64 / insert_secs;
+    for id in 0..n_deletes as u32 {
+        store.delete(id).unwrap();
+    }
+    table.row(&[
+        "insert".into(),
+        format!("{inserts_per_sec:.0}/s"),
+        format!("{n_inserts} rows, WAL {} B", store.wal_bytes()),
+    ]);
+    json.push(Json::obj(vec![
+        ("step", Json::s("insert")),
+        ("rows_per_sec", Json::Num(inserts_per_sec)),
+        ("rows", Json::Int(n_inserts as u64)),
+    ]));
+
+    // ---- query throughput with the delta attached ----
+    let qps_delta = {
+        let t0 = Instant::now();
+        let (res, _) = store.search_batch(&qmat, k, &sp);
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(res.len(), n_queries);
+        n_queries as f64 / secs
+    };
+
+    // ---- compaction: bounded repair fold ----
+    let (stats, compact_secs) = measure_once(|| store.compact().unwrap());
+    table.row(&[
+        "compact".into(),
+        fmt_secs(compact_secs),
+        format!(
+            "{} rows (+{} −{}), {} repair iters, {:.1}% of build",
+            stats.rows,
+            stats.folded,
+            stats.dropped,
+            stats.repair.iterations,
+            100.0 * compact_secs / build_secs.max(1e-9)
+        ),
+    ]);
+    json.push(Json::obj(vec![
+        ("step", Json::s("compact")),
+        ("secs", Json::Num(compact_secs)),
+        ("rows", Json::Int(stats.rows as u64)),
+        ("folded", Json::Int(stats.folded as u64)),
+        ("dropped", Json::Int(stats.dropped as u64)),
+        ("repair_iters", Json::Int(stats.repair.iterations as u64)),
+        ("vs_full_build", Json::Num(compact_secs / build_secs.max(1e-9))),
+    ]));
+
+    // ---- post-compaction qps + the fresh-open parity gate ----
+    let (post, _) = store.search_batch(&qmat, k, &sp);
+    let qps_post = {
+        let t0 = Instant::now();
+        let (res, _) = store.search_batch(&qmat, k, &sp);
+        let secs = t0.elapsed().as_secs_f64();
+        assert_eq!(res.len(), n_queries);
+        n_queries as f64 / secs
+    };
+    let fresh = MutableIndex::open_with(&seg_path, cfg(None)).unwrap();
+    let (fresh_res, _) = fresh.search_batch(&qmat, k, &sp);
+    assert_neighbors_bitwise_eq(&post, &fresh_res, "post-compact vs fresh open");
+    println!("parity gate: post-compaction answers == fresh open of the compacted segment");
+
+    for (label, qps) in
+        [("query (clean base)", qps_base), ("query (with delta)", qps_delta), ("query (compacted)", qps_post)]
+    {
+        table.row(&[label.into(), format!("{qps:.0} q/s"), String::new()]);
+    }
+    json.push(Json::obj(vec![
+        ("step", Json::s("query")),
+        ("qps_clean_base", Json::Num(qps_base)),
+        ("qps_with_delta", Json::Num(qps_delta)),
+        ("qps_post_compaction", Json::Num(qps_post)),
+    ]));
+    table.finish();
+
+    write_bench_json(
+        "BENCH_store.json",
+        &Json::obj(vec![
+            ("bench", Json::s("store")),
+            ("format", Json::s("KNNIv2")),
+            ("dataset", Json::s("clustered")),
+            ("n", Json::Int(n as u64)),
+            ("dim", Json::Int(dim as u64)),
+            ("k", Json::Int(k as u64)),
+            ("queries", Json::Int(n_queries as u64)),
+            ("segment_bytes", Json::Int(seg_bytes)),
+            ("open_mmap_ms", Json::Num(open_ms[0])),
+            ("open_copy_ms", Json::Num(open_ms[1])),
+            ("modes_bit_identical", Json::Bool(true)),
+            ("post_compaction_fresh_open_bit_identical", Json::Bool(true)),
+            ("detected_kernel", Json::s(dispatch::detect().name())),
+            ("rows", Json::Arr(json)),
+        ]),
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -107,6 +107,30 @@ impl Index {
         )
     }
 
+    /// Persist as a zero-copy-servable `KNNIv2` segment (the storage
+    /// engine's format — see [`crate::store`]): padded data rows,
+    /// 64-byte-aligned sections, and the reorder σ⁻¹ flattened into an
+    /// idmap. Open it with
+    /// [`MutableIndex::open`](crate::store::MutableIndex::open) or
+    /// `knng store`.
+    pub fn save_segment(&self, path: &Path) -> crate::Result<()> {
+        let idmap = self.reordering.as_ref().map(|r| r.inv.clone());
+        crate::store::format::write_segment(
+            path,
+            &crate::store::SegmentSpec {
+                data: self.core.data(),
+                ids: self.core.graph().flat_ids(),
+                dists: self.core.graph().flat_dists(),
+                k: self.core.graph().k(),
+                params: &self.params,
+                norms: Some((self.core.norms(), self.core.norm_lanes())),
+                idmap: idmap.as_deref(),
+                centroids: self.centroids.as_ref(),
+                generation: 0,
+            },
+        )
+    }
+
     /// Persist just the graph, in the *original* id space (undoes any
     /// reordering) — the legacy `KNNGv1` artifact.
     pub fn save_graph(&self, path: &Path) -> crate::Result<()> {

@@ -132,6 +132,25 @@ impl ArgMatches {
             Some(s) => s.parse::<f64>().map_err(|_| CliError(format!("--{name}: bad float `{s}`"))),
         }
     }
+    /// Comma- or repeat-separated f32 list (`--vec 0.5,-1.25`); what
+    /// `knng store insert --vec` feeds the mutable store with.
+    pub fn f32_list(&self, name: &str) -> Result<Vec<f32>, CliError> {
+        let mut out = Vec::new();
+        for raw in self.get_all(name) {
+            for part in raw.split(',') {
+                let part = part.trim();
+                if part.is_empty() {
+                    continue;
+                }
+                out.push(
+                    part.parse::<f32>()
+                        .map_err(|_| CliError(format!("--{name}: bad float `{part}`")))?,
+                );
+            }
+        }
+        Ok(out)
+    }
+
     /// Comma- or repeat-separated usize list (`--dims 8,64 --dims 256`).
     pub fn usize_list(&self, name: &str) -> Result<Vec<usize>, CliError> {
         let mut out = Vec::new();
@@ -288,6 +307,17 @@ mod tests {
         assert!(parse_args(&spec(), &argv(&["a", "b"])).is_err(), "too many positionals");
         let m = parse_args(&spec(), &argv(&["--n", "abc"])).unwrap();
         assert!(m.usize_or("n", 0).is_err());
+    }
+
+    #[test]
+    fn f32_list_parses_and_rejects() {
+        let spec = ArgSpec::new().multi("vec", "row");
+        let m = parse_args(&spec, &argv(&["--vec", "0.5,-1.25", "--vec", "3"])).unwrap();
+        assert_eq!(m.f32_list("vec").unwrap(), vec![0.5, -1.25, 3.0]);
+        let m = parse_args(&spec, &argv(&["--vec", "0.5,abc"])).unwrap();
+        assert!(m.f32_list("vec").is_err());
+        let m = parse_args(&spec, &argv(&[])).unwrap();
+        assert!(m.f32_list("vec").unwrap().is_empty());
     }
 
     #[test]

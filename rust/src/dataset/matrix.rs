@@ -20,14 +20,32 @@ pub const LANE_PAD: usize = 8;
 /// `dim_pad = 8⌈dim/8⌉` floats per row; padding lanes are always zero
 /// (maintained by all mutating APIs), so squared-L2 over `dim_pad` lanes
 /// equals squared-L2 over the logical `dim`.
+///
+/// The backing storage is usually an owned allocation, but a matrix can
+/// also borrow *foreign* memory (a `KNNIv2` segment mapped or loaded by
+/// the store engine) through [`from_foreign`](Self::from_foreign): the
+/// rows live in the mapped file and a keepalive `Arc` pins the mapping
+/// for the matrix's lifetime, so serving never copies the corpus.
 pub struct AlignedMatrix {
     ptr: *mut f32,
     n: usize,
     dim: usize,
     dim_pad: usize,
+    backing: Backing,
 }
 
-// Safety: the matrix owns its allocation exclusively; f32 is Send/Sync.
+/// Who owns the bytes behind `ptr`.
+enum Backing {
+    /// Allocated by this matrix; deallocated on drop.
+    Owned,
+    /// Borrowed read-only from elsewhere (an mmap'd or heap-loaded
+    /// segment); the keepalive pins the true owner alive. Never
+    /// deallocated here, and never handed out mutably.
+    Foreign(std::sync::Arc<dyn std::any::Any + Send + Sync>),
+}
+
+// Safety: owned allocations are exclusive; foreign backings are
+// read-only shared bytes pinned by an Arc. f32 is Send/Sync.
 unsafe impl Send for AlignedMatrix {}
 unsafe impl Sync for AlignedMatrix {}
 
@@ -43,7 +61,38 @@ impl AlignedMatrix {
         if ptr.is_null() {
             handle_alloc_error(layout);
         }
-        Self { ptr, n, dim, dim_pad }
+        Self { ptr, n, dim, dim_pad, backing: Backing::Owned }
+    }
+
+    /// Borrow an already-padded, already-aligned row block as a matrix
+    /// without copying it. `ptr` must point at `n · 8⌈dim/8⌉` f32 values
+    /// laid out exactly like an owned matrix (row stride `dim_pad`,
+    /// padding lanes zero), be [`ROW_ALIGN`]-aligned, and stay valid and
+    /// unmodified for as long as `keepalive` is alive — the store engine
+    /// passes the segment's mapped (or heap-loaded) byte region here.
+    ///
+    /// The returned matrix is read-only: mutating accessors panic.
+    ///
+    /// # Safety
+    /// The caller guarantees the pointed-at memory matches the layout
+    /// above and outlives `keepalive`.
+    pub(crate) unsafe fn from_foreign(
+        ptr: *const f32,
+        n: usize,
+        dim: usize,
+        keepalive: std::sync::Arc<dyn std::any::Any + Send + Sync>,
+    ) -> Self {
+        assert!(dim > 0, "dim must be positive");
+        assert_eq!(ptr as usize % ROW_ALIGN, 0, "foreign backing must be {ROW_ALIGN}-byte aligned");
+        let dim_pad = round_up(dim, LANE_PAD);
+        Self { ptr: ptr as *mut f32, n, dim, dim_pad, backing: Backing::Foreign(keepalive) }
+    }
+
+    /// Whether this matrix owns its allocation (false for segment-backed
+    /// matrices, whose rows live in a mapped file).
+    #[inline]
+    pub fn is_owned(&self) -> bool {
+        matches!(self.backing, Backing::Owned)
     }
 
     /// Build from row-major data of logical width `dim`.
@@ -83,9 +132,11 @@ impl AlignedMatrix {
     }
 
     /// Mutable padded row `i`. Callers must keep tail lanes zero.
+    /// Panics on a foreign-backed (read-only, possibly mmap'd) matrix.
     #[inline]
     pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
         debug_assert!(i < self.n);
+        assert!(self.is_owned(), "cannot mutate a foreign-backed (segment) matrix");
         unsafe { std::slice::from_raw_parts_mut(self.ptr.add(i * self.dim_pad), self.dim_pad) }
     }
 
@@ -148,9 +199,13 @@ impl Clone for AlignedMatrix {
 
 impl Drop for AlignedMatrix {
     fn drop(&mut self) {
-        let bytes = (self.n * self.dim_pad * 4).max(ROW_ALIGN);
-        let layout = Layout::from_size_align(bytes, ROW_ALIGN).expect("layout");
-        unsafe { dealloc(self.ptr as *mut u8, layout) };
+        if let Backing::Owned = self.backing {
+            let bytes = (self.n * self.dim_pad * 4).max(ROW_ALIGN);
+            let layout = Layout::from_size_align(bytes, ROW_ALIGN).expect("layout");
+            unsafe { dealloc(self.ptr as *mut u8, layout) };
+        }
+        // Foreign: the keepalive Arc drops with `backing`; the true
+        // owner (the segment's byte region) deallocates/unmaps.
     }
 }
 
@@ -224,5 +279,49 @@ mod tests {
     #[should_panic(expected = "data length mismatch")]
     fn from_rows_rejects_bad_len() {
         AlignedMatrix::from_rows(2, 3, &[0.0; 5]);
+    }
+
+    /// A foreign view over an owned matrix's buffer: rows bit-identical,
+    /// no double free, clone deep-copies back into owned memory.
+    #[test]
+    fn foreign_view_shares_rows_without_owning() {
+        let data: Vec<f32> = (0..12).map(|x| x as f32).collect();
+        let owner = std::sync::Arc::new(AlignedMatrix::from_rows(4, 3, &data));
+        let view = unsafe {
+            AlignedMatrix::from_foreign(
+                owner.as_slice().as_ptr(),
+                4,
+                3,
+                owner.clone() as std::sync::Arc<dyn std::any::Any + Send + Sync>,
+            )
+        };
+        assert!(!view.is_owned());
+        assert!(owner.is_owned());
+        assert_eq!(view.dim_pad(), owner.dim_pad());
+        for i in 0..4 {
+            assert_eq!(view.row(i), owner.row(i), "row {i}");
+            assert_eq!(view.row(i).as_ptr(), owner.row(i).as_ptr(), "row {i} must be shared");
+        }
+        let copy = view.clone();
+        assert!(copy.is_owned(), "clone of a view is a real copy");
+        assert_ne!(copy.row(0).as_ptr(), view.row(0).as_ptr());
+        assert_eq!(copy.row(2), view.row(2));
+        drop(view); // must not free the owner's buffer
+        assert_eq!(owner.row_logical(3), &[9.0, 10.0, 11.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "foreign-backed")]
+    fn foreign_view_rejects_mutation() {
+        let owner = std::sync::Arc::new(AlignedMatrix::zeroed(2, 4));
+        let mut view = unsafe {
+            AlignedMatrix::from_foreign(
+                owner.as_slice().as_ptr(),
+                2,
+                4,
+                owner.clone() as std::sync::Arc<dyn std::any::Any + Send + Sync>,
+            )
+        };
+        let _ = view.row_mut(0);
     }
 }

@@ -114,6 +114,22 @@ impl KnnGraph {
         &self.flags[u * self.k..(u + 1) * self.k]
     }
 
+    /// The whole neighbor-id strip, `n·k` slots in heap order — node
+    /// `u`'s slice is `[u·k, (u+1)·k)`. This is the flat layout the
+    /// search core's [`IndexView`](crate::search) borrows and the
+    /// `KNNIv2` segment writer persists verbatim.
+    #[inline]
+    pub fn flat_ids(&self) -> &[u32] {
+        &self.ids
+    }
+
+    /// The whole neighbor-distance strip, aligned with
+    /// [`flat_ids`](Self::flat_ids).
+    #[inline]
+    pub fn flat_dists(&self) -> &[f32] {
+        &self.dists
+    }
+
     /// Clear the `new` flag of slot `i` in `u`'s strip, maintaining the
     /// neighborhood-size counters. No-op if already old or empty.
     #[inline]

@@ -65,6 +65,7 @@ pub mod roofline;
 #[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod search;
+pub mod store;
 pub mod testing;
 pub mod util;
 

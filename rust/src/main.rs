@@ -7,6 +7,10 @@
 //!             over the wire from a running server (--connect), or one
 //!             at a time from a bare graph + corpus
 //!   serve     run the KNNQv1 network server over KNNIv1 bundle(s)
+//!   store     the mutable storage engine: convert KNNIv1 bundles to
+//!             zero-copy KNNIv2 segments, inspect/query them, apply
+//!             WAL-backed inserts/deletes, compact, and serve with
+//!             the wire mutation surface enabled
 //!   check     verify AOT artifacts load and the PJRT engine matches
 //!             the native kernels (requires --features pjrt)
 //!   info      print version, defaults, artifact inventory
@@ -44,6 +48,7 @@ fn main() {
         Some("gen") => cmd_gen(&args[1..]),
         Some("query") => cmd_query(&args[1..]),
         Some("serve") => cmd_serve(&args[1..]),
+        Some("store") => cmd_store(&args[1..]),
         Some("check") => cmd_check(&args[1..]),
         Some("info") => cmd_info(&args[1..]),
         Some("--help") | Some("-h") | Some("help") | None => {
@@ -70,6 +75,7 @@ fn print_help() {
          gen     generate a synthetic dataset to .fvecs\n  \
          query   serve ANN queries (batched via --index bundle, --connect, or --graph)\n  \
          serve   run the KNNQv1 network server over KNNIv1 bundle(s)\n  \
+         store   mutable storage engine: convert|info|query|insert|delete|compact|serve\n  \
          check   validate AOT artifacts + PJRT numerics\n  \
          info    version, defaults, artifact inventory\n\n\
          run `knng <cmd> --help` for flags",
@@ -574,6 +580,357 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         totals.windows,
         totals.coalesced,
         totals.cache_hits,
+    );
+    Ok(())
+}
+
+/// `knng store <action>` — the storage-engine surface. Local actions
+/// open the segment in this process (WAL replay included); `insert`,
+/// `delete`, and `compact` also work against a running
+/// `store serve --listen` server via `--connect`.
+fn cmd_store(argv: &[String]) -> anyhow::Result<()> {
+    let action = argv.first().map(|s| s.as_str());
+    let rest = if argv.is_empty() { argv } else { &argv[1..] };
+    match action {
+        Some("convert") => store_convert(rest),
+        Some("info") => store_info(rest),
+        Some("query") => store_query(rest),
+        Some("insert") => store_insert(rest),
+        Some("delete") => store_delete(rest),
+        Some("compact") => store_compact(rest),
+        Some("serve") => store_serve(rest),
+        Some("--help") | Some("-h") | Some("help") | None => {
+            println!(
+                "usage: knng store <action> [options]\n\n\
+                 actions:\n  \
+                 convert  KNNIv1 bundle → zero-copy KNNIv2 segment (--index, --out)\n  \
+                 info     header, sections, delta/WAL state (--segment)\n  \
+                 query    batched queries against a segment (--segment, --batch, --k)\n  \
+                 insert   WAL-backed row insert (--segment|--connect, --id, --vec)\n  \
+                 delete   WAL-backed tombstone (--segment|--connect, --id)\n  \
+                 compact  fold delta+tombstones into a fresh segment (--segment|--connect)\n  \
+                 serve    KNNQv2 server with the mutation surface (--segment, --listen)\n\n\
+                 run `knng store <action> --help` for flags"
+            );
+            Ok(())
+        }
+        Some(other) => {
+            Err(anyhow::anyhow!("unknown store action `{other}` (see `knng store help`)"))
+        }
+    }
+}
+
+/// Shared `--mode mmap|copy` parsing (absent = `PALLAS_STORE` env,
+/// then the platform default).
+fn parse_store_mode(m: &knng::cli::ArgMatches) -> anyhow::Result<Option<knng::store::StoreMode>> {
+    match m.get("mode") {
+        None => Ok(None),
+        Some(s) => knng::store::StoreMode::parse(s)
+            .map(Some)
+            .ok_or_else(|| anyhow::anyhow!("--mode: unknown store mode `{s}` (mmap|copy)")),
+    }
+}
+
+/// Shared store-engine knobs → [`knng::store::StoreConfig`].
+fn parse_store_cfg(m: &knng::cli::ArgMatches) -> anyhow::Result<knng::store::StoreConfig> {
+    let d = knng::store::StoreConfig::default();
+    Ok(knng::store::StoreConfig {
+        mode: parse_store_mode(m)?,
+        auto_compact_ratio: m.f64_or("auto-compact-ratio", d.auto_compact_ratio)?,
+        auto_compact_min: m.usize_or("auto-compact-min", d.auto_compact_min)?,
+        repair_iters: m.usize_or("repair-iters", d.repair_iters)?,
+    })
+}
+
+fn store_segment_flag(spec: ArgSpec) -> ArgSpec {
+    spec.value("segment", "KNNIv2 segment path (KNNIv1 bundles open too, heap-loaded)")
+        .value("mode", "segment byte source: mmap|copy (default: PALLAS_STORE env, else platform)")
+        .value("auto-compact-ratio", "auto-compact when delta/base exceeds this (default 0.5; 0 = off)")
+        .value("auto-compact-min", "…but only once the delta holds this many rows (default 64)")
+        .value("repair-iters", "NN-Descent repair iteration budget per compaction (default 8)")
+        .flag("help", "show this help")
+}
+
+/// Open the `--segment` path as a [`knng::store::MutableIndex`].
+fn open_store(m: &knng::cli::ArgMatches) -> anyhow::Result<knng::store::MutableIndex> {
+    let path = m
+        .get("segment")
+        .ok_or_else(|| anyhow::anyhow!("--segment <path> is required"))?;
+    knng::store::MutableIndex::open_with(std::path::Path::new(path), parse_store_cfg(m)?)
+}
+
+fn store_convert(argv: &[String]) -> anyhow::Result<()> {
+    let spec = ArgSpec::new()
+        .value("index", "source KNNIv1 bundle from `build --save-index`")
+        .value("out", "destination KNNIv2 segment path")
+        .flag("help", "show this help");
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("store convert"));
+        return Ok(());
+    }
+    let src = m.get("index").ok_or_else(|| anyhow::anyhow!("--index <bundle> is required"))?;
+    let dst = m.get("out").ok_or_else(|| anyhow::anyhow!("--out <segment> is required"))?;
+    knng::store::convert_v1_to_v2(std::path::Path::new(src), std::path::Path::new(dst))?;
+    let bytes = std::fs::metadata(dst).map(|md| md.len()).unwrap_or(0);
+    println!("converted {src} → {dst} ({bytes} bytes, KNNIv2 generation 0)");
+    Ok(())
+}
+
+fn store_info(argv: &[String]) -> anyhow::Result<()> {
+    let spec = store_segment_flag(ArgSpec::new());
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("store info"));
+        return Ok(());
+    }
+    let store = open_store(&m)?;
+    let (base_n, base_k, layout) = match store.base() {
+        knng::store::BaseSegment::V2(s) => (s.n(), s.k(), format!("KNNIv2/{}", s.mode().name())),
+        knng::store::BaseSegment::Legacy(i) => (i.len(), i.graph_k(), "KNNIv1/heap".to_string()),
+    };
+    println!(
+        "{}: {layout}, generation {}, dim {}\n\
+         base: {base_n} row(s), graph k={base_k}\n\
+         delta: {} live row(s), {} tombstone(s), WAL {} byte(s)\n\
+         live total: {} row(s)",
+        store.path().display(),
+        store.generation(),
+        store.dim(),
+        store.delta_len(),
+        store.tombstone_count(),
+        store.wal_bytes(),
+        store.len(),
+    );
+    Ok(())
+}
+
+fn store_query(argv: &[String]) -> anyhow::Result<()> {
+    let spec = store_segment_flag(
+        ArgSpec::new()
+            .value("batch", ".fvecs query vectors (required)")
+            .value("k", "neighbors per query (default 10)")
+            .value("ef", "beam width (default 64)")
+            .value(KERNEL_FLAG, KERNEL_HELP),
+    );
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("store query"));
+        return Ok(());
+    }
+    apply_kernel_override(&m)?;
+    let store = open_store(&m)?;
+    let qpath = m.get("batch").ok_or_else(|| anyhow::anyhow!("--batch <fvecs> is required"))?;
+    let queries = knng::dataset::fvecs::read_fvecs(std::path::Path::new(qpath), usize::MAX)?;
+    anyhow::ensure!(
+        queries.dim() == store.dim(),
+        "query dim {} does not match segment dim {}",
+        queries.dim(),
+        store.dim()
+    );
+    let k = m.usize_or("k", 10)?;
+    let params =
+        knng::search::SearchParams { ef: m.usize_or("ef", 64)?, ..Default::default() };
+    let (results, stats) = store.search_batch(&queries, k, &params);
+    print_result_rows(&results);
+    eprintln!(
+        "{} queries in {:.3}s ({:.0} qps), {:.0} evals/query [kernel {}; {} live row(s), \
+         generation {}, {} delta row(s), {} tombstone(s)]",
+        stats.queries,
+        stats.secs,
+        stats.qps(),
+        stats.dist_evals_per_query(),
+        stats.kernel,
+        store.len(),
+        store.generation(),
+        store.delta_len(),
+        store.tombstone_count(),
+    );
+    Ok(())
+}
+
+/// Shared tail for local mutations: print the post-mutation state.
+fn store_report(store: &knng::store::MutableIndex, what: &str) {
+    println!(
+        "{what}: {} live row(s), {} delta row(s), {} tombstone(s), generation {}, WAL {} byte(s)",
+        store.len(),
+        store.delta_len(),
+        store.tombstone_count(),
+        store.generation(),
+        store.wal_bytes(),
+    );
+}
+
+fn store_insert(argv: &[String]) -> anyhow::Result<()> {
+    let spec = store_segment_flag(
+        ArgSpec::new()
+            .value("connect", "apply over the wire to a running `store serve` server")
+            .value("id", "external row id (required)")
+            .multi("vec", "row values, comma-separated (required; repeat to append)"),
+    );
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("store insert"));
+        return Ok(());
+    }
+    anyhow::ensure!(m.has("id"), "--id <u32> is required");
+    let id = u32::try_from(m.u64_or("id", u64::MAX)?)
+        .map_err(|_| anyhow::anyhow!("--id must fit in u32"))?;
+    let row = m.f32_list("vec")?;
+    anyhow::ensure!(!row.is_empty(), "--vec <f32,...> is required");
+    if let Some(addr) = m.get("connect") {
+        let mut client = knng::net::NetClient::connect(addr)?;
+        let (generation, live) = client.insert(id, &row)?;
+        println!("inserted id {id} over the wire: {live} live row(s), generation {generation}");
+        return Ok(());
+    }
+    let mut store = open_store(&m)?;
+    store.insert(id, &row)?;
+    store_report(&store, &format!("inserted id {id}"));
+    Ok(())
+}
+
+fn store_delete(argv: &[String]) -> anyhow::Result<()> {
+    let spec = store_segment_flag(
+        ArgSpec::new()
+            .value("connect", "apply over the wire to a running `store serve` server")
+            .value("id", "external row id (required)"),
+    );
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("store delete"));
+        return Ok(());
+    }
+    anyhow::ensure!(m.has("id"), "--id <u32> is required");
+    let id = u32::try_from(m.u64_or("id", u64::MAX)?)
+        .map_err(|_| anyhow::anyhow!("--id must fit in u32"))?;
+    if let Some(addr) = m.get("connect") {
+        let mut client = knng::net::NetClient::connect(addr)?;
+        let (was_live, generation, live) = client.delete(id)?;
+        println!(
+            "delete id {id} over the wire: {} — {live} live row(s), generation {generation}",
+            if was_live { "removed" } else { "was not live (no-op)" },
+        );
+        return Ok(());
+    }
+    let mut store = open_store(&m)?;
+    let was_live = store.delete(id)?;
+    store_report(
+        &store,
+        &format!("delete id {id} ({})", if was_live { "removed" } else { "was not live" }),
+    );
+    Ok(())
+}
+
+fn store_compact(argv: &[String]) -> anyhow::Result<()> {
+    let spec = store_segment_flag(
+        ArgSpec::new()
+            .value("connect", "apply over the wire to a running `store serve` server")
+            .value(KERNEL_FLAG, KERNEL_HELP),
+    );
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("store compact"));
+        return Ok(());
+    }
+    apply_kernel_override(&m)?;
+    if let Some(addr) = m.get("connect") {
+        let mut client = knng::net::NetClient::connect(addr)?;
+        let (generation, live) = client.compact()?;
+        println!("compacted over the wire: {live} live row(s), generation {generation}");
+        return Ok(());
+    }
+    let mut store = open_store(&m)?;
+    let stats = store.compact()?;
+    println!(
+        "compacted to generation {}: {} row(s) ({} folded from delta, {} dropped) in {:.3}s, \
+         {} bytes; repair: {} iteration(s), {} update(s)",
+        stats.generation,
+        stats.rows,
+        stats.folded,
+        stats.dropped,
+        stats.secs,
+        stats.bytes,
+        stats.repair.iterations,
+        stats.repair.updates,
+    );
+    Ok(())
+}
+
+/// `knng store serve`: the KNNQv2 server over a mutable store — the
+/// front searches through a clone of the shared handle, the server
+/// applies `insert`/`delete`/`compact` frames to the same handle, so
+/// a mutation is visible to the next query. The answer cache stays
+/// off: a cached answer must not outlive the rows it names.
+fn store_serve(argv: &[String]) -> anyhow::Result<()> {
+    use knng::api::{FrontConfig, ServeFront};
+    use knng::net::{install_sigint_handler, NetServer, ServerConfig};
+    let spec = store_segment_flag(
+        ArgSpec::new()
+            .value("listen", "address to listen on, e.g. 127.0.0.1:7070 (required; port 0 = ephemeral)")
+            .value("k", "neighbors served per query; wire requests must match (default 10)")
+            .value("ef", "beam width (default 64)")
+            .value("max-batch", "max queries coalesced per window (default 64)")
+            .value("batch-window", "batching window, microseconds (default 200)")
+            .value("net-workers", "connection-handler threads (default 4)")
+            .value("net-timeout", "per-connection read timeout, seconds (default 30)")
+            .value("max-frame", "largest accepted wire frame payload, bytes (default 16M)")
+            .value(KERNEL_FLAG, KERNEL_HELP),
+    );
+    let m = parse_args(&spec, argv)?;
+    if m.has("help") {
+        print!("{}", spec.usage("store serve"));
+        return Ok(());
+    }
+    apply_kernel_override(&m)?;
+    let listen = m.get("listen").ok_or_else(|| anyhow::anyhow!("--listen <addr> is required"))?;
+    let path = m
+        .get("segment")
+        .ok_or_else(|| anyhow::anyhow!("--segment <path> is required"))?;
+    let shared = knng::store::SharedMutableIndex::open_with(
+        std::path::Path::new(path),
+        parse_store_cfg(&m)?,
+    )?;
+    let (dim, live, generation) = (shared.dim(), shared.live_len(), shared.generation());
+
+    let k = m.usize_or("k", 10)?;
+    let params =
+        knng::search::SearchParams { ef: m.usize_or("ef", 64)?, ..Default::default() };
+    let cfg = FrontConfig {
+        k,
+        params,
+        max_batch: m.usize_or("max-batch", 64)?,
+        max_wait: std::time::Duration::from_micros(m.u64_or("batch-window", 200)?),
+        // never cache answers over a mutable corpus
+        answer_cache: 0,
+        ..Default::default()
+    };
+    let front = ServeFront::spawn(shared.clone(), dim, cfg)?;
+
+    let net_timeout = std::time::Duration::from_secs(m.u64_or("net-timeout", 30)?.max(1));
+    let server_cfg = ServerConfig {
+        workers: m.usize_or("net-workers", 4)?,
+        read_timeout: net_timeout,
+        write_timeout: net_timeout,
+        max_frame: m.usize_or("max-frame", knng::net::wire::DEFAULT_MAX_FRAME)?,
+    };
+    let server = NetServer::bind(listen, front, server_cfg)?.with_store(shared);
+    let addr = server.local_addr()?;
+    install_sigint_handler();
+    eprintln!(
+        "serving mutable store {path} on {addr} — {live} live row(s), generation {generation}, \
+         dim {dim}, k={k}; insert/delete/compact enabled; Ctrl-C drains"
+    );
+    let (net, totals) = server.run()?;
+    eprintln!(
+        "drained: {} connection(s), {} frame(s), {} wire quer(ies), {} protocol error(s); \
+         {} window(s), {} coalesced",
+        net.connections,
+        net.frames,
+        net.queries,
+        net.protocol_errors,
+        totals.windows,
+        totals.coalesced,
     );
     Ok(())
 }

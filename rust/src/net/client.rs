@@ -266,6 +266,45 @@ impl NetClient {
         Ok((r.results, r.windows, degradation))
     }
 
+    /// One acknowledged mutation round trip: send, expect
+    /// [`Frame::MutateOk`] echoing `op`, return `(applied, generation,
+    /// live)`. A read-only server (no mutable store attached) answers
+    /// with a typed [`ServerRejection`] instead.
+    fn mutate(&mut self, frame: &Frame, op: u8) -> crate::Result<(bool, u64, u64)> {
+        match self.round_trip(frame)? {
+            Frame::MutateOk { op: echoed, applied, generation, live } => {
+                anyhow::ensure!(echoed == op, "mutate-ok echoed op {echoed}, expected {op}");
+                Ok((applied, generation, live))
+            }
+            other => anyhow::bail!("expected a mutate acknowledgement, got {other:?}"),
+        }
+    }
+
+    /// Insert (or overwrite) one row in the server's mutable store.
+    /// Returns `(generation, live)` after the mutation. Idempotent:
+    /// re-sending the same row lands in the same state.
+    pub fn insert(&mut self, id: u32, row: &[f32]) -> crate::Result<(u64, u64)> {
+        let frame = Frame::Insert { id, row: row.to_vec() };
+        let (_applied, generation, live) = self.mutate(&frame, wire::MUTATE_OP_INSERT)?;
+        Ok((generation, live))
+    }
+
+    /// Delete one row by external id. Returns `(was_live, generation,
+    /// live)`; `was_live == false` means the id was already absent (a
+    /// no-op, reported honestly). Idempotent.
+    pub fn delete(&mut self, id: u32) -> crate::Result<(bool, u64, u64)> {
+        self.mutate(&Frame::Delete { id }, wire::MUTATE_OP_DELETE)
+    }
+
+    /// Ask the server to fold its delta and tombstones into a fresh
+    /// base segment. Blocks until the fold finishes; returns the new
+    /// `(generation, live)`. **Not** idempotent (every call bumps the
+    /// generation), which is why [`RetryingClient`] does not wrap it.
+    pub fn compact(&mut self) -> crate::Result<(u64, u64)> {
+        let (_applied, generation, live) = self.mutate(&Frame::Compact, wire::MUTATE_OP_COMPACT)?;
+        Ok((generation, live))
+    }
+
     /// Ask the server to drain and exit; consumes the client (the
     /// connection closes after the acknowledgement).
     pub fn shutdown_server(mut self) -> crate::Result<()> {

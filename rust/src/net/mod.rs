@@ -11,10 +11,19 @@
 //!   and duplicate coalescing apply across the wire; graceful shutdown
 //!   (SIGINT / shutdown frame) drains in-flight windows.
 //! * [`client`] — a small blocking client (connect / ping / health /
-//!   query_batch / shutdown) for `query --connect`, the loopback
-//!   tests, and `bench_net_throughput`, plus [`RetryingClient`], which
-//!   reconnects and retries transient transport failures with capped,
+//!   query_batch / insert / delete / compact / shutdown) for
+//!   `query --connect`, the `store` CLI, the loopback tests, and
+//!   `bench_net_throughput`, plus [`RetryingClient`], which reconnects
+//!   and retries transient transport failures with capped,
 //!   deterministically jittered backoff.
+//!
+//! Protocol version 2 adds a mutation surface for servers with a
+//! mutable store attached ([`NetServer::with_store`]): `Insert` /
+//! `Delete` / `Compact` frames acknowledged by `MutateOk`, and the
+//! server decodes query frames **zero-copy** — rows are read from the
+//! borrowed frame buffer straight into the submission buffers
+//! ([`wire::QueryView`]), with answers bit-identical to the owning
+//! decode.
 //!
 //! The serving contract: a query tile served over loopback is
 //! **bit-identical** to the same tile submitted to the `ServeFront`
@@ -31,5 +40,6 @@ pub mod wire;
 pub use client::{NetClient, RetryPolicy, RetryingClient, ServerInfo, ServerRejection, TransportError};
 pub use server::{install_sigint_handler, NetServer, NetStats, ServerConfig, ServerHandle};
 pub use wire::{
-    DegradedFrame, ErrorCode, ErrorFrame, Frame, HealthFrame, QueryFrame, ResultsFrame, WireError,
+    DegradedFrame, ErrorCode, ErrorFrame, Frame, HealthFrame, QueryFrame, QueryView,
+    ResultsFrame, WireError,
 };

@@ -29,10 +29,11 @@
 //!   the front down, which serves everything already queued.
 
 use super::wire::{
-    self, DegradedFrame, ErrorCode, ErrorFrame, Frame, HealthFrame, QueryFrame, ResultsFrame,
-    WireError,
+    self, DegradedFrame, ErrorCode, ErrorFrame, Frame, HealthFrame, QueryFrame, QueryView,
+    ResultsFrame, WireError,
 };
 use crate::api::{Degradation, FrontStats, KMismatch, ServeFront, ShardState};
+use crate::store::SharedMutableIndex;
 use std::io::{BufReader, BufWriter, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -134,6 +135,11 @@ pub struct NetServer {
     listener: TcpListener,
     front: ServeFront,
     cfg: ServerConfig,
+    /// Mutation surface: when present, `Insert`/`Delete`/`Compact`
+    /// frames are applied here; without it they get a typed read-only
+    /// rejection. The front should be spawned over a *clone* of the
+    /// same handle so searches observe the mutations.
+    store: Option<SharedMutableIndex>,
 }
 
 impl NetServer {
@@ -150,7 +156,18 @@ impl NetServer {
         let listener = TcpListener::bind(addr)?;
         // non-blocking accept so the loop can poll the shutdown latch
         listener.set_nonblocking(true)?;
-        Ok(Self { listener, front, cfg })
+        Ok(Self { listener, front, cfg, store: None })
+    }
+
+    /// Attach a mutable store: `Insert`/`Delete`/`Compact` frames are
+    /// applied to it and `Ping` reports its live row count. For
+    /// mutations to be visible to queries, `front` must have been
+    /// spawned over a clone of this same handle, and its answer cache
+    /// must be disabled (a cached answer would outlive the rows it
+    /// names; [`crate::api::FrontConfig::answer_cache`] `= 0`).
+    pub fn with_store(mut self, store: SharedMutableIndex) -> Self {
+        self.store = Some(store);
+        self
     }
 
     /// The bound address (resolves the actual port after binding `:0`).
@@ -177,7 +194,7 @@ impl NetServer {
     }
 
     fn run_inner(self, shutdown: Arc<AtomicBool>) -> crate::Result<(NetStats, FrontStats)> {
-        let NetServer { listener, front, cfg } = self;
+        let NetServer { listener, front, cfg, store } = self;
         let front = Arc::new(front);
         let counters = Arc::new(NetCounters::default());
         let (conn_tx, conn_rx) = mpsc::sync_channel::<TcpStream>(cfg.workers);
@@ -189,9 +206,10 @@ impl NetServer {
             let flag = Arc::clone(&shutdown);
             let counters = Arc::clone(&counters);
             let cfg = cfg.clone();
+            let store = store.clone();
             let worker = std::thread::Builder::new()
                 .name(format!("knng-net-worker-{i}"))
-                .spawn(move || worker_loop(rx, front, cfg, flag, counters))?;
+                .spawn(move || worker_loop(rx, front, cfg, flag, counters, store))?;
             workers.push(worker);
         }
         loop {
@@ -270,6 +288,7 @@ fn worker_loop(
     cfg: ServerConfig,
     shutdown: Arc<AtomicBool>,
     counters: Arc<NetCounters>,
+    store: Option<SharedMutableIndex>,
 ) {
     loop {
         let stream = {
@@ -284,7 +303,7 @@ fn worker_loop(
             return; // accept loop gone and queue drained: worker done
         };
         // one connection's failure never takes the worker down
-        let _ = handle_connection(stream, &front, &cfg, &shutdown, &counters);
+        let _ = handle_connection(stream, &front, &cfg, &shutdown, &counters, store.as_ref());
     }
 }
 
@@ -294,6 +313,7 @@ fn handle_connection(
     cfg: &ServerConfig,
     shutdown: &AtomicBool,
     counters: &NetCounters,
+    store: Option<&SharedMutableIndex>,
 ) -> crate::Result<()> {
     let _ = stream.set_nodelay(true); // latency over batching at the TCP layer
     stream.set_read_timeout(Some(cfg.read_timeout))?;
@@ -301,8 +321,8 @@ fn handle_connection(
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut writer = BufWriter::new(stream);
     loop {
-        let frame = match wire::read_frame(&mut reader, cfg.max_frame) {
-            Ok(frame) => frame,
+        let payload = match wire::read_payload(&mut reader, cfg.max_frame) {
+            Ok(payload) => payload,
             Err(WireError::Eof) => return Ok(()), // clean hang-up
             Err(WireError::Io(_)) => return Ok(()), // torn frame, reset, or read timeout
             Err(WireError::Protocol { code, detail, message, desync }) => {
@@ -316,11 +336,58 @@ fn handle_connection(
                 continue; // exactly `len` bytes consumed: still framed
             }
         };
+
+        // Fast path: a query frame is decoded as a borrowed view and
+        // its rows are read straight out of `payload` into the
+        // submission buffers — one decode pass, no intermediate tile.
+        // The view decoder accepts and rejects exactly the byte strings
+        // `decode_payload` would, so the protocol is unchanged.
+        if wire::payload_kind(&payload) == Some(wire::KIND_QUERY) {
+            let reply = match wire::decode_query_view(&payload) {
+                Ok(view) => {
+                    counters.frames.fetch_add(1, Ordering::Relaxed);
+                    if shutdown.load(Ordering::SeqCst) {
+                        error_reply(ErrorCode::ShuttingDown, 0, "server is draining".into())
+                    } else {
+                        counters.queries.fetch_add(view.count as u64, Ordering::Relaxed);
+                        serve_query_view(front, &view)
+                    }
+                }
+                Err(WireError::Protocol { code, detail, message, .. }) => {
+                    // the whole payload was already consumed: in-sync
+                    counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                    Frame::Error(ErrorFrame { code, detail, message })
+                }
+                Err(_) => return Ok(()), // unreachable: the decoder is pure
+            };
+            wire::write_frame(&mut writer, &reply)?;
+            writer.flush()?;
+            if shutdown.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            continue;
+        }
+
+        let frame = match wire::decode_payload(&payload) {
+            Ok(frame) => frame,
+            Err(WireError::Protocol { code, detail, message, .. }) => {
+                counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
+                let reply = Frame::Error(ErrorFrame { code, detail, message });
+                let _ = wire::write_frame(&mut writer, &reply);
+                let _ = writer.flush();
+                continue; // decode failures are in-sync by construction
+            }
+            Err(_) => return Ok(()), // unreachable: the decoder is pure
+        };
         counters.frames.fetch_add(1, Ordering::Relaxed);
         let reply = match frame {
             Frame::Ping { token } => Frame::Pong {
                 token,
-                n: front.corpus_len() as u64,
+                // a mutable store's corpus moves; report its live count
+                n: match store {
+                    Some(s) => s.live_len() as u64,
+                    None => front.corpus_len() as u64,
+                },
                 dim: front.dim() as u32,
                 k: front.serving_k() as u32,
             },
@@ -332,6 +399,8 @@ fn handle_connection(
                 return Ok(());
             }
             Frame::Query(q) => {
+                // cold path kept for completeness; kind 3 is normally
+                // routed through the view decoder above
                 if shutdown.load(Ordering::SeqCst) {
                     error_reply(ErrorCode::ShuttingDown, 0, "server is draining".into())
                 } else {
@@ -339,9 +408,24 @@ fn handle_connection(
                     serve_query(front, q)
                 }
             }
+            Frame::Insert { id, row } => serve_mutation(store, front, || {
+                let s = store.expect("serve_mutation checked the store");
+                s.insert(id, &row)?;
+                Ok((wire::MUTATE_OP_INSERT, true))
+            }),
+            Frame::Delete { id } => serve_mutation(store, front, || {
+                let s = store.expect("serve_mutation checked the store");
+                let was_live = s.delete(id)?;
+                Ok((wire::MUTATE_OP_DELETE, was_live))
+            }),
+            Frame::Compact => serve_mutation(store, front, || {
+                let s = store.expect("serve_mutation checked the store");
+                s.compact()?;
+                Ok((wire::MUTATE_OP_COMPACT, true))
+            }),
             Frame::Health { token } => health_reply(front, token),
             Frame::Pong { .. } | Frame::Results(_) | Frame::Error(_) | Frame::Degraded(_)
-            | Frame::HealthReply(_) => {
+            | Frame::HealthReply(_) | Frame::MutateOk { .. } => {
                 counters.protocol_errors.fetch_add(1, Ordering::Relaxed);
                 let msg = "unexpected server-to-client frame kind".to_string();
                 error_reply(ErrorCode::Malformed, 0, msg)
@@ -355,33 +439,99 @@ fn handle_connection(
     }
 }
 
-/// Validate one query frame against the front's served contract and
-/// run it through the micro-batching windows. Tile rows are submitted
-/// individually, so rows from *different* connections coalesce into
-/// shared windows — the wire inherits the in-process batching
-/// semantics (and the in-process answers, bit for bit).
-fn serve_query(front: &ServeFront, q: QueryFrame) -> Frame {
-    if q.dim as usize != front.dim() {
-        let msg = format!("query dim {} does not match served dim {}", q.dim, front.dim());
+/// Run one mutation against the attached store (typed read-only
+/// rejection without one) and answer with the post-mutation
+/// generation + live count, or a typed [`ErrorCode::BadQuery`] when
+/// the store refused it (dim mismatch, reserved id, compaction on a
+/// near-empty corpus, …).
+fn serve_mutation(
+    store: Option<&SharedMutableIndex>,
+    front: &ServeFront,
+    op: impl FnOnce() -> crate::Result<(u8, bool)>,
+) -> Frame {
+    let Some(s) = store else {
+        let msg = "this server is read-only (no mutable store attached)".to_string();
         return error_reply(ErrorCode::BadQuery, front.dim() as u32, msg);
+    };
+    match op() {
+        Ok((op, applied)) => Frame::MutateOk {
+            op,
+            applied,
+            generation: s.generation(),
+            live: s.live_len() as u64,
+        },
+        Err(e) => error_reply(ErrorCode::BadQuery, front.dim() as u32, format!("{e:#}")),
+    }
+}
+
+/// Validate the fixed fields of a query (owning or view form) against
+/// the front's served contract; `Some` is the typed error reply.
+fn validate_query(front: &ServeFront, dim: u32, route_top_m: u32) -> Option<Frame> {
+    if dim as usize != front.dim() {
+        let msg = format!("query dim {dim} does not match served dim {}", front.dim());
+        return Some(error_reply(ErrorCode::BadQuery, front.dim() as u32, msg));
     }
     let configured = front.route_top_m().unwrap_or(0);
-    if q.route_top_m as usize != configured {
-        let msg = format!(
-            "requested route_top_m {} but this server serves {}",
-            q.route_top_m, configured
-        );
-        return error_reply(ErrorCode::MismatchedRoute, configured as u32, msg);
+    if route_top_m as usize != configured {
+        let msg =
+            format!("requested route_top_m {route_top_m} but this server serves {configured}");
+        return Some(error_reply(ErrorCode::MismatchedRoute, configured as u32, msg));
+    }
+    None
+}
+
+/// Validate one owning query frame and run it through the
+/// micro-batching windows (the cold path; the server normally decodes
+/// queries as views and goes through [`serve_query_view`]).
+fn serve_query(front: &ServeFront, q: QueryFrame) -> Frame {
+    if let Some(reply) = validate_query(front, q.dim, q.route_top_m) {
+        return reply;
     }
     let dim = q.dim as usize;
-    let k = q.k as usize;
-    let budget = Duration::from_micros(q.deadline_us);
-    let mut tickets = Vec::with_capacity(q.count as usize);
-    for row in q.data.chunks_exact(dim) {
-        let submitted = if q.deadline_us > 0 {
-            front.submit_with_k_deadline(row.to_vec(), k, budget)
+    serve_rows(front, q.k, q.deadline_us, q.data.chunks_exact(dim).map(<[f32]>::to_vec))
+}
+
+/// The zero-copy serving path: each row is decoded from the borrowed
+/// frame buffer straight into its own submission buffer — one decode
+/// pass, no intermediate tile vector. Answers are bit-identical to
+/// [`serve_query`] because [`QueryView::row_into`] reads the same LE
+/// `f32` bit patterns [`wire::decode_payload`] would materialize.
+fn serve_query_view(front: &ServeFront, q: &QueryView<'_>) -> Frame {
+    if let Some(reply) = validate_query(front, q.dim, q.route_top_m) {
+        return reply;
+    }
+    let dim = q.dim as usize;
+    serve_rows(
+        front,
+        q.k,
+        q.deadline_us,
+        (0..q.count as usize).map(|qi| {
+            let mut row = vec![0.0f32; dim];
+            q.row_into(qi, &mut row);
+            row
+        }),
+    )
+}
+
+/// Submit pre-validated rows through the micro-batching windows. Tile
+/// rows are submitted individually, so rows from *different*
+/// connections coalesce into shared windows — the wire inherits the
+/// in-process batching semantics (and the in-process answers, bit for
+/// bit).
+fn serve_rows(
+    front: &ServeFront,
+    wire_k: u32,
+    deadline_us: u64,
+    rows: impl Iterator<Item = Vec<f32>>,
+) -> Frame {
+    let k = wire_k as usize;
+    let budget = Duration::from_micros(deadline_us);
+    let mut tickets = Vec::new();
+    for row in rows {
+        let submitted = if deadline_us > 0 {
+            front.submit_with_k_deadline(row, k, budget)
         } else {
-            front.submit_with_k(row.to_vec(), k)
+            front.submit_with_k(row, k)
         };
         match submitted {
             Ok(ticket) => tickets.push(ticket),
@@ -423,7 +573,7 @@ fn serve_query(front: &ServeFront, q: QueryFrame) -> Frame {
             }
         }
     }
-    let frame = ResultsFrame { k: q.k, results, windows };
+    let frame = ResultsFrame { k: wire_k, results, windows };
     match degradation {
         None => Frame::Results(frame),
         Some(d) => Frame::Degraded(DegradedFrame {

@@ -29,9 +29,14 @@
 //! | 7    | Degraded    | `cause u8, missing u32, missing × u32 (shard ids)`, then a Results body (v2+) |
 //! | 8    | Health      | `token u64` (v2+) |
 //! | 9    | HealthReply | `token u64, threads u32, respawns u64, panics u64, lost u64, misses u64, shards u32, shards × u8 (1 = alive)` (v2+) |
+//! | 10   | Insert      | `id u32, dim u32, dim × f32` (v2+) |
+//! | 11   | Delete      | `id u32` (v2+) |
+//! | 12   | Compact     | empty (v2+) |
+//! | 13   | MutateOk    | `op u8, applied u8, generation u64, live u64` (v2+) |
 //!
-//! Version 2 added `deadline_us` to Query and the three fault-tolerance
-//! kinds (7–9). Version 1 frames still decode — a v1 Query has no
+//! Version 2 added `deadline_us` to Query, the three fault-tolerance
+//! kinds (7–9), and the storage-engine mutation kinds (10–13: see
+//! [`crate::store`]). Version 1 frames still decode — a v1 Query has no
 //! deadline field and comes back as `deadline_us == 0` ("no deadline"),
 //! so legacy clients keep working unchanged. This build always writes
 //! version 2.
@@ -65,6 +70,13 @@ pub const MIN_PAYLOAD: usize = 16;
 /// Default cap on the payload length prefix (16 MiB); anything larger
 /// is rejected as [`ErrorCode::Oversized`] without being read.
 pub const DEFAULT_MAX_FRAME: usize = 16 << 20;
+
+/// `op` byte of a [`Frame::MutateOk`] answering an insert.
+pub const MUTATE_OP_INSERT: u8 = 1;
+/// `op` byte of a [`Frame::MutateOk`] answering a delete.
+pub const MUTATE_OP_DELETE: u8 = 2;
+/// `op` byte of a [`Frame::MutateOk`] answering a compaction.
+pub const MUTATE_OP_COMPACT: u8 = 3;
 
 /// Typed error codes carried by [`Frame::Error`] (and mirrored in
 /// [`WireError::Protocol`]).
@@ -252,20 +264,55 @@ pub enum Frame {
     },
     /// Reply to [`Frame::Health`]. v2+.
     HealthReply(HealthFrame),
+    /// Insert (or overwrite) one row in a mutable store. v2+.
+    Insert {
+        /// External id of the row.
+        id: u32,
+        /// The row, logical (unpadded) dimensionality.
+        row: Vec<f32>,
+    },
+    /// Delete one external id from a mutable store. v2+.
+    Delete {
+        /// External id to delete.
+        id: u32,
+    },
+    /// Request a manual compaction of a mutable store. v2+.
+    Compact,
+    /// Acknowledge a mutation. v2+.
+    MutateOk {
+        /// Which mutation this acknowledges ([`MUTATE_OP_INSERT`] /
+        /// [`MUTATE_OP_DELETE`] / [`MUTATE_OP_COMPACT`]).
+        op: u8,
+        /// Whether the mutation changed anything (a delete of an
+        /// absent id acknowledges with `false`).
+        applied: bool,
+        /// The store's compaction generation after the mutation.
+        generation: u64,
+        /// Live rows in the store after the mutation.
+        live: u64,
+    },
 }
+
+/// Wire kind byte of a query frame — the one kind the server decodes
+/// zero-copy (see [`decode_query_view`]), so it gets a name.
+pub const KIND_QUERY: u8 = 3;
 
 impl Frame {
     fn kind(&self) -> u8 {
         match self {
             Self::Ping { .. } => 1,
             Self::Pong { .. } => 2,
-            Self::Query(_) => 3,
+            Self::Query(_) => KIND_QUERY,
             Self::Results(_) => 4,
             Self::Error(_) => 5,
             Self::Shutdown => 6,
             Self::Degraded(_) => 7,
             Self::Health { .. } => 8,
             Self::HealthReply(_) => 9,
+            Self::Insert { .. } => 10,
+            Self::Delete { .. } => 11,
+            Self::Compact => 12,
+            Self::MutateOk { .. } => 13,
         }
     }
 }
@@ -401,7 +448,21 @@ fn encode_body(buf: &mut Vec<u8>, frame: &Frame) {
             buf.extend_from_slice(&(take as u16).to_le_bytes());
             buf.extend_from_slice(&msg[..take]);
         }
-        Frame::Shutdown => {}
+        Frame::Insert { id, row } => {
+            buf.extend_from_slice(&id.to_le_bytes());
+            buf.extend_from_slice(&(row.len() as u32).to_le_bytes());
+            for &x in row {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Frame::Delete { id } => buf.extend_from_slice(&id.to_le_bytes()),
+        Frame::MutateOk { op, applied, generation, live } => {
+            buf.push(*op);
+            buf.push(*applied as u8);
+            buf.extend_from_slice(&generation.to_le_bytes());
+            buf.extend_from_slice(&live.to_le_bytes());
+        }
+        Frame::Shutdown | Frame::Compact => {}
     }
 }
 
@@ -424,10 +485,12 @@ fn encode_results(buf: &mut Vec<u8>, r: &ResultsFrame) {
     }
 }
 
-/// Read and decode one frame from `r`, enforcing `max_frame` on the
-/// length prefix before reading the payload. Never panics on wire
-/// input; see [`WireError`] for the failure taxonomy.
-pub fn read_frame<R: Read>(r: &mut R, max_frame: usize) -> Result<Frame, WireError> {
+/// Read one length-prefixed payload from `r` without decoding it,
+/// enforcing `max_frame` on the length prefix before reading. This is
+/// the transport half of [`read_frame`]; pair it with
+/// [`decode_payload`] (owning decode) or [`decode_query_view`]
+/// (zero-copy query decode straight out of this buffer).
+pub fn read_payload<R: Read>(r: &mut R, max_frame: usize) -> Result<Vec<u8>, WireError> {
     let mut len_buf = [0u8; 4];
     // the first byte distinguishes a clean hang-up (Eof) from a frame
     // torn mid-way (Io(UnexpectedEof))
@@ -461,13 +524,29 @@ pub fn read_frame<R: Read>(r: &mut R, max_frame: usize) -> Result<Frame, WireErr
     }
     let mut payload = vec![0u8; len];
     r.read_exact(&mut payload)?;
+    Ok(payload)
+}
+
+/// Read and decode one frame from `r`, enforcing `max_frame` on the
+/// length prefix before reading the payload. Never panics on wire
+/// input; see [`WireError`] for the failure taxonomy.
+pub fn read_frame<R: Read>(r: &mut R, max_frame: usize) -> Result<Frame, WireError> {
+    let payload = read_payload(r, max_frame)?;
     decode_payload(&payload)
 }
 
-/// Decode a complete payload (everything after the length prefix).
-/// All failures are in-sync protocol errors: the caller already
-/// consumed exactly the prefixed length.
-pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
+/// The frame-kind byte of a complete payload, for routing a buffer to
+/// the right decoder before committing to a full decode. `None` when
+/// the buffer is too short to carry one (the decoders reject it
+/// properly).
+pub fn payload_kind(payload: &[u8]) -> Option<u8> {
+    (payload.len() >= MIN_PAYLOAD).then(|| payload[5])
+}
+
+/// Validate everything about a payload except its body: length floor,
+/// magic, version range, CRC, zero flags. Returns (version, kind,
+/// body bytes).
+fn validate_envelope(payload: &[u8]) -> Result<(u8, u8, &[u8]), WireError> {
     if payload.len() < MIN_PAYLOAD {
         return Err(WireError::malformed("payload below minimum length"));
     }
@@ -493,15 +572,99 @@ pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
     if u64::from_le_bytes(tail) != crc.0 {
         return Err(WireError::malformed("checksum mismatch"));
     }
-    let kind = payload[5];
     let flags = u16::from_le_bytes([payload[6], payload[7]]);
     if flags != 0 {
         return Err(WireError::malformed(format!("unknown flags {flags:#06x}")));
     }
-    let mut dec = Dec { buf: &payload[8..body_end], pos: 0 };
+    Ok((version, payload[5], &payload[8..body_end]))
+}
+
+/// Decode a complete payload (everything after the length prefix).
+/// All failures are in-sync protocol errors: the caller already
+/// consumed exactly the prefixed length.
+pub fn decode_payload(payload: &[u8]) -> Result<Frame, WireError> {
+    let (version, kind, body) = validate_envelope(payload)?;
+    let mut dec = Dec { buf: body, pos: 0 };
     let frame = decode_body(version, kind, &mut dec)?;
     dec.done()?;
     Ok(frame)
+}
+
+/// A query frame decoded **in place**: the fixed fields are parsed,
+/// the `count × dim` f32 tile stays as borrowed little-endian bytes in
+/// the frame buffer. [`row_into`](QueryView::row_into) converts one
+/// row at a time directly into its padded destination, so the serving
+/// path does one decode pass with no intermediate `Vec<f32>`.
+#[derive(Debug)]
+pub struct QueryView<'a> {
+    /// Neighbors requested per query.
+    pub k: u32,
+    /// Centroid-routing fan-out bound; `0` requests the full fan-out.
+    pub route_top_m: u32,
+    /// Number of query rows in the tile.
+    pub count: u32,
+    /// Dimensionality of each row.
+    pub dim: u32,
+    /// End-to-end latency budget in microseconds; `0` = none.
+    pub deadline_us: u64,
+    /// Raw little-endian tile bytes, exactly `count · dim · 4`.
+    data: &'a [u8],
+}
+
+impl QueryView<'_> {
+    /// Decode row `q` into `out[..dim]` (any tail of `out` is left
+    /// untouched — pass a padded row and keep its zero tail).
+    #[inline]
+    pub fn row_into(&self, q: usize, out: &mut [f32]) {
+        let dim = self.dim as usize;
+        debug_assert!(q < self.count as usize && out.len() >= dim);
+        let bytes = &self.data[q * dim * 4..(q + 1) * dim * 4];
+        for (dst, src) in out[..dim].iter_mut().zip(bytes.chunks_exact(4)) {
+            *dst = f32::from_le_bytes(src.try_into().unwrap());
+        }
+    }
+
+    /// Materialize the owning [`QueryFrame`] (compatibility path; the
+    /// bit patterns are identical to what [`decode_payload`] builds).
+    pub fn to_query_frame(&self) -> QueryFrame {
+        let mut data = vec![0.0f32; self.count as usize * self.dim as usize];
+        for (dst, src) in data.iter_mut().zip(self.data.chunks_exact(4)) {
+            *dst = f32::from_le_bytes(src.try_into().unwrap());
+        }
+        QueryFrame {
+            k: self.k,
+            route_top_m: self.route_top_m,
+            count: self.count,
+            dim: self.dim,
+            deadline_us: self.deadline_us,
+            data,
+        }
+    }
+}
+
+/// Zero-copy decode of a query payload: full envelope validation
+/// (magic, version, CRC, flags) and fixed-field parsing, with the
+/// query tile left borrowed in place. Fails exactly where
+/// [`decode_payload`] would — including on non-query kinds — so the
+/// two decoders accept and reject identical byte strings.
+pub fn decode_query_view(payload: &[u8]) -> Result<QueryView<'_>, WireError> {
+    let (version, kind, body) = validate_envelope(payload)?;
+    if kind != KIND_QUERY {
+        return Err(WireError::malformed(format!("expected a query frame, got kind {kind}")));
+    }
+    let mut dec = Dec { buf: body, pos: 0 };
+    let (k, route_top_m) = (dec.u32()?, dec.u32()?);
+    let (count, dim) = (dec.u32()?, dec.u32()?);
+    let deadline_us = if version >= 2 { dec.u64()? } else { 0 };
+    let cells = match (count as usize).checked_mul(dim as usize) {
+        Some(c) if c.checked_mul(4) == Some(dec.remaining()) => c,
+        _ => {
+            return Err(WireError::malformed("query tile byte count does not match count × dim"));
+        }
+    };
+    let data = dec.take(cells * 4)?;
+    dec.done()?;
+    Ok(QueryView { k, route_top_m, count, dim, deadline_us, data })
 }
 
 fn decode_body(version: u8, kind: u8, dec: &mut Dec<'_>) -> Result<Frame, WireError> {
@@ -583,7 +746,57 @@ fn decode_body(version: u8, kind: u8, dec: &mut Dec<'_>) -> Result<Frame, WireEr
             Ok(Frame::Error(ErrorFrame { code, detail, message }))
         }
         6 => Ok(Frame::Shutdown),
+        10 => {
+            require_v2(version, kind)?;
+            let id = dec.u32()?;
+            let dim = dec.u32()? as usize;
+            if dim.checked_mul(4) != Some(dec.remaining()) {
+                return Err(WireError::malformed("insert row byte count does not match dim"));
+            }
+            let mut row = Vec::with_capacity(dim);
+            for _ in 0..dim {
+                row.push(dec.f32()?);
+            }
+            Ok(Frame::Insert { id, row })
+        }
+        11 => {
+            require_v2(version, kind)?;
+            Ok(Frame::Delete { id: dec.u32()? })
+        }
+        12 => {
+            require_v2(version, kind)?;
+            Ok(Frame::Compact)
+        }
+        13 => {
+            require_v2(version, kind)?;
+            let op = dec.u8()?;
+            if !matches!(op, MUTATE_OP_INSERT | MUTATE_OP_DELETE | MUTATE_OP_COMPACT) {
+                return Err(WireError::malformed(format!("unknown mutation op {op}")));
+            }
+            let applied_byte = dec.u8()?;
+            if applied_byte > 1 {
+                return Err(WireError::malformed(format!(
+                    "mutation applied byte must be 0 or 1, got {applied_byte}"
+                )));
+            }
+            Ok(Frame::MutateOk {
+                op,
+                applied: applied_byte == 1,
+                generation: dec.u64()?,
+                live: dec.u64()?,
+            })
+        }
         other => Err(WireError::malformed(format!("unknown frame kind {other}"))),
+    }
+}
+
+/// The mutation kinds are v2-only: a v1 peer never sent one on
+/// purpose, so treat it as malformed rather than guessing.
+fn require_v2(version: u8, kind: u8) -> Result<(), WireError> {
+    if version >= 2 {
+        Ok(())
+    } else {
+        Err(WireError::malformed(format!("frame kind {kind} requires protocol version 2")))
     }
 }
 
@@ -981,5 +1194,311 @@ mod tests {
         }
         assert_eq!(ErrorCode::from_u8(0), None);
         assert_eq!(ErrorCode::from_u8(99), None);
+    }
+
+    #[test]
+    fn mutation_frames_round_trip() {
+        let weird = f32::from_bits(0x7FC0_0055);
+        let ins = Frame::Insert { id: 42, row: vec![1.0, -0.0, weird] };
+        let Frame::Insert { id, row } = round_trip(&ins) else { panic!("wrong kind back") };
+        assert_eq!(id, 42);
+        let Frame::Insert { row: orig, .. } = ins else { unreachable!() };
+        let a: Vec<u32> = orig.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = row.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "inserted rows must survive the wire bit for bit");
+
+        let del = Frame::Delete { id: 7 };
+        assert_eq!(round_trip(&del), del);
+        assert_eq!(round_trip(&Frame::Compact), Frame::Compact);
+        for (op, applied) in
+            [(MUTATE_OP_INSERT, true), (MUTATE_OP_DELETE, false), (MUTATE_OP_COMPACT, true)]
+        {
+            let ok = Frame::MutateOk { op, applied, generation: 5, live: 12_345 };
+            assert_eq!(round_trip(&ok), ok);
+        }
+        // empty-row insert is legal on the wire (the store rejects it
+        // at the semantic layer with a typed BadQuery)
+        let empty = Frame::Insert { id: 1, row: vec![] };
+        assert_eq!(round_trip(&empty), empty);
+    }
+
+    #[test]
+    fn mutation_kinds_are_rejected_on_v1_frames() {
+        for frame in [
+            Frame::Insert { id: 1, row: vec![1.0] },
+            Frame::Delete { id: 1 },
+            Frame::Compact,
+            Frame::MutateOk { op: MUTATE_OP_INSERT, applied: true, generation: 0, live: 2 },
+        ] {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &frame).unwrap();
+            buf[8] = LEGACY_VERSION; // version byte (after the 4 B length prefix)
+            // re-seal the crc so the version downgrade is the only fault
+            let payload_end = buf.len() - 8;
+            let mut crc = Fnv::new();
+            crc.update(&buf[4..payload_end]);
+            buf[payload_end..].copy_from_slice(&crc.0.to_le_bytes());
+            match read_frame(&mut Cursor::new(buf), DEFAULT_MAX_FRAME) {
+                Err(WireError::Protocol { code: ErrorCode::Malformed, desync: false, .. }) => {}
+                other => panic!("v1 mutation frame must be malformed, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_mutate_ok_bytes_are_malformed() {
+        for (byte_off_in_body, value) in [(0usize, 99u8), (1, 2)] {
+            let ok = Frame::MutateOk { op: MUTATE_OP_INSERT, applied: true, generation: 1, live: 2 };
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &ok).unwrap();
+            buf[12 + byte_off_in_body] = value; // 4 B len + 8 B header
+            let payload_end = buf.len() - 8;
+            let mut crc = Fnv::new();
+            crc.update(&buf[4..payload_end]);
+            buf[payload_end..].copy_from_slice(&crc.0.to_le_bytes());
+            assert!(matches!(
+                read_frame(&mut Cursor::new(buf), DEFAULT_MAX_FRAME),
+                Err(WireError::Protocol { code: ErrorCode::Malformed, desync: false, .. })
+            ));
+        }
+    }
+
+    // ---- satellite: zero-copy query decode ----
+
+    #[test]
+    fn query_view_is_bitwise_identical_to_owning_decode() {
+        let weird = f32::from_bits(0x7FC0_1234);
+        let q = QueryFrame {
+            k: 7,
+            route_top_m: 2,
+            count: 3,
+            dim: 5,
+            deadline_us: 1_250,
+            data: (0..15)
+                .map(|i| if i == 4 { weird } else { i as f32 * 0.5 - 3.0 })
+                .collect(),
+        };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Frame::Query(q.clone())).unwrap();
+        let payload = &buf[4..]; // strip the length prefix
+
+        assert_eq!(payload_kind(payload), Some(3));
+        let view = decode_query_view(payload).unwrap();
+        assert_eq!(
+            (view.k, view.route_top_m, view.count, view.dim, view.deadline_us),
+            (q.k, q.route_top_m, q.count, q.dim, q.deadline_us)
+        );
+
+        // materialized view == owning decode, bit for bit
+        let Frame::Query(owned) = decode_payload(payload).unwrap() else { panic!("kind") };
+        let via_view = view.to_query_frame();
+        let a: Vec<u32> = owned.data.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = via_view.data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "view materialization must match the owning decode bitwise");
+
+        // row_into into a padded destination: exact row bits, zero tail
+        for qi in 0..3 {
+            let mut row = [0.0f32; 8];
+            view.row_into(qi, &mut row);
+            for c in 0..5 {
+                assert_eq!(
+                    row[c].to_bits(),
+                    q.data[qi * 5 + c].to_bits(),
+                    "query {qi} cell {c}"
+                );
+            }
+            assert_eq!(&row[5..], &[0.0; 3], "padding lanes stay zero");
+        }
+    }
+
+    #[test]
+    fn query_view_rejects_exactly_what_decode_payload_rejects() {
+        let q = Frame::Query(QueryFrame {
+            k: 3,
+            route_top_m: 0,
+            count: 2,
+            dim: 2,
+            deadline_us: 0,
+            data: vec![1.0, 2.0, 3.0, 4.0],
+        });
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &q).unwrap();
+        let good = buf[4..].to_vec();
+        assert!(decode_query_view(&good).is_ok());
+
+        // corrupt crc, bad magic, nonzero flags, truncated body: both
+        // decoders must refuse the same bytes with in-sync errors
+        let mut variants: Vec<Vec<u8>> = Vec::new();
+        let mut crc_bad = good.clone();
+        let n = crc_bad.len();
+        crc_bad[n - 1] ^= 0xFF;
+        variants.push(crc_bad);
+        let mut magic_bad = good.clone();
+        magic_bad[0] = b'X';
+        variants.push(magic_bad);
+        let mut flag_bad = good.clone();
+        flag_bad[6] = 1;
+        variants.push(flag_bad);
+        for cut in MIN_PAYLOAD..good.len() {
+            let mut t = good[..cut - 8].to_vec();
+            let mut crc = Fnv::new();
+            crc.update(&t);
+            t.extend_from_slice(&crc.0.to_le_bytes());
+            variants.push(t);
+        }
+        for (i, v) in variants.iter().enumerate() {
+            let a = decode_payload(v);
+            let b = decode_query_view(v);
+            assert!(a.is_err(), "variant {i}: owning decode must fail");
+            match b {
+                Err(WireError::Protocol { desync: false, .. }) => {}
+                other => panic!("variant {i}: view decode must fail in-sync, got {other:?}"),
+            }
+            // CRC-valid truncations may differ in *message* but never
+            // in acceptance
+            assert_eq!(a.is_err(), b.is_err(), "variant {i}: decoders must agree");
+        }
+
+        // and a non-query kind is refused by the view decoder
+        let mut ping = Vec::new();
+        write_frame(&mut ping, &Frame::Ping { token: 1 }).unwrap();
+        assert!(matches!(
+            decode_query_view(&ping[4..]),
+            Err(WireError::Protocol { code: ErrorCode::Malformed, desync: false, .. })
+        ));
+    }
+
+    // ---- satellite: table-driven truncation suite ----
+
+    /// One representative frame per kind, every supported version.
+    fn frame_table() -> Vec<(&'static str, Frame)> {
+        vec![
+            ("ping", Frame::Ping { token: 0x0123_4567_89AB_CDEF }),
+            ("pong", Frame::Pong { token: 9, n: 1_000, dim: 16, k: 10 }),
+            (
+                "query",
+                Frame::Query(QueryFrame {
+                    k: 4,
+                    route_top_m: 1,
+                    count: 2,
+                    dim: 3,
+                    deadline_us: 777,
+                    data: vec![0.5, -1.5, 2.0, 3.0, -0.0, f32::INFINITY],
+                }),
+            ),
+            (
+                "results",
+                Frame::Results(ResultsFrame {
+                    k: 2,
+                    results: vec![vec![Neighbor::new(3, 0.25)], vec![Neighbor::new(1, 0.5)]],
+                    windows: vec![
+                        WindowInfo { requests: 1, unique: 1, coalesced: false },
+                        WindowInfo { requests: 2, unique: 1, coalesced: true },
+                    ],
+                }),
+            ),
+            (
+                "error",
+                Frame::Error(ErrorFrame {
+                    code: ErrorCode::BadQuery,
+                    detail: 16,
+                    message: "dim mismatch".into(),
+                }),
+            ),
+            ("shutdown", Frame::Shutdown),
+            (
+                "degraded",
+                Frame::Degraded(DegradedFrame {
+                    results: ResultsFrame {
+                        k: 1,
+                        results: vec![vec![Neighbor::new(2, 0.125)]],
+                        windows: vec![WindowInfo { requests: 1, unique: 1, coalesced: false }],
+                    },
+                    shards_missing: vec![0, 2],
+                    cause: DegradeCause::ShardPanicked,
+                }),
+            ),
+            ("health", Frame::Health { token: 55 }),
+            (
+                "health_reply",
+                Frame::HealthReply(HealthFrame {
+                    token: 55,
+                    threads: 3,
+                    respawns: 1,
+                    contained_panics: 0,
+                    lost_replies: 2,
+                    deadline_misses: 4,
+                    shards_alive: vec![true, false, true],
+                }),
+            ),
+            ("insert", Frame::Insert { id: 11, row: vec![1.0, 2.0, 3.0] }),
+            ("delete", Frame::Delete { id: 11 }),
+            ("compact", Frame::Compact),
+            (
+                "mutate_ok",
+                Frame::MutateOk {
+                    op: MUTATE_OP_DELETE,
+                    applied: true,
+                    generation: 3,
+                    live: 999,
+                },
+            ),
+        ]
+    }
+
+    /// Mirror of the `KNNIv1` bundle-truncation suite at the frame
+    /// layer: every kind, truncated at **every** byte position of its
+    /// payload (which subsumes each field boundary, one-byte-in, and
+    /// one-short), must come back as a typed, in-sync [`WireError`] —
+    /// never a panic, never a desync once the length prefix was
+    /// honored. The CRC is re-sealed at each cut so the failure under
+    /// test is structural, not the checksum.
+    #[test]
+    fn every_kind_rejects_every_truncation_in_sync() {
+        for (name, frame) in frame_table() {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &frame).unwrap();
+            let payload = &buf[4..];
+            assert_eq!(decode_payload(payload).unwrap(), frame, "{name}: full frame decodes");
+
+            for cut in 0..payload.len() {
+                let candidate: Vec<u8> = if cut < MIN_PAYLOAD + 1 {
+                    // too short to even re-seal: the raw prefix
+                    payload[..cut].to_vec()
+                } else {
+                    let mut t = payload[..cut - 8].to_vec();
+                    let mut crc = Fnv::new();
+                    crc.update(&t);
+                    t.extend_from_slice(&crc.0.to_le_bytes());
+                    t
+                };
+                match decode_payload(&candidate) {
+                    Err(WireError::Protocol { desync: false, .. }) => {}
+                    Err(other) => {
+                        panic!("{name} cut {cut}: expected in-sync protocol error, got {other:?}")
+                    }
+                    Ok(f) => panic!("{name} cut {cut}: truncation decoded as {f:?}"),
+                }
+            }
+        }
+    }
+
+    /// The same cuts fed through the *transport* layer: a torn frame
+    /// (length prefix promising more than the stream holds) must be
+    /// `Io`, and a complete-but-truncated payload stays a typed
+    /// in-sync protocol error.
+    #[test]
+    fn every_kind_distinguishes_torn_from_truncated() {
+        for (name, frame) in frame_table() {
+            let mut buf = Vec::new();
+            write_frame(&mut buf, &frame).unwrap();
+            // tear the stream one byte short of the full frame
+            let torn = &buf[..buf.len() - 1];
+            assert!(
+                matches!(read_frame(&mut Cursor::new(torn.to_vec()), DEFAULT_MAX_FRAME),
+                    Err(WireError::Io(_))),
+                "{name}: torn stream must be Io"
+            );
+        }
     }
 }

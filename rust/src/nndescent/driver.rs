@@ -79,6 +79,22 @@ impl BuildResult {
     }
 }
 
+/// Outcome of a bounded [`NnDescent::repair`] pass.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct RepairStats {
+    /// Repair iterations executed (≤ the budget).
+    pub iterations: usize,
+    /// Distance evaluations across the pass.
+    pub dist_evals: u64,
+    /// Graph updates across the pass.
+    pub updates: u64,
+    /// True when the pass hit the δ·n·k convergence threshold before
+    /// exhausting its budget.
+    pub converged: bool,
+    /// Wall time, seconds.
+    pub secs: f64,
+}
+
 /// NN-Descent builder. Construct with [`Params`], call [`build`].
 ///
 /// [`build`]: NnDescent::build
@@ -260,6 +276,67 @@ impl NnDescent {
             reordering,
             total_secs: total.secs(),
         }
+    }
+
+    /// Run at most `budget` NN-Descent iterations over an *existing*
+    /// graph — the incremental half of a full build: no random init, no
+    /// reorder, just select → compute until convergence or the budget
+    /// runs out. The store engine's compactor seeds a fresh graph from
+    /// the surviving edges of the old segment (new rows get random
+    /// edges) and calls this instead of rebuilding from scratch.
+    ///
+    /// `graph` must cover exactly `data` (same `n`); its `k` is used
+    /// as-is. Runs the sequential engine with the configured native
+    /// backend; deterministic given ([`Params::seed`], the input graph).
+    pub fn repair(
+        &self,
+        data: &AlignedMatrix,
+        mut graph: KnnGraph,
+        budget: usize,
+    ) -> (KnnGraph, RepairStats) {
+        let p = &self.params;
+        let n = data.n();
+        assert_eq!(graph.n(), n, "repair graph/data size mismatch");
+        let k = graph.k();
+        let cap = p.cand_cap();
+
+        let mut total = Timer::new();
+        total.start();
+
+        // A distinct stream from the build's 0xD00D: repair draws must
+        // not replay the build's sampling sequence.
+        let mut rng = Pcg64::new_stream(p.seed, 0x4EFA12);
+        let mut engine = NativeEngine::new(p.compute);
+        let mut counter = FlopCounter::new(data.dim());
+        let mut selector = Selector::new(p.selection, n, cap);
+        let mut cands = CandidateLists::new(n, cap);
+        let mut scratch = ComputeScratch::new(cap);
+
+        let threshold = (p.delta * n as f64 * k as f64) as u64;
+        let mut stats = RepairStats::default();
+        for _ in 0..budget {
+            stats.iterations += 1;
+            selector.select(&mut graph, &mut rng, &mut cands, &mut NoTracer);
+            let updates = compute_step(
+                &mut graph,
+                data,
+                &cands,
+                &mut engine,
+                &mut counter,
+                &mut scratch,
+                &mut NoTracer,
+            );
+            stats.updates += updates;
+            if updates <= threshold {
+                stats.converged = true;
+                break;
+            }
+        }
+
+        total.stop();
+        stats.dist_evals = counter.dist_evals;
+        stats.secs = total.secs();
+        (graph, stats)
     }
 }
 

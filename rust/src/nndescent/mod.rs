@@ -36,7 +36,7 @@ pub mod reorder_alt;
 pub mod selection;
 
 pub use candidates::CandidateLists;
-pub use driver::{BuildResult, NnDescent};
+pub use driver::{BuildResult, NnDescent, RepairStats};
 pub use observer::{BuildEvent, BuildObserver, FnObserver, LoggingObserver, NoopObserver};
 pub use parallel::{effective_build_threads, resolve_build_threads};
 pub use params::Params;

@@ -228,78 +228,40 @@ fn probe_ids(n: usize, params: &SearchParams, scratch: &mut QueryScratch) -> Vec
     ids
 }
 
-impl GraphIndex {
-    /// Build an index from a finished graph and its data (both in the
-    /// same id space — pass the *working* layout from a reordered build).
-    /// Corpus norms for the norm-trick probe path are computed here,
-    /// once, at the active kernel width.
-    pub fn new(data: AlignedMatrix, graph: KnnGraph) -> Self {
-        let norms = Self::compute_norms(&data);
-        Self::with_norms(data, graph, norms)
-    }
+/// A borrowed view of everything the beam-search core reads: the padded
+/// data matrix, the flat neighbor-id strip (`n·k`, heap order,
+/// `EMPTY_ID` = open slot), and the per-row squared norms. Both
+/// [`GraphIndex`] (owned build results) and the store engine's mmap'd
+/// `KNNIv2` segments search through this one view, so a segment-backed
+/// search is **bit-identical** to the owned path by construction — there
+/// is exactly one search core.
+pub(crate) struct IndexView<'a> {
+    pub(crate) data: &'a AlignedMatrix,
+    pub(crate) edges: &'a [u32],
+    pub(crate) k: usize,
+    pub(crate) norms: &'a [f32],
+}
 
-    /// Like [`new`](Self::new) with precomputed per-row squared norms.
-    /// The norms **must** have been computed at the currently active
-    /// kernel width (the bundle loader guarantees this by discarding
-    /// foreign-width sections before calling here).
-    pub fn with_norms(data: AlignedMatrix, graph: KnnGraph, norms: Vec<f32>) -> Self {
-        assert_eq!(data.n(), graph.n(), "graph/data size mismatch");
+impl<'a> IndexView<'a> {
+    pub(crate) fn new(
+        data: &'a AlignedMatrix,
+        edges: &'a [u32],
+        k: usize,
+        norms: &'a [f32],
+    ) -> Self {
+        assert_eq!(edges.len(), data.n() * k, "edge strip must be n·k");
         assert_eq!(norms.len(), data.n(), "one norm per corpus row");
-        let norm_lanes = dispatch::active_width().lanes();
-        Self { data, graph, norms, norm_lanes }
+        Self { data, edges, k, norms }
     }
 
-    /// ‖row‖² for every row of `data` at the active kernel width.
-    pub fn compute_norms(data: &AlignedMatrix) -> Vec<f32> {
-        (0..data.n()).map(|i| sq_norm(data.row(i))).collect()
+    /// Neighbor ids of node `u` (heap order, may contain `EMPTY_ID`).
+    #[inline]
+    fn neighbors(&self, u: usize) -> &[u32] {
+        &self.edges[u * self.k..(u + 1) * self.k]
     }
 
-    /// Recompute the corpus norms at the *current* active kernel width.
-    /// Call after `dispatch::force` switches widths mid-process (A/B
-    /// harnesses) so the norm-trick path measures the same
-    /// configuration a fresh build/load at that width would serve.
-    pub fn refresh_norms(&mut self) {
-        self.norms = Self::compute_norms(&self.data);
-        self.norm_lanes = dispatch::active_width().lanes();
-    }
-
-    /// Per-row squared corpus norms (working id space).
-    pub fn norms(&self) -> &[f32] {
-        &self.norms
-    }
-
-    /// Lane count of the kernel width [`norms`](Self::norms) was
-    /// computed at.
-    pub fn norm_lanes(&self) -> usize {
-        self.norm_lanes
-    }
-
-    pub fn n(&self) -> usize {
-        self.data.n()
-    }
-
-    pub fn graph(&self) -> &KnnGraph {
-        &self.graph
-    }
-
-    pub fn data(&self) -> &AlignedMatrix {
-        &self.data
-    }
-
-    /// Decompose into the owned data matrix and graph (consumes the
-    /// index; used by the `api` facade to reassemble build results).
-    pub fn into_parts(self) -> (AlignedMatrix, KnnGraph) {
-        (self.data, self.graph)
-    }
-
-    /// Allocate a reusable [`SearchScratch`] sized for this index (one
-    /// `O(n)` visited map). Long-lived serving workers hold one per
-    /// index and thread it through [`search_with`]/[`search_batch_with`]
-    /// so the per-call allocation disappears from the hot path.
-    ///
-    /// [`search_with`]: GraphIndex::search_with
-    /// [`search_batch_with`]: GraphIndex::search_batch_with
-    pub fn scratch(&self) -> SearchScratch {
+    /// Allocate a reusable [`SearchScratch`] sized for this view.
+    pub(crate) fn scratch(&self) -> SearchScratch {
         SearchScratch { inner: QueryScratch::new(self.data.n()) }
     }
 
@@ -312,23 +274,7 @@ impl GraphIndex {
         );
     }
 
-    /// k nearest neighbors of `query` (padded or logical length),
-    /// ascending by distance. The probe evaluations run on the
-    /// norm-trick path (precomputed corpus norms + ‖q‖² computed here),
-    /// bit-equal per pair to the batched probe tile.
-    pub fn search(
-        &self,
-        query: &[f32],
-        k: usize,
-        params: &SearchParams,
-    ) -> (Vec<(u32, f32)>, QueryStats) {
-        self.search_with(query, k, params, &mut self.scratch())
-    }
-
-    /// [`search`](GraphIndex::search) through a caller-owned
-    /// [`SearchScratch`] (reset here; results are identical to a fresh
-    /// scratch).
-    pub fn search_with(
+    pub(crate) fn search_with(
         &self,
         query: &[f32],
         k: usize,
@@ -340,34 +286,11 @@ impl GraphIndex {
         let q2 = sq_norm(&q);
         let probes = probe_ids(self.data.n(), params, &mut scratch.inner);
         let mut probe_dists = Vec::new();
-        dispatch::one_to_many_norms(&q, q2, &self.data, &self.norms, &probes, &mut probe_dists);
+        dispatch::one_to_many_norms(&q, q2, self.data, self.norms, &probes, &mut probe_dists);
         self.search_core(&q, k, params, &probes, &probe_dists, &mut scratch.inner)
     }
 
-    /// Serve a batch of queries (rows of `queries`, logical width equal
-    /// to the index's). Results are **identical** to calling [`search`]
-    /// once per row with the same `params`: the probe stage runs as one
-    /// query×probe blocked tile and expansions as 1×5 blocked strips,
-    /// both bit-equal to the sequential kernel, and the per-query
-    /// control flow is shared. Returns per-query results plus aggregate
-    /// [`BatchStats`].
-    ///
-    /// [`search`]: GraphIndex::search
-    pub fn search_batch(
-        &self,
-        queries: &AlignedMatrix,
-        k: usize,
-        params: &SearchParams,
-    ) -> (Vec<Vec<(u32, f32)>>, BatchStats) {
-        self.search_batch_with(queries, k, params, &mut self.scratch())
-    }
-
-    /// [`search_batch`](GraphIndex::search_batch) through a
-    /// caller-owned [`SearchScratch`] — the serving runtime's entry
-    /// point: each shard worker owns one scratch for its shard and
-    /// serves every incoming batch through it, with results identical
-    /// to fresh per-call allocations.
-    pub fn search_batch_with(
+    pub(crate) fn search_batch_with(
         &self,
         queries: &AlignedMatrix,
         k: usize,
@@ -392,7 +315,7 @@ impl GraphIndex {
         // tile — the GEMM-style batch kernel.
         let qnorms: Vec<f32> = (0..queries.n()).map(|qi| sq_norm(queries.row(qi))).collect();
         let mut probe_dists = vec![0f32; queries.n() * p];
-        dispatch::cross_norms(queries, &qnorms, &self.data, &self.norms, &probes, &mut probe_dists);
+        dispatch::cross_norms(queries, &qnorms, self.data, self.norms, &probes, &mut probe_dists);
         let mut results = Vec::with_capacity(queries.n());
         let mut agg = BatchStats {
             queries: queries.n(),
@@ -467,14 +390,14 @@ impl GraphIndex {
             // gather this expansion's unvisited neighbors, then evaluate
             // them as one 1×5-blocked strip
             scratch.cand_ids.clear();
-            for &v in self.graph.ids(u as usize) {
+            for &v in self.neighbors(u as usize) {
                 if v == EMPTY_ID || scratch.visited[v as usize] {
                     continue;
                 }
                 scratch.visit(v);
                 scratch.cand_ids.push(v);
             }
-            one_to_many_blocked(q, &self.data, &scratch.cand_ids, &mut scratch.cand_dists);
+            one_to_many_blocked(q, self.data, &scratch.cand_ids, &mut scratch.cand_dists);
             stats.dist_evals += scratch.cand_ids.len() as u64;
             for (i, &v) in scratch.cand_ids.iter().enumerate() {
                 let dv = scratch.cand_dists[i];
@@ -508,6 +431,154 @@ impl GraphIndex {
         let mut q = vec![0f32; dp];
         q[..query.len()].copy_from_slice(query);
         q
+    }
+}
+
+impl GraphIndex {
+    /// Build an index from a finished graph and its data (both in the
+    /// same id space — pass the *working* layout from a reordered build).
+    /// Corpus norms for the norm-trick probe path are computed here,
+    /// once, at the active kernel width.
+    pub fn new(data: AlignedMatrix, graph: KnnGraph) -> Self {
+        let norms = Self::compute_norms(&data);
+        Self::with_norms(data, graph, norms)
+    }
+
+    /// Like [`new`](Self::new) with precomputed per-row squared norms.
+    /// The norms **must** have been computed at the currently active
+    /// kernel width (the bundle loader guarantees this by discarding
+    /// foreign-width sections before calling here).
+    pub fn with_norms(data: AlignedMatrix, graph: KnnGraph, norms: Vec<f32>) -> Self {
+        assert_eq!(data.n(), graph.n(), "graph/data size mismatch");
+        assert_eq!(norms.len(), data.n(), "one norm per corpus row");
+        let norm_lanes = dispatch::active_width().lanes();
+        Self { data, graph, norms, norm_lanes }
+    }
+
+    /// ‖row‖² for every row of `data` at the active kernel width.
+    pub fn compute_norms(data: &AlignedMatrix) -> Vec<f32> {
+        (0..data.n()).map(|i| sq_norm(data.row(i))).collect()
+    }
+
+    /// Recompute the corpus norms at the *current* active kernel width.
+    /// Call after `dispatch::force` switches widths mid-process (A/B
+    /// harnesses) so the norm-trick path measures the same
+    /// configuration a fresh build/load at that width would serve.
+    pub fn refresh_norms(&mut self) {
+        self.norms = Self::compute_norms(&self.data);
+        self.norm_lanes = dispatch::active_width().lanes();
+    }
+
+    /// Per-row squared corpus norms (working id space).
+    pub fn norms(&self) -> &[f32] {
+        &self.norms
+    }
+
+    /// Lane count of the kernel width [`norms`](Self::norms) was
+    /// computed at.
+    pub fn norm_lanes(&self) -> usize {
+        self.norm_lanes
+    }
+
+    pub fn n(&self) -> usize {
+        self.data.n()
+    }
+
+    pub fn graph(&self) -> &KnnGraph {
+        &self.graph
+    }
+
+    pub fn data(&self) -> &AlignedMatrix {
+        &self.data
+    }
+
+    /// Decompose into the owned data matrix and graph (consumes the
+    /// index; used by the `api` facade to reassemble build results).
+    pub fn into_parts(self) -> (AlignedMatrix, KnnGraph) {
+        (self.data, self.graph)
+    }
+
+    /// Allocate a reusable [`SearchScratch`] sized for this index (one
+    /// `O(n)` visited map). Long-lived serving workers hold one per
+    /// index and thread it through [`search_with`]/[`search_batch_with`]
+    /// so the per-call allocation disappears from the hot path.
+    ///
+    /// [`search_with`]: GraphIndex::search_with
+    /// [`search_batch_with`]: GraphIndex::search_batch_with
+    pub fn scratch(&self) -> SearchScratch {
+        self.view().scratch()
+    }
+
+    /// The borrowed [`IndexView`] every search entry point runs on —
+    /// the same view a store-engine segment constructs over its mmap'd
+    /// sections, so both paths share one search core.
+    #[inline]
+    pub(crate) fn view(&self) -> IndexView<'_> {
+        IndexView {
+            data: &self.data,
+            edges: self.graph.flat_ids(),
+            k: self.graph.k(),
+            norms: &self.norms,
+        }
+    }
+
+    /// k nearest neighbors of `query` (padded or logical length),
+    /// ascending by distance. The probe evaluations run on the
+    /// norm-trick path (precomputed corpus norms + ‖q‖² computed here),
+    /// bit-equal per pair to the batched probe tile.
+    pub fn search(
+        &self,
+        query: &[f32],
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<(u32, f32)>, QueryStats) {
+        self.search_with(query, k, params, &mut self.scratch())
+    }
+
+    /// [`search`](GraphIndex::search) through a caller-owned
+    /// [`SearchScratch`] (reset here; results are identical to a fresh
+    /// scratch).
+    pub fn search_with(
+        &self,
+        query: &[f32],
+        k: usize,
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<(u32, f32)>, QueryStats) {
+        self.view().search_with(query, k, params, scratch)
+    }
+
+    /// Serve a batch of queries (rows of `queries`, logical width equal
+    /// to the index's). Results are **identical** to calling [`search`]
+    /// once per row with the same `params`: the probe stage runs as one
+    /// query×probe blocked tile and expansions as 1×5 blocked strips,
+    /// both bit-equal to the sequential kernel, and the per-query
+    /// control flow is shared. Returns per-query results plus aggregate
+    /// [`BatchStats`].
+    ///
+    /// [`search`]: GraphIndex::search
+    pub fn search_batch(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<(u32, f32)>>, BatchStats) {
+        self.search_batch_with(queries, k, params, &mut self.scratch())
+    }
+
+    /// [`search_batch`](GraphIndex::search_batch) through a
+    /// caller-owned [`SearchScratch`] — the serving runtime's entry
+    /// point: each shard worker owns one scratch for its shard and
+    /// serves every incoming batch through it, with results identical
+    /// to fresh per-call allocations.
+    pub fn search_batch_with(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Vec<(u32, f32)>>, BatchStats) {
+        self.view().search_batch_with(queries, k, params, scratch)
     }
 }
 

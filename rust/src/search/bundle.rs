@@ -146,7 +146,9 @@ impl IndexBundle {
     }
 }
 
-fn encode_params(p: &Params) -> [u8; 64] {
+/// Encode build parameters into the fixed 64-byte block shared by the
+/// `KNNIv1` bundle and the store engine's `KNNIv2` segment headers.
+pub(crate) fn encode_params(p: &Params) -> [u8; 64] {
     let mut out = [0u8; 64];
     out[0..8].copy_from_slice(&(p.k as u64).to_le_bytes());
     out[8..16].copy_from_slice(&(p.max_iters as u64).to_le_bytes());
@@ -161,7 +163,8 @@ fn encode_params(p: &Params) -> [u8; 64] {
     out
 }
 
-fn decode_params(b: &[u8; 64]) -> Result<Params> {
+/// Decode the fixed 64-byte parameter block (see [`encode_params`]).
+pub(crate) fn decode_params(b: &[u8; 64]) -> Result<Params> {
     let u64_at = |o: usize| u64::from_le_bytes(b[o..o + 8].try_into().unwrap());
     let f64_at = |o: usize| f64::from_le_bytes(b[o..o + 8].try_into().unwrap());
     let selection = crate::config::schema::SelectionKind::from_code(b[56])
@@ -311,6 +314,12 @@ pub fn load_index(path: &Path) -> Result<IndexBundle> {
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).context("reading magic")?;
     if &magic != MAGIC {
+        if &magic == crate::store::format::MAGIC_V2 {
+            bail!(
+                "this is a KNNIv2 storage-engine segment — open it with store::MutableIndex \
+                 (or `knng store`), not the KNNIv1 bundle loader"
+            );
+        }
         if magic.starts_with(b"KNNI") {
             bail!(
                 "unsupported index bundle version {:?} (this build reads KNNIv1)",

@@ -1,0 +1,288 @@
+//! The byte region behind a segment: an mmap'd file or one
+//! 64-byte-aligned heap buffer, behind a single enum so every parser
+//! and accessor upstack is mode-oblivious. Both variants expose the
+//! identical `&[u8]` — same bytes, same offsets — which is what makes
+//! mmap-vs-copy bitwise identity hold by construction.
+
+use crate::dataset::matrix::ROW_ALIGN;
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::Read;
+use std::path::Path;
+
+/// How a segment's bytes are brought into the address space.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StoreMode {
+    /// `mmap(2)` the file read-only and parse it in place (unix only).
+    Mmap,
+    /// Read the whole file into one 64-byte-aligned heap buffer — the
+    /// safe fallback for platforms without mmap; parses the identical
+    /// bytes at the identical offsets.
+    Copy,
+}
+
+impl StoreMode {
+    /// Parse a mode name (the `PALLAS_STORE` vocabulary).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.to_ascii_lowercase().as_str() {
+            "mmap" => Some(Self::Mmap),
+            "copy" | "heap" => Some(Self::Copy),
+            _ => None,
+        }
+    }
+
+    /// The mode requested by the `PALLAS_STORE` environment variable,
+    /// if set and valid (an invalid value is logged and ignored).
+    pub fn from_env() -> Option<Self> {
+        let raw = std::env::var("PALLAS_STORE").ok()?;
+        match Self::parse(&raw) {
+            Some(m) => Some(m),
+            None => {
+                crate::log_warn!("PALLAS_STORE={raw:?} is not a store mode (mmap|copy) — ignored");
+                None
+            }
+        }
+    }
+
+    /// Resolve the effective mode: explicit choice, then `PALLAS_STORE`,
+    /// then the platform default (mmap where available, copy elsewhere).
+    /// An mmap request on a platform without mmap degrades to copy.
+    pub fn resolve(explicit: Option<Self>) -> Self {
+        let picked = explicit
+            .or_else(Self::from_env)
+            .unwrap_or(if cfg!(unix) { Self::Mmap } else { Self::Copy });
+        if picked == Self::Mmap && !cfg!(unix) {
+            crate::log_warn!("mmap store mode unavailable on this platform — using copy");
+            return Self::Copy;
+        }
+        picked
+    }
+
+    /// Mode name (`mmap`/`copy`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Mmap => "mmap",
+            Self::Copy => "copy",
+        }
+    }
+}
+
+/// A read-only, file-backed memory mapping (raw `mmap(2)`, following
+/// the crate's no-new-dependencies FFI discipline — see the `signal`
+/// shim in `net::server`). Unmapped on drop.
+#[cfg(unix)]
+pub struct MapRegion {
+    ptr: *mut std::ffi::c_void,
+    len: usize,
+}
+
+#[cfg(unix)]
+mod ffi {
+    use std::ffi::c_void;
+    pub const PROT_READ: i32 = 1;
+    pub const MAP_PRIVATE: i32 = 2;
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+}
+
+#[cfg(unix)]
+impl MapRegion {
+    /// Map `len` bytes of `file` read-only.
+    pub fn map(file: &File, len: usize) -> Result<Self> {
+        use std::os::unix::io::AsRawFd;
+        if len == 0 {
+            bail!("cannot map an empty file");
+        }
+        // Safety: fd is a valid open file; PROT_READ + MAP_PRIVATE asks
+        // for a read-only private view the kernel fully controls.
+        let ptr = unsafe {
+            ffi::mmap(
+                std::ptr::null_mut(),
+                len,
+                ffi::PROT_READ,
+                ffi::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr as isize == -1 {
+            bail!("mmap failed: {}", std::io::Error::last_os_error());
+        }
+        Ok(Self { ptr, len })
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        // Safety: the mapping covers exactly `len` bytes and stays
+        // valid until drop; MAP_PRIVATE means nobody writes through it.
+        unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+    }
+}
+
+#[cfg(unix)]
+impl Drop for MapRegion {
+    fn drop(&mut self) {
+        // Safety: exactly the region map() created.
+        unsafe { ffi::munmap(self.ptr, self.len) };
+    }
+}
+
+// Safety: the mapping is read-only shared memory; the struct owns it
+// exclusively until drop.
+#[cfg(unix)]
+unsafe impl Send for MapRegion {}
+#[cfg(unix)]
+unsafe impl Sync for MapRegion {}
+
+/// A 64-byte-aligned owned byte buffer — the heap-copy counterpart of
+/// [`MapRegion`], aligned like the mapping so section pointers satisfy
+/// the same alignment invariants in both modes.
+pub struct AlignedBytes {
+    ptr: *mut u8,
+    len: usize,
+}
+
+impl AlignedBytes {
+    /// Read the whole of `file` (of known `len`) into a fresh buffer.
+    pub fn read_from(file: &mut File, len: usize) -> Result<Self> {
+        use std::alloc::{alloc_zeroed, handle_alloc_error, Layout};
+        let layout = Layout::from_size_align(len.max(ROW_ALIGN), ROW_ALIGN)
+            .context("segment buffer layout")?;
+        // Safety: layout has nonzero size (max'd with ROW_ALIGN).
+        let ptr = unsafe { alloc_zeroed(layout) };
+        if ptr.is_null() {
+            handle_alloc_error(layout);
+        }
+        let out = Self { ptr, len };
+        // Safety: the allocation covers `len` bytes.
+        let buf = unsafe { std::slice::from_raw_parts_mut(out.ptr, out.len) };
+        file.read_exact(buf).context("reading segment into heap buffer")?;
+        Ok(out)
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+}
+
+impl Drop for AlignedBytes {
+    fn drop(&mut self) {
+        use std::alloc::{dealloc, Layout};
+        let layout =
+            Layout::from_size_align(self.len.max(ROW_ALIGN), ROW_ALIGN).expect("layout");
+        unsafe { dealloc(self.ptr, layout) };
+    }
+}
+
+// Safety: plain owned bytes, read-only after construction.
+unsafe impl Send for AlignedBytes {}
+unsafe impl Sync for AlignedBytes {}
+
+/// The bytes of an opened segment, however they got here.
+pub enum SegmentBytes {
+    /// Zero-copy: the file mapped into the address space.
+    #[cfg(unix)]
+    Mapped(MapRegion),
+    /// The file read into one aligned heap buffer.
+    Heap(AlignedBytes),
+}
+
+impl SegmentBytes {
+    /// Bring `path` into memory under `mode`. `expected_len` guards
+    /// against the file changing size between stat and map.
+    pub fn open(path: &Path, mode: StoreMode, expected_len: u64) -> Result<Self> {
+        let mut file =
+            File::open(path).with_context(|| format!("opening {}", path.display()))?;
+        let len = file.metadata()?.len();
+        if len != expected_len {
+            bail!("segment changed size while opening ({len} vs {expected_len} bytes)");
+        }
+        let len = len as usize;
+        match mode {
+            #[cfg(unix)]
+            StoreMode::Mmap => Ok(Self::Mapped(MapRegion::map(&file, len)?)),
+            #[cfg(not(unix))]
+            StoreMode::Mmap => bail!("mmap store mode unavailable on this platform"),
+            StoreMode::Copy => Ok(Self::Heap(AlignedBytes::read_from(&mut file, len)?)),
+        }
+    }
+
+    /// The whole byte region. Same contents and offsets in both modes.
+    #[inline]
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            #[cfg(unix)]
+            Self::Mapped(m) => m.as_slice(),
+            Self::Heap(h) => h.as_slice(),
+        }
+    }
+
+    /// Which mode produced this region.
+    pub fn mode(&self) -> StoreMode {
+        match self {
+            #[cfg(unix)]
+            Self::Mapped(_) => StoreMode::Mmap,
+            Self::Heap(_) => StoreMode::Copy,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("knng_store_bytes_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn both_modes_expose_identical_bytes() {
+        let path = tmp("region.bin");
+        let payload: Vec<u8> = (0..10_000u32).flat_map(|x| x.to_le_bytes()).collect();
+        std::fs::write(&path, &payload).unwrap();
+        let heap = SegmentBytes::open(&path, StoreMode::Copy, payload.len() as u64).unwrap();
+        assert_eq!(heap.as_slice(), &payload[..]);
+        assert_eq!(heap.mode(), StoreMode::Copy);
+        assert_eq!(heap.as_slice().as_ptr() as usize % ROW_ALIGN, 0, "heap buffer aligned");
+        #[cfg(unix)]
+        {
+            let mapped =
+                SegmentBytes::open(&path, StoreMode::Mmap, payload.len() as u64).unwrap();
+            assert_eq!(mapped.mode(), StoreMode::Mmap);
+            assert_eq!(mapped.as_slice(), heap.as_slice(), "mmap and copy must agree bit for bit");
+            assert_eq!(mapped.as_slice().as_ptr() as usize % ROW_ALIGN, 0, "mapping aligned");
+        }
+    }
+
+    #[test]
+    fn size_change_is_rejected() {
+        let path = tmp("stale.bin");
+        std::fs::write(&path, [0u8; 128]).unwrap();
+        let err = SegmentBytes::open(&path, StoreMode::Copy, 64).unwrap_err().to_string();
+        assert!(err.contains("changed size"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn mode_parsing_and_resolution() {
+        assert_eq!(StoreMode::parse("mmap"), Some(StoreMode::Mmap));
+        assert_eq!(StoreMode::parse("COPY"), Some(StoreMode::Copy));
+        assert_eq!(StoreMode::parse("heap"), Some(StoreMode::Copy));
+        assert_eq!(StoreMode::parse("nvme"), None);
+        assert_eq!(StoreMode::resolve(Some(StoreMode::Copy)), StoreMode::Copy);
+        // the unset-env default is platform-dependent but never invalid
+        let d = StoreMode::resolve(None);
+        assert!(matches!(d, StoreMode::Mmap | StoreMode::Copy));
+    }
+}

@@ -1,0 +1,218 @@
+//! Compaction: fold the delta and the tombstones into a fresh
+//! `KNNIv2` segment. The new graph is **repaired**, not rebuilt —
+//! seeded from the surviving edges of the old graph (both directions),
+//! topped up with per-node-stream random candidates for nodes that
+//! lost neighbors or arrived from the delta, then run through a
+//! bounded number of NN-Descent iterations
+//! ([`NnDescent::repair`](crate::nndescent::NnDescent::repair)). For
+//! the common case of a mostly-unchanged corpus this converges in a
+//! fraction of a full build.
+//!
+//! Durability: the new segment is written to a sidecar temp file,
+//! fsync'd, then atomically renamed over the base path; only after the
+//! rename succeeds are the delta, tombstones, and WAL cleared. A crash
+//! at any point leaves either the old segment + full WAL or the new
+//! segment (+ a WAL whose records are all no-ops to re-apply or are
+//! cleared on the next open's replay-and-compact cycle).
+
+use super::format::{write_segment, Segment, SegmentSpec};
+use super::mutable::{BaseSegment, MutableIndex};
+use super::DeltaSegment;
+use crate::api::WorkingId;
+use crate::dataset::AlignedMatrix;
+use crate::graph::heap::EMPTY_ID;
+use crate::graph::KnnGraph;
+use crate::nndescent::{NnDescent, RepairStats};
+use crate::search::GraphIndex;
+use crate::util::rng::Pcg64;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// What one compaction did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CompactionStats {
+    /// Rows in the new segment.
+    pub rows: usize,
+    /// Delta rows folded into the base.
+    pub folded: usize,
+    /// Tombstoned base rows dropped.
+    pub dropped: usize,
+    /// Generation of the new segment.
+    pub generation: u64,
+    /// The bounded NN-Descent repair pass.
+    pub repair: RepairStats,
+    /// New segment size in bytes.
+    pub bytes: u64,
+    /// Wall time of the whole fold, seconds.
+    pub secs: f64,
+}
+
+impl MutableIndex {
+    /// Fold delta + tombstones into a fresh segment and swap it in
+    /// atomically. No-op-ish when nothing changed (still rewrites and
+    /// bumps the generation). After this returns, the in-memory state
+    /// is exactly what a fresh [`MutableIndex::open`] of the path
+    /// would produce.
+    pub fn compact(&mut self) -> Result<CompactionStats> {
+        let t0 = Instant::now();
+        let dim = self.dim();
+
+        // ---- gather (immutable reads of the old base) ----
+        let (base_n, base_k, params) = match &self.base {
+            BaseSegment::V2(s) => (s.n(), s.k(), s.params().clone()),
+            BaseSegment::Legacy(i) => (i.len(), i.graph_k(), i.params().clone()),
+        };
+        let new_gen = self.base.generation() + 1;
+
+        let mut ext_ids: Vec<u32> = Vec::with_capacity(base_n + self.delta.live_count());
+        let mut rows: Vec<f32> = Vec::with_capacity((base_n + self.delta.live_count()) * dim);
+        let mut old_to_new: HashMap<u32, u32> = HashMap::with_capacity(base_n);
+        {
+            let ext_of = |w: usize| -> u32 {
+                match &self.base {
+                    BaseSegment::V2(s) => s.external_id(w as u32),
+                    BaseSegment::Legacy(i) => i.to_original(WorkingId(w as u32)).get(),
+                }
+            };
+            let row_of = |w: usize| -> &[f32] {
+                match &self.base {
+                    BaseSegment::V2(s) => s.data().row_logical(w),
+                    BaseSegment::Legacy(i) => i.data().row_logical(w),
+                }
+            };
+            for w in 0..base_n {
+                let ext = ext_of(w);
+                if self.tombstones.contains(&ext) {
+                    continue;
+                }
+                old_to_new.insert(w as u32, ext_ids.len() as u32);
+                ext_ids.push(ext);
+                rows.extend_from_slice(row_of(w));
+            }
+        }
+        let dropped = base_n - ext_ids.len();
+        let folded = self.delta.live_count();
+        for (id, row) in self.delta.live_rows() {
+            ext_ids.push(id);
+            rows.extend_from_slice(row);
+        }
+        let n2 = ext_ids.len();
+        if n2 < 2 {
+            bail!("compaction needs at least 2 live rows, have {n2}");
+        }
+        let k2 = base_k.min(n2 - 1);
+        let new_data = AlignedMatrix::from_rows(n2, dim, &rows);
+        drop(rows);
+
+        // ---- seed the new graph from surviving old edges ----
+        let mut graph = KnnGraph::new(n2, k2);
+        {
+            let (flat_ids, flat_dists) = match &self.base {
+                BaseSegment::V2(s) => (s.ids(), s.dists()),
+                BaseSegment::Legacy(i) => (i.graph().flat_ids(), i.graph().flat_dists()),
+            };
+            for w in 0..base_n {
+                let Some(&nu) = old_to_new.get(&(w as u32)) else { continue };
+                for slot in 0..base_k {
+                    let v = flat_ids[w * base_k + slot];
+                    if v == EMPTY_ID {
+                        continue;
+                    }
+                    if let Some(&nv) = old_to_new.get(&v) {
+                        let d = flat_dists[w * base_k + slot];
+                        // push both directions: a node that lost edges
+                        // to tombstones still gets seeded through its
+                        // surviving reverse neighbors
+                        graph.push(nu as usize, nv, d, true);
+                        graph.push(nv as usize, nu, d, true);
+                    }
+                }
+            }
+        }
+
+        // ---- top up under-filled nodes (delta arrivals, heavy losers)
+        // with per-node-stream randoms, the parallel-init discipline:
+        // the fill is a pure function of (seed, generation, node) ----
+        let pair = crate::distance::dispatch::active().pair;
+        for u in 0..n2 {
+            let filled = graph.ids(u).iter().filter(|&&v| v != EMPTY_ID).count();
+            if filled >= k2 {
+                continue;
+            }
+            let mut rng = Pcg64::new_stream(params.seed ^ new_gen, u as u64);
+            let need = k2 - filled;
+            let mut added = 0;
+            // rejection with a generous cap; tiny corpora may leave a
+            // slot EMPTY, which the graph and search tolerate
+            let mut attempts = 0;
+            let max_attempts = 20 * k2 + 64;
+            while added < need && attempts < max_attempts {
+                attempts += 1;
+                let v = rng.gen_index(n2) as u32;
+                if v as usize == u || graph.ids(u).contains(&v) {
+                    continue;
+                }
+                let d = pair(new_data.row(u), new_data.row(v as usize));
+                if graph.push(u, v, d, true) {
+                    added += 1;
+                }
+            }
+        }
+
+        // ---- bounded NN-Descent repair ----
+        let (graph, repair) =
+            NnDescent::new(params.clone()).repair(&new_data, graph, self.cfg.repair_iters);
+
+        // ---- write the new segment and swap it in atomically ----
+        let norms = GraphIndex::compute_norms(&new_data);
+        let lanes = crate::distance::dispatch::active_width().lanes();
+        let centroids = match &self.base {
+            BaseSegment::V2(s) => s.centroids(),
+            BaseSegment::Legacy(i) => i.centroids(),
+        };
+        let tmp = {
+            let mut os = self.path.as_os_str().to_os_string();
+            os.push(".compact.tmp");
+            std::path::PathBuf::from(os)
+        };
+        write_segment(
+            &tmp,
+            &SegmentSpec {
+                data: &new_data,
+                ids: graph.flat_ids(),
+                dists: graph.flat_dists(),
+                k: k2,
+                params: &params,
+                norms: Some((&norms, lanes)),
+                idmap: Some(&ext_ids),
+                centroids,
+                generation: new_gen,
+            },
+        )?;
+        std::fs::rename(&tmp, &self.path)
+            .with_context(|| format!("renaming {} into place", tmp.display()))?;
+
+        // Reopen the renamed file: the serving state after compaction
+        // IS a fresh open of the compacted segment, by construction.
+        // (In-flight readers of the old mapping keep it alive through
+        // their Arc until they finish.)
+        let seg = Segment::open_with(&self.path, self.cfg.mode)?;
+        let bytes = std::fs::metadata(&self.path).map(|m| m.len()).unwrap_or(0);
+        self.base = BaseSegment::V2(seg);
+        self.base_ids = ext_ids.into_iter().collect();
+        self.tombstones.clear();
+        self.delta = DeltaSegment::new(dim);
+        self.wal.reset()?;
+
+        Ok(CompactionStats {
+            rows: n2,
+            folded,
+            dropped,
+            generation: new_gen,
+            repair,
+            bytes,
+            secs: t0.elapsed().as_secs_f64(),
+        })
+    }
+}

@@ -1,0 +1,196 @@
+//! The in-memory mutable layer: rows inserted since the last
+//! compaction, brute-force searched. The delta is expected to stay
+//! small relative to the base segment (the auto-compaction policy
+//! enforces that), so exact scan is both simpler and more accurate
+//! than maintaining an incremental graph over a churning set.
+
+use crate::dataset::matrix::LANE_PAD;
+use crate::util::round_up;
+use std::collections::HashMap;
+
+/// Mutable row store keyed by external id. Slots are append-only;
+/// deleting clears the live bit, re-inserting an id overwrites its
+/// existing slot in place.
+pub struct DeltaSegment {
+    dim: usize,
+    dim_pad: usize,
+    /// Slot-major row storage, stride `dim_pad`, tail lanes zero.
+    rows: Vec<f32>,
+    /// External id per slot.
+    ids: Vec<u32>,
+    live: Vec<bool>,
+    by_id: HashMap<u32, usize>,
+    live_count: usize,
+}
+
+impl DeltaSegment {
+    pub fn new(dim: usize) -> Self {
+        assert!(dim >= 1, "dim must be positive");
+        Self {
+            dim,
+            dim_pad: round_up(dim, LANE_PAD),
+            rows: Vec::new(),
+            ids: Vec::new(),
+            live: Vec::new(),
+            by_id: HashMap::new(),
+            live_count: 0,
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Live (inserted and not since deleted) row count.
+    pub fn live_count(&self) -> usize {
+        self.live_count
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.live_count == 0
+    }
+
+    /// Is `id` currently present in the delta?
+    pub fn contains_live(&self, id: u32) -> bool {
+        self.by_id.get(&id).is_some_and(|&s| self.live[s])
+    }
+
+    /// Insert (or overwrite) the row for `id`. Returns `true` when the
+    /// id was not live before (a net addition).
+    pub fn insert(&mut self, id: u32, row: &[f32]) -> bool {
+        assert_eq!(row.len(), self.dim, "delta row dim mismatch");
+        let slot = match self.by_id.get(&id) {
+            Some(&s) => s,
+            None => {
+                let s = self.ids.len();
+                self.ids.push(id);
+                self.live.push(false);
+                self.rows.resize(self.rows.len() + self.dim_pad, 0.0);
+                self.by_id.insert(id, s);
+                s
+            }
+        };
+        let dst = &mut self.rows[slot * self.dim_pad..slot * self.dim_pad + self.dim_pad];
+        dst[..self.dim].copy_from_slice(row);
+        dst[self.dim..].fill(0.0);
+        let was_live = std::mem::replace(&mut self.live[slot], true);
+        if !was_live {
+            self.live_count += 1;
+        }
+        !was_live
+    }
+
+    /// Remove `id` from the delta. Returns `true` when it was live.
+    pub fn delete(&mut self, id: u32) -> bool {
+        match self.by_id.get(&id) {
+            Some(&s) if self.live[s] => {
+                self.live[s] = false;
+                self.live_count -= 1;
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Padded row of `slot` (internal/compaction use).
+    fn row(&self, slot: usize) -> &[f32] {
+        &self.rows[slot * self.dim_pad..slot * self.dim_pad + self.dim_pad]
+    }
+
+    /// Live rows in slot (insertion) order: `(external id, logical row)`.
+    pub fn live_rows(&self) -> impl Iterator<Item = (u32, &[f32])> {
+        self.ids
+            .iter()
+            .enumerate()
+            .filter(|&(s, _)| self.live[s])
+            .map(|(s, &id)| (id, &self.row(s)[..self.dim]))
+    }
+
+    /// Exact k-NN over the live rows: distances via the active kernel
+    /// (same code path the segments use), ties broken by external id,
+    /// ascending — the crate-wide result ordering.
+    pub fn search(&self, query: &[f32], k: usize) -> Vec<(u32, f32)> {
+        assert_eq!(query.len(), self.dim, "delta query dim mismatch");
+        if self.live_count == 0 || k == 0 {
+            return Vec::new();
+        }
+        let mut padded = vec![0.0f32; self.dim_pad];
+        padded[..self.dim].copy_from_slice(query);
+        let pair = crate::distance::dispatch::active().pair;
+        let mut hits: Vec<(u32, f32)> = self
+            .ids
+            .iter()
+            .enumerate()
+            .filter(|&(s, _)| self.live[s])
+            .map(|(s, &id)| (id, pair(&padded, self.row(s))))
+            .collect();
+        hits.sort_unstable_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+        hits.truncate(k);
+        hits
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_search_delete_reinsert() {
+        let mut d = DeltaSegment::new(3);
+        assert!(d.insert(10, &[0.0, 0.0, 0.0]));
+        assert!(d.insert(11, &[1.0, 0.0, 0.0]));
+        assert!(d.insert(12, &[5.0, 0.0, 0.0]));
+        assert_eq!(d.live_count(), 3);
+
+        let hits = d.search(&[0.9, 0.0, 0.0], 2);
+        assert_eq!(hits.len(), 2);
+        assert_eq!(hits[0].0, 11);
+        assert_eq!(hits[1].0, 10);
+
+        assert!(d.delete(11));
+        assert!(!d.delete(11), "double delete is a no-op");
+        assert!(!d.contains_live(11));
+        assert_eq!(d.live_count(), 2);
+        let hits = d.search(&[0.9, 0.0, 0.0], 3);
+        assert_eq!(hits.iter().map(|h| h.0).collect::<Vec<_>>(), vec![10, 12]);
+
+        // re-insert revives the same slot with a fresh row
+        assert!(d.insert(11, &[0.8, 0.0, 0.0]));
+        assert_eq!(d.live_count(), 3);
+        let hits = d.search(&[0.9, 0.0, 0.0], 1);
+        assert_eq!(hits[0].0, 11);
+        assert!((hits[0].1 - 0.01).abs() < 1e-6);
+    }
+
+    #[test]
+    fn overwrite_updates_in_place() {
+        let mut d = DeltaSegment::new(2);
+        assert!(d.insert(5, &[10.0, 0.0]));
+        assert!(!d.insert(5, &[0.0, 0.0]), "overwrite is not a net addition");
+        assert_eq!(d.live_count(), 1);
+        let hits = d.search(&[0.0, 0.0], 1);
+        assert_eq!(hits, vec![(5, 0.0)]);
+    }
+
+    #[test]
+    fn ties_break_by_external_id() {
+        let mut d = DeltaSegment::new(2);
+        for id in [30u32, 9, 17] {
+            d.insert(id, &[1.0, 1.0]);
+        }
+        let hits = d.search(&[0.0, 0.0], 3);
+        assert_eq!(hits.iter().map(|h| h.0).collect::<Vec<_>>(), vec![9, 17, 30]);
+    }
+
+    #[test]
+    fn live_rows_iterates_in_slot_order() {
+        let mut d = DeltaSegment::new(2);
+        d.insert(3, &[1.0, 2.0]);
+        d.insert(1, &[3.0, 4.0]);
+        d.insert(2, &[5.0, 6.0]);
+        d.delete(1);
+        let got: Vec<(u32, Vec<f32>)> =
+            d.live_rows().map(|(id, r)| (id, r.to_vec())).collect();
+        assert_eq!(got, vec![(3, vec![1.0, 2.0]), (2, vec![5.0, 6.0])]);
+    }
+}

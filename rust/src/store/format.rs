@@ -1,0 +1,872 @@
+//! The `KNNIv2` segment format: the storage engine's on-disk layout,
+//! designed so a mapped file *is* the serving structure — no parse
+//! step, no heap copy, no graph rebuild.
+//!
+//! Layout (little-endian; every section start is 64-byte aligned, with
+//! zero padding between sections included in the checksum):
+//!
+//! ```text
+//! off 0    magic     8 B  "KNNIv2\0\0"
+//! off 8    n         8 B  u64  points
+//! off 16   dim       8 B  u64  logical dimensionality
+//! off 24   k         8 B  u64  neighbors per node
+//! off 32   flags     8 B  u64  bit 1: norms present · bit 2: centroids
+//!                          present · bit 3: idmap present
+//!                          bits 8–15: norm lane count · bits 16–31:
+//!                          centroid count
+//! off 40   generation 8 B u64  compaction generation
+//! off 48   dim_pad   8 B  u64  padded row width (must equal 8⌈dim/8⌉)
+//! off 56   reserved  8 B  zero
+//! off 64   params   64 B  build parameters (same block as KNNIv1)
+//! off 128  ids       n·k·4 B    u32 neighbor ids, heap order
+//!  ↑64     dists     n·k·4 B    f32 neighbor distances, heap order
+//!  ↑64     data      n·dim_pad·4 B  f32 PADDED rows (tail lanes zero)
+//!  ↑64     norms     n·4 B      f32 ‖row‖²            (iff bit 1)
+//!  ↑64     idmap     n·4 B      u32 working → external (iff bit 3)
+//!  ↑64     centroids c·dim_pad·4 B  f32 padded rows    (iff bit 2)
+//!          crc       8 B  FNV-1a over everything above (padding incl.)
+//! ```
+//!
+//! The two structural differences from `KNNIv1` are exactly what
+//! zero-copy needs: **data rows are stored padded** to `dim_pad` (so
+//! the mapped section satisfies [`AlignedMatrix`]'s layout as-is), and
+//! **sections are 64-byte aligned** (so every section pointer meets the
+//! kernels' alignment requirements straight out of the mapping). The
+//! σ/σ⁻¹ pair of v1 is replaced by one `idmap` (working → external id):
+//! after deletes and compactions external ids are sparse, so an inverse
+//! table no longer makes sense.
+//!
+//! The format is little-endian on disk and read by reinterpretation,
+//! so big-endian targets are rejected at open (the portable fallback
+//! is the `KNNIv1` heap loader, which parses byte-by-byte).
+
+use super::bytes::{SegmentBytes, StoreMode};
+use crate::dataset::matrix::{LANE_PAD, ROW_ALIGN};
+use crate::dataset::AlignedMatrix;
+use crate::graph::heap::EMPTY_ID;
+use crate::graph::io::Fnv;
+use crate::nndescent::Params;
+use crate::search::beam::IndexView;
+use crate::search::{BatchStats, QueryStats, SearchParams, SearchScratch};
+use crate::util::round_up;
+use anyhow::{bail, Context, Result};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+/// Magic of the v2 segment format (recognized by the v1 loader for a
+/// helpful cross-format error).
+pub(crate) const MAGIC_V2: &[u8; 8] = b"KNNIv2\0\0";
+
+const FLAG_NORMS: u64 = 2;
+const FLAG_CENTROIDS: u64 = 4;
+const FLAG_IDMAP: u64 = 8;
+const FLAG_NORM_LANES_SHIFT: u64 = 8;
+const FLAG_NORM_LANES_MASK: u64 = 0xFF << FLAG_NORM_LANES_SHIFT;
+const FLAG_CENTROID_COUNT_SHIFT: u64 = 16;
+const FLAG_CENTROID_COUNT_MASK: u64 = 0xFFFF << FLAG_CENTROID_COUNT_SHIFT;
+
+/// Bytes before the first section (magic + header words + params).
+const HEADER_BYTES: usize = 128;
+/// Section starts are aligned to this many bytes.
+const SECTION_ALIGN: usize = ROW_ALIGN;
+
+/// Byte offsets of every section, derived purely from the header.
+#[derive(Debug, Clone, Copy)]
+struct SectionLayout {
+    ids: usize,
+    dists: usize,
+    data: usize,
+    norms: Option<usize>,
+    idmap: Option<usize>,
+    centroids: Option<usize>,
+    /// Offset of the FNV trailer == total payload length.
+    crc: usize,
+}
+
+impl SectionLayout {
+    fn compute(
+        n: usize,
+        k: usize,
+        dim_pad: usize,
+        has_norms: bool,
+        has_idmap: bool,
+        cent_count: usize,
+    ) -> Self {
+        let mut off = HEADER_BYTES;
+        let mut section = |len: usize| {
+            off = round_up(off, SECTION_ALIGN);
+            let start = off;
+            off += len;
+            start
+        };
+        let ids = section(n * k * 4);
+        let dists = section(n * k * 4);
+        let data = section(n * dim_pad * 4);
+        let norms = has_norms.then(|| section(n * 4));
+        let idmap = has_idmap.then(|| section(n * 4));
+        let centroids = (cent_count > 0).then(|| section(cent_count * dim_pad * 4));
+        Self { ids, dists, data, norms, idmap, centroids, crc: off }
+    }
+
+    fn file_len(&self) -> usize {
+        self.crc + 8
+    }
+}
+
+/// Everything [`write_segment`] needs, borrowed from the caller.
+/// `ids`/`dists` are the flat `n·k` heap-order strips
+/// ([`KnnGraph::flat_ids`](crate::graph::KnnGraph::flat_ids)); `norms`
+/// pairs per-row squared norms with the lane count that computed them;
+/// `idmap` maps working row → external id (identity when `None`).
+pub struct SegmentSpec<'a> {
+    pub data: &'a AlignedMatrix,
+    pub ids: &'a [u32],
+    pub dists: &'a [f32],
+    pub k: usize,
+    pub params: &'a Params,
+    pub norms: Option<(&'a [f32], usize)>,
+    pub idmap: Option<&'a [u32]>,
+    pub centroids: Option<&'a AlignedMatrix>,
+    pub generation: u64,
+}
+
+/// Write a `KNNIv2` segment. The file is flushed and fsync'd before
+/// returning, so a follow-up atomic rename is durable.
+pub fn write_segment(path: &Path, spec: &SegmentSpec<'_>) -> Result<()> {
+    let (n, dim, dim_pad) = (spec.data.n(), spec.data.dim(), spec.data.dim_pad());
+    assert!(n >= 2, "segments need at least two rows");
+    assert!(spec.k >= 1 && spec.k <= u16::MAX as usize, "implausible k {}", spec.k);
+    assert_eq!(spec.ids.len(), n * spec.k, "ids strip must be n·k");
+    assert_eq!(spec.dists.len(), n * spec.k, "dists strip must be n·k");
+    if let Some((ns, lanes)) = spec.norms {
+        assert_eq!(ns.len(), n, "norms length mismatch");
+        assert!(matches!(lanes, 1 | 8 | 16), "implausible norm lane count {lanes}");
+    }
+    if let Some(m) = spec.idmap {
+        assert_eq!(m.len(), n, "idmap length mismatch");
+    }
+    if let Some(c) = spec.centroids {
+        assert_eq!(c.dim(), dim, "centroid/data dim mismatch");
+        assert!(c.n() >= 1 && c.n() <= u16::MAX as usize, "implausible centroid count {}", c.n());
+    }
+    let cent_count = spec.centroids.map_or(0, |c| c.n());
+    let layout = SectionLayout::compute(
+        n,
+        spec.k,
+        dim_pad,
+        spec.norms.is_some(),
+        spec.idmap.is_some(),
+        cent_count,
+    );
+
+    let file =
+        std::fs::File::create(path).with_context(|| format!("creating {}", path.display()))?;
+    let mut w = Emitter { w: BufWriter::new(&file), crc: Fnv::new(), pos: 0 };
+
+    w.emit(MAGIC_V2)?;
+    w.emit(&(n as u64).to_le_bytes())?;
+    w.emit(&(dim as u64).to_le_bytes())?;
+    w.emit(&(spec.k as u64).to_le_bytes())?;
+    let mut flags = 0u64;
+    if let Some((_, lanes)) = spec.norms {
+        flags |= FLAG_NORMS | ((lanes as u64) << FLAG_NORM_LANES_SHIFT);
+    }
+    if spec.idmap.is_some() {
+        flags |= FLAG_IDMAP;
+    }
+    if cent_count > 0 {
+        flags |= FLAG_CENTROIDS | ((cent_count as u64) << FLAG_CENTROID_COUNT_SHIFT);
+    }
+    w.emit(&flags.to_le_bytes())?;
+    w.emit(&spec.generation.to_le_bytes())?;
+    w.emit(&(dim_pad as u64).to_le_bytes())?;
+    w.emit(&0u64.to_le_bytes())?; // reserved
+    w.emit(&crate::search::bundle::encode_params(spec.params))?;
+
+    w.pad_to(layout.ids)?;
+    for &v in spec.ids {
+        w.emit(&v.to_le_bytes())?;
+    }
+    w.pad_to(layout.dists)?;
+    for &d in spec.dists {
+        w.emit(&d.to_le_bytes())?;
+    }
+    w.pad_to(layout.data)?;
+    // padded rows, exactly as the matrix lays them out in memory
+    let mut row_buf = Vec::with_capacity(dim_pad * 4);
+    for i in 0..n {
+        row_buf.clear();
+        for &x in spec.data.row(i) {
+            row_buf.extend_from_slice(&x.to_le_bytes());
+        }
+        w.emit(&row_buf)?;
+    }
+    if let (Some(off), Some((ns, _))) = (layout.norms, spec.norms) {
+        w.pad_to(off)?;
+        for &x in ns {
+            w.emit(&x.to_le_bytes())?;
+        }
+    }
+    if let (Some(off), Some(m)) = (layout.idmap, spec.idmap) {
+        w.pad_to(off)?;
+        for &id in m {
+            w.emit(&id.to_le_bytes())?;
+        }
+    }
+    if let (Some(off), Some(c)) = (layout.centroids, spec.centroids) {
+        w.pad_to(off)?;
+        for i in 0..c.n() {
+            row_buf.clear();
+            for &x in c.row(i) {
+                row_buf.extend_from_slice(&x.to_le_bytes());
+            }
+            w.emit(&row_buf)?;
+        }
+    }
+    debug_assert_eq!(w.pos, layout.crc, "writer out of sync with the layout");
+    let crc = w.crc.0;
+    w.w.write_all(&crc.to_le_bytes())?;
+    w.w.flush()?;
+    file.sync_all().with_context(|| format!("fsync {}", path.display()))?;
+    Ok(())
+}
+
+struct Emitter<'f> {
+    w: BufWriter<&'f std::fs::File>,
+    crc: Fnv,
+    pos: usize,
+}
+
+impl Emitter<'_> {
+    fn emit(&mut self, bytes: &[u8]) -> Result<()> {
+        self.crc.update(bytes);
+        self.w.write_all(bytes)?;
+        self.pos += bytes.len();
+        Ok(())
+    }
+
+    /// Zero-fill up to `off` (section alignment padding; checksummed).
+    fn pad_to(&mut self, off: usize) -> Result<()> {
+        debug_assert!(off >= self.pos && off - self.pos < SECTION_ALIGN);
+        const ZEROS: [u8; 64] = [0u8; 64];
+        let gap = off - self.pos;
+        self.emit(&ZEROS[..gap])
+    }
+}
+
+/// How the segment serves its per-row squared norms.
+enum NormSource {
+    /// Straight from the mapped norms section (stored lane width
+    /// matches the active kernel width).
+    Stored,
+    /// Recomputed at open (section absent, or stored at another width —
+    /// same discipline as the `KNNIv1` loader).
+    Owned(Vec<f32>),
+}
+
+/// An opened, immutable `KNNIv2` segment: every section served in
+/// place from one [`SegmentBytes`] region. The data matrix and
+/// centroids are foreign-backed [`AlignedMatrix`] views into that
+/// region; the search path runs on the same
+/// [`IndexView`] core as [`GraphIndex`](crate::search::GraphIndex), so
+/// segment-backed answers are bit-identical to the owned path.
+pub struct Segment {
+    bytes: Arc<SegmentBytes>,
+    n: usize,
+    dim: usize,
+    dim_pad: usize,
+    k: usize,
+    generation: u64,
+    params: Params,
+    layout: SectionLayout,
+    data: AlignedMatrix,
+    centroids: Option<AlignedMatrix>,
+    norms: NormSource,
+    norm_lanes: usize,
+}
+
+impl Segment {
+    /// Open under the resolved default mode (explicit `PALLAS_STORE`,
+    /// else mmap where available).
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::open_with(path, None)
+    }
+
+    /// Open under an explicit store mode (`None` = resolve default).
+    pub fn open_with(path: &Path, mode: Option<StoreMode>) -> Result<Self> {
+        if cfg!(target_endian = "big") {
+            bail!(
+                "KNNIv2 segments are little-endian and read by in-place reinterpretation; \
+                 this target is big-endian — use a KNNIv1 bundle instead"
+            );
+        }
+        let mode = StoreMode::resolve(mode);
+        let file_len = std::fs::metadata(path)
+            .with_context(|| format!("stat {}", path.display()))?
+            .len();
+        if file_len < (HEADER_BYTES + 8) as u64 {
+            bail!("file too small for a KNNIv2 segment ({file_len} bytes)");
+        }
+        let bytes = Arc::new(SegmentBytes::open(path, mode, file_len)?);
+        let b = bytes.as_slice();
+
+        if &b[..8] != MAGIC_V2 {
+            if b.starts_with(b"KNNI") {
+                bail!(
+                    "unsupported segment version {:?} (this build reads KNNIv2; \
+                     KNNIv1 bundles open through MutableIndex or api::Index::load)",
+                    String::from_utf8_lossy(&b[..6])
+                );
+            }
+            bail!("not a KNNIv2 segment (magic {:02x?})", &b[..8]);
+        }
+        let u64_at = |off: usize| u64::from_le_bytes(b[off..off + 8].try_into().unwrap());
+        let n = u64_at(8) as usize;
+        let dim = u64_at(16) as usize;
+        let k = u64_at(24) as usize;
+        let flags = u64_at(32);
+        let generation = u64_at(40);
+        let dim_pad = u64_at(48) as usize;
+        if n < 2 || k < 1 || dim < 1 || dim > 1_000_000 {
+            bail!("implausible segment header: n={n}, dim={dim}, k={k}");
+        }
+        if k > u16::MAX as usize || n > u32::MAX as usize - 1 {
+            bail!("implausible segment header: n={n}, k={k}");
+        }
+        if dim_pad != round_up(dim, LANE_PAD) {
+            bail!("dim_pad {dim_pad} does not match 8⌈dim/8⌉ for dim {dim}");
+        }
+        if n.checked_mul(k).is_none() || n * k > (1 << 34) {
+            bail!("implausible graph size: n={n}, k={k}");
+        }
+        if n.checked_mul(dim_pad).is_none() || n * dim_pad > (1 << 36) {
+            bail!("implausible data size: n={n}, dim_pad={dim_pad}");
+        }
+        if u64_at(56) != 0 {
+            bail!("reserved header word is nonzero");
+        }
+        let known = FLAG_NORMS
+            | FLAG_CENTROIDS
+            | FLAG_IDMAP
+            | FLAG_NORM_LANES_MASK
+            | FLAG_CENTROID_COUNT_MASK;
+        if flags & !known != 0 {
+            bail!("unknown flag bits {flags:#x}");
+        }
+        let stored_lanes = ((flags & FLAG_NORM_LANES_MASK) >> FLAG_NORM_LANES_SHIFT) as usize;
+        if flags & FLAG_NORMS != 0 {
+            if !matches!(stored_lanes, 1 | 8 | 16) {
+                bail!("implausible norm lane count {stored_lanes} (valid widths: 1, 8, 16)");
+            }
+        } else if stored_lanes != 0 {
+            bail!("norm lane count {stored_lanes} recorded without a norms section");
+        }
+        let cent_count =
+            ((flags & FLAG_CENTROID_COUNT_MASK) >> FLAG_CENTROID_COUNT_SHIFT) as usize;
+        if flags & FLAG_CENTROIDS != 0 {
+            if cent_count == 0 {
+                bail!("centroids section recorded with a zero centroid count");
+            }
+        } else if cent_count != 0 {
+            bail!("centroid count {cent_count} recorded without a centroids section");
+        }
+
+        let layout = SectionLayout::compute(
+            n,
+            k,
+            dim_pad,
+            flags & FLAG_NORMS != 0,
+            flags & FLAG_IDMAP != 0,
+            cent_count,
+        );
+        if b.len() != layout.file_len() {
+            bail!(
+                "segment size mismatch: file is {} bytes, header implies {} — truncated or \
+                 corrupt",
+                b.len(),
+                layout.file_len()
+            );
+        }
+        let mut crc = Fnv::new();
+        crc.update(&b[..layout.crc]);
+        if u64::from_le_bytes(b[layout.crc..layout.crc + 8].try_into().unwrap()) != crc.0 {
+            bail!("checksum mismatch — segment corrupt");
+        }
+
+        let mut params_buf = [0u8; 64];
+        params_buf.copy_from_slice(&b[64..128]);
+        let params = crate::search::bundle::decode_params(&params_buf)?;
+
+        // Section slices are reinterpreted in place, so validate the
+        // parts the search core will index with *before* serving: edge
+        // ids must be EMPTY or in-range non-self, external ids must not
+        // collide with the EMPTY sentinel.
+        let ids: &[u32] = slice_u32(b, layout.ids, n * k);
+        for (slot, &v) in ids.iter().enumerate() {
+            if v == EMPTY_ID {
+                continue;
+            }
+            let u = slot / k;
+            if v as usize >= n || v as usize == u {
+                bail!("corrupt edge {u} → {v}");
+            }
+        }
+        if let Some(off) = layout.idmap {
+            let map: &[u32] = slice_u32(b, off, n);
+            if map.iter().any(|&id| id == u32::MAX) {
+                bail!("idmap contains the reserved id u32::MAX");
+            }
+        }
+
+        // Safety: the data section holds n·dim_pad f32 values at a
+        // 64-byte-aligned offset of a 64-byte-aligned region, alive as
+        // long as the keepalive Arc — exactly from_foreign's contract.
+        let data = unsafe {
+            AlignedMatrix::from_foreign(
+                b.as_ptr().add(layout.data) as *const f32,
+                n,
+                dim,
+                bytes.clone() as Arc<dyn std::any::Any + Send + Sync>,
+            )
+        };
+        let centroids = layout.centroids.map(|off| unsafe {
+            AlignedMatrix::from_foreign(
+                b.as_ptr().add(off) as *const f32,
+                cent_count,
+                dim,
+                bytes.clone() as Arc<dyn std::any::Any + Send + Sync>,
+            )
+        });
+
+        // Same width discipline as the v1 loader: stored norms are kept
+        // only when their lane tag matches the active kernel width;
+        // otherwise (or when absent) they are recomputed so the
+        // norm-trick path keeps its exact-zero self-distance guarantee.
+        let active_lanes = crate::distance::dispatch::active_width().lanes();
+        let (norms, norm_lanes) = if layout.norms.is_some() && stored_lanes == active_lanes {
+            (NormSource::Stored, stored_lanes)
+        } else {
+            let ns = (0..n).map(|i| crate::distance::sq_norm(data.row(i))).collect();
+            (NormSource::Owned(ns), active_lanes)
+        };
+
+        Ok(Self {
+            bytes,
+            n,
+            dim,
+            dim_pad,
+            k,
+            generation,
+            params,
+            layout,
+            data,
+            centroids,
+            norms,
+            norm_lanes,
+        })
+    }
+
+    /// Number of rows.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Logical dimensionality.
+    pub fn dim(&self) -> usize {
+        self.dim
+    }
+
+    /// Neighbors per node.
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    /// Compaction generation recorded in the header.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Build parameters recorded in the header.
+    pub fn params(&self) -> &Params {
+        &self.params
+    }
+
+    /// How the bytes were brought in (mmap or heap copy).
+    pub fn mode(&self) -> StoreMode {
+        self.bytes.mode()
+    }
+
+    /// The corpus matrix — a foreign-backed view into the segment's
+    /// bytes (never an owned copy; `data().is_owned()` is `false`).
+    pub fn data(&self) -> &AlignedMatrix {
+        &self.data
+    }
+
+    /// Partition centroids, when the segment carries them.
+    pub fn centroids(&self) -> Option<&AlignedMatrix> {
+        self.centroids.as_ref()
+    }
+
+    /// Flat `n·k` neighbor-id strip (heap order), in place.
+    pub fn ids(&self) -> &[u32] {
+        slice_u32(self.bytes.as_slice(), self.layout.ids, self.n * self.k)
+    }
+
+    /// Flat `n·k` neighbor-distance strip (heap order), in place.
+    pub fn dists(&self) -> &[f32] {
+        slice_f32(self.bytes.as_slice(), self.layout.dists, self.n * self.k)
+    }
+
+    /// Per-row squared norms at the active kernel width.
+    pub fn norms(&self) -> &[f32] {
+        match &self.norms {
+            NormSource::Stored => {
+                slice_f32(self.bytes.as_slice(), self.layout.norms.unwrap(), self.n)
+            }
+            NormSource::Owned(v) => v,
+        }
+    }
+
+    /// Lane count of the width [`norms`](Self::norms) was computed at.
+    pub fn norm_lanes(&self) -> usize {
+        self.norm_lanes
+    }
+
+    /// Working row → external id table, when stored.
+    pub fn idmap(&self) -> Option<&[u32]> {
+        self.layout.idmap.map(|off| slice_u32(self.bytes.as_slice(), off, self.n))
+    }
+
+    /// External id of working row `w` (identity without an idmap).
+    #[inline]
+    pub fn external_id(&self, w: u32) -> u32 {
+        match self.layout.idmap {
+            Some(off) => slice_u32(self.bytes.as_slice(), off, self.n)[w as usize],
+            None => w,
+        }
+    }
+
+    /// The borrowed search view over the mapped sections — the *same*
+    /// core [`GraphIndex`](crate::search::GraphIndex) runs on.
+    pub(crate) fn view(&self) -> IndexView<'_> {
+        IndexView::new(&self.data, self.ids(), self.k, self.norms())
+    }
+
+    /// Allocate a reusable search scratch sized for this segment.
+    pub fn scratch(&self) -> SearchScratch {
+        self.view().scratch()
+    }
+
+    /// Single-query beam search, results in *working* row ids.
+    pub fn search_raw(
+        &self,
+        query: &[f32],
+        k: usize,
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<(u32, f32)>, QueryStats) {
+        self.view().search_with(query, k, params, scratch)
+    }
+
+    /// Batched beam search, results in *working* row ids.
+    pub fn search_batch_raw(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+        scratch: &mut SearchScratch,
+    ) -> (Vec<Vec<(u32, f32)>>, BatchStats) {
+        self.view().search_batch_with(queries, k, params, scratch)
+    }
+}
+
+#[inline]
+fn slice_u32(b: &[u8], off: usize, len: usize) -> &[u32] {
+    debug_assert!(off % 4 == 0 && off + len * 4 <= b.len());
+    // Safety: offset and length are layout-validated against the region;
+    // section starts are 64-byte aligned, satisfying u32 alignment.
+    unsafe { std::slice::from_raw_parts(b.as_ptr().add(off) as *const u32, len) }
+}
+
+#[inline]
+fn slice_f32(b: &[u8], off: usize, len: usize) -> &[f32] {
+    debug_assert!(off % 4 == 0 && off + len * 4 <= b.len());
+    // Safety: as slice_u32; any bit pattern is a valid f32.
+    unsafe { std::slice::from_raw_parts(b.as_ptr().add(off) as *const f32, len) }
+}
+
+/// Convert a legacy `KNNIv1` bundle into a `KNNIv2` segment. The
+/// working-layout rows, edges, and distances carry over bit-exactly;
+/// the v1 reordering's σ⁻¹ becomes the v2 idmap (working → original
+/// id); norms are persisted at the width that will serve them.
+pub fn convert_v1_to_v2(src: &Path, dst: &Path) -> Result<()> {
+    let bundle = crate::search::load_index(src)?;
+    let norms = match &bundle.norms {
+        Some(ns) => ns.clone(),
+        None => (0..bundle.data.n())
+            .map(|i| crate::distance::sq_norm(bundle.data.row(i)))
+            .collect(),
+    };
+    let lanes = if bundle.norms.is_some() {
+        bundle.norm_lanes
+    } else {
+        crate::distance::dispatch::active_width().lanes()
+    };
+    let idmap = bundle.reordering.as_ref().map(|r| r.inv.clone());
+    write_segment(
+        dst,
+        &SegmentSpec {
+            data: &bundle.data,
+            ids: bundle.graph.flat_ids(),
+            dists: bundle.graph.flat_dists(),
+            k: bundle.graph.k(),
+            params: &bundle.params,
+            norms: Some((&norms, lanes)),
+            idmap: idmap.as_deref(),
+            centroids: bundle.centroids.as_ref(),
+            generation: 0,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dataset::clustered::SynthClustered;
+    use crate::nndescent::NnDescent;
+    use crate::search::GraphIndex;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("knng_store_format_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    fn build(n: usize, dim: usize, seed: u64) -> (AlignedMatrix, crate::graph::KnnGraph, Params) {
+        let (data, _) = SynthClustered::new(n, dim, 6, seed).generate_labeled();
+        let params = Params::default().with_k(10).with_seed(seed);
+        let result = NnDescent::new(params.clone()).build(&data).unwrap();
+        (data, result.graph, params)
+    }
+
+    fn save(path: &std::path::Path, data: &AlignedMatrix, g: &crate::graph::KnnGraph, p: &Params) {
+        let norms = GraphIndex::compute_norms(data);
+        let lanes = crate::distance::dispatch::active_width().lanes();
+        write_segment(
+            path,
+            &SegmentSpec {
+                data,
+                ids: g.flat_ids(),
+                dists: g.flat_dists(),
+                k: g.k(),
+                params: p,
+                norms: Some((&norms, lanes)),
+                idmap: None,
+                centroids: None,
+                generation: 3,
+            },
+        )
+        .unwrap();
+    }
+
+    #[test]
+    fn roundtrip_is_bit_exact_and_zero_copy() {
+        let (data, graph, params) = build(400, 12, 7);
+        let path = tmp("rt.knni2");
+        save(&path, &data, &graph, &params);
+        for mode in [StoreMode::Copy, StoreMode::Mmap] {
+            if mode == StoreMode::Mmap && !cfg!(unix) {
+                continue;
+            }
+            let seg = Segment::open_with(&path, Some(mode)).unwrap();
+            assert_eq!((seg.n(), seg.dim(), seg.k()), (400, 12, graph.k()));
+            assert_eq!(seg.generation(), 3);
+            assert_eq!(seg.params(), &params);
+            assert!(!seg.data().is_owned(), "corpus must be served in place, not copied");
+            assert_eq!(seg.ids(), graph.flat_ids());
+            for (a, b) in seg.dists().iter().zip(graph.flat_dists()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            for i in 0..400 {
+                assert_eq!(seg.data().row(i), data.row(i), "row {i}");
+            }
+            let want = GraphIndex::compute_norms(&data);
+            for (a, b) in seg.norms().iter().zip(&want) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+            assert_eq!(seg.external_id(17), 17, "no idmap → identity");
+        }
+    }
+
+    #[test]
+    fn mmap_and_copy_serve_bitwise_identical_results() {
+        if !cfg!(unix) {
+            return;
+        }
+        let (data, graph, params) = build(600, 16, 11);
+        let path = tmp("modes.knni2");
+        save(&path, &data, &graph, &params);
+        let a = Segment::open_with(&path, Some(StoreMode::Mmap)).unwrap();
+        let b = Segment::open_with(&path, Some(StoreMode::Copy)).unwrap();
+        assert_eq!(a.mode(), StoreMode::Mmap);
+        assert_eq!(b.mode(), StoreMode::Copy);
+        let sp = SearchParams::default();
+        let (mut sa, mut sb) = (a.scratch(), b.scratch());
+        for qi in (0..600).step_by(43) {
+            let (ra, qa) = a.search_raw(data.row_logical(qi), 8, &sp, &mut sa);
+            let (rb, qb) = b.search_raw(data.row_logical(qi), 8, &sp, &mut sb);
+            assert_eq!(ra, rb, "query {qi}");
+            assert_eq!(qa, qb);
+        }
+    }
+
+    #[test]
+    fn segment_search_matches_graph_index_bitwise() {
+        // the tentpole identity: a segment answers exactly like the
+        // owned GraphIndex over the same graph+data, stats included
+        let (data, graph, params) = build(500, 16, 13);
+        let path = tmp("parity.knni2");
+        save(&path, &data, &graph, &params);
+        let seg = Segment::open(&path).unwrap();
+        let idx = GraphIndex::new(data.clone(), graph);
+        let sp = SearchParams::default();
+        let mut scratch = seg.scratch();
+        for qi in (0..500).step_by(29) {
+            let (want, wq) = idx.search(data.row_logical(qi), 10, &sp);
+            let (got, gq) = seg.search_raw(data.row_logical(qi), 10, &sp, &mut scratch);
+            assert_eq!(want, got, "query {qi}");
+            assert_eq!(wq, gq, "query {qi} stats");
+        }
+        let queries = {
+            let rows: Vec<f32> =
+                (0..50).flat_map(|i| data.row_logical(i * 9).to_vec()).collect();
+            AlignedMatrix::from_rows(50, 16, &rows)
+        };
+        let (want, _) = idx.search_batch(&queries, 10, &sp);
+        let (got, _) = seg.search_batch_raw(&queries, 10, &sp, &mut scratch);
+        assert_eq!(want, got);
+    }
+
+    #[test]
+    fn v1_conversion_preserves_serving_and_idmap() {
+        let (data, _) = SynthClustered::new(300, 8, 4, 17).generate_labeled();
+        let params = Params::default().with_k(8).with_seed(17).with_reorder(true);
+        let result = NnDescent::new(params.clone()).build(&data).unwrap();
+        let bundle = crate::search::IndexBundle::from_build(&data, &result, &params);
+        let v1 = tmp("conv.knni");
+        let v2 = tmp("conv.knni2");
+        crate::search::save_index(&v1, &bundle).unwrap();
+        convert_v1_to_v2(&v1, &v2).unwrap();
+
+        let seg = Segment::open(&v2).unwrap();
+        let (idx, reord, _) = crate::search::load_index(&v1).unwrap().into_index();
+        let r = reord.unwrap();
+        // idmap must be σ⁻¹
+        assert_eq!(seg.idmap().unwrap(), &r.inv[..]);
+        let sp = SearchParams::default();
+        let mut scratch = seg.scratch();
+        for qi in (0..300).step_by(31) {
+            let (want, _) = idx.search(data.row_logical(qi), 5, &sp);
+            let (got, _) = seg.search_raw(data.row_logical(qi), 5, &sp, &mut scratch);
+            assert_eq!(want, got, "query {qi} (working ids)");
+            // and the idmap takes the self-hit back to the original id
+            assert_eq!(seg.external_id(got[0].0) as usize, qi, "query {qi} external id");
+        }
+    }
+
+    #[test]
+    fn corruption_and_truncation_are_typed_errors() {
+        let (data, graph, params) = build(200, 8, 19);
+        let path = tmp("corrupt.knni2");
+        save(&path, &data, &graph, &params);
+        let good = std::fs::read(&path).unwrap();
+
+        // flipped byte → checksum
+        let mut bad = good.clone();
+        let mid = bad.len() / 2;
+        bad[mid] ^= 0xFF;
+        std::fs::write(&path, &bad).unwrap();
+        let err = Segment::open_with(&path, Some(StoreMode::Copy)).unwrap_err().to_string();
+        assert!(
+            err.contains("checksum") || err.contains("corrupt"),
+            "unexpected error: {err}"
+        );
+
+        // truncations at assorted cuts → size mismatch (or too-small)
+        for keep in [0usize, 7, 8, 40, 127, 128, good.len() / 2, good.len() - 1] {
+            std::fs::write(&path, &good[..keep]).unwrap();
+            assert!(
+                Segment::open_with(&path, Some(StoreMode::Copy)).is_err(),
+                "truncated at {keep} bytes must fail"
+            );
+        }
+
+        // wrong magic family
+        let mut other = good.clone();
+        other[..8].copy_from_slice(b"NOTADATA");
+        std::fs::write(&path, &other).unwrap();
+        let err = Segment::open_with(&path, Some(StoreMode::Copy)).unwrap_err().to_string();
+        assert!(err.contains("not a KNNIv2"), "unexpected error: {err}");
+
+        // v1 magic routed to a helpful cross-format message
+        let mut v1 = good;
+        v1[..8].copy_from_slice(b"KNNIv1\0\0");
+        std::fs::write(&path, &v1).unwrap();
+        let err = Segment::open_with(&path, Some(StoreMode::Copy)).unwrap_err().to_string();
+        assert!(err.contains("KNNIv1"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn v1_loader_names_the_store_engine_for_v2_files() {
+        let (data, graph, params) = build(200, 8, 23);
+        let path = tmp("crossload.knni2");
+        save(&path, &data, &graph, &params);
+        let err = crate::search::load_index(&path).unwrap_err().to_string();
+        assert!(err.contains("KNNIv2") && err.contains("store"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn sections_are_aligned_and_padding_is_checksummed() {
+        // n·k·4 = 200·10·4 = 8000, not a multiple of 64 → real padding
+        let (data, graph, params) = build(200, 9, 29);
+        let path = tmp("align.knni2");
+        save(&path, &data, &graph, &params);
+        let seg = Segment::open_with(&path, Some(StoreMode::Copy)).unwrap();
+        assert_eq!(seg.ids().as_ptr() as usize % SECTION_ALIGN, 0);
+        assert_eq!(seg.dists().as_ptr() as usize % SECTION_ALIGN, 0);
+        assert_eq!(seg.data().row(0).as_ptr() as usize % SECTION_ALIGN, 0);
+
+        // corrupt one padding byte between ids and dists: CRC must fire
+        let layout = seg.layout;
+        drop(seg);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let pad_at = layout.ids + 200 * graph.k() * 4; // first pad byte after ids
+        assert!(pad_at < layout.dists, "this shape must produce inter-section padding");
+        bytes[pad_at] = 0xAB;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Segment::open_with(&path, Some(StoreMode::Copy)).unwrap_err().to_string();
+        assert!(err.contains("checksum"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_corrupt_edges_and_reserved_idmap_values() {
+        let (data, graph, params) = build(200, 8, 31);
+        let path = tmp("edges.knni2");
+        save(&path, &data, &graph, &params);
+        let mut bytes = std::fs::read(&path).unwrap();
+        // first edge slot → out-of-range id (not EMPTY)
+        let ids_off = {
+            let seg = Segment::open_with(&path, Some(StoreMode::Copy)).unwrap();
+            seg.layout.ids
+        };
+        bytes[ids_off..ids_off + 4].copy_from_slice(&500u32.to_le_bytes());
+        let crc_off = bytes.len() - 8;
+        let mut crc = Fnv::new();
+        crc.update(&bytes[..crc_off]);
+        bytes[crc_off..].copy_from_slice(&crc.0.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = Segment::open_with(&path, Some(StoreMode::Copy)).unwrap_err().to_string();
+        assert!(err.contains("corrupt edge"), "unexpected error: {err}");
+    }
+}

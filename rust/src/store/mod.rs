@@ -1,0 +1,49 @@
+//! The storage engine: zero-copy `KNNIv2` segments, a WAL-backed
+//! mutable delta, and compaction — the LSM-style layer that takes the
+//! paper's locality story past process exit.
+//!
+//! The read path is a [`Segment`]: a 64-byte-aligned, section-padded
+//! `KNNIv2` bundle whose graph/data/norms/centroid sections are
+//! reinterpreted **in place** from an mmap'd file (or, behind the same
+//! enum, from one 64-byte-aligned heap buffer on platforms without
+//! mmap). Because the on-disk data section stores rows padded exactly
+//! like [`AlignedMatrix`](crate::dataset::AlignedMatrix) lays them out
+//! in memory, the mapped bytes back the matrix directly — opening an
+//! index never copies the corpus, and mmap and heap-copy modes parse
+//! identical bytes at identical offsets, so they are bitwise
+//! interchangeable.
+//!
+//! The write path is a [`MutableIndex`]: inserts and deletes go to a
+//! checksummed write-ahead log first ([`Wal`], FNV-trailer records,
+//! replay-on-open with torn-tail truncation), then into an in-memory
+//! [`DeltaSegment`] (brute-force searched) and a tombstone set masking
+//! base-segment ids. Queries merge base + delta like two shards of a
+//! [`ShardedSearcher`](crate::api::ShardedSearcher) — same comparator,
+//! same dedup — with tombstones filtered before the top-k.
+//!
+//! Compaction ([`MutableIndex::compact`], auto-triggered by a
+//! size-ratio policy) folds delta + tombstones into a fresh `KNNIv2`
+//! segment using bounded NN-Descent *repair* iterations
+//! ([`NnDescent::repair`](crate::nndescent::NnDescent::repair)) seeded
+//! from the surviving edges of the old graph — not a full rebuild —
+//! then atomically renames the new segment into place and bumps its
+//! generation counter. In-flight readers keep the old mapping alive
+//! through its `Arc` until they finish.
+//!
+//! Legacy `KNNIv1` bundles open through the same [`MutableIndex`]
+//! facade (heap-loaded, exactly as before) so every existing artifact
+//! keeps serving bit-identically.
+
+pub mod bytes;
+pub mod compact;
+pub mod delta;
+pub mod format;
+pub mod mutable;
+pub mod wal;
+
+pub use bytes::{SegmentBytes, StoreMode};
+pub use compact::CompactionStats;
+pub use delta::DeltaSegment;
+pub use format::{convert_v1_to_v2, write_segment, Segment, SegmentSpec};
+pub use mutable::{BaseSegment, MutableIndex, SharedMutableIndex, StoreConfig};
+pub use wal::{Wal, WalRecord};

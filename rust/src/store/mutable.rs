@@ -1,0 +1,451 @@
+//! The storage engine's facade: one handle that serves a base segment
+//! zero-copy, absorbs inserts/deletes through the WAL into the delta,
+//! and folds the delta back into a fresh segment on compaction.
+//!
+//! Query semantics: the base and the delta are merged exactly like two
+//! shards of a [`ShardedSearcher`](crate::api::ShardedSearcher) — same
+//! comparator, same id-level dedup — with tombstoned base ids filtered
+//! *before* the top-k cut (the base is over-fetched by the tombstone
+//! count so masking never starves the result list).
+
+use super::bytes::StoreMode;
+use super::delta::DeltaSegment;
+use super::format::Segment;
+use super::wal::{Wal, WalRecord};
+use crate::api::{Neighbor, OriginalId, Searcher, ShardedSearcher, WorkingId};
+use crate::dataset::AlignedMatrix;
+use crate::search::{BatchStats, QueryStats, SearchParams};
+use anyhow::{bail, Context, Result};
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, RwLock};
+
+/// Tuning knobs for a [`MutableIndex`].
+#[derive(Debug, Clone)]
+pub struct StoreConfig {
+    /// How to bring segment bytes in (`None` = resolve `PALLAS_STORE`,
+    /// then the platform default).
+    pub mode: Option<StoreMode>,
+    /// Auto-compact when the delta holds at least this fraction of the
+    /// base's rows. `<= 0` disables the trigger entirely.
+    pub auto_compact_ratio: f64,
+    /// ...but never before the delta holds this many rows (keeps tiny
+    /// indexes from compacting on every insert).
+    pub auto_compact_min: usize,
+    /// NN-Descent repair iterations budget per compaction.
+    pub repair_iters: usize,
+}
+
+impl Default for StoreConfig {
+    fn default() -> Self {
+        Self { mode: None, auto_compact_ratio: 0.5, auto_compact_min: 64, repair_iters: 8 }
+    }
+}
+
+/// The immutable layer under a [`MutableIndex`]: a zero-copy `KNNIv2`
+/// segment, or a legacy `KNNIv1` bundle heap-loaded through the
+/// existing [`Index`](crate::api::Index) path so old artifacts keep
+/// serving bit-identically.
+pub enum BaseSegment {
+    V2(Segment),
+    Legacy(crate::api::Index),
+}
+
+impl BaseSegment {
+    pub fn n(&self) -> usize {
+        match self {
+            Self::V2(s) => s.n(),
+            Self::Legacy(i) => i.len(),
+        }
+    }
+
+    pub fn dim(&self) -> usize {
+        match self {
+            Self::V2(s) => s.dim(),
+            Self::Legacy(i) => i.dim(),
+        }
+    }
+
+    /// Compaction generation (legacy bundles predate the counter: 0).
+    pub fn generation(&self) -> u64 {
+        match self {
+            Self::V2(s) => s.generation(),
+            Self::Legacy(_) => 0,
+        }
+    }
+
+    /// Search the base, results in external ids, canonical
+    /// `(distance, id)` order.
+    fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> (Vec<Neighbor>, QueryStats) {
+        match self {
+            Self::V2(s) => {
+                let mut scratch = s.scratch();
+                let (raw, stats) = s.search_raw(query, k, params, &mut scratch);
+                (map_external(s, raw), stats)
+            }
+            Self::Legacy(i) => i.search(query, k, params),
+        }
+    }
+
+    fn search_batch(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        match self {
+            Self::V2(s) => {
+                let mut scratch = s.scratch();
+                let (raw, stats) = s.search_batch_raw(queries, k, params, &mut scratch);
+                (raw.into_iter().map(|r| map_external(s, r)).collect(), stats)
+            }
+            Self::Legacy(i) => i.search_batch(queries, k, params),
+        }
+    }
+}
+
+/// Map working-id results to external ids. A segment with an idmap can
+/// surface distance ties in working-layout order, so re-sort into the
+/// canonical boundary order (same rule as `Index::map_results`).
+fn map_external(seg: &Segment, raw: Vec<(u32, f32)>) -> Vec<Neighbor> {
+    let mut out: Vec<Neighbor> = raw
+        .into_iter()
+        .map(|(w, d)| Neighbor { id: OriginalId(seg.external_id(w)), dist: d })
+        .collect();
+    if seg.idmap().is_some() {
+        out.sort_unstable_by(|a, b| a.dist.total_cmp(&b.dist).then(a.id.get().cmp(&b.id.get())));
+    }
+    out
+}
+
+/// A mutable K-NN index over one on-disk base segment: zero-copy
+/// reads, WAL-durable writes, LSM-style compaction.
+pub struct MutableIndex {
+    pub(super) path: PathBuf,
+    pub(super) cfg: StoreConfig,
+    pub(super) base: BaseSegment,
+    pub(super) delta: DeltaSegment,
+    /// External ids present in the base but deleted (or re-inserted —
+    /// the delta then carries the fresh row and the stale base copy
+    /// stays masked). Invariant: every member is in `base_ids`.
+    pub(super) tombstones: HashSet<u32>,
+    /// External ids the base can return.
+    pub(super) base_ids: HashSet<u32>,
+    pub(super) wal: Wal,
+}
+
+impl MutableIndex {
+    /// Open `path` (a `KNNIv2` segment or legacy `KNNIv1` bundle) and
+    /// replay its WAL sidecar, if any.
+    pub fn open(path: &Path) -> Result<Self> {
+        Self::open_with(path, StoreConfig::default())
+    }
+
+    /// [`open`](Self::open) with explicit configuration.
+    pub fn open_with(path: &Path, cfg: StoreConfig) -> Result<Self> {
+        let mut magic = [0u8; 8];
+        {
+            use std::io::Read;
+            let mut f = std::fs::File::open(path)
+                .with_context(|| format!("opening {}", path.display()))?;
+            f.read_exact(&mut magic)
+                .with_context(|| format!("{} is too small to be an index", path.display()))?;
+        }
+        let base = if &magic == super::format::MAGIC_V2 {
+            BaseSegment::V2(Segment::open_with(path, cfg.mode)?)
+        } else if magic.starts_with(b"KNNI") {
+            BaseSegment::Legacy(crate::api::Index::load(path)?)
+        } else {
+            bail!("{} is neither a KNNIv2 segment nor a KNNIv1 bundle", path.display());
+        };
+
+        let base_ids: HashSet<u32> = match &base {
+            BaseSegment::V2(s) => match s.idmap() {
+                Some(map) => map.iter().copied().collect(),
+                None => (0..s.n() as u32).collect(),
+            },
+            BaseSegment::Legacy(i) => {
+                (0..i.len() as u32).map(|w| i.to_original(WorkingId(w)).get()).collect()
+            }
+        };
+        if base_ids.len() != base.n() {
+            bail!("base segment external ids are not unique");
+        }
+
+        let (wal, records) = Wal::open(&wal_path(path))?;
+        let mut me = Self {
+            path: path.to_path_buf(),
+            delta: DeltaSegment::new(base.dim()),
+            cfg,
+            base,
+            tombstones: HashSet::new(),
+            base_ids,
+            wal,
+        };
+        for rec in records {
+            me.apply(&rec)?;
+        }
+        if me.delta.live_count() > 0 || !me.tombstones.is_empty() {
+            crate::log_info!(
+                "{}: WAL replay restored {} delta row(s), {} tombstone(s)",
+                path.display(),
+                me.delta.live_count(),
+                me.tombstones.len()
+            );
+        }
+        Ok(me)
+    }
+
+    /// Apply one (already logged or replayed) mutation to in-memory
+    /// state. Never touches the WAL.
+    fn apply(&mut self, rec: &WalRecord) -> Result<()> {
+        match rec {
+            WalRecord::Insert { id, row } => {
+                if row.len() != self.delta.dim() {
+                    bail!(
+                        "WAL row for id {id} has dim {}, index has dim {} — log belongs to \
+                         another index",
+                        row.len(),
+                        self.delta.dim()
+                    );
+                }
+                if self.base_ids.contains(id) {
+                    self.tombstones.insert(*id);
+                }
+                self.delta.insert(*id, row);
+            }
+            WalRecord::Delete { id } => {
+                self.delta.delete(*id);
+                if self.base_ids.contains(id) {
+                    self.tombstones.insert(*id);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Insert (or overwrite) the row for external id `id`. Durable in
+    /// the WAL before it is visible; visible to the next query after.
+    /// May trigger auto-compaction on the way out.
+    pub fn insert(&mut self, id: u32, row: &[f32]) -> Result<()> {
+        if row.len() != self.delta.dim() {
+            bail!("row has dim {}, index has dim {}", row.len(), self.delta.dim());
+        }
+        if id == u32::MAX {
+            bail!("id u32::MAX is reserved");
+        }
+        let rec = WalRecord::Insert { id, row: row.to_vec() };
+        self.wal.append(&rec)?;
+        self.apply(&rec)?;
+        self.maybe_auto_compact()
+    }
+
+    /// Delete external id `id`. Returns `false` (and logs nothing)
+    /// when the id is not live.
+    pub fn delete(&mut self, id: u32) -> Result<bool> {
+        let live = self.delta.contains_live(id)
+            || (self.base_ids.contains(&id) && !self.tombstones.contains(&id));
+        if !live {
+            return Ok(false);
+        }
+        let rec = WalRecord::Delete { id };
+        self.wal.append(&rec)?;
+        self.apply(&rec)?;
+        Ok(true)
+    }
+
+    fn maybe_auto_compact(&mut self) -> Result<()> {
+        if self.cfg.auto_compact_ratio <= 0.0 {
+            return Ok(());
+        }
+        let live = self.delta.live_count();
+        if live >= self.cfg.auto_compact_min
+            && live as f64 >= self.cfg.auto_compact_ratio * self.base.n() as f64
+        {
+            let stats = self.compact()?;
+            crate::log_info!(
+                "auto-compacted {}: {} rows folded in {:.3}s (generation {})",
+                self.path.display(),
+                stats.rows,
+                stats.secs,
+                stats.generation
+            );
+        }
+        Ok(())
+    }
+
+    /// Number of live points (base minus tombstones plus delta).
+    pub fn len(&self) -> usize {
+        self.base.n() - self.tombstones.len() + self.delta.live_count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Logical dimensionality.
+    pub fn dim(&self) -> usize {
+        self.delta.dim()
+    }
+
+    /// The base layer (segment or legacy bundle).
+    pub fn base(&self) -> &BaseSegment {
+        &self.base
+    }
+
+    /// Rows currently in the mutable delta.
+    pub fn delta_len(&self) -> usize {
+        self.delta.live_count()
+    }
+
+    /// Base ids currently masked.
+    pub fn tombstone_count(&self) -> usize {
+        self.tombstones.len()
+    }
+
+    /// Compaction generation of the base layer.
+    pub fn generation(&self) -> u64 {
+        self.base.generation()
+    }
+
+    /// The segment path this index serves.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bytes currently pending in the WAL.
+    pub fn wal_bytes(&self) -> u64 {
+        self.wal.len_bytes()
+    }
+
+    /// How many nearest to ask the base for so that tombstone masking
+    /// still leaves `k` candidates.
+    fn base_k(&self, k: usize) -> usize {
+        (k + self.tombstones.len()).min(self.base.n())
+    }
+
+    fn merge_with_delta(&self, base_hits: Vec<Neighbor>, query: &[f32], k: usize) -> Vec<Neighbor> {
+        let mut all: Vec<Neighbor> = base_hits
+            .into_iter()
+            .filter(|nb| !self.tombstones.contains(&nb.id.get()))
+            .collect();
+        all.extend(
+            self.delta
+                .search(query, k)
+                .into_iter()
+                .map(|(id, dist)| Neighbor { id: OriginalId(id), dist }),
+        );
+        ShardedSearcher::merge(all, k)
+    }
+
+    /// The `k` nearest live neighbors of `query` (external ids). Stats
+    /// cover the base graph search; the delta scan adds no beam stats.
+    pub fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> (Vec<Neighbor>, QueryStats) {
+        let (base_hits, stats) = self.base.search(query, self.base_k(k), params);
+        (self.merge_with_delta(base_hits, query, k), stats)
+    }
+
+    /// Batched [`search`](Self::search).
+    pub fn search_batch(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        let (base_hits, stats) = self.base.search_batch(queries, self.base_k(k), params);
+        let merged = base_hits
+            .into_iter()
+            .enumerate()
+            .map(|(qi, hits)| self.merge_with_delta(hits, queries.row_logical(qi), k))
+            .collect();
+        (merged, stats)
+    }
+}
+
+impl Searcher for MutableIndex {
+    fn len(&self) -> usize {
+        MutableIndex::len(self)
+    }
+
+    fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> (Vec<Neighbor>, QueryStats) {
+        MutableIndex::search(self, query, k, params)
+    }
+
+    fn search_batch(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        MutableIndex::search_batch(self, queries, k, params)
+    }
+}
+
+/// A shareable, lock-guarded [`MutableIndex`] — the shape the serving
+/// stack wants: readers take the read lock (concurrent), mutations and
+/// compaction take the write lock. Implements [`Searcher`], so it
+/// flows through [`ServeFront`](crate::api::ServeFront) and the
+/// network server unchanged.
+#[derive(Clone)]
+pub struct SharedMutableIndex(Arc<RwLock<MutableIndex>>);
+
+impl SharedMutableIndex {
+    pub fn new(index: MutableIndex) -> Self {
+        Self(Arc::new(RwLock::new(index)))
+    }
+
+    /// Open via [`MutableIndex::open_with`].
+    pub fn open_with(path: &Path, cfg: StoreConfig) -> Result<Self> {
+        Ok(Self::new(MutableIndex::open_with(path, cfg)?))
+    }
+
+    pub fn insert(&self, id: u32, row: &[f32]) -> Result<()> {
+        self.0.write().expect("store lock poisoned").insert(id, row)
+    }
+
+    pub fn delete(&self, id: u32) -> Result<bool> {
+        self.0.write().expect("store lock poisoned").delete(id)
+    }
+
+    pub fn compact(&self) -> Result<super::CompactionStats> {
+        self.0.write().expect("store lock poisoned").compact()
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.0.read().expect("store lock poisoned").generation()
+    }
+
+    pub fn live_len(&self) -> usize {
+        self.0.read().expect("store lock poisoned").len()
+    }
+
+    pub fn dim(&self) -> usize {
+        self.0.read().expect("store lock poisoned").dim()
+    }
+}
+
+impl Searcher for SharedMutableIndex {
+    fn len(&self) -> usize {
+        self.live_len()
+    }
+
+    fn search(&self, query: &[f32], k: usize, params: &SearchParams) -> (Vec<Neighbor>, QueryStats) {
+        self.0.read().expect("store lock poisoned").search(query, k, params)
+    }
+
+    fn search_batch(
+        &self,
+        queries: &AlignedMatrix,
+        k: usize,
+        params: &SearchParams,
+    ) -> (Vec<Vec<Neighbor>>, BatchStats) {
+        self.0.read().expect("store lock poisoned").search_batch(queries, k, params)
+    }
+}
+
+/// The WAL sidecar path for a segment: `<file>.wal` next to it.
+pub(super) fn wal_path(segment: &Path) -> PathBuf {
+    let mut os = segment.as_os_str().to_os_string();
+    os.push(".wal");
+    PathBuf::from(os)
+}

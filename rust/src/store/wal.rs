@@ -1,0 +1,319 @@
+//! The write-ahead log: every mutation is made durable here *before*
+//! it touches the in-memory delta, so a crash at any instant loses
+//! nothing that was acknowledged.
+//!
+//! Record layout (little-endian):
+//!
+//! ```text
+//! len   u32   body length in bytes
+//! body  len B op u8 (1 = insert, 2 = delete) · ext_id u32
+//!             · insert only: dim u32 · dim × f32 row
+//! crc   u64   FNV-1a over the body
+//! ```
+//!
+//! Replay walks records from the front and stops at the first
+//! incomplete or checksum-failing one — a torn tail from a crash
+//! mid-append — then truncates the file back to the last good record
+//! so the next append starts from a clean boundary. Corruption is
+//! never an error at open: the log's job is to recover what provably
+//! committed, and a record that fails its checksum (and everything
+//! after it, which a torn write makes unordered) provably did not.
+
+use crate::graph::io::Fnv;
+use anyhow::{bail, Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+const OP_INSERT: u8 = 1;
+const OP_DELETE: u8 = 2;
+/// Upper bound on one record body — a row would need a ~4M-dim vector
+/// to hit this, so anything larger is corruption, not data.
+const MAX_BODY: usize = 16 << 20;
+
+/// One logged mutation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WalRecord {
+    /// Insert (or overwrite) the row for external id `id`.
+    Insert { id: u32, row: Vec<f32> },
+    /// Delete external id `id`.
+    Delete { id: u32 },
+}
+
+impl WalRecord {
+    fn encode(&self) -> Vec<u8> {
+        let mut body = Vec::new();
+        match self {
+            WalRecord::Insert { id, row } => {
+                body.push(OP_INSERT);
+                body.extend_from_slice(&id.to_le_bytes());
+                body.extend_from_slice(&(row.len() as u32).to_le_bytes());
+                for &x in row {
+                    body.extend_from_slice(&x.to_le_bytes());
+                }
+            }
+            WalRecord::Delete { id } => {
+                body.push(OP_DELETE);
+                body.extend_from_slice(&id.to_le_bytes());
+            }
+        }
+        let mut crc = Fnv::new();
+        crc.update(&body);
+        let mut out = Vec::with_capacity(12 + body.len());
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&crc.0.to_le_bytes());
+        out
+    }
+
+    /// Decode one body (already checksum-verified). `None` = malformed.
+    fn decode(body: &[u8]) -> Option<Self> {
+        let (&op, rest) = body.split_first()?;
+        match op {
+            OP_INSERT => {
+                if rest.len() < 8 {
+                    return None;
+                }
+                let id = u32::from_le_bytes(rest[..4].try_into().unwrap());
+                let dim = u32::from_le_bytes(rest[4..8].try_into().unwrap()) as usize;
+                let tail = &rest[8..];
+                if tail.len() != dim * 4 {
+                    return None;
+                }
+                let row = tail
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                Some(WalRecord::Insert { id, row })
+            }
+            OP_DELETE => {
+                if rest.len() != 4 {
+                    return None;
+                }
+                let id = u32::from_le_bytes(rest.try_into().unwrap());
+                Some(WalRecord::Delete { id })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// The open log file. Created empty when absent; appends flush and
+/// fsync before returning so an acknowledged mutation survives a
+/// crash.
+pub struct Wal {
+    file: File,
+    path: PathBuf,
+    len: u64,
+}
+
+impl Wal {
+    /// Open (or create) the log at `path` and replay every intact
+    /// record. A torn or corrupt tail is truncated away with a
+    /// warning, never an error.
+    pub fn open(path: &Path) -> Result<(Self, Vec<WalRecord>)> {
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .open(path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        let mut bytes = Vec::new();
+        file.read_to_end(&mut bytes).context("reading WAL")?;
+
+        let mut records = Vec::new();
+        let mut good_end = 0usize;
+        let mut off = 0usize;
+        loop {
+            if off + 4 > bytes.len() {
+                break; // torn inside the length prefix (or clean EOF)
+            }
+            let body_len = u32::from_le_bytes(bytes[off..off + 4].try_into().unwrap()) as usize;
+            if body_len == 0 || body_len > MAX_BODY {
+                break; // implausible length — corrupt from here on
+            }
+            let body_start = off + 4;
+            let crc_start = body_start + body_len;
+            if crc_start + 8 > bytes.len() {
+                break; // torn inside the body or checksum
+            }
+            let body = &bytes[body_start..crc_start];
+            let mut crc = Fnv::new();
+            crc.update(body);
+            if u64::from_le_bytes(bytes[crc_start..crc_start + 8].try_into().unwrap()) != crc.0 {
+                break; // checksum mismatch — record never fully committed
+            }
+            let Some(rec) = WalRecord::decode(body) else {
+                break; // checksummed but structurally invalid
+            };
+            records.push(rec);
+            off = crc_start + 8;
+            good_end = off;
+        }
+        if good_end < bytes.len() {
+            crate::log_warn!(
+                "WAL {}: dropping {} torn/corrupt byte(s) after {} intact record(s)",
+                path.display(),
+                bytes.len() - good_end,
+                records.len()
+            );
+            file.set_len(good_end as u64).context("truncating torn WAL tail")?;
+        }
+        file.seek(SeekFrom::Start(good_end as u64))?;
+        Ok((Self { file, path: path.to_path_buf(), len: good_end as u64 }, records))
+    }
+
+    /// Append one record durably (write + flush + fdatasync).
+    pub fn append(&mut self, rec: &WalRecord) -> Result<()> {
+        if let WalRecord::Insert { row, .. } = rec {
+            if row.len() * 4 + 9 > MAX_BODY {
+                bail!("row too large for a WAL record ({} dims)", row.len());
+            }
+        }
+        let frame = rec.encode();
+        self.file.write_all(&frame).context("appending WAL record")?;
+        self.file.sync_data().context("syncing WAL")?;
+        self.len += frame.len() as u64;
+        Ok(())
+    }
+
+    /// Drop every record (after a compaction has folded them into the
+    /// base segment).
+    pub fn reset(&mut self) -> Result<()> {
+        self.file.set_len(0).context("resetting WAL")?;
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.sync_data()?;
+        self.len = 0;
+        Ok(())
+    }
+
+    /// Current log size in bytes.
+    pub fn len_bytes(&self) -> u64 {
+        self.len
+    }
+
+    /// Where the log lives.
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("knng_store_wal_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        let _ = std::fs::remove_file(&p);
+        p
+    }
+
+    fn sample() -> Vec<WalRecord> {
+        vec![
+            WalRecord::Insert { id: 7, row: vec![1.0, -2.5, 3.25] },
+            WalRecord::Delete { id: 3 },
+            WalRecord::Insert { id: 8, row: vec![0.0; 17] },
+            WalRecord::Delete { id: 7 },
+        ]
+    }
+
+    #[test]
+    fn roundtrip_replays_in_order() {
+        let path = tmp("rt.wal");
+        let (mut wal, replayed) = Wal::open(&path).unwrap();
+        assert!(replayed.is_empty());
+        for r in sample() {
+            wal.append(&r).unwrap();
+        }
+        drop(wal);
+        let (wal, replayed) = Wal::open(&path).unwrap();
+        assert_eq!(replayed, sample());
+        assert_eq!(wal.len_bytes(), std::fs::metadata(&path).unwrap().len());
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_at_every_cut() {
+        let full = tmp("torn_src.wal");
+        let (mut wal, _) = Wal::open(&full).unwrap();
+        for r in sample() {
+            wal.append(&r).unwrap();
+        }
+        drop(wal);
+        let bytes = std::fs::read(&full).unwrap();
+        let last_start = {
+            // sum of the first three frame lengths
+            sample()[..3].iter().map(|r| r.encode().len()).sum::<usize>()
+        };
+        // cut anywhere inside the fourth record: the first three survive
+        for cut in last_start + 1..bytes.len() {
+            let path = tmp("torn.wal");
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let (mut wal, replayed) = Wal::open(&path).unwrap();
+            assert_eq!(replayed, sample()[..3], "cut at {cut}");
+            assert_eq!(
+                std::fs::metadata(&path).unwrap().len(),
+                last_start as u64,
+                "cut at {cut} must truncate back to the last good record"
+            );
+            // and the log accepts appends again from the clean boundary
+            wal.append(&WalRecord::Delete { id: 99 }).unwrap();
+            drop(wal);
+            let (_, replayed) = Wal::open(&path).unwrap();
+            assert_eq!(replayed.len(), 4);
+            assert_eq!(replayed[3], WalRecord::Delete { id: 99 });
+        }
+    }
+
+    #[test]
+    fn corrupt_record_drops_it_and_everything_after() {
+        let path = tmp("corrupt.wal");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        for r in sample() {
+            wal.append(&r).unwrap();
+        }
+        drop(wal);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let second_start = sample()[0].encode().len();
+        bytes[second_start + 6] ^= 0x40; // flip a bit in record 2's body
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, replayed) = Wal::open(&path).unwrap();
+        assert_eq!(replayed, sample()[..1], "only the record before the corruption survives");
+        assert_eq!(
+            std::fs::metadata(&path).unwrap().len(),
+            second_start as u64
+        );
+    }
+
+    #[test]
+    fn implausible_length_prefix_is_treated_as_torn() {
+        let path = tmp("hugelen.wal");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        wal.append(&WalRecord::Delete { id: 1 }).unwrap();
+        drop(wal);
+        let mut bytes = std::fs::read(&path).unwrap();
+        let good = bytes.len();
+        bytes.extend_from_slice(&u32::MAX.to_le_bytes()); // 4 GiB "record"
+        bytes.extend_from_slice(&[0xAA; 32]);
+        std::fs::write(&path, &bytes).unwrap();
+        let (_, replayed) = Wal::open(&path).unwrap();
+        assert_eq!(replayed.len(), 1);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), good as u64);
+    }
+
+    #[test]
+    fn reset_clears_the_log() {
+        let path = tmp("reset.wal");
+        let (mut wal, _) = Wal::open(&path).unwrap();
+        for r in sample() {
+            wal.append(&r).unwrap();
+        }
+        wal.reset().unwrap();
+        assert_eq!(wal.len_bytes(), 0);
+        wal.append(&WalRecord::Insert { id: 42, row: vec![5.0] }).unwrap();
+        drop(wal);
+        let (_, replayed) = Wal::open(&path).unwrap();
+        assert_eq!(replayed, vec![WalRecord::Insert { id: 42, row: vec![5.0] }]);
+    }
+}

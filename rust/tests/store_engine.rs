@@ -1,0 +1,463 @@
+//! Storage-engine integration: the acceptance gates for the `KNNIv2`
+//! zero-copy segment + WAL-backed delta + compaction stack.
+//!
+//! * `KNNIv1` → `KNNIv2` conversion answers bit-identically to the
+//!   legacy bundle it came from.
+//! * mmap and heap-copy modes parse identical bytes and answer
+//!   bit-identically; the mmap open copies no corpus bytes.
+//! * Inserts and deletes are visible to the next query, survive a
+//!   simulated crash via WAL replay, and a torn WAL tail replays only
+//!   the records that provably committed.
+//! * Tombstoned base ids never surface in results.
+//! * After `compact()` the in-memory state answers bit-identically to
+//!   a fresh open of the compacted segment, within a recall gate
+//!   against brute force over the live rows.
+//! * The same mutations work over the wire against a server with a
+//!   mutable store attached; read-only servers reject them typed.
+
+use knng::api::{FrontConfig, Neighbor, OriginalId, Searcher, ServeFront};
+use knng::dataset::clustered::SynthClustered;
+use knng::dataset::AlignedMatrix;
+use knng::net::{NetClient, NetServer, ServerConfig, ServerHandle};
+use knng::nndescent::Params;
+use knng::search::SearchParams;
+use knng::store::{
+    convert_v1_to_v2, BaseSegment, MutableIndex, SharedMutableIndex, StoreConfig, StoreMode,
+};
+use knng::testing::assert_neighbors_bitwise_eq;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+/// Rows `[from, from+count)` of `data` as a fresh matrix.
+fn slice_rows(data: &AlignedMatrix, from: usize, count: usize) -> AlignedMatrix {
+    let rows: Vec<f32> =
+        (from..from + count).flat_map(|i| data.row_logical(i).to_vec()).collect();
+    AlignedMatrix::from_rows(count, data.dim(), &rows)
+}
+
+/// A fresh scratch dir per test (parallel tests must not collide).
+fn scratch_dir(name: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("knng_store_engine_{name}"));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Corpus + queries + a built `Index` saved as a `KNNIv2` segment at
+/// `<dir>/base.knni2`. Returns (corpus, queries, segment path).
+fn build_segment(
+    dir: &Path,
+    n: usize,
+    n_queries: usize,
+    dim: usize,
+    seed: u64,
+    reorder: bool,
+) -> (AlignedMatrix, AlignedMatrix, PathBuf) {
+    let (all, _) = SynthClustered::new(n + n_queries, dim, 6, seed).generate_labeled();
+    let corpus = slice_rows(&all, 0, n);
+    let queries = slice_rows(&all, n, n_queries);
+    let params = Params::default().with_k(10).with_seed(seed).with_reorder(reorder);
+    let index = knng::api::IndexBuilder::new().data(corpus.clone()).params(params).build().unwrap();
+    let path = dir.join("base.knni2");
+    index.save_segment(&path).unwrap();
+    (corpus, queries, path)
+}
+
+/// A config that never auto-compacts, so tests control the fold.
+fn manual_cfg() -> StoreConfig {
+    StoreConfig { auto_compact_ratio: 0.0, ..Default::default() }
+}
+
+/// A row far outside the synthetic clusters — uniquely identifiable by
+/// a zero-distance self-query.
+fn beacon_row(dim: usize, salt: f32) -> Vec<f32> {
+    (0..dim).map(|j| 1000.0 + salt + j as f32).collect()
+}
+
+#[test]
+fn v1_to_v2_conversion_answers_bitwise_identically() {
+    // the format acceptance gate: a legacy KNNIv1 bundle converted to
+    // a KNNIv2 segment serves the same ids and the same distance BITS
+    // through the same MutableIndex facade
+    let dir = scratch_dir("v1_to_v2");
+    let (all, _) = SynthClustered::new(640, 12, 5, 41).generate_labeled();
+    let corpus = slice_rows(&all, 0, 560);
+    let queries = slice_rows(&all, 560, 80);
+    let params = Params::default().with_k(10).with_seed(41).with_reorder(true);
+    let index = knng::api::IndexBuilder::new().data(corpus).params(params).build().unwrap();
+
+    let v1 = dir.join("legacy.knni");
+    let v2 = dir.join("converted.knni2");
+    index.save(&v1).unwrap();
+    convert_v1_to_v2(&v1, &v2).unwrap();
+
+    let legacy = MutableIndex::open_with(&v1, manual_cfg()).unwrap();
+    let converted = MutableIndex::open_with(&v2, manual_cfg()).unwrap();
+    assert!(matches!(legacy.base(), BaseSegment::Legacy(_)), "v1 must take the legacy path");
+    assert!(matches!(converted.base(), BaseSegment::V2(_)), "v2 must take the segment path");
+    assert_eq!(legacy.len(), converted.len());
+    assert_eq!(legacy.dim(), converted.dim());
+    assert_eq!(converted.generation(), 0);
+
+    for sp in [SearchParams::default(), SearchParams { ef: 64, ..Default::default() }] {
+        let (a, _) = legacy.search_batch(&queries, 8, &sp);
+        let (b, _) = converted.search_batch(&queries, 8, &sp);
+        assert_neighbors_bitwise_eq(&a, &b, "KNNIv1 vs converted KNNIv2");
+    }
+}
+
+#[test]
+fn mmap_and_copy_modes_are_bitwise_interchangeable() {
+    let dir = scratch_dir("modes");
+    let (_corpus, queries, path) = build_segment(&dir, 520, 60, 16, 43, false);
+
+    let mmap = MutableIndex::open_with(
+        &path,
+        StoreConfig { mode: Some(StoreMode::Mmap), ..manual_cfg() },
+    )
+    .unwrap();
+    let copy = MutableIndex::open_with(
+        &path,
+        StoreConfig { mode: Some(StoreMode::Copy), ..manual_cfg() },
+    )
+    .unwrap();
+    assert_eq!(mmap.len(), 520);
+    assert_eq!(copy.len(), 520);
+
+    let sp = SearchParams::default();
+    let (a, _) = mmap.search_batch(&queries, 10, &sp);
+    let (b, _) = copy.search_batch(&queries, 10, &sp);
+    assert_neighbors_bitwise_eq(&a, &b, "mmap vs heap-copy");
+}
+
+#[cfg(unix)]
+#[test]
+fn mmap_open_serves_the_corpus_zero_copy() {
+    // the tentpole gate: opening a KNNIv2 segment under mmap backs the
+    // data matrix with the mapping itself — no full-corpus heap copy
+    let dir = scratch_dir("zero_copy");
+    let (_corpus, queries, path) = build_segment(&dir, 480, 20, 12, 47, true);
+
+    let store = MutableIndex::open_with(
+        &path,
+        StoreConfig { mode: Some(StoreMode::Mmap), ..manual_cfg() },
+    )
+    .unwrap();
+    match store.base() {
+        BaseSegment::V2(seg) => {
+            assert_eq!(seg.mode(), StoreMode::Mmap);
+            assert!(
+                !seg.data().is_owned(),
+                "data matrix must borrow the mapping, not own a heap copy"
+            );
+        }
+        BaseSegment::Legacy(_) => panic!("KNNIv2 segment opened through the legacy path"),
+    }
+    // ...and it still answers
+    let (res, _) = store.search_batch(&queries, 5, &SearchParams::default());
+    assert!(res.iter().all(|r| r.len() == 5));
+}
+
+#[test]
+fn inserts_and_deletes_are_visible_to_the_next_query() {
+    let dir = scratch_dir("visibility");
+    let (_corpus, _queries, path) = build_segment(&dir, 400, 10, 8, 53, false);
+    let mut store = MutableIndex::open_with(&path, manual_cfg()).unwrap();
+    let dim = store.dim();
+    let sp = SearchParams::default();
+
+    let beacon = beacon_row(dim, 0.0);
+    store.insert(90_001, &beacon).unwrap();
+    assert_eq!(store.len(), 401);
+    assert_eq!(store.delta_len(), 1);
+
+    let (hits, _) = store.search(&beacon, 3, &sp);
+    assert_eq!(hits[0].id, OriginalId(90_001), "inserted row must win its own query");
+    assert_eq!(hits[0].dist.to_bits(), 0.0f32.to_bits(), "self-distance must be exactly zero");
+
+    assert!(store.delete(90_001).unwrap(), "live id must report deleted");
+    assert_eq!(store.len(), 400);
+    let (hits, _) = store.search(&beacon, 3, &sp);
+    assert!(hits.iter().all(|nb| nb.id != OriginalId(90_001)), "deleted id resurfaced");
+    assert!(!store.delete(90_001).unwrap(), "double-delete must be a reported no-op");
+}
+
+#[test]
+fn wal_replay_restores_the_exact_pre_crash_answers() {
+    // simulated crash: drop the handle without compacting, reopen, and
+    // the replayed state must answer bitwise-identically
+    let dir = scratch_dir("wal_replay");
+    let (corpus, queries, path) = build_segment(&dir, 450, 40, 12, 59, false);
+    let sp = SearchParams::default();
+
+    let before = {
+        let mut store = MutableIndex::open_with(&path, manual_cfg()).unwrap();
+        for i in 0..12u32 {
+            store.insert(80_000 + i, corpus.row_logical(i as usize)).unwrap();
+        }
+        for id in [3u32, 44, 101] {
+            assert!(store.delete(id).unwrap());
+        }
+        assert_eq!(store.delta_len(), 12);
+        assert_eq!(store.tombstone_count(), 3);
+        let (res, _) = store.search_batch(&queries, 10, &sp);
+        res
+        // handle dropped here: nothing flushed beyond the WAL appends
+    };
+
+    let store = MutableIndex::open_with(&path, manual_cfg()).unwrap();
+    assert_eq!(store.delta_len(), 12, "replay must restore every delta row");
+    assert_eq!(store.tombstone_count(), 3, "replay must restore every tombstone");
+    let (after, _) = store.search_batch(&queries, 10, &sp);
+    assert_neighbors_bitwise_eq(&before, &after, "pre-crash vs replayed");
+}
+
+#[test]
+fn torn_wal_tail_replays_only_complete_records() {
+    let dir = scratch_dir("torn_tail");
+    let (_corpus, _queries, path) = build_segment(&dir, 300, 10, 8, 61, false);
+    let dim = 8;
+    {
+        let mut store = MutableIndex::open_with(&path, manual_cfg()).unwrap();
+        store.insert(70_001, &beacon_row(dim, 1.0)).unwrap();
+        store.insert(70_002, &beacon_row(dim, 2.0)).unwrap();
+    }
+    let wal_path = {
+        let mut os = path.as_os_str().to_os_string();
+        os.push(".wal");
+        PathBuf::from(os)
+    };
+    let pristine = std::fs::read(&wal_path).unwrap();
+    // record = len u32 | body | crc u64
+    let body1 = u32::from_le_bytes(pristine[..4].try_into().unwrap()) as usize;
+    let rec1_end = 4 + body1 + 8;
+    assert!(pristine.len() > rec1_end, "expected a second record after byte {rec1_end}");
+
+    // scenario 1: the crash tore the second append mid-record
+    std::fs::write(&wal_path, &pristine[..rec1_end + 5]).unwrap();
+    {
+        let mut store = MutableIndex::open_with(&path, manual_cfg()).unwrap();
+        assert_eq!(store.delta_len(), 1, "only the complete record may replay");
+        assert_eq!(
+            store.wal_bytes(),
+            rec1_end as u64,
+            "open must truncate the torn tail back to the last good record"
+        );
+        assert!(store.delete(70_001).unwrap(), "replayed insert must be live");
+        assert!(!store.delete(70_002).unwrap(), "torn insert must NOT be live");
+    }
+
+    // scenario 2: the second record is complete but its body is corrupt
+    let mut corrupt = pristine.clone();
+    corrupt[rec1_end + 6] ^= 0xFF; // a body byte of record 2
+    std::fs::write(&wal_path, &corrupt).unwrap();
+    {
+        let mut store = MutableIndex::open_with(&path, manual_cfg()).unwrap();
+        assert_eq!(store.delta_len(), 1, "checksum-failing record must not replay");
+        assert!(store.delete(70_001).unwrap());
+        assert!(!store.delete(70_002).unwrap());
+    }
+}
+
+#[test]
+fn tombstoned_base_ids_never_surface() {
+    let dir = scratch_dir("tombstones");
+    let (_corpus, queries, path) = build_segment(&dir, 500, 30, 12, 67, true);
+    let mut store = MutableIndex::open_with(&path, manual_cfg()).unwrap();
+    let sp = SearchParams { ef: 64, ..Default::default() };
+    let k = 8;
+
+    // delete every query's current best answer, then re-ask
+    let (before, _) = store.search_batch(&queries, k, &sp);
+    let victims: std::collections::HashSet<u32> =
+        before.iter().map(|r| r[0].id.get()).collect();
+    for &id in &victims {
+        assert!(store.delete(id).unwrap(), "base id {id} must be live before masking");
+    }
+    assert_eq!(store.tombstone_count(), victims.len());
+
+    let (after, _) = store.search_batch(&queries, k, &sp);
+    for (qi, res) in after.iter().enumerate() {
+        assert_eq!(res.len(), k, "masking must not starve query {qi} below k");
+        for nb in res {
+            assert!(!victims.contains(&nb.id.get()), "query {qi} surfaced tombstoned id {}", nb.id.get());
+        }
+    }
+}
+
+/// Exact top-`k` external ids by brute force over `(id, row)` pairs.
+fn exact_topk(live: &[(u32, Vec<f32>)], query: &[f32], k: usize) -> Vec<u32> {
+    let mut scored: Vec<(f32, u32)> = live
+        .iter()
+        .map(|(id, row)| {
+            let d: f32 = row.iter().zip(query).map(|(a, b)| (a - b) * (a - b)).sum();
+            (d, *id)
+        })
+        .collect();
+    scored.sort_unstable_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    scored.into_iter().take(k).map(|(_, id)| id).collect()
+}
+
+#[test]
+fn compaction_matches_a_fresh_open_bitwise_within_a_recall_gate() {
+    let dir = scratch_dir("compaction");
+    let n = 500;
+    let (corpus, queries, path) = build_segment(&dir, n, 40, 12, 71, false);
+    let (extra, _) = SynthClustered::new(60, 12, 6, 72).generate_labeled();
+    let mut store = MutableIndex::open_with(&path, manual_cfg()).unwrap();
+
+    for i in 0..extra.n() {
+        store.insert(60_000 + i as u32, extra.row_logical(i)).unwrap();
+    }
+    let deleted: Vec<u32> = (0..20).collect();
+    for &id in &deleted {
+        assert!(store.delete(id).unwrap());
+    }
+
+    let stats = store.compact().unwrap();
+    assert_eq!(stats.rows, n - 20 + 60);
+    assert_eq!(stats.folded, 60);
+    assert_eq!(stats.dropped, 20);
+    assert_eq!(stats.generation, 1);
+    assert_eq!(store.generation(), 1);
+    assert_eq!(store.len(), n - 20 + 60);
+    assert_eq!(store.delta_len(), 0, "compaction must empty the delta");
+    assert_eq!(store.tombstone_count(), 0, "compaction must clear the tombstones");
+    assert_eq!(store.wal_bytes(), 0, "compaction must reset the WAL");
+
+    // the durability gate: post-compaction in-memory state IS a fresh
+    // open of the segment on disk, bit for bit
+    let sp = SearchParams { ef: 64, ..Default::default() };
+    let k = 10;
+    let (in_memory, _) = store.search_batch(&queries, k, &sp);
+    let fresh = MutableIndex::open_with(&path, manual_cfg()).unwrap();
+    assert_eq!(fresh.generation(), 1);
+    assert_eq!(fresh.len(), store.len());
+    let (reopened, _) = fresh.search_batch(&queries, k, &sp);
+    assert_neighbors_bitwise_eq(&in_memory, &reopened, "post-compact vs fresh open");
+
+    // the quality gate: the repaired graph still finds the true
+    // neighbors of the mutated corpus
+    let live: Vec<(u32, Vec<f32>)> = (0..n as u32)
+        .filter(|id| !deleted.contains(id))
+        .map(|id| (id, corpus.row_logical(id as usize).to_vec()))
+        .chain((0..extra.n()).map(|i| (60_000 + i as u32, extra.row_logical(i).to_vec())))
+        .collect();
+    let mut hit = 0usize;
+    let mut total = 0usize;
+    for (qi, res) in in_memory.iter().enumerate() {
+        let exact = exact_topk(&live, queries.row_logical(qi), k);
+        let got: std::collections::HashSet<u32> = res.iter().map(|nb| nb.id.get()).collect();
+        hit += exact.iter().filter(|id| got.contains(id)).count();
+        total += exact.len();
+    }
+    let recall = hit as f64 / total as f64;
+    assert!(recall >= 0.80, "post-compaction recall {recall:.3} fell below the 0.80 gate");
+}
+
+#[test]
+fn legacy_v1_bundles_keep_serving_through_the_facade() {
+    let dir = scratch_dir("legacy");
+    let (all, _) = SynthClustered::new(460, 8, 4, 73).generate_labeled();
+    let corpus = slice_rows(&all, 0, 400);
+    let queries = slice_rows(&all, 400, 60);
+    let params = Params::default().with_k(8).with_seed(73).with_reorder(true);
+    let index = knng::api::IndexBuilder::new().data(corpus).params(params).build().unwrap();
+    let v1 = dir.join("legacy.knni");
+    index.save(&v1).unwrap();
+
+    let sp = SearchParams::default();
+    let (expect, _) = index.search_batch(&queries, 6, &sp);
+    let store = MutableIndex::open(&v1).unwrap();
+    assert_eq!(store.generation(), 0, "legacy bundles predate the generation counter");
+    let (got, _) = store.search_batch(&queries, 6, &sp);
+    assert_neighbors_bitwise_eq(&expect, &got, "Index::load vs MutableIndex facade");
+}
+
+/// Front + server over one `SharedMutableIndex` clone pair.
+fn spawn_store_server(path: &Path, attach_store: bool) -> (SharedMutableIndex, ServerHandle) {
+    let shared = SharedMutableIndex::open_with(path, manual_cfg()).unwrap();
+    let dim = shared.dim();
+    let front_cfg = FrontConfig {
+        k: 3,
+        params: SearchParams::default(),
+        max_batch: 16,
+        max_wait: Duration::from_millis(2),
+        ..Default::default()
+    };
+    let front = ServeFront::spawn(shared.clone(), dim, front_cfg).unwrap();
+    let server_cfg = ServerConfig {
+        workers: 2,
+        read_timeout: Duration::from_secs(10),
+        write_timeout: Duration::from_secs(10),
+        ..Default::default()
+    };
+    let server = NetServer::bind("127.0.0.1:0", front, server_cfg).unwrap();
+    let server = if attach_store { server.with_store(shared.clone()) } else { server };
+    (shared, server.spawn().unwrap())
+}
+
+#[test]
+fn mutations_over_the_wire_are_visible_to_the_next_query() {
+    let dir = scratch_dir("wire_mutations");
+    let (_corpus, _queries, path) = build_segment(&dir, 420, 10, 8, 79, false);
+    let (shared, handle) = spawn_store_server(&path, true);
+    let dim = 8;
+
+    let mut client = NetClient::connect(handle.addr()).unwrap();
+    let info = client.ping().unwrap();
+    assert_eq!(info.n, 420, "ping must report the store's live count");
+    let gen0 = shared.generation();
+
+    // insert, then find the row through the batching front
+    let beacon = beacon_row(dim, 9.0);
+    let (generation, live) = client.insert(77_000, &beacon).unwrap();
+    assert_eq!(generation, gen0);
+    assert_eq!(live, 421);
+    let tile = AlignedMatrix::from_rows(1, dim, &beacon);
+    let (res, _) = client.query_batch(&tile, 3, None).unwrap();
+    assert_eq!(res[0][0].id, OriginalId(77_000), "wire insert invisible to wire query");
+    assert_eq!(res[0][0].dist.to_bits(), 0.0f32.to_bits());
+
+    // delete: gone from the very next query
+    let (was_live, _, live) = client.delete(77_000).unwrap();
+    assert!(was_live);
+    assert_eq!(live, 420);
+    let (res, _) = client.query_batch(&tile, 3, None).unwrap();
+    assert!(res[0].iter().all(|nb: &Neighbor| nb.id != OriginalId(77_000)));
+    let (was_live, _, _) = client.delete(77_000).unwrap();
+    assert!(!was_live, "double delete must report a no-op, not fail");
+
+    // compact over the wire: generation bumps, the answers keep coming
+    let (generation, live) = client.compact().unwrap();
+    assert_eq!(generation, gen0 + 1);
+    assert_eq!(live, 420);
+    assert_eq!(shared.generation(), gen0 + 1);
+    let (res, _) = client.query_batch(&tile, 3, None).unwrap();
+    assert_eq!(res[0].len(), 3);
+    assert_eq!(client.ping().unwrap().n, 420);
+
+    drop(client);
+    let (net, _front) = handle.stop().unwrap();
+    assert_eq!(net.protocol_errors, 0);
+}
+
+#[test]
+fn read_only_servers_reject_mutations_with_a_typed_error() {
+    let dir = scratch_dir("read_only");
+    let (_corpus, _queries, path) = build_segment(&dir, 300, 10, 8, 83, false);
+    let (_shared, handle) = spawn_store_server(&path, false);
+
+    let mut client = NetClient::connect(handle.addr()).unwrap();
+    let err = client.insert(1, &beacon_row(8, 0.0)).unwrap_err();
+    assert!(
+        err.to_string().contains("read-only"),
+        "expected a read-only rejection, got: {err:#}"
+    );
+    // the connection survives the rejection
+    let info = client.ping().unwrap();
+    assert_eq!(info.dim, 8);
+
+    drop(client);
+    handle.stop().unwrap();
+}
