@@ -1,5 +1,5 @@
 //! Fault-tolerance cost — what degraded serving does to latency and
-//! answer quality. Three modes over the same S=4 `ShardPool`, one
+//! answer quality. Seven modes over the same S=4 `ShardPool`, one
 //! query per request:
 //!
 //! * **healthy** — all shards answering, no deadline. Asserted in-bench
@@ -12,6 +12,19 @@
 //! * **deadline-capped** — healthy pool, but every query carries a
 //!   budget derived from the healthy p50, so a tail of batches drops
 //!   late shards. Reports the degraded fraction and resulting recall.
+//! * **replicated R=2, healthy** — two workers per shard over one
+//!   shared `Arc<Shard>`. The replication gate: bit-identical to the
+//!   R=1 pool and the inline fan-out.
+//! * **straggler R=1** — shard 0's worker stalls before every reply
+//!   and there is no replica to hedge to: every query eats the stall.
+//!   The latency baseline hedging is measured against.
+//! * **hedged straggler R=2** — same stall, but past the hedge delay
+//!   the shard re-dispatches to replica 1 and the first reply wins:
+//!   p50 collapses from the stall to roughly the hedge delay, still
+//!   bit-identical, zero degradation.
+//! * **dead primary R=2** — shard 0's primary killed and buried; every
+//!   batch fails over to replica 1 in-batch. The failover gate: full
+//!   fan-out bits, zero degradation tags.
 //!
 //! Run: `cargo bench --bench bench_fault_tolerance`
 
@@ -157,7 +170,7 @@ fn main() {
     {
         let pool = ShardPool::with_config(
             &sharded,
-            PoolConfig { threads: 4, respawn_budget: 0 },
+            PoolConfig { threads: 4, respawn_budget: 0, ..Default::default() },
         )
         .unwrap();
         // kill worker 0 on its first job and bury shard 0; two warm-up
@@ -198,6 +211,118 @@ fn main() {
         let misses = pool.stats().deadline_misses;
         println!("deadline-capped: {degraded}/{n_queries} degraded, {misses} shard misses");
     }
+
+    // ---- replicated R=2, healthy: replication is behavior-drift-free -
+    {
+        let pool = ShardPool::with_config(
+            &sharded,
+            PoolConfig { threads: 4, replicas: 2, ..Default::default() },
+        )
+        .unwrap();
+        let (answers, lats, degraded, qps) = run_mode(&pool, &qmat, k, &sp, None);
+        // the replication acceptance gate: R=2 answers are bit-identical
+        // to the R=1 pool (== the inline fan-out, by the healthy gate)
+        knng::testing::assert_neighbors_bitwise_eq(
+            &expect,
+            &answers,
+            "healthy R=2 pool vs inline fan-out",
+        );
+        assert_eq!(degraded, 0, "a healthy replicated pool must not degrade");
+        println!("bit-identity gate: R=2 answers == R=1 answers == inline search_batch");
+        emit(&mut table, "replicated_r2", &lats, qps, 1.0, degraded);
+    }
+
+    // both straggler modes stall shard 0's primary by the same amount
+    // before every reply; only R differs
+    let stall = Duration::from_micros(2_000);
+    let hedge_us = 200u64;
+
+    // ---- straggler R=1: no replica to hedge to — eat the stall -------
+    {
+        let pool = ShardPool::new(&sharded, 4).unwrap();
+        faults::install(FaultPlan::new().delay_always(site::WORKER_REPLY, 0, stall));
+        let (answers, lats, degraded, qps) = run_mode(&pool, &qmat, k, &sp, None);
+        faults::clear();
+        knng::testing::assert_neighbors_bitwise_eq(
+            &expect,
+            &answers,
+            "straggler R=1 vs inline fan-out",
+        );
+        assert_eq!(degraded, 0, "a slow shard without a deadline must not degrade");
+        emit(&mut table, "straggler_r1", &lats, qps, 1.0, degraded);
+    }
+
+    // ---- hedged straggler R=2: the hedge caps the stall --------------
+    {
+        let pool = ShardPool::with_config(
+            &sharded,
+            PoolConfig { threads: 4, replicas: 2, hedge_us, ..Default::default() },
+        )
+        .unwrap();
+        faults::install(FaultPlan::new().delay_always(site::WORKER_REPLY, 0, stall));
+        let (answers, lats, degraded, qps) = run_mode(&pool, &qmat, k, &sp, None);
+        // clear before the pool drops so the stalled primary's job
+        // backlog drains undelayed
+        faults::clear();
+        knng::testing::assert_neighbors_bitwise_eq(
+            &expect,
+            &answers,
+            "hedged straggler R=2 vs inline fan-out",
+        );
+        assert_eq!(degraded, 0, "a hedged straggler must not degrade");
+        let stats = pool.stats();
+        assert!(stats.hedges_sent > 0, "the stall must trigger hedges: {stats:?}");
+        assert!(stats.hedge_wins > 0, "the replica must win hedges: {stats:?}");
+        println!(
+            "hedged straggler: {} hedges sent, {} won (hedge delay {hedge_us} µs, stall {stall:?})",
+            stats.hedges_sent, stats.hedge_wins
+        );
+        emit(&mut table, "hedged_straggler_r2", &lats, qps, 1.0, degraded);
+    }
+
+    // ---- dead primary R=2: in-batch failover, zero degradation -------
+    {
+        let pool = ShardPool::with_config(
+            &sharded,
+            PoolConfig { threads: 4, replicas: 2, respawn_budget: 0, ..Default::default() },
+        )
+        .unwrap();
+        // kill shard 0's primary on its first job; warm-up batches make
+        // the burial deterministic before timing starts
+        faults::install(FaultPlan::new().die_always(site::WORKER_JOB, 0));
+        for _ in 0..2 {
+            let tile = Arc::new(AlignedMatrix::from_rows(1, dim, qmat.row_logical(0)));
+            let _ = pool.search_batch_deadline_owned(tile, k, &sp, None, None);
+        }
+        faults::clear();
+        let stats = pool.stats();
+        assert!(
+            stats.dead_shards().is_empty(),
+            "replica 1 must keep shard 0 alive: {stats:?}"
+        );
+        assert_eq!(
+            stats.replica_states[0][0],
+            knng::api::ShardState::Dead,
+            "shard 0's primary must be buried: {stats:?}"
+        );
+
+        let (answers, lats, degraded, qps) = run_mode(&pool, &qmat, k, &sp, None);
+        // the failover acceptance gate: a dead primary costs zero
+        // answers — full fan-out bits, zero degradation tags
+        knng::testing::assert_neighbors_bitwise_eq(
+            &expect,
+            &answers,
+            "dead-primary R=2 pool vs inline fan-out",
+        );
+        assert_eq!(degraded, 0, "failover must replace degradation");
+        let stats = pool.stats();
+        assert!(
+            stats.failovers as usize >= n_queries,
+            "every batch must fail over: {stats:?}"
+        );
+        println!("dead primary: {} failovers, 0 degraded", stats.failovers);
+        emit(&mut table, "replica_dead_r2", &lats, qps, 1.0, degraded);
+    }
     table.finish();
 
     write_bench_json(
@@ -211,6 +336,7 @@ fn main() {
             ("queries", Json::Int(n_queries as u64)),
             ("shards", Json::Int(4)),
             ("healthy_bit_identical_to_inline", Json::Bool(true)),
+            ("r2_bit_identical_to_r1", Json::Bool(true)),
             ("detected_kernel", Json::s(dispatch::detect().name())),
             ("rows", Json::Arr(json_rows)),
         ]),

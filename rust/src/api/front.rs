@@ -88,7 +88,23 @@ pub struct FrontConfig {
     /// lists only, so with the front's `k`/`params`/`route_top_m`
     /// fixed for its lifetime, cache-on and cache-off answers are
     /// bit-identical: a hit replays a previous window's exact result.
+    /// Over a *mutable* searcher the cache additionally flushes itself
+    /// whenever [`Searcher::cache_epoch`] advances (an applied insert,
+    /// delete, or compaction), so the bit-identity contract holds
+    /// across mutations too.
     pub answer_cache: usize,
+    /// Shard replica sets the serving stack runs with (R ≥ 1; the
+    /// [`PoolConfig::replicas`](super::serve::PoolConfig::replicas)
+    /// knob). The front does not build the pool itself — the value is
+    /// carried here so the one config the serving edge (CLI, `knng
+    /// serve`) assembles names the whole stack, and so introspection
+    /// of a front reports the replication it was configured for.
+    pub replicas: usize,
+    /// Hedge delay in microseconds for straggling shards
+    /// ([`PoolConfig::hedge_us`](super::serve::PoolConfig::hedge_us));
+    /// `0` disables hedging. Carried for the same reason as
+    /// [`replicas`](Self::replicas).
+    pub hedge_us: u64,
 }
 
 impl Default for FrontConfig {
@@ -101,6 +117,8 @@ impl Default for FrontConfig {
             queue_depth: 1024,
             route_top_m: None,
             answer_cache: 0,
+            replicas: 1,
+            hedge_us: 0,
         }
     }
 }
@@ -405,6 +423,7 @@ fn dispatch_loop<S: Searcher>(
     counters: Arc<Counters>,
 ) {
     let mut cache = AnswerCache::new(cfg.answer_cache);
+    let mut cache_epoch = searcher.cache_epoch();
     loop {
         let first = match rx.recv() {
             Ok(r) => r,
@@ -419,6 +438,17 @@ fn dispatch_loop<S: Searcher>(
                 Err(mpsc::RecvTimeoutError::Timeout) => break,
                 Err(mpsc::RecvTimeoutError::Disconnected) => break,
             }
+        }
+        // a mutable searcher's answers change when its epoch moves
+        // (insert/delete/compaction applied): flush before consulting
+        // the cache, so every hit replays an answer from the *current*
+        // epoch. Any mutation that happens-before this window's first
+        // query is seen here — which is exactly the ordering the wire
+        // protocol's mutate-then-ack gives a client.
+        let epoch = searcher.cache_epoch();
+        if epoch != cache_epoch {
+            cache.clear();
+            cache_epoch = epoch;
         }
         serve_window(&searcher, dim, &cfg, window, &counters, &mut cache);
     }
@@ -458,6 +488,12 @@ impl AnswerCache {
             slot.0 = tick; // refresh recency
             slot.1.clone()
         })
+    }
+
+    /// Drop every cached answer (the mutation-epoch flush): the next
+    /// window re-executes everything it would otherwise have replayed.
+    fn clear(&mut self) {
+        self.map.clear();
     }
 
     fn insert(&mut self, row: &[f32], neighbors: &[Neighbor]) {
@@ -641,6 +677,24 @@ mod tests {
         assert!(cfg.max_wait > Duration::ZERO);
         // cache off by default: the historical behavior is the default
         assert_eq!(cfg.answer_cache, 0);
+        // replication and hedging are opt-in too
+        assert_eq!(cfg.replicas, 1);
+        assert_eq!(cfg.hedge_us, 0);
+    }
+
+    #[test]
+    fn answer_cache_clear_drops_everything() {
+        let mut cache = AnswerCache::new(4);
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0];
+        cache.insert(&a, &[Neighbor::new(1, 0.1)]);
+        cache.insert(&b, &[Neighbor::new(2, 0.2)]);
+        cache.clear();
+        assert!(cache.get(&a).is_none(), "epoch flush must drop every entry");
+        assert!(cache.get(&b).is_none());
+        // the cache stays usable after a flush
+        cache.insert(&a, &[Neighbor::new(3, 0.3)]);
+        assert_eq!(cache.get(&a).unwrap()[0].id.0, 3);
     }
 
     #[test]

@@ -82,6 +82,14 @@ impl std::fmt::Display for DegradeCause {
 pub struct Degradation {
     /// Shard slots missing from the merge, ascending, deduplicated.
     pub shards_missing: Vec<u32>,
+    /// How many replicas of each missing shard were dispatched to
+    /// before giving up, parallel to
+    /// [`shards_missing`](Self::shards_missing). `0` means the shard
+    /// was never dispatchable at all (every copy already dead, or the
+    /// deadline expired before dispatch); with a replicated pool a
+    /// value equal to R says the whole replica set was exhausted.
+    /// Unreplicated searchers report `1` per missing shard.
+    pub replicas_tried: Vec<u32>,
     /// The most severe reason among the missing shards.
     pub cause: DegradeCause,
 }
@@ -210,6 +218,18 @@ pub trait Searcher {
     /// dispatcher thread, which is how the serving edge (and the
     /// `KNNQv1` health frame) reads per-shard liveness.
     fn health_watch(&self) -> Option<super::serve::HealthWatch> {
+        None
+    }
+
+    /// A monotone epoch that advances whenever this searcher's answers
+    /// may change. `None` (the default) means the corpus is immutable
+    /// — cached answers never go stale. Mutable searchers
+    /// ([`SharedMutableIndex`](crate::store::SharedMutableIndex))
+    /// return `Some(epoch)` bumped on every applied insert, delete,
+    /// and compaction; the micro-batching front's answer cache flushes
+    /// itself whenever the epoch moves, which is what makes caching
+    /// safe over a mutating store.
+    fn cache_epoch(&self) -> Option<u64> {
         None
     }
 }

@@ -52,6 +52,31 @@
 //!   [`HealthWatch`] that survives the pool moving onto a front's
 //!   dispatcher thread.
 //!
+//! ## Replication, failover, hedging
+//!
+//! [`PoolConfig::replicas`] (R ≥ 1; default 1 = the unreplicated pool,
+//! bit for bit) materializes R workers per shard group over the *same*
+//! `Arc<Shard>`s — search scratch is per-worker, the corpus and graph
+//! are shared, so a replica costs scratch memory, not a corpus copy.
+//! Dispatch runs in **waves**: the first wave goes to the primary
+//! (replica 0); a shard whose reply comes back as a typed panic, or
+//! never comes back because its worker died, is re-dispatched in the
+//! next wave to the next live replica it has not tried yet
+//! (`failovers` counts those re-dispatches). With a hedge delay armed
+//! ([`PoolConfig::hedge_us`] or
+//! [`PoolConfig::hedge_deadline_fraction`]), a shard that is merely
+//! *slow* gets its job re-sent mid-wave to the next untried replica
+//! (`hedges_sent`); whichever copy answers first wins (`hedge_wins`)
+//! and the duplicate is discarded by shard slot. A shard enters the
+//! [`Degradation`] path only when **all** R replicas are gone or late.
+//!
+//! Replication preserves the determinism contract: every replica runs
+//! the identical computation over the identical shard, so its reply is
+//! bit-identical by the same T-invariance argument as above — which
+//! replica wins a hedge race cannot change a single bit of the answer.
+//! The chaos suite asserts this with one replica killed and with a
+//! delayed primary losing to its hedge.
+//!
 //! A degraded answer is exactly the honest reduced fan-out over the
 //! surviving shards ([`ShardedSearcher::search_batch_subset`] defines
 //! that reference; the chaos suite asserts the equality bit for bit).
@@ -69,26 +94,52 @@ use crate::testing::faults::{self, FaultAction};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Default [`PoolConfig::respawn_budget`]: how many times one worker
 /// may die and be replaced before its shards are declared dead.
 pub const DEFAULT_RESPAWN_BUDGET: u32 = 3;
 
 /// Construction knobs for a [`ShardPool`].
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PoolConfig {
-    /// Worker threads requested (clamped to the shard count).
+    /// Worker threads requested per replica (clamped to the shard
+    /// count).
     pub threads: usize,
     /// Times each worker may be respawned after dying before its
     /// shards are declared permanently dead. `0` means a first death
     /// is final.
     pub respawn_budget: u32,
+    /// Copies of each shard's serving state (R ≥ 1). `1` is exactly
+    /// the unreplicated pool, bit for bit. Higher values spawn
+    /// `R × threads` workers over the same `Arc<Shard>`s — per-worker
+    /// search scratch is cloned, the corpus and graph are shared — so
+    /// a dead, panicking, or straggling primary fails over to the next
+    /// live replica instead of degrading the answer.
+    pub replicas: usize,
+    /// Fixed hedge delay in microseconds: when > 0 (and R > 1), a
+    /// shard that has not replied this long after dispatch has its job
+    /// re-sent to the next untried live replica; the first valid reply
+    /// wins and duplicates are discarded by shard slot. `0` defers to
+    /// [`hedge_deadline_fraction`](Self::hedge_deadline_fraction).
+    pub hedge_us: u64,
+    /// Hedge delay as a fraction of the batch's remaining deadline
+    /// budget (clamped to `[0, 1]`), consulted when
+    /// [`hedge_us`](Self::hedge_us) is `0` — so only batches that
+    /// carry a deadline hedge through this knob. `0.0` disables
+    /// hedging entirely.
+    pub hedge_deadline_fraction: f64,
 }
 
 impl Default for PoolConfig {
     fn default() -> Self {
-        Self { threads: 1, respawn_budget: DEFAULT_RESPAWN_BUDGET }
+        Self {
+            threads: 1,
+            respawn_budget: DEFAULT_RESPAWN_BUDGET,
+            replicas: 1,
+            hedge_us: 0,
+            hedge_deadline_fraction: 0.0,
+        }
     }
 }
 
@@ -103,6 +154,10 @@ struct Job {
     /// shard. Computed once by the pool, shared read-only with every
     /// worker.
     routes: Option<Arc<Vec<Vec<u32>>>>,
+    /// Which of the worker's owned shards to serve, ascending. A full
+    /// first-wave dispatch lists every owned shard; failover and hedge
+    /// re-dispatches list only the shards being retried.
+    shards: Vec<usize>,
     reply: mpsc::Sender<ShardReply>,
 }
 
@@ -115,16 +170,26 @@ enum ShardOutcome {
     Panicked { message: String },
 }
 
-/// One shard's reply to a [`Job`], keyed by slice-order shard index.
+fn is_ok(slot: &Option<ShardOutcome>) -> bool {
+    matches!(slot, Some(ShardOutcome::Ok { .. }))
+}
+
+/// One shard's reply to a [`Job`], keyed by slice-order shard index
+/// (the slot key that makes duplicate hedged replies discardable) plus
+/// the replica that served it.
 struct ShardReply {
     shard: usize,
+    replica: usize,
     outcome: ShardOutcome,
 }
 
 /// One worker thread's supervision record.
 struct WorkerSlot {
-    /// Stable worker id (names the thread across respawns).
+    /// Stable worker id within its replica set (names the thread
+    /// across respawns).
     id: usize,
+    /// Which replica set this worker belongs to (0 = primary).
+    replica: usize,
     /// Job channel; `None` once the worker is permanently dead.
     sender: Option<mpsc::Sender<Job>>,
     handle: Option<JoinHandle<()>>,
@@ -133,25 +198,33 @@ struct WorkerSlot {
     respawns_left: u32,
 }
 
-/// Liveness of one shard in a [`ShardPool`].
+/// Liveness of one shard (or one replica of one shard) in a
+/// [`ShardPool`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ShardState {
     /// Served by a live worker.
     Healthy,
     /// Its worker exhausted the respawn budget (or could not be
-    /// respawned); the shard no longer participates in fan-out.
+    /// respawned); this copy no longer participates in fan-out.
     Dead,
 }
 
-/// Snapshot of a pool's health: per-shard liveness plus monotonic
-/// fault counters (what [`HealthWatch::snapshot`] returns and the
-/// `KNNQv1` health frame reports).
+/// Snapshot of a pool's health: per-shard and per-replica liveness
+/// plus monotonic fault counters (what [`HealthWatch::snapshot`]
+/// returns and the `KNNQv1` health frame reports).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct PoolStats {
-    /// Worker threads the pool was built with.
+    /// Worker threads per replica the pool was built with.
     pub threads: usize,
-    /// Per-shard liveness, slice order.
+    /// Replica sets the pool was built with (R ≥ 1).
+    pub replicas: usize,
+    /// Per-shard liveness, slice order. A shard is [`ShardState::Dead`]
+    /// only when **every** one of its replicas is dead — one live copy
+    /// keeps it healthy (that copy serves the fan-out via failover).
     pub shards: Vec<ShardState>,
+    /// Per-replica liveness: `replica_states[s][r]` is replica `r` of
+    /// shard `s`.
+    pub replica_states: Vec<Vec<ShardState>>,
     /// Workers respawned after dying.
     pub respawns: u64,
     /// Shard-search panics contained by `catch_unwind`.
@@ -160,15 +233,25 @@ pub struct PoolStats {
     pub lost_replies: u64,
     /// Shards dropped from a merge because a deadline expired.
     pub deadline_misses: u64,
+    /// Hedged re-dispatches sent to back up a slow shard.
+    pub hedges_sent: u64,
+    /// Hedged re-dispatches whose reply won the race (arrived before
+    /// the straggling primary's).
+    pub hedge_wins: u64,
+    /// Shard dispatches that went to a non-primary replica because an
+    /// earlier attempt failed or the primary was dead.
+    pub failovers: u64,
 }
 
 impl PoolStats {
-    /// True when every shard is [`ShardState::Healthy`].
+    /// True when every shard is [`ShardState::Healthy`] (at least one
+    /// live replica).
     pub fn all_healthy(&self) -> bool {
         self.shards.iter().all(|s| *s == ShardState::Healthy)
     }
 
-    /// Slice-order indices of dead shards, ascending.
+    /// Slice-order indices of dead shards (all replicas gone),
+    /// ascending.
     pub fn dead_shards(&self) -> Vec<u32> {
         self.shards
             .iter()
@@ -177,34 +260,54 @@ impl PoolStats {
             .map(|(i, _)| i as u32)
             .collect()
     }
+
+    /// Per-replica liveness flattened shard-major (`shards × replicas`
+    /// bools, `true` = alive) — the layout the `KNNQv1` health frame
+    /// carries.
+    pub fn replicas_alive_flat(&self) -> Vec<bool> {
+        self.replica_states
+            .iter()
+            .flat_map(|rs| rs.iter().map(|st| *st == ShardState::Healthy))
+            .collect()
+    }
 }
 
 /// Lock-free health storage shared between the pool, its workers, and
 /// any detached [`HealthWatch`] handles.
 struct HealthInner {
     threads: usize,
-    shard_dead: Vec<AtomicBool>,
+    replicas: usize,
+    /// Shard-major per-replica death flags: replica `r` of shard `s`
+    /// is slot `s * replicas + r`.
+    replica_dead: Vec<AtomicBool>,
     respawns: AtomicU64,
     contained_panics: AtomicU64,
     lost_replies: AtomicU64,
     deadline_misses: AtomicU64,
+    hedges_sent: AtomicU64,
+    hedge_wins: AtomicU64,
+    failovers: AtomicU64,
 }
 
 impl HealthInner {
-    fn new(threads: usize, shard_count: usize) -> Self {
+    fn new(threads: usize, shard_count: usize, replicas: usize) -> Self {
         Self {
             threads,
-            shard_dead: (0..shard_count).map(|_| AtomicBool::new(false)).collect(),
+            replicas,
+            replica_dead: (0..shard_count * replicas).map(|_| AtomicBool::new(false)).collect(),
             respawns: AtomicU64::new(0),
             contained_panics: AtomicU64::new(0),
             lost_replies: AtomicU64::new(0),
             deadline_misses: AtomicU64::new(0),
+            hedges_sent: AtomicU64::new(0),
+            hedge_wins: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
         }
     }
 
-    fn bury(&self, shards: &[usize]) {
+    fn bury(&self, shards: &[usize], replica: usize) {
         for &s in shards {
-            self.shard_dead[s].store(true, Ordering::Relaxed);
+            self.replica_dead[s * self.replicas + replica].store(true, Ordering::Relaxed);
         }
     }
 }
@@ -221,18 +324,43 @@ pub struct HealthWatch {
 impl HealthWatch {
     /// Current health snapshot.
     pub fn snapshot(&self) -> PoolStats {
+        let inner = &self.inner;
+        let shard_count = inner.replica_dead.len() / inner.replicas;
+        let replica_states: Vec<Vec<ShardState>> = (0..shard_count)
+            .map(|s| {
+                (0..inner.replicas)
+                    .map(|r| {
+                        if inner.replica_dead[s * inner.replicas + r].load(Ordering::Relaxed) {
+                            ShardState::Dead
+                        } else {
+                            ShardState::Healthy
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let shards = replica_states
+            .iter()
+            .map(|rs| {
+                if rs.iter().all(|st| *st == ShardState::Dead) {
+                    ShardState::Dead
+                } else {
+                    ShardState::Healthy
+                }
+            })
+            .collect();
         PoolStats {
-            threads: self.inner.threads,
-            shards: self
-                .inner
-                .shard_dead
-                .iter()
-                .map(|d| if d.load(Ordering::Relaxed) { ShardState::Dead } else { ShardState::Healthy })
-                .collect(),
-            respawns: self.inner.respawns.load(Ordering::Relaxed),
-            contained_panics: self.inner.contained_panics.load(Ordering::Relaxed),
-            lost_replies: self.inner.lost_replies.load(Ordering::Relaxed),
-            deadline_misses: self.inner.deadline_misses.load(Ordering::Relaxed),
+            threads: inner.threads,
+            replicas: inner.replicas,
+            shards,
+            replica_states,
+            respawns: inner.respawns.load(Ordering::Relaxed),
+            contained_panics: inner.contained_panics.load(Ordering::Relaxed),
+            lost_replies: inner.lost_replies.load(Ordering::Relaxed),
+            deadline_misses: inner.deadline_misses.load(Ordering::Relaxed),
+            hedges_sent: inner.hedges_sent.load(Ordering::Relaxed),
+            hedge_wins: inner.hedge_wins.load(Ordering::Relaxed),
+            failovers: inner.failovers.load(Ordering::Relaxed),
         }
     }
 }
@@ -249,6 +377,9 @@ impl std::fmt::Debug for HealthWatch {
 /// comparisons); dropping the pool shuts the workers down and joins
 /// them.
 pub struct ShardPool {
+    /// The worker grid, replica-major: worker `w` of replica `r` is
+    /// slot `r * threads + w`. Every replica set owns the identical
+    /// contiguous shard groups.
     workers: Mutex<Vec<WorkerSlot>>,
     /// Retained for respawns: a replacement worker re-acquires its
     /// shard group (and fresh scratch) from here.
@@ -263,40 +394,58 @@ pub struct ShardPool {
     dim_pad: usize,
     shard_count: usize,
     threads: usize,
+    replicas: usize,
+    hedge_us: u64,
+    hedge_deadline_fraction: f64,
+    /// Which worker (id within a replica set) owns each shard.
+    worker_of_shard: Vec<usize>,
 }
 
 impl ShardPool {
     /// Spawn `threads` workers (clamped to the shard count — a worker
     /// with nothing to own would be pure overhead) over `sharded`'s
-    /// shards, with the default respawn budget. `threads == 1` is a
-    /// valid degenerate pool: one worker owning every shard, still
-    /// bit-identical to the inline fan-out.
+    /// shards, with the default respawn budget and no replication.
+    /// `threads == 1` is a valid degenerate pool: one worker owning
+    /// every shard, still bit-identical to the inline fan-out.
     pub fn new(sharded: &ShardedSearcher, threads: usize) -> crate::Result<Self> {
         Self::with_config(sharded, PoolConfig { threads, ..Default::default() })
     }
 
-    /// [`new`](Self::new) with explicit supervision knobs.
+    /// [`new`](Self::new) with explicit supervision, replication, and
+    /// hedging knobs.
     pub fn with_config(sharded: &ShardedSearcher, cfg: PoolConfig) -> crate::Result<Self> {
         anyhow::ensure!(cfg.threads >= 1, "need at least one worker thread");
+        anyhow::ensure!(cfg.replicas >= 1, "need at least one replica of each shard");
         let s = sharded.shard_count();
         let t = cfg.threads.min(s);
+        let r = cfg.replicas;
         let shards: Vec<Arc<Shard>> = sharded.shards().iter().map(Arc::clone).collect();
-        let health = HealthWatch { inner: Arc::new(HealthInner::new(t, s)) };
-        let mut workers = Vec::with_capacity(t);
-        for w in 0..t {
-            let lo = w * s / t;
-            let hi = (w + 1) * s / t;
-            let owned: Vec<usize> = (lo..hi).collect();
-            let owned_shards: Vec<(usize, Arc<Shard>)> =
-                owned.iter().map(|&i| (i, Arc::clone(&shards[i]))).collect();
-            let (tx, handle) = spawn_worker(w, owned_shards, Arc::clone(&health.inner))?;
-            workers.push(WorkerSlot {
-                id: w,
-                sender: Some(tx),
-                handle: Some(handle),
-                owned,
-                respawns_left: cfg.respawn_budget,
-            });
+        let health = HealthWatch { inner: Arc::new(HealthInner::new(t, s, r)) };
+        let mut worker_of_shard = vec![0usize; s];
+        let mut workers = Vec::with_capacity(r * t);
+        for replica in 0..r {
+            for w in 0..t {
+                let lo = w * s / t;
+                let hi = (w + 1) * s / t;
+                let owned: Vec<usize> = (lo..hi).collect();
+                if replica == 0 {
+                    for &i in &owned {
+                        worker_of_shard[i] = w;
+                    }
+                }
+                let owned_shards: Vec<(usize, Arc<Shard>)> =
+                    owned.iter().map(|&i| (i, Arc::clone(&shards[i]))).collect();
+                let (tx, handle) =
+                    spawn_worker(w, replica, owned_shards, Arc::clone(&health.inner))?;
+                workers.push(WorkerSlot {
+                    id: w,
+                    replica,
+                    sender: Some(tx),
+                    handle: Some(handle),
+                    owned,
+                    respawns_left: cfg.respawn_budget,
+                });
+            }
         }
         let dim_pad = shards[0].core.data().dim_pad();
         Ok(Self {
@@ -309,13 +458,22 @@ impl ShardPool {
             dim_pad,
             shard_count: s,
             threads: t,
+            replicas: r,
+            hedge_us: cfg.hedge_us,
+            hedge_deadline_fraction: cfg.hedge_deadline_fraction,
+            worker_of_shard,
         })
     }
 
-    /// Number of worker threads the pool was built with (≤ the
-    /// requested count, clamped to the shard count).
+    /// Number of worker threads per replica the pool was built with
+    /// (≤ the requested count, clamped to the shard count).
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Replica sets the pool was built with (≥ 1).
+    pub fn replicas(&self) -> usize {
+        self.replicas
     }
 
     /// Number of shards served by the pool (live or dead).
@@ -328,7 +486,8 @@ impl ShardPool {
         self.dim
     }
 
-    /// Current health snapshot: per-shard liveness and fault counters.
+    /// Current health snapshot: per-shard/per-replica liveness and
+    /// fault counters.
     pub fn stats(&self) -> PoolStats {
         self.health.snapshot()
     }
@@ -345,8 +504,8 @@ impl ShardPool {
     /// and after collection.
     fn supervise(&self, workers: &mut [WorkerSlot]) {
         for slot in workers.iter_mut() {
-            let died = slot.sender.is_some()
-                && slot.handle.as_ref().is_some_and(|h| h.is_finished());
+            let died =
+                slot.sender.is_some() && slot.handle.as_ref().is_some_and(|h| h.is_finished());
             if died {
                 self.respawn_or_bury(slot);
             }
@@ -354,34 +513,106 @@ impl ShardPool {
     }
 
     /// Replace a dead worker with a fresh thread (fresh scratch) or,
-    /// with the budget spent, declare its shards dead.
+    /// with the budget spent, declare its replica of its shards dead.
     fn respawn_or_bury(&self, slot: &mut WorkerSlot) {
         if let Some(h) = slot.handle.take() {
             let _ = h.join();
         }
         slot.sender = None;
         if slot.respawns_left == 0 {
-            self.health.inner.bury(&slot.owned);
+            self.health.inner.bury(&slot.owned, slot.replica);
             return;
         }
         slot.respawns_left -= 1;
         self.health.inner.respawns.fetch_add(1, Ordering::Relaxed);
         let owned_shards: Vec<(usize, Arc<Shard>)> =
             slot.owned.iter().map(|&i| (i, Arc::clone(&self.shards[i]))).collect();
-        match spawn_worker(slot.id, owned_shards, Arc::clone(&self.health.inner)) {
+        match spawn_worker(slot.id, slot.replica, owned_shards, Arc::clone(&self.health.inner)) {
             Ok((tx, handle)) => {
                 slot.sender = Some(tx);
                 slot.handle = Some(handle);
             }
-            Err(_) => self.health.inner.bury(&slot.owned),
+            Err(_) => self.health.inner.bury(&slot.owned, slot.replica),
+        }
+    }
+
+    /// The hedge timer fired: re-send every still-unanswered shard of
+    /// the current wave to its next untried live replica, on the same
+    /// reply channel the wave is collecting from. The caller drops its
+    /// spare sender right after, restoring disconnect-based
+    /// termination.
+    #[allow(clippy::too_many_arguments)]
+    fn fire_hedges(
+        &self,
+        queries: &Arc<AlignedMatrix>,
+        k: usize,
+        params: &SearchParams,
+        routes: &Option<Arc<Vec<Vec<u32>>>>,
+        slots: &[Option<ShardOutcome>],
+        tried: &mut [Vec<usize>],
+        hedged_to: &mut [Option<usize>],
+        wave_worker: &[Option<usize>],
+        reply: &mpsc::Sender<ShardReply>,
+        outstanding: &mut usize,
+    ) {
+        let mut workers = self.workers_lock();
+        let mut groups: Vec<Vec<usize>> = vec![Vec::new(); workers.len()];
+        for s in 0..self.shard_count {
+            // hedge only genuine stragglers: dispatched this wave with
+            // no reply of any kind yet (a typed panic is not slow — it
+            // fails over on the next wave instead)
+            if wave_worker[s].is_none() || slots[s].is_some() {
+                continue;
+            }
+            let w = self.worker_of_shard[s];
+            let Some(wi) = (0..self.replicas).map(|r| r * self.threads + w).find(|&wi| {
+                !tried[s].contains(&workers[wi].replica) && workers[wi].sender.is_some()
+            }) else {
+                continue;
+            };
+            groups[wi].push(s);
+        }
+        for (wi, shard_set) in groups.into_iter().enumerate() {
+            if shard_set.is_empty() {
+                continue;
+            }
+            let replica = workers[wi].replica;
+            let mut job = Job {
+                queries: Arc::clone(queries),
+                k,
+                params: *params,
+                routes: routes.clone(),
+                shards: shard_set.clone(),
+                reply: reply.clone(),
+            };
+            loop {
+                let Some(sender) = workers[wi].sender.as_ref() else { break };
+                match sender.send(job) {
+                    Ok(()) => {
+                        for &s in &shard_set {
+                            tried[s].push(replica);
+                            hedged_to[s] = Some(replica);
+                            self.health.inner.hedges_sent.fetch_add(1, Ordering::Relaxed);
+                            *outstanding += 1;
+                        }
+                        break;
+                    }
+                    Err(mpsc::SendError(back)) => {
+                        self.respawn_or_bury(&mut workers[wi]);
+                        job = back;
+                    }
+                }
+            }
         }
     }
 
     /// The one fan-out path: dispatch to live workers (respawning dead
-    /// ones first), collect replies until done or `deadline`, merge the
-    /// survivors, and report anything missing as a typed
-    /// [`Degradation`]. With a healthy pool and no deadline this is
-    /// bit-identical to the historical fan-out.
+    /// ones first), collect replies until done or `deadline`, fail
+    /// shards over to untried replicas (and hedge stragglers) while
+    /// any remain, merge the survivors, and report anything still
+    /// missing as a typed [`Degradation`]. With a healthy pool and no
+    /// deadline this is bit-identical to the historical fan-out for
+    /// every R.
     fn run_batch(
         &self,
         queries: Arc<AlignedMatrix>,
@@ -412,105 +643,290 @@ impl ShardPool {
             None => (None, 0, self.shard_count),
         };
 
-        let (tx, rx) = mpsc::channel::<ShardReply>();
-        let mut expected = 0usize;
-        let mut expired_at_dispatch = false;
-        {
-            let mut workers = self.workers_lock();
-            self.supervise(&mut workers);
-            expired_at_dispatch = deadline.is_some_and(|d| Instant::now() >= d);
-            if !expired_at_dispatch {
-                for slot in workers.iter_mut() {
-                    let mut job = Job {
-                        queries: Arc::clone(&queries),
-                        k,
-                        params: *params,
-                        routes: routes.clone(),
-                        reply: tx.clone(),
-                    };
-                    loop {
-                        let Some(sender) = slot.sender.as_ref() else { break };
-                        match sender.send(job) {
-                            Ok(()) => {
-                                expected += slot.owned.len();
-                                break;
-                            }
-                            Err(mpsc::SendError(back)) => {
-                                // the worker died between supervision
-                                // and this send: respawn (bounded) and
-                                // retry; each retry spends budget, so
-                                // the loop terminates
-                                self.respawn_or_bury(slot);
-                                job = back;
+        let r_count = self.replicas;
+        let t_count = self.threads;
+        // the hedge delay only means something with a replica to hedge
+        // to; the fraction knob additionally needs a deadline to take a
+        // fraction of
+        let hedge_delay: Option<Duration> = if r_count > 1 {
+            if self.hedge_us > 0 {
+                Some(Duration::from_micros(self.hedge_us))
+            } else if self.hedge_deadline_fraction > 0.0 {
+                deadline
+                    .and_then(|d| d.checked_duration_since(t0))
+                    .map(|left| left.mul_f64(self.hedge_deadline_fraction.clamp(0.0, 1.0)))
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+
+        // final outcome per shard, slotted by shard index so arrival
+        // order cannot influence anything downstream; an Ok is never
+        // overwritten (first valid reply wins), a typed panic may be
+        // superseded by a later replica's Ok
+        let mut slots: Vec<Option<ShardOutcome>> = Vec::new();
+        slots.resize_with(self.shard_count, || None);
+        // replicas each shard has been dispatched to this batch (a
+        // replica is tried at most once per batch, so waves terminate)
+        let mut tried: Vec<Vec<usize>> = vec![Vec::new(); self.shard_count];
+        // last classified failure per shard; discarded if a later
+        // replica resolves it
+        let mut fail_cause: Vec<Option<DegradeCause>> = vec![None; self.shard_count];
+        let mut deadline_hit = false;
+
+        'waves: loop {
+            let (tx, rx) = mpsc::channel::<ShardReply>();
+            let mut wave_worker: Vec<Option<usize>> = vec![None; self.shard_count];
+            let mut hedged_to: Vec<Option<usize>> = vec![None; self.shard_count];
+            let mut outstanding = 0usize; // replies still in flight
+            let mut unresolved = 0usize; // wave shards without an Ok
+            {
+                let mut workers = self.workers_lock();
+                self.supervise(&mut workers);
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    deadline_hit = true;
+                    drop(tx);
+                    break 'waves;
+                }
+                // assign every unresolved shard to its lowest untried
+                // live replica. A pass that buries a worker mid-send
+                // leaves its shards unassigned and the next pass falls
+                // through to the next replica; respawn budgets are
+                // finite, so this terminates.
+                loop {
+                    let mut groups: Vec<Vec<usize>> = vec![Vec::new(); workers.len()];
+                    let mut any = false;
+                    for s in 0..self.shard_count {
+                        if is_ok(&slots[s]) || wave_worker[s].is_some() {
+                            continue;
+                        }
+                        let w = self.worker_of_shard[s];
+                        let Some(wi) = (0..r_count).map(|r| r * t_count + w).find(|&wi| {
+                            !tried[s].contains(&workers[wi].replica)
+                                && workers[wi].sender.is_some()
+                        }) else {
+                            continue;
+                        };
+                        groups[wi].push(s);
+                        any = true;
+                    }
+                    if !any {
+                        break;
+                    }
+                    for (wi, shard_set) in groups.into_iter().enumerate() {
+                        if shard_set.is_empty() {
+                            continue;
+                        }
+                        let replica = workers[wi].replica;
+                        let mut job = Job {
+                            queries: Arc::clone(&queries),
+                            k,
+                            params: *params,
+                            routes: routes.clone(),
+                            shards: shard_set.clone(),
+                            reply: tx.clone(),
+                        };
+                        loop {
+                            let Some(sender) = workers[wi].sender.as_ref() else { break };
+                            match sender.send(job) {
+                                Ok(()) => {
+                                    for &s in &shard_set {
+                                        // any dispatch past the primary's
+                                        // first attempt is a failover
+                                        if !tried[s].is_empty() || replica != 0 {
+                                            self.health
+                                                .inner
+                                                .failovers
+                                                .fetch_add(1, Ordering::Relaxed);
+                                        }
+                                        tried[s].push(replica);
+                                        wave_worker[s] = Some(wi);
+                                        outstanding += 1;
+                                        unresolved += 1;
+                                    }
+                                    break;
+                                }
+                                Err(mpsc::SendError(back)) => {
+                                    // the worker died between supervision
+                                    // and this send: respawn (bounded) and
+                                    // retry; each retry spends budget, so
+                                    // the loop terminates
+                                    self.respawn_or_bury(&mut workers[wi]);
+                                    job = back;
+                                }
                             }
                         }
                     }
                 }
             }
-        }
-        drop(tx); // collection ends when every dispatched job is done
+            if outstanding == 0 {
+                // nothing dispatchable: every unresolved shard is out
+                // of replicas — classified below
+                drop(tx);
+                break 'waves;
+            }
 
-        // collect, slotted by shard index so arrival order cannot
-        // influence anything downstream
-        let mut slots: Vec<Option<ShardOutcome>> = Vec::new();
-        slots.resize_with(self.shard_count, || None);
-        let mut received = 0usize;
-        let mut deadline_hit = expired_at_dispatch;
-        while received < expected {
-            let reply = match deadline {
-                None => match rx.recv() {
-                    Ok(r) => r,
-                    Err(_) => break, // a worker died mid-batch or a reply was lost
-                },
-                Some(d) => {
-                    let Some(left) = d.checked_duration_since(Instant::now()) else {
-                        deadline_hit = true;
-                        break;
-                    };
-                    match rx.recv_timeout(left) {
-                        Ok(r) => r,
-                        Err(mpsc::RecvTimeoutError::Timeout) => {
+            let hedge_at = hedge_delay.map(|d| Instant::now() + d);
+            // the spare sender keeps the channel open only until the
+            // hedge fires (or is disarmed); after that, collection
+            // terminates by disconnect exactly as without hedging
+            let mut hedge_tx = if hedge_at.is_some() { Some(tx.clone()) } else { None };
+            drop(tx);
+
+            loop {
+                if unresolved == 0 || outstanding == 0 {
+                    // every wave shard has a valid answer (stragglers'
+                    // duplicate replies go to a dropped receiver), or
+                    // every in-flight reply has been accounted for
+                    break;
+                }
+                let now = Instant::now();
+                let hedge_left = match (&hedge_tx, hedge_at) {
+                    (Some(_), Some(at)) => Some(at.saturating_duration_since(now)),
+                    _ => None,
+                };
+                let deadline_left = match deadline {
+                    Some(d) => match d.checked_duration_since(now) {
+                        Some(left) => Some(left),
+                        None => {
                             deadline_hit = true;
                             break;
                         }
-                        Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    },
+                    None => None,
+                };
+                let reply = match (hedge_left, deadline_left) {
+                    (None, None) => match rx.recv() {
+                        Ok(r) => r,
+                        Err(_) => break, // a worker died mid-batch or a reply was lost
+                    },
+                    (h, d) => {
+                        let wait = match (h, d) {
+                            (Some(h), Some(d)) => h.min(d),
+                            (Some(h), None) => h,
+                            (None, Some(d)) => d,
+                            (None, None) => unreachable!(),
+                        };
+                        match rx.recv_timeout(wait) {
+                            Ok(r) => r,
+                            Err(mpsc::RecvTimeoutError::Timeout) => {
+                                let now = Instant::now();
+                                if deadline.is_some_and(|dl| now >= dl) {
+                                    deadline_hit = true;
+                                    break;
+                                }
+                                if let (Some(htx), Some(at)) = (hedge_tx.take(), hedge_at) {
+                                    if now >= at {
+                                        self.fire_hedges(
+                                            &queries,
+                                            k,
+                                            params,
+                                            &routes,
+                                            &slots,
+                                            &mut tried,
+                                            &mut hedged_to,
+                                            &wave_worker,
+                                            &htx,
+                                            &mut outstanding,
+                                        );
+                                        // htx drops here: termination is
+                                        // disconnect-based again
+                                    } else {
+                                        hedge_tx = Some(htx); // spurious wake
+                                    }
+                                }
+                                continue;
+                            }
+                            Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                        }
+                    }
+                };
+                outstanding -= 1;
+                match reply.outcome {
+                    ShardOutcome::Ok { .. } => {
+                        if is_ok(&slots[reply.shard]) {
+                            // duplicate (a hedge raced its primary):
+                            // identical payload by T-invariance, so
+                            // discard by slot key — the race outcome
+                            // cannot change a bit
+                            continue;
+                        }
+                        if hedged_to[reply.shard] == Some(reply.replica) {
+                            self.health.inner.hedge_wins.fetch_add(1, Ordering::Relaxed);
+                        }
+                        slots[reply.shard] = Some(reply.outcome);
+                        unresolved -= 1;
+                    }
+                    ShardOutcome::Panicked { .. } => {
+                        if !is_ok(&slots[reply.shard]) {
+                            fail_cause[reply.shard] = Some(DegradeCause::ShardPanicked);
+                            slots[reply.shard] = Some(reply.outcome);
+                        }
                     }
                 }
-            };
-            if slots[reply.shard].is_none() {
-                received += 1;
             }
-            slots[reply.shard] = Some(reply.outcome);
+            drop(rx);
+
+            // classify this wave's unanswered shards now, before the
+            // next supervision pass can respawn the evidence away
+            {
+                let workers = self.workers_lock();
+                for s in 0..self.shard_count {
+                    let Some(wi) = wave_worker[s] else { continue };
+                    if slots[s].is_some() {
+                        continue; // answered (Ok, or a typed panic)
+                    }
+                    let slot = &workers[wi];
+                    let worker_dead = slot.sender.is_none()
+                        || slot.handle.as_ref().is_some_and(|h| h.is_finished());
+                    fail_cause[s] = Some(if worker_dead {
+                        DegradeCause::ShardDead
+                    } else if deadline_hit {
+                        DegradeCause::DeadlineExpired
+                    } else {
+                        DegradeCause::ReplyLost
+                    });
+                }
+            }
+            if deadline_hit {
+                break 'waves;
+            }
         }
 
-        // classify what is missing, then run supervision again so a
-        // worker that died mid-batch is respawned before the next one
-        let mut missing: Vec<(u32, DegradeCause)> = Vec::new();
+        // classify what is still missing (ascending shard order by
+        // construction), then run supervision again so a worker that
+        // died mid-batch is respawned before the next one
+        let mut missing: Vec<(u32, u32, DegradeCause)> = Vec::new();
         {
             let mut workers = self.workers_lock();
-            for slot in workers.iter() {
-                for &s in &slot.owned {
-                    let cause = match &slots[s] {
-                        Some(ShardOutcome::Ok { .. }) => continue,
-                        Some(ShardOutcome::Panicked { .. }) => DegradeCause::ShardPanicked,
-                        None => {
-                            if slot.sender.is_none()
-                                || slot.handle.as_ref().is_some_and(|h| h.is_finished())
-                            {
-                                DegradeCause::ShardDead
-                            } else if deadline_hit {
-                                DegradeCause::DeadlineExpired
-                            } else {
-                                DegradeCause::ReplyLost
-                            }
-                        }
-                    };
-                    missing.push((s as u32, cause));
+            for s in 0..self.shard_count {
+                if is_ok(&slots[s]) {
+                    continue;
                 }
+                let cause = fail_cause[s].unwrap_or_else(|| {
+                    // never classified: the shard was never dispatched
+                    // (or never answered a wave that was cut short)
+                    let w = self.worker_of_shard[s];
+                    let all_dead = (0..r_count).all(|r| {
+                        let slot = &workers[r * t_count + w];
+                        slot.sender.is_none()
+                            || slot.handle.as_ref().is_some_and(|h| h.is_finished())
+                    });
+                    if all_dead {
+                        DegradeCause::ShardDead
+                    } else if deadline_hit {
+                        DegradeCause::DeadlineExpired
+                    } else {
+                        DegradeCause::ReplyLost
+                    }
+                });
+                missing.push((s as u32, tried[s].len() as u32, cause));
             }
             self.supervise(&mut workers);
         }
-        for &(_, cause) in &missing {
+        for &(_, _, cause) in &missing {
             match cause {
                 DegradeCause::DeadlineExpired => {
                     self.health.inner.deadline_misses.fetch_add(1, Ordering::Relaxed);
@@ -561,10 +977,11 @@ impl ShardPool {
         let degradation = if missing.is_empty() {
             None
         } else {
-            missing.sort_unstable_by_key(|(s, _)| *s);
-            let cause = missing.iter().map(|&(_, c)| c).max().unwrap_or(DegradeCause::ShardDead);
+            let cause =
+                missing.iter().map(|&(_, _, c)| c).max().unwrap_or(DegradeCause::ShardDead);
             Some(Degradation {
-                shards_missing: missing.into_iter().map(|(s, _)| s).collect(),
+                shards_missing: missing.iter().map(|&(s, _, _)| s).collect(),
+                replicas_tried: missing.iter().map(|&(_, t, _)| t).collect(),
                 cause,
             })
         };
@@ -575,15 +992,23 @@ impl ShardPool {
 /// Spawn one worker thread over its shard group; used for both initial
 /// construction and respawns (a respawned worker allocates fresh
 /// scratch, so whatever state a dying thread abandoned is gone).
+/// Replica 0 keeps the historical thread names so R=1 pools are
+/// indistinguishable from the unreplicated ones.
 fn spawn_worker(
     id: usize,
+    replica: usize,
     owned: Vec<(usize, Arc<Shard>)>,
     health: Arc<HealthInner>,
 ) -> std::io::Result<(mpsc::Sender<Job>, JoinHandle<()>)> {
     let (tx, rx) = mpsc::channel::<Job>();
+    let name = if replica == 0 {
+        format!("knng-shard-{id}")
+    } else {
+        format!("knng-shard-{id}r{replica}")
+    };
     let handle = std::thread::Builder::new()
-        .name(format!("knng-shard-{id}"))
-        .spawn(move || worker_loop(id, owned, rx, health))?;
+        .name(name)
+        .spawn(move || worker_loop(id, replica, owned, rx, health))?;
     Ok((tx, handle))
 }
 
@@ -592,27 +1017,50 @@ fn spawn_worker(
 /// every batch this worker ever serves. Each shard search runs under
 /// `catch_unwind`: a panicking search becomes a typed failure reply
 /// (plus a fresh scratch) and the worker keeps serving.
+///
+/// Fault sites: replica 0 answers to the legacy `pool.worker.*` sites
+/// (so existing R=1 chaos plans behave bit for bit), higher replicas
+/// answer to the `pool.replica.*` sites with
+/// [`faults::replica_index`]-encoded indices, so a plan can kill
+/// exactly one copy of a shard.
 fn worker_loop(
     worker_id: usize,
+    replica: usize,
     owned: Vec<(usize, Arc<Shard>)>,
     rx: mpsc::Receiver<Job>,
     health: Arc<HealthInner>,
 ) {
     let mut scratch: Vec<_> = owned.iter().map(|(_, sh)| sh.core.scratch()).collect();
     while let Ok(job) = rx.recv() {
-        if matches!(
-            faults::check(faults::site::WORKER_JOB, worker_id as u64),
-            Some(FaultAction::Die)
-        ) {
+        let job_fault = if replica == 0 {
+            faults::check(faults::site::WORKER_JOB, worker_id as u64)
+        } else {
+            faults::check(
+                faults::site::REPLICA_JOB,
+                faults::replica_index(replica, worker_id as u64),
+            )
+        };
+        if matches!(job_fault, Some(FaultAction::Die)) {
             return; // injected thread death: the supervisor takes over
         }
-        for ((slot, shard), scr) in owned.iter().zip(scratch.iter_mut()) {
+        for &shard_idx in &job.shards {
+            let pos = owned
+                .iter()
+                .position(|(slot, _)| *slot == shard_idx)
+                .expect("pool dispatched a shard this worker does not own");
+            let (slot, shard) = &owned[pos];
+            let scr = &mut scratch[pos];
             let attempt = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                if matches!(
-                    faults::check(faults::site::WORKER_SEARCH, *slot as u64),
-                    Some(FaultAction::Panic)
-                ) {
-                    panic!("injected panic at {} (shard {slot})", faults::site::WORKER_SEARCH);
+                let search_fault = if replica == 0 {
+                    faults::check(faults::site::WORKER_SEARCH, *slot as u64)
+                } else {
+                    faults::check(
+                        faults::site::REPLICA_SEARCH,
+                        faults::replica_index(replica, *slot as u64),
+                    )
+                };
+                if matches!(search_fault, Some(FaultAction::Panic)) {
+                    panic!("injected panic at shard {slot} (replica {replica})");
                 }
                 match &job.routes {
                     None => {
@@ -655,16 +1103,24 @@ fn worker_loop(
                     ShardOutcome::Panicked { message: panic_message(&payload) }
                 }
             };
-            match faults::check(faults::site::WORKER_REPLY, *slot as u64) {
+            let reply_fault = if replica == 0 {
+                faults::check(faults::site::WORKER_REPLY, *slot as u64)
+            } else {
+                faults::check(
+                    faults::site::REPLICA_REPLY,
+                    faults::replica_index(replica, *slot as u64),
+                )
+            };
+            match reply_fault {
                 Some(FaultAction::Drop) => continue, // reply lost in flight
                 Some(FaultAction::Delay(d)) => std::thread::sleep(d),
                 Some(FaultAction::Die) => return,
                 _ => {}
             }
             // a send error means the caller stopped collecting (its
-            // deadline expired or it dropped the batch); nothing useful
-            // to do but move on to the next shard
-            let _ = job.reply.send(ShardReply { shard: *slot, outcome });
+            // deadline expired, a hedge already answered, or it dropped
+            // the batch); nothing useful to do but move on
+            let _ = job.reply.send(ShardReply { shard: *slot, replica, outcome });
         }
     }
 }
@@ -751,8 +1207,7 @@ impl Searcher for ShardPool {
         params: &SearchParams,
         top_m: usize,
     ) -> (Vec<Vec<Neighbor>>, BatchStats) {
-        let (results, stats, _degradation) =
-            self.run_batch(queries, k, params, Some(top_m), None);
+        let (results, stats, _degradation) = self.run_batch(queries, k, params, Some(top_m), None);
         (results, stats)
     }
 
@@ -816,6 +1271,7 @@ mod tests {
             let pool = ShardPool::new(&sharded, threads).unwrap();
             assert_eq!(pool.threads(), threads.min(4));
             assert_eq!(pool.shard_count(), 4);
+            assert_eq!(pool.replicas(), 1);
             assert_eq!(Searcher::len(&pool), 400);
             let (got, gstats) = pool.search_batch(&queries, 5, &sp);
             assert_neighbors_bitwise_eq(&expect, &got, &format!("threads={threads}"));
@@ -824,6 +1280,76 @@ mod tests {
             assert_eq!(estats.shard_visits, gstats.shard_visits);
             assert!(pool.stats().all_healthy(), "healthy run must stay healthy");
         }
+    }
+
+    #[test]
+    fn replicated_pool_matches_inline_fanout_bitwise() {
+        // the determinism contract of the tentpole: any R over a
+        // healthy pool is bit-identical to the inline fan-out, stats
+        // included, with zero failovers or hedges
+        let data = corpus(400, 21);
+        let params = Params::default().with_k(8).with_seed(21);
+        let sharded = ShardedSearcher::build(&data, 4, &params).unwrap();
+        let sp = SearchParams::default();
+        let queries = AlignedMatrix::from_rows(
+            25,
+            data.dim(),
+            &(0..25).flat_map(|i| data.row_logical(i * 7).to_vec()).collect::<Vec<f32>>(),
+        );
+        let (expect, estats) = sharded.search_batch(&queries, 5, &sp);
+        for replicas in [2usize, 3] {
+            let pool = ShardPool::with_config(
+                &sharded,
+                PoolConfig { threads: 2, replicas, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(pool.replicas(), replicas);
+            let (got, gstats) = pool.search_batch(&queries, 5, &sp);
+            assert_neighbors_bitwise_eq(&expect, &got, &format!("replicas={replicas}"));
+            assert_eq!(estats.dist_evals, gstats.dist_evals);
+            assert_eq!(estats.expansions, gstats.expansions);
+            assert_eq!(estats.shard_visits, gstats.shard_visits);
+            let stats = pool.stats();
+            assert!(stats.all_healthy());
+            assert_eq!(stats.failovers, 0, "healthy primaries never fail over");
+            assert_eq!(stats.hedges_sent, 0, "hedging is off by default");
+        }
+    }
+
+    #[test]
+    fn hedging_on_healthy_pool_is_bitwise_clean() {
+        // an aggressive 1 µs hedge delay makes hedges race real work;
+        // whoever wins, the answer must not change by a single bit —
+        // replies are identical by T-invariance and deduped by slot
+        let data = corpus(300, 23);
+        let params = Params::default().with_k(8).with_seed(23);
+        let sharded = ShardedSearcher::build(&data, 3, &params).unwrap();
+        let sp = SearchParams::default();
+        let queries = AlignedMatrix::from_rows(
+            20,
+            data.dim(),
+            &(0..20).flat_map(|i| data.row_logical(i * 11).to_vec()).collect::<Vec<f32>>(),
+        );
+        let (expect, estats) = sharded.search_batch(&queries, 4, &sp);
+        let pool = ShardPool::with_config(
+            &sharded,
+            PoolConfig { threads: 3, replicas: 2, hedge_us: 1, ..Default::default() },
+        )
+        .unwrap();
+        for round in 0..5 {
+            let (got, gstats) = pool.search_batch(&queries, 4, &sp);
+            assert_neighbors_bitwise_eq(&expect, &got, &format!("hedged round {round}"));
+            assert_eq!(estats.dist_evals, gstats.dist_evals, "round {round}");
+        }
+        let stats = pool.stats();
+        assert!(stats.all_healthy());
+        assert_eq!(stats.failovers, 0, "hedges are not failovers");
+        assert!(
+            stats.hedge_wins <= stats.hedges_sent,
+            "wins ⊆ sent: {} > {}",
+            stats.hedge_wins,
+            stats.hedges_sent
+        );
     }
 
     #[test]
@@ -882,17 +1408,25 @@ mod tests {
             data.dim(),
             &(0..40).flat_map(|i| data.row_logical(i * 11).to_vec()).collect::<Vec<f32>>(),
         );
-        for threads in [1usize, 3] {
-            let pool = ShardPool::new(&sharded, threads).unwrap();
+        for (threads, replicas) in [(1usize, 1usize), (3, 1), (2, 2)] {
+            let pool = ShardPool::with_config(
+                &sharded,
+                PoolConfig { threads, replicas, ..Default::default() },
+            )
+            .unwrap();
             for m in [1usize, 2, 4] {
                 let (expect, estats) = sharded.search_batch_routed(&queries, 5, &sp, m);
                 let (got, gstats) = pool.search_batch_routed(&queries, 5, &sp, m);
-                assert_neighbors_bitwise_eq(&expect, &got, &format!("threads={threads} m={m}"));
-                assert_eq!(estats.dist_evals, gstats.dist_evals, "threads={threads} m={m}");
-                assert_eq!(estats.expansions, gstats.expansions, "threads={threads} m={m}");
+                assert_neighbors_bitwise_eq(
+                    &expect,
+                    &got,
+                    &format!("threads={threads} replicas={replicas} m={m}"),
+                );
+                assert_eq!(estats.dist_evals, gstats.dist_evals, "t={threads} r={replicas} m={m}");
+                assert_eq!(estats.expansions, gstats.expansions, "t={threads} r={replicas} m={m}");
                 assert_eq!(
                     estats.shard_visits, gstats.shard_visits,
-                    "threads={threads} m={m}"
+                    "t={threads} r={replicas} m={m}"
                 );
             }
         }
@@ -912,11 +1446,16 @@ mod tests {
     }
 
     #[test]
-    fn rejects_zero_threads() {
+    fn rejects_zero_threads_and_zero_replicas() {
         let data = corpus(100, 9);
         let sharded =
             ShardedSearcher::build(&data, 2, &Params::default().with_k(6).with_seed(9)).unwrap();
         assert!(ShardPool::new(&sharded, 0).is_err());
+        assert!(ShardPool::with_config(
+            &sharded,
+            PoolConfig { threads: 1, replicas: 0, ..Default::default() }
+        )
+        .is_err());
     }
 
     #[test]
@@ -928,6 +1467,7 @@ mod tests {
         let watch = Searcher::health_watch(&pool).expect("pools expose health");
         let stats = pool.stats();
         assert_eq!(stats.threads, 2);
+        assert_eq!(stats.replicas, 1);
         assert_eq!(stats.shards, vec![ShardState::Healthy, ShardState::Healthy]);
         assert!(stats.all_healthy());
         assert!(stats.dead_shards().is_empty());
@@ -942,6 +1482,31 @@ mod tests {
         });
         handle.join().unwrap();
         assert!(watch.snapshot().all_healthy());
+    }
+
+    #[test]
+    fn replica_stats_have_the_documented_shape() {
+        let data = corpus(200, 27);
+        let sharded =
+            ShardedSearcher::build(&data, 3, &Params::default().with_k(6).with_seed(27)).unwrap();
+        let pool = ShardPool::with_config(
+            &sharded,
+            PoolConfig { threads: 2, replicas: 2, ..Default::default() },
+        )
+        .unwrap();
+        let stats = pool.stats();
+        assert_eq!(stats.replicas, 2);
+        assert_eq!(stats.shards.len(), 3);
+        assert_eq!(stats.replica_states.len(), 3, "one row per shard");
+        assert!(stats.replica_states.iter().all(|rs| rs.len() == 2), "one column per replica");
+        let flat = stats.replicas_alive_flat();
+        assert_eq!(flat.len(), 6, "shards × replicas");
+        assert!(flat.iter().all(|alive| *alive));
+        assert_eq!(
+            (stats.hedges_sent, stats.hedge_wins, stats.failovers),
+            (0, 0, 0),
+            "fresh pool, clean counters"
+        );
     }
 
     #[test]
@@ -963,8 +1528,7 @@ mod tests {
         assert_neighbors_bitwise_eq(&expect, &got, "deadline-armed healthy pool");
         // and with no deadline at all, the same entry point is the
         // plain path exactly
-        let (got2, _, degr2) =
-            pool.search_batch_deadline_owned(tile, 4, &sp, None, None);
+        let (got2, _, degr2) = pool.search_batch_deadline_owned(tile, 4, &sp, None, None);
         assert!(degr2.is_none());
         assert_neighbors_bitwise_eq(&expect, &got2, "deadline entry, no deadline");
     }
@@ -980,17 +1544,13 @@ mod tests {
         let tile = Arc::new(AlignedMatrix::from_rows(1, data.dim(), &rows));
         let t0 = Instant::now();
         let past = Instant::now() - Duration::from_millis(1);
-        let (res, _, degr) = pool.search_batch_deadline_owned(
-            tile,
-            3,
-            &SearchParams::default(),
-            None,
-            Some(past),
-        );
+        let (res, _, degr) =
+            pool.search_batch_deadline_owned(tile, 3, &SearchParams::default(), None, Some(past));
         assert!(t0.elapsed() < Duration::from_secs(5), "expired deadline must not hang");
         let degr = degr.expect("an already-expired deadline degrades everything");
         assert_eq!(degr.cause, DegradeCause::DeadlineExpired);
         assert_eq!(degr.shards_missing, vec![0, 1]);
+        assert_eq!(degr.replicas_tried, vec![0, 0], "nothing was ever dispatched");
         assert_eq!(res.len(), 1);
         assert!(res[0].is_empty(), "no shard answered, so no neighbors");
         assert!(pool.stats().deadline_misses >= 2);
@@ -1001,5 +1561,8 @@ mod tests {
         let cfg = PoolConfig::default();
         assert!(cfg.threads >= 1);
         assert_eq!(cfg.respawn_budget, DEFAULT_RESPAWN_BUDGET);
+        assert_eq!(cfg.replicas, 1, "replication is opt-in");
+        assert_eq!(cfg.hedge_us, 0, "hedging is opt-in");
+        assert_eq!(cfg.hedge_deadline_fraction, 0.0);
     }
 }

@@ -267,6 +267,8 @@ fn cmd_query(argv: &[String]) -> anyhow::Result<()> {
         .value(KERNEL_FLAG, KERNEL_HELP)
         .flag("serve", "serve via the threaded micro-batching runtime (with --index)")
         .value("threads", "worker threads for --serve (clamped to the shard count; default 1)")
+        .value("replicas", "copies of each shard's serving state for --serve; a shard degrades only when all copies are gone (default 1)")
+        .value("hedge-us", "hedge delay for --serve, microseconds: re-send a straggling shard's job to the next replica after this long (default 0 = off; needs --replicas > 1)")
         .value("max-batch", "max queries coalesced per window for --serve (default 64)")
         .value("batch-window", "batching window for --serve, microseconds (default 200)")
         .flag("stats", "print the aggregate QueryStats breakdown to stderr")
@@ -498,6 +500,8 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         .value("ef", "beam width (default 64)")
         .value("route-top-m", "centroid-route each query to its m nearest shards; wire requests must match (default: full fan-out)")
         .value("threads", "shard-pool worker threads (clamped to the shard count; default 1)")
+        .value("replicas", "copies of each shard's serving state; a shard degrades only when all copies are gone (default 1)")
+        .value("hedge-us", "hedge delay, microseconds: re-send a straggling shard's job to the next replica after this long (default 0 = off; needs --replicas > 1)")
         .value("max-batch", "max queries coalesced per window (default 64)")
         .value("batch-window", "batching window, microseconds (default 200)")
         .value("answer-cache", "cross-window LRU answer cache capacity, distinct queries (default 0 = off)")
@@ -537,7 +541,12 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     };
     let route_top_m = parse_route_top_m(&m)?;
     let threads = m.usize_or("threads", 1)?;
-    let pool = ShardPool::new(&sharded, threads)?;
+    let replicas = m.usize_or("replicas", 1)?.max(1);
+    let hedge_us = m.u64_or("hedge-us", 0)?;
+    let pool = ShardPool::with_config(
+        &sharded,
+        knng::api::PoolConfig { threads, replicas, hedge_us, ..Default::default() },
+    )?;
     let workers = pool.threads();
     let cfg = FrontConfig {
         k,
@@ -546,6 +555,8 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
         max_wait: std::time::Duration::from_micros(m.u64_or("batch-window", 200)?),
         route_top_m,
         answer_cache: m.usize_or("answer-cache", 0)?,
+        replicas,
+        hedge_us,
         ..Default::default()
     };
     let cache = cfg.answer_cache;
@@ -562,8 +573,9 @@ fn cmd_serve(argv: &[String]) -> anyhow::Result<()> {
     let addr = server.local_addr()?;
     install_sigint_handler();
     eprintln!(
-        "serving n={n} dim={dim} (graph k={graph_k}) on {addr} — {shards} shard(s), \
-         {workers} pool worker(s), k={k}, route {}, answer cache {cache}; Ctrl-C drains",
+        "serving n={n} dim={dim} (graph k={graph_k}) on {addr} — {shards} shard(s) × \
+         {replicas} replica(s), {workers} pool worker(s), k={k}, route {}, \
+         answer cache {cache}, hedge {hedge_us}µs; Ctrl-C drains",
         match route_top_m {
             Some(v) => format!("top-{v}"),
             None => "full".to_string(),
@@ -639,6 +651,7 @@ fn parse_store_cfg(m: &knng::cli::ArgMatches) -> anyhow::Result<knng::store::Sto
         auto_compact_ratio: m.f64_or("auto-compact-ratio", d.auto_compact_ratio)?,
         auto_compact_min: m.usize_or("auto-compact-min", d.auto_compact_min)?,
         repair_iters: m.usize_or("repair-iters", d.repair_iters)?,
+        group_commit_us: m.u64_or("group-commit-us", d.group_commit_us)?,
     })
 }
 
@@ -648,6 +661,7 @@ fn store_segment_flag(spec: ArgSpec) -> ArgSpec {
         .value("auto-compact-ratio", "auto-compact when delta/base exceeds this (default 0.5; 0 = off)")
         .value("auto-compact-min", "…but only once the delta holds this many rows (default 64)")
         .value("repair-iters", "NN-Descent repair iteration budget per compaction (default 8)")
+        .value("group-commit-us", "WAL group-commit window, microseconds: batch fsyncs within this window (default 0 = fsync per append)")
         .flag("help", "show this help")
 }
 
@@ -860,8 +874,10 @@ fn store_compact(argv: &[String]) -> anyhow::Result<()> {
 /// `knng store serve`: the KNNQv2 server over a mutable store — the
 /// front searches through a clone of the shared handle, the server
 /// applies `insert`/`delete`/`compact` frames to the same handle, so
-/// a mutation is visible to the next query. The answer cache stays
-/// off: a cached answer must not outlive the rows it names.
+/// a mutation is visible to the next query. The answer cache is safe
+/// here: it is keyed on the store's mutation epoch and flushed the
+/// moment an insert/delete/compaction lands, so a cached answer never
+/// outlives the rows it names.
 fn store_serve(argv: &[String]) -> anyhow::Result<()> {
     use knng::api::{FrontConfig, ServeFront};
     use knng::net::{install_sigint_handler, NetServer, ServerConfig};
@@ -872,6 +888,7 @@ fn store_serve(argv: &[String]) -> anyhow::Result<()> {
             .value("ef", "beam width (default 64)")
             .value("max-batch", "max queries coalesced per window (default 64)")
             .value("batch-window", "batching window, microseconds (default 200)")
+            .value("answer-cache", "cross-window LRU answer cache capacity, distinct queries; flushed on every mutation (default 0 = off)")
             .value("net-workers", "connection-handler threads (default 4)")
             .value("net-timeout", "per-connection read timeout, seconds (default 30)")
             .value("max-frame", "largest accepted wire frame payload, bytes (default 16M)")
@@ -901,8 +918,9 @@ fn store_serve(argv: &[String]) -> anyhow::Result<()> {
         params,
         max_batch: m.usize_or("max-batch", 64)?,
         max_wait: std::time::Duration::from_micros(m.u64_or("batch-window", 200)?),
-        // never cache answers over a mutable corpus
-        answer_cache: 0,
+        // safe over a mutable corpus: the cache is epoch-keyed and
+        // flushed whenever the store mutates
+        answer_cache: m.usize_or("answer-cache", 0)?,
         ..Default::default()
     };
     let front = ServeFront::spawn(shared.clone(), dim, cfg)?;
@@ -962,13 +980,18 @@ fn serve_queries(
     use knng::api::{FrontConfig, ServeFront, ShardPool};
 
     let threads = m.usize_or("threads", 1)?;
+    let replicas = m.usize_or("replicas", 1)?.max(1);
+    let hedge_us = m.u64_or("hedge-us", 0)?;
     let max_batch = m.usize_or("max-batch", 64)?;
     let window_us = m.u64_or("batch-window", 200)?;
     let dim = sharded.dim();
     let shard_count = sharded.shard_count();
     let (index_n, graph_k) = label;
 
-    let pool = ShardPool::new(&sharded, threads)?;
+    let pool = ShardPool::with_config(
+        &sharded,
+        knng::api::PoolConfig { threads, replicas, hedge_us, ..Default::default() },
+    )?;
     let workers = pool.threads();
     if workers < threads {
         eprintln!("note: --threads {threads} clamped to {workers} (one worker per shard)");
@@ -979,6 +1002,8 @@ fn serve_queries(
         max_batch,
         max_wait: std::time::Duration::from_micros(window_us),
         route_top_m,
+        replicas,
+        hedge_us,
         ..Default::default()
     };
     let front = ServeFront::spawn(pool, dim, cfg)?;

@@ -560,9 +560,26 @@ fn serve_rows(
                         None => d,
                         Some(mut acc) => {
                             acc.cause = acc.cause.max(d.cause);
-                            acc.shards_missing.extend(d.shards_missing);
-                            acc.shards_missing.sort_unstable();
-                            acc.shards_missing.dedup();
+                            // merge the parallel (shard, replicas-tried)
+                            // lists: union of shards, max tried per shard
+                            let mut pairs: Vec<(u32, u32)> = acc
+                                .shards_missing
+                                .iter()
+                                .zip(&acc.replicas_tried)
+                                .chain(d.shards_missing.iter().zip(&d.replicas_tried))
+                                .map(|(&s, &t)| (s, t))
+                                .collect();
+                            pairs.sort_unstable();
+                            pairs.dedup_by(|next, kept| {
+                                if next.0 == kept.0 {
+                                    kept.1 = kept.1.max(next.1);
+                                    true
+                                } else {
+                                    false
+                                }
+                            });
+                            acc.shards_missing = pairs.iter().map(|&(s, _)| s).collect();
+                            acc.replicas_tried = pairs.iter().map(|&(_, t)| t).collect();
                             acc
                         }
                     });
@@ -579,6 +596,7 @@ fn serve_rows(
         Some(d) => Frame::Degraded(DegradedFrame {
             results: frame,
             shards_missing: d.shards_missing,
+            replicas_tried: d.replicas_tried,
             cause: d.cause,
         }),
     }
@@ -596,6 +614,11 @@ fn health_reply(front: &ServeFront, token: u64) -> Frame {
             lost_replies: stats.lost_replies,
             deadline_misses: stats.deadline_misses,
             shards_alive: stats.shards.iter().map(|s| *s == ShardState::Healthy).collect(),
+            replicas: stats.replicas as u32,
+            hedges_sent: stats.hedges_sent,
+            hedge_wins: stats.hedge_wins,
+            failovers: stats.failovers,
+            replicas_alive: stats.replicas_alive_flat(),
         }),
         None => Frame::HealthReply(HealthFrame {
             token,
@@ -605,6 +628,11 @@ fn health_reply(front: &ServeFront, token: u64) -> Frame {
             lost_replies: 0,
             deadline_misses: 0,
             shards_alive: Vec::new(),
+            replicas: 1,
+            hedges_sent: 0,
+            hedge_wins: 0,
+            failovers: 0,
+            replicas_alive: Vec::new(),
         }),
     }
 }

@@ -9,7 +9,7 @@
 //! len      4 B   u32 LE — byte length of the payload that follows
 //! payload:
 //!   magic    4 B   "KNNQ"
-//!   version  1 B   u8 (currently 1)
+//!   version  1 B   u8 (currently 3)
 //!   kind     1 B   u8 (frame kind, see below)
 //!   flags    2 B   u16 LE (must be 0 in v1)
 //!   body     …     kind-specific, little-endian
@@ -26,9 +26,9 @@
 //! | 4    | Results     | `count u32, k u32`, per query `cnt u32 + cnt × (id u32, dist f32)`, per query `requests u32, unique u32, coalesced u8` |
 //! | 5    | Error       | `code u8, detail u32, msg_len u16, msg_len × utf-8` |
 //! | 6    | Shutdown    | empty |
-//! | 7    | Degraded    | `cause u8, missing u32, missing × u32 (shard ids)`, then a Results body (v2+) |
+//! | 7    | Degraded    | `cause u8, missing u32, missing × u32 (shard ids), missing × u32 (replicas tried; v3+)`, then a Results body (v2+) |
 //! | 8    | Health      | `token u64` (v2+) |
-//! | 9    | HealthReply | `token u64, threads u32, respawns u64, panics u64, lost u64, misses u64, shards u32, shards × u8 (1 = alive)` (v2+) |
+//! | 9    | HealthReply | `token u64, threads u32, respawns u64, panics u64, lost u64, misses u64, shards u32, shards × u8 (1 = alive)`, then `replicas u32, hedges u64, hedge_wins u64, failovers u64, rcount u32, rcount × u8 (1 = alive, shard-major)` (v3+) (v2+) |
 //! | 10   | Insert      | `id u32, dim u32, dim × f32` (v2+) |
 //! | 11   | Delete      | `id u32` (v2+) |
 //! | 12   | Compact     | empty (v2+) |
@@ -36,10 +36,16 @@
 //!
 //! Version 2 added `deadline_us` to Query, the three fault-tolerance
 //! kinds (7–9), and the storage-engine mutation kinds (10–13: see
-//! [`crate::store`]). Version 1 frames still decode — a v1 Query has no
-//! deadline field and comes back as `deadline_us == 0` ("no deadline"),
-//! so legacy clients keep working unchanged. This build always writes
-//! version 2.
+//! [`crate::store`]). Version 3 extends Degraded with a per-missing-
+//! shard replicas-tried count and HealthReply with the replication
+//! snapshot (replica count, hedge/failover counters, per-replica
+//! liveness). Version 1 and 2 frames still decode — a v1 Query has no
+//! deadline field and comes back as `deadline_us == 0` ("no
+//! deadline"); a v2 Degraded decodes with zeroed replicas-tried and a
+//! v2 HealthReply as an unreplicated pool (`replicas == 1`, zero
+//! hedge/failover counters, replica liveness mirroring the shard
+//! liveness) — so legacy clients keep working unchanged. This build
+//! always writes version 3.
 //!
 //! `f32` values cross the wire as their exact little-endian bit
 //! patterns (`to_le_bytes`/`from_le_bytes`), so NaN payloads and
@@ -61,9 +67,9 @@ use std::io::{Read, Write};
 /// Magic bytes opening every `KNNQv1` payload.
 pub const MAGIC: &[u8; 4] = b"KNNQ";
 /// Protocol version this build writes.
-pub const VERSION: u8 = 2;
+pub const VERSION: u8 = 3;
 /// Oldest version this build still decodes (v1: no query deadlines, no
-/// degraded/health kinds).
+/// degraded/health kinds; v2: no replication fields).
 pub const LEGACY_VERSION: u8 = 1;
 /// Smallest legal payload: magic + version + kind + flags + crc.
 pub const MIN_PAYLOAD: usize = 16;
@@ -182,6 +188,10 @@ pub struct DegradedFrame {
     pub results: ResultsFrame,
     /// Slice-order shard indices absent from the merge, ascending.
     pub shards_missing: Vec<u32>,
+    /// Replicas consulted per missing shard (parallel to
+    /// `shards_missing`). `0` means the shard was never dispatchable;
+    /// v2 frames decode as all zeros ("not reported").
+    pub replicas_tried: Vec<u32>,
     /// The most severe reason anything went missing.
     pub cause: DegradeCause,
 }
@@ -189,7 +199,11 @@ pub struct DegradedFrame {
 impl DegradedFrame {
     /// The api-level degradation record this frame carries.
     pub fn degradation(&self) -> Degradation {
-        Degradation { shards_missing: self.shards_missing.clone(), cause: self.cause }
+        Degradation {
+            shards_missing: self.shards_missing.clone(),
+            replicas_tried: self.replicas_tried.clone(),
+            cause: self.cause,
+        }
     }
 }
 
@@ -210,8 +224,23 @@ pub struct HealthFrame {
     pub lost_replies: u64,
     /// Shards dropped by expired deadlines.
     pub deadline_misses: u64,
-    /// Per-shard liveness, slice order (`true` = serving).
+    /// Per-shard liveness, slice order (`true` = at least one replica
+    /// serving).
     pub shards_alive: Vec<bool>,
+    /// Replica sets per shard (1 = unreplicated; v2 frames decode
+    /// as 1).
+    pub replicas: u32,
+    /// Hedged re-dispatches fired at stragglers (v3+; v2 decodes 0).
+    pub hedges_sent: u64,
+    /// Hedged re-dispatches whose reply won (v3+; v2 decodes 0).
+    pub hedge_wins: u64,
+    /// Dispatches that fell over to a non-primary replica (v3+; v2
+    /// decodes 0).
+    pub failovers: u64,
+    /// Per-replica liveness, shard-major (`shards × replicas` entries:
+    /// replica `r` of shard `s` at `s * replicas + r`). v2 frames
+    /// decode with a copy of `shards_alive` (one replica per shard).
+    pub replicas_alive: Vec<bool>,
 }
 
 /// A typed error reply.
@@ -425,6 +454,10 @@ fn encode_body(buf: &mut Vec<u8>, frame: &Frame) {
             for &s in &d.shards_missing {
                 buf.extend_from_slice(&s.to_le_bytes());
             }
+            // v3: replicas tried, parallel to the missing list
+            for &r in &d.replicas_tried {
+                buf.extend_from_slice(&r.to_le_bytes());
+            }
             encode_results(buf, &d.results);
         }
         Frame::Health { token } => buf.extend_from_slice(&token.to_le_bytes()),
@@ -437,6 +470,15 @@ fn encode_body(buf: &mut Vec<u8>, frame: &Frame) {
             buf.extend_from_slice(&h.deadline_misses.to_le_bytes());
             buf.extend_from_slice(&(h.shards_alive.len() as u32).to_le_bytes());
             for &alive in &h.shards_alive {
+                buf.push(alive as u8);
+            }
+            // v3: replication snapshot
+            buf.extend_from_slice(&h.replicas.to_le_bytes());
+            buf.extend_from_slice(&h.hedges_sent.to_le_bytes());
+            buf.extend_from_slice(&h.hedge_wins.to_le_bytes());
+            buf.extend_from_slice(&h.failovers.to_le_bytes());
+            buf.extend_from_slice(&(h.replicas_alive.len() as u32).to_le_bytes());
+            for &alive in &h.replicas_alive {
                 buf.push(alive as u8);
             }
         }
@@ -705,8 +747,21 @@ fn decode_body(version: u8, kind: u8, dec: &mut Dec<'_>) -> Result<Frame, WireEr
             for _ in 0..missing {
                 shards_missing.push(dec.u32()?);
             }
+            // v2 frames carry no replicas-tried list: decode as zeros
+            // ("not reported"), one per missing shard
+            let mut replicas_tried = vec![0u32; missing];
+            if version >= 3 {
+                if missing > dec.remaining() / 4 {
+                    return Err(WireError::malformed(
+                        "replicas-tried list exceeds frame body",
+                    ));
+                }
+                for slot in replicas_tried.iter_mut() {
+                    *slot = dec.u32()?;
+                }
+            }
             let results = decode_results(dec)?;
-            Ok(Frame::Degraded(DegradedFrame { results, shards_missing, cause }))
+            Ok(Frame::Degraded(DegradedFrame { results, shards_missing, replicas_tried, cause }))
         }
         8 => Ok(Frame::Health { token: dec.u64()? }),
         9 => {
@@ -724,6 +779,30 @@ fn decode_body(version: u8, kind: u8, dec: &mut Dec<'_>) -> Result<Frame, WireEr
             for _ in 0..shards {
                 shards_alive.push(dec.u8()? != 0);
             }
+            // v2 frames predate replication: decode as an unreplicated
+            // pool whose replica liveness mirrors the shard liveness
+            let (replicas, hedges_sent, hedge_wins, failovers, replicas_alive);
+            if version >= 3 {
+                replicas = dec.u32()?;
+                hedges_sent = dec.u64()?;
+                hedge_wins = dec.u64()?;
+                failovers = dec.u64()?;
+                let rcount = dec.u32()? as usize;
+                if rcount > dec.remaining() {
+                    return Err(WireError::malformed("replica count exceeds frame body"));
+                }
+                let mut alive = Vec::with_capacity(rcount);
+                for _ in 0..rcount {
+                    alive.push(dec.u8()? != 0);
+                }
+                replicas_alive = alive;
+            } else {
+                replicas = 1;
+                hedges_sent = 0;
+                hedge_wins = 0;
+                failovers = 0;
+                replicas_alive = shards_alive.clone();
+            }
             Ok(Frame::HealthReply(HealthFrame {
                 token,
                 threads,
@@ -732,6 +811,11 @@ fn decode_body(version: u8, kind: u8, dec: &mut Dec<'_>) -> Result<Frame, WireEr
                 lost_replies,
                 deadline_misses,
                 shards_alive,
+                replicas,
+                hedges_sent,
+                hedge_wins,
+                failovers,
+                replicas_alive,
             }))
         }
         5 => {
@@ -1112,11 +1196,13 @@ mod tests {
                 ],
             },
             shards_missing: vec![1, 3],
+            replicas_tried: vec![2, 1],
             cause: DegradeCause::DeadlineExpired,
         });
         assert_eq!(round_trip(&d), d);
         let Frame::Degraded(df) = d else { unreachable!() };
         assert_eq!(df.degradation().shards_missing, vec![1, 3]);
+        assert_eq!(df.degradation().replicas_tried, vec![2, 1]);
 
         let probe = Frame::Health { token: 99 };
         assert_eq!(round_trip(&probe), probe);
@@ -1128,6 +1214,11 @@ mod tests {
             lost_replies: 1,
             deadline_misses: 12,
             shards_alive: vec![true, false, true, true],
+            replicas: 2,
+            hedges_sent: 9,
+            hedge_wins: 3,
+            failovers: 5,
+            replicas_alive: vec![true, true, false, false, true, false, true, true],
         });
         assert_eq!(round_trip(&h), h);
         // empty shard list (no pool behind the server) is legal
@@ -1139,8 +1230,63 @@ mod tests {
             lost_replies: 0,
             deadline_misses: 0,
             shards_alive: vec![],
+            replicas: 1,
+            hedges_sent: 0,
+            hedge_wins: 0,
+            failovers: 0,
+            replicas_alive: vec![],
         });
         assert_eq!(round_trip(&none), none);
+    }
+
+    #[test]
+    fn legacy_v2_degraded_and_health_decode_with_replication_defaults() {
+        // hand-build a v2 Degraded payload: no replicas-tried list
+        let mut payload = Vec::new();
+        payload.extend_from_slice(MAGIC);
+        payload.push(2); // version 2
+        payload.push(7); // kind: Degraded
+        payload.extend_from_slice(&0u16.to_le_bytes());
+        payload.push(DegradeCause::ShardDead.as_u8());
+        payload.extend_from_slice(&2u32.to_le_bytes()); // missing count
+        payload.extend_from_slice(&0u32.to_le_bytes()); // shard 0
+        payload.extend_from_slice(&2u32.to_le_bytes()); // shard 2
+        payload.extend_from_slice(&0u32.to_le_bytes()); // results: count 0
+        payload.extend_from_slice(&1u32.to_le_bytes()); // results: k 1
+        let mut crc = Fnv::new();
+        crc.update(&payload);
+        payload.extend_from_slice(&crc.0.to_le_bytes());
+        let Frame::Degraded(d) = decode_payload(&payload).unwrap() else {
+            panic!("expected a degraded frame back");
+        };
+        assert_eq!(d.shards_missing, vec![0, 2]);
+        assert_eq!(d.replicas_tried, vec![0, 0], "v2 frames report no replica counts");
+        assert_eq!(d.cause, DegradeCause::ShardDead);
+
+        // hand-build a v2 HealthReply payload: no replication snapshot
+        let mut payload = Vec::new();
+        payload.extend_from_slice(MAGIC);
+        payload.push(2); // version 2
+        payload.push(9); // kind: HealthReply
+        payload.extend_from_slice(&0u16.to_le_bytes());
+        payload.extend_from_slice(&42u64.to_le_bytes()); // token
+        payload.extend_from_slice(&3u32.to_le_bytes()); // threads
+        for counter in [1u64, 0, 2, 4] {
+            payload.extend_from_slice(&counter.to_le_bytes());
+        }
+        payload.extend_from_slice(&3u32.to_le_bytes()); // shards
+        payload.extend_from_slice(&[1u8, 0, 1]);
+        let mut crc = Fnv::new();
+        crc.update(&payload);
+        payload.extend_from_slice(&crc.0.to_le_bytes());
+        let Frame::HealthReply(h) = decode_payload(&payload).unwrap() else {
+            panic!("expected a health reply back");
+        };
+        assert_eq!(h.token, 42);
+        assert_eq!(h.shards_alive, vec![true, false, true]);
+        assert_eq!(h.replicas, 1, "v2 pools are unreplicated");
+        assert_eq!((h.hedges_sent, h.hedge_wins, h.failovers), (0, 0, 0));
+        assert_eq!(h.replicas_alive, h.shards_alive, "v2 replica liveness mirrors shards");
     }
 
     #[test]
@@ -1149,6 +1295,7 @@ mod tests {
         let d = Frame::Degraded(DegradedFrame {
             results: ResultsFrame { k: 1, results: vec![], windows: vec![] },
             shards_missing: vec![0],
+            replicas_tried: vec![1],
             cause: DegradeCause::ShardDead,
         });
         write_frame(&mut buf, &d).unwrap();
@@ -1415,6 +1562,7 @@ mod tests {
                         windows: vec![WindowInfo { requests: 1, unique: 1, coalesced: false }],
                     },
                     shards_missing: vec![0, 2],
+                    replicas_tried: vec![2, 0],
                     cause: DegradeCause::ShardPanicked,
                 }),
             ),
@@ -1429,6 +1577,11 @@ mod tests {
                     lost_replies: 2,
                     deadline_misses: 4,
                     shards_alive: vec![true, false, true],
+                    replicas: 2,
+                    hedges_sent: 1,
+                    hedge_wins: 1,
+                    failovers: 2,
+                    replicas_alive: vec![true, false, false, true, true, false],
                 }),
             ),
             ("insert", Frame::Insert { id: 11, row: vec![1.0, 2.0, 3.0] }),

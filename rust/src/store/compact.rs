@@ -204,6 +204,9 @@ impl MutableIndex {
         self.tombstones.clear();
         self.delta = DeltaSegment::new(dim);
         self.wal.reset()?;
+        // answers are unchanged by construction, but the swap is the
+        // conservative moment to invalidate any cached ones
+        self.epoch += 1;
 
         Ok(CompactionStats {
             rows: n2,

@@ -46,4 +46,4 @@ pub use compact::CompactionStats;
 pub use delta::DeltaSegment;
 pub use format::{convert_v1_to_v2, write_segment, Segment, SegmentSpec};
 pub use mutable::{BaseSegment, MutableIndex, SharedMutableIndex, StoreConfig};
-pub use wal::{Wal, WalRecord};
+pub use wal::{Wal, WalConfig, WalRecord};

@@ -11,7 +11,7 @@
 use super::bytes::StoreMode;
 use super::delta::DeltaSegment;
 use super::format::Segment;
-use super::wal::{Wal, WalRecord};
+use super::wal::{Wal, WalConfig, WalRecord};
 use crate::api::{Neighbor, OriginalId, Searcher, ShardedSearcher, WorkingId};
 use crate::dataset::AlignedMatrix;
 use crate::search::{BatchStats, QueryStats, SearchParams};
@@ -34,11 +34,20 @@ pub struct StoreConfig {
     pub auto_compact_min: usize,
     /// NN-Descent repair iterations budget per compaction.
     pub repair_iters: usize,
+    /// WAL group-commit window, microseconds (see
+    /// [`WalConfig::group_commit_us`]). `0` = fsync per append.
+    pub group_commit_us: u64,
 }
 
 impl Default for StoreConfig {
     fn default() -> Self {
-        Self { mode: None, auto_compact_ratio: 0.5, auto_compact_min: 64, repair_iters: 8 }
+        Self {
+            mode: None,
+            auto_compact_ratio: 0.5,
+            auto_compact_min: 64,
+            repair_iters: 8,
+            group_commit_us: 0,
+        }
     }
 }
 
@@ -132,6 +141,13 @@ pub struct MutableIndex {
     /// External ids the base can return.
     pub(super) base_ids: HashSet<u32>,
     pub(super) wal: Wal,
+    /// Monotone mutation counter: bumped on every applied
+    /// insert/delete and on every compaction. Unlike
+    /// [`generation`](Self::generation) (which only moves at
+    /// compaction) this moves the moment an answer could change, so it
+    /// is the correct key for answer caches (see
+    /// [`Searcher::cache_epoch`]). In-process only — not persisted.
+    pub(super) epoch: u64,
 }
 
 impl MutableIndex {
@@ -172,7 +188,8 @@ impl MutableIndex {
             bail!("base segment external ids are not unique");
         }
 
-        let (wal, records) = Wal::open(&wal_path(path))?;
+        let wal_cfg = WalConfig { group_commit_us: cfg.group_commit_us };
+        let (wal, records) = Wal::open_with(&wal_path(path), wal_cfg)?;
         let mut me = Self {
             path: path.to_path_buf(),
             delta: DeltaSegment::new(base.dim()),
@@ -181,6 +198,7 @@ impl MutableIndex {
             tombstones: HashSet::new(),
             base_ids,
             wal,
+            epoch: 0,
         };
         for rec in records {
             me.apply(&rec)?;
@@ -221,6 +239,7 @@ impl MutableIndex {
                 }
             }
         }
+        self.epoch += 1;
         Ok(())
     }
 
@@ -308,6 +327,12 @@ impl MutableIndex {
         self.base.generation()
     }
 
+    /// Monotone in-process mutation counter: moves on every applied
+    /// insert/delete and on every compaction. The answer-cache epoch.
+    pub fn mutation_epoch(&self) -> u64 {
+        self.epoch
+    }
+
     /// The segment path this index serves.
     pub fn path(&self) -> &Path {
         &self.path
@@ -379,6 +404,10 @@ impl Searcher for MutableIndex {
     ) -> (Vec<Vec<Neighbor>>, BatchStats) {
         MutableIndex::search_batch(self, queries, k, params)
     }
+
+    fn cache_epoch(&self) -> Option<u64> {
+        Some(self.mutation_epoch())
+    }
 }
 
 /// A shareable, lock-guarded [`MutableIndex`] — the shape the serving
@@ -415,6 +444,12 @@ impl SharedMutableIndex {
         self.0.read().expect("store lock poisoned").generation()
     }
 
+    /// The store's mutation epoch (see
+    /// [`MutableIndex::mutation_epoch`]).
+    pub fn mutation_epoch(&self) -> u64 {
+        self.0.read().expect("store lock poisoned").mutation_epoch()
+    }
+
     pub fn live_len(&self) -> usize {
         self.0.read().expect("store lock poisoned").len()
     }
@@ -440,6 +475,13 @@ impl Searcher for SharedMutableIndex {
         params: &SearchParams,
     ) -> (Vec<Vec<Neighbor>>, BatchStats) {
         self.0.read().expect("store lock poisoned").search_batch(queries, k, params)
+    }
+
+    /// The mutation epoch: the serving front flushes its answer cache
+    /// whenever this moves, so a cached answer never outlives the rows
+    /// it names.
+    fn cache_epoch(&self) -> Option<u64> {
+        Some(self.mutation_epoch())
     }
 }
 

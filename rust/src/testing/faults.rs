@@ -44,6 +44,27 @@ pub mod site {
     /// slot. `Delay` stalls the reply, `Drop` loses it, `Die` kills the
     /// worker after the search but before the reply.
     pub const WORKER_REPLY: &str = "pool.worker.reply";
+    /// [`WORKER_JOB`] for replica workers (replica ≥ 1); `index` =
+    /// [`replica_index`](super::replica_index)`(replica, worker id)`.
+    /// Replica 0 keeps answering to the legacy site, so R=1 chaos
+    /// plans behave bit for bit — these sites exist so a plan can kill
+    /// exactly one copy of a shard.
+    pub const REPLICA_JOB: &str = "pool.replica.job";
+    /// [`WORKER_SEARCH`] for replica workers; `index` =
+    /// [`replica_index`](super::replica_index)`(replica, shard slot)`.
+    pub const REPLICA_SEARCH: &str = "pool.replica.search";
+    /// [`WORKER_REPLY`] for replica workers; `index` =
+    /// [`replica_index`](super::replica_index)`(replica, shard slot)`.
+    pub const REPLICA_REPLY: &str = "pool.replica.reply";
+}
+
+/// Deterministic site index for a replica-addressed fault: the replica
+/// number in the high 32 bits, the local identity (worker id or shard
+/// slot) in the low 32. Both the instrumented sites in the pool and
+/// chaos plans build their indices through this one function, so they
+/// can never disagree on the encoding.
+pub fn replica_index(replica: usize, index: u64) -> u64 {
+    ((replica as u64) << 32) | (index & 0xffff_ffff)
 }
 
 /// What an armed site does when its rule fires.
@@ -328,6 +349,22 @@ mod tests {
         assert_ne!(coin(1, "s", 2, 3), coin(2, "s", 2, 3));
         let c = coin(99, "x", 0, 0);
         assert!((0.0..1.0).contains(&c));
+    }
+
+    #[test]
+    fn replica_index_separates_replicas_and_keeps_local_identity() {
+        assert_eq!(replica_index(0, 3), 3, "replica 0 is the identity encoding");
+        assert_eq!(replica_index(1, 3), (1 << 32) | 3);
+        assert_ne!(replica_index(1, 3), replica_index(2, 3));
+        assert_ne!(replica_index(1, 3), replica_index(1, 4));
+        let _g = locked();
+        // a rule armed for replica 1's shard 0 must not fire for
+        // replica 2's shard 0 or for the legacy (replica-0) site
+        install(FaultPlan::new().die_always(site::REPLICA_JOB, replica_index(1, 0)));
+        assert_eq!(check(site::REPLICA_JOB, replica_index(1, 0)), Some(FaultAction::Die));
+        assert_eq!(check(site::REPLICA_JOB, replica_index(2, 0)), None);
+        assert_eq!(check(site::WORKER_JOB, 0), None);
+        clear();
     }
 
     #[test]

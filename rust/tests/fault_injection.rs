@@ -166,7 +166,7 @@ fn buried_shard_keeps_pool_serving_survivors_deterministically() {
     let sp = SearchParams::default();
     let pool = ShardPool::with_config(
         &sharded,
-        PoolConfig { threads: 3, respawn_budget: 0 },
+        PoolConfig { threads: 3, respawn_budget: 0, ..Default::default() },
     )
     .unwrap();
 
@@ -329,7 +329,7 @@ fn wire_serves_degraded_frames_and_health_from_a_wounded_pool() {
     let sp = SearchParams::default();
     let pool = ShardPool::with_config(
         &sharded,
-        PoolConfig { threads: 3, respawn_budget: 0 },
+        PoolConfig { threads: 3, respawn_budget: 0, ..Default::default() },
     )
     .unwrap();
     let cfg = FrontConfig {
@@ -379,6 +379,146 @@ fn wire_serves_degraded_frames_and_health_from_a_wounded_pool() {
     assert_neighbors_bitwise_eq(&honest, &results, "wire degraded answers vs honest fan-out");
 
     handle.stop().unwrap();
+}
+
+#[test]
+fn killed_replica_fails_over_bitwise_clean() {
+    let _chaos = ChaosGuard::take();
+    let (sharded, queries) = stack(101);
+    let k = 6;
+    let sp = SearchParams::default();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+    let pool = ShardPool::with_config(
+        &sharded,
+        PoolConfig { threads: 3, replicas: 2, ..Default::default() },
+    )
+    .unwrap();
+
+    // the primary copy of shard 0 (replica-0 worker 0) dies on its
+    // first job receipt; the replica answers instead, so the batch is
+    // bitwise equal to the healthy full fan-out with zero degradation
+    faults::install(FaultPlan::new().rule(
+        site::WORKER_JOB,
+        Some(0),
+        Trigger::Nth(0),
+        FaultAction::Die,
+    ));
+    let (got, degr) = batch(&pool, &queries, k, &sp, None);
+    assert!(degr.is_none(), "failover must keep the answer whole: {degr:?}");
+    assert_neighbors_bitwise_eq(&expect, &got, "killed-primary batch vs healthy fan-out");
+    let stats = pool.stats();
+    assert!(stats.failovers >= 1, "the replica dispatch must be counted: {stats:?}");
+    assert_eq!(stats.hedges_sent, 0, "failover is not hedging");
+    assert_eq!(stats.contained_panics, 0);
+
+    // and with the fault gone the pool keeps serving clean full answers
+    faults::clear();
+    let (again, degr) = batch(&pool, &queries, k, &sp, None);
+    assert!(degr.is_none());
+    assert_neighbors_bitwise_eq(&expect, &again, "post-failover batch vs healthy fan-out");
+    assert!(pool.stats().all_healthy(), "the dead primary respawns; no shard is lost");
+}
+
+#[test]
+fn all_replicas_dead_degrades_with_the_replica_count() {
+    let _chaos = ChaosGuard::take();
+    let (sharded, queries) = stack(103);
+    let k = 6;
+    let sp = SearchParams::default();
+    let pool = ShardPool::with_config(
+        &sharded,
+        PoolConfig { threads: 3, replicas: 2, respawn_budget: 0, ..Default::default() },
+    )
+    .unwrap();
+
+    // both copies of shard 0 die on every job; with a zero respawn
+    // budget the first batch exhausts the whole replica set
+    faults::install(
+        FaultPlan::new()
+            .die_always(site::WORKER_JOB, 0)
+            .die_always(site::REPLICA_JOB, faults::replica_index(1, 0)),
+    );
+    let (got, degr) = batch(&pool, &queries, k, &sp, None);
+    let degr = degr.expect("a shard with no replicas left must degrade");
+    assert_eq!(degr.shards_missing, vec![0]);
+    assert_eq!(
+        degr.replicas_tried,
+        vec![2],
+        "the killing batch must have consulted both replicas: {degr:?}"
+    );
+    let (honest, _) = sharded.search_batch_subset(&queries, k, &sp, &[1, 2]);
+    assert_neighbors_bitwise_eq(&honest, &got, "exhausted-replica batch vs honest fan-out");
+
+    // both copies are buried: from here on the degradation is the
+    // typed, deterministic ShardDead of the unreplicated pool
+    faults::clear();
+    for round in 0..2 {
+        let (got, degr) = batch(&pool, &queries, k, &sp, None);
+        let degr = degr.expect("a shard with every replica buried stays degraded");
+        assert_eq!(degr.shards_missing, vec![0], "round {round}");
+        assert_eq!(degr.cause, DegradeCause::ShardDead, "round {round}");
+        assert_eq!(
+            degr.replicas_tried,
+            vec![0],
+            "round {round}: a fully buried shard is never dispatchable"
+        );
+        assert_neighbors_bitwise_eq(
+            &honest,
+            &got,
+            &format!("round {round}: buried-replicas pool vs honest fan-out"),
+        );
+    }
+    let stats = pool.stats();
+    assert_eq!(stats.dead_shards(), vec![0], "dead only when ALL replicas are gone");
+    assert_eq!(stats.replica_states[0].len(), 2);
+    assert!(
+        stats.replica_states[0].iter().all(|s| *s == ShardState::Dead),
+        "both copies of shard 0 are buried: {stats:?}"
+    );
+}
+
+#[test]
+fn hedged_straggler_wins_bitwise_clean() {
+    let _chaos = ChaosGuard::take();
+    let (sharded, queries) = stack(107);
+    let k = 6;
+    let sp = SearchParams::default();
+    let (expect, _) = sharded.search_batch(&queries, k, &sp);
+    let pool = ShardPool::with_config(
+        &sharded,
+        PoolConfig { threads: 3, replicas: 2, hedge_us: 20_000, ..Default::default() },
+    )
+    .unwrap();
+
+    // the primary copy of shard 0 stalls its reply far past the hedge
+    // delay; the hedge re-sends the job to the replica, whose reply
+    // wins — the answer is whole and bitwise equal to the healthy run
+    faults::install(FaultPlan::new().delay_always(
+        site::WORKER_REPLY,
+        0,
+        Duration::from_millis(1_500),
+    ));
+    let t0 = Instant::now();
+    let (got, degr) = batch(&pool, &queries, k, &sp, None);
+    let waited = t0.elapsed();
+    assert!(degr.is_none(), "a won hedge must leave the answer whole: {degr:?}");
+    assert_neighbors_bitwise_eq(&expect, &got, "hedged-straggler batch vs healthy fan-out");
+    assert!(
+        waited < Duration::from_millis(1_200),
+        "the batch must not wait out the straggler (took {waited:?})"
+    );
+    let stats = pool.stats();
+    assert!(stats.hedges_sent >= 1, "the hedge must be counted: {stats:?}");
+    assert!(stats.hedge_wins >= 1, "the replica's reply won: {stats:?}");
+    assert!(stats.hedge_wins <= stats.hedges_sent);
+    assert_eq!(stats.failovers, 0, "hedging is not failover");
+    assert!(stats.all_healthy(), "a straggler is not a dead shard");
+
+    // fault off: hedging stays armed but never fires on a healthy pool
+    faults::clear();
+    let (again, degr) = batch(&pool, &queries, k, &sp, None);
+    assert!(degr.is_none());
+    assert_neighbors_bitwise_eq(&expect, &again, "post-straggler batch vs healthy fan-out");
 }
 
 #[test]

@@ -14,6 +14,9 @@
 //!   against brute force over the live rows.
 //! * The same mutations work over the wire against a server with a
 //!   mutable store attached; read-only servers reject them typed.
+//! * A serving front with the answer cache ON answers bit-identically
+//!   to a cache-OFF front across interleaved insert/delete/compact
+//!   (the cache flushes on every mutation-epoch bump).
 
 use knng::api::{FrontConfig, Neighbor, OriginalId, Searcher, ServeFront};
 use knng::dataset::clustered::SynthClustered;
@@ -440,6 +443,93 @@ fn mutations_over_the_wire_are_visible_to_the_next_query() {
     drop(client);
     let (net, _front) = handle.stop().unwrap();
     assert_eq!(net.protocol_errors, 0);
+}
+
+#[test]
+fn answer_cache_stays_bit_identical_across_mutations() {
+    // the epoch-keyed-cache gate: a front with the answer cache ON
+    // must answer bitwise-identically to a cache-OFF front over the
+    // same mutable store through an interleaved insert/delete/compact
+    // sequence. The cache flushes whenever the store's mutation epoch
+    // moves, so a hit can never replay a stale answer.
+    let dir = scratch_dir("cache_epoch");
+    let (_corpus, queries, path) = build_segment(&dir, 440, 12, 8, 89, false);
+    let shared = SharedMutableIndex::open_with(&path, manual_cfg()).unwrap();
+    let dim = shared.dim();
+
+    let front_cfg = |cache: usize| FrontConfig {
+        k: 5,
+        params: SearchParams::default(),
+        max_batch: 4,
+        max_wait: Duration::from_millis(1),
+        answer_cache: cache,
+        ..Default::default()
+    };
+    let cached = ServeFront::spawn(shared.clone(), dim, front_cfg(64)).unwrap();
+    let plain = ServeFront::spawn(shared.clone(), dim, front_cfg(0)).unwrap();
+
+    fn ask_all(front: &ServeFront, queries: &AlignedMatrix) -> Vec<Vec<Neighbor>> {
+        (0..queries.n())
+            .map(|i| {
+                front.submit(queries.row_logical(i).to_vec()).unwrap().wait().unwrap().neighbors
+            })
+            .collect()
+    }
+    fn ask_one(front: &ServeFront, row: &[f32]) -> Vec<Neighbor> {
+        front.submit(row.to_vec()).unwrap().wait().unwrap().neighbors
+    }
+
+    // two passes over the same queries: the second must be served (in
+    // part) from the cache, and both must match the uncached front
+    let epoch0 = shared.mutation_epoch();
+    for phase in ["cold corpus", "warm corpus"] {
+        let a = ask_all(&cached, &queries);
+        let b = ask_all(&plain, &queries);
+        assert_neighbors_bitwise_eq(&a, &b, phase);
+    }
+    assert!(cached.stats().cache_hits > 0, "repeated identical queries must hit the cache");
+
+    // the staleness probe: cache the beacon's pre-insert answer...
+    let beacon = beacon_row(dim, 4.0);
+    let pre = ask_one(&cached, &beacon);
+    assert!(pre.iter().all(|nb| nb.id != OriginalId(88_000)));
+
+    // ...then insert it. A stale cache would replay `pre`; the flushed
+    // cache must surface the new row, bit-identical to the uncached
+    // front.
+    shared.insert(88_000, &beacon).unwrap();
+    assert!(shared.mutation_epoch() > epoch0, "insert must bump the mutation epoch");
+    let a = ask_one(&cached, &beacon);
+    assert_eq!(a[0].id, OriginalId(88_000), "cached front replayed a pre-insert answer");
+    assert_eq!(a[0].dist.to_bits(), 0.0f32.to_bits());
+    let b = ask_one(&plain, &beacon);
+    assert_neighbors_bitwise_eq(&[a], &[b], "post-insert beacon");
+
+    // delete: gone from the cached front's very next answer too
+    assert!(shared.delete(88_000).unwrap());
+    let a = ask_one(&cached, &beacon);
+    assert!(
+        a.iter().all(|nb| nb.id != OriginalId(88_000)),
+        "cached front resurfaced a deleted id"
+    );
+    let b = ask_one(&plain, &beacon);
+    assert_neighbors_bitwise_eq(&[a], &[b], "post-delete beacon");
+    let a = ask_all(&cached, &queries);
+    let b = ask_all(&plain, &queries);
+    assert_neighbors_bitwise_eq(&a, &b, "post-delete corpus");
+
+    // compact: answers are unchanged by construction but the epoch
+    // still bumps (the conservative flush), and cache-on == cache-off
+    // holds across the segment swap
+    let before = shared.mutation_epoch();
+    shared.compact().unwrap();
+    assert!(shared.mutation_epoch() > before, "compaction must bump the mutation epoch");
+    let a = ask_all(&cached, &queries);
+    let b = ask_all(&plain, &queries);
+    assert_neighbors_bitwise_eq(&a, &b, "post-compact corpus");
+
+    cached.shutdown();
+    plain.shutdown();
 }
 
 #[test]
